@@ -1,0 +1,148 @@
+//! End-to-end serving driver (the DESIGN.md validation run, recorded in
+//! EXPERIMENTS.md): loads the AOT-compiled encoder/scorer artifacts through
+//! the PJRT CPU client, builds the hotpotqa-sim index with the *real*
+//! encoder (python never runs — the HLO was lowered at `make artifacts`),
+//! starts the TCP front-end, and drives it with concurrent clients sending
+//! batched traffic. Reports throughput, latency percentiles, and cache
+//! efficiency for both EdgeRAG and CaGR-RAG modes.
+//!
+//!     make artifacts && cargo run --release --example serve_workload
+//!
+//! Environment:
+//!   CAGR_SERVE_DOCS      corpus size          (default 60000)
+//!   CAGR_SERVE_QUERIES   queries per mode     (default 300)
+//!   CAGR_SERVE_CLIENTS   concurrent clients   (default 8)
+//!   CAGR_SERVE_NATIVE=1  use the native backend instead of PJRT
+
+use cagr::config::{Backend, Config, DiskProfile};
+use cagr::coordinator::{Coordinator, Mode};
+use cagr::engine::SearchEngine;
+use cagr::harness::runner::ensure_dataset;
+use cagr::metrics::{render_table, LatencyRecorder};
+use cagr::server::{start, Client, ServerConfig};
+use cagr::workload::{generate_queries, DatasetSpec, Query};
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() -> anyhow::Result<()> {
+    let use_native = std::env::var("CAGR_SERVE_NATIVE").is_ok();
+    let n_docs = env_usize("CAGR_SERVE_DOCS", 60_000);
+    let n_queries = env_usize("CAGR_SERVE_QUERIES", 300);
+    let n_clients = env_usize("CAGR_SERVE_CLIENTS", 8);
+
+    let mut cfg = Config::default();
+    cfg.backend = if use_native { Backend::Native } else { Backend::Pjrt };
+    cfg.disk_profile = DiskProfile::NvmeScaled;
+    if cfg.backend == Backend::Pjrt
+        && !cfg.artifacts_dir.join("manifest.json").exists()
+    {
+        anyhow::bail!("artifacts/ missing - run `make artifacts` first (or set CAGR_SERVE_NATIVE=1)");
+    }
+
+    let mut spec = DatasetSpec::by_name("hotpotqa-sim")?;
+    spec.n_docs = n_docs;
+    spec.n_queries = n_queries.max(spec.n_queries);
+
+    println!(
+        "== serve_workload: {} docs, {} queries, {} clients, backend={:?} ==",
+        spec.n_docs, n_queries, n_clients, cfg.backend
+    );
+    ensure_dataset(&cfg, &spec)?;
+    let queries = generate_queries(&spec);
+
+    let mut rows = Vec::new();
+    for (label, mode) in [("EdgeRAG", Mode::Baseline), ("CaGR-RAG", Mode::QGP)] {
+        let factory = {
+            let cfg = cfg.clone();
+            let spec = spec.clone();
+            move || -> anyhow::Result<Coordinator> {
+                Ok(Coordinator::new(SearchEngine::open(&cfg, &spec)?, mode))
+            }
+        };
+        let handle = start(
+            factory,
+            ServerConfig {
+                addr: "127.0.0.1:0".to_string(),
+                batch_window: std::time::Duration::from_millis(8),
+                batch_max: cfg.batch_max,
+            },
+        )?;
+        let addr = handle.addr;
+
+        // Warm the cache with the first slice of traffic.
+        {
+            let mut warm = Client::connect(addr)?;
+            for q in &queries[..50.min(n_queries)] {
+                warm.search(q)?;
+            }
+        }
+
+        // Concurrent clients, striped queries, wall-clock throughput.
+        let t0 = std::time::Instant::now();
+        let per_client = n_queries / n_clients;
+        let mut threads = Vec::new();
+        for c in 0..n_clients {
+            let stripe: Vec<Query> = queries
+                .iter()
+                .skip(c)
+                .step_by(n_clients)
+                .take(per_client)
+                .cloned()
+                .collect();
+            threads.push(std::thread::spawn(move || -> anyhow::Result<Vec<f64>> {
+                // Pipelined client: keep up to WINDOW requests in flight so
+                // the server's batcher sees real arrival batches (§4.1);
+                // responses arrive in completion order and are matched by
+                // query id.
+                const WINDOW: usize = 16;
+                let mut client = Client::connect(addr)?;
+                let mut sent_at = std::collections::HashMap::new();
+                let mut lats = Vec::with_capacity(stripe.len());
+                let mut next = 0usize;
+                while lats.len() < stripe.len() {
+                    while next < stripe.len() && sent_at.len() < WINDOW {
+                        client.send(&stripe[next])?;
+                        sent_at.insert(stripe[next].id, std::time::Instant::now());
+                        next += 1;
+                    }
+                    let resp = client.recv()?;
+                    let t0 = sent_at
+                        .remove(&resp.query_id)
+                        .ok_or_else(|| anyhow::anyhow!("unexpected response id"))?;
+                    lats.push(t0.elapsed().as_secs_f64());
+                }
+                Ok(lats)
+            }));
+        }
+        let mut recorder = LatencyRecorder::new();
+        for t in threads {
+            for lat in t.join().expect("client thread")? {
+                recorder.record_secs(lat);
+            }
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        handle.shutdown();
+
+        rows.push(vec![
+            label.to_string(),
+            recorder.len().to_string(),
+            format!("{:.1}", recorder.len() as f64 / wall),
+            format!("{:.4}", recorder.mean()),
+            format!("{:.4}", recorder.p50()),
+            format!("{:.4}", recorder.percentile(95.0)),
+            format!("{:.4}", recorder.p99()),
+        ]);
+    }
+
+    println!(
+        "\n{}",
+        render_table(
+            &["system", "queries", "qps", "mean(s)", "p50(s)", "p95(s)", "p99(s)"],
+            &rows
+        )
+    );
+    println!("(end-to-end over TCP, including client round-trips and batching delay)");
+    Ok(())
+}

@@ -1,0 +1,137 @@
+"""AOT pipeline: lower the L2 graphs to HLO *text* artifacts for rust.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Emitted artifacts (all shapes static; see model.py geometry constants):
+
+  encoder_<model>_b<B>.hlo.txt   i32[B,24] -> (f32[B,64],)
+  centroid_scan.hlo.txt          f32[8,64], f32[128,64] -> (f32[8,128],)
+  scorer_q8_n2048.hlo.txt        f32[8,64], f32[2048,64] -> (f32[8,2048],)
+  manifest.json                  machine-readable index of the above
+
+The rust runtime (rust/src/runtime/) loads the manifest, validates shapes
+against its compiled-in expectations, and compiles each HLO once at startup.
+
+Run via ``make artifacts`` (no-op when inputs are unchanged).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+# Which encoder batch widths to emit per model. The serving model
+# (minilm-sim) gets the full ladder used by the dynamic batcher + the
+# index-build bulk width; the Fig. 1 comparison models only need the width
+# the access-pattern experiment encodes with.
+ENCODER_BATCHES: dict[str, list[int]] = {
+    "minilm-sim": [1, 8, 32, 128],
+    "modernbert-sim": [32, 128],
+    "e5-sim": [32, 128],
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """jax Lowered -> HLO text via stablehlo -> XlaComputation."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the encoder weight tables are baked into
+    # the module as constants; the default elides them to "{...}" which the
+    # rust-side text parser cannot reconstruct.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_to_file(fn, example_args, out_path: pathlib.Path) -> int:
+    lowered = jax.jit(fn).lower(*example_args)
+    text = to_hlo_text(lowered)
+    out_path.write_text(text)
+    return len(text)
+
+
+def _shape_entry(s: jax.ShapeDtypeStruct) -> dict:
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def build_all(out_dir: pathlib.Path, verbose: bool = True) -> dict:
+    """Lower every artifact into ``out_dir``; return the manifest dict."""
+    out_dir.mkdir(parents=True, exist_ok=True)
+    manifest: dict = {
+        "geometry": {
+            "vocab": model.VOCAB,
+            "seq_len": model.SEQ_LEN,
+            "struct_prefix": model.STRUCT_PREFIX,
+            "embed_dim": model.EMBED_DIM,
+            "hidden_dim": model.HIDDEN_DIM,
+            "centroid_pad": model.CENTROID_PAD,
+            "score_q": model.SCORE_Q,
+            "score_n": model.SCORE_N,
+        },
+        "encoders": {},
+        "computations": {},
+    }
+
+    for name, batches in ENCODER_BATCHES.items():
+        manifest["encoders"][name] = {}
+        for b in batches:
+            fn, example = model.encode_fn(name, b)
+            fname = f"encoder_{name}_b{b}.hlo.txt"
+            n = lower_to_file(fn, example, out_dir / fname)
+            manifest["encoders"][name][str(b)] = {
+                "file": fname,
+                "inputs": [_shape_entry(e) for e in example],
+                "output": {"shape": [b, model.EMBED_DIM], "dtype": "float32"},
+            }
+            if verbose:
+                print(f"  {fname}: {n} chars")
+
+    for key, (fn_maker, fname) in {
+        "centroid_scan": (model.centroid_scan_fn, "centroid_scan.hlo.txt"),
+        "scorer": (model.score_block_fn, "scorer_q8_n2048.hlo.txt"),
+    }.items():
+        fn, example = fn_maker()
+        n = lower_to_file(fn, example, out_dir / fname)
+        out_shape = (
+            [model.SCORE_Q, model.CENTROID_PAD]
+            if key == "centroid_scan"
+            else [model.SCORE_Q, model.SCORE_N]
+        )
+        manifest["computations"][key] = {
+            "file": fname,
+            "inputs": [_shape_entry(e) for e in example],
+            "output": {"shape": out_shape, "dtype": "float32"},
+        }
+        if verbose:
+            print(f"  {fname}: {n} chars")
+
+    (out_dir / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    return manifest
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument(
+        "--out-dir",
+        type=pathlib.Path,
+        default=pathlib.Path("../artifacts"),
+        help="artifact output directory (default: ../artifacts)",
+    )
+    args = parser.parse_args()
+    print(f"lowering artifacts into {args.out_dir.resolve()}")
+    build_all(args.out_dir)
+    print("aot: done")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,87 @@
+"""L1 Pallas kernel: fused affine(+GELU) layer for the embedding encoder.
+
+The encoder MLP (L2, model.py) runs its two dense layers through this kernel
+so that the whole encoder lowers into one HLO module with the hot matmuls
+expressed as MXU-shaped tiles. The row axis (B*T tokens) is tiled with
+``M_BLOCK``; the contraction (K) and output (N) axes are kept whole — for the
+encoder they are 64/128, small enough that one weight block lives comfortably
+in VMEM (128*128*4 = 64 KB) and is reused across every row block of the grid.
+
+``interpret=True`` for CPU-PJRT executability (see scoring.py docstring).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+M_BLOCK = 128
+
+
+def _linear_kernel(x_ref, w_ref, b_ref, o_ref, *, activate: bool):
+    x = x_ref[...]
+    w = w_ref[...]
+    b = b_ref[...]
+    y = (
+        jax.lax.dot_general(
+            x,
+            w,
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        + b[None, :]
+    )
+    if activate:
+        y = jax.nn.gelu(y, approximate=False)
+    o_ref[...] = y
+
+
+@functools.partial(jax.jit, static_argnames=("activate", "m_block"))
+def linear(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    activate: bool = False,
+    m_block: int = M_BLOCK,
+) -> jax.Array:
+    """Tiled ``x @ w + b`` with optional fused exact GELU.
+
+    Args:
+      x: f32[M, K]; M must be a multiple of ``m_block``.
+      w: f32[K, N]
+      b: f32[N]
+
+    Returns:
+      f32[M, N]
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: x K={k} w K={k2}")
+    if b.shape != (n,):
+        raise ValueError(f"bias shape {b.shape} != ({n},)")
+    if m % m_block != 0:
+        raise ValueError(f"M={m} not a multiple of m_block={m_block}")
+
+    kernel = functools.partial(_linear_kernel, activate=activate)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // m_block,),
+        in_specs=[
+            pl.BlockSpec((m_block, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, n), lambda i: (0, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((m_block, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x, w, b)
+
+
+def linear_gelu(x: jax.Array, w: jax.Array, b: jax.Array, **kw) -> jax.Array:
+    """Convenience wrapper: fused affine + GELU."""
+    return linear(x, w, b, activate=True, **kw)

@@ -1,0 +1,39 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+Every Pallas kernel in this package has a line-for-line mathematical
+counterpart here; ``python/tests`` asserts allclose between the two across a
+hypothesis sweep of shapes and values. These functions are also what the L2
+model would be if the hot-spots were *not* written as kernels, so they double
+as the baseline for the L1 roofline comparison in DESIGN.md §8.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def l2_distances(queries: jax.Array, vectors: jax.Array) -> jax.Array:
+    """Squared L2 distance between every query and every vector.
+
+    Args:
+      queries: f32[Q, D]
+      vectors: f32[N, D]
+
+    Returns:
+      f32[Q, N] with out[i, j] = ||queries[i] - vectors[j]||^2.
+    """
+    q_sq = jnp.sum(queries * queries, axis=-1, keepdims=True)  # [Q, 1]
+    v_sq = jnp.sum(vectors * vectors, axis=-1)[None, :]  # [1, N]
+    cross = queries @ vectors.T  # [Q, N]
+    return q_sq - 2.0 * cross + v_sq
+
+
+def linear(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Affine map: f32[M, K] @ f32[K, N] + f32[N] -> f32[M, N]."""
+    return x @ w + b[None, :]
+
+
+def linear_gelu(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Affine map followed by exact (erf-based) GELU."""
+    return jax.nn.gelu(linear(x, w, b), approximate=False)

@@ -1,0 +1,99 @@
+"""L1 Pallas kernel: tiled batched squared-L2 distance scoring.
+
+This is the paper's compute hot-spot (Code 1, step 5): scoring a block of
+(grouped) query vectors against the embedding vectors of a cluster that was
+just fetched from disk/cache. CaGR-RAG groups queries that share clusters, so
+the natural batched form is ``(Q, D) x (N, D) -> (Q, N)`` where Q is the
+query-group width and N the cluster block length.
+
+TPU mapping (DESIGN.md §3, §8): the distance is expanded as
+``||q||^2 - 2 q.v + ||v||^2`` so the dominant term is an ``f32[Q,D] x
+f32[D,Nb]`` matmul that runs on the MXU; the norm terms are VPU reductions.
+BlockSpec tiles the N axis into ``N_BLOCK``-row blocks so each grid step's
+VMEM working set is ``Q*D + N_BLOCK*D + Q*N_BLOCK`` floats (~75 KB for the
+default 8/256/64 — far under VMEM, leaving double-buffer headroom).
+
+``interpret=True`` always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls (see /opt/xla-example/README.md); structure, not interpret-mode
+wallclock, is what we optimize at this layer.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. Q_BLOCK is the padded query-group width used by the
+# serving path (rust pads groups to a multiple of 8); N_BLOCK tiles the
+# cluster axis. D is the embedding dimension and is kept whole (it is the
+# matmul contraction axis).
+Q_BLOCK = 8
+N_BLOCK = 256
+
+
+def _l2_kernel(q_ref, v_ref, o_ref):
+    """One grid step: distances between all queries and one vector block.
+
+    q_ref: f32[Qb, D]   (same block every step — queries are reused)
+    v_ref: f32[Nb, D]   (block i of the cluster vectors)
+    o_ref: f32[Qb, Nb]  (block i of the output)
+    """
+    q = q_ref[...]
+    v = v_ref[...]
+    # MXU term: contract over D. preferred_element_type pins f32 accumulate.
+    cross = jax.lax.dot_general(
+        q,
+        v,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    q_sq = jnp.sum(q * q, axis=-1, keepdims=True)  # [Qb, 1]
+    v_sq = jnp.sum(v * v, axis=-1)[None, :]  # [1, Nb]
+    o_ref[...] = q_sq - 2.0 * cross + v_sq
+
+
+@functools.partial(jax.jit, static_argnames=("q_block", "n_block"))
+def l2_distances(
+    queries: jax.Array,
+    vectors: jax.Array,
+    *,
+    q_block: int = Q_BLOCK,
+    n_block: int = N_BLOCK,
+) -> jax.Array:
+    """Squared L2 distances via the tiled Pallas kernel.
+
+    Args:
+      queries: f32[Q, D]; Q must be a multiple of ``q_block``.
+      vectors: f32[N, D]; N must be a multiple of ``n_block``.
+
+    Returns:
+      f32[Q, N]; out[i, j] = ||queries[i] - vectors[j]||^2.
+
+    The serving path pads Q up to ``q_block`` with zero rows and N up to
+    ``n_block`` with zero vectors; rust slices the valid region using the
+    true cluster length, so padding never reaches top-k.
+    """
+    q, d = queries.shape
+    n, d2 = vectors.shape
+    if d != d2:
+        raise ValueError(f"dim mismatch: queries D={d} vectors D={d2}")
+    if q % q_block != 0:
+        raise ValueError(f"Q={q} not a multiple of q_block={q_block}")
+    if n % n_block != 0:
+        raise ValueError(f"N={n} not a multiple of n_block={n_block}")
+
+    grid = (q // q_block, n // n_block)
+    return pl.pallas_call(
+        _l2_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((q_block, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((n_block, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((q_block, n_block), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((q, n), jnp.float32),
+        interpret=True,
+    )(queries, vectors)

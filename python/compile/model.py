@@ -1,0 +1,191 @@
+"""L2: the JAX compute graphs that CaGR-RAG serves, calling the L1 kernels.
+
+The paper's serving path needs three computations (Code 1 in the paper):
+
+  1. ``encode``        — query/document text -> embedding vector. Stands in
+                         for all-MiniLM-L6-v2 et al. (DESIGN.md §2): token
+                         embedding lookup, positional *structure gain*, a
+                         2-layer GELU MLP (Pallas ``encoder.linear``), mean
+                         pool, L2-normalize.
+  2. ``centroid_scan`` — query vectors x first-level centroids -> distances
+                         (Code 1, step 2).
+  3. ``score_block``   — query-group vectors x one cluster block ->
+                         distances (Code 1, step 5; Pallas
+                         ``scoring.l2_distances``).
+
+Three named *models* with different structure gains reproduce the paper's
+three embedding models for Fig. 1: a higher gain on the structural prefix
+positions makes same-template queries land closer together, yielding the
+stronger block texture the paper observes for all-miniLM-L6-v2.
+
+Everything here is build-time Python: ``aot.py`` lowers these functions
+(with parameters baked in as constants) to HLO text once; the rust runtime
+executes the artifacts and Python never appears on the request path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import encoder as enc_kernels
+from compile.kernels import scoring as score_kernels
+
+# ---------------------------------------------------------------------------
+# Model geometry. These constants are mirrored in rust/src/config/mod.rs and
+# asserted against the artifact manifest at runtime load.
+# ---------------------------------------------------------------------------
+VOCAB = 512  # token vocabulary (template + topic + filler tokens)
+SEQ_LEN = 24  # fixed token-sequence length (queries/documents are padded)
+STRUCT_PREFIX = 6  # leading positions carrying the structural template
+EMBED_DIM = 64  # final embedding dimension (paper: 384 for MiniLM)
+HIDDEN_DIM = 128  # MLP hidden width
+CENTROID_PAD = 128  # centroid count padded to this for the scan artifact
+SCORE_Q = 8  # padded query-group width for the scorer artifact
+SCORE_N = 2048  # padded cluster-block length for the scorer artifact
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderParams:
+    """Weights of one synthetic embedding model (baked into its HLO)."""
+
+    emb: jax.Array  # f32[VOCAB, EMBED_DIM]
+    w1: jax.Array  # f32[EMBED_DIM, HIDDEN_DIM]
+    b1: jax.Array  # f32[HIDDEN_DIM]
+    w2: jax.Array  # f32[HIDDEN_DIM, EMBED_DIM]
+    b2: jax.Array  # f32[EMBED_DIM]
+    pos_gain: jax.Array  # f32[SEQ_LEN]
+
+
+# name -> (seed, structure_gain). Gains decrease left to right, mirroring the
+# paper's observation that Fig. 1(a) (all-miniLM) shows the most pronounced
+# structural blocking and Fig. 1(c) (e5) the least.
+MODELS: dict[str, tuple[int, float]] = {
+    "minilm-sim": (101, 4.0),
+    "modernbert-sim": (202, 2.0),
+    "e5-sim": (303, 1.0),
+}
+
+
+def make_encoder_params(seed: int, structure_gain: float) -> EncoderParams:
+    """Deterministically sample one embedding model's weights."""
+    k_emb, k_w1, k_w2 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    emb = jax.random.normal(k_emb, (VOCAB, EMBED_DIM)) / jnp.sqrt(EMBED_DIM)
+    w1 = jax.random.normal(k_w1, (EMBED_DIM, HIDDEN_DIM)) * jnp.sqrt(
+        2.0 / EMBED_DIM
+    )
+    w2 = jax.random.normal(k_w2, (HIDDEN_DIM, EMBED_DIM)) * jnp.sqrt(
+        2.0 / HIDDEN_DIM
+    )
+    gain = jnp.ones((SEQ_LEN,)).at[:STRUCT_PREFIX].set(structure_gain)
+    gain = gain / jnp.mean(gain)  # keep overall magnitude model-independent
+    return EncoderParams(
+        emb=emb,
+        w1=w1,
+        b1=jnp.zeros((HIDDEN_DIM,)),
+        w2=w2,
+        b2=jnp.zeros((EMBED_DIM,)),
+        pos_gain=gain,
+    )
+
+
+def params_for(model: str) -> EncoderParams:
+    seed, gain = MODELS[model]
+    return make_encoder_params(seed, gain)
+
+
+def _pad_rows(x: jax.Array, multiple: int) -> tuple[jax.Array, int]:
+    """Pad axis 0 up to a multiple (static shapes only)."""
+    m = x.shape[0]
+    target = ((m + multiple - 1) // multiple) * multiple
+    if target == m:
+        return x, m
+    return jnp.pad(x, ((0, target - m),) + ((0, 0),) * (x.ndim - 1)), m
+
+
+def encode(tokens: jax.Array, params: EncoderParams) -> jax.Array:
+    """Token ids -> unit-norm embeddings.
+
+    Args:
+      tokens: i32[B, SEQ_LEN]
+
+    Returns:
+      f32[B, EMBED_DIM], each row L2-normalized.
+    """
+    b, t = tokens.shape
+    if t != SEQ_LEN:
+        raise ValueError(f"seq len {t} != {SEQ_LEN}")
+    x = params.emb[tokens]  # [B, T, D]
+    x = x * params.pos_gain[None, :, None]
+    flat = x.reshape(b * t, EMBED_DIM)
+    flat, rows = _pad_rows(flat, enc_kernels.M_BLOCK)
+    h = enc_kernels.linear_gelu(flat, params.w1, params.b1)
+    y = enc_kernels.linear(h, params.w2, params.b2)
+    y = y[:rows].reshape(b, t, EMBED_DIM).mean(axis=1)
+    norm = jnp.sqrt(jnp.sum(y * y, axis=-1, keepdims=True) + 1e-12)
+    return y / norm
+
+
+def centroid_scan(queries: jax.Array, centroids: jax.Array) -> jax.Array:
+    """First-level index lookup: distances to (padded) centroids.
+
+    Args:
+      queries: f32[SCORE_Q, EMBED_DIM]
+      centroids: f32[CENTROID_PAD, EMBED_DIM] (rust pads unused rows with
+        +1e3 coordinates so they can never win a nearest-centroid race).
+
+    Returns:
+      f32[SCORE_Q, CENTROID_PAD]
+    """
+    return score_kernels.l2_distances(
+        queries, centroids, q_block=SCORE_Q, n_block=CENTROID_PAD
+    )
+
+
+def score_block(queries: jax.Array, vectors: jax.Array) -> jax.Array:
+    """Second-level scoring of a query group against one cluster block.
+
+    Args:
+      queries: f32[SCORE_Q, EMBED_DIM] (group padded with zero rows)
+      vectors: f32[SCORE_N, EMBED_DIM] (cluster padded with zero rows; rust
+        slices distances[:, :len] so padding never reaches top-k)
+
+    Returns:
+      f32[SCORE_Q, SCORE_N] squared L2 distances.
+    """
+    return score_kernels.l2_distances(queries, vectors, q_block=SCORE_Q)
+
+
+def encode_fn(model: str, batch: int):
+    """Encoder fn (params baked in) + example args for AOT lowering."""
+    params = params_for(model)
+
+    def fn(tokens):
+        return (encode(tokens, params),)
+
+    example = (jax.ShapeDtypeStruct((batch, SEQ_LEN), jnp.int32),)
+    return fn, example
+
+
+def centroid_scan_fn():
+    def fn(queries, centroids):
+        return (centroid_scan(queries, centroids),)
+
+    example = (
+        jax.ShapeDtypeStruct((SCORE_Q, EMBED_DIM), jnp.float32),
+        jax.ShapeDtypeStruct((CENTROID_PAD, EMBED_DIM), jnp.float32),
+    )
+    return fn, example
+
+
+def score_block_fn():
+    def fn(queries, vectors):
+        return (score_block(queries, vectors),)
+
+    example = (
+        jax.ShapeDtypeStruct((SCORE_Q, EMBED_DIM), jnp.float32),
+        jax.ShapeDtypeStruct((SCORE_N, EMBED_DIM), jnp.float32),
+    )
+    return fn, example

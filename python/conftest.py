@@ -1,0 +1,8 @@
+"""Pytest path setup: make the `compile` package importable whether pytest
+is invoked from the repo root (`pytest python/tests/`) or from `python/`
+(`cd python && pytest tests/`)."""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))

@@ -1,0 +1,100 @@
+"""AOT pipeline tests: lowering produces parseable HLO text + sane manifest.
+
+Full artifact emission is exercised by ``make artifacts``; here we lower a
+representative subset into a tmpdir and check the interchange contract the
+rust loader depends on (HLO text, ENTRY signature, manifest shapes).
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+import jax
+import pytest
+
+from compile import aot, model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_scorer_lowers_to_hlo_text(tmp_path: pathlib.Path):
+    fn, example = model.score_block_fn()
+    out = tmp_path / "scorer.hlo.txt"
+    n = aot.lower_to_file(fn, example, out)
+    text = out.read_text()
+    assert n == len(text) > 0
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # static shapes of the interchange contract
+    assert "f32[8,64]" in text
+    assert "f32[2048,64]" in text
+    assert "f32[8,2048]" in text
+
+
+def test_centroid_scan_lowers(tmp_path: pathlib.Path):
+    fn, example = model.centroid_scan_fn()
+    out = tmp_path / "scan.hlo.txt"
+    aot.lower_to_file(fn, example, out)
+    text = out.read_text()
+    assert text.startswith("HloModule")
+    assert "f32[128,64]" in text
+    assert "f32[8,128]" in text
+
+
+def test_encoder_lowers_with_baked_params(tmp_path: pathlib.Path):
+    fn, example = model.encode_fn("minilm-sim", 1)
+    out = tmp_path / "enc.hlo.txt"
+    aot.lower_to_file(fn, example, out)
+    text = out.read_text()
+    assert text.startswith("HloModule")
+    assert "s32[1,24]" in text  # token input
+    assert "f32[1,64]" in text  # embedding output
+    # weights are baked in as constants: ENTRY takes exactly one parameter
+    lines = text.splitlines()
+    start = next(i for i, l in enumerate(lines) if l.startswith("ENTRY"))
+    body = lines[start : lines.index("}", start) + 1]
+    n_params = sum(" parameter(" in l for l in body)
+    assert n_params == 1, body[:5]
+
+
+def test_hlo_text_not_proto():
+    # Guard against regressing to .serialize(): the output must be text.
+    fn, example = model.centroid_scan_fn()
+    lowered = jax.jit(fn).lower(*example)
+    text = aot.to_hlo_text(lowered)
+    assert isinstance(text, str)
+    assert "\x00" not in text
+
+
+def test_manifest_contents(tmp_path: pathlib.Path, monkeypatch):
+    # Shrink the encoder ladder so the test stays fast, then check the
+    # manifest records geometry + files that actually exist.
+    monkeypatch.setattr(aot, "ENCODER_BATCHES", {"minilm-sim": [1]})
+    manifest = aot.build_all(tmp_path, verbose=False)
+    on_disk = json.loads((tmp_path / "manifest.json").read_text())
+    assert on_disk == manifest
+    geo = manifest["geometry"]
+    assert geo["embed_dim"] == model.EMBED_DIM
+    assert geo["score_q"] == model.SCORE_Q
+    assert geo["score_n"] == model.SCORE_N
+    for section in ("encoders", "computations"):
+        for entry in _iter_files(manifest[section]):
+            assert (tmp_path / entry).exists(), entry
+
+
+def _iter_files(node):
+    if isinstance(node, dict):
+        if "file" in node:
+            yield node["file"]
+        else:
+            for v in node.values():
+                yield from _iter_files(v)
+
+
+@pytest.mark.parametrize("name", list(model.MODELS))
+def test_every_model_lowerable(name, tmp_path: pathlib.Path):
+    fn, example = model.encode_fn(name, 8)
+    out = tmp_path / f"{name}.hlo.txt"
+    aot.lower_to_file(fn, example, out)
+    assert out.read_text().startswith("HloModule")

@@ -1,0 +1,194 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (kernels/ref.py).
+
+Hypothesis sweeps shapes and value distributions; every property asserts
+allclose between the tiled Pallas kernel (interpret=True) and the oracle.
+This is the CORE correctness signal for the compute layer — the rust side
+only ever sees numbers that passed through these kernels.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import encoder as enc
+from compile.kernels import ref
+from compile.kernels import scoring
+
+jax.config.update("jax_platform_name", "cpu")
+
+ATOL = 1e-4
+RTOL = 1e-4
+
+
+def _rand(shape, seed, scale=1.0, dtype=jnp.float32):
+    return scale * jax.random.normal(jax.random.PRNGKey(seed), shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# scoring.l2_distances
+# ---------------------------------------------------------------------------
+
+
+class TestL2Distances:
+    def test_matches_ref_default_blocks(self):
+        q = _rand((8, 64), 0)
+        v = _rand((2048, 64), 1)
+        got = scoring.l2_distances(q, v)
+        want = ref.l2_distances(q, v)
+        np.testing.assert_allclose(got, want, atol=ATOL, rtol=RTOL)
+
+    def test_identical_vectors_zero_distance(self):
+        q = _rand((8, 64), 2)
+        v = jnp.tile(q[0][None, :], (256, 1))
+        got = scoring.l2_distances(q, v, n_block=256)
+        np.testing.assert_allclose(got[0], jnp.zeros(256), atol=ATOL)
+
+    def test_distances_nonnegative(self):
+        q = _rand((8, 64), 3, scale=3.0)
+        v = _rand((512, 64), 4, scale=3.0)
+        got = scoring.l2_distances(q, v)
+        assert float(got.min()) >= -ATOL
+
+    def test_symmetry_of_roles(self):
+        # d(q_i, v_j) must equal d computed with roles swapped & transposed.
+        q = _rand((8, 64), 5)
+        v = _rand((256, 64), 6)
+        a = scoring.l2_distances(q, v, n_block=256)
+        b = scoring.l2_distances(v, q, q_block=256, n_block=8)
+        np.testing.assert_allclose(a, b.T, atol=ATOL, rtol=RTOL)
+
+    def test_multiple_query_blocks(self):
+        q = _rand((32, 64), 7)
+        v = _rand((512, 64), 8)
+        got = scoring.l2_distances(q, v)
+        want = ref.l2_distances(q, v)
+        np.testing.assert_allclose(got, want, atol=ATOL, rtol=RTOL)
+
+    def test_zero_padding_rows_yield_vector_norms(self):
+        # The serving path pads query groups with zero rows: the distance
+        # from a zero query to vector v must be exactly ||v||^2.
+        q = jnp.zeros((8, 64))
+        v = _rand((256, 64), 9)
+        got = scoring.l2_distances(q, v, n_block=256)
+        want = jnp.broadcast_to(jnp.sum(v * v, axis=-1)[None, :], (8, 256))
+        np.testing.assert_allclose(got, want, atol=ATOL, rtol=RTOL)
+
+    def test_rejects_misaligned_shapes(self):
+        q = _rand((7, 64), 10)
+        v = _rand((256, 64), 11)
+        with pytest.raises(ValueError, match="q_block"):
+            scoring.l2_distances(q, v)
+        with pytest.raises(ValueError, match="n_block"):
+            scoring.l2_distances(_rand((8, 64), 12), _rand((100, 64), 13))
+        with pytest.raises(ValueError, match="dim mismatch"):
+            scoring.l2_distances(_rand((8, 32), 14), _rand((256, 64), 15))
+
+    @settings(deadline=None, max_examples=25)
+    @given(
+        qb=st.sampled_from([1, 2, 4, 8]),
+        nb=st.sampled_from([1, 2, 4]),
+        d=st.sampled_from([16, 64, 128]),
+        seed=st.integers(0, 2**31 - 1),
+        scale=st.sampled_from([1e-3, 1.0, 10.0]),
+    )
+    def test_property_matches_ref(self, qb, nb, d, seed, scale):
+        q = _rand((8 * qb, d), seed, scale)
+        v = _rand((256 * nb, d), seed + 1, scale)
+        got = scoring.l2_distances(q, v)
+        want = ref.l2_distances(q, v)
+        np.testing.assert_allclose(
+            got, want, atol=ATOL * max(1.0, scale**2), rtol=RTOL
+        )
+
+    @settings(deadline=None, max_examples=10)
+    @given(
+        q_block=st.sampled_from([4, 8, 16]),
+        n_block=st.sampled_from([64, 128, 256]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_property_block_size_invariance(self, q_block, n_block, seed):
+        # The tiling is an implementation detail: results must not depend
+        # on block shape.
+        q = _rand((16, 64), seed)
+        v = _rand((768, 64), seed + 1)
+        got = scoring.l2_distances(q, v, q_block=q_block, n_block=n_block)
+        base = scoring.l2_distances(q, v, q_block=8, n_block=256)
+        np.testing.assert_allclose(got, base, atol=ATOL, rtol=RTOL)
+
+
+# ---------------------------------------------------------------------------
+# encoder.linear / linear_gelu
+# ---------------------------------------------------------------------------
+
+
+class TestLinear:
+    def test_matches_ref_plain(self):
+        x = _rand((256, 64), 20)
+        w = _rand((64, 128), 21)
+        b = _rand((128,), 22)
+        got = enc.linear(x, w, b)
+        want = ref.linear(x, w, b)
+        np.testing.assert_allclose(got, want, atol=ATOL, rtol=RTOL)
+
+    def test_matches_ref_gelu(self):
+        x = _rand((128, 128), 23)
+        w = _rand((128, 64), 24)
+        b = _rand((64,), 25)
+        got = enc.linear_gelu(x, w, b)
+        want = ref.linear_gelu(x, w, b)
+        np.testing.assert_allclose(got, want, atol=ATOL, rtol=RTOL)
+
+    def test_bias_only(self):
+        x = jnp.zeros((128, 32))
+        w = _rand((32, 16), 26)
+        b = _rand((16,), 27)
+        got = enc.linear(x, w, b)
+        np.testing.assert_allclose(
+            got, jnp.broadcast_to(b[None, :], (128, 16)), atol=ATOL
+        )
+
+    def test_gelu_is_nonlinear(self):
+        x = _rand((128, 32), 28)
+        w = _rand((32, 16), 29)
+        b = jnp.zeros((16,))
+        lin = enc.linear(x, w, b)
+        gel = enc.linear_gelu(x, w, b)
+        assert not np.allclose(np.asarray(lin), np.asarray(gel), atol=1e-2)
+
+    def test_rejects_misaligned(self):
+        with pytest.raises(ValueError, match="m_block"):
+            enc.linear(_rand((100, 64), 30), _rand((64, 32), 31), _rand((32,), 32))
+        with pytest.raises(ValueError, match="contraction"):
+            enc.linear(_rand((128, 64), 33), _rand((32, 16), 34), _rand((16,), 35))
+        with pytest.raises(ValueError, match="bias"):
+            enc.linear(_rand((128, 64), 36), _rand((64, 32), 37), _rand((64,), 38))
+
+    @settings(deadline=None, max_examples=20)
+    @given(
+        mb=st.sampled_from([1, 2, 4]),
+        k=st.sampled_from([16, 64, 128]),
+        n=st.sampled_from([16, 64, 128]),
+        activate=st.booleans(),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_property_matches_ref(self, mb, k, n, activate, seed):
+        x = _rand((128 * mb, k), seed)
+        w = _rand((k, n), seed + 1)
+        b = _rand((n,), seed + 2)
+        got = enc.linear(x, w, b, activate=activate)
+        want = ref.linear_gelu(x, w, b) if activate else ref.linear(x, w, b)
+        np.testing.assert_allclose(got, want, atol=5 * ATOL, rtol=RTOL)
+
+    @settings(deadline=None, max_examples=10)
+    @given(m_block=st.sampled_from([32, 64, 128, 256]), seed=st.integers(0, 2**31 - 1))
+    def test_property_block_size_invariance(self, m_block, seed):
+        x = _rand((256, 64), seed)
+        w = _rand((64, 32), seed + 1)
+        b = _rand((32,), seed + 2)
+        got = enc.linear(x, w, b, m_block=m_block)
+        base = ref.linear(x, w, b)
+        np.testing.assert_allclose(got, base, atol=ATOL, rtol=RTOL)

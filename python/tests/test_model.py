@@ -1,0 +1,169 @@
+"""L2 correctness: encoder semantics, scan/scorer graphs, padding contracts.
+
+These tests pin down the *behavioural* properties the rust layers rely on:
+unit-norm embeddings, determinism across batch widths (the dynamic batcher
+picks different encoder artifacts for the same query), the structural-
+locality phenomenon that motivates the whole paper, and the padding
+conventions shared with rust/src/runtime/.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _tokens(seed: int, batch: int) -> jax.Array:
+    return jax.random.randint(
+        jax.random.PRNGKey(seed), (batch, model.SEQ_LEN), 0, model.VOCAB
+    ).astype(jnp.int32)
+
+
+def _templated_tokens(template: int, topic_seed: int) -> np.ndarray:
+    """Build one query the way rust/src/workload does: structural prefix
+    tokens determined by the template id, content tokens by the topic."""
+    rng = np.random.default_rng(topic_seed)
+    toks = np.zeros(model.SEQ_LEN, dtype=np.int32)
+    toks[: model.STRUCT_PREFIX] = 8 * template + np.arange(model.STRUCT_PREFIX)
+    toks[model.STRUCT_PREFIX :] = rng.integers(
+        128, model.VOCAB, size=model.SEQ_LEN - model.STRUCT_PREFIX
+    )
+    return toks
+
+
+class TestEncoder:
+    def test_output_shape_and_unit_norm(self):
+        p = model.params_for("minilm-sim")
+        y = model.encode(_tokens(0, 8), p)
+        assert y.shape == (8, model.EMBED_DIM)
+        np.testing.assert_allclose(
+            jnp.linalg.norm(y, axis=-1), jnp.ones(8), atol=1e-5
+        )
+
+    def test_deterministic(self):
+        p = model.params_for("minilm-sim")
+        t = _tokens(1, 4)
+        np.testing.assert_array_equal(model.encode(t, p), model.encode(t, p))
+
+    def test_batch_width_invariance(self):
+        # The same query must encode identically whether it rides in a
+        # b=1 or b=32 artifact (the batcher relies on this).
+        p = model.params_for("minilm-sim")
+        t32 = _tokens(2, 32)
+        y32 = model.encode(t32, p)
+        y1 = jnp.concatenate([model.encode(t32[i : i + 1], p) for i in range(4)])
+        np.testing.assert_allclose(y32[:4], y1, atol=1e-5, rtol=1e-5)
+
+    def test_models_differ(self):
+        t = _tokens(3, 4)
+        ys = [model.encode(t, model.params_for(m)) for m in model.MODELS]
+        assert not np.allclose(np.asarray(ys[0]), np.asarray(ys[1]), atol=1e-3)
+        assert not np.allclose(np.asarray(ys[1]), np.asarray(ys[2]), atol=1e-3)
+
+    def test_rejects_bad_seq_len(self):
+        p = model.params_for("minilm-sim")
+        with pytest.raises(ValueError, match="seq len"):
+            model.encode(jnp.zeros((2, 7), jnp.int32), p)
+
+    def test_structural_locality_ordering(self):
+        """Core motivation (paper §2.4 / Fig. 1): same-template queries are
+        closer than cross-template queries, and the effect is strongest for
+        the high-gain model (minilm-sim) and weakest for e5-sim."""
+        n_per = 8
+        toks = np.stack(
+            [_templated_tokens(tpl, 1000 + tpl * n_per + i)
+             for tpl in range(4) for i in range(n_per)]
+        )
+        gaps = {}
+        for name in model.MODELS:
+            y = np.asarray(model.encode(jnp.asarray(toks), model.params_for(name)))
+            d = ref.l2_distances(jnp.asarray(y), jnp.asarray(y))
+            d = np.asarray(d)
+            same, cross = [], []
+            for a in range(len(toks)):
+                for b in range(a + 1, len(toks)):
+                    (same if a // n_per == b // n_per else cross).append(d[a, b])
+            gaps[name] = float(np.mean(cross) - np.mean(same))
+            assert gaps[name] > 0, f"{name}: same-template not closer"
+        assert gaps["minilm-sim"] > gaps["e5-sim"], (
+            "structure gain must order the locality effect"
+        )
+
+
+class TestScanAndScore:
+    def test_centroid_scan_matches_ref(self):
+        q = jax.random.normal(jax.random.PRNGKey(10), (model.SCORE_Q, model.EMBED_DIM))
+        c = jax.random.normal(
+            jax.random.PRNGKey(11), (model.CENTROID_PAD, model.EMBED_DIM)
+        )
+        np.testing.assert_allclose(
+            model.centroid_scan(q, c), ref.l2_distances(q, c), atol=1e-4, rtol=1e-4
+        )
+
+    def test_score_block_matches_ref(self):
+        q = jax.random.normal(jax.random.PRNGKey(12), (model.SCORE_Q, model.EMBED_DIM))
+        v = jax.random.normal(
+            jax.random.PRNGKey(13), (model.SCORE_N, model.EMBED_DIM)
+        )
+        np.testing.assert_allclose(
+            model.score_block(q, v), ref.l2_distances(q, v), atol=1e-4, rtol=1e-4
+        )
+
+    def test_padded_centroids_never_win(self):
+        # rust pads unused centroid rows with +1e3 coordinates; assert the
+        # contract that a padded row can never be the argmin.
+        q = jax.random.normal(jax.random.PRNGKey(14), (model.SCORE_Q, model.EMBED_DIM))
+        c = jnp.full((model.CENTROID_PAD, model.EMBED_DIM), 1e3)
+        c = c.at[:100].set(
+            jax.random.normal(jax.random.PRNGKey(15), (100, model.EMBED_DIM))
+        )
+        d = np.asarray(model.centroid_scan(q, c))
+        assert (d.argmin(axis=1) < 100).all()
+
+    def test_cluster_padding_is_sliceable(self):
+        # Zero-padded tail rows of a cluster block produce finite distances
+        # and slicing [:len] recovers exactly the unpadded answer.
+        q = jax.random.normal(jax.random.PRNGKey(16), (model.SCORE_Q, model.EMBED_DIM))
+        real = jax.random.normal(jax.random.PRNGKey(17), (1500, model.EMBED_DIM))
+        padded = jnp.zeros((model.SCORE_N, model.EMBED_DIM)).at[:1500].set(real)
+        d = model.score_block(q, padded)
+        np.testing.assert_allclose(
+            d[:, :1500], ref.l2_distances(q, real), atol=1e-4, rtol=1e-4
+        )
+
+    @settings(deadline=None, max_examples=10)
+    @given(seed=st.integers(0, 2**31 - 1))
+    def test_property_nearest_centroid_agrees_with_ref(self, seed):
+        q = jax.random.normal(jax.random.PRNGKey(seed), (model.SCORE_Q, model.EMBED_DIM))
+        c = jax.random.normal(
+            jax.random.PRNGKey(seed + 1), (model.CENTROID_PAD, model.EMBED_DIM)
+        )
+        got = np.asarray(model.centroid_scan(q, c)).argmin(axis=1)
+        want = np.asarray(ref.l2_distances(q, c)).argmin(axis=1)
+        np.testing.assert_array_equal(got, want)
+
+
+class TestParams:
+    def test_params_deterministic(self):
+        a = model.make_encoder_params(7, 2.0)
+        b = model.make_encoder_params(7, 2.0)
+        np.testing.assert_array_equal(a.emb, b.emb)
+        np.testing.assert_array_equal(a.w1, b.w1)
+
+    def test_gain_mean_is_one(self):
+        for _, (seed, gain) in model.MODELS.items():
+            p = model.make_encoder_params(seed, gain)
+            np.testing.assert_allclose(float(jnp.mean(p.pos_gain)), 1.0, atol=1e-6)
+
+    def test_distinct_seeds_distinct_weights(self):
+        a = model.make_encoder_params(1, 1.0)
+        b = model.make_encoder_params(2, 1.0)
+        assert not np.allclose(np.asarray(a.emb), np.asarray(b.emb))

@@ -1,0 +1,98 @@
+//! Fig. 7 — module effectiveness ablation: p99 tail latency of QG (grouping
+//! only) vs QGP (grouping + opportunistic prefetch) on hotpotqa across
+//! Jaccard distance thresholds.
+//!
+//! Expected shape (paper §4.4): at high thresholds (~0.9) grouping
+//! degenerates to singleton groups and the two arms converge; at low
+//! thresholds QGP's prefetch covers the group switches that QG pays for —
+//! the paper reports up to 3.1x lower p99 for QGP at 10%.
+
+use cagr::config::{Backend, Config, DiskProfile};
+use cagr::coordinator::Mode;
+use cagr::harness::banner;
+use cagr::harness::runner::{ensure_dataset, run_workload};
+use cagr::metrics::{render_table, write_csv};
+use cagr::workload::{generate_queries, DatasetSpec};
+
+fn main() -> anyhow::Result<()> {
+    banner("Fig. 7: QG vs QGP p99 across Jaccard thresholds (hotpotqa)");
+    let fast = std::env::var("CAGR_BENCH_FAST").is_ok();
+    let spec = DatasetSpec::by_name("hotpotqa-sim")?;
+    let mut cfg = Config::default();
+    cfg.backend = Backend::Native;
+    cfg.disk_profile = DiskProfile::NvmeScaled;
+    ensure_dataset(&cfg, &spec)?;
+    let queries = generate_queries(&spec);
+    let thetas: &[f64] = if fast {
+        &[0.1, 0.5, 0.9]
+    } else {
+        &[0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9]
+    };
+
+    let mut rows = Vec::new();
+    let mut csv_rows = Vec::new();
+    for &theta in thetas {
+        let mut cfg = cfg.clone();
+        cfg.theta = theta;
+        let mut p99 = Vec::new();
+        let mut groups = 0usize;
+        // Third arm: QGP with the paper's literal "after the vector search"
+        // trigger — converges toward QG in the singleton-group regime.
+        for (label, mode, trigger) in [
+            ("QG", Mode::QG, "start"),
+            ("QGP", Mode::QGP, "start"),
+            ("QGP-post", Mode::QGP, "end"),
+        ] {
+            let mut cfg = cfg.clone();
+            cfg.set("prefetch_trigger", trigger)?;
+            let result = run_workload(&cfg, &spec, mode, &queries, 50)?;
+            p99.push(result.p99_latency());
+            groups = result.groups_total;
+            csv_rows.push(vec![
+                format!("{theta:.1}"),
+                label.to_string(),
+                format!("{:.5}", result.p99_latency()),
+                format!("{:.5}", result.mean_latency()),
+                format!("{:.3}", result.cache_stats.hit_ratio()),
+            ]);
+        }
+        rows.push(vec![
+            format!("{theta:.1}"),
+            groups.to_string(),
+            format!("{:.4}", p99[0]),
+            format!("{:.4}", p99[1]),
+            format!("{:.4}", p99[2]),
+            format!("{:.2}x", p99[0] / p99[1]),
+            format!("{:.2}x", p99[0] / p99[2]),
+        ]);
+    }
+    println!(
+        "{}",
+        render_table(
+            &[
+                "theta",
+                "groups",
+                "QG p99(s)",
+                "QGP p99(s)",
+                "QGP-post p99(s)",
+                "QG/QGP",
+                "QG/QGP-post",
+            ],
+            &rows
+        )
+    );
+    write_csv(
+        std::path::Path::new("results/fig7.csv"),
+        &["theta", "arm", "p99_s", "mean_s", "hit_ratio"],
+        &csv_rows,
+    )?;
+    println!("series: results/fig7.csv");
+    println!(
+        "paper shape: arms converge near theta=0.9 (singleton groups); QGP up to\n\
+         3.1x lower p99 at low thresholds where group switches dominate.\n\
+         QGP (default trigger) fires at the last query's START (Fig. 3's overlap)\n\
+         and stays effective even at theta=0.9; QGP-post uses the paper's literal\n\
+         after-search trigger and reproduces the Fig. 7 convergence."
+    );
+    Ok(())
+}

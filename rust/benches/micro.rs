@@ -1,0 +1,137 @@
+//! Microbenchmarks of the serving hot paths (the §Perf L3 profile inputs):
+//! Jaccard, grouping, cache ops, native scoring, top-k merge, cluster file
+//! reads, and — when artifacts are present — PJRT scorer/scan/encoder
+//! dispatch.
+
+use cagr::cache::ClusterCache;
+use cagr::config::geometry::{CENTROID_PAD, EMBED_DIM, SCORE_N, SCORE_Q, SEQ_LEN};
+use cagr::config::{CachePolicy, GroupingPolicy};
+use cagr::coordinator::grouping::group_queries;
+use cagr::coordinator::jaccard::{canonicalize, jaccard_sorted};
+use cagr::engine::PreparedQuery;
+use cagr::harness::{banner, bench, BenchStats};
+use cagr::index::{distance, ClusterBlock, TopK};
+use cagr::metrics::render_table;
+use cagr::util::rng::Rng;
+use cagr::workload::Query;
+
+use std::sync::Arc;
+
+fn random_sets(rng: &mut Rng, n: usize) -> Vec<Vec<u32>> {
+    (0..n)
+        .map(|_| canonicalize(&(0..10).map(|_| rng.range(0, 100) as u32).collect::<Vec<_>>()))
+        .collect()
+}
+
+fn random_batch(rng: &mut Rng, n: usize) -> Vec<PreparedQuery> {
+    random_sets(rng, n)
+        .into_iter()
+        .enumerate()
+        .map(|(id, clusters)| PreparedQuery {
+            query: Query { id, template: 0, topic: 0, tokens: vec![] },
+            embedding: vec![],
+            clusters,
+            prep_cost: std::time::Duration::ZERO,
+        })
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    banner("micro: serving hot paths");
+    let mut rng = Rng::new(benchmark_seed());
+    let mut stats: Vec<BenchStats> = Vec::new();
+
+    // Jaccard over nprobe=10 sets.
+    let sets = random_sets(&mut rng, 200);
+    let mut acc = 0f64;
+    stats.push(bench("jaccard(10x10) x 19900 pairs", 2, 20, || {
+        for i in 0..sets.len() {
+            for j in (i + 1)..sets.len() {
+                acc += jaccard_sorted(&sets[i], &sets[j]);
+            }
+        }
+    }));
+
+    // Algorithm 1 over a full paper-sized batch.
+    let batch100 = random_batch(&mut rng, 100);
+    stats.push(bench("group_queries(batch=100, theta=0.5)", 5, 50, || {
+        std::hint::black_box(group_queries(&batch100, 0.5, GroupingPolicy::SingleLink));
+    }));
+    stats.push(bench("group_queries(batch=100, complete-link)", 5, 50, || {
+        std::hint::black_box(group_queries(&batch100, 0.5, GroupingPolicy::CompleteLink));
+    }));
+
+    // Cache get/insert under the cost-aware policy.
+    let costs: Vec<u64> = (0..128).map(|i| 100 + i as u64).collect();
+    let mut cache = ClusterCache::from_config(CachePolicy::CostAware, 40, costs);
+    let block = |id: u32| {
+        Arc::new(ClusterBlock {
+            id,
+            len: 1,
+            dim: 1,
+            doc_ids: vec![id],
+            data: vec![0.0],
+            bytes_on_disk: 1,
+        })
+    };
+    let mut next = 0u32;
+    stats.push(bench("cache get+insert (cost-aware, 40 entries)", 100, 2_000, || {
+        if cache.get(next % 128).is_none() {
+            cache.insert(block(next % 128), false);
+        }
+        next = next.wrapping_add(17);
+    }));
+
+    // Native scoring of one query against a 1200-vector cluster.
+    let q: Vec<f32> = (0..EMBED_DIM).map(|_| rng.normal() as f32).collect();
+    let vecs: Vec<f32> = (0..1200 * EMBED_DIM).map(|_| rng.normal() as f32).collect();
+    let mut out = vec![0f32; 1200];
+    stats.push(bench("native score 1x1200x64", 20, 500, || {
+        distance::l2_one_to_many(&q, &vecs, EMBED_DIM, &mut out);
+        std::hint::black_box(&out);
+    }));
+
+    // Top-k merge of nprobe x 1200 candidates.
+    let ids: Vec<u32> = (0..1200).collect();
+    let dist_rows: Vec<Vec<f32>> =
+        (0..10).map(|_| (0..1200).map(|_| rng.f32()).collect()).collect();
+    stats.push(bench("topk(10) merge 10x1200", 20, 500, || {
+        let mut tk = TopK::new(10);
+        for row in &dist_rows {
+            tk.push_block(&ids, row);
+        }
+        std::hint::black_box(tk.into_sorted());
+    }));
+
+    // PJRT dispatch costs (compiled-artifact path), if available.
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let runtime = cagr::runtime::PjrtRuntime::load(std::path::Path::new("artifacts"))?;
+        let q8: Vec<f32> = (0..SCORE_Q * EMBED_DIM).map(|_| rng.normal() as f32).collect();
+        let chunk: Vec<f32> = (0..SCORE_N * EMBED_DIM).map(|_| rng.normal() as f32).collect();
+        let cents: Vec<f32> =
+            (0..CENTROID_PAD * EMBED_DIM).map(|_| rng.normal() as f32).collect();
+        stats.push(bench("pjrt scorer 8x2048x64", 5, 100, || {
+            std::hint::black_box(runtime.score_chunk(&q8, &chunk).unwrap());
+        }));
+        stats.push(bench("pjrt centroid scan 8x128x64", 5, 100, || {
+            std::hint::black_box(runtime.centroid_scan(&q8, &cents).unwrap());
+        }));
+        let rows: Vec<Vec<i32>> = (0..8)
+            .map(|_| (0..SEQ_LEN).map(|_| rng.range(0, 512) as i32).collect())
+            .collect();
+        stats.push(bench("pjrt encoder b8", 3, 50, || {
+            std::hint::black_box(runtime.encode_many("minilm-sim", &rows).unwrap());
+        }));
+    } else {
+        println!("(artifacts/ missing: skipping PJRT dispatch benches)");
+    }
+
+    let rows: Vec<Vec<String>> = stats.iter().map(|s| s.row()).collect();
+    println!("{}", render_table(&BenchStats::HEADERS, &rows));
+    std::hint::black_box(acc);
+    Ok(())
+}
+
+fn benchmark_seed() -> u64 {
+    0xB17
+}

@@ -1,0 +1,414 @@
+//! Cluster cache (S4): the in-memory pool of decoded second-level clusters.
+//!
+//! The paper frames its contribution as orthogonal to the replacement
+//! policy ("compatible with any cache replacement policy", §5), so the
+//! cache is a trait with four implementations behind one generic engine:
+//!
+//!  * `Lru` / `Fifo` / `Lfu` — classic policies (GPTCache's choices, §2.3).
+//!  * `CostAware` — the EdgeRAG baseline (§4.1): priority = offline-profiled
+//!    read latency x access count; eviction deletes the block from memory
+//!    (Fig. 5(a) behaviour).
+//!
+//! Pinning supports the opportunistic prefetcher (DESIGN.md §6): clusters
+//! still needed by the in-flight query group are pinned so a prefetch for
+//! the *next* group can never evict them. All policies respect pins.
+
+mod policies;
+
+pub use policies::{new_cache, CostAwarePolicy, FifoPolicy, LfuPolicy, LruPolicy};
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::config::CachePolicy;
+use crate::index::ClusterBlock;
+
+/// Running counters. `prefetch_inserts` distinguishes prefetcher-initiated
+/// loads from demand misses (Fig. 7 accounting).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+    pub rejected_inserts: u64,
+    pub prefetch_inserts: u64,
+}
+
+impl CacheStats {
+    pub fn hit_ratio(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// One resident cache entry plus the book-keeping every policy shares.
+#[derive(Debug, Clone)]
+pub struct Entry {
+    pub block: Arc<ClusterBlock>,
+    /// Logical clock value of the last `get`.
+    pub last_access: u64,
+    /// Logical clock value at insertion.
+    pub inserted_at: u64,
+    /// Number of `get` hits since insertion.
+    pub access_count: u64,
+    /// Offline-profiled read cost in microseconds (EdgeRAG input).
+    pub cost_us: u64,
+    pub pinned: bool,
+}
+
+/// Replacement policy: chooses the eviction victim among unpinned entries.
+pub trait Policy: Send {
+    fn name(&self) -> &'static str;
+    /// Smaller = evicted first.
+    fn priority(&self, entry: &Entry) -> f64;
+}
+
+/// The cluster cache: bounded map + pluggable replacement policy.
+pub struct ClusterCache {
+    capacity: usize,
+    policy: Box<dyn Policy>,
+    entries: HashMap<u32, Entry>,
+    clock: u64,
+    stats: CacheStats,
+    /// Per-cluster profiled read cost, indexed by cluster id.
+    costs: Vec<u64>,
+}
+
+impl ClusterCache {
+    pub fn new(policy: Box<dyn Policy>, capacity: usize, costs: Vec<u64>) -> ClusterCache {
+        assert!(capacity > 0, "cache capacity must be > 0");
+        ClusterCache {
+            capacity,
+            policy,
+            entries: HashMap::with_capacity(capacity + 1),
+            clock: 0,
+            stats: CacheStats::default(),
+            costs,
+        }
+    }
+
+    /// Build from config (+ the per-cluster read-latency profile).
+    pub fn from_config(policy: CachePolicy, capacity: usize, costs: Vec<u64>) -> ClusterCache {
+        ClusterCache::new(new_cache(policy), capacity, costs)
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+
+    /// Reset counters (e.g. after the warm-up phase, paper §4.1).
+    pub fn reset_stats(&mut self) {
+        self.stats = CacheStats::default();
+    }
+
+    pub fn contains(&self, id: u32) -> bool {
+        self.entries.contains_key(&id)
+    }
+
+    /// Look up a cluster; updates recency/frequency and hit/miss counters.
+    pub fn get(&mut self, id: u32) -> Option<Arc<ClusterBlock>> {
+        self.clock += 1;
+        match self.entries.get_mut(&id) {
+            Some(e) => {
+                e.last_access = self.clock;
+                e.access_count += 1;
+                self.stats.hits += 1;
+                Some(Arc::clone(&e.block))
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Peek without touching counters or recency (used by the prefetcher to
+    /// decide what is already resident).
+    pub fn peek(&self, id: u32) -> Option<Arc<ClusterBlock>> {
+        self.entries.get(&id).map(|e| Arc::clone(&e.block))
+    }
+
+    /// Re-classify the most recent demand miss on `id` as a hit: the block
+    /// arrived via an overlapped (prefetch) read the demand path waited on
+    /// instead of re-reading. Touches recency/frequency like a normal hit.
+    /// Returns the block if resident.
+    pub fn convert_miss_to_hit(&mut self, id: u32) -> Option<Arc<ClusterBlock>> {
+        self.clock += 1;
+        let clock = self.clock;
+        let entry = self.entries.get_mut(&id)?;
+        entry.last_access = clock;
+        entry.access_count += 1;
+        self.stats.misses = self.stats.misses.saturating_sub(1);
+        self.stats.hits += 1;
+        Some(Arc::clone(&entry.block))
+    }
+
+    /// Insert a block loaded from disk. Returns `false` when the insert was
+    /// rejected because every resident entry is pinned.
+    pub fn insert(&mut self, block: Arc<ClusterBlock>, from_prefetch: bool) -> bool {
+        let id = block.id;
+        if self.entries.contains_key(&id) {
+            return true; // racing demand load + prefetch: already resident
+        }
+        while self.entries.len() >= self.capacity {
+            match self.victim() {
+                Some(v) => {
+                    // EdgeRAG semantics: eviction removes the block from
+                    // memory entirely (the Arc drops when the engine's
+                    // borrow ends).
+                    self.entries.remove(&v);
+                    self.stats.evictions += 1;
+                }
+                None => {
+                    self.stats.rejected_inserts += 1;
+                    return false;
+                }
+            }
+        }
+        self.clock += 1;
+        let cost_us = self.costs.get(id as usize).copied().unwrap_or(0);
+        self.entries.insert(
+            id,
+            Entry {
+                block,
+                last_access: self.clock,
+                inserted_at: self.clock,
+                access_count: 0,
+                cost_us,
+                pinned: false,
+            },
+        );
+        self.stats.insertions += 1;
+        if from_prefetch {
+            self.stats.prefetch_inserts += 1;
+        }
+        true
+    }
+
+    /// Pin `ids` (resident ones only) so they cannot be evicted; used for
+    /// the in-flight group's residual working set.
+    pub fn pin(&mut self, ids: &[u32]) {
+        for id in ids {
+            if let Some(e) = self.entries.get_mut(id) {
+                e.pinned = true;
+            }
+        }
+    }
+
+    pub fn unpin_all(&mut self) {
+        for e in self.entries.values_mut() {
+            e.pinned = false;
+        }
+    }
+
+    pub fn pinned_count(&self) -> usize {
+        self.entries.values().filter(|e| e.pinned).count()
+    }
+
+    /// Resident cluster ids (unordered).
+    pub fn resident_ids(&self) -> Vec<u32> {
+        self.entries.keys().copied().collect()
+    }
+
+    /// Lowest-priority unpinned entry (deterministic tie-break by id).
+    fn victim(&self) -> Option<u32> {
+        self.entries
+            .iter()
+            .filter(|(_, e)| !e.pinned)
+            .min_by(|(ia, ea), (ib, eb)| {
+                self.policy
+                    .priority(ea)
+                    .partial_cmp(&self.policy.priority(eb))
+                    .unwrap_or(std::cmp::Ordering::Equal)
+                    .then(ia.cmp(ib))
+            })
+            .map(|(id, _)| *id)
+    }
+}
+
+#[cfg(test)]
+pub(crate) fn test_block(id: u32) -> Arc<ClusterBlock> {
+    Arc::new(ClusterBlock {
+        id,
+        len: 1,
+        dim: 2,
+        doc_ids: vec![id],
+        data: vec![id as f32, 0.0],
+        bytes_on_disk: 100 + id as u64,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cache(policy: CachePolicy, cap: usize) -> ClusterCache {
+        ClusterCache::from_config(policy, cap, vec![0; 128])
+    }
+
+    #[test]
+    fn hit_and_miss_accounting() {
+        let mut c = cache(CachePolicy::Lru, 2);
+        assert!(c.get(1).is_none());
+        c.insert(test_block(1), false);
+        assert!(c.get(1).is_some());
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.insertions), (1, 1, 1));
+        assert!((s.hit_ratio() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lru_evicts_least_recent() {
+        let mut c = cache(CachePolicy::Lru, 2);
+        c.insert(test_block(1), false);
+        c.insert(test_block(2), false);
+        c.get(1); // 2 is now least recent
+        c.insert(test_block(3), false);
+        assert!(c.contains(1) && c.contains(3) && !c.contains(2));
+    }
+
+    #[test]
+    fn fifo_evicts_oldest_insert() {
+        let mut c = cache(CachePolicy::Fifo, 2);
+        c.insert(test_block(1), false);
+        c.insert(test_block(2), false);
+        c.get(1); // recency must NOT matter for FIFO
+        c.insert(test_block(3), false);
+        assert!(!c.contains(1) && c.contains(2) && c.contains(3));
+    }
+
+    #[test]
+    fn lfu_evicts_least_frequent() {
+        let mut c = cache(CachePolicy::Lfu, 2);
+        c.insert(test_block(1), false);
+        c.insert(test_block(2), false);
+        c.get(1);
+        c.get(1);
+        c.get(2);
+        c.insert(test_block(3), false);
+        assert!(c.contains(1) && !c.contains(2));
+    }
+
+    #[test]
+    fn cost_aware_keeps_expensive_clusters() {
+        let mut costs = vec![1u64; 10];
+        costs[7] = 1_000_000; // cluster 7 is very expensive to re-read
+        let mut c = ClusterCache::from_config(CachePolicy::CostAware, 2, costs);
+        c.insert(test_block(7), false);
+        c.insert(test_block(1), false);
+        // Access both equally; cost must dominate.
+        c.get(7);
+        c.get(1);
+        c.insert(test_block(2), false);
+        assert!(c.contains(7), "expensive cluster evicted");
+        assert!(!c.contains(1));
+    }
+
+    #[test]
+    fn cost_aware_frequency_breaks_cost_ties() {
+        let mut c = ClusterCache::from_config(CachePolicy::CostAware, 2, vec![10; 10]);
+        c.insert(test_block(1), false);
+        c.insert(test_block(2), false);
+        c.get(2);
+        c.get(2);
+        c.get(1);
+        c.insert(test_block(3), false);
+        assert!(c.contains(2) && !c.contains(1));
+    }
+
+    #[test]
+    fn pinned_entries_survive_eviction() {
+        let mut c = cache(CachePolicy::Lru, 2);
+        c.insert(test_block(1), false);
+        c.insert(test_block(2), false);
+        c.pin(&[1]);
+        c.get(2); // 1 is least recent AND pinned
+        c.insert(test_block(3), false);
+        assert!(c.contains(1), "pinned entry evicted");
+        assert!(!c.contains(2));
+    }
+
+    #[test]
+    fn insert_rejected_when_all_pinned() {
+        let mut c = cache(CachePolicy::Lru, 2);
+        c.insert(test_block(1), false);
+        c.insert(test_block(2), false);
+        c.pin(&[1, 2]);
+        assert!(!c.insert(test_block(3), false));
+        assert_eq!(c.stats().rejected_inserts, 1);
+        c.unpin_all();
+        assert!(c.insert(test_block(3), false));
+    }
+
+    #[test]
+    fn duplicate_insert_is_noop() {
+        let mut c = cache(CachePolicy::Lru, 2);
+        assert!(c.insert(test_block(1), false));
+        assert!(c.insert(test_block(1), false));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.stats().insertions, 1);
+    }
+
+    #[test]
+    fn prefetch_inserts_counted_separately() {
+        let mut c = cache(CachePolicy::Lru, 4);
+        c.insert(test_block(1), true);
+        c.insert(test_block(2), false);
+        let s = c.stats();
+        assert_eq!(s.insertions, 2);
+        assert_eq!(s.prefetch_inserts, 1);
+    }
+
+    #[test]
+    fn capacity_never_exceeded() {
+        let mut c = cache(CachePolicy::Fifo, 3);
+        for id in 0..20 {
+            c.insert(test_block(id), false);
+            assert!(c.len() <= 3);
+        }
+        assert_eq!(c.stats().evictions, 17);
+    }
+
+    #[test]
+    fn peek_does_not_disturb_state() {
+        let mut c = cache(CachePolicy::Lru, 2);
+        c.insert(test_block(1), false);
+        c.insert(test_block(2), false);
+        let _ = c.peek(1); // would protect 1 if it counted as a touch
+        c.insert(test_block(3), false);
+        assert!(!c.contains(1), "peek must not refresh recency");
+        assert_eq!(c.stats().hits, 0);
+    }
+
+    #[test]
+    fn reset_stats_clears_counters() {
+        let mut c = cache(CachePolicy::Lru, 2);
+        c.insert(test_block(1), false);
+        c.get(1);
+        c.get(9);
+        c.reset_stats();
+        assert_eq!(c.stats(), CacheStats::default());
+        assert!(c.contains(1), "reset must not drop contents");
+    }
+}

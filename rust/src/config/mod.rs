@@ -1,0 +1,466 @@
+//! Configuration system: typed config with defaults matching the paper's
+//! §4.1 setup, JSON file loading, dotted-key overrides (`--set a.b=c` on the
+//! CLI), and validation.
+//!
+//! Paper defaults: 100 clusters, nprobe 10, 40 cache entries, Jaccard
+//! distance threshold 0.5, batches of 20–100 queries, all-MiniLM-L6-v2
+//! encoder (here: `minilm-sim`).
+
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Geometry constants mirrored from `python/compile/model.py`; asserted
+/// against the artifact manifest at runtime load.
+pub mod geometry {
+    pub const VOCAB: usize = 512;
+    pub const SEQ_LEN: usize = 24;
+    pub const STRUCT_PREFIX: usize = 6;
+    pub const EMBED_DIM: usize = 64;
+    pub const HIDDEN_DIM: usize = 128;
+    pub const CENTROID_PAD: usize = 128;
+    pub const SCORE_Q: usize = 8;
+    pub const SCORE_N: usize = 2048;
+}
+
+/// Cache replacement policy selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CachePolicy {
+    Lru,
+    Fifo,
+    Lfu,
+    /// EdgeRAG-style cost-aware: priority = profiled load latency x
+    /// access frequency; eviction deletes the block from memory.
+    CostAware,
+}
+
+impl CachePolicy {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "lru" => Ok(CachePolicy::Lru),
+            "fifo" => Ok(CachePolicy::Fifo),
+            "lfu" => Ok(CachePolicy::Lfu),
+            "cost-aware" | "cost_aware" | "edgerag" => Ok(CachePolicy::CostAware),
+            _ => anyhow::bail!("unknown cache policy '{s}' (lru|fifo|lfu|cost-aware)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CachePolicy::Lru => "lru",
+            CachePolicy::Fifo => "fifo",
+            CachePolicy::Lfu => "lfu",
+            CachePolicy::CostAware => "cost-aware",
+        }
+    }
+}
+
+/// How group membership is decided against an existing group (DESIGN.md §6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GroupingPolicy {
+    /// Algorithm 1 as written: assign if max over members >= theta.
+    SingleLink,
+    /// Eq. 3's for-all reading: assign if min over members >= theta.
+    CompleteLink,
+}
+
+impl GroupingPolicy {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "single" | "single-link" => Ok(GroupingPolicy::SingleLink),
+            "complete" | "complete-link" => Ok(GroupingPolicy::CompleteLink),
+            _ => anyhow::bail!("unknown grouping policy '{s}' (single|complete)"),
+        }
+    }
+}
+
+/// Inter-group dispatch order (extension; paper §4.2 hints at further
+/// gains from smarter scheduling between groups).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GroupOrder {
+    /// Groups run in creation (arrival) order — the paper's behaviour.
+    Arrival,
+    /// Greedy chaining: the next group is the one whose cluster union is
+    /// most Jaccard-similar to the current group's, so consecutive groups
+    /// share residual cache content.
+    Greedy,
+}
+
+impl GroupOrder {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "arrival" => Ok(GroupOrder::Arrival),
+            "greedy" => Ok(GroupOrder::Greedy),
+            _ => anyhow::bail!("unknown group order '{s}' (arrival|greedy)"),
+        }
+    }
+}
+
+/// When the opportunistic prefetch for the next group fires (Fig. 7 nuance).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrefetchTrigger {
+    /// At the *start* of the current group's last query — the prefetch
+    /// overlaps that query's fetch+score work (the reading of the paper's
+    /// Fig. 3 ⑤; default, and strictly better).
+    LastQueryStart,
+    /// *After* the last query's search completes ("immediately after the
+    /// vector search", §3.1 read literally) — minimal overlap window; in
+    /// the singleton-group regime (high θ) this degenerates toward QG,
+    /// reproducing the paper's Fig. 7 convergence.
+    AfterSearch,
+}
+
+impl PrefetchTrigger {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "start" | "last-query-start" => Ok(PrefetchTrigger::LastQueryStart),
+            "end" | "after-search" => Ok(PrefetchTrigger::AfterSearch),
+            _ => anyhow::bail!("unknown prefetch trigger '{s}' (start|end)"),
+        }
+    }
+}
+
+/// Scoring/encoding backend selector (DESIGN.md §6).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Execute the AOT HLO artifacts on the PJRT CPU client (serving default).
+    Pjrt,
+    /// Portable rust implementation of the same math (unit-test default; also
+    /// the fallback when `artifacts/` is absent).
+    Native,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "pjrt" => Ok(Backend::Pjrt),
+            "native" => Ok(Backend::Native),
+            _ => anyhow::bail!("unknown backend '{s}' (pjrt|native)"),
+        }
+    }
+}
+
+/// Disk latency model profile (sim/mod.rs). The paper's clusters are
+/// 30–160 MB on a Samsung 960 NVMe; our scaled-down clusters would read
+/// from page cache in microseconds, so `Nvme`/`NvmeScaled` re-inject the
+/// size-proportional cost (DESIGN.md §2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DiskProfile {
+    /// Real file I/O only, no injected latency.
+    None,
+    /// Calibrated 960-class NVMe at paper-scale cluster sizes.
+    Nvme,
+    /// Nvme shape at 1/10 magnitude: default for benches so full sweeps
+    /// finish in minutes while preserving relative behaviour.
+    NvmeScaled,
+}
+
+impl DiskProfile {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "none" => Ok(DiskProfile::None),
+            "nvme" => Ok(DiskProfile::Nvme),
+            "nvme-scaled" | "scaled" => Ok(DiskProfile::NvmeScaled),
+            _ => anyhow::bail!("unknown disk profile '{s}' (none|nvme|nvme-scaled)"),
+        }
+    }
+}
+
+/// Top-level configuration. One instance describes one experiment run.
+#[derive(Debug, Clone)]
+pub struct Config {
+    // -- paths ---------------------------------------------------------------
+    /// Directory holding the AOT HLO artifacts + manifest.
+    pub artifacts_dir: PathBuf,
+    /// Root directory for built datasets/indexes.
+    pub data_dir: PathBuf,
+
+    // -- index (paper §4.1) ---------------------------------------------------
+    /// Total number of IVF clusters (paper: 100).
+    pub clusters: usize,
+    /// Clusters probed per query (paper: 10).
+    pub nprobe: usize,
+    /// Results returned per query.
+    pub top_k: usize,
+    /// k-means training sample cap (build-time only).
+    pub kmeans_sample: usize,
+    /// k-means Lloyd iterations (build-time only).
+    pub kmeans_iters: usize,
+
+    // -- cache ---------------------------------------------------------------
+    /// Total cache entries (paper: 40; Fig. 2 uses 50).
+    pub cache_entries: usize,
+    pub cache_policy: CachePolicy,
+
+    // -- grouping / prefetch (the paper's contribution) ------------------------
+    /// Jaccard similarity threshold theta (paper: 0.5).
+    pub theta: f64,
+    pub grouping: GroupingPolicy,
+    /// Opportunistic prefetch on group switch (QGP vs QG in Fig. 7).
+    pub prefetch: bool,
+    /// When the prefetch fires relative to the group's last query.
+    pub prefetch_trigger: PrefetchTrigger,
+    /// Inter-group dispatch order (extension; default = paper behaviour).
+    pub group_order: GroupOrder,
+    /// Issue prefetch reads largest-file-first (extension; paper §4.2:
+    /// "considering the size of the next file to be read").
+    pub size_aware_prefetch: bool,
+
+    // -- traffic (paper §4.1) --------------------------------------------------
+    /// Batch size bounds, inclusive (paper: 20..=100).
+    pub batch_min: usize,
+    pub batch_max: usize,
+
+    // -- runtime ---------------------------------------------------------------
+    pub backend: Backend,
+    /// Encoder model name (one of python/compile/model.py MODELS).
+    pub encoder_model: String,
+    pub disk_profile: DiskProfile,
+
+    /// Master seed for all stochastic components.
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            artifacts_dir: PathBuf::from("artifacts"),
+            data_dir: PathBuf::from("data"),
+            clusters: 100,
+            nprobe: 10,
+            top_k: 10,
+            kmeans_sample: 20_000,
+            kmeans_iters: 15,
+            cache_entries: 40,
+            cache_policy: CachePolicy::CostAware,
+            theta: 0.5,
+            grouping: GroupingPolicy::SingleLink,
+            prefetch: true,
+            prefetch_trigger: PrefetchTrigger::LastQueryStart,
+            group_order: GroupOrder::Arrival,
+            size_aware_prefetch: true,
+            batch_min: 20,
+            batch_max: 100,
+            backend: Backend::Native,
+            encoder_model: "minilm-sim".to_string(),
+            disk_profile: DiskProfile::NvmeScaled,
+            seed: 0xCA6E_2025,
+        }
+    }
+}
+
+impl Config {
+    /// Load from a JSON config file, then validate.
+    pub fn from_file(path: &Path) -> anyhow::Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading config {}: {e}", path.display()))?;
+        let json = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing config {}: {e}", path.display()))?;
+        let mut cfg = Config::default();
+        let obj = json
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("config root must be an object"))?;
+        for (key, value) in obj {
+            cfg.apply_json(key, value)?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    fn apply_json(&mut self, key: &str, value: &Json) -> anyhow::Result<()> {
+        let as_string = match value {
+            Json::Str(s) => s.clone(),
+            Json::Num(n) => format!("{n}"),
+            Json::Bool(b) => format!("{b}"),
+            other => anyhow::bail!("config key '{key}': unsupported value {other:?}"),
+        };
+        self.set(key, &as_string)
+    }
+
+    /// Apply one dotted/flat override, e.g. `set("theta", "0.3")`.
+    pub fn set(&mut self, key: &str, value: &str) -> anyhow::Result<()> {
+        let parse_usize = |v: &str| -> anyhow::Result<usize> {
+            v.parse()
+                .map_err(|_| anyhow::anyhow!("'{key}' expects an integer, got '{v}'"))
+        };
+        match key {
+            "artifacts_dir" => self.artifacts_dir = PathBuf::from(value),
+            "data_dir" => self.data_dir = PathBuf::from(value),
+            "clusters" => self.clusters = parse_usize(value)?,
+            "nprobe" => self.nprobe = parse_usize(value)?,
+            "top_k" => self.top_k = parse_usize(value)?,
+            "kmeans_sample" => self.kmeans_sample = parse_usize(value)?,
+            "kmeans_iters" => self.kmeans_iters = parse_usize(value)?,
+            "cache_entries" => self.cache_entries = parse_usize(value)?,
+            "cache_policy" => self.cache_policy = CachePolicy::parse(value)?,
+            "theta" => {
+                self.theta = value
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("'theta' expects a number, got '{value}'"))?
+            }
+            "grouping" => self.grouping = GroupingPolicy::parse(value)?,
+            "prefetch_trigger" => self.prefetch_trigger = PrefetchTrigger::parse(value)?,
+            "group_order" => self.group_order = GroupOrder::parse(value)?,
+            "size_aware_prefetch" => {
+                self.size_aware_prefetch = value
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("'size_aware_prefetch' expects true/false"))?
+            }
+            "prefetch" => {
+                self.prefetch = value
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("'prefetch' expects true/false"))?
+            }
+            "batch_min" => self.batch_min = parse_usize(value)?,
+            "batch_max" => self.batch_max = parse_usize(value)?,
+            "backend" => self.backend = Backend::parse(value)?,
+            "encoder_model" => self.encoder_model = value.to_string(),
+            "disk_profile" => self.disk_profile = DiskProfile::parse(value)?,
+            "seed" => {
+                self.seed = value
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("'seed' expects a u64, got '{value}'"))?
+            }
+            _ => anyhow::bail!("unknown config key '{key}'"),
+        }
+        Ok(())
+    }
+
+    /// Check cross-field invariants.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.clusters == 0 {
+            anyhow::bail!("clusters must be > 0");
+        }
+        if self.clusters > geometry::CENTROID_PAD {
+            anyhow::bail!(
+                "clusters ({}) exceeds centroid artifact capacity ({})",
+                self.clusters,
+                geometry::CENTROID_PAD
+            );
+        }
+        if self.nprobe == 0 || self.nprobe > self.clusters {
+            anyhow::bail!(
+                "nprobe ({}) must be in 1..=clusters ({})",
+                self.nprobe,
+                self.clusters
+            );
+        }
+        if self.top_k == 0 {
+            anyhow::bail!("top_k must be > 0");
+        }
+        if self.cache_entries == 0 {
+            anyhow::bail!("cache_entries must be > 0");
+        }
+        if !(0.0..=1.0).contains(&self.theta) {
+            anyhow::bail!("theta ({}) must be in [0, 1]", self.theta);
+        }
+        if self.batch_min == 0 || self.batch_min > self.batch_max {
+            anyhow::bail!(
+                "batch range [{}, {}] invalid",
+                self.batch_min,
+                self.batch_max
+            );
+        }
+        Ok(())
+    }
+
+    /// Path of one dataset's built index directory. Indexes are segregated
+    /// by embedding backend: the corpus vectors of a `native`-built index
+    /// live in a different space than a `pjrt`-encoded one, so the two can
+    /// never be served interchangeably (engine::open also enforces this
+    /// via the meta.json embedding label).
+    pub fn dataset_dir(&self, dataset: &str) -> PathBuf {
+        let backend = match self.backend {
+            Backend::Native => "native".to_string(),
+            Backend::Pjrt => format!("pjrt-{}", self.encoder_model),
+        };
+        self.data_dir.join(backend).join(dataset)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = Config::default();
+        assert_eq!(c.clusters, 100);
+        assert_eq!(c.nprobe, 10);
+        assert_eq!(c.cache_entries, 40);
+        assert!((c.theta - 0.5).abs() < 1e-12);
+        assert_eq!(c.batch_min, 20);
+        assert_eq!(c.batch_max, 100);
+        assert!(c.prefetch);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn set_overrides() {
+        let mut c = Config::default();
+        c.set("theta", "0.3").unwrap();
+        c.set("cache_policy", "lru").unwrap();
+        c.set("backend", "pjrt").unwrap();
+        c.set("prefetch", "false").unwrap();
+        assert!((c.theta - 0.3).abs() < 1e-12);
+        assert_eq!(c.cache_policy, CachePolicy::Lru);
+        assert_eq!(c.backend, Backend::Pjrt);
+        assert!(!c.prefetch);
+    }
+
+    #[test]
+    fn set_rejects_unknown_and_bad_values() {
+        let mut c = Config::default();
+        assert!(c.set("bogus", "1").is_err());
+        assert!(c.set("nprobe", "ten").is_err());
+        assert!(c.set("cache_policy", "belady").is_err());
+    }
+
+    #[test]
+    fn validation_catches_bad_ranges() {
+        let mut c = Config::default();
+        c.nprobe = 0;
+        assert!(c.validate().is_err());
+        c = Config::default();
+        c.nprobe = 101;
+        assert!(c.validate().is_err());
+        c = Config::default();
+        c.theta = 1.5;
+        assert!(c.validate().is_err());
+        c = Config::default();
+        c.batch_min = 50;
+        c.batch_max = 20;
+        assert!(c.validate().is_err());
+        c = Config::default();
+        c.clusters = 200; // exceeds CENTROID_PAD
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn from_file_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("cagr-cfg-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.json");
+        std::fs::write(
+            &path,
+            r#"{"theta": 0.7, "cache_policy": "lfu", "clusters": 64, "nprobe": 5}"#,
+        )
+        .unwrap();
+        let c = Config::from_file(&path).unwrap();
+        assert!((c.theta - 0.7).abs() < 1e-12);
+        assert_eq!(c.cache_policy, CachePolicy::Lfu);
+        assert_eq!(c.clusters, 64);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn policy_parsers() {
+        assert_eq!(CachePolicy::parse("edgerag").unwrap(), CachePolicy::CostAware);
+        assert_eq!(
+            GroupingPolicy::parse("complete").unwrap(),
+            GroupingPolicy::CompleteLink
+        );
+        assert_eq!(DiskProfile::parse("nvme").unwrap(), DiskProfile::Nvme);
+        assert!(Backend::parse("gpu").is_err());
+    }
+}

@@ -1,0 +1,180 @@
+//! Group dispatcher (Algorithm 1, step 4 — the serving side).
+//!
+//! Walks the [`GroupPlan`] in dispatch order, searching each member through
+//! the engine. When it begins the *last* query of group `G_i`, it fires the
+//! opportunistic prefetch for `C(q_F(G_{i+1}))`, pinning the in-flight
+//! query's own clusters so the prefetch can't cannibalize them — the
+//! prefetch I/O then overlaps the remaining scoring work, which is exactly
+//! the paper's Fig. 3 ⑤ timing.
+
+use crate::config::PrefetchTrigger;
+use crate::engine::{PreparedQuery, SearchEngine};
+use crate::index::Hit;
+use crate::metrics::SearchReport;
+
+use super::grouping::GroupPlan;
+use super::prefetch::Prefetcher;
+
+/// Result of one query, annotated with its group.
+#[derive(Debug, Clone)]
+pub struct QueryOutcome {
+    pub report: SearchReport,
+    pub hits: Vec<Hit>,
+    /// Group index within the batch's plan (0 for ungrouped dispatch).
+    pub group: usize,
+}
+
+/// Dispatch a grouped plan. Returns outcomes in *dispatch* order (the
+/// reordered sequence CaGR-RAG sends to the vector database); callers keyed
+/// on arrival order can use `report.query_id`.
+pub fn dispatch_plan(
+    engine: &mut SearchEngine,
+    prepared: &[PreparedQuery],
+    plan: &GroupPlan,
+    prefetcher: Option<&Prefetcher>,
+) -> anyhow::Result<Vec<QueryOutcome>> {
+    let mut outcomes = Vec::with_capacity(prepared.len());
+    for (gi, group) in plan.groups.iter().enumerate() {
+        for (mi, &qidx) in group.members.iter().enumerate() {
+            let pq = &prepared[qidx];
+            let is_last = mi + 1 == group.members.len();
+            let trigger = engine.cfg.prefetch_trigger;
+            let fire = |engine: &SearchEngine| {
+                // Fire-and-forget prefetch of the next group's first
+                // query's clusters, protecting this query's working set.
+                let _ = engine; // prefetcher handles shared state
+                if let (Some(pf), Some((_, next_clusters))) =
+                    (prefetcher, plan.next_first[gi].as_ref())
+                {
+                    pf.request(next_clusters.clone(), pq.clusters.clone());
+                }
+            };
+            if is_last && trigger == PrefetchTrigger::LastQueryStart {
+                fire(engine);
+            }
+            let (report, hits) = engine.search(pq)?;
+            if is_last && trigger == PrefetchTrigger::AfterSearch {
+                fire(engine);
+            }
+            outcomes.push(QueryOutcome { report, hits, group: gi });
+            if mi == 0 && prefetcher.is_some() {
+                // The group's first query has consumed the clusters the
+                // prefetcher pinned for it; release the pins so normal
+                // replacement resumes (prefetch.rs pins on insert).
+                engine.cache.lock().unwrap().unpin_all();
+            }
+        }
+    }
+    if prefetcher.is_some() {
+        engine.cache.lock().unwrap().unpin_all();
+    }
+    Ok(outcomes)
+}
+
+/// Dispatch in plain arrival order (the baseline: no grouping, no
+/// prefetch).
+pub fn dispatch_sequential(
+    engine: &mut SearchEngine,
+    prepared: &[PreparedQuery],
+) -> anyhow::Result<Vec<QueryOutcome>> {
+    prepared
+        .iter()
+        .map(|pq| {
+            let (report, hits) = engine.search(pq)?;
+            Ok(QueryOutcome { report, hits, group: 0 })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GroupingPolicy;
+    use crate::coordinator::grouping::group_queries;
+    use crate::engine::testutil::tiny_engine;
+    use crate::workload::generate_queries;
+    use std::sync::Arc;
+
+    #[test]
+    fn plan_dispatch_covers_all_queries_once() {
+        let (mut engine, dir) = tiny_engine("disp-cover", |_| {});
+        let queries = generate_queries(&engine.spec);
+        let prepared = engine.prepare(&queries[..20]).unwrap();
+        let plan = group_queries(&prepared, 0.3, GroupingPolicy::SingleLink);
+        let outcomes = dispatch_plan(&mut engine, &prepared, &plan, None).unwrap();
+        assert_eq!(outcomes.len(), 20);
+        let mut ids: Vec<usize> = outcomes.iter().map(|o| o.report.query_id).collect();
+        ids.sort_unstable();
+        let mut want: Vec<usize> = queries[..20].iter().map(|q| q.id).collect();
+        want.sort_unstable();
+        assert_eq!(ids, want);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn grouped_results_match_sequential_results() {
+        // Reordering queries must never change any query's top-k (only its
+        // latency). This is the core correctness property of CaGR-RAG.
+        let (mut engine_a, dir_a) = tiny_engine("disp-eq-a", |_| {});
+        let (mut engine_b, dir_b) = tiny_engine("disp-eq-b", |_| {});
+        let queries = generate_queries(&engine_a.spec);
+        let prep_a = engine_a.prepare(&queries[..24]).unwrap();
+        let prep_b = engine_b.prepare(&queries[..24]).unwrap();
+
+        let seq = dispatch_sequential(&mut engine_a, &prep_a).unwrap();
+        let plan = group_queries(&prep_b, 0.3, GroupingPolicy::SingleLink);
+        let grouped = dispatch_plan(&mut engine_b, &prep_b, &plan, None).unwrap();
+
+        let by_id = |outs: &[QueryOutcome]| {
+            let mut v: Vec<(usize, Vec<u32>)> = outs
+                .iter()
+                .map(|o| (o.report.query_id, o.hits.iter().map(|h| h.doc_id).collect()))
+                .collect();
+            v.sort();
+            v
+        };
+        assert_eq!(by_id(&seq), by_id(&grouped));
+        std::fs::remove_dir_all(&dir_a).ok();
+        std::fs::remove_dir_all(&dir_b).ok();
+    }
+
+    #[test]
+    fn prefetch_fires_on_group_switch() {
+        let (mut engine, dir) = tiny_engine("disp-pf", |cfg| cfg.cache_entries = 10);
+        let queries = generate_queries(&engine.spec);
+        let prepared = engine.prepare(&queries[..16]).unwrap();
+        // theta=1.0 tends to make many single-query groups -> many switches.
+        let plan = group_queries(&prepared, 1.0, GroupingPolicy::SingleLink);
+        let pf = Prefetcher::spawn(
+            engine.index.clone(),
+            Arc::clone(&engine.cache),
+            Arc::clone(&engine.disk),
+            Arc::clone(&engine.inflight),
+        );
+        let n_groups = plan.groups.len();
+        dispatch_plan(&mut engine, &prepared, &plan, Some(&pf)).unwrap();
+        pf.quiesce();
+        let completed = pf.counters.completed.load(std::sync::atomic::Ordering::SeqCst);
+        assert_eq!(completed as usize, n_groups - 1, "one prefetch per switch");
+        drop(pf);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn group_annotation_matches_plan() {
+        let (mut engine, dir) = tiny_engine("disp-group", |_| {});
+        let queries = generate_queries(&engine.spec);
+        let prepared = engine.prepare(&queries[..12]).unwrap();
+        let plan = group_queries(&prepared, 0.5, GroupingPolicy::SingleLink);
+        let outcomes = dispatch_plan(&mut engine, &prepared, &plan, None).unwrap();
+        let mut cursor = 0;
+        for (gi, group) in plan.groups.iter().enumerate() {
+            for &qidx in &group.members {
+                assert_eq!(outcomes[cursor].group, gi);
+                assert_eq!(outcomes[cursor].report.query_id, prepared[qidx].query.id);
+                cursor += 1;
+            }
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

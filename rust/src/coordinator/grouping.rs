@@ -1,0 +1,309 @@
+//! Context-aware query grouping — the paper's Algorithm 1, steps 1–3.
+//!
+//! Step 1 (group representation): greedy agglomerative assignment — each
+//! arriving query joins the first existing group whose member similarity
+//! clears the Jaccard threshold θ, else founds a new group. Algorithm 1
+//! line 8 uses `max J(q_i, q_j) >= θ` (single-link); Eq. 3's ∀-quantifier
+//! reads as complete-link, so both are implemented and the ablation bench
+//! compares them (DESIGN.md §6).
+//!
+//! Steps 2–3 (data structure D, Eq. 5): for every group, the member query
+//! list, the group's cluster union `C(G_i)`, and the first query of the
+//! *next* group with its clusters `C(q_F(G_{i+1}))` — exactly what the
+//! opportunistic prefetcher needs at a group switch.
+
+use std::time::Duration;
+
+use crate::config::GroupingPolicy;
+use crate::engine::PreparedQuery;
+
+use super::jaccard::{canonicalize, jaccard_sorted, union_sorted};
+
+/// One query group `G_k`.
+#[derive(Debug, Clone)]
+pub struct QueryGroup {
+    /// Indices into the prepared batch, in arrival order.
+    pub members: Vec<usize>,
+    /// Canonical cluster sets of each member (parallel to `members`).
+    pub member_clusters: Vec<Vec<u32>>,
+    /// `C(G_i)`: sorted union of the members' cluster sets.
+    pub clusters: Vec<u32>,
+}
+
+/// The paper's data structure `D` (Eq. 5): groups in dispatch order plus,
+/// per group, the first query of the next group and its clusters.
+#[derive(Debug, Clone)]
+pub struct GroupPlan {
+    pub groups: Vec<QueryGroup>,
+    /// `next_first[i] = (batch index of q_F(G_{i+1}), C(q_F(G_{i+1})))`;
+    /// `None` for the last group.
+    pub next_first: Vec<Option<(usize, Vec<u32>)>>,
+    /// Wall-clock cost of running the grouping algorithm (reported by the
+    /// micro bench; not charged to query latency, matching the paper's
+    /// pipeline position ahead of the vector database).
+    pub grouping_cost: Duration,
+}
+
+impl GroupPlan {
+    /// Number of queries across all groups.
+    pub fn total_queries(&self) -> usize {
+        self.groups.iter().map(|g| g.members.len()).sum()
+    }
+
+    /// Dispatch order of batch indices (paper §3.1: "sorts the queries with
+    /// grouping and sends them ... to vector database").
+    pub fn dispatch_order(&self) -> Vec<usize> {
+        self.groups.iter().flat_map(|g| g.members.iter().copied()).collect()
+    }
+}
+
+/// Similarity of a candidate set against an existing group under a policy.
+fn group_similarity(policy: GroupingPolicy, group: &QueryGroup, candidate: &[u32]) -> f64 {
+    let sims = group.member_clusters.iter().map(|m| jaccard_sorted(m, candidate));
+    match policy {
+        GroupingPolicy::SingleLink => sims.fold(0.0, f64::max),
+        GroupingPolicy::CompleteLink => sims.fold(1.0, f64::min),
+    }
+}
+
+/// Algorithm 1 over a prepared batch.
+pub fn group_queries(
+    prepared: &[PreparedQuery],
+    theta: f64,
+    policy: GroupingPolicy,
+) -> GroupPlan {
+    let t0 = std::time::Instant::now();
+    let mut groups: Vec<QueryGroup> = Vec::new();
+
+    // Step 1: assign each query to the first group clearing θ, else found
+    // a new group.
+    for (idx, pq) in prepared.iter().enumerate() {
+        let cset = canonicalize(&pq.clusters);
+        let mut assigned = false;
+        for group in groups.iter_mut() {
+            if group_similarity(policy, group, &cset) >= theta {
+                group.clusters = union_sorted(&group.clusters, &cset);
+                group.members.push(idx);
+                group.member_clusters.push(cset.clone());
+                assigned = true;
+                break;
+            }
+        }
+        if !assigned {
+            groups.push(QueryGroup {
+                members: vec![idx],
+                member_clusters: vec![cset.clone()],
+                clusters: cset,
+            });
+        }
+    }
+
+    // Steps 2–3: first query of the next group, per group.
+    let next_first = next_first_links(&groups);
+
+    GroupPlan { groups, next_first, grouping_cost: t0.elapsed() }
+}
+
+fn next_first_links(groups: &[QueryGroup]) -> Vec<Option<(usize, Vec<u32>)>> {
+    (0..groups.len())
+        .map(|i| {
+            groups.get(i + 1).map(|g| {
+                let first = g.members[0];
+                (first, g.member_clusters[0].clone())
+            })
+        })
+        .collect()
+}
+
+/// Extension (DESIGN.md §6, paper §4.2's "further improved" remark):
+/// reorder groups by greedy Jaccard chaining — after each group, dispatch
+/// the unvisited group whose cluster union is most similar to the current
+/// one, so consecutive groups share residual cache content. Rebuilds the
+/// `next_first` links for the new order.
+pub fn reorder_groups_greedy(plan: &mut GroupPlan) {
+    let t0 = std::time::Instant::now();
+    let n = plan.groups.len();
+    if n <= 2 {
+        return;
+    }
+    let mut remaining: Vec<QueryGroup> = plan.groups.drain(..).collect();
+    let mut ordered = Vec::with_capacity(n);
+    // Start from the first-created group (earliest arrivals keep priority).
+    ordered.push(remaining.remove(0));
+    while !remaining.is_empty() {
+        let current = ordered.last().unwrap();
+        let (best_idx, _) = remaining
+            .iter()
+            .enumerate()
+            .map(|(i, g)| (i, jaccard_sorted(&current.clusters, &g.clusters)))
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal))
+            .unwrap();
+        ordered.push(remaining.remove(best_idx));
+    }
+    plan.groups = ordered;
+    plan.next_first = next_first_links(&plan.groups);
+    plan.grouping_cost += t0.elapsed();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Query;
+
+    fn pq(id: usize, clusters: &[u32]) -> PreparedQuery {
+        PreparedQuery {
+            query: Query { id, template: 0, topic: 0, tokens: vec![] },
+            embedding: vec![],
+            clusters: clusters.to_vec(),
+            prep_cost: Duration::ZERO,
+        }
+    }
+
+    #[test]
+    fn groups_identical_sets_together() {
+        let batch = vec![pq(0, &[1, 2, 3]), pq(1, &[9, 8, 7]), pq(2, &[3, 2, 1])];
+        let plan = group_queries(&batch, 0.5, GroupingPolicy::SingleLink);
+        assert_eq!(plan.groups.len(), 2);
+        assert_eq!(plan.groups[0].members, vec![0, 2]);
+        assert_eq!(plan.groups[1].members, vec![1]);
+    }
+
+    #[test]
+    fn theta_one_requires_identity() {
+        let batch = vec![pq(0, &[1, 2, 3]), pq(1, &[1, 2, 4])];
+        let plan = group_queries(&batch, 1.0, GroupingPolicy::SingleLink);
+        assert_eq!(plan.groups.len(), 2);
+    }
+
+    #[test]
+    fn theta_zero_groups_everything() {
+        let batch = vec![pq(0, &[1]), pq(1, &[2]), pq(2, &[3])];
+        let plan = group_queries(&batch, 0.0, GroupingPolicy::SingleLink);
+        assert_eq!(plan.groups.len(), 1);
+        assert_eq!(plan.groups[0].members, vec![0, 1, 2]);
+        assert_eq!(plan.groups[0].clusters, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn single_vs_complete_link_differ_on_chains() {
+        // A ~ B (0.5+), B ~ C (0.5+), but A !~ C. Single-link chains all
+        // three; complete-link splits C off.
+        let batch = vec![
+            pq(0, &[1, 2, 3, 4]),
+            pq(1, &[3, 4, 5, 6]),
+            pq(2, &[5, 6, 7, 8]),
+        ];
+        let single = group_queries(&batch, 0.3, GroupingPolicy::SingleLink);
+        let complete = group_queries(&batch, 0.3, GroupingPolicy::CompleteLink);
+        assert_eq!(single.groups.len(), 1);
+        assert_eq!(complete.groups.len(), 2);
+    }
+
+    #[test]
+    fn every_query_in_exactly_one_group() {
+        // Invariant: grouping is a partition, for any theta/policy.
+        let batch: Vec<PreparedQuery> = (0..40)
+            .map(|i| {
+                let base = (i % 5) as u32 * 10;
+                pq(i, &[base, base + 1, base + 2, (i as u32) % 3 + 50])
+            })
+            .collect();
+        for theta in [0.0, 0.2, 0.5, 0.8, 1.0] {
+            for policy in [GroupingPolicy::SingleLink, GroupingPolicy::CompleteLink] {
+                let plan = group_queries(&batch, theta, policy);
+                let mut seen = vec![false; batch.len()];
+                for g in &plan.groups {
+                    assert_eq!(g.members.len(), g.member_clusters.len());
+                    for &m in &g.members {
+                        assert!(!seen[m], "query {m} in two groups (theta={theta})");
+                        seen[m] = true;
+                    }
+                }
+                assert!(seen.iter().all(|&s| s), "partition incomplete");
+                assert_eq!(plan.total_queries(), batch.len());
+                assert_eq!(plan.dispatch_order().len(), batch.len());
+            }
+        }
+    }
+
+    #[test]
+    fn group_clusters_is_union_of_members() {
+        let batch = vec![pq(0, &[1, 2]), pq(1, &[2, 3]), pq(2, &[2, 1])];
+        let plan = group_queries(&batch, 0.3, GroupingPolicy::SingleLink);
+        let g = &plan.groups[0];
+        for (mi, m) in g.members.iter().enumerate() {
+            let _ = m;
+            for c in &g.member_clusters[mi] {
+                assert!(g.clusters.contains(c));
+            }
+        }
+    }
+
+    #[test]
+    fn next_first_links_are_correct() {
+        let batch = vec![pq(0, &[1, 2]), pq(1, &[9, 8]), pq(2, &[20, 30])];
+        let plan = group_queries(&batch, 0.9, GroupingPolicy::SingleLink);
+        assert_eq!(plan.groups.len(), 3);
+        assert_eq!(plan.next_first.len(), 3);
+        assert_eq!(plan.next_first[0].as_ref().unwrap().0, 1);
+        assert_eq!(plan.next_first[0].as_ref().unwrap().1, vec![8, 9]);
+        assert_eq!(plan.next_first[1].as_ref().unwrap().0, 2);
+        assert!(plan.next_first[2].is_none());
+    }
+
+    #[test]
+    fn members_preserve_arrival_order() {
+        let batch = vec![pq(0, &[1, 2]), pq(1, &[5, 6]), pq(2, &[1, 2]), pq(3, &[5, 6])];
+        let plan = group_queries(&batch, 0.5, GroupingPolicy::SingleLink);
+        assert_eq!(plan.groups[0].members, vec![0, 2]);
+        assert_eq!(plan.groups[1].members, vec![1, 3]);
+        assert_eq!(plan.dispatch_order(), vec![0, 2, 1, 3]);
+    }
+
+    #[test]
+    fn empty_batch() {
+        let plan = group_queries(&[], 0.5, GroupingPolicy::SingleLink);
+        assert!(plan.groups.is_empty());
+        assert!(plan.next_first.is_empty());
+    }
+
+    #[test]
+    fn greedy_reorder_preserves_partition_and_links() {
+        let batch = vec![
+            pq(0, &[1, 2, 3]),   // A
+            pq(1, &[50, 51]),    // B (dissimilar to A)
+            pq(2, &[2, 3, 4]),   // C (similar to A)
+            pq(3, &[51, 52]),    // D (similar to B)
+        ];
+        let mut plan = group_queries(&batch, 0.9, GroupingPolicy::SingleLink);
+        assert_eq!(plan.groups.len(), 4);
+        super::reorder_groups_greedy(&mut plan);
+        // Partition intact.
+        let mut order = plan.dispatch_order();
+        order.sort_unstable();
+        assert_eq!(order, vec![0, 1, 2, 3]);
+        // Greedy chain: A -> C (shares {2,3}) before the B/D block.
+        assert_eq!(plan.groups[0].members, vec![0]);
+        assert_eq!(plan.groups[1].members, vec![2]);
+        // next_first links rebuilt for the new order.
+        assert_eq!(plan.next_first[0].as_ref().unwrap().0, 2);
+        assert!(plan.next_first[3].is_none());
+    }
+
+    #[test]
+    fn greedy_reorder_noop_for_small_plans() {
+        let batch = vec![pq(0, &[1]), pq(1, &[9])];
+        let mut plan = group_queries(&batch, 0.9, GroupingPolicy::SingleLink);
+        let before: Vec<Vec<usize>> = plan.groups.iter().map(|g| g.members.clone()).collect();
+        super::reorder_groups_greedy(&mut plan);
+        let after: Vec<Vec<usize>> = plan.groups.iter().map(|g| g.members.clone()).collect();
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn duplicate_cluster_ids_are_canonicalized() {
+        let batch = vec![pq(0, &[2, 2, 1]), pq(1, &[1, 2])];
+        let plan = group_queries(&batch, 0.99, GroupingPolicy::SingleLink);
+        assert_eq!(plan.groups.len(), 1, "duplicates must not break identity");
+    }
+}

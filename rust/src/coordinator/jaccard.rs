@@ -1,0 +1,125 @@
+//! Jaccard similarity over cluster-ID sets (paper Eq. 2).
+//!
+//! Cluster sets are small (nprobe ≈ 10) sorted `u32` vectors; the
+//! intersection is a linear merge — no hashing, no allocation.
+
+/// Jaccard similarity `|A ∩ B| / |A ∪ B|` of two *sorted, deduplicated*
+/// slices. Returns 1.0 for two empty sets (identical by convention).
+pub fn jaccard_sorted(a: &[u32], b: &[u32]) -> f64 {
+    debug_assert!(a.windows(2).all(|w| w[0] < w[1]), "a not sorted/unique");
+    debug_assert!(b.windows(2).all(|w| w[0] < w[1]), "b not sorted/unique");
+    if a.is_empty() && b.is_empty() {
+        return 1.0;
+    }
+    let mut inter = 0usize;
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                inter += 1;
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    let union = a.len() + b.len() - inter;
+    inter as f64 / union as f64
+}
+
+/// Sort + dedup a cluster list into canonical set form.
+pub fn canonicalize(ids: &[u32]) -> Vec<u32> {
+    let mut v = ids.to_vec();
+    v.sort_unstable();
+    v.dedup();
+    v
+}
+
+/// Sorted union of two canonical sets (used for `C(G_i)` maintenance).
+pub fn union_sorted(a: &[u32], b: &[u32]) -> Vec<u32> {
+    let mut out = Vec::with_capacity(a.len() + b.len());
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < a.len() || j < b.len() {
+        if j >= b.len() || (i < a.len() && a[i] < b[j]) {
+            out.push(a[i]);
+            i += 1;
+        } else if i >= a.len() || b[j] < a[i] {
+            out.push(b[j]);
+            j += 1;
+        } else {
+            out.push(a[i]);
+            i += 1;
+            j += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use std::collections::BTreeSet;
+
+    #[test]
+    fn basic_values() {
+        assert_eq!(jaccard_sorted(&[1, 2, 3], &[1, 2, 3]), 1.0);
+        assert_eq!(jaccard_sorted(&[1, 2], &[3, 4]), 0.0);
+        assert!((jaccard_sorted(&[1, 2, 3], &[2, 3, 4]) - 0.5).abs() < 1e-12);
+        assert_eq!(jaccard_sorted(&[], &[]), 1.0);
+        assert_eq!(jaccard_sorted(&[1], &[]), 0.0);
+    }
+
+    #[test]
+    fn symmetric() {
+        let a = [1, 5, 9, 12];
+        let b = [2, 5, 12, 40, 41];
+        assert_eq!(jaccard_sorted(&a, &b), jaccard_sorted(&b, &a));
+    }
+
+    #[test]
+    fn paper_example_sixty_percent() {
+        // 10-cluster sets sharing >= 60% (paper §2.4: "Queries 1 and 10
+        // share more than 60% similarity" at nprobe 10).
+        let a: Vec<u32> = (0..10).collect();
+        let b: Vec<u32> = (0..8).chain([20, 21]).collect();
+        // |inter|=8, |union|=12 -> 0.666
+        assert!(jaccard_sorted(&a, &b) > 0.6);
+    }
+
+    #[test]
+    fn randomized_against_btreeset() {
+        let mut rng = Rng::new(31);
+        for _ in 0..200 {
+            let mk = |rng: &mut Rng| -> Vec<u32> {
+                let n = rng.range(0, 15);
+                canonicalize(&(0..n).map(|_| rng.range(0, 30) as u32).collect::<Vec<_>>())
+            };
+            let a = mk(&mut rng);
+            let b = mk(&mut rng);
+            let sa: BTreeSet<u32> = a.iter().copied().collect();
+            let sb: BTreeSet<u32> = b.iter().copied().collect();
+            let inter = sa.intersection(&sb).count();
+            let union = sa.union(&sb).count();
+            let want = if union == 0 { 1.0 } else { inter as f64 / union as f64 };
+            assert_eq!(jaccard_sorted(&a, &b), want);
+
+            let u = union_sorted(&a, &b);
+            let want_u: Vec<u32> = sa.union(&sb).copied().collect();
+            assert_eq!(u, want_u);
+        }
+    }
+
+    #[test]
+    fn canonicalize_sorts_and_dedups() {
+        assert_eq!(canonicalize(&[5, 1, 5, 3, 1]), vec![1, 3, 5]);
+        assert_eq!(canonicalize(&[]), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn union_with_empty() {
+        assert_eq!(union_sorted(&[1, 2], &[]), vec![1, 2]);
+        assert_eq!(union_sorted(&[], &[7]), vec![7]);
+    }
+}

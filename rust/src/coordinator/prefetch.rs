@@ -1,0 +1,313 @@
+//! Opportunistic prefetch module (Algorithm 1, step 4).
+//!
+//! A dedicated thread that, on a group switch, loads `C(q_F(G_{i+1}))` —
+//! the clusters of the first query of the next group — into the cache while
+//! the engine is still scoring the current group's last query. The request
+//! carries a *pin set* (the in-flight query's clusters): the prefetcher
+//! pins those entries first so its inserts can never evict data the demand
+//! path is about to touch (DESIGN.md §6).
+//!
+//! Prefetch fetches use `peek`/`insert(from_prefetch=true)`, so demand
+//! hit/miss statistics are never perturbed.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::cache::ClusterCache;
+use crate::engine::{fetch_cluster, inflight::InFlight};
+use crate::index::IvfIndex;
+use crate::sim::DiskModel;
+
+/// Concurrent disk reads per prefetch request (a modern NVMe sustains far
+/// deeper queues; 8 covers nprobe=10 in two waves).
+const PREFETCH_PARALLELISM: usize = 8;
+
+enum Msg {
+    Prefetch { clusters: Vec<u32>, pins: Vec<u32> },
+    Shutdown,
+}
+
+/// Counters exposed for tests and the Fig. 7 accounting.
+#[derive(Debug, Default)]
+pub struct PrefetchCounters {
+    /// Requests fully processed.
+    pub completed: AtomicU64,
+    /// Clusters actually loaded from disk by the prefetcher.
+    pub loaded: AtomicU64,
+    /// Clusters skipped because they were already resident.
+    pub already_resident: AtomicU64,
+    /// Loads that failed (I/O error) — prefetch errors are absorbed, the
+    /// demand path will retry and surface them.
+    pub failed: AtomicU64,
+}
+
+/// Handle to the prefetch thread.
+pub struct Prefetcher {
+    tx: Sender<Msg>,
+    handle: Option<JoinHandle<()>>,
+    pub counters: Arc<PrefetchCounters>,
+    /// Requests issued through this handle (pairs with `counters.completed`).
+    issued: AtomicU64,
+}
+
+impl Prefetcher {
+    /// Spawn the prefetch thread over shared cache/disk/index/in-flight
+    /// handles (the same `InFlight` the demand path uses, so demand misses
+    /// wait on prefetch reads instead of duplicating them).
+    pub fn spawn(
+        index: IvfIndex,
+        cache: Arc<Mutex<ClusterCache>>,
+        disk: Arc<Mutex<DiskModel>>,
+        inflight: Arc<InFlight>,
+    ) -> Prefetcher {
+        Self::spawn_with(index, cache, disk, inflight, true)
+    }
+
+    /// Spawn with explicit size-aware issue ordering (extension knob).
+    pub fn spawn_with(
+        index: IvfIndex,
+        cache: Arc<Mutex<ClusterCache>>,
+        disk: Arc<Mutex<DiskModel>>,
+        inflight: Arc<InFlight>,
+        size_aware: bool,
+    ) -> Prefetcher {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let counters = Arc::new(PrefetchCounters::default());
+        let thread_counters = Arc::clone(&counters);
+        let handle = std::thread::Builder::new()
+            .name("cagr-prefetch".to_string())
+            .spawn(move || run(index, cache, disk, inflight, rx, thread_counters, size_aware))
+            .expect("spawn prefetcher");
+        Prefetcher { tx, handle: Some(handle), counters, issued: AtomicU64::new(0) }
+    }
+
+    /// Request an asynchronous prefetch of `clusters`, protecting `pins`.
+    pub fn request(&self, clusters: Vec<u32>, pins: Vec<u32>) {
+        // A send failure means the thread died; the demand path still
+        // functions (prefetch is opportunistic by definition).
+        if self.tx.send(Msg::Prefetch { clusters, pins }).is_ok() {
+            self.issued.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+
+    /// Block until every request issued so far has been processed (test
+    /// and shutdown aid; the serving path never calls this).
+    pub fn quiesce(&self) {
+        let target = self.issued.load(Ordering::SeqCst);
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+        while self.counters.completed.load(Ordering::SeqCst) < target {
+            if std::time::Instant::now() > deadline {
+                return;
+            }
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        }
+    }
+}
+
+impl Drop for Prefetcher {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn run(
+    index: IvfIndex,
+    cache: Arc<Mutex<ClusterCache>>,
+    disk: Arc<Mutex<DiskModel>>,
+    inflight: Arc<InFlight>,
+    rx: Receiver<Msg>,
+    counters: Arc<PrefetchCounters>,
+    size_aware: bool,
+) {
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            Msg::Shutdown => break,
+            Msg::Prefetch { clusters, pins } => {
+                cache.lock().unwrap().pin(&pins);
+                // Parallel reads: NVMe queues are deep, and serialized
+                // prefetch would lose the race against the demand path.
+                let mut todo: Vec<u32> = clusters
+                    .into_iter()
+                    .filter(|&cid| {
+                        let resident = cache.lock().unwrap().contains(cid);
+                        if resident {
+                            counters.already_resident.fetch_add(1, Ordering::SeqCst);
+                        }
+                        !resident
+                    })
+                    .collect();
+                if size_aware {
+                    // Extension (paper §4.2): issue the largest file first
+                    // so the longest read gets the most overlap window.
+                    todo.sort_by_key(|&cid| {
+                        std::cmp::Reverse(
+                            index.meta.cluster_bytes.get(cid as usize).copied().unwrap_or(0),
+                        )
+                    });
+                }
+                std::thread::scope(|scope| {
+                    for chunk in todo.chunks(PREFETCH_PARALLELISM.max(1)) {
+                        let handles: Vec<_> = chunk
+                            .iter()
+                            .map(|&cid| {
+                                let (index, cache, disk, inflight, counters) =
+                                    (&index, &cache, &disk, &inflight, &counters);
+                                scope.spawn(move || {
+                                    match fetch_cluster(index, cache, disk, inflight, cid, true)
+                                    {
+                                        Ok(outcome) => {
+                                            // Pin until the next group's first
+                                            // query consumes it: a fresh entry
+                                            // has access_count 0 and would be
+                                            // the first eviction victim of the
+                                            // current query's own demand
+                                            // inserts. The dispatcher unpins
+                                            // after the group switch.
+                                            cache.lock().unwrap().pin(&[cid]);
+                                            if outcome.was_hit {
+                                                counters
+                                                    .already_resident
+                                                    .fetch_add(1, Ordering::SeqCst);
+                                            } else {
+                                                counters.loaded.fetch_add(1, Ordering::SeqCst);
+                                            }
+                                        }
+                                        Err(_) => {
+                                            counters.failed.fetch_add(1, Ordering::SeqCst);
+                                        }
+                                    };
+                                })
+                            })
+                            .collect();
+                        for h in handles {
+                            let _ = h.join();
+                        }
+                    }
+                });
+                // NOTE: prefetched entries stay pinned — the dispatcher
+                // releases pins after the next group's first query has
+                // consumed them (dispatcher.rs).
+                counters.completed.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::testutil::tiny_engine;
+    use std::sync::atomic::Ordering;
+
+    #[test]
+    fn prefetch_loads_into_cache() {
+        let (engine, dir) = tiny_engine("pf-load", |cfg| cfg.cache_entries = 8);
+        let pf = Prefetcher::spawn(
+            engine.index.clone(),
+            Arc::clone(&engine.cache),
+            Arc::clone(&engine.disk),
+            Arc::clone(&engine.inflight),
+        );
+        pf.request(vec![0, 1, 2], vec![]);
+        pf.quiesce();
+        let cache = engine.cache.lock().unwrap();
+        assert!(cache.contains(0) && cache.contains(1) && cache.contains(2));
+        // Prefetch must not perturb demand stats...
+        assert_eq!(cache.stats().hits + cache.stats().misses, 0);
+        // ...but is visible in prefetch accounting.
+        assert_eq!(cache.stats().prefetch_inserts, 3);
+        drop(cache);
+        assert_eq!(pf.counters.loaded.load(Ordering::SeqCst), 3);
+        drop(pf);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn resident_clusters_are_skipped() {
+        let (engine, dir) = tiny_engine("pf-skip", |cfg| cfg.cache_entries = 8);
+        let pf = Prefetcher::spawn(
+            engine.index.clone(),
+            Arc::clone(&engine.cache),
+            Arc::clone(&engine.disk),
+            Arc::clone(&engine.inflight),
+        );
+        pf.request(vec![3], vec![]);
+        pf.quiesce();
+        pf.request(vec![3, 4], vec![]);
+        pf.quiesce();
+        assert_eq!(pf.counters.loaded.load(Ordering::SeqCst), 2);
+        assert_eq!(pf.counters.already_resident.load(Ordering::SeqCst), 1);
+        drop(pf);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn pinned_working_set_survives_prefetch_pressure() {
+        // Cache of 3; clusters 0,1 are the in-flight working set. A
+        // prefetch of 4 other clusters must not evict them.
+        let (engine, dir) = tiny_engine("pf-pin", |cfg| cfg.cache_entries = 3);
+        {
+            let mut c = engine.cache.lock().unwrap();
+            let b0 = Arc::new(engine.index.read_cluster(0).unwrap());
+            let b1 = Arc::new(engine.index.read_cluster(1).unwrap());
+            c.insert(b0, false);
+            c.insert(b1, false);
+        }
+        let pf = Prefetcher::spawn(
+            engine.index.clone(),
+            Arc::clone(&engine.cache),
+            Arc::clone(&engine.disk),
+            Arc::clone(&engine.inflight),
+        );
+        pf.request(vec![5, 6, 7, 8], vec![0, 1]);
+        pf.quiesce();
+        let mut cache = engine.cache.lock().unwrap();
+        assert!(cache.contains(0) && cache.contains(1), "pinned entries evicted");
+        // Prefetched entries stay pinned until the dispatcher's group-switch
+        // unpin (dispatcher.rs); releasing is the consumer's job.
+        assert!(cache.pinned_count() > 0, "prefetched entries should be pinned");
+        cache.unpin_all();
+        assert_eq!(cache.pinned_count(), 0);
+        drop(cache);
+        drop(pf);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn io_failures_are_absorbed() {
+        let (engine, dir) = tiny_engine("pf-fail", |cfg| cfg.cache_entries = 4);
+        engine.disk.lock().unwrap().inject_failure(2);
+        let pf = Prefetcher::spawn(
+            engine.index.clone(),
+            Arc::clone(&engine.cache),
+            Arc::clone(&engine.disk),
+            Arc::clone(&engine.inflight),
+        );
+        pf.request(vec![2, 3], vec![]);
+        pf.quiesce();
+        assert_eq!(pf.counters.failed.load(Ordering::SeqCst), 1);
+        assert_eq!(pf.counters.loaded.load(Ordering::SeqCst), 1);
+        assert!(engine.cache.lock().unwrap().contains(3));
+        drop(pf);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shutdown_is_clean() {
+        let (engine, dir) = tiny_engine("pf-drop", |_| {});
+        let pf = Prefetcher::spawn(
+            engine.index.clone(),
+            Arc::clone(&engine.cache),
+            Arc::clone(&engine.disk),
+            Arc::clone(&engine.inflight),
+        );
+        pf.request(vec![0], vec![]);
+        drop(pf); // must join without hanging
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,134 @@
+//! In-flight cluster-read registry: dedups concurrent reads of the same
+//! cluster between the demand path and the prefetcher.
+//!
+//! Without this, a demand miss that races an in-progress prefetch of the
+//! same cluster would issue a *second* disk read — paying the full read
+//! latency and wasting bandwidth. With it, the demand path blocks until the
+//! prefetch completes (a partial wait, which is exactly the overlap the
+//! paper's Fig. 3 ⑤ describes) and then takes the block from the cache.
+
+use std::collections::HashSet;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// Registry of cluster ids currently being read from disk.
+#[derive(Default)]
+pub struct InFlight {
+    loading: Mutex<HashSet<u32>>,
+    cv: Condvar,
+}
+
+impl InFlight {
+    pub fn new() -> InFlight {
+        InFlight::default()
+    }
+
+    /// Try to claim the read of `id`. Returns `true` if the caller is now
+    /// responsible for reading it; `false` if someone else already is.
+    pub fn claim(&self, id: u32) -> bool {
+        self.loading.lock().unwrap().insert(id)
+    }
+
+    /// Release the claim (read finished or failed) and wake waiters.
+    pub fn release(&self, id: u32) {
+        self.loading.lock().unwrap().remove(&id);
+        self.cv.notify_all();
+    }
+
+    /// Is `id` currently being read by someone?
+    pub fn is_loading(&self, id: u32) -> bool {
+        self.loading.lock().unwrap().contains(&id)
+    }
+
+    /// Block until `id` is no longer in flight (bounded; returns false on
+    /// timeout so callers can fall back to a demand read).
+    pub fn wait_for(&self, id: u32, timeout: Duration) -> bool {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut guard = self.loading.lock().unwrap();
+        while guard.contains(&id) {
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return false;
+            }
+            let (g, res) = self.cv.wait_timeout(guard, deadline - now).unwrap();
+            guard = g;
+            if res.timed_out() && guard.contains(&id) {
+                return false;
+            }
+        }
+        true
+    }
+
+    /// RAII claim guard: releases on drop (including panic/error paths).
+    pub fn guard(&self, id: u32) -> Option<ClaimGuard<'_>> {
+        if self.claim(id) {
+            Some(ClaimGuard { inflight: self, id })
+        } else {
+            None
+        }
+    }
+}
+
+/// RAII guard for a claimed in-flight read.
+pub struct ClaimGuard<'a> {
+    inflight: &'a InFlight,
+    id: u32,
+}
+
+impl Drop for ClaimGuard<'_> {
+    fn drop(&mut self) {
+        self.inflight.release(self.id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn claim_is_exclusive() {
+        let inf = InFlight::new();
+        assert!(inf.claim(1));
+        assert!(!inf.claim(1));
+        inf.release(1);
+        assert!(inf.claim(1));
+    }
+
+    #[test]
+    fn guard_releases_on_drop() {
+        let inf = InFlight::new();
+        {
+            let g = inf.guard(2);
+            assert!(g.is_some());
+            assert!(inf.guard(2).is_none());
+        }
+        assert!(inf.guard(2).is_some());
+    }
+
+    #[test]
+    fn wait_for_unblocks_on_release() {
+        let inf = Arc::new(InFlight::new());
+        assert!(inf.claim(3));
+        let inf2 = Arc::clone(&inf);
+        let waiter = std::thread::spawn(move || inf2.wait_for(3, Duration::from_secs(5)));
+        std::thread::sleep(Duration::from_millis(20));
+        inf.release(3);
+        assert!(waiter.join().unwrap(), "waiter should observe release");
+    }
+
+    #[test]
+    fn wait_for_times_out() {
+        let inf = InFlight::new();
+        inf.claim(4);
+        let t0 = std::time::Instant::now();
+        assert!(!inf.wait_for(4, Duration::from_millis(30)));
+        assert!(t0.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn wait_for_absent_id_is_immediate() {
+        let inf = InFlight::new();
+        assert!(inf.wait_for(99, Duration::from_millis(1)));
+    }
+}

@@ -1,0 +1,432 @@
+//! Search engine (S7): Code 1's disk-based IVF search, composed from the
+//! index substrate, the cluster cache, the disk latency model, and the
+//! compute backend.
+//!
+//! Per query (paper Code 1): ① encode ② first-level centroid scan ③ fetch
+//! the nprobe clusters (cache, else disk) ④ merge ⑤ top-k — here fetch and
+//! score are interleaved per cluster and "merge + search" is the streaming
+//! [`TopK`] collector, which is mathematically identical and never
+//! materializes the temporary index.
+//!
+//! The cache and disk model live behind `Arc<Mutex<..>>` because the
+//! opportunistic prefetcher (coordinator/prefetch.rs) shares them from its
+//! own thread.
+
+pub mod inflight;
+pub mod profile;
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::cache::ClusterCache;
+use crate::config::Config;
+use crate::index::{ClusterBlock, Hit, IvfIndex, TopK};
+use crate::metrics::SearchReport;
+use crate::runtime::Compute;
+use crate::sim::DiskModel;
+use crate::workload::{DatasetSpec, Query};
+
+/// A query that has gone through encode + first-level scan: everything the
+/// grouping algorithm (and then the search) needs.
+#[derive(Debug, Clone)]
+pub struct PreparedQuery {
+    pub query: Query,
+    /// f32[EMBED_DIM]
+    pub embedding: Vec<f32>,
+    /// The nprobe cluster ids, closest centroid first — `C(q_i)` in the
+    /// paper's Eq. 1.
+    pub clusters: Vec<u32>,
+    /// This query's amortized share of the batch encode+scan time (counted
+    /// into its search latency; the paper measures "from encoding query to
+    /// top-k retrieval").
+    pub prep_cost: Duration,
+}
+
+/// Outcome of one cluster fetch.
+pub struct FetchOutcome {
+    pub block: Arc<ClusterBlock>,
+    pub was_hit: bool,
+    pub bytes_read: u64,
+    pub simulated: Duration,
+}
+
+/// Fetch a cluster through the cache; on miss, read from disk (real I/O +
+/// modeled latency) and insert. Shared by the demand path and the
+/// prefetcher (`from_prefetch` selects stats accounting: the prefetcher
+/// must not perturb demand hit/miss counters).
+///
+/// Reads are deduplicated through the [`inflight::InFlight`] registry: if
+/// the requested cluster is already being read (typically by the
+/// prefetcher), the caller waits for that read instead of issuing a second
+/// one — the wait is the *residual* of the overlapped prefetch, and the
+/// access counts as a hit (the data never had to be re-fetched for this
+/// query).
+pub fn fetch_cluster(
+    index: &IvfIndex,
+    cache: &Mutex<ClusterCache>,
+    disk: &Mutex<DiskModel>,
+    inflight: &inflight::InFlight,
+    id: u32,
+    from_prefetch: bool,
+) -> anyhow::Result<FetchOutcome> {
+    loop {
+        {
+            let mut c = cache.lock().unwrap();
+            let found = if from_prefetch { c.peek(id) } else { c.get(id) };
+            if let Some(block) = found {
+                return Ok(FetchOutcome {
+                    block,
+                    was_hit: true,
+                    bytes_read: 0,
+                    simulated: Duration::ZERO,
+                });
+            }
+        }
+
+        let Some(_guard) = inflight.guard(id) else {
+            // Someone else is reading this cluster right now: wait for it,
+            // then retry the cache. The bound only matters if the reader
+            // dies; the demand read below is the fallback.
+            inflight.wait_for(id, Duration::from_secs(10));
+            if let Some(block) = {
+                let mut c = cache.lock().unwrap();
+                if from_prefetch { c.peek(id) } else { c.convert_miss_to_hit(id) }
+            } {
+                // The bytes came from the overlapped (prefetch) read; this
+                // query only paid the residual wait, so it counts as a hit.
+                return Ok(FetchOutcome {
+                    block,
+                    was_hit: true,
+                    bytes_read: 0,
+                    simulated: Duration::ZERO,
+                });
+            }
+            continue; // reader failed or block was evicted: retry fully
+        };
+
+        // We own the read: real disk I/O + modeled latency, outside the
+        // cache lock so prefetch and demand reads overlap.
+        disk.lock().unwrap().check(id)?;
+        let block = Arc::new(index.read_cluster(id)?);
+        let bytes = block.bytes_on_disk;
+        let simulated = {
+            // Compute latency under the lock (deterministic RNG), sleep
+            // outside it.
+            let d = disk.lock().unwrap().read_latency(bytes);
+            if !d.is_zero() {
+                std::thread::sleep(d);
+            }
+            d
+        };
+        cache.lock().unwrap().insert(Arc::clone(&block), from_prefetch);
+        return Ok(FetchOutcome { block, was_hit: false, bytes_read: bytes, simulated });
+    }
+}
+
+/// Canonical label for an embedding path (persisted in `meta.json` so an
+/// index can only be served by the path that built it).
+pub fn embedding_label(backend: crate::config::Backend, model: &str) -> String {
+    match backend {
+        crate::config::Backend::Native => "native".to_string(),
+        crate::config::Backend::Pjrt => format!("pjrt/{model}"),
+    }
+}
+
+/// The per-dataset search engine.
+pub struct SearchEngine {
+    pub cfg: Config,
+    pub spec: DatasetSpec,
+    pub index: IvfIndex,
+    pub compute: Compute,
+    pub cache: Arc<Mutex<ClusterCache>>,
+    pub disk: Arc<Mutex<DiskModel>>,
+    /// Shared in-flight read registry (demand path + prefetcher).
+    pub inflight: Arc<inflight::InFlight>,
+}
+
+impl SearchEngine {
+    /// Open a built index and assemble the engine per `cfg`. The cache's
+    /// cost table is the offline read-latency profile from `meta.json`
+    /// (EdgeRAG §4.1; zeros if the index was never profiled).
+    pub fn open(cfg: &Config, spec: &DatasetSpec) -> anyhow::Result<SearchEngine> {
+        let index = IvfIndex::open(&cfg.dataset_dir(spec.name))?;
+        let compute = Compute::new(cfg.backend, &cfg.artifacts_dir, &cfg.encoder_model, spec)?;
+        let want = embedding_label(cfg.backend, &cfg.encoder_model);
+        anyhow::ensure!(
+            index.meta.embedding == want,
+            "index at {} was built with embedding '{}' but the config asks for '{}'; \
+             rebuild with `cagr build-index` or switch backend",
+            index.dir.display(),
+            index.meta.embedding,
+            want
+        );
+        Self::assemble(cfg, spec, index, compute)
+    }
+
+    /// Assemble from parts (tests build tiny indexes directly).
+    pub fn assemble(
+        cfg: &Config,
+        spec: &DatasetSpec,
+        index: IvfIndex,
+        compute: Compute,
+    ) -> anyhow::Result<SearchEngine> {
+        cfg.validate()?;
+        anyhow::ensure!(
+            index.meta.clusters <= crate::config::geometry::CENTROID_PAD,
+            "index has more clusters than the centroid artifact supports"
+        );
+        let cache = ClusterCache::from_config(
+            cfg.cache_policy,
+            cfg.cache_entries,
+            index.meta.read_profile_us.clone(),
+        );
+        let disk = DiskModel::new(cfg.disk_profile, cfg.seed);
+        Ok(SearchEngine {
+            cfg: cfg.clone(),
+            spec: spec.clone(),
+            index,
+            compute,
+            cache: Arc::new(Mutex::new(cache)),
+            disk: Arc::new(Mutex::new(disk)),
+            inflight: Arc::new(inflight::InFlight::new()),
+        })
+    }
+
+    /// Encode a batch and run the first-level scan: the coordinator needs
+    /// `C(q_i)` for every arriving query *before* grouping (paper §3.1 ①).
+    pub fn prepare(&mut self, queries: &[Query]) -> anyhow::Result<Vec<PreparedQuery>> {
+        if queries.is_empty() {
+            return Ok(Vec::new());
+        }
+        let t0 = Instant::now();
+        let dim = self.index.meta.dim;
+        let embeddings = self.compute.embed_queries(&self.spec, queries)?;
+        let cluster_lists =
+            self.compute
+                .nearest_centroids(&self.index, &embeddings, queries.len(), self.cfg.nprobe)?;
+        let share = t0.elapsed() / queries.len() as u32;
+        Ok(queries
+            .iter()
+            .zip(cluster_lists)
+            .enumerate()
+            .map(|(i, (q, clusters))| PreparedQuery {
+                query: q.clone(),
+                embedding: embeddings[i * dim..(i + 1) * dim].to_vec(),
+                clusters,
+                prep_cost: share,
+            })
+            .collect())
+    }
+
+    /// Search one prepared query: fetch + score its clusters, merge top-k.
+    pub fn search(&mut self, pq: &PreparedQuery) -> anyhow::Result<(SearchReport, Vec<Hit>)> {
+        let t0 = Instant::now();
+        let mut topk = TopK::new(self.cfg.top_k);
+        let mut report = SearchReport {
+            query_id: pq.query.id,
+            nprobe: pq.clusters.len(),
+            ..Default::default()
+        };
+        for &cid in &pq.clusters {
+            let outcome =
+                fetch_cluster(&self.index, &self.cache, &self.disk, &self.inflight, cid, false)?;
+            if outcome.was_hit {
+                report.cache_hits += 1;
+            } else {
+                report.cache_misses += 1;
+                report.bytes_read += outcome.bytes_read;
+                report.simulated += outcome.simulated;
+            }
+            let dists = self.compute.score_block(&pq.embedding, 1, &outcome.block)?;
+            topk.push_block(&outcome.block.doc_ids, &dists);
+        }
+        report.latency = t0.elapsed() + pq.prep_cost;
+        Ok((report, topk.into_sorted()))
+    }
+
+    /// Convenience: prepare + search a single raw query.
+    pub fn search_query(&mut self, query: &Query) -> anyhow::Result<(SearchReport, Vec<Hit>)> {
+        let prepared = self.prepare(std::slice::from_ref(query))?;
+        self.search(&prepared[0])
+    }
+
+    /// Exhaustive (exact) search over all clusters — the accuracy oracle
+    /// for recall tests; not on any serving path.
+    pub fn exhaustive_search(&mut self, pq: &PreparedQuery) -> anyhow::Result<Vec<Hit>> {
+        let mut topk = TopK::new(self.cfg.top_k);
+        for cid in 0..self.index.meta.clusters as u32 {
+            let block = Arc::new(self.index.read_cluster(cid)?);
+            let dists = self.compute.score_block(&pq.embedding, 1, &block)?;
+            topk.push_block(&block.doc_ids, &dists);
+        }
+        Ok(topk.into_sorted())
+    }
+
+    /// Cache stats snapshot.
+    pub fn cache_stats(&self) -> crate::cache::CacheStats {
+        self.cache.lock().unwrap().stats()
+    }
+
+    /// Reset cache stats (e.g. after warm-up).
+    pub fn reset_cache_stats(&mut self) {
+        self.cache.lock().unwrap().reset_stats();
+    }
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::config::Backend;
+    use crate::index::BuildParams;
+    use crate::util::threadpool::ThreadPool;
+    use crate::workload::LatentSpace;
+
+    /// Build a tiny on-disk index + engine in a temp dir.
+    pub fn tiny_engine(tag: &str, mutate: impl FnOnce(&mut Config)) -> (SearchEngine, std::path::PathBuf) {
+        let spec = DatasetSpec::tiny(17);
+        let dir = std::env::temp_dir().join(format!(
+            "cagr-engine-{}-{tag}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+
+        let latent = LatentSpace::new(&spec);
+        let dim = crate::config::geometry::EMBED_DIM;
+        let mut data = Vec::with_capacity(spec.n_docs * dim);
+        for doc in 0..spec.n_docs {
+            data.extend_from_slice(&latent.doc_embedding(&spec, doc));
+        }
+        let pool = ThreadPool::new(4);
+        let params = BuildParams {
+            clusters: 16,
+            kmeans_iters: 5,
+            kmeans_sample: 2_000,
+            seed: 99,
+        };
+        let index = IvfIndex::build(&dir, spec.name, "native", &data, dim, &params, &pool).unwrap();
+
+        let mut cfg = Config::default();
+        cfg.clusters = 16;
+        cfg.nprobe = 4;
+        cfg.top_k = 5;
+        cfg.cache_entries = 6;
+        cfg.backend = Backend::Native;
+        cfg.disk_profile = crate::config::DiskProfile::None;
+        mutate(&mut cfg);
+
+        let compute = Compute::new(cfg.backend, &cfg.artifacts_dir, &cfg.encoder_model, &spec).unwrap();
+        let engine = SearchEngine::assemble(&cfg, &spec, index, compute).unwrap();
+        (engine, dir)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::tiny_engine;
+    use crate::workload::generate_queries;
+
+    #[test]
+    fn search_returns_topk_sorted() {
+        let (mut engine, dir) = tiny_engine("sorted", |_| {});
+        let queries = generate_queries(&engine.spec);
+        let prepared = engine.prepare(&queries[..8]).unwrap();
+        for pq in &prepared {
+            let (report, hits) = engine.search(pq).unwrap();
+            assert_eq!(hits.len(), engine.cfg.top_k);
+            for w in hits.windows(2) {
+                assert!(w[0].distance <= w[1].distance);
+            }
+            assert_eq!(report.nprobe, engine.cfg.nprobe);
+            assert_eq!(
+                report.cache_hits + report.cache_misses,
+                engine.cfg.nprobe as u64
+            );
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn repeat_search_hits_cache() {
+        let (mut engine, dir) = tiny_engine("cachehit", |_| {});
+        let queries = generate_queries(&engine.spec);
+        let prepared = engine.prepare(&queries[..1]).unwrap();
+        let (first, hits1) = engine.search(&prepared[0]).unwrap();
+        let (second, hits2) = engine.search(&prepared[0]).unwrap();
+        assert_eq!(first.cache_hits, 0);
+        assert_eq!(second.cache_misses, 0);
+        assert_eq!(second.bytes_read, 0);
+        assert_eq!(hits1, hits2, "results must not depend on cache state");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn nprobe_all_matches_exhaustive() {
+        // With nprobe == clusters the IVF search is exact.
+        let (mut engine, dir) = tiny_engine("exact", |cfg| cfg.nprobe = 16);
+        let queries = generate_queries(&engine.spec);
+        let prepared = engine.prepare(&queries[..4]).unwrap();
+        for pq in &prepared {
+            let (_, approx) = engine.search(pq).unwrap();
+            let exact = engine.exhaustive_search(pq).unwrap();
+            assert_eq!(approx, exact, "query {}", pq.query.id);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn ivf_recall_is_reasonable() {
+        // nprobe 4/16 on well-clustered data should mostly agree with exact.
+        let (mut engine, dir) = tiny_engine("recall", |_| {});
+        let queries = generate_queries(&engine.spec);
+        let prepared = engine.prepare(&queries[..16]).unwrap();
+        let mut overlap = 0usize;
+        let mut total = 0usize;
+        for pq in &prepared {
+            let (_, approx) = engine.search(pq).unwrap();
+            let exact = engine.exhaustive_search(pq).unwrap();
+            let exact_ids: Vec<u32> = exact.iter().map(|h| h.doc_id).collect();
+            overlap += approx.iter().filter(|h| exact_ids.contains(&h.doc_id)).count();
+            total += exact.len();
+        }
+        let recall = overlap as f64 / total as f64;
+        assert!(recall > 0.6, "recall@5 = {recall}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn prepare_computes_nprobe_clusters() {
+        let (mut engine, dir) = tiny_engine("prepare", |_| {});
+        let queries = generate_queries(&engine.spec);
+        let prepared = engine.prepare(&queries[..6]).unwrap();
+        for pq in &prepared {
+            assert_eq!(pq.clusters.len(), engine.cfg.nprobe);
+            assert_eq!(pq.embedding.len(), engine.index.meta.dim);
+            let mut unique = pq.clusters.clone();
+            unique.sort_unstable();
+            unique.dedup();
+            assert_eq!(unique.len(), pq.clusters.len(), "duplicate cluster ids");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn injected_disk_failure_surfaces() {
+        let (mut engine, dir) = tiny_engine("fail", |_| {});
+        let queries = generate_queries(&engine.spec);
+        let prepared = engine.prepare(&queries[..1]).unwrap();
+        let victim = prepared[0].clusters[0];
+        engine.disk.lock().unwrap().inject_failure(victim);
+        assert!(engine.search(&prepared[0]).is_err());
+        engine.disk.lock().unwrap().heal(victim);
+        assert!(engine.search(&prepared[0]).is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn empty_prepare_is_ok() {
+        let (mut engine, dir) = tiny_engine("empty", |_| {});
+        assert!(engine.prepare(&[]).unwrap().is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,112 @@
+//! Benchmark harness: timing utilities + the shared experiment runner the
+//! figure-regeneration benches and the examples are built on. (The build is
+//! offline, so this replaces criterion with exactly what the experiments
+//! need: warm-up, repeated timing, percentile stats, aligned table output.)
+
+pub mod runner;
+
+use std::time::{Duration, Instant};
+
+use crate::metrics::percentile_of_sorted;
+
+/// Summary of repeated timings of one operation.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub label: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchStats {
+    pub fn row(&self) -> Vec<String> {
+        vec![
+            self.label.clone(),
+            self.iters.to_string(),
+            format_duration(self.mean),
+            format_duration(self.p50),
+            format_duration(self.p99),
+            format_duration(self.min),
+            format_duration(self.max),
+        ]
+    }
+
+    pub const HEADERS: [&'static str; 7] =
+        ["benchmark", "iters", "mean", "p50", "p99", "min", "max"];
+}
+
+/// Human-format a duration with an appropriate unit.
+pub fn format_duration(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns >= 1_000_000_000 {
+        format!("{:.3}s", d.as_secs_f64())
+    } else if ns >= 1_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:.2}us", ns as f64 / 1e3)
+    } else {
+        format!("{ns}ns")
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` unmeasured runs.
+pub fn bench<F: FnMut()>(label: &str, warmup: usize, iters: usize, mut f: F) -> BenchStats {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples: Vec<f64> = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let mean = samples.iter().sum::<f64>() / iters as f64;
+    BenchStats {
+        label: label.to_string(),
+        iters,
+        mean: Duration::from_secs_f64(mean),
+        p50: Duration::from_secs_f64(percentile_of_sorted(&samples, 50.0)),
+        p99: Duration::from_secs_f64(percentile_of_sorted(&samples, 99.0)),
+        min: Duration::from_secs_f64(samples[0]),
+        max: Duration::from_secs_f64(samples[iters - 1]),
+    }
+}
+
+/// Section banner for bench output.
+pub fn banner(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iterations() {
+        let mut count = 0usize;
+        let stats = bench("inc", 3, 10, || count += 1);
+        assert_eq!(count, 13);
+        assert_eq!(stats.iters, 10);
+        assert!(stats.min <= stats.p50 && stats.p50 <= stats.max);
+        assert!(stats.mean > Duration::ZERO);
+    }
+
+    #[test]
+    fn format_durations() {
+        assert_eq!(format_duration(Duration::from_nanos(500)), "500ns");
+        assert_eq!(format_duration(Duration::from_micros(1500)), "1.50ms");
+        assert_eq!(format_duration(Duration::from_millis(2500)), "2.500s");
+        assert!(format_duration(Duration::from_micros(12)).ends_with("us"));
+    }
+
+    #[test]
+    fn stats_row_matches_headers() {
+        let stats = bench("x", 0, 2, || {});
+        assert_eq!(stats.row().len(), BenchStats::HEADERS.len());
+    }
+}

@@ -1,0 +1,424 @@
+//! The disk-based IVF index (paper §2.2, Code 1): first-level centroids in
+//! memory, second-level clusters as files on storage.
+//!
+//! Build phase: k-means over the corpus embeddings, partition, write one
+//! cluster file per centroid plus `centroids.bin` and `meta.json`.
+//! Serve phase: `open` loads only centroids + metadata; cluster vectors are
+//! read on demand through the engine's cache.
+
+use std::path::{Path, PathBuf};
+
+use crate::config::geometry::{CENTROID_PAD, SCORE_N};
+use crate::index::{kmeans::KMeans, storage};
+use crate::util::json::{obj, Json};
+use crate::util::rng::Rng;
+use crate::util::threadpool::ThreadPool;
+
+/// Value used for the coordinates of padding centroids; distance from any
+/// unit-norm query is ~dim*1e6, so padding can never win a nearest race
+/// (contract shared with python model.centroid_scan).
+pub const CENTROID_PAD_FILL: f32 = 1e3;
+
+/// Index metadata persisted as `meta.json`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IvfMeta {
+    pub dataset: String,
+    /// Which embedding path produced the corpus vectors ("native" or
+    /// "pjrt/<model>"). Serving must use the same path or queries would
+    /// live in a different space than the index (engine::open enforces).
+    pub embedding: String,
+    pub n_docs: usize,
+    pub dim: usize,
+    pub clusters: usize,
+    pub cluster_sizes: Vec<usize>,
+    pub cluster_bytes: Vec<u64>,
+    /// Offline-profiled read latency per cluster in microseconds (EdgeRAG's
+    /// cost input; filled by `engine::profile`, zero until profiled).
+    pub read_profile_us: Vec<u64>,
+    pub build_seed: u64,
+}
+
+impl IvfMeta {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("dataset", self.dataset.as_str().into()),
+            ("embedding", self.embedding.as_str().into()),
+            ("n_docs", self.n_docs.into()),
+            ("dim", self.dim.into()),
+            ("clusters", self.clusters.into()),
+            (
+                "cluster_sizes",
+                Json::Arr(self.cluster_sizes.iter().map(|&s| s.into()).collect()),
+            ),
+            (
+                "cluster_bytes",
+                Json::Arr(
+                    self.cluster_bytes
+                        .iter()
+                        .map(|&b| Json::Num(b as f64))
+                        .collect(),
+                ),
+            ),
+            (
+                "read_profile_us",
+                Json::Arr(
+                    self.read_profile_us
+                        .iter()
+                        .map(|&b| Json::Num(b as f64))
+                        .collect(),
+                ),
+            ),
+            ("build_seed", Json::Num(self.build_seed as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> anyhow::Result<IvfMeta> {
+        let str_field = |k: &str| -> anyhow::Result<String> {
+            Ok(v.get(k)
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("meta.json missing '{k}'"))?
+                .to_string())
+        };
+        let usize_field = |k: &str| -> anyhow::Result<usize> {
+            v.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow::anyhow!("meta.json missing '{k}'"))
+        };
+        let vec_field = |k: &str| -> anyhow::Result<Vec<f64>> {
+            Ok(v.get(k)
+                .and_then(Json::as_arr)
+                .ok_or_else(|| anyhow::anyhow!("meta.json missing '{k}'"))?
+                .iter()
+                .filter_map(Json::as_f64)
+                .collect())
+        };
+        Ok(IvfMeta {
+            dataset: str_field("dataset")?,
+            embedding: str_field("embedding")?,
+            n_docs: usize_field("n_docs")?,
+            dim: usize_field("dim")?,
+            clusters: usize_field("clusters")?,
+            cluster_sizes: vec_field("cluster_sizes")?.iter().map(|&x| x as usize).collect(),
+            cluster_bytes: vec_field("cluster_bytes")?.iter().map(|&x| x as u64).collect(),
+            read_profile_us: vec_field("read_profile_us")?.iter().map(|&x| x as u64).collect(),
+            build_seed: v
+                .get("build_seed")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("meta.json missing 'build_seed'"))?
+                as u64,
+        })
+    }
+
+    pub fn save(&self, dir: &Path) -> anyhow::Result<()> {
+        std::fs::write(storage::meta_path(dir), self.to_json().pretty())
+            .map_err(|e| anyhow::anyhow!("writing meta.json: {e}"))
+    }
+}
+
+/// Build-time parameters.
+#[derive(Debug, Clone)]
+pub struct BuildParams {
+    pub clusters: usize,
+    pub kmeans_iters: usize,
+    pub kmeans_sample: usize,
+    pub seed: u64,
+}
+
+/// An opened disk-based IVF index. Holds centroids + metadata only; cluster
+/// vectors stay on disk until fetched.
+#[derive(Debug, Clone)]
+pub struct IvfIndex {
+    pub dir: PathBuf,
+    pub meta: IvfMeta,
+    /// `clusters x dim` row-major.
+    pub centroids: Vec<f32>,
+}
+
+impl IvfIndex {
+    /// Build the index from corpus embeddings (`n_docs x dim` row-major) and
+    /// persist it under `dir`.
+    pub fn build(
+        dir: &Path,
+        dataset: &str,
+        embedding_label: &str,
+        embeddings: &[f32],
+        dim: usize,
+        params: &BuildParams,
+        pool: &ThreadPool,
+    ) -> anyhow::Result<IvfIndex> {
+        anyhow::ensure!(dim > 0 && embeddings.len() % dim == 0, "embeddings not n x dim");
+        let n_docs = embeddings.len() / dim;
+        anyhow::ensure!(
+            n_docs >= params.clusters,
+            "need at least clusters={} docs, got {n_docs}",
+            params.clusters
+        );
+        std::fs::create_dir_all(dir)?;
+
+        let mut rng = Rng::new(params.seed).derive(0x1DF);
+        let km = KMeans::train(
+            embeddings,
+            dim,
+            params.clusters,
+            params.kmeans_iters,
+            params.kmeans_sample,
+            &mut rng,
+        );
+        let assignment = km.assign_all(embeddings, pool);
+
+        // Partition doc ids by cluster.
+        let mut members: Vec<Vec<u32>> = vec![Vec::new(); params.clusters];
+        for (doc, &c) in assignment.iter().enumerate() {
+            members[c].push(doc as u32);
+        }
+
+        let mut cluster_sizes = Vec::with_capacity(params.clusters);
+        let mut cluster_bytes = Vec::with_capacity(params.clusters);
+        for (cid, ids) in members.iter().enumerate() {
+            let mut vectors = Vec::with_capacity(ids.len() * dim);
+            for &doc in ids {
+                vectors
+                    .extend_from_slice(&embeddings[doc as usize * dim..(doc as usize + 1) * dim]);
+            }
+            let bytes = storage::write_cluster(dir, cid as u32, dim, ids, &vectors)?;
+            cluster_sizes.push(ids.len());
+            cluster_bytes.push(bytes);
+        }
+
+        storage::write_centroids(dir, params.clusters, dim, &km.centroids)?;
+        let meta = IvfMeta {
+            dataset: dataset.to_string(),
+            embedding: embedding_label.to_string(),
+            n_docs,
+            dim,
+            clusters: params.clusters,
+            cluster_sizes,
+            cluster_bytes,
+            read_profile_us: vec![0; params.clusters],
+            build_seed: params.seed,
+        };
+        meta.save(dir)?;
+
+        Ok(IvfIndex { dir: dir.to_path_buf(), meta, centroids: km.centroids })
+    }
+
+    /// Open a previously built index (loads centroids + meta only).
+    pub fn open(dir: &Path) -> anyhow::Result<IvfIndex> {
+        let meta_text = std::fs::read_to_string(storage::meta_path(dir)).map_err(|e| {
+            anyhow::anyhow!(
+                "opening index at {}: {e} (run `cagr build-index` first?)",
+                dir.display()
+            )
+        })?;
+        let meta = IvfMeta::from_json(
+            &Json::parse(&meta_text).map_err(|e| anyhow::anyhow!("meta.json: {e}"))?,
+        )?;
+        let (k, dim, centroids) = storage::read_centroids(dir)?;
+        anyhow::ensure!(
+            k == meta.clusters && dim == meta.dim,
+            "centroids.bin ({k}x{dim}) disagrees with meta.json ({}x{})",
+            meta.clusters,
+            meta.dim
+        );
+        Ok(IvfIndex { dir: dir.to_path_buf(), meta, centroids })
+    }
+
+    /// First-level lookup (native path): ids of the `nprobe` nearest
+    /// centroids, closest first.
+    pub fn nearest_centroids(&self, query: &[f32], nprobe: usize) -> Vec<u32> {
+        debug_assert_eq!(query.len(), self.meta.dim);
+        let k = self.meta.clusters;
+        let mut dists: Vec<(f32, u32)> = (0..k)
+            .map(|c| {
+                let d = crate::index::distance::l2(
+                    query,
+                    &self.centroids[c * self.meta.dim..(c + 1) * self.meta.dim],
+                );
+                (d, c as u32)
+            })
+            .collect();
+        let take = nprobe.min(k);
+        dists.select_nth_unstable_by(take - 1, |a, b| {
+            a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal).then(a.1.cmp(&b.1))
+        });
+        let mut top: Vec<(f32, u32)> = dists[..take].to_vec();
+        top.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        top.into_iter().map(|(_, c)| c).collect()
+    }
+
+    /// Centroids padded to `CENTROID_PAD` rows with `CENTROID_PAD_FILL`
+    /// (the shape the PJRT centroid-scan artifact expects).
+    pub fn padded_centroids(&self) -> Vec<f32> {
+        let dim = self.meta.dim;
+        let mut out = vec![CENTROID_PAD_FILL; CENTROID_PAD * dim];
+        out[..self.centroids.len()].copy_from_slice(&self.centroids);
+        out
+    }
+
+    /// Read one cluster from disk, padded for the scorer.
+    pub fn read_cluster(&self, id: u32) -> anyhow::Result<storage::ClusterBlock> {
+        anyhow::ensure!(
+            (id as usize) < self.meta.clusters,
+            "cluster id {id} out of range (clusters={})",
+            self.meta.clusters
+        );
+        storage::read_cluster(&self.dir, id, SCORE_N)
+    }
+
+    /// Total on-disk size of all cluster files.
+    pub fn total_bytes(&self) -> u64 {
+        self.meta.cluster_bytes.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{DatasetSpec, LatentSpace};
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("cagr-ivf-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn tiny_embeddings() -> (Vec<f32>, usize, usize) {
+        let spec = DatasetSpec::tiny(21);
+        let latent = LatentSpace::new(&spec);
+        let dim = crate::config::geometry::EMBED_DIM;
+        let n = 600;
+        let mut data = Vec::with_capacity(n * dim);
+        for doc in 0..n {
+            data.extend_from_slice(&latent.doc_embedding(&spec, doc));
+        }
+        (data, n, dim)
+    }
+
+    fn build_params() -> BuildParams {
+        BuildParams { clusters: 12, kmeans_iters: 6, kmeans_sample: 600, seed: 33 }
+    }
+
+    #[test]
+    fn build_open_roundtrip() {
+        let dir = tmpdir("round");
+        let (data, n, dim) = tiny_embeddings();
+        let pool = ThreadPool::new(4);
+        let built =
+            IvfIndex::build(&dir, "tiny", "native", &data, dim, &build_params(), &pool).unwrap();
+        assert_eq!(built.meta.n_docs, n);
+        assert_eq!(built.meta.cluster_sizes.iter().sum::<usize>(), n);
+
+        let opened = IvfIndex::open(&dir).unwrap();
+        assert_eq!(opened.meta, built.meta);
+        assert_eq!(opened.centroids, built.centroids);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn every_doc_in_exactly_one_cluster() {
+        let dir = tmpdir("partition");
+        let (data, n, dim) = tiny_embeddings();
+        let pool = ThreadPool::new(4);
+        let idx = IvfIndex::build(&dir, "tiny", "native", &data, dim, &build_params(), &pool).unwrap();
+        let mut seen = vec![false; n];
+        for cid in 0..idx.meta.clusters {
+            let block = idx.read_cluster(cid as u32).unwrap();
+            assert_eq!(block.len, idx.meta.cluster_sizes[cid]);
+            for &doc in &block.doc_ids {
+                assert!(!seen[doc as usize], "doc {doc} in two clusters");
+                seen[doc as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn cluster_vectors_match_corpus() {
+        let dir = tmpdir("vectors");
+        let (data, _, dim) = tiny_embeddings();
+        let pool = ThreadPool::new(2);
+        let idx = IvfIndex::build(&dir, "tiny", "native", &data, dim, &build_params(), &pool).unwrap();
+        let block = idx.read_cluster(0).unwrap();
+        for (i, &doc) in block.doc_ids.iter().enumerate() {
+            assert_eq!(
+                block.vector(i),
+                &data[doc as usize * dim..(doc as usize + 1) * dim],
+                "doc {doc}"
+            );
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn nearest_centroids_sorted_and_in_range() {
+        let dir = tmpdir("nearest");
+        let (data, _, dim) = tiny_embeddings();
+        let pool = ThreadPool::new(2);
+        let idx = IvfIndex::build(&dir, "tiny", "native", &data, dim, &build_params(), &pool).unwrap();
+        let q = &data[..dim];
+        let ids = idx.nearest_centroids(q, 5);
+        assert_eq!(ids.len(), 5);
+        let d = |c: u32| {
+            crate::index::distance::l2(
+                q,
+                &idx.centroids[c as usize * dim..(c as usize + 1) * dim],
+            )
+        };
+        for w in ids.windows(2) {
+            assert!(d(w[0]) <= d(w[1]), "not sorted by distance");
+        }
+        // must really be the 5 closest
+        let mut all: Vec<u32> = (0..idx.meta.clusters as u32).collect();
+        all.sort_by(|&a, &b| d(a).partial_cmp(&d(b)).unwrap());
+        assert_eq!(ids, all[..5]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn padded_centroids_contract() {
+        let dir = tmpdir("padcen");
+        let (data, _, dim) = tiny_embeddings();
+        let pool = ThreadPool::new(2);
+        let idx = IvfIndex::build(&dir, "tiny", "native", &data, dim, &build_params(), &pool).unwrap();
+        let padded = idx.padded_centroids();
+        assert_eq!(padded.len(), CENTROID_PAD * dim);
+        assert_eq!(&padded[..idx.centroids.len()], &idx.centroids[..]);
+        assert!(padded[idx.centroids.len()..].iter().all(|&x| x == CENTROID_PAD_FILL));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn open_missing_dir_is_helpful() {
+        let err = IvfIndex::open(Path::new("/nonexistent/idx")).unwrap_err().to_string();
+        assert!(err.contains("build-index"), "{err}");
+    }
+
+    #[test]
+    fn read_cluster_bounds_checked() {
+        let dir = tmpdir("bounds");
+        let (data, _, dim) = tiny_embeddings();
+        let pool = ThreadPool::new(2);
+        let idx = IvfIndex::build(&dir, "tiny", "native", &data, dim, &build_params(), &pool).unwrap();
+        assert!(idx.read_cluster(999).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn meta_json_roundtrip() {
+        let meta = IvfMeta {
+            dataset: "x".into(),
+            embedding: "native".into(),
+            n_docs: 10,
+            dim: 4,
+            clusters: 2,
+            cluster_sizes: vec![6, 4],
+            cluster_bytes: vec![120, 90],
+            read_profile_us: vec![5, 9],
+            build_seed: 77,
+        };
+        let restored = IvfMeta::from_json(&meta.to_json()).unwrap();
+        assert_eq!(restored, meta);
+    }
+}

@@ -1,0 +1,243 @@
+//! k-means clustering for the IVF index build (Code 1's index-build phase).
+//!
+//! k-means++ seeding on a training sample, then Lloyd iterations; the final
+//! centroids partition the corpus. Empty clusters are re-seeded from the
+//! point farthest from its assigned centroid, so the build always yields
+//! exactly `k` non-degenerate clusters (the paper's setup requires exactly
+//! 100). Assignment of the full corpus is parallelized over a thread pool.
+
+use crate::index::distance;
+use crate::util::rng::Rng;
+use crate::util::threadpool::ThreadPool;
+
+/// Result of a k-means run: `k x dim` row-major centroids.
+#[derive(Debug, Clone)]
+pub struct KMeans {
+    pub centroids: Vec<f32>,
+    pub k: usize,
+    pub dim: usize,
+}
+
+impl KMeans {
+    /// Train on (a sample of) `data` (`n x dim` row-major).
+    pub fn train(
+        data: &[f32],
+        dim: usize,
+        k: usize,
+        iters: usize,
+        sample_cap: usize,
+        rng: &mut Rng,
+    ) -> KMeans {
+        assert!(dim > 0 && data.len() % dim == 0, "data not n x dim");
+        let n = data.len() / dim;
+        assert!(n >= k, "need at least k={k} points, got {n}");
+
+        // Subsample for training (build-time cost control).
+        let sample: Vec<usize> = if n > sample_cap {
+            rng.sample_indices(n, sample_cap)
+        } else {
+            (0..n).collect()
+        };
+
+        let mut centroids = plusplus_init(data, dim, k, &sample, rng);
+        let mut assign = vec![0usize; sample.len()];
+        let mut dists = vec![0f32; sample.len()];
+
+        for _ in 0..iters {
+            // Assign sample points to nearest centroid.
+            for (si, &pi) in sample.iter().enumerate() {
+                let p = &data[pi * dim..(pi + 1) * dim];
+                let (best, bd) = nearest(p, &centroids, dim);
+                assign[si] = best;
+                dists[si] = bd;
+            }
+            // Recompute centroids.
+            let mut sums = vec![0f64; k * dim];
+            let mut counts = vec![0usize; k];
+            for (si, &pi) in sample.iter().enumerate() {
+                let c = assign[si];
+                counts[c] += 1;
+                let p = &data[pi * dim..(pi + 1) * dim];
+                for (d, &x) in p.iter().enumerate() {
+                    sums[c * dim + d] += x as f64;
+                }
+            }
+            for c in 0..k {
+                if counts[c] == 0 {
+                    // Re-seed an empty cluster from the farthest point.
+                    let far = (0..sample.len())
+                        .max_by(|&a, &b| dists[a].partial_cmp(&dists[b]).unwrap())
+                        .unwrap();
+                    let pi = sample[far];
+                    centroids[c * dim..(c + 1) * dim]
+                        .copy_from_slice(&data[pi * dim..(pi + 1) * dim]);
+                    dists[far] = 0.0;
+                } else {
+                    for d in 0..dim {
+                        centroids[c * dim + d] = (sums[c * dim + d] / counts[c] as f64) as f32;
+                    }
+                }
+            }
+        }
+
+        KMeans { centroids, k, dim }
+    }
+
+    /// Assign every row of `data` to its nearest centroid, in parallel.
+    pub fn assign_all(&self, data: &[f32], pool: &ThreadPool) -> Vec<usize> {
+        let n = data.len() / self.dim;
+        let chunk = n.div_ceil(pool.size() * 4).max(1);
+        let dim = self.dim;
+        let centroids = std::sync::Arc::new(self.centroids.clone());
+        let jobs: Vec<(usize, Vec<f32>)> = (0..n)
+            .step_by(chunk)
+            .map(|start| {
+                let end = (start + chunk).min(n);
+                (start, data[start * dim..end * dim].to_vec())
+            })
+            .collect();
+        let results = pool.map(jobs, move |(start, rows)| {
+            let m = rows.len() / dim;
+            let assigned: Vec<usize> = (0..m)
+                .map(|i| nearest(&rows[i * dim..(i + 1) * dim], &centroids, dim).0)
+                .collect();
+            (start, assigned)
+        });
+        let mut out = vec![0usize; n];
+        for (start, assigned) in results {
+            out[start..start + assigned.len()].copy_from_slice(&assigned);
+        }
+        out
+    }
+}
+
+/// Index + distance of the nearest centroid.
+pub fn nearest(point: &[f32], centroids: &[f32], dim: usize) -> (usize, f32) {
+    let k = centroids.len() / dim;
+    let mut best = 0;
+    let mut best_d = f32::INFINITY;
+    for c in 0..k {
+        let d = distance::l2(point, &centroids[c * dim..(c + 1) * dim]);
+        if d < best_d {
+            best_d = d;
+            best = c;
+        }
+    }
+    (best, best_d)
+}
+
+/// k-means++ seeding over the sampled points.
+fn plusplus_init(data: &[f32], dim: usize, k: usize, sample: &[usize], rng: &mut Rng) -> Vec<f32> {
+    let mut centroids = Vec::with_capacity(k * dim);
+    let first = sample[rng.range(0, sample.len())];
+    centroids.extend_from_slice(&data[first * dim..(first + 1) * dim]);
+
+    let mut d2: Vec<f64> = sample
+        .iter()
+        .map(|&pi| distance::l2(&data[pi * dim..(pi + 1) * dim], &centroids[..dim]) as f64)
+        .collect();
+
+    while centroids.len() < k * dim {
+        let total: f64 = d2.iter().sum();
+        let chosen = if total <= 0.0 {
+            rng.range(0, sample.len())
+        } else {
+            rng.weighted(&d2)
+        };
+        let pi = sample[chosen];
+        let new_c = &data[pi * dim..(pi + 1) * dim];
+        centroids.extend_from_slice(new_c);
+        for (si, &pj) in sample.iter().enumerate() {
+            let d = distance::l2(&data[pj * dim..(pj + 1) * dim], new_c) as f64;
+            if d < d2[si] {
+                d2[si] = d;
+            }
+        }
+    }
+    centroids
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Three well-separated blobs in 2-D.
+    fn blobs(rng: &mut Rng, per: usize) -> Vec<f32> {
+        let centers = [(0.0f32, 0.0f32), (10.0, 0.0), (0.0, 10.0)];
+        let mut data = Vec::new();
+        for &(cx, cy) in &centers {
+            for _ in 0..per {
+                data.push(cx + rng.normal_f32(0.0, 0.3));
+                data.push(cy + rng.normal_f32(0.0, 0.3));
+            }
+        }
+        data
+    }
+
+    #[test]
+    fn recovers_separated_blobs() {
+        let mut rng = Rng::new(42);
+        let data = blobs(&mut rng, 100);
+        let km = KMeans::train(&data, 2, 3, 10, 10_000, &mut rng);
+        // Each true center must have a centroid within distance 1.
+        for &(cx, cy) in &[(0.0f32, 0.0f32), (10.0, 0.0), (0.0, 10.0)] {
+            let (_, d) = nearest(&[cx, cy], &km.centroids, 2);
+            assert!(d < 1.0, "no centroid near ({cx},{cy}): d={d}");
+        }
+    }
+
+    #[test]
+    fn assignment_consistent_with_nearest() {
+        let mut rng = Rng::new(43);
+        let data = blobs(&mut rng, 50);
+        let km = KMeans::train(&data, 2, 3, 10, 10_000, &mut rng);
+        let pool = ThreadPool::new(4);
+        let assign = km.assign_all(&data, &pool);
+        assert_eq!(assign.len(), 150);
+        for i in 0..150 {
+            let (want, _) = nearest(&data[i * 2..i * 2 + 2], &km.centroids, 2);
+            assert_eq!(assign[i], want, "row {i}");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut r1 = Rng::new(7);
+        let data = blobs(&mut r1, 40);
+        let mut ra = Rng::new(9);
+        let mut rb = Rng::new(9);
+        let a = KMeans::train(&data, 2, 3, 5, 10_000, &mut ra);
+        let b = KMeans::train(&data, 2, 3, 5, 10_000, &mut rb);
+        assert_eq!(a.centroids, b.centroids);
+    }
+
+    #[test]
+    fn exact_k_centroids_even_with_duplicates() {
+        // All points identical: empty-cluster re-seeding must still yield k.
+        let data = vec![1.0f32; 20 * 4];
+        let mut rng = Rng::new(5);
+        let km = KMeans::train(&data, 4, 5, 8, 10_000, &mut rng);
+        assert_eq!(km.centroids.len(), 5 * 4);
+        assert!(km.centroids.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn sampling_path_still_covers_space() {
+        let mut rng = Rng::new(11);
+        let data = blobs(&mut rng, 500);
+        // sample_cap smaller than n forces the subsampling path
+        let km = KMeans::train(&data, 2, 3, 10, 100, &mut rng);
+        for &(cx, cy) in &[(0.0f32, 0.0f32), (10.0, 0.0), (0.0, 10.0)] {
+            let (_, d) = nearest(&[cx, cy], &km.centroids, 2);
+            assert!(d < 2.0, "sampled build missed ({cx},{cy}): d={d}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "at least k")]
+    fn too_few_points_panics() {
+        let data = vec![0f32; 2 * 2];
+        let mut rng = Rng::new(1);
+        KMeans::train(&data, 2, 5, 3, 100, &mut rng);
+    }
+}

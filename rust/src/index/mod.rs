@@ -1,0 +1,16 @@
+//! Disk-based IVF vector index substrate (S3).
+//!
+//! The paper uses FAISS's IVF index with clusters spilled to NVMe; this
+//! module is our from-scratch equivalent: `kmeans` builds the partition,
+//! `storage` defines the on-disk cluster files, `ivf` ties them into a
+//! two-level index, `distance`/`topk` are the native search primitives.
+
+pub mod distance;
+pub mod ivf;
+pub mod kmeans;
+pub mod storage;
+pub mod topk;
+
+pub use ivf::{BuildParams, IvfIndex, IvfMeta};
+pub use storage::ClusterBlock;
+pub use topk::{Hit, TopK};

@@ -1,0 +1,283 @@
+//! On-disk layout of a built IVF index (Code 1's "clusters stored on
+//! secondary storage").
+//!
+//! Per dataset directory (`data/<dataset>/`):
+//!   cluster_<id>.bin — one second-level cluster:
+//!       magic "CAGRCLU1" | u32 id | u32 len | u32 dim |
+//!       u32 doc_ids[len] | f32 data[len*dim]        (all little-endian)
+//!   centroids.bin    — first-level index:
+//!       magic "CAGRCEN1" | u32 k | u32 dim | f32 data[k*dim]
+//!   meta.json        — dataset name, sizes, per-cluster byte counts, and
+//!                      the offline read-latency profile (EdgeRAG §4.1).
+//!
+//! Cluster reads go through `read_cluster`, the single point where real disk
+//! I/O happens on the serving path; the engine wraps it with the disk
+//! latency model (sim/).
+
+use std::io::{Read, Write};
+use std::path::{Path, PathBuf};
+
+const CLUSTER_MAGIC: &[u8; 8] = b"CAGRCLU1";
+const CENTROID_MAGIC: &[u8; 8] = b"CAGRCEN1";
+
+/// One cluster's vectors, decoded in memory. `data` is padded with zero rows
+/// up to a multiple of `geometry::SCORE_N` so PJRT scorer calls can borrow
+/// it without copying; `len` is the true vector count.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterBlock {
+    pub id: u32,
+    pub len: usize,
+    pub dim: usize,
+    pub doc_ids: Vec<u32>,
+    /// Row-major `padded_len x dim`, zero rows beyond `len`.
+    pub data: Vec<f32>,
+    /// Bytes this cluster occupies on disk (for Fig. 5 metrics + the disk
+    /// latency model).
+    pub bytes_on_disk: u64,
+}
+
+impl ClusterBlock {
+    /// Rows in the padded buffer.
+    pub fn padded_len(&self) -> usize {
+        self.data.len() / self.dim
+    }
+
+    /// The `i`-th real vector.
+    pub fn vector(&self, i: usize) -> &[f32] {
+        debug_assert!(i < self.len);
+        &self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Approximate resident memory footprint.
+    pub fn resident_bytes(&self) -> u64 {
+        (self.data.len() * 4 + self.doc_ids.len() * 4) as u64
+    }
+}
+
+fn write_u32(w: &mut impl Write, v: u32) -> std::io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+fn read_u32(r: &mut impl Read) -> std::io::Result<u32> {
+    let mut buf = [0u8; 4];
+    r.read_exact(&mut buf)?;
+    Ok(u32::from_le_bytes(buf))
+}
+
+fn read_magic(r: &mut impl Read, want: &[u8; 8], what: &str) -> anyhow::Result<()> {
+    let mut got = [0u8; 8];
+    r.read_exact(&mut got)?;
+    if &got != want {
+        anyhow::bail!("{what}: bad magic {:?}", got);
+    }
+    Ok(())
+}
+
+/// Path of cluster `id` inside a dataset directory.
+pub fn cluster_path(dir: &Path, id: u32) -> PathBuf {
+    dir.join(format!("cluster_{id:05}.bin"))
+}
+
+pub fn centroids_path(dir: &Path) -> PathBuf {
+    dir.join("centroids.bin")
+}
+
+pub fn meta_path(dir: &Path) -> PathBuf {
+    dir.join("meta.json")
+}
+
+/// Write one cluster file; returns bytes written.
+pub fn write_cluster(
+    dir: &Path,
+    id: u32,
+    dim: usize,
+    doc_ids: &[u32],
+    vectors: &[f32],
+) -> anyhow::Result<u64> {
+    assert_eq!(vectors.len(), doc_ids.len() * dim, "vectors/doc_ids mismatch");
+    let path = cluster_path(dir, id);
+    let file = std::fs::File::create(&path)
+        .map_err(|e| anyhow::anyhow!("creating {}: {e}", path.display()))?;
+    let mut w = std::io::BufWriter::new(file);
+    w.write_all(CLUSTER_MAGIC)?;
+    write_u32(&mut w, id)?;
+    write_u32(&mut w, doc_ids.len() as u32)?;
+    write_u32(&mut w, dim as u32)?;
+    for &d in doc_ids {
+        write_u32(&mut w, d)?;
+    }
+    for &v in vectors {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    w.flush()?;
+    Ok((8 + 12 + doc_ids.len() * 4 + vectors.len() * 4) as u64)
+}
+
+/// Read one cluster file from disk, padding rows up to a multiple of
+/// `pad_rows` (pass `geometry::SCORE_N`; pass 1 for no padding).
+pub fn read_cluster(dir: &Path, id: u32, pad_rows: usize) -> anyhow::Result<ClusterBlock> {
+    let path = cluster_path(dir, id);
+    let bytes_on_disk = std::fs::metadata(&path)
+        .map_err(|e| anyhow::anyhow!("stat {}: {e}", path.display()))?
+        .len();
+    let file = std::fs::File::open(&path)
+        .map_err(|e| anyhow::anyhow!("opening {}: {e}", path.display()))?;
+    let mut r = std::io::BufReader::new(file);
+    read_magic(&mut r, CLUSTER_MAGIC, "cluster file")?;
+    let file_id = read_u32(&mut r)?;
+    if file_id != id {
+        anyhow::bail!("cluster file {}: id {file_id} != expected {id}", path.display());
+    }
+    let len = read_u32(&mut r)? as usize;
+    let dim = read_u32(&mut r)? as usize;
+    if dim == 0 || dim > 65_536 {
+        anyhow::bail!("cluster file {}: implausible dim {dim}", path.display());
+    }
+
+    let mut doc_ids = vec![0u32; len];
+    let mut id_bytes = vec![0u8; len * 4];
+    r.read_exact(&mut id_bytes)?;
+    for (i, chunk) in id_bytes.chunks_exact(4).enumerate() {
+        doc_ids[i] = u32::from_le_bytes(chunk.try_into().unwrap());
+    }
+
+    let padded = crate::util::round_up(len.max(1), pad_rows.max(1));
+    let mut data = vec![0f32; padded * dim];
+    let mut vec_bytes = vec![0u8; len * dim * 4];
+    r.read_exact(&mut vec_bytes)?;
+    for (i, chunk) in vec_bytes.chunks_exact(4).enumerate() {
+        data[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+    }
+
+    Ok(ClusterBlock { id, len, dim, doc_ids, data, bytes_on_disk })
+}
+
+/// Write the first-level centroid index.
+pub fn write_centroids(dir: &Path, k: usize, dim: usize, data: &[f32]) -> anyhow::Result<()> {
+    assert_eq!(data.len(), k * dim);
+    let path = centroids_path(dir);
+    let file = std::fs::File::create(&path)
+        .map_err(|e| anyhow::anyhow!("creating {}: {e}", path.display()))?;
+    let mut w = std::io::BufWriter::new(file);
+    w.write_all(CENTROID_MAGIC)?;
+    write_u32(&mut w, k as u32)?;
+    write_u32(&mut w, dim as u32)?;
+    for &v in data {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read the first-level centroid index: `(k, dim, data)`.
+pub fn read_centroids(dir: &Path) -> anyhow::Result<(usize, usize, Vec<f32>)> {
+    let path = centroids_path(dir);
+    let file = std::fs::File::open(&path)
+        .map_err(|e| anyhow::anyhow!("opening {}: {e}", path.display()))?;
+    let mut r = std::io::BufReader::new(file);
+    read_magic(&mut r, CENTROID_MAGIC, "centroid file")?;
+    let k = read_u32(&mut r)? as usize;
+    let dim = read_u32(&mut r)? as usize;
+    let mut bytes = vec![0u8; k * dim * 4];
+    r.read_exact(&mut bytes)?;
+    let data: Vec<f32> = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    Ok((k, dim, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "cagr-storage-{}-{tag}",
+            std::process::id()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn cluster_roundtrip_unpadded() {
+        let dir = tmpdir("round");
+        let mut rng = Rng::new(1);
+        let dim = 8;
+        let ids: Vec<u32> = vec![5, 9, 100, 7];
+        let vecs: Vec<f32> = (0..ids.len() * dim).map(|_| rng.f32()).collect();
+        let written = write_cluster(&dir, 3, dim, &ids, &vecs).unwrap();
+        let block = read_cluster(&dir, 3, 1).unwrap();
+        assert_eq!(block.id, 3);
+        assert_eq!(block.len, 4);
+        assert_eq!(block.dim, dim);
+        assert_eq!(block.doc_ids, ids);
+        assert_eq!(&block.data[..vecs.len()], &vecs[..]);
+        assert_eq!(block.bytes_on_disk, written);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn cluster_padding() {
+        let dir = tmpdir("pad");
+        let dim = 4;
+        let ids: Vec<u32> = (0..10).collect();
+        let vecs = vec![1.5f32; 10 * dim];
+        write_cluster(&dir, 0, dim, &ids, &vecs).unwrap();
+        let block = read_cluster(&dir, 0, 16).unwrap();
+        assert_eq!(block.len, 10);
+        assert_eq!(block.padded_len(), 16);
+        // padding rows are zero
+        assert!(block.data[10 * dim..].iter().all(|&x| x == 0.0));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn cluster_vector_accessor() {
+        let dir = tmpdir("vec");
+        let dim = 3;
+        write_cluster(&dir, 1, dim, &[7, 8], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        let block = read_cluster(&dir, 1, 1).unwrap();
+        assert_eq!(block.vector(0), &[1.0, 2.0, 3.0]);
+        assert_eq!(block.vector(1), &[4.0, 5.0, 6.0]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_wrong_id_and_magic() {
+        let dir = tmpdir("bad");
+        write_cluster(&dir, 2, 2, &[1], &[0.0, 0.0]).unwrap();
+        // Rename so the embedded id mismatches the requested id.
+        std::fs::rename(cluster_path(&dir, 2), cluster_path(&dir, 9)).unwrap();
+        let err = read_cluster(&dir, 9, 1).unwrap_err().to_string();
+        assert!(err.contains("id 2"), "{err}");
+
+        std::fs::write(cluster_path(&dir, 4), b"NOTMAGIC-and-more-bytes").unwrap();
+        let err = read_cluster(&dir, 4, 1).unwrap_err().to_string();
+        assert!(err.contains("magic"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn centroid_roundtrip() {
+        let dir = tmpdir("cen");
+        let mut rng = Rng::new(2);
+        let (k, dim) = (10, 16);
+        let data: Vec<f32> = (0..k * dim).map(|_| rng.f32()).collect();
+        write_centroids(&dir, k, dim, &data).unwrap();
+        let (k2, dim2, data2) = read_centroids(&dir).unwrap();
+        assert_eq!((k2, dim2), (k, dim));
+        assert_eq!(data2, data);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_file_is_clean_error() {
+        let dir = tmpdir("missing");
+        let err = read_cluster(&dir, 42, 1).unwrap_err().to_string();
+        assert!(err.contains("cluster_00042.bin"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

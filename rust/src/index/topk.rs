@@ -1,0 +1,209 @@
+//! Bounded top-k selection by ascending distance.
+//!
+//! A binary max-heap of capacity `k`: the current worst of the best-k sits
+//! at the root and is displaced by any closer candidate. Merging per-cluster
+//! score blocks through this structure is equivalent to the paper's "merge
+//! clusters into a temporary index, then search" (Code 1, steps 4–5) but
+//! never materializes the merged index.
+
+/// One search hit: global document id + squared L2 distance.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Hit {
+    pub doc_id: u32,
+    pub distance: f32,
+}
+
+/// Bounded best-k collector (smallest distances win).
+#[derive(Debug, Clone)]
+pub struct TopK {
+    k: usize,
+    /// Max-heap on distance: `heap[0]` is the worst retained hit.
+    heap: Vec<Hit>,
+}
+
+impl TopK {
+    pub fn new(k: usize) -> TopK {
+        assert!(k > 0, "top-k requires k > 0");
+        TopK { k, heap: Vec::with_capacity(k) }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Current admission threshold: any candidate at or beyond this distance
+    /// cannot enter. `f32::INFINITY` until the collector is full.
+    #[inline]
+    pub fn threshold(&self) -> f32 {
+        if self.heap.len() < self.k {
+            f32::INFINITY
+        } else {
+            self.heap[0].distance
+        }
+    }
+
+    /// Offer one candidate.
+    #[inline]
+    pub fn push(&mut self, doc_id: u32, distance: f32) {
+        if self.heap.len() < self.k {
+            self.heap.push(Hit { doc_id, distance });
+            self.sift_up(self.heap.len() - 1);
+        } else if distance < self.heap[0].distance {
+            self.heap[0] = Hit { doc_id, distance };
+            self.sift_down(0);
+        }
+    }
+
+    /// Offer a whole score block: `distances[j]` belongs to `doc_ids[j]`.
+    pub fn push_block(&mut self, doc_ids: &[u32], distances: &[f32]) {
+        debug_assert_eq!(doc_ids.len(), distances.len());
+        for (&id, &d) in doc_ids.iter().zip(distances) {
+            // Fast reject against the threshold before touching the heap.
+            if d < self.threshold() {
+                self.push(id, d);
+            }
+        }
+    }
+
+    /// Consume into hits sorted by ascending distance (ties by doc id for
+    /// determinism).
+    pub fn into_sorted(mut self) -> Vec<Hit> {
+        self.heap.sort_by(|a, b| {
+            a.distance
+                .partial_cmp(&b.distance)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.doc_id.cmp(&b.doc_id))
+        });
+        self.heap
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if self.heap[i].distance > self.heap[parent].distance {
+                self.heap.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut largest = i;
+            if l < self.heap.len() && self.heap[l].distance > self.heap[largest].distance {
+                largest = l;
+            }
+            if r < self.heap.len() && self.heap[r].distance > self.heap[largest].distance {
+                largest = r;
+            }
+            if largest == i {
+                break;
+            }
+            self.heap.swap(i, largest);
+            i = largest;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn keeps_k_smallest() {
+        let mut tk = TopK::new(3);
+        for (id, d) in [(0, 5.0), (1, 1.0), (2, 4.0), (3, 0.5), (4, 9.0), (5, 2.0)] {
+            tk.push(id, d);
+        }
+        let hits = tk.into_sorted();
+        assert_eq!(
+            hits.iter().map(|h| h.doc_id).collect::<Vec<_>>(),
+            vec![3, 1, 5]
+        );
+        assert_eq!(hits[0].distance, 0.5);
+    }
+
+    #[test]
+    fn fewer_candidates_than_k() {
+        let mut tk = TopK::new(10);
+        tk.push(1, 2.0);
+        tk.push(2, 1.0);
+        let hits = tk.into_sorted();
+        assert_eq!(hits.len(), 2);
+        assert_eq!(hits[0].doc_id, 2);
+    }
+
+    #[test]
+    fn threshold_tracks_worst_retained() {
+        let mut tk = TopK::new(2);
+        assert_eq!(tk.threshold(), f32::INFINITY);
+        tk.push(0, 3.0);
+        assert_eq!(tk.threshold(), f32::INFINITY);
+        tk.push(1, 1.0);
+        assert_eq!(tk.threshold(), 3.0);
+        tk.push(2, 0.5); // displaces 3.0
+        assert_eq!(tk.threshold(), 1.0);
+    }
+
+    #[test]
+    fn matches_full_sort_randomized() {
+        let mut rng = Rng::new(99);
+        for trial in 0..50 {
+            let n = rng.range(1, 500);
+            let k = rng.range(1, 40);
+            let pairs: Vec<(u32, f32)> =
+                (0..n).map(|i| (i as u32, rng.f32() * 100.0)).collect();
+            let mut tk = TopK::new(k);
+            for &(id, d) in &pairs {
+                tk.push(id, d);
+            }
+            let got: Vec<u32> = tk.into_sorted().iter().map(|h| h.doc_id).collect();
+            let mut want = pairs.clone();
+            want.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
+            want.truncate(k);
+            let want: Vec<u32> = want.iter().map(|p| p.0).collect();
+            assert_eq!(got, want, "trial {trial} n={n} k={k}");
+        }
+    }
+
+    #[test]
+    fn push_block_equivalent_to_pushes() {
+        let mut rng = Rng::new(7);
+        let ids: Vec<u32> = (0..300).collect();
+        let ds: Vec<f32> = (0..300).map(|_| rng.f32()).collect();
+        let mut a = TopK::new(10);
+        a.push_block(&ids, &ds);
+        let mut b = TopK::new(10);
+        for (&i, &d) in ids.iter().zip(&ds) {
+            b.push(i, d);
+        }
+        assert_eq!(a.into_sorted(), b.into_sorted());
+    }
+
+    #[test]
+    #[should_panic(expected = "k > 0")]
+    fn zero_k_panics() {
+        TopK::new(0);
+    }
+
+    #[test]
+    fn deterministic_tie_break() {
+        // Equal distances: first arrivals are retained (strict `<` admission),
+        // and the output is ordered by doc id within a tie.
+        let mut tk = TopK::new(2);
+        tk.push(9, 1.0);
+        tk.push(3, 1.0);
+        tk.push(7, 1.0); // not admitted: 1.0 is not < threshold 1.0
+        let got: Vec<u32> = tk.into_sorted().iter().map(|h| h.doc_id).collect();
+        assert_eq!(got, vec![3, 9]);
+    }
+}

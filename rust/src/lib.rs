@@ -1,0 +1,36 @@
+//! # CaGR-RAG
+//!
+//! Production-grade reproduction of *"CaGR-RAG: Context-aware Query Grouping
+//! for Disk-based Vector Search in RAG Systems"* (Jeong et al., 2025) as a
+//! three-layer rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the serving coordinator: dynamic batching,
+//!   context-aware query grouping by Jaccard similarity of cluster-access
+//!   sets, opportunistic cluster prefetching across group switches, a
+//!   disk-based IVF index with pluggable cluster caches, and the EdgeRAG
+//!   baseline.
+//! * **Layer 2 (python/compile/model.py)** — the embedding encoder and
+//!   scoring graphs in JAX, AOT-lowered to HLO text once at build time.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas kernels for the scoring
+//!   hot-spot, verified against a pure-jnp oracle.
+//!
+//! Python never runs on the request path: the rust binary executes the
+//! compiled artifacts through the PJRT CPU client (`runtime`), or a native
+//! rust fallback (`Backend::Native`).
+//!
+//! Start at [`coordinator::Coordinator`] for the serving pipeline,
+//! [`engine::SearchEngine`] for single-query semantics, or
+//! `examples/quickstart.rs` for an end-to-end tour.
+
+pub mod cache;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod harness;
+pub mod index;
+pub mod metrics;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+pub mod util;
+pub mod workload;

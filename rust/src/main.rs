@@ -1,0 +1,273 @@
+//! `cagr` — leader entrypoint + CLI for the CaGR-RAG serving stack.
+//!
+//! Subcommands:
+//!   build-index  --dataset <name|all> [--backend native|pjrt] ...
+//!   serve        --dataset <name> [--addr host:port] [--mode baseline|qg|qgp]
+//!   search       --dataset <name> [--queries N] [--mode ..]   one-shot run
+//!   replay       --trace <file> [--mode ..]                   replay a trace
+//!   record-trace --dataset <name> --out <file>
+//!   info         --dataset <name>                             index summary
+//!
+//! Config: `--config <file.json>` loads a JSON config; any config key can be
+//! overridden with `--set key=value` (repeatable via comma list). Frequent
+//! keys also have first-class flags: --theta, --nprobe, --cache-entries,
+//! --cache-policy, --backend, --disk-profile, --seed.
+
+use cagr::config::Config;
+use cagr::coordinator::{Coordinator, Mode};
+use cagr::engine::SearchEngine;
+use cagr::harness::runner;
+use cagr::metrics::render_table;
+use cagr::server;
+use cagr::util::cli::Args;
+use cagr::workload::{generate_queries, trace, DatasetSpec};
+
+fn main() {
+    let args = Args::from_env();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() -> &'static str {
+    "usage: cagr <build-index|serve|search|replay|record-trace|info> [options]\n\
+     run `cagr <subcommand> --help` conceptually: see README.md for options"
+}
+
+fn load_config(args: &Args) -> anyhow::Result<Config> {
+    let mut cfg = match args.get("config") {
+        Some(path) => Config::from_file(std::path::Path::new(path))?,
+        None => Config::default(),
+    };
+    // First-class flags.
+    for (flag, key) in [
+        ("theta", "theta"),
+        ("nprobe", "nprobe"),
+        ("top-k", "top_k"),
+        ("clusters", "clusters"),
+        ("cache-entries", "cache_entries"),
+        ("cache-policy", "cache_policy"),
+        ("backend", "backend"),
+        ("disk-profile", "disk_profile"),
+        ("encoder-model", "encoder_model"),
+        ("seed", "seed"),
+        ("data-dir", "data_dir"),
+        ("artifacts-dir", "artifacts_dir"),
+    ] {
+        if let Some(v) = args.get(flag) {
+            cfg.set(key, v)?;
+        }
+    }
+    // Generic overrides: --set a=1,b=2
+    if let Some(sets) = args.get("set") {
+        for pair in sets.split(',') {
+            let (k, v) = pair
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("--set expects key=value, got '{pair}'"))?;
+            cfg.set(k.trim(), v.trim())?;
+        }
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn mode_of(args: &Args) -> anyhow::Result<Mode> {
+    Mode::parse(args.get_or("mode", "qgp"))
+}
+
+fn run(args: &Args) -> anyhow::Result<()> {
+    match args.command.as_deref() {
+        Some("build-index") => cmd_build_index(args),
+        Some("serve") => cmd_serve(args),
+        Some("search") => cmd_search(args),
+        Some("replay") => cmd_replay(args),
+        Some("record-trace") => cmd_record_trace(args),
+        Some("info") => cmd_info(args),
+        Some(other) => anyhow::bail!("unknown subcommand '{other}'\n{}", usage()),
+        None => anyhow::bail!("{}", usage()),
+    }
+}
+
+fn datasets_arg(args: &Args) -> anyhow::Result<Vec<DatasetSpec>> {
+    match args.get_or("dataset", "all") {
+        "all" => Ok(DatasetSpec::canonical()),
+        name => Ok(vec![DatasetSpec::by_name(name)?]),
+    }
+}
+
+fn cmd_build_index(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    for spec in datasets_arg(args)? {
+        runner::ensure_dataset(&cfg, &spec)?;
+        let index = cagr::index::IvfIndex::open(&cfg.dataset_dir(spec.name))?;
+        println!(
+            "{}: {} docs, {} clusters, {} on disk ({})",
+            spec.name,
+            index.meta.n_docs,
+            index.meta.clusters,
+            cagr::util::human_bytes(index.total_bytes()),
+            index.meta.embedding,
+        );
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let mode = mode_of(args)?;
+    let specs = datasets_arg(args)?;
+    anyhow::ensure!(specs.len() == 1, "serve requires a single --dataset");
+    let spec = &specs[0];
+    runner::ensure_dataset(&cfg, spec)?;
+    let factory = {
+        let cfg = cfg.clone();
+        let spec = spec.clone();
+        move || -> anyhow::Result<Coordinator> {
+            let engine = SearchEngine::open(&cfg, &spec)?;
+            Ok(Coordinator::new(engine, mode))
+        }
+    };
+    let server_cfg = server::ServerConfig {
+        addr: args.get_or("addr", "127.0.0.1:7471").to_string(),
+        batch_window: std::time::Duration::from_millis(args.get_u64("batch-window-ms", 10)?),
+        batch_max: cfg.batch_max,
+    };
+    let handle = server::start(factory, server_cfg)?;
+    println!(
+        "cagr serving {} on {} (mode={}, cache={}x{}, theta={})",
+        spec.name,
+        handle.addr,
+        mode.name(),
+        cfg.cache_policy.name(),
+        cfg.cache_entries,
+        cfg.theta
+    );
+    println!("press ctrl-c to stop");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_search(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let mode = mode_of(args)?;
+    let specs = datasets_arg(args)?;
+    anyhow::ensure!(specs.len() == 1, "search requires a single --dataset");
+    let spec = &specs[0];
+    runner::ensure_dataset(&cfg, spec)?;
+    let n = args.get_usize("queries", 200)?.min(spec.n_queries);
+    let warmup = args.get_usize("warmup", 50)?;
+    let queries = generate_queries(spec);
+    let result = runner::run_workload(&cfg, spec, mode, &queries[..n], warmup)?;
+    print_run_summary(spec.name, &result);
+    Ok(())
+}
+
+fn cmd_replay(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let mode = mode_of(args)?;
+    let path = args
+        .get("trace")
+        .ok_or_else(|| anyhow::anyhow!("replay requires --trace <file>"))?;
+    let (dataset, queries) = trace::replay(std::path::Path::new(path))?;
+    let spec = DatasetSpec::by_name(&dataset)?;
+    runner::ensure_dataset(&cfg, &spec)?;
+    let warmup = args.get_usize("warmup", 0)?;
+    let result = runner::run_workload(&cfg, &spec, mode, &queries, warmup)?;
+    print_run_summary(&format!("{dataset} (trace)"), &result);
+    Ok(())
+}
+
+fn cmd_record_trace(args: &Args) -> anyhow::Result<()> {
+    let specs = datasets_arg(args)?;
+    anyhow::ensure!(specs.len() == 1, "record-trace requires a single --dataset");
+    let spec = &specs[0];
+    let out = args
+        .get("out")
+        .ok_or_else(|| anyhow::anyhow!("record-trace requires --out <file>"))?;
+    let queries = generate_queries(spec);
+    trace::record(std::path::Path::new(out), spec.name, &queries)?;
+    println!("wrote {} queries to {out}", queries.len());
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    let cfg = load_config(args)?;
+    let mut rows = Vec::new();
+    for spec in datasets_arg(args)? {
+        let dir = cfg.dataset_dir(spec.name);
+        match cagr::index::IvfIndex::open(&dir) {
+            Ok(index) => {
+                let min = index.meta.cluster_bytes.iter().min().copied().unwrap_or(0);
+                let max = index.meta.cluster_bytes.iter().max().copied().unwrap_or(0);
+                rows.push(vec![
+                    spec.name.to_string(),
+                    index.meta.n_docs.to_string(),
+                    index.meta.clusters.to_string(),
+                    cagr::util::human_bytes(index.total_bytes()),
+                    format!(
+                        "{}..{}",
+                        cagr::util::human_bytes(min),
+                        cagr::util::human_bytes(max)
+                    ),
+                    index.meta.embedding.clone(),
+                ]);
+            }
+            Err(_) => {
+                rows.push(vec![
+                    spec.name.to_string(),
+                    "-".into(),
+                    "-".into(),
+                    "not built".into(),
+                    "-".into(),
+                    "-".into(),
+                ]);
+            }
+        }
+    }
+    print!(
+        "{}",
+        render_table(
+            &["dataset", "docs", "clusters", "total", "cluster sizes", "embedding"],
+            &rows
+        )
+    );
+    Ok(())
+}
+
+fn print_run_summary(name: &str, result: &runner::RunResult) {
+    println!(
+        "{name} mode={} queries={} (warmup {})",
+        result.mode.name(),
+        result.reports.len(),
+        result.warmup
+    );
+    println!(
+        "  latency: mean={:.4}s p50={:.4}s p99={:.4}s max={:.4}s",
+        result.recorder.mean(),
+        result.recorder.p50(),
+        result.recorder.p99(),
+        result.recorder.max()
+    );
+    let s = result.cache_stats;
+    println!(
+        "  cache:   hits={} misses={} hit-ratio={:.1}% evictions={} prefetch-inserts={}",
+        s.hits,
+        s.misses,
+        100.0 * s.hit_ratio(),
+        s.evictions,
+        s.prefetch_inserts
+    );
+    if result.groups_total > 0 {
+        println!(
+            "  groups:  {} total, grouping cost {:.2}ms",
+            result.groups_total,
+            result.grouping_cost.as_secs_f64() * 1e3
+        );
+    }
+}

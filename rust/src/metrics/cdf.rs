@@ -1,0 +1,90 @@
+//! Empirical CDF helpers for the latency figures (Fig. 2a, Fig. 6a).
+
+/// Empirical CDF of `samples`: sorted `(value, cumulative_fraction)` points,
+/// one per sample, with fraction in (0, 1].
+pub fn empirical(samples: &[f64]) -> Vec<(f64, f64)> {
+    if samples.is_empty() {
+        return Vec::new();
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = sorted.len() as f64;
+    sorted
+        .into_iter()
+        .enumerate()
+        .map(|(i, v)| (v, (i + 1) as f64 / n))
+        .collect()
+}
+
+/// Downsample a CDF to at most `points` evenly spaced quantiles (keeps the
+/// first and last point; used to print compact figure series).
+pub fn downsample(cdf: &[(f64, f64)], points: usize) -> Vec<(f64, f64)> {
+    if cdf.len() <= points || points < 2 {
+        return cdf.to_vec();
+    }
+    let n = cdf.len();
+    (0..points)
+        .map(|i| {
+            let idx = if i == points - 1 {
+                n - 1
+            } else {
+                i * (n - 1) / (points - 1)
+            };
+            cdf[idx]
+        })
+        .collect()
+}
+
+/// Value at which the CDF reaches fraction `q` (inverse CDF / quantile).
+pub fn quantile(cdf: &[(f64, f64)], q: f64) -> Option<f64> {
+    cdf.iter().find(|(_, frac)| *frac >= q).map(|(v, _)| *v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empirical_basic() {
+        let c = empirical(&[3.0, 1.0, 2.0]);
+        assert_eq!(c.len(), 3);
+        assert_eq!(c[0], (1.0, 1.0 / 3.0));
+        assert_eq!(c[2], (3.0, 1.0));
+        // monotone in both coordinates
+        for w in c.windows(2) {
+            assert!(w[0].0 <= w[1].0 && w[0].1 < w[1].1);
+        }
+    }
+
+    #[test]
+    fn empirical_empty() {
+        assert!(empirical(&[]).is_empty());
+    }
+
+    #[test]
+    fn downsample_keeps_ends() {
+        let c = empirical(&(0..1000).map(|i| i as f64).collect::<Vec<_>>());
+        let d = downsample(&c, 10);
+        assert_eq!(d.len(), 10);
+        assert_eq!(d[0], c[0]);
+        assert_eq!(d[9], c[999]);
+        for w in d.windows(2) {
+            assert!(w[0].0 <= w[1].0);
+        }
+    }
+
+    #[test]
+    fn downsample_small_input_passthrough() {
+        let c = empirical(&[1.0, 2.0]);
+        assert_eq!(downsample(&c, 10), c);
+    }
+
+    #[test]
+    fn quantile_lookup() {
+        let c = empirical(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(quantile(&c, 0.5), Some(2.0));
+        assert_eq!(quantile(&c, 1.0), Some(4.0));
+        assert_eq!(quantile(&c, 0.01), Some(1.0));
+        assert_eq!(quantile(&[], 0.5), None);
+    }
+}

@@ -1,0 +1,288 @@
+//! Metrics (S9): latency recording, percentiles/CDFs, per-query search
+//! reports, and CSV/JSON export — everything the figure-regeneration
+//! benches print comes through here.
+
+pub mod cdf;
+
+use std::time::Duration;
+
+use crate::util::json::{obj, Json};
+
+/// Everything measured about one query's search (the row unit of Figs. 2b,
+/// 4, 5).
+#[derive(Debug, Clone, Default)]
+pub struct SearchReport {
+    pub query_id: usize,
+    /// End-to-end: encode -> first-level scan -> fetch -> score -> top-k.
+    pub latency: Duration,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// Bytes read from disk for this query (demand misses only).
+    pub bytes_read: u64,
+    /// Clusters this query probed.
+    pub nprobe: usize,
+    /// Simulated portion of the latency (debugging the disk model).
+    pub simulated: Duration,
+}
+
+impl SearchReport {
+    pub fn hit_ratio(&self) -> f64 {
+        let total = self.cache_hits + self.cache_misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / total as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("query_id", self.query_id.into()),
+            ("latency_us", Json::Num(self.latency.as_micros() as f64)),
+            ("hits", Json::Num(self.cache_hits as f64)),
+            ("misses", Json::Num(self.cache_misses as f64)),
+            ("bytes_read", Json::Num(self.bytes_read as f64)),
+            ("nprobe", self.nprobe.into()),
+        ])
+    }
+}
+
+/// A set of latency samples with percentile/summary queries.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyRecorder {
+    samples: Vec<f64>, // seconds
+}
+
+impl LatencyRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.samples.push(d.as_secs_f64());
+    }
+
+    pub fn record_secs(&mut self, secs: f64) {
+        self.samples.push(secs);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Percentile by linear interpolation between closest ranks;
+    /// `p` in [0, 100].
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = self.samples.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        percentile_of_sorted(&sorted, p)
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(0.0, f64::max)
+    }
+
+    /// The empirical CDF as `(latency_secs, cumulative_fraction)` points.
+    pub fn cdf(&self) -> Vec<(f64, f64)> {
+        cdf::empirical(&self.samples)
+    }
+
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
+    pub fn summary_json(&self) -> Json {
+        obj(vec![
+            ("count", self.len().into()),
+            ("mean_s", Json::Num(self.mean())),
+            ("p50_s", Json::Num(self.p50())),
+            ("p95_s", Json::Num(self.percentile(95.0))),
+            ("p99_s", Json::Num(self.p99())),
+            ("max_s", Json::Num(self.max())),
+        ])
+    }
+}
+
+pub(crate) fn percentile_of_sorted(sorted: &[f64], p: f64) -> f64 {
+    debug_assert!(!sorted.is_empty());
+    let p = p.clamp(0.0, 100.0);
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = rank - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+/// Render rows as an aligned plain-text table (the bench harness's output
+/// format; mirrors how the paper's tables read).
+pub fn render_table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let mut out = String::new();
+    let fmt_row = |cells: Vec<String>, widths: &[usize]| -> String {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>width$}", c, width = widths[i]))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    out.push_str(&fmt_row(headers.iter().map(|s| s.to_string()).collect(), &widths));
+    out.push('\n');
+    out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+    out.push('\n');
+    for row in rows {
+        out.push_str(&fmt_row(row.clone(), &widths));
+        out.push('\n');
+    }
+    out
+}
+
+/// Write rows as CSV (for plotting outside).
+pub fn write_csv(
+    path: &std::path::Path,
+    headers: &[&str],
+    rows: &[Vec<String>],
+) -> anyhow::Result<()> {
+    use std::io::Write;
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{}", headers.join(","))?;
+    for row in rows {
+        writeln!(f, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(vals: &[f64]) -> LatencyRecorder {
+        let mut r = LatencyRecorder::new();
+        for &v in vals {
+            r.record_secs(v);
+        }
+        r
+    }
+
+    #[test]
+    fn mean_and_percentiles() {
+        let r = rec(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert!((r.mean() - 3.0).abs() < 1e-12);
+        assert!((r.p50() - 3.0).abs() < 1e-12);
+        assert!((r.percentile(0.0) - 1.0).abs() < 1e-12);
+        assert!((r.percentile(100.0) - 5.0).abs() < 1e-12);
+        // linear interpolation between ranks
+        assert!((r.percentile(25.0) - 2.0).abs() < 1e-12);
+        assert!((r.percentile(10.0) - 1.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn p99_tracks_tail() {
+        // 100 samples, one outlier: interpolated p99 sits between the
+        // 98th and 99th order statistics and must feel the outlier.
+        let mut vals = vec![0.1; 99];
+        vals.push(10.0);
+        let r = rec(&vals);
+        assert!(r.p99() > r.p50() * 1.5, "p99={} p50={}", r.p99(), r.p50());
+        assert!((r.percentile(100.0) - 10.0).abs() < 1e-12);
+        assert!(r.p50() < 0.2);
+    }
+
+    #[test]
+    fn empty_recorder_is_zero() {
+        let r = LatencyRecorder::new();
+        assert_eq!(r.mean(), 0.0);
+        assert_eq!(r.p99(), 0.0);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn record_duration() {
+        let mut r = LatencyRecorder::new();
+        r.record(Duration::from_millis(250));
+        assert!((r.mean() - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn report_hit_ratio() {
+        let rep = SearchReport {
+            cache_hits: 3,
+            cache_misses: 1,
+            ..Default::default()
+        };
+        assert!((rep.hit_ratio() - 0.75).abs() < 1e-12);
+        assert_eq!(SearchReport::default().hit_ratio(), 0.0);
+    }
+
+    #[test]
+    fn table_render_aligns() {
+        let t = render_table(
+            &["name", "value"],
+            &[
+                vec!["a".into(), "1".into()],
+                vec!["long-name".into(), "12345".into()],
+            ],
+        );
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("name"));
+        assert!(lines[3].contains("long-name"));
+    }
+
+    #[test]
+    fn csv_roundtrip_shape() {
+        let dir = std::env::temp_dir().join(format!("cagr-metrics-{}", std::process::id()));
+        let path = dir.join("t.csv");
+        write_csv(&path, &["a", "b"], &[vec!["1".into(), "2".into()]]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2\n");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn summary_json_has_fields() {
+        let r = rec(&[0.1, 0.2, 0.3]);
+        let j = r.summary_json();
+        assert_eq!(j.get("count").unwrap().as_usize(), Some(3));
+        assert!(j.get("p99_s").unwrap().as_f64().unwrap() > 0.0);
+    }
+}

@@ -1,0 +1,281 @@
+//! Artifact manifest: the machine-readable index `python/compile/aot.py`
+//! writes next to the HLO files. The runtime validates the manifest's
+//! geometry against this crate's compiled-in `config::geometry` constants
+//! before compiling anything — a drifted python/rust pair fails loudly at
+//! startup instead of mis-shaping buffers at serve time.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::config::geometry;
+use crate::util::json::Json;
+
+/// One artifact's interchange signature.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactEntry {
+    pub file: String,
+    /// Input shapes, row-major, as (shape, dtype) pairs.
+    pub inputs: Vec<(Vec<usize>, String)>,
+    pub output: (Vec<usize>, String),
+}
+
+/// Parsed manifest.json.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    /// model name -> batch width -> encoder artifact.
+    pub encoders: BTreeMap<String, BTreeMap<usize, ArtifactEntry>>,
+    /// "centroid_scan" / "scorer".
+    pub computations: BTreeMap<String, ArtifactEntry>,
+}
+
+fn parse_shape(v: &Json) -> anyhow::Result<(Vec<usize>, String)> {
+    let shape = v
+        .get("shape")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("artifact entry missing 'shape'"))?
+        .iter()
+        .map(|x| x.as_usize().ok_or_else(|| anyhow::anyhow!("non-integer dim")))
+        .collect::<anyhow::Result<Vec<usize>>>()?;
+    let dtype = v
+        .get("dtype")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow::anyhow!("artifact entry missing 'dtype'"))?
+        .to_string();
+    Ok((shape, dtype))
+}
+
+fn parse_entry(v: &Json) -> anyhow::Result<ArtifactEntry> {
+    let file = v
+        .get("file")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow::anyhow!("artifact entry missing 'file'"))?
+        .to_string();
+    let inputs = v
+        .get("inputs")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow::anyhow!("artifact entry missing 'inputs'"))?
+        .iter()
+        .map(parse_shape)
+        .collect::<anyhow::Result<Vec<_>>>()?;
+    let output = parse_shape(
+        v.get("output")
+            .ok_or_else(|| anyhow::anyhow!("artifact entry missing 'output'"))?,
+    )?;
+    Ok(ArtifactEntry { file, inputs, output })
+}
+
+impl Manifest {
+    /// Load and validate `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!(
+                "reading {} ({e}); run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        let json = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest.json: {e}"))?;
+
+        // Geometry cross-check (python constants vs rust constants).
+        let geo = json
+            .get("geometry")
+            .ok_or_else(|| anyhow::anyhow!("manifest missing 'geometry'"))?;
+        let check = |key: &str, want: usize| -> anyhow::Result<()> {
+            let got = geo
+                .get(key)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow::anyhow!("manifest geometry missing '{key}'"))?;
+            anyhow::ensure!(
+                got == want,
+                "artifact geometry '{key}' = {got} but this binary expects {want}; \
+                 re-run `make artifacts` against matching sources"
+            );
+            Ok(())
+        };
+        check("vocab", geometry::VOCAB)?;
+        check("seq_len", geometry::SEQ_LEN)?;
+        check("embed_dim", geometry::EMBED_DIM)?;
+        check("centroid_pad", geometry::CENTROID_PAD)?;
+        check("score_q", geometry::SCORE_Q)?;
+        check("score_n", geometry::SCORE_N)?;
+
+        let mut encoders = BTreeMap::new();
+        for (model, batches) in json
+            .get("encoders")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing 'encoders'"))?
+        {
+            let mut ladder = BTreeMap::new();
+            for (b, entry) in batches
+                .as_obj()
+                .ok_or_else(|| anyhow::anyhow!("encoder '{model}' not an object"))?
+            {
+                let width: usize = b
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad batch key '{b}'"))?;
+                ladder.insert(width, parse_entry(entry)?);
+            }
+            anyhow::ensure!(!ladder.is_empty(), "encoder '{model}' has no batches");
+            encoders.insert(model.clone(), ladder);
+        }
+
+        let mut computations = BTreeMap::new();
+        for (name, entry) in json
+            .get("computations")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing 'computations'"))?
+        {
+            computations.insert(name.clone(), parse_entry(entry)?);
+        }
+        for required in ["centroid_scan", "scorer"] {
+            anyhow::ensure!(
+                computations.contains_key(required),
+                "manifest missing computation '{required}'"
+            );
+        }
+
+        // Every referenced file must exist.
+        let man = Manifest { dir: dir.to_path_buf(), encoders, computations };
+        for entry in man.all_entries() {
+            let p = man.dir.join(&entry.file);
+            anyhow::ensure!(p.exists(), "artifact file missing: {}", p.display());
+        }
+        Ok(man)
+    }
+
+    pub fn all_entries(&self) -> Vec<&ArtifactEntry> {
+        self.encoders
+            .values()
+            .flat_map(|l| l.values())
+            .chain(self.computations.values())
+            .collect()
+    }
+
+    /// The encoder batch ladder for a model, ascending.
+    pub fn encoder_batches(&self, model: &str) -> anyhow::Result<Vec<usize>> {
+        Ok(self
+            .encoders
+            .get(model)
+            .ok_or_else(|| anyhow::anyhow!("no encoder artifacts for model '{model}'"))?
+            .keys()
+            .copied()
+            .collect())
+    }
+
+    pub fn encoder_entry(&self, model: &str, batch: usize) -> anyhow::Result<&ArtifactEntry> {
+        self.encoders
+            .get(model)
+            .and_then(|l| l.get(&batch))
+            .ok_or_else(|| anyhow::anyhow!("no encoder artifact for '{model}' b{batch}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fixture(dir: &Path, geometry_overrides: &[(&str, usize)]) {
+        std::fs::create_dir_all(dir).unwrap();
+        let mut geo: BTreeMap<&str, usize> = [
+            ("vocab", geometry::VOCAB),
+            ("seq_len", geometry::SEQ_LEN),
+            ("struct_prefix", geometry::STRUCT_PREFIX),
+            ("embed_dim", geometry::EMBED_DIM),
+            ("hidden_dim", geometry::HIDDEN_DIM),
+            ("centroid_pad", geometry::CENTROID_PAD),
+            ("score_q", geometry::SCORE_Q),
+            ("score_n", geometry::SCORE_N),
+        ]
+        .into();
+        for (k, v) in geometry_overrides {
+            geo.insert(k, *v);
+        }
+        let geo_json = geo
+            .iter()
+            .map(|(k, v)| format!("\"{k}\":{v}"))
+            .collect::<Vec<_>>()
+            .join(",");
+        let manifest = format!(
+            r#"{{
+              "geometry": {{{geo_json}}},
+              "encoders": {{
+                "minilm-sim": {{
+                  "8": {{"file": "enc8.hlo.txt",
+                         "inputs": [{{"shape": [8, 24], "dtype": "int32"}}],
+                         "output": {{"shape": [8, 64], "dtype": "float32"}}}}
+                }}
+              }},
+              "computations": {{
+                "centroid_scan": {{"file": "scan.hlo.txt",
+                   "inputs": [{{"shape": [8,64], "dtype": "float32"}},
+                              {{"shape": [128,64], "dtype": "float32"}}],
+                   "output": {{"shape": [8,128], "dtype": "float32"}}}},
+                "scorer": {{"file": "scorer.hlo.txt",
+                   "inputs": [{{"shape": [8,64], "dtype": "float32"}},
+                              {{"shape": [2048,64], "dtype": "float32"}}],
+                   "output": {{"shape": [8,2048], "dtype": "float32"}}}}
+              }}
+            }}"#
+        );
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        for f in ["enc8.hlo.txt", "scan.hlo.txt", "scorer.hlo.txt"] {
+            std::fs::write(dir.join(f), "HloModule stub").unwrap();
+        }
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("cagr-manifest-{}-{tag}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn loads_valid_manifest() {
+        let dir = tmpdir("ok");
+        write_fixture(&dir, &[]);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.encoder_batches("minilm-sim").unwrap(), vec![8]);
+        assert!(m.computations.contains_key("scorer"));
+        let e = m.encoder_entry("minilm-sim", 8).unwrap();
+        assert_eq!(e.inputs[0].0, vec![8, 24]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_geometry_drift() {
+        let dir = tmpdir("drift");
+        write_fixture(&dir, &[("embed_dim", 999)]);
+        let err = Manifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("embed_dim"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_missing_file() {
+        let dir = tmpdir("missing");
+        write_fixture(&dir, &[]);
+        std::fs::remove_file(dir.join("scorer.hlo.txt")).unwrap();
+        let err = Manifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("scorer.hlo.txt"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_mentions_make() {
+        let dir = tmpdir("nomanifest");
+        std::fs::create_dir_all(&dir).unwrap();
+        let err = Manifest::load(&dir).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        let dir = tmpdir("nomodel");
+        write_fixture(&dir, &[]);
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.encoder_entry("gpt-sim", 8).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

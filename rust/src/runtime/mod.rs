@@ -1,0 +1,407 @@
+//! Runtime (S6): executes the AOT-compiled HLO artifacts via the PJRT CPU
+//! client (`xla` crate), plus a bit-compatible native rust fallback.
+//!
+//! Load path: `HloModuleProto::from_text_file` -> `XlaComputation::from_proto`
+//! -> `client.compile` — once per artifact at startup; serving only calls
+//! `execute`. HLO *text* is the interchange format (xla_extension 0.5.1
+//! rejects jax>=0.5 serialized protos; see python/compile/aot.py).
+//!
+//! Shape contracts (validated against the manifest at load):
+//!   encoder:        i32[B, SEQ_LEN]            -> f32[B, EMBED_DIM]
+//!   centroid_scan:  f32[SCORE_Q, EMBED_DIM] x f32[CENTROID_PAD, EMBED_DIM]
+//!                     -> f32[SCORE_Q, CENTROID_PAD]
+//!   scorer:         f32[SCORE_Q, EMBED_DIM] x f32[SCORE_N, EMBED_DIM]
+//!                     -> f32[SCORE_Q, SCORE_N]
+//!
+//! Padding conventions: query groups are padded to SCORE_Q with zero rows
+//! (distance from a zero row is finite and discarded by the caller);
+//! cluster blocks are padded to multiples of SCORE_N with zero vectors and
+//! sliced back to the true length; centroids are padded to CENTROID_PAD
+//! with `CENTROID_PAD_FILL` coordinates that can never win a nearest race.
+
+pub mod manifest;
+
+use std::collections::BTreeMap;
+
+use crate::config::geometry::{CENTROID_PAD, EMBED_DIM, SCORE_N, SCORE_Q, SEQ_LEN};
+use crate::config::Backend;
+use crate::index::{distance, ClusterBlock, IvfIndex};
+use crate::workload::{DatasetSpec, LatentSpace, Query};
+
+pub use manifest::Manifest;
+
+/// Compiled-artifact runtime over the PJRT CPU client.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    encoders: BTreeMap<(String, usize), xla::PjRtLoadedExecutable>,
+    centroid_scan: xla::PjRtLoadedExecutable,
+    scorer: xla::PjRtLoadedExecutable,
+}
+
+impl PjrtRuntime {
+    /// Compile every artifact in `artifacts_dir` (startup cost only).
+    pub fn load(artifacts_dir: &std::path::Path) -> anyhow::Result<PjrtRuntime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("creating PJRT CPU client: {e:?}"))?;
+
+        let compile = |file: &str| -> anyhow::Result<xla::PjRtLoadedExecutable> {
+            let path = artifacts_dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow::anyhow!("parsing {}: {e:?}", path.display()))?;
+            client
+                .compile(&xla::XlaComputation::from_proto(&proto))
+                .map_err(|e| anyhow::anyhow!("compiling {}: {e:?}", path.display()))
+        };
+
+        let mut encoders = BTreeMap::new();
+        for (model, ladder) in &manifest.encoders {
+            for (&batch, entry) in ladder {
+                encoders.insert((model.clone(), batch), compile(&entry.file)?);
+            }
+        }
+        let centroid_scan = compile(&manifest.computations["centroid_scan"].file)?;
+        let scorer = compile(&manifest.computations["scorer"].file)?;
+
+        Ok(PjrtRuntime { client, manifest, encoders, centroid_scan, scorer })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn run2(
+        exe: &xla::PjRtLoadedExecutable,
+        a: xla::Literal,
+        b: xla::Literal,
+        what: &str,
+    ) -> anyhow::Result<Vec<f32>> {
+        let result = exe
+            .execute::<xla::Literal>(&[a, b])
+            .map_err(|e| anyhow::anyhow!("executing {what}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching {what} result: {e:?}"))?;
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow::anyhow!("{what}: expected 1-tuple: {e:?}"))?;
+        out.to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("{what}: result dtype: {e:?}"))
+    }
+
+    fn run1(
+        exe: &xla::PjRtLoadedExecutable,
+        a: xla::Literal,
+        what: &str,
+    ) -> anyhow::Result<Vec<f32>> {
+        let result = exe
+            .execute::<xla::Literal>(&[a])
+            .map_err(|e| anyhow::anyhow!("executing {what}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching {what} result: {e:?}"))?;
+        let out = result
+            .to_tuple1()
+            .map_err(|e| anyhow::anyhow!("{what}: expected 1-tuple: {e:?}"))?;
+        out.to_vec::<f32>()
+            .map_err(|e| anyhow::anyhow!("{what}: result dtype: {e:?}"))
+    }
+
+    /// Encode exactly one ladder-width batch of token rows.
+    fn encode_exact(&self, model: &str, tokens: &[i32], batch: usize) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(tokens.len() == batch * SEQ_LEN, "token buffer shape");
+        let exe = self
+            .encoders
+            .get(&(model.to_string(), batch))
+            .ok_or_else(|| anyhow::anyhow!("no compiled encoder '{model}' b{batch}"))?;
+        let lit = xla::Literal::vec1(tokens)
+            .reshape(&[batch as i64, SEQ_LEN as i64])
+            .map_err(|e| anyhow::anyhow!("reshaping tokens: {e:?}"))?;
+        let out = Self::run1(exe, lit, "encoder")?;
+        anyhow::ensure!(out.len() == batch * EMBED_DIM, "encoder output shape");
+        Ok(out)
+    }
+
+    /// Encode `n` token rows using the batch ladder: repeatedly run the
+    /// largest artifact that fits, padding the tail with zero rows.
+    pub fn encode_many(&self, model: &str, rows: &[Vec<i32>]) -> anyhow::Result<Vec<f32>> {
+        let ladder = self.manifest.encoder_batches(model)?;
+        let mut out = Vec::with_capacity(rows.len() * EMBED_DIM);
+        let mut i = 0;
+        while i < rows.len() {
+            let remaining = rows.len() - i;
+            // Largest batch <= remaining, else the smallest batch (padded).
+            let batch = ladder
+                .iter()
+                .rev()
+                .find(|&&b| b <= remaining)
+                .or_else(|| ladder.first())
+                .copied()
+                .unwrap();
+            let take = remaining.min(batch);
+            let mut buf = vec![0i32; batch * SEQ_LEN];
+            for (r, row) in rows[i..i + take].iter().enumerate() {
+                anyhow::ensure!(row.len() == SEQ_LEN, "query {} token length", i + r);
+                buf[r * SEQ_LEN..(r + 1) * SEQ_LEN].copy_from_slice(row);
+            }
+            let encoded = self.encode_exact(model, &buf, batch)?;
+            out.extend_from_slice(&encoded[..take * EMBED_DIM]);
+            i += take;
+        }
+        Ok(out)
+    }
+
+    /// First-level scan: SCORE_Q padded queries x CENTROID_PAD padded
+    /// centroids -> distances.
+    pub fn centroid_scan(&self, queries: &[f32], centroids: &[f32]) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(queries.len() == SCORE_Q * EMBED_DIM, "scan query shape");
+        anyhow::ensure!(centroids.len() == CENTROID_PAD * EMBED_DIM, "scan centroid shape");
+        let q = xla::Literal::vec1(queries)
+            .reshape(&[SCORE_Q as i64, EMBED_DIM as i64])
+            .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))?;
+        let c = xla::Literal::vec1(centroids)
+            .reshape(&[CENTROID_PAD as i64, EMBED_DIM as i64])
+            .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))?;
+        let out = Self::run2(&self.centroid_scan, q, c, "centroid_scan")?;
+        anyhow::ensure!(out.len() == SCORE_Q * CENTROID_PAD, "scan output shape");
+        Ok(out)
+    }
+
+    /// Second-level scoring of one SCORE_N-row chunk.
+    pub fn score_chunk(&self, queries: &[f32], chunk: &[f32]) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(queries.len() == SCORE_Q * EMBED_DIM, "score query shape");
+        anyhow::ensure!(chunk.len() == SCORE_N * EMBED_DIM, "score chunk shape");
+        let q = xla::Literal::vec1(queries)
+            .reshape(&[SCORE_Q as i64, EMBED_DIM as i64])
+            .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))?;
+        let v = xla::Literal::vec1(chunk)
+            .reshape(&[SCORE_N as i64, EMBED_DIM as i64])
+            .map_err(|e| anyhow::anyhow!("reshape: {e:?}"))?;
+        let out = Self::run2(&self.scorer, q, v, "scorer")?;
+        anyhow::ensure!(out.len() == SCORE_Q * SCORE_N, "scorer output shape");
+        Ok(out)
+    }
+}
+
+/// The compute backend the engine drives: query/document embedding,
+/// first-level centroid scan, and second-level scoring. `Native` and `Pjrt`
+/// are bit-comparable (asserted in rust/tests/backend_parity.rs).
+pub enum Compute {
+    Native { latent: LatentSpace },
+    Pjrt { runtime: PjrtRuntime, model: String },
+}
+
+impl Compute {
+    /// Construct for a config + dataset spec.
+    pub fn new(
+        backend: Backend,
+        artifacts_dir: &std::path::Path,
+        encoder_model: &str,
+        spec: &DatasetSpec,
+    ) -> anyhow::Result<Compute> {
+        match backend {
+            Backend::Native => Ok(Compute::Native { latent: LatentSpace::new(spec) }),
+            Backend::Pjrt => Ok(Compute::Pjrt {
+                runtime: PjrtRuntime::load(artifacts_dir)?,
+                model: encoder_model.to_string(),
+            }),
+        }
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        match self {
+            Compute::Native { .. } => "native",
+            Compute::Pjrt { .. } => "pjrt",
+        }
+    }
+
+    /// Embed a slice of queries -> flat `n x EMBED_DIM`.
+    pub fn embed_queries(&self, spec: &DatasetSpec, queries: &[Query]) -> anyhow::Result<Vec<f32>> {
+        match self {
+            Compute::Native { latent } => {
+                let mut out = Vec::with_capacity(queries.len() * EMBED_DIM);
+                for q in queries {
+                    out.extend_from_slice(&latent.query_embedding(spec, q));
+                }
+                Ok(out)
+            }
+            Compute::Pjrt { runtime, model } => {
+                let rows: Vec<Vec<i32>> = queries.iter().map(|q| q.tokens.clone()).collect();
+                runtime.encode_many(model, &rows)
+            }
+        }
+    }
+
+    /// Embed documents `[lo, hi)` for the index build -> flat rows.
+    pub fn embed_docs(&self, spec: &DatasetSpec, lo: usize, hi: usize) -> anyhow::Result<Vec<f32>> {
+        match self {
+            Compute::Native { latent } => {
+                let mut out = Vec::with_capacity((hi - lo) * EMBED_DIM);
+                for doc in lo..hi {
+                    out.extend_from_slice(&latent.doc_embedding(spec, doc));
+                }
+                Ok(out)
+            }
+            Compute::Pjrt { runtime, model } => {
+                let rows: Vec<Vec<i32>> = (lo..hi)
+                    .map(|doc| crate::workload::generate_doc_tokens(spec, doc).1)
+                    .collect();
+                runtime.encode_many(model, &rows)
+            }
+        }
+    }
+
+    /// First-level lookup for up to SCORE_Q queries at once: for each query
+    /// (flat `nq x dim`), the `nprobe` nearest cluster ids, closest first.
+    pub fn nearest_centroids(
+        &self,
+        index: &IvfIndex,
+        queries: &[f32],
+        nq: usize,
+        nprobe: usize,
+    ) -> anyhow::Result<Vec<Vec<u32>>> {
+        let dim = index.meta.dim;
+        debug_assert_eq!(queries.len(), nq * dim);
+        match self {
+            Compute::Native { .. } => Ok((0..nq)
+                .map(|i| index.nearest_centroids(&queries[i * dim..(i + 1) * dim], nprobe))
+                .collect()),
+            Compute::Pjrt { runtime, .. } => {
+                let padded_centroids = index.padded_centroids();
+                let k = index.meta.clusters;
+                let mut out = Vec::with_capacity(nq);
+                let mut i = 0;
+                while i < nq {
+                    let take = (nq - i).min(SCORE_Q);
+                    let mut qbuf = vec![0f32; SCORE_Q * EMBED_DIM];
+                    qbuf[..take * dim].copy_from_slice(&queries[i * dim..(i + take) * dim]);
+                    let dists = runtime.centroid_scan(&qbuf, &padded_centroids)?;
+                    for r in 0..take {
+                        let row = &dists[r * CENTROID_PAD..r * CENTROID_PAD + k];
+                        let mut ids: Vec<u32> = (0..k as u32).collect();
+                        ids.sort_by(|&a, &b| {
+                            row[a as usize]
+                                .partial_cmp(&row[b as usize])
+                                .unwrap_or(std::cmp::Ordering::Equal)
+                                .then(a.cmp(&b))
+                        });
+                        ids.truncate(nprobe.min(k));
+                        out.push(ids);
+                    }
+                    i += take;
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    /// Score up to SCORE_Q queries against one cluster block. Returns a flat
+    /// `nq x block.len` distance matrix (padding sliced away).
+    pub fn score_block(
+        &self,
+        queries: &[f32],
+        nq: usize,
+        block: &ClusterBlock,
+    ) -> anyhow::Result<Vec<f32>> {
+        let dim = block.dim;
+        debug_assert_eq!(queries.len(), nq * dim);
+        anyhow::ensure!(nq <= SCORE_Q, "score_block: nq {nq} > SCORE_Q {SCORE_Q}");
+        match self {
+            Compute::Native { .. } => {
+                let mut out = vec![0f32; nq * block.len];
+                distance::l2_many_to_many(
+                    queries,
+                    &block.data[..block.len * dim],
+                    dim,
+                    &mut out,
+                );
+                Ok(out)
+            }
+            Compute::Pjrt { runtime, .. } => {
+                let mut qbuf = vec![0f32; SCORE_Q * EMBED_DIM];
+                qbuf[..nq * dim].copy_from_slice(queries);
+                let mut out = vec![0f32; nq * block.len];
+                let padded = block.padded_len();
+                debug_assert_eq!(padded % SCORE_N, 0);
+                for (c, chunk) in block.data.chunks_exact(SCORE_N * dim).enumerate() {
+                    let dists = runtime.score_chunk(&qbuf, chunk)?;
+                    let base = c * SCORE_N;
+                    if base >= block.len {
+                        break; // purely padding chunk
+                    }
+                    let valid = (block.len - base).min(SCORE_N);
+                    for q in 0..nq {
+                        out[q * block.len + base..q * block.len + base + valid]
+                            .copy_from_slice(&dists[q * SCORE_N..q * SCORE_N + valid]);
+                    }
+                }
+                Ok(out)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn block_from(data: Vec<f32>, dim: usize, len: usize) -> ClusterBlock {
+        let padded = crate::util::round_up(len, SCORE_N);
+        let mut padded_data = vec![0f32; padded * dim];
+        padded_data[..len * dim].copy_from_slice(&data[..len * dim]);
+        ClusterBlock {
+            id: 0,
+            len,
+            dim,
+            doc_ids: (0..len as u32).collect(),
+            data: padded_data,
+            bytes_on_disk: 0,
+        }
+    }
+
+    #[test]
+    fn native_score_block_matches_reference() {
+        let spec = DatasetSpec::tiny(3);
+        let compute = Compute::Native { latent: LatentSpace::new(&spec) };
+        let mut rng = Rng::new(5);
+        let dim = EMBED_DIM;
+        let nq = 3;
+        let len = 100;
+        let queries: Vec<f32> = (0..nq * dim).map(|_| rng.normal() as f32).collect();
+        let data: Vec<f32> = (0..len * dim).map(|_| rng.normal() as f32).collect();
+        let block = block_from(data.clone(), dim, len);
+        let out = compute.score_block(&queries, nq, &block).unwrap();
+        assert_eq!(out.len(), nq * len);
+        for q in 0..nq {
+            for j in 0..len {
+                let want =
+                    distance::l2(&queries[q * dim..(q + 1) * dim], &data[j * dim..(j + 1) * dim]);
+                assert!((out[q * len + j] - want).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn native_embed_queries_matches_latent() {
+        let spec = DatasetSpec::tiny(4);
+        let latent = LatentSpace::new(&spec);
+        let compute = Compute::Native { latent: LatentSpace::new(&spec) };
+        let queries = crate::workload::generate_queries(&spec);
+        let flat = compute.embed_queries(&spec, &queries[..4]).unwrap();
+        for (i, q) in queries[..4].iter().enumerate() {
+            assert_eq!(
+                &flat[i * EMBED_DIM..(i + 1) * EMBED_DIM],
+                latent.query_embedding(&spec, q).as_slice()
+            );
+        }
+    }
+
+    #[test]
+    fn score_block_rejects_oversized_group() {
+        let spec = DatasetSpec::tiny(5);
+        let compute = Compute::Native { latent: LatentSpace::new(&spec) };
+        let block = block_from(vec![0f32; 4 * EMBED_DIM], EMBED_DIM, 4);
+        let queries = vec![0f32; (SCORE_Q + 1) * EMBED_DIM];
+        assert!(compute.score_block(&queries, SCORE_Q + 1, &block).is_err());
+    }
+}

@@ -1,0 +1,426 @@
+//! TCP serving front-end (S10): the stand-in for the paper's Kafka ingress.
+//!
+//! Protocol: JSON-lines over TCP. One request object per line:
+//!   {"query_id": 7, "template": 3, "topic": 12, "tokens": [..24 ints..]}
+//! One response object per line (order within a connection matches request
+//! order):
+//!   {"query_id": 7, "latency_us": 812, "group": 2,
+//!    "hits": [{"doc": 123, "distance": 0.4}, ...]}
+//!
+//! Connection handlers feed a shared queue; a single dispatch thread
+//! gathers requests into arrival batches (up to `batch_max` or
+//! `batch_window`, mirroring §4.1's batching interval) and runs them
+//! through the coordinator. The coordinator — and with it the PJRT
+//! runtime — stays on one thread; handlers only do I/O.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::Coordinator;
+use crate::util::json::{obj, Json};
+use crate::workload::Query;
+
+/// Front-end tunables.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub addr: String,
+    /// Max time the batcher waits to fill a batch.
+    pub batch_window: Duration,
+    /// Max queries per batch (paper: 100).
+    pub batch_max: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            addr: "127.0.0.1:7471".to_string(),
+            batch_window: Duration::from_millis(10),
+            batch_max: 100,
+        }
+    }
+}
+
+struct Request {
+    query: Query,
+    reply: Sender<String>,
+}
+
+/// Running server handle; dropping it shuts the server down.
+pub struct ServerHandle {
+    pub addr: std::net::SocketAddr,
+    shutdown: Arc<std::sync::atomic::AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+    dispatch_thread: Option<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        self.shutdown.store(true, std::sync::atomic::Ordering::SeqCst);
+        // Unblock the acceptor with a dummy connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        if let Some(t) = self.dispatch_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Start serving on `cfg.addr` (use port 0 for an ephemeral port).
+///
+/// Takes a *factory* rather than a coordinator because the PJRT client is
+/// not `Send`: the coordinator (and with it the compiled executables) is
+/// constructed on — and never leaves — the dispatch thread. Construction
+/// errors are propagated back through the startup handshake.
+pub fn start<F>(coordinator_factory: F, cfg: ServerConfig) -> anyhow::Result<ServerHandle>
+where
+    F: FnOnce() -> anyhow::Result<Coordinator> + Send + 'static,
+{
+    let listener = TcpListener::bind(&cfg.addr)
+        .map_err(|e| anyhow::anyhow!("binding {}: {e}", cfg.addr))?;
+    let addr = listener.local_addr()?;
+    let shutdown = Arc::new(std::sync::atomic::AtomicBool::new(false));
+
+    let (req_tx, req_rx) = std::sync::mpsc::channel::<Request>();
+
+    // Dispatch thread: build the coordinator, signal readiness, then
+    // batch + search until shutdown.
+    let dispatch_shutdown = Arc::clone(&shutdown);
+    let window = cfg.batch_window;
+    let batch_max = cfg.batch_max;
+    let (ready_tx, ready_rx) = std::sync::mpsc::channel::<anyhow::Result<()>>();
+    let dispatch_thread = std::thread::Builder::new()
+        .name("cagr-dispatch".to_string())
+        .spawn(move || {
+            let mut coordinator = match coordinator_factory() {
+                Ok(c) => {
+                    let _ = ready_tx.send(Ok(()));
+                    c
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(e));
+                    return;
+                }
+            };
+            dispatch_loop(&mut coordinator, req_rx, window, batch_max, dispatch_shutdown)
+        })
+        .expect("spawn dispatch thread");
+    ready_rx
+        .recv()
+        .map_err(|_| anyhow::anyhow!("dispatch thread died during startup"))??;
+
+    // Accept thread: one handler thread per connection.
+    let accept_shutdown = Arc::clone(&shutdown);
+    let accept_thread = std::thread::Builder::new()
+        .name("cagr-accept".to_string())
+        .spawn(move || {
+            for stream in listener.incoming() {
+                if accept_shutdown.load(std::sync::atomic::Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = stream else { continue };
+                let tx = req_tx.clone();
+                std::thread::Builder::new()
+                    .name("cagr-conn".to_string())
+                    .spawn(move || handle_connection(stream, tx))
+                    .ok();
+            }
+        })
+        .expect("spawn accept thread");
+
+    Ok(ServerHandle {
+        addr,
+        shutdown,
+        accept_thread: Some(accept_thread),
+        dispatch_thread: Some(dispatch_thread),
+    })
+}
+
+fn dispatch_loop(
+    coordinator: &mut Coordinator,
+    req_rx: Receiver<Request>,
+    window: Duration,
+    batch_max: usize,
+    shutdown: Arc<std::sync::atomic::AtomicBool>,
+) {
+    let mut batch_sizes: Vec<usize> = Vec::new();
+    loop {
+        if shutdown.load(std::sync::atomic::Ordering::SeqCst) {
+            break;
+        }
+        // Block for the first request, then gather until window/batch_max.
+        let first = match req_rx.recv_timeout(Duration::from_millis(50)) {
+            Ok(r) => r,
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+        };
+        let mut pending = vec![first];
+        let deadline = Instant::now() + window;
+        while pending.len() < batch_max {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match req_rx.recv_timeout(deadline - now) {
+                Ok(r) => pending.push(r),
+                Err(_) => break,
+            }
+        }
+
+        let queries: Vec<Query> = pending.iter().map(|r| r.query.clone()).collect();
+        batch_sizes.push(queries.len());
+        match coordinator.process_batch(&queries) {
+            Ok((outcomes, _stats)) => {
+                for outcome in outcomes {
+                    // Route each outcome back to the connection that sent it.
+                    if let Some(req) =
+                        pending.iter().find(|r| r.query.id == outcome.report.query_id)
+                    {
+                        let hits = Json::Arr(
+                            outcome
+                                .hits
+                                .iter()
+                                .map(|h| {
+                                    obj(vec![
+                                        ("doc", Json::Num(h.doc_id as f64)),
+                                        ("distance", Json::Num(h.distance as f64)),
+                                    ])
+                                })
+                                .collect(),
+                        );
+                        let resp = obj(vec![
+                            ("query_id", outcome.report.query_id.into()),
+                            (
+                                "latency_us",
+                                Json::Num(outcome.report.latency.as_micros() as f64),
+                            ),
+                            ("group", outcome.group.into()),
+                            ("hits", hits),
+                        ]);
+                        let _ = req.reply.send(resp.dump());
+                    }
+                }
+            }
+            Err(e) => {
+                let msg = obj(vec![("error", format!("{e}").into())]).dump();
+                for req in &pending {
+                    let _ = req.reply.send(msg.clone());
+                }
+            }
+        }
+    }
+    // Shutdown diagnostics (stderr): demand cache behaviour + batch shape.
+    let stats = coordinator.engine.cache_stats();
+    let mean_batch = if batch_sizes.is_empty() {
+        0.0
+    } else {
+        batch_sizes.iter().sum::<usize>() as f64 / batch_sizes.len() as f64
+    };
+    eprintln!(
+        "[cagr-server] mode={} batches={} mean-batch={:.1} cache-hit={:.1}% \
+         (hits={} misses={} prefetch-inserts={})",
+        coordinator.mode.name(),
+        batch_sizes.len(),
+        mean_batch,
+        100.0 * stats.hit_ratio(),
+        stats.hits,
+        stats.misses,
+        stats.prefetch_inserts,
+    );
+}
+
+fn handle_connection(stream: TcpStream, req_tx: Sender<Request>) {
+    let peer_reader = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let mut writer = stream;
+    let reader = BufReader::new(peer_reader);
+    let (reply_tx, reply_rx) = std::sync::mpsc::channel::<String>();
+
+    // Writer side runs independently so the connection is fully pipelined:
+    // a client may have many requests in flight, which is what lets the
+    // dispatch thread form real arrival batches (paper §4.1). Responses
+    // are matched by `query_id`, not by order.
+    let writer_thread = std::thread::Builder::new()
+        .name("cagr-conn-writer".to_string())
+        .spawn(move || {
+            while let Ok(resp) = reply_rx.recv() {
+                if writeln!(writer, "{resp}").is_err() {
+                    break;
+                }
+            }
+        })
+        .expect("spawn connection writer");
+
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        match parse_request(&line) {
+            Ok(query) => {
+                if req_tx.send(Request { query, reply: reply_tx.clone() }).is_err() {
+                    break;
+                }
+            }
+            Err(e) => {
+                let msg = obj(vec![("error", format!("{e}").into())]).dump();
+                if reply_tx.send(msg).is_err() {
+                    break;
+                }
+            }
+        }
+    }
+    drop(reply_tx);
+    let _ = writer_thread.join();
+}
+
+fn parse_request(line: &str) -> anyhow::Result<Query> {
+    let v = Json::parse(line).map_err(|e| anyhow::anyhow!("bad request json: {e}"))?;
+    let field = |name: &str| -> anyhow::Result<usize> {
+        v.get(name)
+            .and_then(Json::as_usize)
+            .ok_or_else(|| anyhow::anyhow!("request missing '{name}'"))
+    };
+    let tokens = match v.get("tokens").and_then(Json::as_arr) {
+        Some(arr) => arr
+            .iter()
+            .map(|t| {
+                t.as_f64()
+                    .map(|f| f as i32)
+                    .ok_or_else(|| anyhow::anyhow!("non-numeric token"))
+            })
+            .collect::<anyhow::Result<Vec<i32>>>()?,
+        None => Vec::new(),
+    };
+    Ok(Query {
+        id: field("query_id")?,
+        template: field("template").unwrap_or(0),
+        topic: field("topic").unwrap_or(0),
+        tokens,
+    })
+}
+
+/// Line-protocol client.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+/// One parsed response.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub query_id: usize,
+    pub latency_us: u64,
+    pub group: usize,
+    pub hits: Vec<(u32, f32)>,
+}
+
+impl Client {
+    pub fn connect(addr: std::net::SocketAddr) -> anyhow::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { reader, writer: stream })
+    }
+
+    /// Synchronous request/response (single query in flight).
+    pub fn search(&mut self, query: &Query) -> anyhow::Result<Response> {
+        self.send(query)?;
+        self.recv()
+    }
+
+    /// Pipelined send: many requests may be outstanding; match responses
+    /// by `query_id` (the connection is full-duplex, responses arrive in
+    /// completion order).
+    pub fn send(&mut self, query: &Query) -> anyhow::Result<()> {
+        let req = obj(vec![
+            ("query_id", query.id.into()),
+            ("template", query.template.into()),
+            ("topic", query.topic.into()),
+            (
+                "tokens",
+                Json::Arr(query.tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
+            ),
+        ]);
+        writeln!(self.writer, "{}", req.dump())?;
+        Ok(())
+    }
+
+    /// Receive the next response off the connection.
+    pub fn recv(&mut self) -> anyhow::Result<Response> {
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        anyhow::ensure!(!line.is_empty(), "connection closed");
+        let v = Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("bad response: {e}"))?;
+        if let Some(err) = v.get("error").and_then(Json::as_str) {
+            anyhow::bail!("server error: {err}");
+        }
+        Ok(Response {
+            query_id: v
+                .get("query_id")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow::anyhow!("response missing query_id"))?,
+            latency_us: v.get("latency_us").and_then(Json::as_f64).unwrap_or(0.0) as u64,
+            group: v.get("group").and_then(Json::as_usize).unwrap_or(0),
+            hits: v
+                .get("hits")
+                .and_then(Json::as_arr)
+                .map(|arr| {
+                    arr.iter()
+                        .filter_map(|h| {
+                            Some((
+                                h.get("doc")?.as_f64()? as u32,
+                                h.get("distance")?.as_f64()? as f32,
+                            ))
+                        })
+                        .collect()
+                })
+                .unwrap_or_default(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_request_full() {
+        let q = parse_request(
+            r#"{"query_id": 5, "template": 1, "topic": 2, "tokens": [1,2,3]}"#,
+        )
+        .unwrap();
+        assert_eq!(q.id, 5);
+        assert_eq!(q.template, 1);
+        assert_eq!(q.tokens, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn parse_request_minimal() {
+        let q = parse_request(r#"{"query_id": 9}"#).unwrap();
+        assert_eq!(q.id, 9);
+        assert!(q.tokens.is_empty());
+    }
+
+    #[test]
+    fn parse_request_rejects_garbage() {
+        assert!(parse_request("not json").is_err());
+        assert!(parse_request(r#"{"no_id": 1}"#).is_err());
+    }
+}

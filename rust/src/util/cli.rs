@@ -1,0 +1,151 @@
+//! Tiny command-line parser (offline build: no clap).
+//!
+//! Supports the subset the `cagr` binary needs: one positional subcommand,
+//! `--flag`, `--key value` and `--key=value` options, plus typed accessors
+//! with defaults. Unknown options are collected so each subcommand can
+//! reject them with a helpful message.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First positional argument (the subcommand), if any.
+    pub command: Option<String>,
+    /// Remaining positional arguments.
+    pub positional: Vec<String>,
+    /// `--key value` / `--key=value` options (last occurrence wins).
+    opts: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Args {
+        let mut args = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|nxt| !nxt.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    args.opts.insert(body.to_string(), v);
+                } else {
+                    args.flags.push(body.to_string());
+                }
+            } else if args.command.is_none() {
+                args.command = Some(tok);
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        args
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects a number, got '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got '{v}'")),
+        }
+    }
+
+    /// All option keys + flags seen (for unknown-option checks).
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.opts.keys().map(|s| s.as_str()).chain(self.flags.iter().map(|s| s.as_str()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_positionals() {
+        let a = parse("serve extra1 extra2");
+        assert_eq!(a.command.as_deref(), Some("serve"));
+        assert_eq!(a.positional, vec!["extra1", "extra2"]);
+    }
+
+    #[test]
+    fn key_value_both_styles() {
+        let a = parse("run --alpha 3 --beta=x");
+        assert_eq!(a.get("alpha"), Some("3"));
+        assert_eq!(a.get("beta"), Some("x"));
+    }
+
+    #[test]
+    fn bare_flags() {
+        let a = parse("run --verbose --n 5 --dry-run");
+        assert!(a.flag("verbose"));
+        assert!(a.flag("dry-run"));
+        assert!(!a.flag("n"));
+        assert_eq!(a.get("n"), Some("5"));
+    }
+
+    #[test]
+    fn flag_followed_by_option() {
+        let a = parse("run --quiet --out file.txt");
+        assert!(a.flag("quiet"));
+        assert_eq!(a.get("out"), Some("file.txt"));
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = parse("x --n 7 --theta 0.5");
+        assert_eq!(a.get_usize("n", 1).unwrap(), 7);
+        assert_eq!(a.get_usize("missing", 9).unwrap(), 9);
+        assert!((a.get_f64("theta", 0.0).unwrap() - 0.5).abs() < 1e-12);
+        assert!(a.get_usize("theta", 0).is_err());
+    }
+
+    #[test]
+    fn last_occurrence_wins() {
+        let a = parse("x --n 1 --n 2");
+        assert_eq!(a.get("n"), Some("2"));
+    }
+}

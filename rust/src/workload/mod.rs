@@ -1,0 +1,317 @@
+//! Synthetic dataset + query workload generation (DESIGN.md §2, S2).
+//!
+//! The paper builds IVF indexes over three BEIR corpora (nq, hotpotqa,
+//! fever) and issues that corpus's own queries through an embedding model.
+//! We cannot ship BEIR, so this module synthesizes corpora and query streams
+//! that reproduce the two phenomena CaGR-RAG exploits:
+//!
+//!  * **Topic structure** — documents are drawn from a Gaussian mixture over
+//!    `n_topics` unit-sphere centers, so k-means clusters align with topics
+//!    and cluster populations (and hence file sizes) are non-uniform.
+//!  * **Structural query locality** — queries are a *template ⊕ topic*
+//!    composition: a structural prefix shared by many queries plus topic
+//!    content. Same-template/same-topic queries map to overlapping cluster
+//!    sets; arrival order is randomized, so adjacent queries are dissimilar
+//!    while non-adjacent ones overlap (exactly the paper's Fig. 1 texture).
+//!
+//! Two embedding paths exist (`config::Backend`):
+//!  * `Pjrt` — token sequences are pushed through the AOT-compiled encoder
+//!    artifact (the honest path; used by index build + serving examples).
+//!  * `Native` — embeddings are synthesized directly in embedding space from
+//!    the same template/topic latents (fast path for tests and benches).
+
+pub mod tokens;
+pub mod trace;
+pub mod traffic;
+
+use crate::config::geometry::EMBED_DIM;
+use crate::util::rng::Rng;
+
+/// Specification of one synthetic dataset (the `*-sim` stand-ins for the
+/// paper's Table 1 corpora).
+#[derive(Debug, Clone)]
+pub struct DatasetSpec {
+    pub name: &'static str,
+    /// Paper corpus this stands in for (documentation only).
+    pub stands_for: &'static str,
+    pub n_docs: usize,
+    pub n_queries: usize,
+    pub n_topics: usize,
+    pub n_templates: usize,
+    /// Zipf exponent for topic popularity — higher = more skewed cluster
+    /// access (hotpotqa-sim is most skewed; the paper saw its "most
+    /// distinct pattern" there).
+    pub topic_zipf_s: f64,
+    /// Embedding-space noise for documents / queries (Native path).
+    pub doc_noise: f32,
+    pub query_noise: f32,
+    /// Weight of the structural (template) component in query embeddings
+    /// (Native path; the Pjrt path gets this from the encoder's
+    /// structure gain instead).
+    pub struct_weight: f32,
+    pub seed: u64,
+}
+
+impl DatasetSpec {
+    /// The three canonical datasets mirroring the paper's Table 1.
+    /// Record counts keep the paper's nq : hotpotqa : fever ratio
+    /// (2.68 M : 5.42 M : 5.23 M) at roughly 1/45 scale.
+    pub fn canonical() -> Vec<DatasetSpec> {
+        vec![
+            DatasetSpec {
+                name: "nq-sim",
+                stands_for: "nq (BEIR)",
+                n_docs: 60_000,
+                n_queries: 400,
+                n_topics: 32,
+                n_templates: 16,
+                topic_zipf_s: 0.9,
+                doc_noise: 0.35,
+                query_noise: 0.30,
+                struct_weight: 1.0,
+                seed: 0xD5_0001,
+            },
+            DatasetSpec {
+                name: "hotpotqa-sim",
+                stands_for: "hotpotqa (BEIR)",
+                n_docs: 121_000,
+                n_queries: 400,
+                n_topics: 24,
+                n_templates: 16,
+                topic_zipf_s: 1.15,
+                doc_noise: 0.30,
+                query_noise: 0.25,
+                struct_weight: 1.2,
+                seed: 0xD5_0002,
+            },
+            DatasetSpec {
+                name: "fever-sim",
+                stands_for: "fever (BEIR)",
+                n_docs: 117_000,
+                n_queries: 400,
+                n_topics: 48,
+                n_templates: 16,
+                topic_zipf_s: 1.0,
+                doc_noise: 0.40,
+                query_noise: 0.35,
+                struct_weight: 0.9,
+                seed: 0xD5_0003,
+            },
+        ]
+    }
+
+    pub fn by_name(name: &str) -> anyhow::Result<DatasetSpec> {
+        Self::canonical()
+            .into_iter()
+            .find(|d| d.name == name)
+            .ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown dataset '{name}' (expected one of: {})",
+                    Self::canonical()
+                        .iter()
+                        .map(|d| d.name)
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                )
+            })
+    }
+
+    /// A tiny spec for unit tests (fast to build in-memory).
+    pub fn tiny(seed: u64) -> DatasetSpec {
+        DatasetSpec {
+            name: "tiny",
+            stands_for: "unit tests",
+            n_docs: 2_000,
+            n_queries: 64,
+            n_topics: 8,
+            n_templates: 4,
+            topic_zipf_s: 1.0,
+            doc_noise: 0.3,
+            query_noise: 0.3,
+            struct_weight: 1.0,
+            seed,
+        }
+    }
+}
+
+/// One query of a workload: latent factors + token form (+ lazily attached
+/// embedding, depending on the backend).
+#[derive(Debug, Clone)]
+pub struct Query {
+    pub id: usize,
+    pub template: usize,
+    pub topic: usize,
+    pub tokens: Vec<i32>,
+}
+
+/// The latent embedding-space model shared by both generation paths:
+/// unit-norm topic centers and template directions derived from the spec
+/// seed only (never from generation order).
+pub struct LatentSpace {
+    pub topic_centers: Vec<Vec<f32>>,
+    pub template_dirs: Vec<Vec<f32>>,
+}
+
+fn random_unit(rng: &mut Rng) -> Vec<f32> {
+    let mut v: Vec<f32> = (0..EMBED_DIM).map(|_| rng.normal() as f32).collect();
+    let norm = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-12);
+    v.iter_mut().for_each(|x| *x /= norm);
+    v
+}
+
+fn normalize(v: &mut [f32]) {
+    let norm = v.iter().map(|x| x * x).sum::<f32>().sqrt().max(1e-12);
+    v.iter_mut().for_each(|x| *x /= norm);
+}
+
+impl LatentSpace {
+    pub fn new(spec: &DatasetSpec) -> LatentSpace {
+        let root = Rng::new(spec.seed);
+        let mut topic_rng = root.derive(1);
+        let mut template_rng = root.derive(2);
+        LatentSpace {
+            topic_centers: (0..spec.n_topics).map(|_| random_unit(&mut topic_rng)).collect(),
+            template_dirs: (0..spec.n_templates)
+                .map(|_| random_unit(&mut template_rng))
+                .collect(),
+        }
+    }
+
+    /// Native-path document embedding: topic center + noise, unit-norm.
+    pub fn doc_embedding(&self, spec: &DatasetSpec, doc_id: usize) -> Vec<f32> {
+        let mut rng = Rng::new(spec.seed).derive(3).derive(doc_id as u64);
+        let topic = rng.zipf(spec.n_topics, spec.topic_zipf_s);
+        let mut v: Vec<f32> = self.topic_centers[topic]
+            .iter()
+            .map(|&c| c + rng.normal_f32(0.0, spec.doc_noise) / (EMBED_DIM as f32).sqrt())
+            .collect();
+        normalize(&mut v);
+        v
+    }
+
+    /// Native-path query embedding from latent factors.
+    pub fn query_embedding(&self, spec: &DatasetSpec, q: &Query) -> Vec<f32> {
+        let mut rng = Rng::new(spec.seed).derive(4).derive(q.id as u64);
+        let t = &self.template_dirs[q.template];
+        let z = &self.topic_centers[q.topic];
+        let mut v: Vec<f32> = (0..EMBED_DIM)
+            .map(|i| {
+                spec.struct_weight * t[i]
+                    + z[i]
+                    + rng.normal_f32(0.0, spec.query_noise) / (EMBED_DIM as f32).sqrt()
+            })
+            .collect();
+        normalize(&mut v);
+        v
+    }
+}
+
+/// Generate the full query stream for a dataset: latent factors drawn
+/// deterministically, arrival order randomized (paper §2.4: adjacent
+/// queries are typically dissimilar).
+pub fn generate_queries(spec: &DatasetSpec) -> Vec<Query> {
+    let root = Rng::new(spec.seed);
+    let mut rng = root.derive(5);
+    (0..spec.n_queries)
+        .map(|id| {
+            let template = rng.range(0, spec.n_templates);
+            let topic = rng.zipf(spec.n_topics, spec.topic_zipf_s);
+            let tokens = tokens::query_tokens(spec, id, template, topic);
+            Query { id, template, topic, tokens }
+        })
+        .collect()
+}
+
+/// Generate document token sequences (Pjrt path) in bulk for index build.
+pub fn generate_doc_tokens(spec: &DatasetSpec, doc_id: usize) -> (usize, Vec<i32>) {
+    let mut rng = Rng::new(spec.seed).derive(3).derive(doc_id as u64);
+    let topic = rng.zipf(spec.n_topics, spec.topic_zipf_s);
+    (topic, tokens::doc_tokens(spec, doc_id, topic))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canonical_datasets_present() {
+        let names: Vec<&str> = DatasetSpec::canonical().iter().map(|d| d.name).collect();
+        assert_eq!(names, vec!["nq-sim", "hotpotqa-sim", "fever-sim"]);
+        // record-count ratios follow the paper's Table 1 ordering
+        let d = DatasetSpec::canonical();
+        assert!(d[0].n_docs < d[2].n_docs && d[2].n_docs < d[1].n_docs);
+    }
+
+    #[test]
+    fn by_name_errors_helpfully() {
+        let err = DatasetSpec::by_name("msmarco").unwrap_err().to_string();
+        assert!(err.contains("nq-sim"), "{err}");
+    }
+
+    #[test]
+    fn embeddings_unit_norm_and_deterministic() {
+        let spec = DatasetSpec::tiny(7);
+        let latent = LatentSpace::new(&spec);
+        let a = latent.doc_embedding(&spec, 12);
+        let b = latent.doc_embedding(&spec, 12);
+        assert_eq!(a, b);
+        let norm: f32 = a.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn distinct_docs_distinct_embeddings() {
+        let spec = DatasetSpec::tiny(7);
+        let latent = LatentSpace::new(&spec);
+        assert_ne!(latent.doc_embedding(&spec, 0), latent.doc_embedding(&spec, 1));
+    }
+
+    #[test]
+    fn queries_deterministic_and_in_range() {
+        let spec = DatasetSpec::tiny(9);
+        let q1 = generate_queries(&spec);
+        let q2 = generate_queries(&spec);
+        assert_eq!(q1.len(), spec.n_queries);
+        for (a, b) in q1.iter().zip(&q2) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.template, b.template);
+            assert_eq!(a.topic, b.topic);
+            assert_eq!(a.tokens, b.tokens);
+            assert!(a.template < spec.n_templates);
+            assert!(a.topic < spec.n_topics);
+        }
+    }
+
+    #[test]
+    fn topic_popularity_is_skewed() {
+        let spec = DatasetSpec::by_name("hotpotqa-sim").unwrap();
+        let queries = generate_queries(&spec);
+        let mut counts = vec![0usize; spec.n_topics];
+        for q in &queries {
+            counts[q.topic] += 1;
+        }
+        let max = *counts.iter().max().unwrap();
+        let min = *counts.iter().min().unwrap();
+        assert!(max > 3 * (min + 1), "expected zipf skew, got max={max} min={min}");
+    }
+
+    #[test]
+    fn same_template_topic_queries_are_close() {
+        // The structural-locality property that motivates grouping.
+        let spec = DatasetSpec::tiny(11);
+        let latent = LatentSpace::new(&spec);
+        let mk = |id, template, topic| Query {
+            id,
+            template,
+            topic,
+            tokens: vec![],
+        };
+        let dist = |a: &[f32], b: &[f32]| -> f32 {
+            a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+        };
+        let base = latent.query_embedding(&spec, &mk(0, 1, 2));
+        let same = latent.query_embedding(&spec, &mk(1, 1, 2));
+        let other = latent.query_embedding(&spec, &mk(2, 3, 5));
+        assert!(dist(&base, &same) < dist(&base, &other));
+    }
+}

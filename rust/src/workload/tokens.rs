@@ -1,0 +1,123 @@
+//! Token-sequence synthesis for the Pjrt (encoder) path.
+//!
+//! Vocabulary layout (must stay inside `geometry::VOCAB` = 512):
+//!   [0, 128)    — structural template tokens: template `t` owns the 8-token
+//!                 span `[8t, 8t+8)`; a query's structural prefix is the
+//!                 first `STRUCT_PREFIX` tokens of its template's span.
+//!   [128, 512)  — content tokens: topic `z` has a 24-token pool anchored at
+//!                 `128 + (z * 29) % 384` (29 is coprime with 384 so pools
+//!                 of different topics interleave without aliasing).
+//!
+//! Documents carry only content tokens; queries carry a template prefix plus
+//! content. The encoder's positional structure gain (python model.py)
+//! amplifies the prefix, reproducing the paper's observation that embedding
+//! models place structurally similar queries close together.
+
+use crate::config::geometry::{SEQ_LEN, STRUCT_PREFIX, VOCAB};
+use crate::util::rng::Rng;
+
+use super::DatasetSpec;
+
+const CONTENT_BASE: usize = 128;
+const CONTENT_SPAN: usize = VOCAB - CONTENT_BASE;
+const TOPIC_POOL: usize = 24;
+/// Probability that a content position draws from the topic pool rather
+/// than the whole content vocabulary.
+const TOPIC_AFFINITY: f64 = 0.8;
+
+fn topic_pool_token(topic: usize, slot: usize) -> i32 {
+    let anchor = CONTENT_BASE + (topic * 29) % CONTENT_SPAN;
+    let offset = (anchor - CONTENT_BASE + slot) % CONTENT_SPAN;
+    (CONTENT_BASE + offset) as i32
+}
+
+fn content_token(rng: &mut Rng, topic: usize) -> i32 {
+    if rng.f64() < TOPIC_AFFINITY {
+        topic_pool_token(topic, rng.range(0, TOPIC_POOL))
+    } else {
+        (CONTENT_BASE + rng.range(0, CONTENT_SPAN)) as i32
+    }
+}
+
+/// Template `t`'s structural prefix tokens.
+pub fn template_prefix(template: usize) -> Vec<i32> {
+    (0..STRUCT_PREFIX).map(|i| (8 * template + i) as i32).collect()
+}
+
+/// Token sequence of one query: template prefix ⊕ topic content.
+pub fn query_tokens(spec: &DatasetSpec, id: usize, template: usize, topic: usize) -> Vec<i32> {
+    debug_assert!(8 * template + STRUCT_PREFIX <= CONTENT_BASE);
+    let mut rng = Rng::new(spec.seed).derive(6).derive(id as u64);
+    let mut toks = template_prefix(template);
+    while toks.len() < SEQ_LEN {
+        toks.push(content_token(&mut rng, topic));
+    }
+    toks
+}
+
+/// Token sequence of one document: topic content only.
+pub fn doc_tokens(spec: &DatasetSpec, doc_id: usize, topic: usize) -> Vec<i32> {
+    let mut rng = Rng::new(spec.seed).derive(7).derive(doc_id as u64);
+    (0..SEQ_LEN).map(|_| content_token(&mut rng, topic)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokens_in_vocab_range() {
+        let spec = DatasetSpec::tiny(1);
+        for id in 0..50 {
+            let q = query_tokens(&spec, id, id % spec.n_templates, id % spec.n_topics);
+            assert_eq!(q.len(), SEQ_LEN);
+            assert!(q.iter().all(|&t| (0..VOCAB as i32).contains(&t)));
+            let d = doc_tokens(&spec, id, id % spec.n_topics);
+            assert_eq!(d.len(), SEQ_LEN);
+            assert!(d.iter().all(|&t| (CONTENT_BASE as i32..VOCAB as i32).contains(&t)));
+        }
+    }
+
+    #[test]
+    fn prefix_identifies_template() {
+        let spec = DatasetSpec::tiny(1);
+        let a = query_tokens(&spec, 0, 3, 1);
+        let b = query_tokens(&spec, 9, 3, 5);
+        let c = query_tokens(&spec, 1, 4, 1);
+        assert_eq!(a[..STRUCT_PREFIX], b[..STRUCT_PREFIX]);
+        assert_ne!(a[..STRUCT_PREFIX], c[..STRUCT_PREFIX]);
+    }
+
+    #[test]
+    fn template_spans_stay_clear_of_content() {
+        for t in 0..16 {
+            for tok in template_prefix(t) {
+                assert!((tok as usize) < CONTENT_BASE);
+            }
+        }
+    }
+
+    #[test]
+    fn topic_pools_differ() {
+        let spec = DatasetSpec::tiny(1);
+        let a = doc_tokens(&spec, 0, 0);
+        let b = doc_tokens(&spec, 0, 4);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn deterministic_per_id() {
+        let spec = DatasetSpec::tiny(2);
+        assert_eq!(query_tokens(&spec, 7, 1, 2), query_tokens(&spec, 7, 1, 2));
+        assert_eq!(doc_tokens(&spec, 7, 2), doc_tokens(&spec, 7, 2));
+    }
+
+    #[test]
+    fn topic_affinity_dominates_content() {
+        let spec = DatasetSpec::tiny(3);
+        let toks = doc_tokens(&spec, 42, 5);
+        let pool: Vec<i32> = (0..TOPIC_POOL).map(|s| topic_pool_token(5, s)).collect();
+        let in_pool = toks.iter().filter(|t| pool.contains(t)).count();
+        assert!(in_pool >= SEQ_LEN / 2, "in_pool={in_pool}");
+    }
+}

@@ -1,0 +1,178 @@
+//! Query-trace record/replay (S14).
+//!
+//! A trace file is JSON-lines: one object per query in arrival order, plus a
+//! header line describing the generating spec. Traces let experiments be
+//! replayed exactly (including across config changes that don't alter the
+//! workload) and let users bring their own query streams.
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+use crate::util::json::{obj, Json};
+
+use super::Query;
+
+const TRACE_VERSION: usize = 1;
+
+/// Write a query stream to a JSON-lines trace file.
+pub fn record(path: &Path, dataset: &str, queries: &[Query]) -> anyhow::Result<()> {
+    let mut file = std::fs::File::create(path)
+        .map_err(|e| anyhow::anyhow!("creating trace {}: {e}", path.display()))?;
+    let header = obj(vec![
+        ("trace_version", TRACE_VERSION.into()),
+        ("dataset", dataset.into()),
+        ("count", queries.len().into()),
+    ]);
+    writeln!(file, "{}", header.dump())?;
+    for q in queries {
+        let line = obj(vec![
+            ("id", q.id.into()),
+            ("template", q.template.into()),
+            ("topic", q.topic.into()),
+            (
+                "tokens",
+                Json::Arr(q.tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
+            ),
+        ]);
+        writeln!(file, "{}", line.dump())?;
+    }
+    Ok(())
+}
+
+/// Read a trace file back; returns `(dataset_name, queries)`.
+pub fn replay(path: &Path) -> anyhow::Result<(String, Vec<Query>)> {
+    let file = std::fs::File::open(path)
+        .map_err(|e| anyhow::anyhow!("opening trace {}: {e}", path.display()))?;
+    let mut lines = BufReader::new(file).lines();
+
+    let header_line = lines
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("trace {} is empty", path.display()))??;
+    let header = Json::parse(&header_line)
+        .map_err(|e| anyhow::anyhow!("trace header: {e}"))?;
+    let version = header
+        .get("trace_version")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow::anyhow!("trace header missing trace_version"))?;
+    if version != TRACE_VERSION {
+        anyhow::bail!("unsupported trace version {version} (expected {TRACE_VERSION})");
+    }
+    let dataset = header
+        .get("dataset")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow::anyhow!("trace header missing dataset"))?
+        .to_string();
+    let declared = header
+        .get("count")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| anyhow::anyhow!("trace header missing count"))?;
+
+    let mut queries = Vec::with_capacity(declared);
+    for (lineno, line) in lines.enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = Json::parse(&line)
+            .map_err(|e| anyhow::anyhow!("trace line {}: {e}", lineno + 2))?;
+        let field = |name: &str| -> anyhow::Result<usize> {
+            v.get(name)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow::anyhow!("trace line {}: missing '{name}'", lineno + 2))
+        };
+        let tokens = v
+            .get("tokens")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("trace line {}: missing 'tokens'", lineno + 2))?
+            .iter()
+            .map(|t| {
+                t.as_f64()
+                    .map(|f| f as i32)
+                    .ok_or_else(|| anyhow::anyhow!("non-numeric token"))
+            })
+            .collect::<anyhow::Result<Vec<i32>>>()?;
+        queries.push(Query {
+            id: field("id")?,
+            template: field("template")?,
+            topic: field("topic")?,
+            tokens,
+        });
+    }
+    if queries.len() != declared {
+        anyhow::bail!(
+            "trace {}: header declares {declared} queries, found {}",
+            path.display(),
+            queries.len()
+        );
+    }
+    Ok((dataset, queries))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::{generate_queries, DatasetSpec};
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("cagr-trace-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip() {
+        let spec = DatasetSpec::tiny(5);
+        let queries = generate_queries(&spec);
+        let path = tmp("roundtrip.jsonl");
+        record(&path, spec.name, &queries).unwrap();
+        let (ds, restored) = replay(&path).unwrap();
+        assert_eq!(ds, "tiny");
+        assert_eq!(restored.len(), queries.len());
+        for (a, b) in queries.iter().zip(&restored) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.template, b.template);
+            assert_eq!(a.topic, b.topic);
+            assert_eq!(a.tokens, b.tokens);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_empty_file() {
+        let path = tmp("empty.jsonl");
+        std::fs::write(&path, "").unwrap();
+        assert!(replay(&path).is_err());
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let path = tmp("badver.jsonl");
+        std::fs::write(&path, "{\"trace_version\":99,\"dataset\":\"x\",\"count\":0}\n").unwrap();
+        let err = replay(&path).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn rejects_count_mismatch() {
+        let path = tmp("short.jsonl");
+        std::fs::write(
+            &path,
+            "{\"trace_version\":1,\"dataset\":\"x\",\"count\":2}\n\
+             {\"id\":0,\"template\":0,\"topic\":0,\"tokens\":[1]}\n",
+        )
+        .unwrap();
+        let err = replay(&path).unwrap_err().to_string();
+        assert!(err.contains("declares 2"), "{err}");
+    }
+
+    #[test]
+    fn rejects_malformed_line() {
+        let path = tmp("garbled.jsonl");
+        std::fs::write(
+            &path,
+            "{\"trace_version\":1,\"dataset\":\"x\",\"count\":1}\nnot-json\n",
+        )
+        .unwrap();
+        assert!(replay(&path).is_err());
+    }
+}

@@ -1,0 +1,116 @@
+//! Traffic model (paper §4.1): users send queries concurrently; the engine
+//! batches them over short intervals with batch sizes drawn uniformly from
+//! `[batch_min, batch_max]` (paper: 20–100). This module slices a query
+//! stream into such arrival batches deterministically.
+
+use crate::config::Config;
+use crate::util::rng::Rng;
+
+use super::Query;
+
+/// One arrival batch: the queries that reached the engine in one interval.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub index: usize,
+    pub queries: Vec<Query>,
+}
+
+/// Slice `queries` into arrival batches with sizes drawn uniformly from
+/// `[cfg.batch_min, cfg.batch_max]`. The final batch holds the remainder
+/// (may be smaller than `batch_min`, as in any real tail).
+pub fn batches(cfg: &Config, queries: &[Query]) -> Vec<Batch> {
+    let mut rng = Rng::new(cfg.seed).derive(0xBA7C);
+    let mut out = Vec::new();
+    let mut start = 0;
+    while start < queries.len() {
+        let want = rng.range(cfg.batch_min, cfg.batch_max + 1);
+        let end = (start + want).min(queries.len());
+        out.push(Batch {
+            index: out.len(),
+            queries: queries[start..end].to_vec(),
+        });
+        start = end;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::DatasetSpec;
+
+    fn queries(n: usize) -> Vec<Query> {
+        (0..n)
+            .map(|id| Query { id, template: 0, topic: 0, tokens: vec![] })
+            .collect()
+    }
+
+    fn cfg() -> Config {
+        Config::default()
+    }
+
+    #[test]
+    fn covers_all_queries_in_order() {
+        let qs = queries(437);
+        let bs = batches(&cfg(), &qs);
+        let flat: Vec<usize> = bs.iter().flat_map(|b| b.queries.iter().map(|q| q.id)).collect();
+        assert_eq!(flat, (0..437).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn batch_sizes_in_paper_range() {
+        let qs = queries(2000);
+        let bs = batches(&cfg(), &qs);
+        for b in &bs[..bs.len() - 1] {
+            assert!((20..=100).contains(&b.queries.len()), "{}", b.queries.len());
+        }
+    }
+
+    #[test]
+    fn batch_sizes_vary() {
+        let qs = queries(2000);
+        let bs = batches(&cfg(), &qs);
+        let sizes: Vec<usize> = bs.iter().map(|b| b.queries.len()).collect();
+        let first = sizes[0];
+        assert!(sizes.iter().any(|&s| s != first), "sizes all {first}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let qs = queries(500);
+        let a = batches(&cfg(), &qs);
+        let b = batches(&cfg(), &qs);
+        assert_eq!(
+            a.iter().map(|x| x.queries.len()).collect::<Vec<_>>(),
+            b.iter().map(|x| x.queries.len()).collect::<Vec<_>>()
+        );
+        let mut c2 = cfg();
+        c2.seed ^= 1;
+        let c = batches(&c2, &qs);
+        assert_ne!(
+            a.iter().map(|x| x.queries.len()).collect::<Vec<_>>(),
+            c.iter().map(|x| x.queries.len()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn respects_custom_bounds() {
+        let mut c = cfg();
+        c.batch_min = 5;
+        c.batch_max = 5;
+        let qs = queries(23);
+        let bs = batches(&c, &qs);
+        assert_eq!(bs.len(), 5);
+        assert!(bs[..4].iter().all(|b| b.queries.len() == 5));
+        assert_eq!(bs[4].queries.len(), 3);
+    }
+
+    #[test]
+    fn works_with_real_spec() {
+        let spec = DatasetSpec::tiny(3);
+        let qs = crate::workload::generate_queries(&spec);
+        let bs = batches(&cfg(), &qs);
+        assert!(!bs.is_empty());
+        assert_eq!(bs.iter().map(|b| b.queries.len()).sum::<usize>(), qs.len());
+    }
+}

@@ -1,0 +1,174 @@
+//! PJRT <-> native parity: the compiled HLO artifacts must compute the same
+//! numbers as the portable rust implementation (within f32 tolerance), and
+//! the full IVF pipeline must produce identical top-k under either scoring
+//! backend.
+//!
+//! Requires `artifacts/` (run `make artifacts`); the whole suite is skipped
+//! with a notice if it is missing so `cargo test` works on a fresh clone.
+
+use cagr::config::geometry::{CENTROID_PAD, EMBED_DIM, SCORE_N, SCORE_Q, SEQ_LEN};
+use cagr::index::distance;
+use cagr::runtime::PjrtRuntime;
+use cagr::util::rng::Rng;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    // Tests run from the crate root.
+    let dir = std::path::PathBuf::from("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("[backend_parity] artifacts/ missing - run `make artifacts`; skipping");
+        None
+    }
+}
+
+fn rand_vec(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() as f32).collect()
+}
+
+#[test]
+fn scorer_artifact_matches_native_distance() {
+    let Some(dir) = artifacts_dir() else { return };
+    let runtime = PjrtRuntime::load(&dir).unwrap();
+    let mut rng = Rng::new(101);
+    let queries = rand_vec(&mut rng, SCORE_Q * EMBED_DIM);
+    let chunk = rand_vec(&mut rng, SCORE_N * EMBED_DIM);
+
+    let got = runtime.score_chunk(&queries, &chunk).unwrap();
+    let mut want = vec![0f32; SCORE_Q * SCORE_N];
+    distance::l2_many_to_many(&queries, &chunk, EMBED_DIM, &mut want);
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        assert!(
+            (g - w).abs() < 1e-3,
+            "scorer mismatch at {i}: pjrt={g} native={w}"
+        );
+    }
+}
+
+#[test]
+fn centroid_scan_artifact_matches_native() {
+    let Some(dir) = artifacts_dir() else { return };
+    let runtime = PjrtRuntime::load(&dir).unwrap();
+    let mut rng = Rng::new(202);
+    let queries = rand_vec(&mut rng, SCORE_Q * EMBED_DIM);
+    let centroids = rand_vec(&mut rng, CENTROID_PAD * EMBED_DIM);
+
+    let got = runtime.centroid_scan(&queries, &centroids).unwrap();
+    let mut want = vec![0f32; SCORE_Q * CENTROID_PAD];
+    distance::l2_many_to_many(&queries, &centroids, EMBED_DIM, &mut want);
+    for (g, w) in got.iter().zip(&want) {
+        assert!((g - w).abs() < 1e-3, "scan mismatch: pjrt={g} native={w}");
+    }
+    // argmin agreement (what the IVF lookup actually consumes)
+    for q in 0..SCORE_Q {
+        let row_g = &got[q * CENTROID_PAD..(q + 1) * CENTROID_PAD];
+        let row_w = &want[q * CENTROID_PAD..(q + 1) * CENTROID_PAD];
+        let argmin = |row: &[f32]| {
+            row.iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0
+        };
+        assert_eq!(argmin(row_g), argmin(row_w), "query {q} argmin");
+    }
+}
+
+#[test]
+fn encoder_batch_ladder_is_consistent() {
+    let Some(dir) = artifacts_dir() else { return };
+    let runtime = PjrtRuntime::load(&dir).unwrap();
+    let mut rng = Rng::new(303);
+    let rows: Vec<Vec<i32>> = (0..13)
+        .map(|_| (0..SEQ_LEN).map(|_| rng.range(0, 512) as i32).collect())
+        .collect();
+
+    // 13 queries exercise b8 + b1*5 (or whatever the ladder decides); the
+    // result must equal encoding each row individually.
+    let bulk = runtime.encode_many("minilm-sim", &rows).unwrap();
+    assert_eq!(bulk.len(), 13 * EMBED_DIM);
+    for (i, row) in rows.iter().enumerate() {
+        let single = runtime.encode_many("minilm-sim", &[row.clone()]).unwrap();
+        for d in 0..EMBED_DIM {
+            let a = bulk[i * EMBED_DIM + d];
+            let b = single[d];
+            assert!(
+                (a - b).abs() < 1e-4,
+                "row {i} dim {d}: bulk={a} single={b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn encoder_outputs_unit_norm() {
+    let Some(dir) = artifacts_dir() else { return };
+    let runtime = PjrtRuntime::load(&dir).unwrap();
+    let mut rng = Rng::new(404);
+    let rows: Vec<Vec<i32>> = (0..8)
+        .map(|_| (0..SEQ_LEN).map(|_| rng.range(0, 512) as i32).collect())
+        .collect();
+    for model in ["minilm-sim", "modernbert-sim", "e5-sim"] {
+        let out = runtime.encode_many(model, &rows).unwrap();
+        for i in 0..rows.len() {
+            let norm: f32 = out[i * EMBED_DIM..(i + 1) * EMBED_DIM]
+                .iter()
+                .map(|x| x * x)
+                .sum::<f32>()
+                .sqrt();
+            assert!((norm - 1.0).abs() < 1e-4, "{model} row {i} norm {norm}");
+        }
+    }
+}
+
+#[test]
+fn pjrt_pipeline_matches_native_topk() {
+    // Build one tiny index from PJRT-encoded documents, then search it with
+    // both backends' *scoring* paths using the same embeddings: top-k doc
+    // ids must agree exactly.
+    let Some(dir) = artifacts_dir() else { return };
+    use cagr::config::{Backend, Config, DiskProfile};
+    use cagr::coordinator::Mode;
+    use cagr::harness::runner::{ensure_dataset, run_workload};
+    use cagr::workload::{generate_queries, DatasetSpec};
+
+    let mut spec = DatasetSpec::tiny(0x9A17);
+    spec.n_docs = 1_200; // keep the PJRT build quick
+    spec.n_queries = 24;
+
+    let mut cfg = Config::default();
+    cfg.artifacts_dir = dir;
+    cfg.data_dir =
+        std::env::temp_dir().join(format!("cagr-parity-{}", std::process::id()));
+    cfg.clusters = 12;
+    cfg.nprobe = 12; // exact search: backend differences cannot hide in recall
+    cfg.top_k = 5;
+    cfg.cache_entries = 12;
+    cfg.kmeans_iters = 4;
+    cfg.kmeans_sample = 1_200;
+    cfg.backend = Backend::Pjrt;
+    cfg.disk_profile = DiskProfile::None;
+
+    ensure_dataset(&cfg, &spec).unwrap();
+    let queries = generate_queries(&spec);
+    let result = run_workload(&cfg, &spec, Mode::QGP, &queries, 0).unwrap();
+    assert_eq!(result.reports.len(), queries.len());
+
+    // Cross-check a few queries against a native-scored exhaustive search
+    // over the same (PJRT-built) index.
+    use cagr::engine::SearchEngine;
+    let mut pjrt_engine = SearchEngine::open(&cfg, &spec).unwrap();
+    let prepared = pjrt_engine.prepare(&queries[..6]).unwrap();
+    for pq in &prepared {
+        let (_, pjrt_hits) = pjrt_engine.search(pq).unwrap();
+        let exact = pjrt_engine.exhaustive_search(pq).unwrap();
+        // nprobe == clusters, so the IVF result must equal exhaustive.
+        assert_eq!(
+            pjrt_hits.iter().map(|h| h.doc_id).collect::<Vec<_>>(),
+            exact.iter().map(|h| h.doc_id).collect::<Vec<_>>(),
+            "query {}",
+            pq.query.id
+        );
+    }
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}

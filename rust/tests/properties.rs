@@ -1,0 +1,281 @@
+//! Property-based tests (hand-rolled, seeded sweeps — the offline build has
+//! no proptest): coordinator and substrate invariants under randomized
+//! inputs. Every case prints its seed on failure, so any regression is
+//! replayable.
+
+use cagr::cache::ClusterCache;
+use cagr::config::{CachePolicy, GroupingPolicy};
+use cagr::coordinator::grouping::group_queries;
+use cagr::coordinator::jaccard::{canonicalize, jaccard_sorted, union_sorted};
+use cagr::engine::PreparedQuery;
+use cagr::index::{ClusterBlock, TopK};
+use cagr::util::json::Json;
+use cagr::util::rng::Rng;
+use cagr::workload::Query;
+
+use std::sync::Arc;
+
+fn random_cluster_set(rng: &mut Rng, universe: u32, max_len: usize) -> Vec<u32> {
+    let len = rng.range(1, max_len + 1);
+    canonicalize(&(0..len).map(|_| rng.range(0, universe as usize) as u32).collect::<Vec<_>>())
+}
+
+fn random_batch(rng: &mut Rng, n: usize) -> Vec<PreparedQuery> {
+    (0..n)
+        .map(|id| PreparedQuery {
+            query: Query { id, template: 0, topic: 0, tokens: vec![] },
+            embedding: vec![],
+            clusters: random_cluster_set(rng, 40, 12),
+            prep_cost: std::time::Duration::ZERO,
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Jaccard metric properties
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_jaccard_bounds_symmetry_identity() {
+    for seed in 0..300u64 {
+        let mut rng = Rng::new(seed);
+        let a = random_cluster_set(&mut rng, 25, 10);
+        let b = random_cluster_set(&mut rng, 25, 10);
+        let jab = jaccard_sorted(&a, &b);
+        let jba = jaccard_sorted(&b, &a);
+        assert!((0.0..=1.0).contains(&jab), "seed {seed}: out of bounds");
+        assert_eq!(jab, jba, "seed {seed}: asymmetric");
+        assert_eq!(jaccard_sorted(&a, &a), 1.0, "seed {seed}: identity");
+        // union upper-bounds both inputs
+        let u = union_sorted(&a, &b);
+        assert!(u.len() >= a.len().max(b.len()), "seed {seed}");
+        assert!(u.len() <= a.len() + b.len(), "seed {seed}");
+    }
+}
+
+#[test]
+fn prop_jaccard_triangle_on_distance() {
+    // Jaccard distance (1 - J) is a metric; spot-check the triangle
+    // inequality across random triples.
+    for seed in 0..200u64 {
+        let mut rng = Rng::new(1_000 + seed);
+        let a = random_cluster_set(&mut rng, 20, 8);
+        let b = random_cluster_set(&mut rng, 20, 8);
+        let c = random_cluster_set(&mut rng, 20, 8);
+        let d = |x: &[u32], y: &[u32]| 1.0 - jaccard_sorted(x, y);
+        assert!(
+            d(&a, &c) <= d(&a, &b) + d(&b, &c) + 1e-12,
+            "seed {seed}: triangle violated"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Grouping invariants (Algorithm 1)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_grouping_is_partition_under_any_theta() {
+    for seed in 0..60u64 {
+        let mut rng = Rng::new(2_000 + seed);
+        let n = rng.range(0, 80);
+        let batch = random_batch(&mut rng, n);
+        let theta = rng.f64();
+        for policy in [GroupingPolicy::SingleLink, GroupingPolicy::CompleteLink] {
+            let plan = group_queries(&batch, theta, policy);
+            let mut order = plan.dispatch_order();
+            assert_eq!(order.len(), n, "seed {seed}: lost queries");
+            order.sort_unstable();
+            order.dedup();
+            assert_eq!(order.len(), n, "seed {seed}: duplicated queries");
+        }
+    }
+}
+
+#[test]
+fn prop_singleton_groups_at_theta_one_unless_identical() {
+    for seed in 0..50u64 {
+        let mut rng = Rng::new(3_000 + seed);
+        let n = rng.range(1, 40);
+        let batch = random_batch(&mut rng, n);
+        let plan = group_queries(&batch, 1.0, GroupingPolicy::SingleLink);
+        for g in &plan.groups {
+            // at theta=1 all members of a group must share one cluster set
+            for w in g.member_clusters.windows(2) {
+                assert_eq!(w[0], w[1], "seed {seed}: non-identical members at theta=1");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_complete_link_groups_satisfy_pairwise_theta() {
+    // Under complete-link, EVERY pair inside a group clears theta (Eq. 3).
+    for seed in 0..50u64 {
+        let mut rng = Rng::new(4_000 + seed);
+        let n = rng.range(1, 50);
+        let batch = random_batch(&mut rng, n);
+        let theta = 0.3 + 0.5 * rng.f64();
+        let plan = group_queries(&batch, theta, GroupingPolicy::CompleteLink);
+        for (gi, g) in plan.groups.iter().enumerate() {
+            for i in 0..g.member_clusters.len() {
+                for j in (i + 1)..g.member_clusters.len() {
+                    let s = jaccard_sorted(&g.member_clusters[i], &g.member_clusters[j]);
+                    assert!(
+                        s >= theta,
+                        "seed {seed}: group {gi} pair ({i},{j}) sim {s} < theta {theta}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_next_first_chain_is_consistent() {
+    for seed in 0..50u64 {
+        let mut rng = Rng::new(5_000 + seed);
+        let n = rng.range(2, 60);
+        let batch = random_batch(&mut rng, n);
+        let plan = group_queries(&batch, rng.f64(), GroupingPolicy::SingleLink);
+        assert_eq!(plan.next_first.len(), plan.groups.len());
+        for (i, nf) in plan.next_first.iter().enumerate() {
+            match (nf, plan.groups.get(i + 1)) {
+                (Some((idx, clusters)), Some(next)) => {
+                    assert_eq!(*idx, next.members[0], "seed {seed}");
+                    assert_eq!(clusters, &next.member_clusters[0], "seed {seed}");
+                }
+                (None, None) => {}
+                _ => panic!("seed {seed}: next_first/groups mismatch at {i}"),
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Cache invariants under random operation streams
+// ---------------------------------------------------------------------------
+
+fn mini_block(id: u32) -> Arc<ClusterBlock> {
+    Arc::new(ClusterBlock {
+        id,
+        len: 1,
+        dim: 1,
+        doc_ids: vec![id],
+        data: vec![0.0],
+        bytes_on_disk: 1,
+    })
+}
+
+#[test]
+fn prop_cache_never_exceeds_capacity_and_stats_balance() {
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(6_000 + seed);
+        let capacity = rng.range(1, 12);
+        for policy in [
+            CachePolicy::Lru,
+            CachePolicy::Fifo,
+            CachePolicy::Lfu,
+            CachePolicy::CostAware,
+        ] {
+            let costs: Vec<u64> = (0..64).map(|_| rng.range(1, 1000) as u64).collect();
+            let mut cache = ClusterCache::from_config(policy, capacity, costs);
+            let mut ops = 0u64;
+            for _ in 0..400 {
+                let id = rng.range(0, 32) as u32;
+                match rng.range(0, 3) {
+                    0 => {
+                        let _ = cache.get(id);
+                        ops += 1;
+                    }
+                    1 => {
+                        if !cache.contains(id) {
+                            cache.insert(mini_block(id), rng.f64() < 0.3);
+                        }
+                    }
+                    _ => {
+                        if rng.f64() < 0.1 {
+                            cache.pin(&[id]);
+                        } else {
+                            cache.unpin_all();
+                        }
+                    }
+                }
+                assert!(cache.len() <= capacity, "seed {seed} {policy:?}: overflow");
+            }
+            let s = cache.stats();
+            assert_eq!(s.hits + s.misses, ops, "seed {seed}: stats don't balance");
+            assert!(s.insertions >= s.evictions, "seed {seed}: evicted phantom entries");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TopK equals full sort
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_topk_equals_sorted_truncation() {
+    for seed in 0..100u64 {
+        let mut rng = Rng::new(7_000 + seed);
+        let n = rng.range(1, 400);
+        let k = rng.range(1, 30);
+        let pairs: Vec<(u32, f32)> = (0..n).map(|i| (i as u32, rng.f32())).collect();
+        let mut tk = TopK::new(k);
+        for &(id, d) in &pairs {
+            tk.push(id, d);
+        }
+        let got: Vec<u32> = tk.into_sorted().iter().map(|h| h.doc_id).collect();
+        let mut want = pairs;
+        want.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        want.truncate(k);
+        assert_eq!(got, want.iter().map(|p| p.0).collect::<Vec<_>>(), "seed {seed}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JSON fuzz: parse(dump(x)) == x for random values; random garbage never
+// panics.
+// ---------------------------------------------------------------------------
+
+fn random_json(rng: &mut Rng, depth: usize) -> Json {
+    match if depth == 0 { rng.range(0, 4) } else { rng.range(0, 6) } {
+        0 => Json::Null,
+        1 => Json::Bool(rng.f64() < 0.5),
+        2 => Json::Num((rng.f64() * 2e6).round() / 2.0 - 5e5),
+        3 => Json::Str(
+            (0..rng.range(0, 12))
+                .map(|_| char::from_u32(rng.range(32, 127) as u32).unwrap())
+                .collect(),
+        ),
+        4 => Json::Arr((0..rng.range(0, 5)).map(|_| random_json(rng, depth - 1)).collect()),
+        _ => Json::Obj(
+            (0..rng.range(0, 5))
+                .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                .collect(),
+        ),
+    }
+}
+
+#[test]
+fn prop_json_roundtrip() {
+    for seed in 0..300u64 {
+        let mut rng = Rng::new(8_000 + seed);
+        let v = random_json(&mut rng, 3);
+        let parsed = Json::parse(&v.dump()).unwrap_or_else(|e| panic!("seed {seed}: {e}"));
+        assert_eq!(parsed, v, "seed {seed}");
+        let pretty = Json::parse(&v.pretty()).unwrap();
+        assert_eq!(pretty, v, "seed {seed} (pretty)");
+    }
+}
+
+#[test]
+fn prop_json_garbage_never_panics() {
+    for seed in 0..300u64 {
+        let mut rng = Rng::new(9_000 + seed);
+        let garbage: String = (0..rng.range(0, 40))
+            .map(|_| char::from_u32(rng.range(32, 127) as u32).unwrap())
+            .collect();
+        let _ = Json::parse(&garbage); // must return, never panic
+    }
+}

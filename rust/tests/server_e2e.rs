@@ -1,0 +1,135 @@
+//! Serving front-end end-to-end: TCP clients -> batcher -> coordinator ->
+//! responses; results must match a direct engine search.
+
+use cagr::config::{Backend, Config, DiskProfile};
+use cagr::coordinator::{Coordinator, Mode};
+use cagr::engine::SearchEngine;
+use cagr::harness::runner::ensure_dataset;
+use cagr::server::{start, Client, ServerConfig};
+use cagr::workload::{generate_queries, DatasetSpec};
+
+fn test_cfg(tag: &str) -> (Config, DatasetSpec) {
+    let mut cfg = Config::default();
+    cfg.data_dir =
+        std::env::temp_dir().join(format!("cagr-server-{}-{tag}", std::process::id()));
+    cfg.clusters = 16;
+    cfg.nprobe = 4;
+    cfg.top_k = 5;
+    cfg.cache_entries = 8;
+    cfg.kmeans_iters = 4;
+    cfg.kmeans_sample = 2_000;
+    cfg.backend = Backend::Native;
+    cfg.disk_profile = DiskProfile::None;
+    (cfg, DatasetSpec::tiny(0x53E))
+}
+
+fn launch(cfg: &Config, spec: &DatasetSpec, mode: Mode) -> cagr::server::ServerHandle {
+    ensure_dataset(cfg, spec).unwrap();
+    let factory = {
+        let cfg = cfg.clone();
+        let spec = spec.clone();
+        move || -> anyhow::Result<Coordinator> {
+            Ok(Coordinator::new(SearchEngine::open(&cfg, &spec)?, mode))
+        }
+    };
+    start(
+        factory,
+        ServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            batch_window: std::time::Duration::from_millis(5),
+            batch_max: 32,
+        },
+    )
+    .unwrap()
+}
+
+#[test]
+fn served_results_match_direct_search() {
+    let (cfg, spec) = test_cfg("match");
+    let handle = launch(&cfg, &spec, Mode::QGP);
+    let queries = generate_queries(&spec);
+
+    let mut client = Client::connect(handle.addr).unwrap();
+    let mut served = Vec::new();
+    for q in &queries[..10] {
+        let resp = client.search(q).unwrap();
+        assert_eq!(resp.query_id, q.id);
+        assert_eq!(resp.hits.len(), cfg.top_k);
+        served.push(resp);
+    }
+    handle.shutdown();
+
+    let mut engine = SearchEngine::open(&cfg, &spec).unwrap();
+    for (q, resp) in queries[..10].iter().zip(&served) {
+        let (_, direct) = engine.search_query(q).unwrap();
+        assert_eq!(
+            resp.hits.iter().map(|h| h.0).collect::<Vec<_>>(),
+            direct.iter().map(|h| h.doc_id).collect::<Vec<_>>(),
+            "query {}",
+            q.id
+        );
+    }
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}
+
+#[test]
+fn concurrent_clients_are_batched_and_answered() {
+    let (cfg, spec) = test_cfg("concurrent");
+    let handle = launch(&cfg, &spec, Mode::QGP);
+    let queries = generate_queries(&spec);
+    let addr = handle.addr;
+
+    let mut handles = Vec::new();
+    for t in 0..4usize {
+        let qs: Vec<_> = queries[t * 8..(t + 1) * 8].to_vec();
+        handles.push(std::thread::spawn(move || {
+            let mut client = Client::connect(addr).unwrap();
+            qs.iter()
+                .map(|q| {
+                    let r = client.search(q).unwrap();
+                    assert_eq!(r.query_id, q.id);
+                    r.latency_us
+                })
+                .collect::<Vec<u64>>()
+        }));
+    }
+    for h in handles {
+        let latencies = h.join().unwrap();
+        assert_eq!(latencies.len(), 8);
+    }
+    handle.shutdown();
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}
+
+#[test]
+fn malformed_request_gets_error_not_hang() {
+    use std::io::{BufRead, BufReader, Write};
+    let (cfg, spec) = test_cfg("badreq");
+    let handle = launch(&cfg, &spec, Mode::Baseline);
+
+    let mut stream = std::net::TcpStream::connect(handle.addr).unwrap();
+    writeln!(stream, "this is not json").unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("error"), "{line}");
+
+    // The connection stays usable after an error.
+    writeln!(stream, "{}", r#"{"query_id": 0, "template": 0, "topic": 0}"#).unwrap();
+    line.clear();
+    reader.read_line(&mut line).unwrap();
+    assert!(line.contains("hits"), "{line}");
+
+    handle.shutdown();
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}
+
+#[test]
+fn shutdown_terminates_promptly() {
+    let (cfg, spec) = test_cfg("shutdown");
+    let handle = launch(&cfg, &spec, Mode::Baseline);
+    let t0 = std::time::Instant::now();
+    handle.shutdown();
+    assert!(t0.elapsed() < std::time::Duration::from_secs(5));
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}

@@ -1,12 +1,14 @@
-//! Cache-policy x dispatch-mode grid: the paper's §5 claim that CaGR-RAG's
+//! Cache-policy x schedule-policy grid: the paper's §5 claim that CaGR-RAG's
 //! grouping + prefetch is "compatible with any cache replacement policy".
 //! Runs nq-sim under {LRU, FIFO, LFU, cost-aware} x {baseline, QG, QGP} and
-//! prints hit ratio / mean / p99 for each cell.
+//! prints hit ratio / mean / p99 for each cell. The schedule arms are the
+//! three built-in `SchedulePolicy` objects; a custom policy slots into the
+//! same loop.
 //!
 //!     cargo run --release --example policy_ablation
 
 use cagr::config::{Backend, CachePolicy, Config, DiskProfile};
-use cagr::coordinator::Mode;
+use cagr::coordinator::{ArrivalOrder, GroupingWithPrefetch, JaccardGrouping, SchedulePolicy};
 use cagr::harness::runner::{ensure_dataset, run_workload};
 use cagr::metrics::render_table;
 use cagr::workload::{generate_queries, DatasetSpec};
@@ -19,6 +21,12 @@ fn main() -> anyhow::Result<()> {
     ensure_dataset(&cfg, &spec)?;
     let queries = generate_queries(&spec);
 
+    let schedules: [fn() -> Box<dyn SchedulePolicy>; 3] = [
+        ArrivalOrder::boxed,
+        JaccardGrouping::boxed,
+        GroupingWithPrefetch::boxed,
+    ];
+
     let mut rows = Vec::new();
     for policy in [
         CachePolicy::Lru,
@@ -26,13 +34,13 @@ fn main() -> anyhow::Result<()> {
         CachePolicy::Lfu,
         CachePolicy::CostAware,
     ] {
-        for mode in [Mode::Baseline, Mode::QG, Mode::QGP] {
+        for make_schedule in schedules {
             let mut cfg = cfg.clone();
             cfg.cache_policy = policy;
-            let result = run_workload(&cfg, &spec, mode, &queries, 50)?;
+            let result = run_workload(&cfg, &spec, make_schedule(), &queries, 50)?;
             rows.push(vec![
                 policy.name().to_string(),
-                mode.name().to_string(),
+                result.policy.clone(),
                 format!("{:.1}%", 100.0 * result.cache_stats.hit_ratio()),
                 format!("{:.4}", result.mean_latency()),
                 format!("{:.4}", result.p99_latency()),
@@ -42,7 +50,7 @@ fn main() -> anyhow::Result<()> {
     println!(
         "{}",
         render_table(
-            &["cache policy", "mode", "hit ratio", "mean(s)", "p99(s)"],
+            &["cache policy", "schedule", "hit ratio", "mean(s)", "p99(s)"],
             &rows
         )
     );

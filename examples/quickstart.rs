@@ -1,15 +1,18 @@
-//! Quickstart: the whole CaGR-RAG pipeline in ~60 lines.
+//! Quickstart: the whole CaGR-RAG pipeline in ~70 lines, through the
+//! `Session` serving API.
 //!
-//! Builds a small disk-based IVF index, serves one batch of queries through
-//! the coordinator in CaGR-RAG mode (grouping + opportunistic prefetch),
-//! and prints the groups, top-k results, and cache efficiency.
+//! One fluent builder call provisions a small disk-based IVF index and
+//! assembles the serving stack (engine + cache + policy + prefetcher);
+//! `run_batch` serves an arrival batch under full CaGR-RAG (grouping +
+//! opportunistic prefetch), and `submit`/`poll` show the non-blocking path.
+//! Swap `GroupingWithPrefetch` for `ArrivalOrder` or `JaccardGrouping` — or
+//! any custom `SchedulePolicy` — and nothing else changes.
 //!
 //!     cargo run --release --example quickstart
 
 use cagr::config::{Backend, Config, DiskProfile};
-use cagr::coordinator::{Coordinator, Mode};
-use cagr::engine::SearchEngine;
-use cagr::harness::runner::ensure_dataset;
+use cagr::coordinator::GroupingWithPrefetch;
+use cagr::session::Session;
 use cagr::workload::{generate_queries, DatasetSpec};
 
 fn main() -> anyhow::Result<()> {
@@ -24,18 +27,18 @@ fn main() -> anyhow::Result<()> {
     let mut spec = DatasetSpec::by_name("nq-sim")?;
     spec.n_docs = 20_000;
 
-    // 2. Build (or reuse) the on-disk index: k-means partition, one cluster
-    //    file per centroid, offline read-latency profile for the
-    //    cost-aware cache.
-    ensure_dataset(&cfg, &spec)?;
+    // 2.+3. Build (or reuse) the on-disk index and open a serving session
+    //    in one step: the builder owns k-means partitioning, the offline
+    //    read-latency profile, engine assembly, and the prefetch thread.
+    let mut session = Session::builder()
+        .config(cfg)
+        .dataset(spec.clone())
+        .policy(GroupingWithPrefetch::default()) // full CaGR-RAG
+        .open()?;
 
-    // 3. Open the engine and wrap it in a CaGR-RAG coordinator.
-    let engine = SearchEngine::open(&cfg, &spec)?;
-    let mut coordinator = Coordinator::new(engine, Mode::QGP);
-
-    // 4. Serve one arrival batch of 40 queries.
+    // 4. Serve one arrival batch of 40 queries (blocking path).
     let queries = generate_queries(&spec);
-    let (outcomes, stats) = coordinator.process_batch(&queries[..40])?;
+    let (outcomes, stats) = session.run_batch(&queries[..40])?;
 
     println!(
         "processed {} queries in {} groups (grouping cost {:.2}ms)\n",
@@ -61,9 +64,20 @@ fn main() -> anyhow::Result<()> {
         );
     }
 
-    coordinator.quiesce();
-    let cache = coordinator.engine.cache_stats();
-    let (prefetches, loaded, resident) = coordinator.prefetch_counters();
+    // 5. Non-blocking path: enqueue now, process at the next poll.
+    session.submit_all(&queries[40..56]);
+    while let Some((polled, stats)) = session.poll()? {
+        println!(
+            "\npoll drained {} queries in {} groups ({} still pending)",
+            polled.len(),
+            stats.groups,
+            session.pending_len()
+        );
+    }
+
+    session.quiesce();
+    let cache = session.cache_stats();
+    let (prefetches, loaded, resident) = session.prefetch_counters();
     println!(
         "\ncache: {:.1}% hit ratio ({} hits / {} misses), {} evictions",
         100.0 * cache.hit_ratio(),

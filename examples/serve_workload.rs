@@ -2,9 +2,10 @@
 //! EXPERIMENTS.md): loads the AOT-compiled encoder/scorer artifacts through
 //! the PJRT CPU client, builds the hotpotqa-sim index with the *real*
 //! encoder (python never runs — the HLO was lowered at `make artifacts`),
-//! starts the TCP front-end, and drives it with concurrent clients sending
-//! batched traffic. Reports throughput, latency percentiles, and cache
-//! efficiency for both EdgeRAG and CaGR-RAG modes.
+//! starts the TCP front-end over a `Session`, and drives it with concurrent
+//! clients sending batched traffic. Reports throughput, latency percentiles,
+//! and cache efficiency for both the EdgeRAG (arrival-order) and CaGR-RAG
+//! (grouping + prefetch) schedule policies.
 //!
 //!     make artifacts && cargo run --release --example serve_workload
 //!
@@ -15,11 +16,11 @@
 //!   CAGR_SERVE_NATIVE=1  use the native backend instead of PJRT
 
 use cagr::config::{Backend, Config, DiskProfile};
-use cagr::coordinator::{Coordinator, Mode};
-use cagr::engine::SearchEngine;
+use cagr::coordinator::{ArrivalOrder, GroupingWithPrefetch};
 use cagr::harness::runner::ensure_dataset;
 use cagr::metrics::{render_table, LatencyRecorder};
 use cagr::server::{start, Client, ServerConfig};
+use cagr::session::Session;
 use cagr::workload::{generate_queries, DatasetSpec, Query};
 
 fn env_usize(name: &str, default: usize) -> usize {
@@ -53,12 +54,20 @@ fn main() -> anyhow::Result<()> {
     let queries = generate_queries(&spec);
 
     let mut rows = Vec::new();
-    for (label, mode) in [("EdgeRAG", Mode::Baseline), ("CaGR-RAG", Mode::QGP)] {
+    for (label, policy) in [
+        ("EdgeRAG", ArrivalOrder::boxed()),
+        ("CaGR-RAG", GroupingWithPrefetch::boxed()),
+    ] {
         let factory = {
             let cfg = cfg.clone();
             let spec = spec.clone();
-            move || -> anyhow::Result<Coordinator> {
-                Ok(Coordinator::new(SearchEngine::open(&cfg, &spec)?, mode))
+            move || -> anyhow::Result<Session> {
+                Session::builder()
+                    .config(cfg)
+                    .dataset(spec)
+                    .boxed_policy(policy)
+                    .ensure_dataset(false)
+                    .open()
             }
         };
         let handle = start(

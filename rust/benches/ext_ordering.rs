@@ -8,7 +8,7 @@
 //! that remark and the related group-ordering idea on our testbed.
 
 use cagr::config::{Backend, Config, DiskProfile};
-use cagr::coordinator::Mode;
+use cagr::coordinator::GroupingWithPrefetch;
 use cagr::harness::banner;
 use cagr::harness::runner::{ensure_dataset, run_workload};
 use cagr::metrics::render_table;
@@ -33,7 +33,7 @@ fn main() -> anyhow::Result<()> {
         let mut cfg = base.clone();
         cfg.set("group_order", order)?;
         cfg.set("size_aware_prefetch", if size_aware { "true" } else { "false" })?;
-        let result = run_workload(&cfg, &spec, Mode::QGP, &queries, 50)?;
+        let result = run_workload(&cfg, &spec, GroupingWithPrefetch::boxed(), &queries, 50)?;
         rows.push(vec![
             order.to_string(),
             size_aware.to_string(),

@@ -11,7 +11,7 @@
 //! (results/fig2b_series.csv), and a hit-vs-miss latency contrast.
 
 use cagr::config::{Backend, CachePolicy, Config, DiskProfile};
-use cagr::coordinator::Mode;
+use cagr::coordinator::ArrivalOrder;
 use cagr::harness::banner;
 use cagr::harness::runner::{ensure_dataset, run_workload};
 use cagr::metrics::{cdf, render_table, write_csv};
@@ -38,7 +38,7 @@ fn main() -> anyhow::Result<()> {
     for nprobe in [10usize, 20, 30, 40] {
         let mut cfg = cfg.clone();
         cfg.nprobe = nprobe;
-        let result = run_workload(&cfg, &spec, Mode::Baseline, &queries[..n_queries], warmup)?;
+        let result = run_workload(&cfg, &spec, ArrivalOrder::boxed(), &queries[..n_queries], warmup)?;
         let r = &result.recorder;
         rows.push(vec![
             nprobe.to_string(),

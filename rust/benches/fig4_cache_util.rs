@@ -8,7 +8,7 @@
 //! to 0%).
 
 use cagr::config::{Backend, Config, DiskProfile};
-use cagr::coordinator::Mode;
+use cagr::coordinator::{ArrivalOrder, GroupingWithPrefetch};
 use cagr::harness::banner;
 use cagr::harness::runner::{ensure_dataset, run_workload};
 use cagr::metrics::{render_table, write_csv};
@@ -27,8 +27,11 @@ fn main() -> anyhow::Result<()> {
     for spec in DatasetSpec::canonical() {
         ensure_dataset(&cfg, &spec)?;
         let queries = generate_queries(&spec);
-        for (label, mode) in [("EdgeRAG", Mode::Baseline), ("CaGR-RAG", Mode::QGP)] {
-            let result = run_workload(&cfg, &spec, mode, &queries, 50)?;
+        for (label, policy) in [
+            ("EdgeRAG", ArrivalOrder::boxed()),
+            ("CaGR-RAG", GroupingWithPrefetch::boxed()),
+        ] {
+            let result = run_workload(&cfg, &spec, policy, &queries, 50)?;
             let window: Vec<f64> = result.reports[WINDOW]
                 .iter()
                 .map(|r| r.hit_ratio())

@@ -9,7 +9,7 @@
 //! in latency via file size.
 
 use cagr::config::{Backend, Config, DiskProfile};
-use cagr::coordinator::Mode;
+use cagr::coordinator::{ArrivalOrder, GroupingWithPrefetch};
 use cagr::harness::banner;
 use cagr::harness::runner::{ensure_dataset, run_workload};
 use cagr::metrics::{render_table, write_csv};
@@ -53,8 +53,11 @@ fn main() -> anyhow::Result<()> {
     let queries = generate_queries(&spec);
     let mut rows = Vec::new();
     let mut csv_rows = Vec::new();
-    for (label, mode) in [("EdgeRAG", Mode::Baseline), ("CaGR-RAG", Mode::QGP)] {
-        let result = run_workload(&cfg, &spec, mode, &queries, 50)?;
+    for (label, policy) in [
+        ("EdgeRAG", ArrivalOrder::boxed()),
+        ("CaGR-RAG", GroupingWithPrefetch::boxed()),
+    ] {
+        let result = run_workload(&cfg, &spec, policy, &queries, 50)?;
         let window = &result.reports[WINDOW];
         let bytes: Vec<f64> = window.iter().map(|r| r.bytes_read as f64).collect();
         let lats: Vec<f64> = window.iter().map(|r| r.latency.as_secs_f64()).collect();

@@ -8,7 +8,7 @@
 //! the reduction percentages are the comparable quantity.
 
 use cagr::config::{Backend, Config, DiskProfile};
-use cagr::coordinator::Mode;
+use cagr::coordinator::{ArrivalOrder, GroupingWithPrefetch};
 use cagr::harness::banner;
 use cagr::harness::runner::{ensure_dataset, run_workload};
 use cagr::metrics::{cdf, render_table, write_csv};
@@ -33,8 +33,11 @@ fn main() -> anyhow::Result<()> {
         ensure_dataset(&cfg, &spec)?;
         let queries = generate_queries(&spec);
         let mut measured = Vec::new();
-        for (label, mode) in [("EdgeRAG", Mode::Baseline), ("CaGR-RAG", Mode::QGP)] {
-            let result = run_workload(&cfg, &spec, mode, &queries, 50)?;
+        for (label, policy) in [
+            ("EdgeRAG", ArrivalOrder::boxed()),
+            ("CaGR-RAG", GroupingWithPrefetch::boxed()),
+        ] {
+            let result = run_workload(&cfg, &spec, policy, &queries, 50)?;
             for (lat, frac) in cdf::downsample(&result.recorder.cdf(), 50) {
                 cdf_rows.push(vec![
                     spec.name.to_string(),

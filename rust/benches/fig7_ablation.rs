@@ -8,7 +8,7 @@
 //! the paper reports up to 3.1x lower p99 for QGP at 10%.
 
 use cagr::config::{Backend, Config, DiskProfile};
-use cagr::coordinator::Mode;
+use cagr::coordinator::{GroupingWithPrefetch, JaccardGrouping};
 use cagr::harness::banner;
 use cagr::harness::runner::{ensure_dataset, run_workload};
 use cagr::metrics::{render_table, write_csv};
@@ -38,14 +38,14 @@ fn main() -> anyhow::Result<()> {
         let mut groups = 0usize;
         // Third arm: QGP with the paper's literal "after the vector search"
         // trigger — converges toward QG in the singleton-group regime.
-        for (label, mode, trigger) in [
-            ("QG", Mode::QG, "start"),
-            ("QGP", Mode::QGP, "start"),
-            ("QGP-post", Mode::QGP, "end"),
+        for (label, policy, trigger) in [
+            ("QG", JaccardGrouping::boxed(), "start"),
+            ("QGP", GroupingWithPrefetch::boxed(), "start"),
+            ("QGP-post", GroupingWithPrefetch::boxed(), "end"),
         ] {
             let mut cfg = cfg.clone();
             cfg.set("prefetch_trigger", trigger)?;
-            let result = run_workload(&cfg, &spec, mode, &queries, 50)?;
+            let result = run_workload(&cfg, &spec, policy, &queries, 50)?;
             p99.push(result.p99_latency());
             groups = result.groups_total;
             csv_rows.push(vec![

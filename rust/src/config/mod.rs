@@ -35,13 +35,17 @@ pub enum CachePolicy {
 }
 
 impl CachePolicy {
+    /// Parse a selector. Case-insensitive and whitespace-tolerant.
     pub fn parse(s: &str) -> anyhow::Result<Self> {
-        match s {
+        match s.trim().to_ascii_lowercase().as_str() {
             "lru" => Ok(CachePolicy::Lru),
             "fifo" => Ok(CachePolicy::Fifo),
             "lfu" => Ok(CachePolicy::Lfu),
             "cost-aware" | "cost_aware" | "edgerag" => Ok(CachePolicy::CostAware),
-            _ => anyhow::bail!("unknown cache policy '{s}' (lru|fifo|lfu|cost-aware)"),
+            other => anyhow::bail!(
+                "unknown cache policy '{other}' (accepted: lru, fifo, lfu, \
+                 cost-aware|cost_aware|edgerag)"
+            ),
         }
     }
 
@@ -65,11 +69,15 @@ pub enum GroupingPolicy {
 }
 
 impl GroupingPolicy {
+    /// Parse a selector. Case-insensitive and whitespace-tolerant.
     pub fn parse(s: &str) -> anyhow::Result<Self> {
-        match s {
+        match s.trim().to_ascii_lowercase().as_str() {
             "single" | "single-link" => Ok(GroupingPolicy::SingleLink),
             "complete" | "complete-link" => Ok(GroupingPolicy::CompleteLink),
-            _ => anyhow::bail!("unknown grouping policy '{s}' (single|complete)"),
+            other => anyhow::bail!(
+                "unknown grouping policy '{other}' (accepted: single|single-link, \
+                 complete|complete-link)"
+            ),
         }
     }
 }
@@ -87,11 +95,12 @@ pub enum GroupOrder {
 }
 
 impl GroupOrder {
+    /// Parse a selector. Case-insensitive and whitespace-tolerant.
     pub fn parse(s: &str) -> anyhow::Result<Self> {
-        match s {
+        match s.trim().to_ascii_lowercase().as_str() {
             "arrival" => Ok(GroupOrder::Arrival),
             "greedy" => Ok(GroupOrder::Greedy),
-            _ => anyhow::bail!("unknown group order '{s}' (arrival|greedy)"),
+            other => anyhow::bail!("unknown group order '{other}' (accepted: arrival, greedy)"),
         }
     }
 }
@@ -111,11 +120,15 @@ pub enum PrefetchTrigger {
 }
 
 impl PrefetchTrigger {
+    /// Parse a selector. Case-insensitive and whitespace-tolerant.
     pub fn parse(s: &str) -> anyhow::Result<Self> {
-        match s {
+        match s.trim().to_ascii_lowercase().as_str() {
             "start" | "last-query-start" => Ok(PrefetchTrigger::LastQueryStart),
             "end" | "after-search" => Ok(PrefetchTrigger::AfterSearch),
-            _ => anyhow::bail!("unknown prefetch trigger '{s}' (start|end)"),
+            other => anyhow::bail!(
+                "unknown prefetch trigger '{other}' (accepted: start|last-query-start, \
+                 end|after-search)"
+            ),
         }
     }
 }
@@ -131,11 +144,12 @@ pub enum Backend {
 }
 
 impl Backend {
+    /// Parse a selector. Case-insensitive and whitespace-tolerant.
     pub fn parse(s: &str) -> anyhow::Result<Self> {
-        match s {
+        match s.trim().to_ascii_lowercase().as_str() {
             "pjrt" => Ok(Backend::Pjrt),
             "native" => Ok(Backend::Native),
-            _ => anyhow::bail!("unknown backend '{s}' (pjrt|native)"),
+            other => anyhow::bail!("unknown backend '{other}' (accepted: pjrt, native)"),
         }
     }
 }
@@ -156,12 +170,15 @@ pub enum DiskProfile {
 }
 
 impl DiskProfile {
+    /// Parse a selector. Case-insensitive and whitespace-tolerant.
     pub fn parse(s: &str) -> anyhow::Result<Self> {
-        match s {
+        match s.trim().to_ascii_lowercase().as_str() {
             "none" => Ok(DiskProfile::None),
             "nvme" => Ok(DiskProfile::Nvme),
             "nvme-scaled" | "scaled" => Ok(DiskProfile::NvmeScaled),
-            _ => anyhow::bail!("unknown disk profile '{s}' (none|nvme|nvme-scaled)"),
+            other => anyhow::bail!(
+                "unknown disk profile '{other}' (accepted: none, nvme, nvme-scaled|scaled)"
+            ),
         }
     }
 }
@@ -462,5 +479,34 @@ mod tests {
         );
         assert_eq!(DiskProfile::parse("nvme").unwrap(), DiskProfile::Nvme);
         assert!(Backend::parse("gpu").is_err());
+    }
+
+    #[test]
+    fn parsers_are_case_insensitive_and_trimmed() {
+        assert_eq!(CachePolicy::parse(" LRU ").unwrap(), CachePolicy::Lru);
+        assert_eq!(CachePolicy::parse("Cost-Aware").unwrap(), CachePolicy::CostAware);
+        assert_eq!(
+            GroupingPolicy::parse("Single-Link").unwrap(),
+            GroupingPolicy::SingleLink
+        );
+        assert_eq!(GroupOrder::parse(" Greedy\t").unwrap(), GroupOrder::Greedy);
+        assert_eq!(
+            PrefetchTrigger::parse("START").unwrap(),
+            PrefetchTrigger::LastQueryStart
+        );
+        assert_eq!(Backend::parse("Native").unwrap(), Backend::Native);
+        assert_eq!(DiskProfile::parse("NVMe-Scaled").unwrap(), DiskProfile::NvmeScaled);
+    }
+
+    #[test]
+    fn parser_errors_list_accepted_values() {
+        let err = CachePolicy::parse("belady").unwrap_err().to_string();
+        assert!(err.contains("lru") && err.contains("cost-aware"), "{err}");
+        let err = GroupOrder::parse("random").unwrap_err().to_string();
+        assert!(err.contains("arrival") && err.contains("greedy"), "{err}");
+        let err = DiskProfile::parse("hdd").unwrap_err().to_string();
+        assert!(err.contains("nvme-scaled"), "{err}");
+        let err = Backend::parse("gpu").unwrap_err().to_string();
+        assert!(err.contains("native"), "{err}");
     }
 }

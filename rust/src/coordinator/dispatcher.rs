@@ -1,11 +1,14 @@
 //! Group dispatcher (Algorithm 1, step 4 — the serving side).
 //!
-//! Walks the [`GroupPlan`] in dispatch order, searching each member through
-//! the engine. When it begins the *last* query of group `G_i`, it fires the
-//! opportunistic prefetch for `C(q_F(G_{i+1}))`, pinning the in-flight
-//! query's own clusters so the prefetch can't cannibalize them — the
-//! prefetch I/O then overlaps the remaining scoring work, which is exactly
-//! the paper's Fig. 3 ⑤ timing.
+//! Walks a [`GroupPlan`] in dispatch order, searching each member through
+//! the engine. The dispatcher is policy-agnostic: it never inspects which
+//! strategy produced the plan. When it begins the *last* query of group
+//! `G_i` it asks the active [`SchedulePolicy`] what to prefetch
+//! ([`SchedulePolicy::prefetch_at`]); for the built-in CaGR-RAG policy that
+//! is `C(q_F(G_{i+1}))`, pinned against the in-flight query's own clusters
+//! so the prefetch can't cannibalize them — the prefetch I/O then overlaps
+//! the remaining scoring work, which is exactly the paper's Fig. 3 ⑤
+//! timing.
 
 use crate::config::PrefetchTrigger;
 use crate::engine::{PreparedQuery, SearchEngine};
@@ -13,6 +16,7 @@ use crate::index::Hit;
 use crate::metrics::SearchReport;
 
 use super::grouping::GroupPlan;
+use super::policy::SchedulePolicy;
 use super::prefetch::Prefetcher;
 
 /// Result of one query, annotated with its group.
@@ -24,13 +28,14 @@ pub struct QueryOutcome {
     pub group: usize,
 }
 
-/// Dispatch a grouped plan. Returns outcomes in *dispatch* order (the
-/// reordered sequence CaGR-RAG sends to the vector database); callers keyed
-/// on arrival order can use `report.query_id`.
-pub fn dispatch_plan(
+/// Dispatch a plan under a policy. Returns outcomes in *dispatch* order
+/// (the reordered sequence sent to the vector database); callers keyed on
+/// arrival order can use `report.query_id`.
+pub fn dispatch(
     engine: &mut SearchEngine,
     prepared: &[PreparedQuery],
     plan: &GroupPlan,
+    policy: &dyn SchedulePolicy,
     prefetcher: Option<&Prefetcher>,
 ) -> anyhow::Result<Vec<QueryOutcome>> {
     let mut outcomes = Vec::with_capacity(prepared.len());
@@ -39,22 +44,20 @@ pub fn dispatch_plan(
             let pq = &prepared[qidx];
             let is_last = mi + 1 == group.members.len();
             let trigger = engine.cfg.prefetch_trigger;
-            let fire = |engine: &SearchEngine| {
-                // Fire-and-forget prefetch of the next group's first
-                // query's clusters, protecting this query's working set.
-                let _ = engine; // prefetcher handles shared state
-                if let (Some(pf), Some((_, next_clusters))) =
-                    (prefetcher, plan.next_first[gi].as_ref())
-                {
-                    pf.request(next_clusters.clone(), pq.clusters.clone());
+            let fire = || {
+                // Fire-and-forget prefetch of whatever the policy wants
+                // loaded for the upcoming switch, protecting this query's
+                // working set.
+                if let (Some(pf), Some(clusters)) = (prefetcher, policy.prefetch_at(plan, gi)) {
+                    pf.request(clusters, pq.clusters.clone());
                 }
             };
             if is_last && trigger == PrefetchTrigger::LastQueryStart {
-                fire(engine);
+                fire();
             }
             let (report, hits) = engine.search(pq)?;
             if is_last && trigger == PrefetchTrigger::AfterSearch {
-                fire(engine);
+                fire();
             }
             outcomes.push(QueryOutcome { report, hits, group: gi });
             if mi == 0 && prefetcher.is_some() {
@@ -71,8 +74,9 @@ pub fn dispatch_plan(
     Ok(outcomes)
 }
 
-/// Dispatch in plain arrival order (the baseline: no grouping, no
-/// prefetch).
+/// Dispatch in plain arrival order with no plan and no prefetch — a
+/// convenience equivalent to dispatching an `arrival_plan`, kept for direct
+/// engine-level tests.
 pub fn dispatch_sequential(
     engine: &mut SearchEngine,
     prepared: &[PreparedQuery],
@@ -91,6 +95,7 @@ mod tests {
     use super::*;
     use crate::config::GroupingPolicy;
     use crate::coordinator::grouping::group_queries;
+    use crate::coordinator::policy::{GroupingWithPrefetch, JaccardGrouping};
     use crate::engine::testutil::tiny_engine;
     use crate::workload::generate_queries;
     use std::sync::Arc;
@@ -101,7 +106,8 @@ mod tests {
         let queries = generate_queries(&engine.spec);
         let prepared = engine.prepare(&queries[..20]).unwrap();
         let plan = group_queries(&prepared, 0.3, GroupingPolicy::SingleLink);
-        let outcomes = dispatch_plan(&mut engine, &prepared, &plan, None).unwrap();
+        let outcomes =
+            dispatch(&mut engine, &prepared, &plan, &JaccardGrouping::default(), None).unwrap();
         assert_eq!(outcomes.len(), 20);
         let mut ids: Vec<usize> = outcomes.iter().map(|o| o.report.query_id).collect();
         ids.sort_unstable();
@@ -123,7 +129,8 @@ mod tests {
 
         let seq = dispatch_sequential(&mut engine_a, &prep_a).unwrap();
         let plan = group_queries(&prep_b, 0.3, GroupingPolicy::SingleLink);
-        let grouped = dispatch_plan(&mut engine_b, &prep_b, &plan, None).unwrap();
+        let grouped =
+            dispatch(&mut engine_b, &prep_b, &plan, &JaccardGrouping::default(), None).unwrap();
 
         let by_id = |outs: &[QueryOutcome]| {
             let mut v: Vec<(usize, Vec<u32>)> = outs
@@ -152,10 +159,38 @@ mod tests {
             Arc::clone(&engine.inflight),
         );
         let n_groups = plan.groups.len();
-        dispatch_plan(&mut engine, &prepared, &plan, Some(&pf)).unwrap();
+        dispatch(
+            &mut engine,
+            &prepared,
+            &plan,
+            &GroupingWithPrefetch::default(),
+            Some(&pf),
+        )
+        .unwrap();
         pf.quiesce();
         let completed = pf.counters.completed.load(std::sync::atomic::Ordering::SeqCst);
         assert_eq!(completed as usize, n_groups - 1, "one prefetch per switch");
+        drop(pf);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn prefetchless_policy_never_requests() {
+        // Even with a live prefetcher attached, a policy whose hook returns
+        // None (QG) must not trigger a single prefetch.
+        let (mut engine, dir) = tiny_engine("disp-noreq", |_| {});
+        let queries = generate_queries(&engine.spec);
+        let prepared = engine.prepare(&queries[..12]).unwrap();
+        let plan = group_queries(&prepared, 1.0, GroupingPolicy::SingleLink);
+        let pf = Prefetcher::spawn(
+            engine.index.clone(),
+            Arc::clone(&engine.cache),
+            Arc::clone(&engine.disk),
+            Arc::clone(&engine.inflight),
+        );
+        dispatch(&mut engine, &prepared, &plan, &JaccardGrouping::default(), Some(&pf)).unwrap();
+        pf.quiesce();
+        assert_eq!(pf.counters.completed.load(std::sync::atomic::Ordering::SeqCst), 0);
         drop(pf);
         std::fs::remove_dir_all(&dir).ok();
     }
@@ -166,7 +201,8 @@ mod tests {
         let queries = generate_queries(&engine.spec);
         let prepared = engine.prepare(&queries[..12]).unwrap();
         let plan = group_queries(&prepared, 0.5, GroupingPolicy::SingleLink);
-        let outcomes = dispatch_plan(&mut engine, &prepared, &plan, None).unwrap();
+        let outcomes =
+            dispatch(&mut engine, &prepared, &plan, &JaccardGrouping::default(), None).unwrap();
         let mut cursor = 0;
         for (gi, group) in plan.groups.iter().enumerate() {
             for &qidx in &group.members {

@@ -66,6 +66,31 @@ fn group_similarity(policy: GroupingPolicy, group: &QueryGroup, candidate: &[u32
     }
 }
 
+/// Degenerate plan used by arrival-order policies: every query in a single
+/// group, in arrival order, with zero grouping cost. Dispatching this plan
+/// is exactly the sequential baseline. The group carries no cluster sets
+/// (`member_clusters`/`clusters` stay empty): the dispatcher only walks
+/// `members`, and arrival-order policies never prefetch or reorder — so the
+/// baseline arm pays none of the grouping arms' set bookkeeping.
+pub fn arrival_plan(prepared: &[PreparedQuery]) -> GroupPlan {
+    if prepared.is_empty() {
+        return GroupPlan {
+            groups: Vec::new(),
+            next_first: Vec::new(),
+            grouping_cost: Duration::ZERO,
+        };
+    }
+    GroupPlan {
+        groups: vec![QueryGroup {
+            members: (0..prepared.len()).collect(),
+            member_clusters: Vec::new(),
+            clusters: Vec::new(),
+        }],
+        next_first: vec![None],
+        grouping_cost: Duration::ZERO,
+    }
+}
+
 /// Algorithm 1 over a prepared batch.
 pub fn group_queries(
     prepared: &[PreparedQuery],
@@ -265,6 +290,23 @@ mod tests {
         let plan = group_queries(&[], 0.5, GroupingPolicy::SingleLink);
         assert!(plan.groups.is_empty());
         assert!(plan.next_first.is_empty());
+    }
+
+    #[test]
+    fn arrival_plan_is_one_group_in_arrival_order() {
+        let batch = vec![pq(0, &[5, 1]), pq(1, &[9]), pq(2, &[1, 5])];
+        let plan = arrival_plan(&batch);
+        assert_eq!(plan.groups.len(), 1);
+        assert_eq!(plan.dispatch_order(), vec![0, 1, 2]);
+        // The degenerate plan skips cluster-set bookkeeping entirely.
+        assert!(plan.groups[0].clusters.is_empty());
+        assert!(plan.groups[0].member_clusters.is_empty());
+        assert_eq!(plan.next_first, vec![None]);
+        assert_eq!(plan.grouping_cost, Duration::ZERO);
+
+        let empty = arrival_plan(&[]);
+        assert!(empty.groups.is_empty());
+        assert!(empty.next_first.is_empty());
     }
 
     #[test]

@@ -2,19 +2,24 @@
 //!
 //! Pipeline per arrival batch (paper Fig. 3, CaGR-RAG side):
 //!   ① `engine.prepare`: encode + first-level scan -> `C(q_i)` per query
-//!   ② `grouping::group_queries`: Algorithm 1 steps 1–3 -> `GroupPlan`
-//!      (the data structure D with next-group first-query links)
-//!   ③ `dispatcher::dispatch_plan`: search groups in order, firing the
-//!      opportunistic prefetcher at every group switch
+//!   ② `policy.plan`: the active [`SchedulePolicy`] orders the batch into a
+//!      `GroupPlan` (Algorithm 1 steps 1–3 for the grouping policies; a
+//!      single arrival-order group for the baseline)
+//!   ③ `dispatcher::dispatch`: search groups in order, firing the policy's
+//!      prefetch hook at every group switch
 //!
-//! The baseline mode (`Mode::Baseline`) skips ②–③ and searches in arrival
-//! order — that, plus the cost-aware cache, is the EdgeRAG comparison
-//! target of §4. `Mode::QG` (grouping only) and `Mode::QGP` (grouping +
-//! prefetch) are the Fig. 7 ablation arms.
+//! Policy selection is open: [`ArrivalOrder`] is the EdgeRAG comparison
+//! target of §4, [`JaccardGrouping`] (QG) and [`GroupingWithPrefetch`] (QGP)
+//! are the Fig. 7 ablation arms, and new strategies implement
+//! [`SchedulePolicy`] without touching this module. The legacy [`Mode`] enum
+//! survives only as a thin shim so existing CLI flags (`--mode qgp`) and
+//! config files keep working; new code should construct policies (or a
+//! `session::Session`) directly.
 
 pub mod dispatcher;
 pub mod grouping;
 pub mod jaccard;
+pub mod policy;
 pub mod prefetch;
 
 use std::sync::Arc;
@@ -26,9 +31,15 @@ use crate::workload::Query;
 
 pub use dispatcher::QueryOutcome;
 pub use grouping::{group_queries, reorder_groups_greedy, GroupPlan, QueryGroup};
+pub use policy::{ArrivalOrder, GroupingWithPrefetch, JaccardGrouping, PolicyCtx, SchedulePolicy};
 pub use prefetch::Prefetcher;
 
-/// Coordinator operating mode (§4.4 terminology).
+/// Legacy coordinator operating mode (§4.4 terminology).
+///
+/// Deprecated shim: each mode maps onto one built-in [`SchedulePolicy`] via
+/// [`Mode::to_policy`]. It is kept so `--mode baseline|qg|qgp` CLI flags and
+/// recorded configs continue to parse; prefer constructing policies
+/// directly.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Mode {
     /// No grouping, no prefetch; arrival order (EdgeRAG baseline shape).
@@ -40,12 +51,16 @@ pub enum Mode {
 }
 
 impl Mode {
+    /// Parse a mode selector. Case-insensitive and whitespace-tolerant.
     pub fn parse(s: &str) -> anyhow::Result<Mode> {
-        match s {
+        match s.trim().to_ascii_lowercase().as_str() {
             "baseline" | "edgerag" => Ok(Mode::Baseline),
             "qg" | "grouping" => Ok(Mode::QG),
             "qgp" | "cagr" | "cagr-rag" => Ok(Mode::QGP),
-            _ => anyhow::bail!("unknown mode '{s}' (baseline|qg|qgp)"),
+            other => anyhow::bail!(
+                "unknown mode '{other}' (accepted: baseline|edgerag, qg|grouping, \
+                 qgp|cagr|cagr-rag)"
+            ),
         }
     }
 
@@ -65,6 +80,21 @@ impl Mode {
             (true, true) => Mode::QGP,
         }
     }
+
+    /// The built-in [`SchedulePolicy`] this legacy mode stands for.
+    pub fn to_policy(self) -> Box<dyn SchedulePolicy> {
+        match self {
+            Mode::Baseline => ArrivalOrder::boxed(),
+            Mode::QG => JaccardGrouping::boxed(),
+            Mode::QGP => GroupingWithPrefetch::boxed(),
+        }
+    }
+}
+
+impl From<Mode> for Box<dyn SchedulePolicy> {
+    fn from(mode: Mode) -> Box<dyn SchedulePolicy> {
+        mode.to_policy()
+    }
 }
 
 /// Aggregate statistics for one processed batch.
@@ -76,16 +106,19 @@ pub struct BatchStats {
     pub prefetches_issued: usize,
 }
 
-/// The serving coordinator: one engine + (optionally) one prefetch thread.
+/// The serving coordinator: one engine + one schedule policy +
+/// (when the policy asks for it) one prefetch thread.
 pub struct Coordinator {
     pub engine: SearchEngine,
-    pub mode: Mode,
+    policy: Box<dyn SchedulePolicy>,
     prefetcher: Option<Prefetcher>,
 }
 
 impl Coordinator {
-    pub fn new(engine: SearchEngine, mode: Mode) -> Coordinator {
-        let prefetcher = if mode == Mode::QGP {
+    /// Assemble a coordinator around `engine` driven by `policy`. The
+    /// prefetch thread is spawned only when the policy wants it.
+    pub fn new(engine: SearchEngine, policy: Box<dyn SchedulePolicy>) -> Coordinator {
+        let prefetcher = if policy.wants_prefetch() {
             Some(Prefetcher::spawn_with(
                 engine.index.clone(),
                 Arc::clone(&engine.cache),
@@ -96,51 +129,56 @@ impl Coordinator {
         } else {
             None
         };
-        Coordinator { engine, mode, prefetcher }
+        Coordinator { engine, policy, prefetcher }
+    }
+
+    /// Legacy shim: construct from a [`Mode`] selector.
+    pub fn from_mode(engine: SearchEngine, mode: Mode) -> Coordinator {
+        Coordinator::new(engine, mode.to_policy())
+    }
+
+    /// Name of the active policy ("baseline", "qg", "qgp", or custom).
+    pub fn policy_name(&self) -> &str {
+        self.policy.name()
+    }
+
+    /// The active policy.
+    pub fn policy(&self) -> &dyn SchedulePolicy {
+        self.policy.as_ref()
     }
 
     /// Process one arrival batch end-to-end. Outcomes are returned in
-    /// dispatch order (arrival order for `Baseline`).
+    /// *dispatch* order (arrival order for [`ArrivalOrder`]).
     pub fn process_batch(
         &mut self,
         queries: &[Query],
     ) -> anyhow::Result<(Vec<QueryOutcome>, BatchStats)> {
         let prepared = self.engine.prepare(queries)?;
-        match self.mode {
-            Mode::Baseline => {
-                let outcomes = dispatcher::dispatch_sequential(&mut self.engine, &prepared)?;
-                Ok((
-                    outcomes,
-                    BatchStats { batch_size: queries.len(), groups: 0, ..Default::default() },
-                ))
-            }
-            Mode::QG | Mode::QGP => {
-                let mut plan = group_queries(
-                    &prepared,
-                    self.engine.cfg.theta,
-                    self.engine.cfg.grouping,
-                );
-                if self.engine.cfg.group_order == crate::config::GroupOrder::Greedy {
-                    grouping::reorder_groups_greedy(&mut plan);
-                }
-                let stats = BatchStats {
-                    batch_size: queries.len(),
-                    groups: plan.groups.len(),
-                    grouping_cost: plan.grouping_cost,
-                    prefetches_issued: plan.groups.len().saturating_sub(1),
-                };
-                let outcomes = dispatcher::dispatch_plan(
-                    &mut self.engine,
-                    &prepared,
-                    &plan,
-                    self.prefetcher.as_ref(),
-                )?;
-                Ok((outcomes, stats))
-            }
-        }
+        let plan = {
+            let ctx = PolicyCtx { cfg: &self.engine.cfg };
+            self.policy.plan(&prepared, &ctx)
+        };
+        let grouping = self.policy.is_grouping();
+        let prefetching = self.policy.wants_prefetch();
+        let stats = BatchStats {
+            batch_size: queries.len(),
+            groups: if grouping { plan.groups.len() } else { 0 },
+            grouping_cost: if grouping { plan.grouping_cost } else { Duration::ZERO },
+            // One prefetch per group switch — only when this policy actually
+            // drives the prefetcher (QG reports 0, matching its counters).
+            prefetches_issued: if prefetching { plan.groups.len().saturating_sub(1) } else { 0 },
+        };
+        let outcomes = dispatcher::dispatch(
+            &mut self.engine,
+            &prepared,
+            &plan,
+            self.policy.as_ref(),
+            self.prefetcher.as_ref(),
+        )?;
+        Ok((outcomes, stats))
     }
 
-    /// Prefetcher counters (zeros when mode != QGP).
+    /// Prefetcher counters (zeros when the policy runs without prefetch).
     pub fn prefetch_counters(&self) -> (u64, u64, u64) {
         match &self.prefetcher {
             Some(pf) => {
@@ -170,9 +208,13 @@ mod tests {
     use crate::engine::testutil::tiny_engine;
     use crate::workload::{generate_queries, traffic};
 
-    fn coordinator(tag: &str, mode: Mode, mutate: impl FnOnce(&mut Config)) -> (Coordinator, std::path::PathBuf) {
+    fn coordinator(
+        tag: &str,
+        mode: Mode,
+        mutate: impl FnOnce(&mut Config),
+    ) -> (Coordinator, std::path::PathBuf) {
         let (engine, dir) = tiny_engine(tag, mutate);
-        (Coordinator::new(engine, mode), dir)
+        (Coordinator::from_mode(engine, mode), dir)
     }
 
     #[test]
@@ -181,6 +223,12 @@ mod tests {
         assert_eq!(Mode::parse("cagr").unwrap(), Mode::QGP);
         assert_eq!(Mode::parse("qg").unwrap(), Mode::QG);
         assert!(Mode::parse("x").is_err());
+        // case-insensitive + whitespace-tolerant
+        assert_eq!(Mode::parse("QGP").unwrap(), Mode::QGP);
+        assert_eq!(Mode::parse("  Baseline ").unwrap(), Mode::Baseline);
+        assert_eq!(Mode::parse("CaGR-RAG").unwrap(), Mode::QGP);
+        let err = Mode::parse("bogus").unwrap_err().to_string();
+        assert!(err.contains("baseline") && err.contains("qgp"), "{err}");
     }
 
     #[test]
@@ -190,6 +238,16 @@ mod tests {
         assert_eq!(Mode::from_config(&cfg, true), Mode::QGP);
         cfg.prefetch = false;
         assert_eq!(Mode::from_config(&cfg, true), Mode::QG);
+    }
+
+    #[test]
+    fn mode_maps_to_policy() {
+        assert_eq!(Mode::Baseline.to_policy().name(), "baseline");
+        assert_eq!(Mode::QG.to_policy().name(), "qg");
+        assert_eq!(Mode::QGP.to_policy().name(), "qgp");
+        assert!(!Mode::Baseline.to_policy().wants_prefetch());
+        assert!(!Mode::QG.to_policy().wants_prefetch());
+        assert!(Mode::QGP.to_policy().wants_prefetch());
     }
 
     #[test]
@@ -243,10 +301,51 @@ mod tests {
         let (outcomes, stats) = coord.process_batch(&queries[..10]).unwrap();
         assert_eq!(stats.groups, 0);
         assert_eq!(coord.prefetch_counters(), (0, 0, 0));
+        assert_eq!(coord.policy_name(), "baseline");
         // arrival order preserved
         let ids: Vec<usize> = outcomes.iter().map(|o| o.report.query_id).collect();
         let want: Vec<usize> = queries[..10].iter().map(|q| q.id).collect();
         assert_eq!(ids, want);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn custom_policy_plugs_in_without_touching_dispatch() {
+        // A policy the built-ins don't cover: reverse arrival order. The
+        // coordinator + dispatcher accept it unchanged — the point of the
+        // SchedulePolicy redesign.
+        struct ReverseOrder;
+        impl SchedulePolicy for ReverseOrder {
+            fn name(&self) -> &str {
+                "reverse"
+            }
+            fn plan(
+                &self,
+                prepared: &[crate::engine::PreparedQuery],
+                _ctx: &PolicyCtx<'_>,
+            ) -> GroupPlan {
+                let mut plan = grouping::arrival_plan(prepared);
+                if let Some(group) = plan.groups.first_mut() {
+                    group.members.reverse();
+                    group.member_clusters.reverse();
+                }
+                plan
+            }
+            fn is_grouping(&self) -> bool {
+                false
+            }
+        }
+
+        let (engine, dir) = tiny_engine("coord-custom", |_| {});
+        let mut coord = Coordinator::new(engine, Box::new(ReverseOrder));
+        let queries = generate_queries(&coord.engine.spec);
+        let (outcomes, stats) = coord.process_batch(&queries[..8]).unwrap();
+        assert_eq!(coord.policy_name(), "reverse");
+        assert_eq!(stats.groups, 0);
+        let ids: Vec<usize> = outcomes.iter().map(|o| o.report.query_id).collect();
+        let mut want: Vec<usize> = queries[..8].iter().map(|q| q.id).collect();
+        want.reverse();
+        assert_eq!(ids, want, "dispatch must follow the custom plan");
         std::fs::remove_dir_all(&dir).ok();
     }
 

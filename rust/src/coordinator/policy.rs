@@ -1,0 +1,246 @@
+//! Pluggable batch-scheduling policies — the open surface of the serving
+//! stack.
+//!
+//! The paper evaluates exactly three arms (arrival order, grouping, grouping
+//! + prefetch). Instead of hard-wiring them into the coordinator as an enum,
+//! every arm is a [`SchedulePolicy`]: given a prepared batch it produces a
+//! [`GroupPlan`] (the dispatch order) and, via [`SchedulePolicy::prefetch_at`],
+//! decides what the opportunistic prefetcher loads at each group switch.
+//! New strategies — semantic-centroid grouping, CALL-style reordering
+//! (arxiv 2509.18670), per-tenant policies — drop in by implementing the
+//! trait; the coordinator, dispatcher, server, and benches never change.
+//!
+//! Built-ins:
+//!  * [`ArrivalOrder`] — the EdgeRAG-shaped baseline: one pass in arrival
+//!    order, no grouping stats, no prefetch.
+//!  * [`JaccardGrouping`] — Algorithm 1 grouping (the paper's QG arm).
+//!  * [`GroupingWithPrefetch`] — grouping + opportunistic prefetch (QGP,
+//!    full CaGR-RAG).
+//!
+//! Policies read tunables (θ, link policy, inter-group order) from the
+//! [`PolicyCtx`]'s config by default; each field can be overridden per
+//! policy instance for ablations that sweep a knob without cloning configs.
+
+use crate::config::{Config, GroupOrder, GroupingPolicy};
+use crate::engine::PreparedQuery;
+
+use super::grouping::{self, GroupPlan};
+
+/// Everything a policy may consult while planning one arrival batch.
+pub struct PolicyCtx<'a> {
+    /// The serving configuration of the engine the plan will run on.
+    pub cfg: &'a Config,
+}
+
+/// A batch-scheduling strategy: plans the dispatch order of one prepared
+/// arrival batch and (optionally) drives the opportunistic prefetcher.
+///
+/// Implementations must be `Send`: the server constructs its session on a
+/// dedicated dispatch thread.
+pub trait SchedulePolicy: Send {
+    /// Short identifier used in logs, tables, and `RunResult`s.
+    fn name(&self) -> &str;
+
+    /// Order the prepared batch into a dispatch plan.
+    fn plan(&self, prepared: &[PreparedQuery], ctx: &PolicyCtx<'_>) -> GroupPlan;
+
+    /// Whether a session running this policy should spawn the opportunistic
+    /// prefetcher thread.
+    fn wants_prefetch(&self) -> bool {
+        false
+    }
+
+    /// Whether plans from this policy represent genuine query grouping.
+    /// `false` keeps arrival-order stats reporting zero groups (the
+    /// baseline's historical accounting).
+    fn is_grouping(&self) -> bool {
+        true
+    }
+
+    /// Prefetch hook, called by the dispatcher when it reaches group
+    /// `group_idx`'s switch window (the last query of the group): the
+    /// cluster ids to load ahead of the next group, or `None` to skip.
+    ///
+    /// The default implements the paper's rule — prefetch
+    /// `C(q_F(G_{i+1}))`, the clusters of the next group's first query —
+    /// whenever the policy wants prefetch at all.
+    fn prefetch_at(&self, plan: &GroupPlan, group_idx: usize) -> Option<Vec<u32>> {
+        if !self.wants_prefetch() {
+            return None;
+        }
+        plan.next_first
+            .get(group_idx)?
+            .as_ref()
+            .map(|(_, clusters)| clusters.clone())
+    }
+}
+
+/// Baseline policy: dispatch in plain arrival order (EdgeRAG shape). No
+/// grouping cost, no groups reported, no prefetch.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ArrivalOrder;
+
+impl ArrivalOrder {
+    /// Convenience: a boxed trait object of this policy.
+    pub fn boxed() -> Box<dyn SchedulePolicy> {
+        Box::new(ArrivalOrder)
+    }
+}
+
+impl SchedulePolicy for ArrivalOrder {
+    fn name(&self) -> &str {
+        "baseline"
+    }
+
+    fn plan(&self, prepared: &[PreparedQuery], _ctx: &PolicyCtx<'_>) -> GroupPlan {
+        grouping::arrival_plan(prepared)
+    }
+
+    fn is_grouping(&self) -> bool {
+        false
+    }
+}
+
+/// Context-aware Jaccard grouping (paper Algorithm 1) without prefetch —
+/// the Fig. 7 "QG" arm.
+///
+/// Every knob defaults to the config value at plan time; set a field to
+/// override it for this policy instance only.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct JaccardGrouping {
+    /// Override the config's Jaccard threshold θ.
+    pub theta: Option<f64>,
+    /// Override the config's link policy (single- vs complete-link).
+    pub link: Option<GroupingPolicy>,
+    /// Override the config's inter-group dispatch order.
+    pub order: Option<GroupOrder>,
+}
+
+impl JaccardGrouping {
+    /// Convenience: a boxed trait object with config-driven knobs.
+    pub fn boxed() -> Box<dyn SchedulePolicy> {
+        Box::new(JaccardGrouping::default())
+    }
+
+    fn make_plan(&self, prepared: &[PreparedQuery], ctx: &PolicyCtx<'_>) -> GroupPlan {
+        let theta = self.theta.unwrap_or(ctx.cfg.theta);
+        let link = self.link.unwrap_or(ctx.cfg.grouping);
+        let order = self.order.unwrap_or(ctx.cfg.group_order);
+        let mut plan = grouping::group_queries(prepared, theta, link);
+        if order == GroupOrder::Greedy {
+            grouping::reorder_groups_greedy(&mut plan);
+        }
+        plan
+    }
+}
+
+impl SchedulePolicy for JaccardGrouping {
+    fn name(&self) -> &str {
+        "qg"
+    }
+
+    fn plan(&self, prepared: &[PreparedQuery], ctx: &PolicyCtx<'_>) -> GroupPlan {
+        self.make_plan(prepared, ctx)
+    }
+}
+
+/// Full CaGR-RAG: Jaccard grouping plus the opportunistic prefetch of the
+/// next group's first-query clusters at every group switch (the Fig. 7
+/// "QGP" arm).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct GroupingWithPrefetch {
+    /// The underlying grouping knobs (config-driven by default).
+    pub grouping: JaccardGrouping,
+}
+
+impl GroupingWithPrefetch {
+    /// Convenience: a boxed trait object with config-driven knobs.
+    pub fn boxed() -> Box<dyn SchedulePolicy> {
+        Box::new(GroupingWithPrefetch::default())
+    }
+}
+
+impl SchedulePolicy for GroupingWithPrefetch {
+    fn name(&self) -> &str {
+        "qgp"
+    }
+
+    fn plan(&self, prepared: &[PreparedQuery], ctx: &PolicyCtx<'_>) -> GroupPlan {
+        self.grouping.make_plan(prepared, ctx)
+    }
+
+    fn wants_prefetch(&self) -> bool {
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::Query;
+    use std::time::Duration;
+
+    fn pq(id: usize, clusters: &[u32]) -> PreparedQuery {
+        PreparedQuery {
+            query: Query { id, template: 0, topic: 0, tokens: vec![] },
+            embedding: vec![],
+            clusters: clusters.to_vec(),
+            prep_cost: Duration::ZERO,
+        }
+    }
+
+    fn batch() -> Vec<PreparedQuery> {
+        vec![
+            pq(0, &[1, 2, 3]),
+            pq(1, &[7, 8, 9]),
+            pq(2, &[3, 2, 1]),
+            pq(3, &[9, 8, 7]),
+        ]
+    }
+
+    #[test]
+    fn arrival_order_is_one_group_in_order() {
+        let cfg = Config::default();
+        let ctx = PolicyCtx { cfg: &cfg };
+        let plan = ArrivalOrder.plan(&batch(), &ctx);
+        assert_eq!(plan.groups.len(), 1);
+        assert_eq!(plan.dispatch_order(), vec![0, 1, 2, 3]);
+        assert!(!ArrivalOrder.is_grouping());
+        assert!(ArrivalOrder.prefetch_at(&plan, 0).is_none());
+    }
+
+    #[test]
+    fn jaccard_grouping_matches_algorithm_one() {
+        let cfg = Config::default();
+        let ctx = PolicyCtx { cfg: &cfg };
+        let policy = JaccardGrouping::default();
+        let plan = policy.plan(&batch(), &ctx);
+        let want = grouping::group_queries(&batch(), cfg.theta, cfg.grouping);
+        assert_eq!(plan.dispatch_order(), want.dispatch_order());
+        assert!(policy.prefetch_at(&plan, 0).is_none(), "QG never prefetches");
+    }
+
+    #[test]
+    fn theta_override_beats_config() {
+        let mut cfg = Config::default();
+        cfg.theta = 1.0; // config says singleton groups
+        let ctx = PolicyCtx { cfg: &cfg };
+        let grouped = JaccardGrouping { theta: Some(0.0), ..Default::default() };
+        let plan = grouped.plan(&batch(), &ctx);
+        assert_eq!(plan.groups.len(), 1, "theta=0 override must group everything");
+    }
+
+    #[test]
+    fn prefetch_hook_returns_next_groups_first_query() {
+        let cfg = Config::default();
+        let ctx = PolicyCtx { cfg: &cfg };
+        let policy = GroupingWithPrefetch::default();
+        let plan = policy.plan(&batch(), &ctx);
+        assert!(plan.groups.len() >= 2);
+        let got = policy.prefetch_at(&plan, 0).expect("switch must prefetch");
+        let want = plan.next_first[0].as_ref().unwrap().1.clone();
+        assert_eq!(got, want);
+        assert!(policy.prefetch_at(&plan, plan.groups.len() - 1).is_none());
+        assert!(policy.prefetch_at(&plan, 99).is_none(), "oob is None, not panic");
+    }
+}

@@ -3,18 +3,19 @@
 //! Every figure bench and example drives the same code path used in
 //! production serving; only parameters differ. The runner provisions (or
 //! reuses) a built index, replays the dataset's query stream through a
-//! coordinator in the requested mode, and returns per-query reports in
-//! arrival order plus aggregate statistics.
+//! [`Session`] under the requested [`SchedulePolicy`], and returns
+//! per-query reports in arrival order plus aggregate statistics.
 
 use std::time::Duration;
 
 use crate::cache::CacheStats;
 use crate::config::Config;
-use crate::coordinator::{Coordinator, Mode};
-use crate::engine::{embedding_label, profile, SearchEngine};
+use crate::coordinator::{Mode, SchedulePolicy};
+use crate::engine::{embedding_label, profile};
 use crate::index::{BuildParams, IvfIndex};
 use crate::metrics::{LatencyRecorder, SearchReport};
 use crate::runtime::Compute;
+use crate::session::Session;
 use crate::util::threadpool::ThreadPool;
 use crate::workload::{generate_queries, traffic, DatasetSpec, Query};
 
@@ -77,7 +78,9 @@ pub fn ensure_dataset(cfg: &Config, spec: &DatasetSpec) -> anyhow::Result<()> {
 /// Result of one measured workload run.
 #[derive(Debug)]
 pub struct RunResult {
-    pub mode: Mode,
+    /// Name of the schedule policy that produced this run ("baseline",
+    /// "qg", "qgp", or a custom policy's name).
+    pub policy: String,
     /// Per-query reports in *arrival* order (index == query id), including
     /// warm-up queries.
     pub reports: Vec<SearchReport>,
@@ -88,7 +91,7 @@ pub struct RunResult {
     pub recorder: LatencyRecorder,
     /// Demand cache stats over the measured window.
     pub cache_stats: CacheStats,
-    /// Total groups formed across measured batches (0 for Baseline).
+    /// Total groups formed across measured batches (0 for arrival order).
     pub groups_total: usize,
     /// Total grouping cost across measured batches.
     pub grouping_cost: Duration,
@@ -104,18 +107,24 @@ impl RunResult {
     }
 }
 
-/// Replay `queries` through a fresh coordinator in `mode`. The first
+/// Replay `queries` through a fresh [`Session`] under `policy`. The first
 /// `warmup` queries prime the cache (paper §4.1's 1-minute warm-up); stats
-/// and latency samples cover only the remainder.
+/// and latency samples cover only the remainder. The index must already be
+/// provisioned (call [`ensure_dataset`] first, as every bench does).
 pub fn run_workload(
     cfg: &Config,
     spec: &DatasetSpec,
-    mode: Mode,
+    policy: Box<dyn SchedulePolicy>,
     queries: &[Query],
     warmup: usize,
 ) -> anyhow::Result<RunResult> {
-    let engine = SearchEngine::open(cfg, spec)?;
-    let mut coordinator = Coordinator::new(engine, mode);
+    let mut session = Session::builder()
+        .config(cfg.clone())
+        .dataset(spec.clone())
+        .boxed_policy(policy)
+        .ensure_dataset(false)
+        .open()?;
+    let policy_name = session.policy_name().to_string();
     let mut reports: Vec<Option<SearchReport>> = vec![None; queries.len()];
     let mut recorder = LatencyRecorder::new();
     let mut groups_total = 0usize;
@@ -123,17 +132,17 @@ pub fn run_workload(
 
     let warmup = warmup.min(queries.len());
     for batch in traffic::batches(cfg, &queries[..warmup]) {
-        let (outcomes, _) = coordinator.process_batch(&batch.queries)?;
+        let (outcomes, _) = session.run_batch(&batch.queries)?;
         for o in outcomes {
             let slot = index_of(queries, o.report.query_id);
             reports[slot] = Some(o.report);
         }
     }
-    coordinator.quiesce();
-    coordinator.engine.reset_cache_stats();
+    session.quiesce();
+    session.reset_cache_stats();
 
     for batch in traffic::batches(cfg, &queries[warmup..]) {
-        let (outcomes, stats) = coordinator.process_batch(&batch.queries)?;
+        let (outcomes, stats) = session.run_batch(&batch.queries)?;
         groups_total += stats.groups;
         grouping_cost += stats.grouping_cost;
         for o in outcomes {
@@ -142,9 +151,9 @@ pub fn run_workload(
             reports[slot] = Some(o.report);
         }
     }
-    coordinator.quiesce();
+    session.quiesce();
 
-    let cache_stats = coordinator.engine.cache_stats();
+    let cache_stats = session.cache_stats();
     let reports = reports
         .into_iter()
         .enumerate()
@@ -152,7 +161,7 @@ pub fn run_workload(
         .collect::<anyhow::Result<Vec<_>>>()?;
 
     Ok(RunResult {
-        mode,
+        policy: policy_name,
         reports,
         warmup,
         recorder,
@@ -162,17 +171,28 @@ pub fn run_workload(
     })
 }
 
+/// Legacy shim: run under the built-in policy a [`Mode`] stands for.
+pub fn run_workload_mode(
+    cfg: &Config,
+    spec: &DatasetSpec,
+    mode: Mode,
+    queries: &[Query],
+    warmup: usize,
+) -> anyhow::Result<RunResult> {
+    run_workload(cfg, spec, mode.to_policy(), queries, warmup)
+}
+
 /// Provision + run the dataset's own query stream (the common case).
 pub fn run_dataset(
     cfg: &Config,
     dataset: &str,
-    mode: Mode,
+    policy: Box<dyn SchedulePolicy>,
     warmup: usize,
 ) -> anyhow::Result<(DatasetSpec, RunResult)> {
     let spec = DatasetSpec::by_name(dataset)?;
     ensure_dataset(cfg, &spec)?;
     let queries = generate_queries(&spec);
-    let result = run_workload(cfg, &spec, mode, &queries, warmup)?;
+    let result = run_workload(cfg, &spec, policy, &queries, warmup)?;
     Ok((spec, result))
 }
 
@@ -193,6 +213,7 @@ fn index_of(queries: &[Query], query_id: usize) -> usize {
 mod tests {
     use super::*;
     use crate::config::{Backend, DiskProfile};
+    use crate::coordinator::{ArrivalOrder, GroupingWithPrefetch};
 
     fn tiny_cfg(tag: &str) -> (Config, DatasetSpec) {
         let mut cfg = Config::default();
@@ -246,7 +267,9 @@ mod tests {
         let (cfg, spec) = tiny_cfg("run");
         ensure_dataset(&cfg, &spec).unwrap();
         let queries = generate_queries(&spec);
-        let result = run_workload(&cfg, &spec, Mode::QGP, &queries, 16).unwrap();
+        let result =
+            run_workload(&cfg, &spec, GroupingWithPrefetch::boxed(), &queries, 16).unwrap();
+        assert_eq!(result.policy, "qgp");
         assert_eq!(result.reports.len(), queries.len());
         assert_eq!(result.warmup, 16);
         assert_eq!(result.recorder.len(), queries.len() - 16);
@@ -263,7 +286,7 @@ mod tests {
         let (cfg, spec) = tiny_cfg("clamp");
         ensure_dataset(&cfg, &spec).unwrap();
         let queries = generate_queries(&spec);
-        let result = run_workload(&cfg, &spec, Mode::Baseline, &queries, 10_000).unwrap();
+        let result = run_workload(&cfg, &spec, ArrivalOrder::boxed(), &queries, 10_000).unwrap();
         assert_eq!(result.warmup, queries.len());
         assert!(result.recorder.is_empty());
         std::fs::remove_dir_all(&cfg.data_dir).ok();
@@ -274,11 +297,23 @@ mod tests {
         let (cfg, spec) = tiny_cfg("agree");
         ensure_dataset(&cfg, &spec).unwrap();
         let queries = generate_queries(&spec);
-        let a = run_workload(&cfg, &spec, Mode::Baseline, &queries, 0).unwrap();
-        let b = run_workload(&cfg, &spec, Mode::QGP, &queries, 0).unwrap();
+        let a = run_workload(&cfg, &spec, ArrivalOrder::boxed(), &queries, 0).unwrap();
+        let b = run_workload(&cfg, &spec, GroupingWithPrefetch::boxed(), &queries, 0).unwrap();
         // Same per-query nprobe everywhere; hit counts differ, results are
         // checked at the dispatcher level (this asserts report coverage).
         assert_eq!(a.reports.len(), b.reports.len());
+        assert_eq!(a.policy, "baseline");
+        assert_eq!(b.policy, "qgp");
+        std::fs::remove_dir_all(&cfg.data_dir).ok();
+    }
+
+    #[test]
+    fn mode_shim_matches_policy_names() {
+        let (cfg, spec) = tiny_cfg("shim");
+        ensure_dataset(&cfg, &spec).unwrap();
+        let queries = generate_queries(&spec);
+        let result = run_workload_mode(&cfg, &spec, Mode::QG, &queries[..30], 0).unwrap();
+        assert_eq!(result.policy, "qg");
         std::fs::remove_dir_all(&cfg.data_dir).ok();
     }
 }

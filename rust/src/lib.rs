@@ -4,7 +4,7 @@
 //! for Disk-based Vector Search in RAG Systems"* (Jeong et al., 2025) as a
 //! three-layer rust + JAX + Pallas stack:
 //!
-//! * **Layer 3 (this crate)** — the serving coordinator: dynamic batching,
+//! * **Layer 3 (this crate)** — the serving stack: dynamic batching,
 //!   context-aware query grouping by Jaccard similarity of cluster-access
 //!   sets, opportunistic cluster prefetching across group switches, a
 //!   disk-based IVF index with pluggable cluster caches, and the EdgeRAG
@@ -16,11 +16,37 @@
 //!
 //! Python never runs on the request path: the rust binary executes the
 //! compiled artifacts through the PJRT CPU client (`runtime`), or a native
-//! rust fallback (`Backend::Native`).
+//! rust fallback (`Backend::Native`, the default).
 //!
-//! Start at [`coordinator::Coordinator`] for the serving pipeline,
+//! ## Serving API
+//!
+//! The public entry point is [`session::Session`], built fluently and
+//! driven with blocking batches or a non-blocking submit/poll loop:
+//!
+//! ```text
+//! use cagr::coordinator::GroupingWithPrefetch;
+//! use cagr::session::Session;
+//!
+//! let mut session = Session::builder()
+//!     .config(cfg)
+//!     .dataset_name("nq-sim")
+//!     .policy(GroupingWithPrefetch::default())   // full CaGR-RAG
+//!     .open()?;
+//! let (outcomes, stats) = session.run_batch(&queries)?;
+//! ```
+//!
+//! Scheduling strategies are open: anything implementing
+//! [`coordinator::SchedulePolicy`] — plan an arrival batch into groups,
+//! optionally steer the prefetcher — plugs into the same session, server,
+//! and benches. The built-ins are [`coordinator::ArrivalOrder`] (EdgeRAG
+//! baseline), [`coordinator::JaccardGrouping`] (QG), and
+//! [`coordinator::GroupingWithPrefetch`] (QGP, full CaGR-RAG); the legacy
+//! `Mode` enum survives only as a parsing shim for `--mode`-style flags.
+//!
+//! Start at `examples/quickstart.rs` for an end-to-end tour,
 //! [`engine::SearchEngine`] for single-query semantics, or
-//! `examples/quickstart.rs` for an end-to-end tour.
+//! [`coordinator::Coordinator`] for the batch pipeline underneath
+//! `Session`.
 
 pub mod cache;
 pub mod config;
@@ -31,6 +57,7 @@ pub mod index;
 pub mod metrics;
 pub mod runtime;
 pub mod server;
+pub mod session;
 pub mod sim;
 pub mod util;
 pub mod workload;

@@ -2,11 +2,14 @@
 //!
 //! Subcommands:
 //!   build-index  --dataset <name|all> [--backend native|pjrt] ...
-//!   serve        --dataset <name> [--addr host:port] [--mode baseline|qg|qgp]
-//!   search       --dataset <name> [--queries N] [--mode ..]   one-shot run
-//!   replay       --trace <file> [--mode ..]                   replay a trace
+//!   serve        --dataset <name> [--addr host:port] [--policy baseline|qg|qgp]
+//!   search       --dataset <name> [--queries N] [--policy ..]   one-shot run
+//!   replay       --trace <file> [--policy ..]                   replay a trace
 //!   record-trace --dataset <name> --out <file>
 //!   info         --dataset <name>                             index summary
+//!
+//! `--policy` selects a schedule policy by name (`--mode` is the legacy
+//! spelling and keeps working); all serving goes through `session::Session`.
 //!
 //! Config: `--config <file.json>` loads a JSON config; any config key can be
 //! overridden with `--set key=value` (repeatable via comma list). Frequent
@@ -14,11 +17,11 @@
 //! --cache-policy, --backend, --disk-profile, --seed.
 
 use cagr::config::Config;
-use cagr::coordinator::{Coordinator, Mode};
-use cagr::engine::SearchEngine;
+use cagr::coordinator::Mode;
 use cagr::harness::runner;
 use cagr::metrics::render_table;
 use cagr::server;
+use cagr::session::Session;
 use cagr::util::cli::Args;
 use cagr::workload::{generate_queries, trace, DatasetSpec};
 
@@ -76,8 +79,11 @@ fn load_config(args: &Args) -> anyhow::Result<Config> {
     Ok(cfg)
 }
 
+/// The schedule policy selector: `--policy` (preferred) or the legacy
+/// `--mode` spelling. Both accept baseline|qg|qgp and their aliases.
 fn mode_of(args: &Args) -> anyhow::Result<Mode> {
-    Mode::parse(args.get_or("mode", "qgp"))
+    let selector = args.get("policy").or_else(|| args.get("mode")).unwrap_or("qgp");
+    Mode::parse(selector)
 }
 
 fn run(args: &Args) -> anyhow::Result<()> {
@@ -123,13 +129,21 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let specs = datasets_arg(args)?;
     anyhow::ensure!(specs.len() == 1, "serve requires a single --dataset");
     let spec = &specs[0];
+    // Provision in the foreground (build progress on the caller's tty),
+    // then hand the server a session factory; the session itself is
+    // constructed on the dispatch thread (PJRT is not Send).
     runner::ensure_dataset(&cfg, spec)?;
     let factory = {
         let cfg = cfg.clone();
         let spec = spec.clone();
-        move || -> anyhow::Result<Coordinator> {
-            let engine = SearchEngine::open(&cfg, &spec)?;
-            Ok(Coordinator::new(engine, mode))
+        let policy = mode.to_policy();
+        move || -> anyhow::Result<Session> {
+            Session::builder()
+                .config(cfg)
+                .dataset(spec)
+                .boxed_policy(policy)
+                .ensure_dataset(false)
+                .open()
         }
     };
     let server_cfg = server::ServerConfig {
@@ -139,7 +153,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     };
     let handle = server::start(factory, server_cfg)?;
     println!(
-        "cagr serving {} on {} (mode={}, cache={}x{}, theta={})",
+        "cagr serving {} on {} (policy={}, cache={}x{}, theta={})",
         spec.name,
         handle.addr,
         mode.name(),
@@ -163,7 +177,7 @@ fn cmd_search(args: &Args) -> anyhow::Result<()> {
     let n = args.get_usize("queries", 200)?.min(spec.n_queries);
     let warmup = args.get_usize("warmup", 50)?;
     let queries = generate_queries(spec);
-    let result = runner::run_workload(&cfg, spec, mode, &queries[..n], warmup)?;
+    let result = runner::run_workload(&cfg, spec, mode.to_policy(), &queries[..n], warmup)?;
     print_run_summary(spec.name, &result);
     Ok(())
 }
@@ -178,7 +192,7 @@ fn cmd_replay(args: &Args) -> anyhow::Result<()> {
     let spec = DatasetSpec::by_name(&dataset)?;
     runner::ensure_dataset(&cfg, &spec)?;
     let warmup = args.get_usize("warmup", 0)?;
-    let result = runner::run_workload(&cfg, &spec, mode, &queries, warmup)?;
+    let result = runner::run_workload(&cfg, &spec, mode.to_policy(), &queries, warmup)?;
     print_run_summary(&format!("{dataset} (trace)"), &result);
     Ok(())
 }
@@ -242,8 +256,8 @@ fn cmd_info(args: &Args) -> anyhow::Result<()> {
 
 fn print_run_summary(name: &str, result: &runner::RunResult) {
     println!(
-        "{name} mode={} queries={} (warmup {})",
-        result.mode.name(),
+        "{name} policy={} queries={} (warmup {})",
+        result.policy,
         result.reports.len(),
         result.warmup
     );

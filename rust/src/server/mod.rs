@@ -10,8 +10,8 @@
 //! Connection handlers feed a shared queue; a single dispatch thread
 //! gathers requests into arrival batches (up to `batch_max` or
 //! `batch_window`, mirroring §4.1's batching interval) and runs them
-//! through the coordinator. The coordinator — and with it the PJRT
-//! runtime — stays on one thread; handlers only do I/O.
+//! through a [`Session`]. The session — and with it the PJRT runtime —
+//! stays on one thread; handlers only do I/O.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -20,7 +20,7 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::Coordinator;
+use crate::session::Session;
 use crate::util::json::{obj, Json};
 use crate::workload::Query;
 
@@ -83,13 +83,19 @@ impl Drop for ServerHandle {
 
 /// Start serving on `cfg.addr` (use port 0 for an ephemeral port).
 ///
-/// Takes a *factory* rather than a coordinator because the PJRT client is
-/// not `Send`: the coordinator (and with it the compiled executables) is
+/// Takes a *session factory* rather than a session because the PJRT client
+/// is not `Send`: the session (and with it the compiled executables) is
 /// constructed on — and never leaves — the dispatch thread. Construction
-/// errors are propagated back through the startup handshake.
-pub fn start<F>(coordinator_factory: F, cfg: ServerConfig) -> anyhow::Result<ServerHandle>
+/// errors are propagated back through the startup handshake. A typical
+/// factory is a `Session::builder()...open()` call:
+///
+/// ```text
+/// let factory = move || Session::builder().config(cfg).dataset(spec).open();
+/// let handle = server::start(factory, ServerConfig::default())?;
+/// ```
+pub fn start<F>(session_factory: F, cfg: ServerConfig) -> anyhow::Result<ServerHandle>
 where
-    F: FnOnce() -> anyhow::Result<Coordinator> + Send + 'static,
+    F: FnOnce() -> anyhow::Result<Session> + Send + 'static,
 {
     let listener = TcpListener::bind(&cfg.addr)
         .map_err(|e| anyhow::anyhow!("binding {}: {e}", cfg.addr))?;
@@ -98,7 +104,7 @@ where
 
     let (req_tx, req_rx) = std::sync::mpsc::channel::<Request>();
 
-    // Dispatch thread: build the coordinator, signal readiness, then
+    // Dispatch thread: build the session, signal readiness, then
     // batch + search until shutdown.
     let dispatch_shutdown = Arc::clone(&shutdown);
     let window = cfg.batch_window;
@@ -107,17 +113,17 @@ where
     let dispatch_thread = std::thread::Builder::new()
         .name("cagr-dispatch".to_string())
         .spawn(move || {
-            let mut coordinator = match coordinator_factory() {
-                Ok(c) => {
+            let mut session = match session_factory() {
+                Ok(s) => {
                     let _ = ready_tx.send(Ok(()));
-                    c
+                    s
                 }
                 Err(e) => {
                     let _ = ready_tx.send(Err(e));
                     return;
                 }
             };
-            dispatch_loop(&mut coordinator, req_rx, window, batch_max, dispatch_shutdown)
+            dispatch_loop(&mut session, req_rx, window, batch_max, dispatch_shutdown)
         })
         .expect("spawn dispatch thread");
     ready_rx
@@ -152,7 +158,7 @@ where
 }
 
 fn dispatch_loop(
-    coordinator: &mut Coordinator,
+    session: &mut Session,
     req_rx: Receiver<Request>,
     window: Duration,
     batch_max: usize,
@@ -184,7 +190,7 @@ fn dispatch_loop(
 
         let queries: Vec<Query> = pending.iter().map(|r| r.query.clone()).collect();
         batch_sizes.push(queries.len());
-        match coordinator.process_batch(&queries) {
+        match session.run_batch(&queries) {
             Ok((outcomes, _stats)) => {
                 for outcome in outcomes {
                     // Route each outcome back to the connection that sent it.
@@ -225,16 +231,16 @@ fn dispatch_loop(
         }
     }
     // Shutdown diagnostics (stderr): demand cache behaviour + batch shape.
-    let stats = coordinator.engine.cache_stats();
+    let stats = session.cache_stats();
     let mean_batch = if batch_sizes.is_empty() {
         0.0
     } else {
         batch_sizes.iter().sum::<usize>() as f64 / batch_sizes.len() as f64
     };
     eprintln!(
-        "[cagr-server] mode={} batches={} mean-batch={:.1} cache-hit={:.1}% \
+        "[cagr-server] policy={} batches={} mean-batch={:.1} cache-hit={:.1}% \
          (hits={} misses={} prefetch-inserts={})",
-        coordinator.mode.name(),
+        session.policy_name(),
         batch_sizes.len(),
         mean_batch,
         100.0 * stats.hit_ratio(),

@@ -1,0 +1,262 @@
+//! `Session` — the single public entry point into the serving stack.
+//!
+//! A session owns the whole assembly behind one served dataset: the disk
+//! index, the search engine (cache + disk model + compute backend), the
+//! active [`SchedulePolicy`], and the prefetch thread when the policy asks
+//! for one. It is built fluently:
+//!
+//! ```text
+//! let mut session = Session::builder()
+//!     .config(cfg)                              // Config (validated at open)
+//!     .dataset_name("nq-sim")                   // or .dataset(spec)
+//!     .policy(GroupingWithPrefetch::default())  // or .mode(Mode::QGP) legacy
+//!     .open()?;                                 // provision + assemble
+//!
+//! // Blocking batch path (what the benches and the TCP server use):
+//! let (outcomes, stats) = session.run_batch(&queries[..40])?;
+//!
+//! // Non-blocking path: enqueue now, do the work at the next poll.
+//! session.submit_all(&queries[40..60]);
+//! while let Some((outcomes, _stats)) = session.poll()? {
+//!     /* deliver outcomes */
+//! }
+//! ```
+//!
+//! `main.rs`, the TCP front-end (`server`), the experiment runner
+//! (`harness::runner`), every example, and the figure benches all go
+//! through this type; `engine::SearchEngine` and `coordinator::Coordinator`
+//! remain public for tests and low-level embedding, but nothing outside
+//! this module needs to wire them together by hand anymore.
+
+use std::collections::VecDeque;
+use std::time::Duration;
+
+use crate::cache::CacheStats;
+use crate::config::Config;
+use crate::coordinator::{BatchStats, Coordinator, Mode, QueryOutcome, SchedulePolicy};
+use crate::engine::SearchEngine;
+use crate::harness::runner;
+use crate::workload::{DatasetSpec, Query};
+
+/// Totals accumulated over a session's lifetime (all processed batches).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SessionStats {
+    pub batches: usize,
+    pub queries: usize,
+    pub groups: usize,
+    pub grouping_cost: Duration,
+}
+
+/// Fluent constructor for [`Session`]; obtain one via [`Session::builder`].
+pub struct SessionBuilder {
+    cfg: Config,
+    dataset: Option<DatasetSpec>,
+    dataset_name: Option<String>,
+    policy: Option<Box<dyn SchedulePolicy>>,
+    ensure: bool,
+}
+
+impl Default for SessionBuilder {
+    fn default() -> Self {
+        SessionBuilder {
+            cfg: Config::default(),
+            dataset: None,
+            dataset_name: None,
+            policy: None,
+            ensure: true,
+        }
+    }
+}
+
+impl SessionBuilder {
+    /// Use this configuration (defaults to `Config::default()`, the paper's
+    /// §4.1 setup). Validated at [`SessionBuilder::open`].
+    pub fn config(mut self, cfg: Config) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Serve this dataset spec (takes precedence over
+    /// [`SessionBuilder::dataset_name`]).
+    pub fn dataset(mut self, spec: DatasetSpec) -> Self {
+        self.dataset = Some(spec);
+        self
+    }
+
+    /// Serve the canonical dataset with this name (resolved at open).
+    pub fn dataset_name(mut self, name: &str) -> Self {
+        self.dataset_name = Some(name.to_string());
+        self
+    }
+
+    /// Schedule batches with this policy. Without a policy the session
+    /// follows the config's switches: grouping + prefetch when
+    /// `cfg.prefetch` is on (full CaGR-RAG), grouping only otherwise.
+    pub fn policy(mut self, policy: impl SchedulePolicy + 'static) -> Self {
+        self.policy = Some(Box::new(policy));
+        self
+    }
+
+    /// Schedule batches with an already-boxed policy.
+    pub fn boxed_policy(mut self, policy: Box<dyn SchedulePolicy>) -> Self {
+        self.policy = Some(policy);
+        self
+    }
+
+    /// Legacy shim: select the built-in policy a [`Mode`] stands for.
+    pub fn mode(mut self, mode: Mode) -> Self {
+        self.policy = Some(mode.to_policy());
+        self
+    }
+
+    /// Whether `open` provisions (builds/profiles) a missing or stale index
+    /// before serving. Default `true`; turn off when the caller guarantees
+    /// the index exists (`open` then fails fast on a missing index).
+    pub fn ensure_dataset(mut self, ensure: bool) -> Self {
+        self.ensure = ensure;
+        self
+    }
+
+    /// Validate the configuration, resolve the dataset, provision the index
+    /// if requested, and assemble the serving session.
+    pub fn open(self) -> anyhow::Result<Session> {
+        let SessionBuilder { cfg, dataset, dataset_name, policy, ensure } = self;
+        cfg.validate()?;
+        let spec = match (dataset, dataset_name) {
+            (Some(spec), _) => spec,
+            (None, Some(name)) => DatasetSpec::by_name(&name)?,
+            (None, None) => anyhow::bail!(
+                "Session::builder(): no dataset selected; call .dataset(spec) or \
+                 .dataset_name(\"nq-sim\") before .open()"
+            ),
+        };
+        // Default policy follows the config's switches — the same mapping
+        // the legacy Mode shim encodes (grouping on; prefetch per config).
+        let policy = policy.unwrap_or_else(|| Mode::from_config(&cfg, true).to_policy());
+        if ensure {
+            runner::ensure_dataset(&cfg, &spec)?;
+        }
+        let engine = SearchEngine::open(&cfg, &spec)?;
+        Ok(Session {
+            coordinator: Coordinator::new(engine, policy),
+            spec,
+            pending: VecDeque::new(),
+            totals: SessionStats::default(),
+        })
+    }
+}
+
+/// An open serving session over one dataset. See the module docs for the
+/// lifecycle; construct via [`Session::builder`].
+pub struct Session {
+    coordinator: Coordinator,
+    spec: DatasetSpec,
+    pending: VecDeque<Query>,
+    totals: SessionStats,
+}
+
+impl Session {
+    /// Start building a session.
+    pub fn builder() -> SessionBuilder {
+        SessionBuilder::default()
+    }
+
+    /// Process one arrival batch end-to-end (blocking). Outcomes are in
+    /// dispatch order; key on `report.query_id` for arrival order.
+    pub fn run_batch(
+        &mut self,
+        queries: &[Query],
+    ) -> anyhow::Result<(Vec<QueryOutcome>, BatchStats)> {
+        let (outcomes, stats) = self.coordinator.process_batch(queries)?;
+        self.totals.batches += 1;
+        self.totals.queries += stats.batch_size;
+        self.totals.groups += stats.groups;
+        self.totals.grouping_cost += stats.grouping_cost;
+        Ok((outcomes, stats))
+    }
+
+    /// Enqueue one query without doing any work (non-blocking).
+    pub fn submit(&mut self, query: Query) {
+        self.pending.push_back(query);
+    }
+
+    /// Enqueue a slice of queries without doing any work (non-blocking).
+    pub fn submit_all(&mut self, queries: &[Query]) {
+        self.pending.extend(queries.iter().cloned());
+    }
+
+    /// Number of submitted queries not yet processed.
+    pub fn pending_len(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// Drive the session: process at most one arrival batch (up to
+    /// `cfg.batch_max` pending queries) and return its outcomes, or
+    /// `Ok(None)` when nothing is pending. Call in a loop to drain.
+    pub fn poll(&mut self) -> anyhow::Result<Option<(Vec<QueryOutcome>, BatchStats)>> {
+        if self.pending.is_empty() {
+            return Ok(None);
+        }
+        let take = self.pending.len().min(self.coordinator.engine.cfg.batch_max);
+        let batch: Vec<Query> = self.pending.drain(..take).collect();
+        self.run_batch(&batch).map(Some)
+    }
+
+    /// The dataset this session serves.
+    pub fn spec(&self) -> &DatasetSpec {
+        &self.spec
+    }
+
+    /// The serving configuration.
+    pub fn config(&self) -> &Config {
+        &self.coordinator.engine.cfg
+    }
+
+    /// Name of the active schedule policy.
+    pub fn policy_name(&self) -> &str {
+        self.coordinator.policy_name()
+    }
+
+    /// Lifetime totals across all processed batches.
+    pub fn stats(&self) -> SessionStats {
+        self.totals
+    }
+
+    /// Demand cache counters (hits/misses/evictions/prefetch inserts).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.coordinator.engine.cache_stats()
+    }
+
+    /// Reset demand cache counters (e.g. after a warm-up phase).
+    pub fn reset_cache_stats(&mut self) {
+        self.coordinator.engine.reset_cache_stats();
+    }
+
+    /// Prefetcher counters `(completed, loaded, already_resident)`; zeros
+    /// when the policy runs without prefetch.
+    pub fn prefetch_counters(&self) -> (u64, u64, u64) {
+        self.coordinator.prefetch_counters()
+    }
+
+    /// Wait for in-flight prefetches to settle (measurement hygiene).
+    pub fn quiesce(&self) {
+        self.coordinator.quiesce();
+    }
+
+    /// The underlying engine (single-query search, prepare, exhaustive
+    /// oracle). Most callers never need this.
+    pub fn engine(&self) -> &SearchEngine {
+        &self.coordinator.engine
+    }
+
+    /// Mutable engine access (fault injection, direct searches in tests).
+    pub fn engine_mut(&mut self) -> &mut SearchEngine {
+        &mut self.coordinator.engine
+    }
+
+    /// The underlying coordinator, for embedders that manage batching
+    /// themselves.
+    pub fn coordinator_mut(&mut self) -> &mut Coordinator {
+        &mut self.coordinator
+    }
+}

@@ -128,7 +128,7 @@ fn pjrt_pipeline_matches_native_topk() {
     // ids must agree exactly.
     let Some(dir) = artifacts_dir() else { return };
     use cagr::config::{Backend, Config, DiskProfile};
-    use cagr::coordinator::Mode;
+    use cagr::coordinator::GroupingWithPrefetch;
     use cagr::harness::runner::{ensure_dataset, run_workload};
     use cagr::workload::{generate_queries, DatasetSpec};
 
@@ -151,7 +151,7 @@ fn pjrt_pipeline_matches_native_topk() {
 
     ensure_dataset(&cfg, &spec).unwrap();
     let queries = generate_queries(&spec);
-    let result = run_workload(&cfg, &spec, Mode::QGP, &queries, 0).unwrap();
+    let result = run_workload(&cfg, &spec, GroupingWithPrefetch::boxed(), &queries, 0).unwrap();
     assert_eq!(result.reports.len(), queries.len());
 
     // Cross-check a few queries against a native-scored exhaustive search

@@ -3,7 +3,7 @@
 //! claims at miniature scale.
 
 use cagr::config::{Backend, CachePolicy, Config, DiskProfile};
-use cagr::coordinator::Mode;
+use cagr::coordinator::{ArrivalOrder, GroupingWithPrefetch, JaccardGrouping, SchedulePolicy};
 use cagr::harness::runner::{ensure_dataset, run_workload};
 use cagr::workload::{generate_queries, DatasetSpec};
 
@@ -31,15 +31,20 @@ fn full_pipeline_all_modes() {
     ensure_dataset(&cfg, &spec).unwrap();
     let queries = generate_queries(&spec);
 
+    let policies: [fn() -> Box<dyn SchedulePolicy>; 3] = [
+        ArrivalOrder::boxed,
+        JaccardGrouping::boxed,
+        GroupingWithPrefetch::boxed,
+    ];
     let mut hit_ratios = Vec::new();
-    for mode in [Mode::Baseline, Mode::QG, Mode::QGP] {
-        let result = run_workload(&cfg, &spec, mode, &queries, 8).unwrap();
+    for make_policy in policies {
+        let result = run_workload(&cfg, &spec, make_policy(), &queries, 8).unwrap();
         assert_eq!(result.reports.len(), queries.len());
         // every measured query did real work
         for r in &result.reports {
             assert_eq!(r.cache_hits + r.cache_misses, cfg.nprobe as u64);
         }
-        hit_ratios.push((mode, result.cache_stats.hit_ratio()));
+        hit_ratios.push((result.policy.clone(), result.cache_stats.hit_ratio()));
     }
     // CaGR-RAG's headline mechanism: grouping raises cache hits vs baseline.
     let base = hit_ratios[0].1;
@@ -85,8 +90,8 @@ fn grouping_reduces_misses_with_skewed_batches() {
         q.id = new_id; // re-key arrival order
     }
 
-    let base = run_workload(&cfg, &spec, Mode::Baseline, &stream, 0).unwrap();
-    let qg = run_workload(&cfg, &spec, Mode::QG, &stream, 0).unwrap();
+    let base = run_workload(&cfg, &spec, ArrivalOrder::boxed(), &stream, 0).unwrap();
+    let qg = run_workload(&cfg, &spec, JaccardGrouping::boxed(), &stream, 0).unwrap();
     assert!(
         qg.cache_stats.misses <= base.cache_stats.misses,
         "grouping increased misses: qg={} base={}",
@@ -115,12 +120,12 @@ fn theta_extremes_behave() {
     let queries = generate_queries(&spec);
 
     cfg.theta = 0.0; // everything in one group per batch
-    let one = run_workload(&cfg, &spec, Mode::QG, &queries, 0).unwrap();
+    let one = run_workload(&cfg, &spec, JaccardGrouping::boxed(), &queries, 0).unwrap();
     let batches = cagr::workload::traffic::batches(&cfg, &queries).len();
     assert_eq!(one.groups_total, batches, "theta=0 must give one group per batch");
 
     cfg.theta = 1.0; // only identical cluster sets group together
-    let many = run_workload(&cfg, &spec, Mode::QG, &queries, 0).unwrap();
+    let many = run_workload(&cfg, &spec, JaccardGrouping::boxed(), &queries, 0).unwrap();
     assert!(many.groups_total >= one.groups_total);
     std::fs::remove_dir_all(&cfg.data_dir).ok();
 }
@@ -131,9 +136,9 @@ fn disk_sim_profile_shifts_latency() {
     ensure_dataset(&cfg, &spec).unwrap();
     let queries = generate_queries(&spec);
 
-    let fast = run_workload(&cfg, &spec, Mode::Baseline, &queries[..32], 0).unwrap();
+    let fast = run_workload(&cfg, &spec, ArrivalOrder::boxed(), &queries[..32], 0).unwrap();
     cfg.disk_profile = DiskProfile::NvmeScaled;
-    let slow = run_workload(&cfg, &spec, Mode::Baseline, &queries[..32], 0).unwrap();
+    let slow = run_workload(&cfg, &spec, ArrivalOrder::boxed(), &queries[..32], 0).unwrap();
     assert!(
         slow.mean_latency() > fast.mean_latency(),
         "simulated disk latency had no effect: fast={} slow={}",
@@ -154,9 +159,9 @@ fn trace_replay_reproduces_run() {
     assert_eq!(name, spec.name);
 
     // QG (not QGP): prefetch completion is timing-dependent, while QG is
-    // fully deterministic — the right mode for a reproducibility check.
-    let a = run_workload(&cfg, &spec, Mode::QG, &queries, 0).unwrap();
-    let b = run_workload(&cfg, &spec, Mode::QG, &replayed, 0).unwrap();
+    // fully deterministic — the right policy for a reproducibility check.
+    let a = run_workload(&cfg, &spec, JaccardGrouping::boxed(), &queries, 0).unwrap();
+    let b = run_workload(&cfg, &spec, JaccardGrouping::boxed(), &replayed, 0).unwrap();
     // identical workload => identical demand cache behaviour
     assert_eq!(a.cache_stats.misses, b.cache_stats.misses);
     assert_eq!(a.groups_total, b.groups_total);

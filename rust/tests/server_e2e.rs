@@ -2,10 +2,11 @@
 //! responses; results must match a direct engine search.
 
 use cagr::config::{Backend, Config, DiskProfile};
-use cagr::coordinator::{Coordinator, Mode};
+use cagr::coordinator::Mode;
 use cagr::engine::SearchEngine;
 use cagr::harness::runner::ensure_dataset;
 use cagr::server::{start, Client, ServerConfig};
+use cagr::session::Session;
 use cagr::workload::{generate_queries, DatasetSpec};
 
 fn test_cfg(tag: &str) -> (Config, DatasetSpec) {
@@ -28,8 +29,13 @@ fn launch(cfg: &Config, spec: &DatasetSpec, mode: Mode) -> cagr::server::ServerH
     let factory = {
         let cfg = cfg.clone();
         let spec = spec.clone();
-        move || -> anyhow::Result<Coordinator> {
-            Ok(Coordinator::new(SearchEngine::open(&cfg, &spec)?, mode))
+        move || -> anyhow::Result<Session> {
+            Session::builder()
+                .config(cfg)
+                .dataset(spec)
+                .mode(mode)
+                .ensure_dataset(false)
+                .open()
         }
     };
     start(

@@ -1,0 +1,232 @@
+//! The `Session` builder API: misuse errors, the non-blocking submit/poll
+//! path, and a seeded parity sweep proving that `Session` under each
+//! built-in `SchedulePolicy` returns exactly the hits and group counts of
+//! the legacy `Mode`-driven coordinator path it replaced.
+
+use cagr::config::{Backend, Config, DiskProfile};
+use cagr::coordinator::{
+    ArrivalOrder, Coordinator, GroupingWithPrefetch, JaccardGrouping, Mode, QueryOutcome,
+    SchedulePolicy,
+};
+use cagr::engine::SearchEngine;
+use cagr::harness::runner::ensure_dataset;
+use cagr::session::Session;
+use cagr::workload::{generate_queries, traffic, DatasetSpec};
+
+fn test_cfg(tag: &str) -> (Config, DatasetSpec) {
+    let mut cfg = Config::default();
+    cfg.data_dir =
+        std::env::temp_dir().join(format!("cagr-session-{}-{tag}", std::process::id()));
+    cfg.clusters = 16;
+    cfg.nprobe = 4;
+    cfg.top_k = 5;
+    cfg.cache_entries = 6;
+    cfg.kmeans_iters = 5;
+    cfg.kmeans_sample = 1_000;
+    cfg.backend = Backend::Native;
+    cfg.disk_profile = DiskProfile::None;
+    (cfg, DatasetSpec::tiny(0x5E55))
+}
+
+/// Arrival-keyed `(query_id, top-k doc ids)` rows, sorted.
+fn hit_rows(outcomes: &[QueryOutcome]) -> Vec<(usize, Vec<u32>)> {
+    let mut rows: Vec<(usize, Vec<u32>)> = outcomes
+        .iter()
+        .map(|o| (o.report.query_id, o.hits.iter().map(|h| h.doc_id).collect()))
+        .collect();
+    rows.sort();
+    rows
+}
+
+// ---------------------------------------------------------------------------
+// Builder misuse
+// ---------------------------------------------------------------------------
+
+#[test]
+fn builder_requires_a_dataset() {
+    let err = Session::builder().open().unwrap_err().to_string();
+    assert!(err.contains("dataset"), "{err}");
+}
+
+#[test]
+fn builder_rejects_unknown_dataset_name() {
+    let err = Session::builder()
+        .dataset_name("msmarco")
+        .open()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("unknown dataset"), "{err}");
+    assert!(err.contains("nq-sim"), "error must list valid names: {err}");
+}
+
+#[test]
+fn builder_rejects_invalid_config() {
+    let (mut cfg, spec) = test_cfg("badcfg");
+    cfg.nprobe = 0;
+    let err = Session::builder()
+        .config(cfg)
+        .dataset(spec)
+        .open()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("nprobe"), "{err}");
+}
+
+#[test]
+fn builder_without_ensure_fails_fast_on_missing_index() {
+    let (cfg, spec) = test_cfg("noindex");
+    let err = Session::builder()
+        .config(cfg.clone())
+        .dataset(spec)
+        .ensure_dataset(false)
+        .open()
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("build-index"), "{err}");
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Non-blocking submit/poll
+// ---------------------------------------------------------------------------
+
+#[test]
+fn submit_poll_drains_pending_queries() {
+    let (cfg, spec) = test_cfg("poll");
+    ensure_dataset(&cfg, &spec).unwrap();
+    let queries = generate_queries(&spec);
+    let mut session = Session::builder()
+        .config(cfg.clone())
+        .dataset(spec.clone())
+        .policy(GroupingWithPrefetch::default())
+        .ensure_dataset(false)
+        .open()
+        .unwrap();
+
+    assert!(session.poll().unwrap().is_none(), "idle poll must be None");
+    session.submit_all(&queries[..12]);
+    session.submit(queries[12].clone());
+    assert_eq!(session.pending_len(), 13);
+
+    let mut served = Vec::new();
+    while let Some((outcomes, stats)) = session.poll().unwrap() {
+        assert_eq!(stats.batch_size, outcomes.len());
+        served.extend(outcomes);
+    }
+    assert_eq!(session.pending_len(), 0);
+    assert_eq!(served.len(), 13);
+    let mut ids: Vec<usize> = served.iter().map(|o| o.report.query_id).collect();
+    ids.sort_unstable();
+    let want: Vec<usize> = (0..13).map(|i| queries[i].id).collect();
+    assert_eq!(ids, want);
+    assert_eq!(session.stats().queries, 13);
+    session.quiesce();
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}
+
+#[test]
+fn poll_respects_batch_max() {
+    let (mut cfg, spec) = test_cfg("batchmax");
+    cfg.batch_min = 1;
+    cfg.batch_max = 5;
+    ensure_dataset(&cfg, &spec).unwrap();
+    let queries = generate_queries(&spec);
+    let mut session = Session::builder()
+        .config(cfg.clone())
+        .dataset(spec.clone())
+        .policy(JaccardGrouping::default())
+        .ensure_dataset(false)
+        .open()
+        .unwrap();
+    session.submit_all(&queries[..12]);
+    let (first, stats) = session.poll().unwrap().unwrap();
+    assert_eq!(first.len(), 5, "poll must cap a batch at cfg.batch_max");
+    assert_eq!(stats.batch_size, 5);
+    assert_eq!(session.pending_len(), 7);
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Parity: Session + policy == legacy Mode path
+// ---------------------------------------------------------------------------
+
+#[test]
+fn session_policies_match_legacy_mode_paths() {
+    let (cfg, spec) = test_cfg("parity");
+    ensure_dataset(&cfg, &spec).unwrap();
+    let queries = generate_queries(&spec);
+
+    let arms: [(Mode, fn() -> Box<dyn SchedulePolicy>); 3] = [
+        (Mode::Baseline, ArrivalOrder::boxed),
+        (Mode::QG, JaccardGrouping::boxed),
+        (Mode::QGP, GroupingWithPrefetch::boxed),
+    ];
+
+    for (mode, make_policy) in arms {
+        // Legacy path: Mode-selected coordinator, wired by hand.
+        let engine = SearchEngine::open(&cfg, &spec).unwrap();
+        let mut legacy = Coordinator::from_mode(engine, mode);
+        let mut legacy_rows = Vec::new();
+        let mut legacy_groups = 0usize;
+        for batch in traffic::batches(&cfg, &queries) {
+            let (outcomes, stats) = legacy.process_batch(&batch.queries).unwrap();
+            legacy_groups += stats.groups;
+            legacy_rows.extend(hit_rows(&outcomes));
+        }
+        legacy.quiesce();
+
+        // New path: Session + explicit policy.
+        let mut session = Session::builder()
+            .config(cfg.clone())
+            .dataset(spec.clone())
+            .boxed_policy(make_policy())
+            .ensure_dataset(false)
+            .open()
+            .unwrap();
+        let mut session_rows = Vec::new();
+        let mut session_groups = 0usize;
+        for batch in traffic::batches(&cfg, &queries) {
+            let (outcomes, stats) = session.run_batch(&batch.queries).unwrap();
+            session_groups += stats.groups;
+            session_rows.extend(hit_rows(&outcomes));
+        }
+        session.quiesce();
+
+        legacy_rows.sort();
+        session_rows.sort();
+        assert_eq!(
+            legacy_rows, session_rows,
+            "{mode:?}: Session hits diverge from legacy Mode path"
+        );
+        assert_eq!(
+            legacy_groups, session_groups,
+            "{mode:?}: group counts diverge from legacy Mode path"
+        );
+        assert_eq!(session.stats().groups, session_groups);
+    }
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}
+
+#[test]
+fn default_policy_follows_config_switches() {
+    let (mut cfg, spec) = test_cfg("defaultpolicy");
+    ensure_dataset(&cfg, &spec).unwrap();
+    let session = Session::builder()
+        .config(cfg.clone())
+        .dataset(spec.clone())
+        .ensure_dataset(false)
+        .open()
+        .unwrap();
+    assert_eq!(session.policy_name(), "qgp", "cfg.prefetch=true implies QGP");
+    drop(session);
+
+    cfg.prefetch = false;
+    let session = Session::builder()
+        .config(cfg.clone())
+        .dataset(spec)
+        .ensure_dataset(false)
+        .open()
+        .unwrap();
+    assert_eq!(session.policy_name(), "qg", "cfg.prefetch=false implies QG");
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}

@@ -1,0 +1,173 @@
+//! Vendored, fully offline shim of the `anyhow` crate — exactly the subset
+//! this repository uses (`anyhow::Result`, `anyhow!`, `bail!`, `ensure!`,
+//! blanket `From<E: std::error::Error>` conversions, `{e}` / `{e:#}`
+//! formatting). The build environment has no crates.io access, so the real
+//! crate cannot be fetched; this shim keeps the public surface source- and
+//! semantics-compatible for everything the `cagr` crate does with it.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// Dynamic error type: a boxed error plus anyhow-style formatting.
+pub struct Error {
+    inner: Box<dyn StdError + Send + Sync + 'static>,
+}
+
+impl Error {
+    /// Wrap a concrete error value.
+    pub fn new<E>(error: E) -> Error
+    where
+        E: StdError + Send + Sync + 'static,
+    {
+        Error { inner: Box::new(error) }
+    }
+
+    /// Build an error from a displayable message (what `anyhow!` expands to).
+    pub fn msg<M>(message: M) -> Error
+    where
+        M: fmt::Display + fmt::Debug + Send + Sync + 'static,
+    {
+        Error { inner: Box::new(MessageError(message)) }
+    }
+
+    /// The underlying cause chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &(dyn StdError + 'static)> {
+        let mut next: Option<&(dyn StdError + 'static)> = Some(self.inner.as_ref());
+        std::iter::from_fn(move || {
+            let current = next?;
+            next = current.source();
+            Some(current)
+        })
+    }
+}
+
+/// `anyhow::Result<T>`: `Result` defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.inner)?;
+        if f.alternate() {
+            let mut source = self.inner.source();
+            while let Some(cause) = source {
+                write!(f, ": {cause}")?;
+                source = cause.source();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.inner)?;
+        let mut source = self.inner.source();
+        while let Some(cause) = source {
+            write!(f, "\n\nCaused by:\n    {cause}")?;
+            source = cause.source();
+        }
+        Ok(())
+    }
+}
+
+// `Error` deliberately does NOT implement `std::error::Error`; that is what
+// makes this blanket conversion coherent (same trick as the real anyhow).
+impl<E> From<E> for Error
+where
+    E: StdError + Send + Sync + 'static,
+{
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+/// Adapter making any `Display + Debug` message a `std::error::Error`.
+struct MessageError<M>(M);
+
+impl<M: fmt::Display> fmt::Display for MessageError<M> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(&self.0, f)
+    }
+}
+
+impl<M: fmt::Debug> fmt::Debug for MessageError<M> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(&self.0, f)
+    }
+}
+
+impl<M: fmt::Display + fmt::Debug> StdError for MessageError<M> {}
+
+/// Construct an [`Error`] from a format string (inline captures supported).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(
+                "{}",
+                concat!("condition failed: ", stringify!($cond))
+            ));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails(flag: bool) -> Result<u32> {
+        ensure!(flag, "flag was {flag}");
+        Ok(7)
+    }
+
+    #[test]
+    fn macro_and_display() {
+        let e = anyhow!("bad thing {}", 42);
+        assert_eq!(e.to_string(), "bad thing 42");
+        assert_eq!(format!("{e:#}"), "bad thing 42");
+        assert!(format!("{e:?}").contains("bad thing"));
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        assert_eq!(fails(true).unwrap(), 7);
+        assert!(fails(false).unwrap_err().to_string().contains("false"));
+        let f = || -> Result<()> { bail!("stop {}", "now") };
+        assert_eq!(f().unwrap_err().to_string(), "stop now");
+    }
+
+    #[test]
+    fn from_std_error() {
+        let io = std::fs::read_to_string("/definitely/not/here").unwrap_err();
+        let e: Error = io.into();
+        assert!(!e.to_string().is_empty());
+        assert!(e.chain().count() >= 1);
+    }
+}

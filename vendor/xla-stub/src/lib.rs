@@ -1,0 +1,118 @@
+//! Offline stub of the `xla` (PJRT CPU client) bindings.
+//!
+//! The build environment bundled with this repository has neither network
+//! access nor a prebuilt `xla_extension`, so the real bindings cannot be
+//! linked. This stub keeps `Backend::Pjrt` code paths *compiling* while
+//! gating them at runtime: [`PjRtClient::cpu`] fails with a clear message,
+//! so every PJRT entry point surfaces "use backend=native" instead of a
+//! linker error. The native backend — the default for tests and benches —
+//! is unaffected.
+//!
+//! The API surface mirrors exactly what `cagr::runtime` calls; swapping the
+//! real `xla` crate back in requires only a Cargo.toml change.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring the real bindings' error (Debug-formatted by
+/// callers).
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unsupported(what: &str) -> Error {
+    Error(format!(
+        "{what}: PJRT support is not linked into this build (offline xla stub); \
+         use backend=native or rebuild against the real xla crate"
+    ))
+}
+
+/// Host literal (tensor) handle.
+#[derive(Debug, Clone, Default)]
+pub struct Literal;
+
+impl Literal {
+    /// Build a rank-1 literal from a host slice.
+    pub fn vec1<T>(_values: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(unsupported("Literal::reshape"))
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        Err(unsupported("Literal::to_tuple1"))
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(unsupported("Literal::to_vec"))
+    }
+}
+
+/// Device buffer handle returned by an execution.
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unsupported("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Parsed HLO module.
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto> {
+        Err(unsupported("HloModuleProto::from_text_file"))
+    }
+}
+
+/// XLA computation wrapper.
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unsupported("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// PJRT client handle. `cpu()` is the stub's gate: it always fails.
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unsupported("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unsupported("PjRtClient::compile"))
+    }
+}

@@ -53,19 +53,20 @@ fn main() -> anyhow::Result<()> {
     ensure_dataset(&cfg, &spec)?;
     let queries = generate_queries(&spec);
 
+    type MakePolicy = fn() -> Box<dyn cagr::coordinator::SchedulePolicy>;
     let mut rows = Vec::new();
-    for (label, policy) in [
-        ("EdgeRAG", ArrivalOrder::boxed()),
-        ("CaGR-RAG", GroupingWithPrefetch::boxed()),
+    for (label, make_policy) in [
+        ("EdgeRAG", ArrivalOrder::boxed as MakePolicy),
+        ("CaGR-RAG", GroupingWithPrefetch::boxed as MakePolicy),
     ] {
         let factory = {
             let cfg = cfg.clone();
             let spec = spec.clone();
             move || -> anyhow::Result<Session> {
                 Session::builder()
-                    .config(cfg)
-                    .dataset(spec)
-                    .boxed_policy(policy)
+                    .config(cfg.clone())
+                    .dataset(spec.clone())
+                    .boxed_policy(make_policy())
                     .ensure_dataset(false)
                     .open()
             }
@@ -76,6 +77,7 @@ fn main() -> anyhow::Result<()> {
                 addr: "127.0.0.1:0".to_string(),
                 batch_window: std::time::Duration::from_millis(8),
                 batch_max: cfg.batch_max,
+                lanes: 1,
             },
         )?;
         let addr = handle.addr;

@@ -1,8 +1,20 @@
 //! Cluster cache (S4): the in-memory pool of decoded second-level clusters.
 //!
+//! Two layers:
+//!
+//!  * [`ClusterCache`] — one bounded map + pluggable replacement policy
+//!    behind no lock of its own (single-owner building block).
+//!  * [`ShardedClusterCache`] — the serving-path cache: N lock-striped
+//!    [`ClusterCache`] shards (`cluster_id % n_shards`), sized by
+//!    `Config::cache_entries` / `Config::cache_shards`. Demand fetches, the
+//!    opportunistic prefetcher thread, and the parallel executor's I/O
+//!    workers all hit the cache concurrently; striping keeps them from
+//!    serializing on one mutex. `cache_shards = 1` reproduces the historical
+//!    single-mutex cache bit-for-bit (same eviction order, same counters).
+//!
 //! The paper frames its contribution as orthogonal to the replacement
-//! policy ("compatible with any cache replacement policy", §5), so the
-//! cache is a trait with four implementations behind one generic engine:
+//! policy ("compatible with any cache replacement policy", §5), so
+//! replacement is a trait with four implementations shared by both layers:
 //!
 //!  * `Lru` / `Fifo` / `Lfu` — classic policies (GPTCache's choices, §2.3).
 //!  * `CostAware` — the EdgeRAG baseline (§4.1): priority = offline-profiled
@@ -11,11 +23,17 @@
 //!
 //! Pinning supports the opportunistic prefetcher (DESIGN.md §6): clusters
 //! still needed by the in-flight query group are pinned so a prefetch for
-//! the *next* group can never evict them. All policies respect pins.
+//! the *next* group can never evict them. All policies respect pins, and
+//! pins are tracked per shard so a prefetch insert can only ever displace
+//! unpinned entries of its own stripe. Statistics are per shard, merged
+//! into one [`CacheStats`] on read ([`CacheStats::merge`]) so callers see
+//! the same counters the single-mutex cache reported.
 
 mod policies;
+mod sharded;
 
 pub use policies::{new_cache, CostAwarePolicy, FifoPolicy, LfuPolicy, LruPolicy};
+pub use sharded::ShardedClusterCache;
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -36,6 +54,16 @@ pub struct CacheStats {
 }
 
 impl CacheStats {
+    /// Accumulate another counter set into this one (shard merging).
+    pub fn merge(&mut self, other: CacheStats) {
+        self.hits += other.hits;
+        self.misses += other.misses;
+        self.insertions += other.insertions;
+        self.evictions += other.evictions;
+        self.rejected_inserts += other.rejected_inserts;
+        self.prefetch_inserts += other.prefetch_inserts;
+    }
+
     pub fn hit_ratio(&self) -> f64 {
         let total = self.hits + self.misses;
         if total == 0 {

@@ -1,0 +1,277 @@
+//! Lock-striped cluster cache: N independent [`ClusterCache`] shards, each
+//! behind its own mutex, with cluster ids mapped to shards by
+//! `id % n_shards`.
+//!
+//! The single-mutex cache serializes three concurrent actors — demand
+//! fetches, the prefetcher thread, and the parallel executor's I/O workers.
+//! Striping the cache lets those actors touch disjoint clusters without
+//! contending; the stripe count is `Config::cache_shards` (clamped to the
+//! capacity so no shard is ever zero-sized). With `cache_shards = 1` this
+//! type is exactly the old `Mutex<ClusterCache>` — one shard, one lock,
+//! identical eviction order and statistics.
+//!
+//! Semantics per shard are unchanged: pinning, the pluggable replacement
+//! [`super::Policy`], and eviction all operate shard-locally (a victim is
+//! chosen among the shard's own unpinned entries). Global capacity is the
+//! sum of per-shard capacities, so `len() <= capacity()` always holds.
+//! Statistics are kept per shard and merged on read via
+//! [`CacheStats::merge`].
+
+use std::sync::{Arc, Mutex};
+
+use super::{new_cache, CacheStats, ClusterCache};
+use crate::config::CachePolicy;
+use crate::index::ClusterBlock;
+
+/// A bounded cluster cache striped over independent locked shards.
+pub struct ShardedClusterCache {
+    shards: Vec<Mutex<ClusterCache>>,
+    capacity: usize,
+    policy: CachePolicy,
+}
+
+impl ShardedClusterCache {
+    /// Build with `shards` stripes (clamped to `1..=capacity`) under one
+    /// replacement policy. `costs` is the per-cluster profiled read cost
+    /// shared by every shard (ids are global).
+    pub fn from_config(
+        policy: CachePolicy,
+        capacity: usize,
+        shards: usize,
+        costs: Vec<u64>,
+    ) -> ShardedClusterCache {
+        assert!(capacity > 0, "cache capacity must be > 0");
+        let n = shards.clamp(1, capacity);
+        let base = capacity / n;
+        let rem = capacity % n;
+        let shards = (0..n)
+            .map(|i| {
+                let cap = base + usize::from(i < rem);
+                Mutex::new(ClusterCache::new(new_cache(policy), cap, costs.clone()))
+            })
+            .collect();
+        ShardedClusterCache { shards, capacity, policy }
+    }
+
+    fn shard(&self, id: u32) -> &Mutex<ClusterCache> {
+        &self.shards[id as usize % self.shards.len()]
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn policy(&self) -> CachePolicy {
+        self.policy
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    /// Look up a cluster; updates the shard's recency/frequency state and
+    /// hit/miss counters.
+    pub fn get(&self, id: u32) -> Option<Arc<ClusterBlock>> {
+        self.shard(id).lock().unwrap().get(id)
+    }
+
+    /// Peek without touching counters or recency.
+    pub fn peek(&self, id: u32) -> Option<Arc<ClusterBlock>> {
+        self.shard(id).lock().unwrap().peek(id)
+    }
+
+    /// Re-classify the most recent demand miss on `id` as a hit (the block
+    /// arrived via an overlapped read the caller waited on).
+    pub fn convert_miss_to_hit(&self, id: u32) -> Option<Arc<ClusterBlock>> {
+        self.shard(id).lock().unwrap().convert_miss_to_hit(id)
+    }
+
+    pub fn contains(&self, id: u32) -> bool {
+        self.shard(id).lock().unwrap().contains(id)
+    }
+
+    /// Insert a block into its shard. Returns `false` when the shard
+    /// rejected the insert because all its resident entries are pinned.
+    pub fn insert(&self, block: Arc<ClusterBlock>, from_prefetch: bool) -> bool {
+        self.shard(block.id).lock().unwrap().insert(block, from_prefetch)
+    }
+
+    /// Pin resident entries so they cannot be evicted. Ids are grouped by
+    /// shard and each shard's batch is pinned under a single lock
+    /// acquisition, so a concurrent insert can never observe a shard with
+    /// only part of its batch pinned.
+    pub fn pin(&self, ids: &[u32]) {
+        if ids.len() == 1 {
+            self.shard(ids[0]).lock().unwrap().pin(ids);
+            return;
+        }
+        let n = self.shards.len();
+        let mut by_shard: Vec<Vec<u32>> = vec![Vec::new(); n];
+        for &id in ids {
+            by_shard[id as usize % n].push(id);
+        }
+        for (si, batch) in by_shard.iter().enumerate() {
+            if !batch.is_empty() {
+                self.shards[si].lock().unwrap().pin(batch);
+            }
+        }
+    }
+
+    pub fn unpin_all(&self) {
+        for shard in &self.shards {
+            shard.lock().unwrap().unpin_all();
+        }
+    }
+
+    pub fn pinned_count(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().pinned_count()).sum()
+    }
+
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.shards.iter().all(|s| s.lock().unwrap().is_empty())
+    }
+
+    /// Resident cluster ids across all shards (unordered).
+    pub fn resident_ids(&self) -> Vec<u32> {
+        self.shards.iter().flat_map(|s| s.lock().unwrap().resident_ids()).collect()
+    }
+
+    /// Merged counters across all shards.
+    pub fn stats(&self) -> CacheStats {
+        let mut total = CacheStats::default();
+        for shard in &self.shards {
+            total.merge(shard.lock().unwrap().stats());
+        }
+        total
+    }
+
+    /// Reset every shard's counters (e.g. after warm-up).
+    pub fn reset_stats(&self) {
+        for shard in &self.shards {
+            shard.lock().unwrap().reset_stats();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::test_block;
+
+    fn cache(policy: CachePolicy, cap: usize, shards: usize) -> ShardedClusterCache {
+        ShardedClusterCache::from_config(policy, cap, shards, vec![0; 256])
+    }
+
+    #[test]
+    fn single_shard_matches_unsharded_semantics() {
+        // shards=1 must behave exactly like the plain ClusterCache.
+        let c = cache(CachePolicy::Lru, 2, 1);
+        assert_eq!(c.num_shards(), 1);
+        assert!(c.insert(test_block(1), false));
+        assert!(c.insert(test_block(2), false));
+        assert!(c.get(1).is_some()); // 2 is now least recent
+        assert!(c.insert(test_block(3), false));
+        assert!(c.contains(1) && c.contains(3) && !c.contains(2));
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.insertions, s.evictions), (1, 0, 3, 1));
+    }
+
+    #[test]
+    fn shard_count_clamped_to_capacity() {
+        let c = cache(CachePolicy::Fifo, 3, 16);
+        assert_eq!(c.num_shards(), 3);
+        assert_eq!(c.capacity(), 3);
+        let c = cache(CachePolicy::Fifo, 8, 0);
+        assert_eq!(c.num_shards(), 1);
+    }
+
+    #[test]
+    fn capacity_splits_across_shards_and_is_never_exceeded() {
+        let c = cache(CachePolicy::Lru, 10, 4); // shard caps 3,3,2,2
+        for id in 0..64u32 {
+            c.insert(test_block(id), false);
+            assert!(c.len() <= c.capacity(), "len {} > cap {}", c.len(), c.capacity());
+        }
+        let s = c.stats();
+        assert_eq!(s.insertions - s.evictions, c.len() as u64);
+    }
+
+    #[test]
+    fn ids_route_to_fixed_shards() {
+        let c = cache(CachePolicy::Lru, 8, 4);
+        // 1 and 5 share shard 1 (cap 2); 1,5,9 overflow it while the rest
+        // of the cache stays empty — eviction must be shard-local.
+        c.insert(test_block(1), false);
+        c.insert(test_block(5), false);
+        c.insert(test_block(9), false);
+        assert_eq!(c.len(), 2, "shard 1 holds 2 entries, others none");
+        assert_eq!(c.stats().evictions, 1);
+    }
+
+    #[test]
+    fn stats_merge_across_shards() {
+        let c = cache(CachePolicy::Lru, 8, 4);
+        for id in 0..4u32 {
+            c.insert(test_block(id), false);
+        }
+        for id in 0..8u32 {
+            let _ = c.get(id); // 0..4 hit, 4..8 miss
+        }
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.insertions), (4, 4, 4));
+        assert!((s.hit_ratio() - 0.5).abs() < 1e-12);
+        c.reset_stats();
+        assert_eq!(c.stats(), CacheStats::default());
+        assert_eq!(c.len(), 4, "reset must not drop contents");
+    }
+
+    #[test]
+    fn pins_are_respected_per_shard() {
+        let c = cache(CachePolicy::Lru, 4, 4); // one entry per shard
+        for id in 0..4u32 {
+            c.insert(test_block(id), false);
+        }
+        c.pin(&[0, 1, 2, 3]);
+        assert_eq!(c.pinned_count(), 4);
+        // Every shard is full of pinned entries: inserts must be rejected.
+        assert!(!c.insert(test_block(4), false));
+        assert!(c.contains(0));
+        c.unpin_all();
+        assert_eq!(c.pinned_count(), 0);
+        assert!(c.insert(test_block(4), false));
+        assert!(!c.contains(0), "unpinned entry evictable again");
+    }
+
+    #[test]
+    fn peek_and_convert_miss_to_hit_route_correctly() {
+        let c = cache(CachePolicy::Lru, 8, 4);
+        c.insert(test_block(6), false);
+        assert!(c.peek(6).is_some());
+        assert_eq!(c.stats().hits + c.stats().misses, 0, "peek is untracked");
+        let _ = c.get(99); // miss
+        c.insert(test_block(99), false);
+        assert!(c.convert_miss_to_hit(99).is_some());
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses), (1, 0));
+    }
+
+    #[test]
+    fn resident_ids_cover_all_shards() {
+        let c = cache(CachePolicy::Fifo, 8, 4);
+        for id in [0u32, 1, 2, 3, 7] {
+            c.insert(test_block(id), false);
+        }
+        let mut ids = c.resident_ids();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![0, 1, 2, 3, 7]);
+        assert!(!c.is_empty());
+    }
+}

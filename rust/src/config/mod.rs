@@ -23,6 +23,12 @@ pub mod geometry {
     pub const SCORE_N: usize = 2048;
 }
 
+/// Number of usable cores (always >= 1): the default degree for the
+/// engine's I/O worker pool and the cluster-cache stripe count.
+pub fn available_cores() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
 /// Cache replacement policy selector.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum CachePolicy {
@@ -208,6 +214,18 @@ pub struct Config {
     /// Total cache entries (paper: 40; Fig. 2 uses 50).
     pub cache_entries: usize,
     pub cache_policy: CachePolicy,
+    /// Lock stripes for the cluster cache (clamped to `cache_entries`).
+    /// 1 = the historical single-mutex cache; default = available cores
+    /// capped at 8, so the paper's 40-entry cache keeps >= 5 entries per
+    /// shard on many-core machines (a shard of capacity 1 would degenerate
+    /// into a direct-mapped slot and neuter the replacement policy).
+    pub cache_shards: usize,
+
+    // -- parallelism ----------------------------------------------------------
+    /// I/O worker threads for the parallel group executor. 1 = the
+    /// sequential fetch+score path (bit-identical to the pre-parallel
+    /// engine); default = available cores.
+    pub io_workers: usize,
 
     // -- grouping / prefetch (the paper's contribution) ------------------------
     /// Jaccard similarity threshold theta (paper: 0.5).
@@ -250,6 +268,8 @@ impl Default for Config {
             kmeans_iters: 15,
             cache_entries: 40,
             cache_policy: CachePolicy::CostAware,
+            cache_shards: available_cores().min(8),
+            io_workers: available_cores(),
             theta: 0.5,
             grouping: GroupingPolicy::SingleLink,
             prefetch: true,
@@ -310,6 +330,8 @@ impl Config {
             "kmeans_iters" => self.kmeans_iters = parse_usize(value)?,
             "cache_entries" => self.cache_entries = parse_usize(value)?,
             "cache_policy" => self.cache_policy = CachePolicy::parse(value)?,
+            "cache_shards" => self.cache_shards = parse_usize(value)?,
+            "io_workers" => self.io_workers = parse_usize(value)?,
             "theta" => {
                 self.theta = value
                     .parse()
@@ -368,6 +390,12 @@ impl Config {
         if self.cache_entries == 0 {
             anyhow::bail!("cache_entries must be > 0");
         }
+        if self.cache_shards == 0 {
+            anyhow::bail!("cache_shards must be > 0 (1 = unsharded cache)");
+        }
+        if self.io_workers == 0 {
+            anyhow::bail!("io_workers must be > 0 (1 = sequential executor)");
+        }
         if !(0.0..=1.0).contains(&self.theta) {
             anyhow::bail!("theta ({}) must be in [0, 1]", self.theta);
         }
@@ -409,7 +437,26 @@ mod tests {
         assert_eq!(c.batch_min, 20);
         assert_eq!(c.batch_max, 100);
         assert!(c.prefetch);
+        // Parallelism defaults track the machine but are always >= 1.
+        assert!(c.io_workers >= 1);
+        assert!(c.cache_shards >= 1);
         c.validate().unwrap();
+    }
+
+    #[test]
+    fn parallelism_knobs_parse_and_validate() {
+        let mut c = Config::default();
+        c.set("io_workers", "4").unwrap();
+        c.set("cache_shards", "8").unwrap();
+        assert_eq!(c.io_workers, 4);
+        assert_eq!(c.cache_shards, 8);
+        assert!(c.set("io_workers", "many").is_err());
+        c.io_workers = 0;
+        assert!(c.validate().unwrap_err().to_string().contains("io_workers"));
+        c = Config::default();
+        c.cache_shards = 0;
+        assert!(c.validate().unwrap_err().to_string().contains("cache_shards"));
+        assert!(available_cores() >= 1);
     }
 
     #[test]

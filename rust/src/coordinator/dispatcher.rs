@@ -1,17 +1,24 @@
 //! Group dispatcher (Algorithm 1, step 4 — the serving side).
 //!
-//! Walks a [`GroupPlan`] in dispatch order, searching each member through
-//! the engine. The dispatcher is policy-agnostic: it never inspects which
-//! strategy produced the plan. When it begins the *last* query of group
-//! `G_i` it asks the active [`SchedulePolicy`] what to prefetch
+//! Walks a [`GroupPlan`] in dispatch order, executing each group through
+//! the engine's group executor (`engine::executor`): sequential fetch+score
+//! when `io_workers = 1`, the parallel pipelined path otherwise. The
+//! dispatcher is policy-agnostic: it never inspects which strategy produced
+//! the plan. When it begins the *last* query of group `G_i` it asks the
+//! active [`SchedulePolicy`] what to prefetch
 //! ([`SchedulePolicy::prefetch_at`]); for the built-in CaGR-RAG policy that
 //! is `C(q_F(G_{i+1}))`, pinned against the in-flight query's own clusters
 //! so the prefetch can't cannibalize them — the prefetch I/O then overlaps
 //! the remaining scoring work, which is exactly the paper's Fig. 3 ⑤
-//! timing.
+//! timing. The trigger/unpin sequence is identical in both execution modes
+//! (the executor surfaces per-member hooks), so `GroupingWithPrefetch`
+//! semantics — including "a prefetch never evicts pinned in-flight
+//! clusters" — are preserved under parallelism.
+
+use std::sync::Arc;
 
 use crate::config::PrefetchTrigger;
-use crate::engine::{PreparedQuery, SearchEngine};
+use crate::engine::{executor, PreparedQuery, SearchEngine};
 use crate::index::Hit;
 use crate::metrics::SearchReport;
 
@@ -39,37 +46,49 @@ pub fn dispatch(
     prefetcher: Option<&Prefetcher>,
 ) -> anyhow::Result<Vec<QueryOutcome>> {
     let mut outcomes = Vec::with_capacity(prepared.len());
+    let trigger = engine.cfg.prefetch_trigger;
+    let cache = Arc::clone(&engine.cache);
     for (gi, group) in plan.groups.iter().enumerate() {
-        for (mi, &qidx) in group.members.iter().enumerate() {
-            let pq = &prepared[qidx];
-            let is_last = mi + 1 == group.members.len();
-            let trigger = engine.cfg.prefetch_trigger;
-            let fire = || {
-                // Fire-and-forget prefetch of whatever the policy wants
-                // loaded for the upcoming switch, protecting this query's
-                // working set.
-                if let (Some(pf), Some(clusters)) = (prefetcher, policy.prefetch_at(plan, gi)) {
-                    pf.request(clusters, pq.clusters.clone());
+        let members: Vec<&PreparedQuery> =
+            group.members.iter().map(|&qidx| &prepared[qidx]).collect();
+        if members.is_empty() {
+            continue;
+        }
+        let last = members.len() - 1;
+        let fire = |mi: usize| {
+            // Fire-and-forget prefetch of whatever the policy wants loaded
+            // for the upcoming switch, protecting the in-flight query's
+            // working set.
+            if let (Some(pf), Some(clusters)) = (prefetcher, policy.prefetch_at(plan, gi)) {
+                pf.request(clusters, members[mi].clusters.clone());
+            }
+        };
+        let results = executor::execute_group(
+            engine,
+            &members,
+            |mi| {
+                if mi == last && trigger == PrefetchTrigger::LastQueryStart {
+                    fire(mi);
                 }
-            };
-            if is_last && trigger == PrefetchTrigger::LastQueryStart {
-                fire();
-            }
-            let (report, hits) = engine.search(pq)?;
-            if is_last && trigger == PrefetchTrigger::AfterSearch {
-                fire();
-            }
+            },
+            |mi| {
+                if mi == last && trigger == PrefetchTrigger::AfterSearch {
+                    fire(mi);
+                }
+                if mi == 0 && prefetcher.is_some() {
+                    // The group's first query has consumed the clusters the
+                    // prefetcher pinned for it; release the pins so normal
+                    // replacement resumes (prefetch.rs pins on insert).
+                    cache.unpin_all();
+                }
+            },
+        )?;
+        for (report, hits) in results {
             outcomes.push(QueryOutcome { report, hits, group: gi });
-            if mi == 0 && prefetcher.is_some() {
-                // The group's first query has consumed the clusters the
-                // prefetcher pinned for it; release the pins so normal
-                // replacement resumes (prefetch.rs pins on insert).
-                engine.cache.lock().unwrap().unpin_all();
-            }
         }
     }
     if prefetcher.is_some() {
-        engine.cache.lock().unwrap().unpin_all();
+        cache.unpin_all();
     }
     Ok(outcomes)
 }

@@ -15,7 +15,7 @@ use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
-use crate::cache::ClusterCache;
+use crate::cache::ShardedClusterCache;
 use crate::engine::{fetch_cluster, inflight::InFlight};
 use crate::index::IvfIndex;
 use crate::sim::DiskModel;
@@ -57,8 +57,8 @@ impl Prefetcher {
     /// handles (the same `InFlight` the demand path uses, so demand misses
     /// wait on prefetch reads instead of duplicating them).
     pub fn spawn(
-        index: IvfIndex,
-        cache: Arc<Mutex<ClusterCache>>,
+        index: Arc<IvfIndex>,
+        cache: Arc<ShardedClusterCache>,
         disk: Arc<Mutex<DiskModel>>,
         inflight: Arc<InFlight>,
     ) -> Prefetcher {
@@ -67,8 +67,8 @@ impl Prefetcher {
 
     /// Spawn with explicit size-aware issue ordering (extension knob).
     pub fn spawn_with(
-        index: IvfIndex,
-        cache: Arc<Mutex<ClusterCache>>,
+        index: Arc<IvfIndex>,
+        cache: Arc<ShardedClusterCache>,
         disk: Arc<Mutex<DiskModel>>,
         inflight: Arc<InFlight>,
         size_aware: bool,
@@ -116,8 +116,8 @@ impl Drop for Prefetcher {
 }
 
 fn run(
-    index: IvfIndex,
-    cache: Arc<Mutex<ClusterCache>>,
+    index: Arc<IvfIndex>,
+    cache: Arc<ShardedClusterCache>,
     disk: Arc<Mutex<DiskModel>>,
     inflight: Arc<InFlight>,
     rx: Receiver<Msg>,
@@ -128,13 +128,13 @@ fn run(
         match msg {
             Msg::Shutdown => break,
             Msg::Prefetch { clusters, pins } => {
-                cache.lock().unwrap().pin(&pins);
+                cache.pin(&pins);
                 // Parallel reads: NVMe queues are deep, and serialized
                 // prefetch would lose the race against the demand path.
                 let mut todo: Vec<u32> = clusters
                     .into_iter()
                     .filter(|&cid| {
-                        let resident = cache.lock().unwrap().contains(cid);
+                        let resident = cache.contains(cid);
                         if resident {
                             counters.already_resident.fetch_add(1, Ordering::SeqCst);
                         }
@@ -168,7 +168,7 @@ fn run(
                                             // current query's own demand
                                             // inserts. The dispatcher unpins
                                             // after the group switch.
-                                            cache.lock().unwrap().pin(&[cid]);
+                                            cache.pin(&[cid]);
                                             if outcome.was_hit {
                                                 counters
                                                     .already_resident
@@ -215,13 +215,12 @@ mod tests {
         );
         pf.request(vec![0, 1, 2], vec![]);
         pf.quiesce();
-        let cache = engine.cache.lock().unwrap();
+        let cache = &engine.cache;
         assert!(cache.contains(0) && cache.contains(1) && cache.contains(2));
         // Prefetch must not perturb demand stats...
         assert_eq!(cache.stats().hits + cache.stats().misses, 0);
         // ...but is visible in prefetch accounting.
         assert_eq!(cache.stats().prefetch_inserts, 3);
-        drop(cache);
         assert_eq!(pf.counters.loaded.load(Ordering::SeqCst), 3);
         drop(pf);
         std::fs::remove_dir_all(&dir).ok();
@@ -252,11 +251,10 @@ mod tests {
         // prefetch of 4 other clusters must not evict them.
         let (engine, dir) = tiny_engine("pf-pin", |cfg| cfg.cache_entries = 3);
         {
-            let mut c = engine.cache.lock().unwrap();
             let b0 = Arc::new(engine.index.read_cluster(0).unwrap());
             let b1 = Arc::new(engine.index.read_cluster(1).unwrap());
-            c.insert(b0, false);
-            c.insert(b1, false);
+            engine.cache.insert(b0, false);
+            engine.cache.insert(b1, false);
         }
         let pf = Prefetcher::spawn(
             engine.index.clone(),
@@ -266,14 +264,13 @@ mod tests {
         );
         pf.request(vec![5, 6, 7, 8], vec![0, 1]);
         pf.quiesce();
-        let mut cache = engine.cache.lock().unwrap();
+        let cache = &engine.cache;
         assert!(cache.contains(0) && cache.contains(1), "pinned entries evicted");
         // Prefetched entries stay pinned until the dispatcher's group-switch
         // unpin (dispatcher.rs); releasing is the consumer's job.
         assert!(cache.pinned_count() > 0, "prefetched entries should be pinned");
         cache.unpin_all();
         assert_eq!(cache.pinned_count(), 0);
-        drop(cache);
         drop(pf);
         std::fs::remove_dir_all(&dir).ok();
     }
@@ -292,7 +289,7 @@ mod tests {
         pf.quiesce();
         assert_eq!(pf.counters.failed.load(Ordering::SeqCst), 1);
         assert_eq!(pf.counters.loaded.load(Ordering::SeqCst), 1);
-        assert!(engine.cache.lock().unwrap().contains(3));
+        assert!(engine.cache.contains(3));
         drop(pf);
         std::fs::remove_dir_all(&dir).ok();
     }

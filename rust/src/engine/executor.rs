@@ -1,0 +1,469 @@
+//! Parallel pipelined group executor.
+//!
+//! Inside one scheduled group, the set of *unique* clusters across all
+//! members is fetched by the engine's I/O worker pool while scoring walks
+//! the members sequentially on the calling thread (the compute backend is
+//! not `Send`). The fetch pipeline runs a bounded window ahead of the
+//! scoring cursor so a large group cannot flood the cache, and every read
+//! goes through [`fetch_cluster`], so the [`InFlight`] registry
+//! deduplicates races against the opportunistic prefetcher and against
+//! sibling lanes: a cluster needed by five grouped queries is read from
+//! disk once and scored for all five.
+//!
+//! Accounting contract (the parity properties in rust/tests/properties.rs):
+//!
+//!  * Top-k results are bit-identical to the sequential path — scoring
+//!    order per member is unchanged, blocks are immutable.
+//!  * Cache counters match the sequential path whenever the group's working
+//!    set fits the cache: the first member to touch a unique cluster
+//!    carries its hit-or-miss (the I/O worker's fetch), every later touch
+//!    re-runs the same cache transaction the sequential loop would
+//!    (normally a hit).
+//!  * Simulated disk time is attributed once per unique fetch and amortized
+//!    over the members probing that cluster ([`amortized_io_share`]), so
+//!    overlapped I/O never double-counts into per-query latency. A member's
+//!    latency is its own scoring time + its *measured* pipeline stalls
+//!    (real file-read/queueing waits, with the simulated portion excluded)
+//!    + its amortized simulated I/O share + `prep_cost`.
+//!
+//! Interaction with prefetch pins: while the previous group-switch's pins
+//! are still held (released after member 0 completes), a pipeline insert
+//! into a fully pinned shard is rejected — the block is still scored from
+//! the fetched copy, but a later member may re-read it. The sequential path
+//! has the same rejection window; the pipeline merely widens it by the
+//! fetch-window depth, bounded per group switch.
+//!
+//! With `io_workers = 1` the executor falls back to the sequential
+//! [`SearchEngine::search`] loop, reproducing the pre-parallel engine bit
+//! for bit (same cache transaction order, same disk-model RNG order).
+
+use std::collections::HashMap;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::inflight::InFlight;
+use super::{
+    amortized_io_share, fetch_cluster, FetchOutcome, PreparedQuery, SearchEngine,
+};
+use crate::cache::ShardedClusterCache;
+use crate::index::{Hit, IvfIndex, TopK};
+use crate::metrics::SearchReport;
+use crate::sim::DiskModel;
+use crate::util::threadpool::ThreadPool;
+
+/// How many unique-cluster fetches may run ahead of the scoring cursor:
+/// enough to keep the workers busy, but bounded by half the cache so the
+/// pipeline cannot evict blocks it has not scored yet.
+fn fetch_window(io_workers: usize, cache_entries: usize) -> usize {
+    io_workers.saturating_mul(2).min((cache_entries / 2).max(1))
+}
+
+/// Execute one group of prepared queries. `before_member(i)` /
+/// `after_member(i)` run on the calling thread immediately around member
+/// `i`'s scoring — the dispatcher uses them for the prefetch trigger and
+/// the group-switch unpin, preserving `GroupingWithPrefetch` semantics in
+/// both execution modes.
+pub fn execute_group<B, A>(
+    engine: &mut SearchEngine,
+    members: &[&PreparedQuery],
+    mut before_member: B,
+    mut after_member: A,
+) -> anyhow::Result<Vec<(SearchReport, Vec<Hit>)>>
+where
+    B: FnMut(usize),
+    A: FnMut(usize),
+{
+    match engine.io_pool.clone() {
+        Some(pool) if !members.is_empty() => {
+            execute_parallel(engine, &pool, members, &mut before_member, &mut after_member)
+        }
+        _ => execute_sequential(engine, members, &mut before_member, &mut after_member),
+    }
+}
+
+/// The historical path: fetch + score interleaved per cluster, one member
+/// at a time, entirely on the calling thread.
+fn execute_sequential<B, A>(
+    engine: &mut SearchEngine,
+    members: &[&PreparedQuery],
+    before_member: &mut B,
+    after_member: &mut A,
+) -> anyhow::Result<Vec<(SearchReport, Vec<Hit>)>>
+where
+    B: FnMut(usize),
+    A: FnMut(usize),
+{
+    let mut out = Vec::with_capacity(members.len());
+    for (mi, pq) in members.iter().enumerate() {
+        before_member(mi);
+        let result = engine.search(pq)?;
+        after_member(mi);
+        out.push(result);
+    }
+    Ok(out)
+}
+
+/// Bounded-window fetch pipeline over the I/O worker pool: issues unique
+/// clusters in first-touch order, collects [`FetchOutcome`]s off a channel.
+struct FetchPipeline<'a> {
+    pool: &'a ThreadPool,
+    uniq: Vec<u32>,
+    window: usize,
+    issued: usize,
+    index: Arc<IvfIndex>,
+    cache: Arc<ShardedClusterCache>,
+    disk: Arc<Mutex<DiskModel>>,
+    inflight: Arc<InFlight>,
+    tx: mpsc::Sender<(u32, anyhow::Result<FetchOutcome>)>,
+    rx: mpsc::Receiver<(u32, anyhow::Result<FetchOutcome>)>,
+    ready: HashMap<u32, FetchOutcome>,
+}
+
+impl<'a> FetchPipeline<'a> {
+    fn new(engine: &SearchEngine, pool: &'a ThreadPool, uniq: Vec<u32>) -> FetchPipeline<'a> {
+        let (tx, rx) = mpsc::channel();
+        FetchPipeline {
+            pool,
+            uniq,
+            window: fetch_window(engine.cfg.io_workers, engine.cfg.cache_entries),
+            issued: 0,
+            index: Arc::clone(&engine.index),
+            cache: Arc::clone(&engine.cache),
+            disk: Arc::clone(&engine.disk),
+            inflight: Arc::clone(&engine.inflight),
+            tx,
+            rx,
+            ready: HashMap::new(),
+        }
+    }
+
+    /// Keep `window` fetches in flight ahead of `consumed` first-touches.
+    fn top_up(&mut self, consumed: usize) {
+        while self.issued < self.uniq.len() && self.issued - consumed < self.window {
+            let cid = self.uniq[self.issued];
+            let index = Arc::clone(&self.index);
+            let cache = Arc::clone(&self.cache);
+            let disk = Arc::clone(&self.disk);
+            let inflight = Arc::clone(&self.inflight);
+            let tx = self.tx.clone();
+            self.pool.execute(move || {
+                let res = fetch_cluster(&index, &cache, &disk, &inflight, cid, false);
+                // Receiver gone (group failed early): outcome is moot.
+                let _ = tx.send((cid, res));
+            });
+            self.issued += 1;
+        }
+    }
+
+    /// Block until cluster `cid`'s fetch outcome is available and take it.
+    /// `cid` must have been issued (first touches consume `uniq` in order).
+    fn take(&mut self, cid: u32) -> anyhow::Result<FetchOutcome> {
+        while !self.ready.contains_key(&cid) {
+            let (id, res) = self
+                .rx
+                .recv_timeout(Duration::from_secs(60))
+                .map_err(|_| anyhow::anyhow!("I/O worker stalled fetching cluster {cid}"))?;
+            self.ready.insert(id, res?);
+        }
+        Ok(self.ready.remove(&cid).unwrap())
+    }
+}
+
+fn execute_parallel<B, A>(
+    engine: &mut SearchEngine,
+    pool: &ThreadPool,
+    members: &[&PreparedQuery],
+    before_member: &mut B,
+    after_member: &mut A,
+) -> anyhow::Result<Vec<(SearchReport, Vec<Hit>)>>
+where
+    B: FnMut(usize),
+    A: FnMut(usize),
+{
+    // Unique clusters in first-touch order, plus how many members probe
+    // each (the amortization denominator).
+    let mut uniq: Vec<u32> = Vec::new();
+    let mut probers: HashMap<u32, usize> = HashMap::new();
+    for pq in members {
+        for &cid in &pq.clusters {
+            let n = probers.entry(cid).or_insert(0);
+            if *n == 0 {
+                uniq.push(cid);
+            }
+            *n += 1;
+        }
+    }
+
+    let mut pipeline = FetchPipeline::new(engine, pool, uniq);
+    let mut consumed = 0usize; // unique clusters consumed by scoring
+    pipeline.top_up(consumed);
+
+    // Amortized share of each group-missed cluster's simulated disk time,
+    // charged to every member that probes it.
+    let mut miss_share: HashMap<u32, Duration> = HashMap::new();
+    let mut touched: std::collections::HashSet<u32> = std::collections::HashSet::new();
+    let mut out = Vec::with_capacity(members.len());
+
+    for (mi, pq) in members.iter().enumerate() {
+        before_member(mi);
+        let mut topk = TopK::new(engine.cfg.top_k);
+        let mut report = SearchReport {
+            query_id: pq.query.id,
+            nprobe: pq.clusters.len(),
+            ..Default::default()
+        };
+        let mut io_share = Duration::ZERO;
+        let mut score_time = Duration::ZERO;
+        // Real (non-simulated) time this member spent blocked on the fetch
+        // pipeline: actual file reads and queueing that scoring could not
+        // hide. Counted into latency as measured wall time; the *simulated*
+        // portion of those waits is excluded here and charged through the
+        // amortized `io_share` instead, so it is attributed exactly once.
+        let mut stall_time = Duration::ZERO;
+        for &cid in &pq.clusters {
+            let block;
+            // When this touch itself paid for a (re-)read, the member is
+            // charged that read in full and must not also pay the group's
+            // amortized share for the cluster.
+            let mut paid_own_read = false;
+            if touched.insert(cid) {
+                // First group touch: consume the pipelined fetch. The I/O
+                // worker already ran the demand cache transaction; this
+                // member carries its hit-or-miss.
+                let wait_start = Instant::now();
+                let outcome = pipeline.take(cid)?;
+                stall_time += wait_start.elapsed().saturating_sub(outcome.simulated);
+                consumed += 1;
+                pipeline.top_up(consumed);
+                if outcome.was_hit {
+                    report.cache_hits += 1;
+                } else {
+                    report.cache_misses += 1;
+                    report.bytes_read += outcome.bytes_read;
+                    miss_share.insert(
+                        cid,
+                        amortized_io_share(outcome.simulated, probers[&cid]),
+                    );
+                }
+                block = outcome.block;
+            } else {
+                // Later touch: the same cache transaction the sequential
+                // loop would run — normally a hit; a re-read (tiny cache
+                // evicted it mid-group) is charged in full to this member.
+                let outcome = fetch_cluster(
+                    &engine.index,
+                    &engine.cache,
+                    &engine.disk,
+                    &engine.inflight,
+                    cid,
+                    false,
+                )?;
+                if outcome.was_hit {
+                    report.cache_hits += 1;
+                } else {
+                    report.cache_misses += 1;
+                    report.bytes_read += outcome.bytes_read;
+                    io_share += outcome.simulated;
+                    paid_own_read = true;
+                }
+                block = outcome.block;
+            }
+            if !paid_own_read {
+                if let Some(&share) = miss_share.get(&cid) {
+                    io_share += share;
+                }
+            }
+            let t0 = Instant::now();
+            let dists = engine.compute.score_block(&pq.embedding, 1, &block)?;
+            topk.push_block(&block.doc_ids, &dists);
+            score_time += t0.elapsed();
+        }
+        report.simulated = io_share;
+        report.latency = score_time + stall_time + io_share + pq.prep_cost;
+        after_member(mi);
+        out.push((report, topk.into_sorted()));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::testutil::tiny_engine;
+    use crate::workload::generate_queries;
+
+    #[test]
+    fn fetch_window_is_bounded() {
+        assert_eq!(fetch_window(1, 40), 2);
+        assert_eq!(fetch_window(8, 40), 16);
+        assert_eq!(fetch_window(8, 6), 3);
+        assert_eq!(fetch_window(8, 1), 1, "never zero");
+        assert_eq!(fetch_window(4, 100), 8);
+    }
+
+    #[test]
+    fn parallel_group_matches_sequential_results() {
+        // Same index (deterministic build), one engine parallel, one
+        // sequential: identical per-member top-k, identical hit+miss sums.
+        let (mut par, dir_p) = tiny_engine("exec-par", |cfg| {
+            cfg.io_workers = 4;
+            cfg.cache_shards = 2;
+            cfg.cache_entries = 16; // >= clusters: no evictions
+        });
+        let (mut seq, dir_s) = tiny_engine("exec-seq", |cfg| {
+            cfg.cache_entries = 16;
+        });
+        let queries = generate_queries(&par.spec);
+        let prep_p = par.prepare(&queries[..12]).unwrap();
+        let prep_s = seq.prepare(&queries[..12]).unwrap();
+
+        let members_p: Vec<&PreparedQuery> = prep_p.iter().collect();
+        let par_out = par.search_group(&members_p).unwrap();
+        let mut seq_out = Vec::new();
+        for pq in &prep_s {
+            seq_out.push(seq.search(pq).unwrap());
+        }
+
+        assert_eq!(par_out.len(), seq_out.len());
+        for ((pr, ph), (sr, sh)) in par_out.iter().zip(&seq_out) {
+            assert_eq!(ph, sh, "query {}: parallel hits diverge", pr.query_id);
+            assert_eq!(pr.query_id, sr.query_id);
+            assert_eq!(pr.cache_hits + pr.cache_misses, pr.nprobe as u64);
+            assert_eq!(pr.cache_hits, sr.cache_hits, "query {}", pr.query_id);
+            assert_eq!(pr.cache_misses, sr.cache_misses, "query {}", pr.query_id);
+            assert_eq!(pr.bytes_read, sr.bytes_read, "query {}", pr.query_id);
+        }
+        assert_eq!(par.cache_stats(), seq.cache_stats());
+        std::fs::remove_dir_all(&dir_p).ok();
+        std::fs::remove_dir_all(&dir_s).ok();
+    }
+
+    #[test]
+    fn shared_clusters_read_once_per_group() {
+        // All members probe the same clusters: exactly one miss per unique
+        // cluster, everything else hits.
+        let (mut engine, dir) = tiny_engine("exec-share", |cfg| {
+            cfg.io_workers = 4;
+            cfg.cache_entries = 16;
+        });
+        let queries = generate_queries(&engine.spec);
+        let prepared = engine.prepare(&queries[..1]).unwrap();
+        let pq = &prepared[0];
+        let members: Vec<&PreparedQuery> = vec![pq, pq, pq, pq, pq];
+        let out = engine.search_group(&members).unwrap();
+        let total_misses: u64 = out.iter().map(|(r, _)| r.cache_misses).sum();
+        let total_hits: u64 = out.iter().map(|(r, _)| r.cache_hits).sum();
+        assert_eq!(total_misses, pq.clusters.len() as u64, "one read per unique cluster");
+        assert_eq!(total_hits, 4 * pq.clusters.len() as u64);
+        for (_, hits) in &out[1..] {
+            assert_eq!(hits, &out[0].1, "shared block must score identically");
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn parallel_executor_amortizes_simulated_io() {
+        // NvmeScaled injects per-read simulated latency; five members over
+        // one shared cluster set must split each fetch's cost 5 ways.
+        let (mut engine, dir) = tiny_engine("exec-amort", |cfg| {
+            cfg.io_workers = 4;
+            cfg.cache_entries = 16;
+            cfg.disk_profile = crate::config::DiskProfile::NvmeScaled;
+        });
+        let queries = generate_queries(&engine.spec);
+        let prepared = engine.prepare(&queries[..1]).unwrap();
+        let pq = &prepared[0];
+        let members: Vec<&PreparedQuery> = vec![pq, pq, pq, pq, pq];
+        let out = engine.search_group(&members).unwrap();
+        let injected = engine.disk.lock().unwrap().injected;
+        let attributed: Duration = out.iter().map(|(r, _)| r.simulated).sum();
+        assert!(injected > Duration::ZERO, "NvmeScaled must inject latency");
+        // Attributed once, amortized: the sum over members reassembles the
+        // injected total (up to per-share integer rounding), never more.
+        assert!(attributed <= injected, "overlapped I/O double-counted");
+        assert!(
+            attributed + Duration::from_micros(5) >= injected,
+            "amortized shares lost too much: {attributed:?} vs {injected:?}"
+        );
+        // Every member carries an equal share of every fetch.
+        for (r, _) in &out[1..] {
+            assert_eq!(r.simulated, out[0].0.simulated);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn large_group_respects_fetch_window_with_tiny_cache() {
+        // One giant group over a cache smaller than its working set: the
+        // bounded window must keep the pipeline from deadlocking or
+        // overflowing, and results must still be correct.
+        let (mut engine, dir) = tiny_engine("exec-window", |cfg| {
+            cfg.io_workers = 8;
+            cfg.cache_shards = 4;
+            cfg.cache_entries = 4;
+            cfg.nprobe = 6;
+        });
+        let queries = generate_queries(&engine.spec);
+        let prepared = engine.prepare(&queries[..16]).unwrap();
+        let members: Vec<&PreparedQuery> = prepared.iter().collect();
+        let out = engine.search_group(&members).unwrap();
+        assert_eq!(out.len(), 16);
+        for (r, hits) in &out {
+            assert_eq!(hits.len(), engine.cfg.top_k);
+            assert_eq!(r.cache_hits + r.cache_misses, engine.cfg.nprobe as u64);
+        }
+        assert!(engine.cache.len() <= engine.cache.capacity());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn parallel_executor_surfaces_io_failures() {
+        let (mut engine, dir) = tiny_engine("exec-fail", |cfg| {
+            cfg.io_workers = 4;
+            cfg.cache_entries = 16;
+        });
+        let queries = generate_queries(&engine.spec);
+        let prepared = engine.prepare(&queries[..4]).unwrap();
+        let victim = prepared[0].clusters[0];
+        engine.disk.lock().unwrap().inject_failure(victim);
+        let members: Vec<&PreparedQuery> = prepared.iter().collect();
+        assert!(engine.search_group(&members).is_err());
+        engine.disk.lock().unwrap().heal(victim);
+        assert!(engine.search_group(&members).is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn hooks_fire_in_member_order() {
+        let (mut engine, dir) = tiny_engine("exec-hooks", |cfg| {
+            cfg.io_workers = 2;
+        });
+        let queries = generate_queries(&engine.spec);
+        let prepared = engine.prepare(&queries[..3]).unwrap();
+        let members: Vec<&PreparedQuery> = prepared.iter().collect();
+        let mut trace = Vec::new();
+        {
+            let trace_cell = std::cell::RefCell::new(&mut trace);
+            execute_group(
+                &mut engine,
+                &members,
+                |mi| trace_cell.borrow_mut().push(("before", mi)),
+                |mi| trace_cell.borrow_mut().push(("after", mi)),
+            )
+            .unwrap();
+        }
+        assert_eq!(
+            trace,
+            vec![
+                ("before", 0),
+                ("after", 0),
+                ("before", 1),
+                ("after", 1),
+                ("before", 2),
+                ("after", 2)
+            ]
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

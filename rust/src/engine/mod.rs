@@ -1,29 +1,53 @@
 //! Search engine (S7): Code 1's disk-based IVF search, composed from the
-//! index substrate, the cluster cache, the disk latency model, and the
-//! compute backend.
+//! index substrate, the sharded cluster cache, the disk latency model, the
+//! compute backend, and an I/O worker pool.
 //!
 //! Per query (paper Code 1): ① encode ② first-level centroid scan ③ fetch
-//! the nprobe clusters (cache, else disk) ④ merge ⑤ top-k — here fetch and
-//! score are interleaved per cluster and "merge + search" is the streaming
-//! [`TopK`] collector, which is mathematically identical and never
-//! materializes the temporary index.
+//! the nprobe clusters (cache, else disk) ④ merge ⑤ top-k — "merge +
+//! search" is the streaming [`TopK`] collector, which is mathematically
+//! identical to the paper's temporary index and never materializes it.
 //!
-//! The cache and disk model live behind `Arc<Mutex<..>>` because the
-//! opportunistic prefetcher (coordinator/prefetch.rs) shares them from its
-//! own thread.
+//! Two execution paths share the fetch primitive [`fetch_cluster`]:
+//!
+//!  * [`SearchEngine::search`] — the sequential path: fetch and score
+//!    interleave per cluster on the calling thread. With
+//!    `Config::io_workers = 1` this is the only path and reproduces the
+//!    pre-parallel engine bit for bit.
+//!  * [`executor::execute_group`] — the parallel pipelined path
+//!    (`io_workers > 1`): a pool of I/O workers fetches the group's unique
+//!    clusters ahead of a scoring cursor that stays on the calling thread
+//!    (the compute backend is not `Send`), so disk reads overlap scoring
+//!    and a cluster shared by several grouped queries is read once and
+//!    scored for all of them.
+//!
+//! Shared state is concurrency-ready throughout: the cluster cache is a
+//! lock-striped [`ShardedClusterCache`] (demand fetches, the opportunistic
+//! prefetcher, and the I/O workers no longer serialize on one mutex), the
+//! disk model keeps its own mutex (it owns the deterministic latency RNG),
+//! and the [`inflight::InFlight`] registry deduplicates concurrent reads of
+//! the same cluster across all of those actors — whoever loses the claim
+//! race waits for the winner's read instead of issuing a second one.
+//!
+//! Latency accounting under overlap: each unique fetch's simulated disk
+//! time is attributed once and amortized across the group members that
+//! probe the cluster ([`amortized_io_share`]), mirroring how `prep_cost`
+//! already spreads the batch encode+scan cost — overlapped I/O is never
+//! double-counted into per-query latency.
 
+pub mod executor;
 pub mod inflight;
 pub mod profile;
 
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::cache::ClusterCache;
+use crate::cache::ShardedClusterCache;
 use crate::config::Config;
 use crate::index::{ClusterBlock, Hit, IvfIndex, TopK};
 use crate::metrics::SearchReport;
 use crate::runtime::Compute;
 use crate::sim::DiskModel;
+use crate::util::threadpool::ThreadPool;
 use crate::workload::{DatasetSpec, Query};
 
 /// A query that has gone through encode + first-level scan: everything the
@@ -63,7 +87,7 @@ pub struct FetchOutcome {
 /// query).
 pub fn fetch_cluster(
     index: &IvfIndex,
-    cache: &Mutex<ClusterCache>,
+    cache: &ShardedClusterCache,
     disk: &Mutex<DiskModel>,
     inflight: &inflight::InFlight,
     id: u32,
@@ -71,8 +95,7 @@ pub fn fetch_cluster(
 ) -> anyhow::Result<FetchOutcome> {
     loop {
         {
-            let mut c = cache.lock().unwrap();
-            let found = if from_prefetch { c.peek(id) } else { c.get(id) };
+            let found = if from_prefetch { cache.peek(id) } else { cache.get(id) };
             if let Some(block) = found {
                 return Ok(FetchOutcome {
                     block,
@@ -88,12 +111,11 @@ pub fn fetch_cluster(
             // then retry the cache. The bound only matters if the reader
             // dies; the demand read below is the fallback.
             inflight.wait_for(id, Duration::from_secs(10));
-            if let Some(block) = {
-                let mut c = cache.lock().unwrap();
-                if from_prefetch { c.peek(id) } else { c.convert_miss_to_hit(id) }
-            } {
-                // The bytes came from the overlapped (prefetch) read; this
-                // query only paid the residual wait, so it counts as a hit.
+            let found =
+                if from_prefetch { cache.peek(id) } else { cache.convert_miss_to_hit(id) };
+            if let Some(block) = found {
+                // The bytes came from the overlapped read; this caller only
+                // paid the residual wait, so it counts as a hit.
                 return Ok(FetchOutcome {
                     block,
                     was_hit: true,
@@ -105,21 +127,33 @@ pub fn fetch_cluster(
         };
 
         // We own the read: real disk I/O + modeled latency, outside the
-        // cache lock so prefetch and demand reads overlap.
+        // cache locks so concurrent reads of other clusters overlap.
         disk.lock().unwrap().check(id)?;
         let block = Arc::new(index.read_cluster(id)?);
         let bytes = block.bytes_on_disk;
         let simulated = {
-            // Compute latency under the lock (deterministic RNG), sleep
-            // outside it.
+            // Compute latency under the disk lock (deterministic RNG),
+            // sleep outside it.
             let d = disk.lock().unwrap().read_latency(bytes);
             if !d.is_zero() {
                 std::thread::sleep(d);
             }
             d
         };
-        cache.lock().unwrap().insert(Arc::clone(&block), from_prefetch);
+        cache.insert(Arc::clone(&block), from_prefetch);
         return Ok(FetchOutcome { block, was_hit: false, bytes_read: bytes, simulated });
+    }
+}
+
+/// One group member's share of a unique fetch's simulated disk time: the
+/// fetch is attributed once and split evenly over the `probers` members
+/// whose cluster sets include it (the same amortization `prep_cost` applies
+/// to the batch encode+scan time). `probers <= 1` keeps the full cost.
+pub fn amortized_io_share(total: Duration, probers: usize) -> Duration {
+    if probers <= 1 {
+        total
+    } else {
+        total / probers as u32
     }
 }
 
@@ -136,12 +170,20 @@ pub fn embedding_label(backend: crate::config::Backend, model: &str) -> String {
 pub struct SearchEngine {
     pub cfg: Config,
     pub spec: DatasetSpec,
-    pub index: IvfIndex,
+    /// The opened index behind an `Arc` so the I/O workers and the
+    /// prefetcher share it without deep-copying the centroid table.
+    pub index: Arc<IvfIndex>,
     pub compute: Compute,
-    pub cache: Arc<Mutex<ClusterCache>>,
+    /// Lock-striped cluster cache, shared with the prefetcher and the I/O
+    /// workers (and, in multi-lane servers, with sibling engines).
+    pub cache: Arc<ShardedClusterCache>,
     pub disk: Arc<Mutex<DiskModel>>,
-    /// Shared in-flight read registry (demand path + prefetcher).
+    /// Shared in-flight read registry (demand path + I/O workers +
+    /// prefetcher).
     pub inflight: Arc<inflight::InFlight>,
+    /// I/O worker pool for the parallel group executor; `None` when
+    /// `cfg.io_workers <= 1` (sequential path).
+    pub(crate) io_pool: Option<Arc<ThreadPool>>,
 }
 
 impl SearchEngine {
@@ -149,6 +191,16 @@ impl SearchEngine {
     /// cost table is the offline read-latency profile from `meta.json`
     /// (EdgeRAG §4.1; zeros if the index was never profiled).
     pub fn open(cfg: &Config, spec: &DatasetSpec) -> anyhow::Result<SearchEngine> {
+        Self::open_shared(cfg, spec, None)
+    }
+
+    /// Like [`SearchEngine::open`], but serve over an externally owned
+    /// cache (multi-lane servers share one cache across lane engines).
+    pub fn open_shared(
+        cfg: &Config,
+        spec: &DatasetSpec,
+        shared_cache: Option<Arc<ShardedClusterCache>>,
+    ) -> anyhow::Result<SearchEngine> {
         let index = IvfIndex::open(&cfg.dataset_dir(spec.name))?;
         let compute = Compute::new(cfg.backend, &cfg.artifacts_dir, &cfg.encoder_model, spec)?;
         let want = embedding_label(cfg.backend, &cfg.encoder_model);
@@ -160,7 +212,7 @@ impl SearchEngine {
             index.meta.embedding,
             want
         );
-        Self::assemble(cfg, spec, index, compute)
+        Self::assemble_shared(cfg, spec, index, compute, shared_cache)
     }
 
     /// Assemble from parts (tests build tiny indexes directly).
@@ -170,25 +222,45 @@ impl SearchEngine {
         index: IvfIndex,
         compute: Compute,
     ) -> anyhow::Result<SearchEngine> {
+        Self::assemble_shared(cfg, spec, index, compute, None)
+    }
+
+    /// Assemble from parts over an optional externally owned cache.
+    pub fn assemble_shared(
+        cfg: &Config,
+        spec: &DatasetSpec,
+        index: IvfIndex,
+        compute: Compute,
+        shared_cache: Option<Arc<ShardedClusterCache>>,
+    ) -> anyhow::Result<SearchEngine> {
         cfg.validate()?;
         anyhow::ensure!(
             index.meta.clusters <= crate::config::geometry::CENTROID_PAD,
             "index has more clusters than the centroid artifact supports"
         );
-        let cache = ClusterCache::from_config(
-            cfg.cache_policy,
-            cfg.cache_entries,
-            index.meta.read_profile_us.clone(),
-        );
+        let cache = shared_cache.unwrap_or_else(|| {
+            Arc::new(ShardedClusterCache::from_config(
+                cfg.cache_policy,
+                cfg.cache_entries,
+                cfg.cache_shards,
+                index.meta.read_profile_us.clone(),
+            ))
+        });
+        let io_pool = if cfg.io_workers > 1 {
+            Some(Arc::new(ThreadPool::named("cagr-io", cfg.io_workers)))
+        } else {
+            None
+        };
         let disk = DiskModel::new(cfg.disk_profile, cfg.seed);
         Ok(SearchEngine {
             cfg: cfg.clone(),
             spec: spec.clone(),
-            index,
+            index: Arc::new(index),
             compute,
-            cache: Arc::new(Mutex::new(cache)),
+            cache,
             disk: Arc::new(Mutex::new(disk)),
             inflight: Arc::new(inflight::InFlight::new()),
+            io_pool,
         })
     }
 
@@ -250,6 +322,17 @@ impl SearchEngine {
         self.search(&prepared[0])
     }
 
+    /// Search one group of prepared queries through the group executor:
+    /// parallel pipelined fetch+score when `cfg.io_workers > 1`, the
+    /// sequential per-member path otherwise. See [`executor::execute_group`]
+    /// for the dispatcher variant with prefetch hooks.
+    pub fn search_group(
+        &mut self,
+        members: &[&PreparedQuery],
+    ) -> anyhow::Result<Vec<(SearchReport, Vec<Hit>)>> {
+        executor::execute_group(self, members, |_| {}, |_| {})
+    }
+
     /// Exhaustive (exact) search over all clusters — the accuracy oracle
     /// for recall tests; not on any serving path.
     pub fn exhaustive_search(&mut self, pq: &PreparedQuery) -> anyhow::Result<Vec<Hit>> {
@@ -262,14 +345,14 @@ impl SearchEngine {
         Ok(topk.into_sorted())
     }
 
-    /// Cache stats snapshot.
+    /// Cache stats snapshot (merged across shards).
     pub fn cache_stats(&self) -> crate::cache::CacheStats {
-        self.cache.lock().unwrap().stats()
+        self.cache.stats()
     }
 
     /// Reset cache stats (e.g. after warm-up).
     pub fn reset_cache_stats(&mut self) {
-        self.cache.lock().unwrap().reset_stats();
+        self.cache.reset_stats();
     }
 }
 
@@ -313,6 +396,11 @@ pub(crate) mod testutil {
         cfg.cache_entries = 6;
         cfg.backend = Backend::Native;
         cfg.disk_profile = crate::config::DiskProfile::None;
+        // Deterministic sequential defaults: unit tests that pin exact
+        // hit/miss/eviction sequences must not depend on the machine's
+        // core count. Parallel-path tests override via `mutate`.
+        cfg.io_workers = 1;
+        cfg.cache_shards = 1;
         mutate(&mut cfg);
 
         let compute = Compute::new(cfg.backend, &cfg.artifacts_dir, &cfg.encoder_model, &spec).unwrap();
@@ -428,5 +516,25 @@ mod tests {
         let (mut engine, dir) = tiny_engine("empty", |_| {});
         assert!(engine.prepare(&[]).unwrap().is_empty());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn amortized_io_share_arithmetic_is_pinned() {
+        use super::amortized_io_share;
+        use std::time::Duration;
+        // A 900us fetch probed by 4 grouped queries: 225us each, attributed
+        // once — the shares reassemble the whole fetch, never more.
+        let total = Duration::from_micros(900);
+        let share = amortized_io_share(total, 4);
+        assert_eq!(share, Duration::from_micros(225));
+        assert_eq!(share * 4, total);
+        // Sole prober (and the degenerate 0 case) keeps the full cost.
+        assert_eq!(amortized_io_share(total, 1), total);
+        assert_eq!(amortized_io_share(total, 0), total);
+        // Non-divisible nanos round down per share: the amortized sum never
+        // exceeds the single attribution.
+        let odd = Duration::from_nanos(1_000);
+        assert_eq!(amortized_io_share(odd, 3), Duration::from_nanos(333));
+        assert!(amortized_io_share(odd, 3) * 3 <= odd);
     }
 }

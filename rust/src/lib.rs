@@ -7,8 +7,10 @@
 //! * **Layer 3 (this crate)** — the serving stack: dynamic batching,
 //!   context-aware query grouping by Jaccard similarity of cluster-access
 //!   sets, opportunistic cluster prefetching across group switches, a
-//!   disk-based IVF index with pluggable cluster caches, and the EdgeRAG
-//!   baseline.
+//!   parallel pipelined group executor over a lock-striped cluster cache
+//!   (`Config::io_workers` / `Config::cache_shards`), a disk-based IVF
+//!   index with pluggable replacement policies, a multi-lane TCP
+//!   front-end, and the EdgeRAG baseline.
 //! * **Layer 2 (python/compile/model.py)** — the embedding encoder and
 //!   scoring graphs in JAX, AOT-lowered to HLO text once at build time.
 //! * **Layer 1 (python/compile/kernels/)** — Pallas kernels for the scoring

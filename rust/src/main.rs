@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   build-index  --dataset <name|all> [--backend native|pjrt] ...
 //!   serve        --dataset <name> [--addr host:port] [--policy baseline|qg|qgp]
+//!                [--lanes N]    parallel dispatch lanes over one shared cache
 //!   search       --dataset <name> [--queries N] [--policy ..]   one-shot run
 //!   replay       --trace <file> [--policy ..]                   replay a trace
 //!   record-trace --dataset <name> --out <file>
@@ -129,37 +130,55 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let specs = datasets_arg(args)?;
     anyhow::ensure!(specs.len() == 1, "serve requires a single --dataset");
     let spec = &specs[0];
+    let lanes = args.get_usize("lanes", 1)?.max(1);
     // Provision in the foreground (build progress on the caller's tty),
-    // then hand the server a session factory; the session itself is
-    // constructed on the dispatch thread (PJRT is not Send).
+    // then hand the server a session factory; each lane's session is
+    // constructed on its own dispatch thread (PJRT is not Send). Multiple
+    // lanes share one sharded cluster cache so they cooperate on residency.
     runner::ensure_dataset(&cfg, spec)?;
+    let shared_cache = if lanes > 1 {
+        let index = cagr::index::IvfIndex::open(&cfg.dataset_dir(spec.name))?;
+        Some(std::sync::Arc::new(cagr::cache::ShardedClusterCache::from_config(
+            cfg.cache_policy,
+            cfg.cache_entries,
+            cfg.cache_shards,
+            index.meta.read_profile_us.clone(),
+        )))
+    } else {
+        None
+    };
     let factory = {
         let cfg = cfg.clone();
         let spec = spec.clone();
-        let policy = mode.to_policy();
         move || -> anyhow::Result<Session> {
-            Session::builder()
-                .config(cfg)
-                .dataset(spec)
-                .boxed_policy(policy)
-                .ensure_dataset(false)
-                .open()
+            let mut builder = Session::builder()
+                .config(cfg.clone())
+                .dataset(spec.clone())
+                .boxed_policy(mode.to_policy())
+                .ensure_dataset(false);
+            if let Some(cache) = &shared_cache {
+                builder = builder.shared_cache(std::sync::Arc::clone(cache));
+            }
+            builder.open()
         }
     };
     let server_cfg = server::ServerConfig {
         addr: args.get_or("addr", "127.0.0.1:7471").to_string(),
         batch_window: std::time::Duration::from_millis(args.get_u64("batch-window-ms", 10)?),
         batch_max: cfg.batch_max,
+        lanes,
     };
     let handle = server::start(factory, server_cfg)?;
     println!(
-        "cagr serving {} on {} (policy={}, cache={}x{}, theta={})",
+        "cagr serving {} on {} (policy={}, cache={}x{}, theta={}, lanes={}, io-workers={})",
         spec.name,
         handle.addr,
         mode.name(),
         cfg.cache_policy.name(),
         cfg.cache_entries,
-        cfg.theta
+        cfg.theta,
+        lanes,
+        cfg.io_workers
     );
     println!("press ctrl-c to stop");
     loop {

@@ -7,11 +7,24 @@
 //!   {"query_id": 7, "latency_us": 812, "group": 2,
 //!    "hits": [{"doc": 123, "distance": 0.4}, ...]}
 //!
-//! Connection handlers feed a shared queue; a single dispatch thread
-//! gathers requests into arrival batches (up to `batch_max` or
-//! `batch_window`, mirroring §4.1's batching interval) and runs them
-//! through a [`Session`]. The session — and with it the PJRT runtime —
-//! stays on one thread; handlers only do I/O.
+//! Connection handlers feed per-lane queues; each **dispatch lane** is a
+//! thread that gathers its queue into arrival batches (up to `batch_max`
+//! or `batch_window`, mirroring §4.1's batching interval) and runs them
+//! through its own [`Session`]. Every session — and with it the PJRT
+//! runtime — stays on its lane's thread; handlers only do I/O. Connections
+//! are assigned to lanes round-robin at accept time, and within a batch
+//! replies are emitted in request order, so each connection's responses
+//! always arrive in the order its requests did. With `lanes > 1` the
+//! caller's session factory should share one cluster cache across lanes
+//! (`Session::builder().shared_cache(..)`) so the lanes cooperate on
+//! residency instead of duplicating it.
+//!
+//! Known multi-lane limitation: prefetch pins on a *shared* cache are
+//! best-effort across lanes — each lane's group-switch `unpin_all` also
+//! releases pins another lane's prefetcher set, so a cross-lane race can
+//! evict a sibling lane's prefetched cluster early. The cost is an extra
+//! disk read (results are unaffected; the demand path simply re-fetches);
+//! per-owner pin tokens are a recorded ROADMAP follow-up.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
@@ -32,6 +45,9 @@ pub struct ServerConfig {
     pub batch_window: Duration,
     /// Max queries per batch (paper: 100).
     pub batch_max: usize,
+    /// Dispatch lanes: independent batcher threads, each with its own
+    /// `Session`. Connections are pinned to a lane round-robin (at least 1).
+    pub lanes: usize,
 }
 
 impl Default for ServerConfig {
@@ -40,6 +56,7 @@ impl Default for ServerConfig {
             addr: "127.0.0.1:7471".to_string(),
             batch_window: Duration::from_millis(10),
             batch_max: 100,
+            lanes: 1,
         }
     }
 }
@@ -54,7 +71,7 @@ pub struct ServerHandle {
     pub addr: std::net::SocketAddr,
     shutdown: Arc<std::sync::atomic::AtomicBool>,
     accept_thread: Option<JoinHandle<()>>,
-    dispatch_thread: Option<JoinHandle<()>>,
+    dispatch_threads: Vec<JoinHandle<()>>,
 }
 
 impl ServerHandle {
@@ -69,7 +86,7 @@ impl ServerHandle {
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
         }
-        if let Some(t) = self.dispatch_thread.take() {
+        for t in self.dispatch_threads.drain(..) {
             let _ = t.join();
         }
     }
@@ -84,63 +101,97 @@ impl Drop for ServerHandle {
 /// Start serving on `cfg.addr` (use port 0 for an ephemeral port).
 ///
 /// Takes a *session factory* rather than a session because the PJRT client
-/// is not `Send`: the session (and with it the compiled executables) is
-/// constructed on — and never leaves — the dispatch thread. Construction
-/// errors are propagated back through the startup handshake. A typical
-/// factory is a `Session::builder()...open()` call:
+/// is not `Send`: each lane's session (and with it the compiled
+/// executables) is constructed on — and never leaves — that lane's
+/// dispatch thread. The factory is invoked once per lane (`cfg.lanes`
+/// total); construction errors are propagated back through the startup
+/// handshake. A typical factory is a `Session::builder()...open()` call,
+/// cloning its captured config per invocation:
 ///
 /// ```text
-/// let factory = move || Session::builder().config(cfg).dataset(spec).open();
+/// let factory = move || {
+///     Session::builder().config(cfg.clone()).dataset(spec.clone()).open()
+/// };
 /// let handle = server::start(factory, ServerConfig::default())?;
 /// ```
+///
+/// With `lanes > 1`, pass the lanes one shared cache so they cooperate:
+/// `Session::builder().shared_cache(Arc::clone(&cache))`.
 pub fn start<F>(session_factory: F, cfg: ServerConfig) -> anyhow::Result<ServerHandle>
 where
-    F: FnOnce() -> anyhow::Result<Session> + Send + 'static,
+    F: Fn() -> anyhow::Result<Session> + Send + Sync + 'static,
 {
     let listener = TcpListener::bind(&cfg.addr)
         .map_err(|e| anyhow::anyhow!("binding {}: {e}", cfg.addr))?;
     let addr = listener.local_addr()?;
     let shutdown = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let lanes = cfg.lanes.max(1);
+    let factory = Arc::new(session_factory);
 
-    let (req_tx, req_rx) = std::sync::mpsc::channel::<Request>();
-
-    // Dispatch thread: build the session, signal readiness, then
-    // batch + search until shutdown.
-    let dispatch_shutdown = Arc::clone(&shutdown);
+    // One dispatch lane per thread: build the lane's session, signal
+    // readiness, then batch + search until shutdown.
     let window = cfg.batch_window;
     let batch_max = cfg.batch_max;
+    let mut lane_txs: Vec<Sender<Request>> = Vec::with_capacity(lanes);
+    let mut dispatch_threads = Vec::with_capacity(lanes);
     let (ready_tx, ready_rx) = std::sync::mpsc::channel::<anyhow::Result<()>>();
-    let dispatch_thread = std::thread::Builder::new()
-        .name("cagr-dispatch".to_string())
-        .spawn(move || {
-            let mut session = match session_factory() {
-                Ok(s) => {
-                    let _ = ready_tx.send(Ok(()));
-                    s
+    for lane in 0..lanes {
+        let (req_tx, req_rx) = std::sync::mpsc::channel::<Request>();
+        lane_txs.push(req_tx);
+        let factory = Arc::clone(&factory);
+        let ready_tx = ready_tx.clone();
+        let dispatch_shutdown = Arc::clone(&shutdown);
+        let thread = std::thread::Builder::new()
+            .name(format!("cagr-dispatch-{lane}"))
+            .spawn(move || {
+                let mut session = match (&*factory)() {
+                    Ok(s) => {
+                        let _ = ready_tx.send(Ok(()));
+                        s
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                dispatch_loop(&mut session, lane, req_rx, window, batch_max, dispatch_shutdown)
+            })
+            .expect("spawn dispatch thread");
+        dispatch_threads.push(thread);
+    }
+    drop(ready_tx);
+    for _ in 0..lanes {
+        match ready_rx.recv() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => {
+                // Abort startup: wake every healthy lane (dropping the
+                // senders disconnects their queues) and surface the error.
+                shutdown.store(true, std::sync::atomic::Ordering::SeqCst);
+                drop(lane_txs);
+                for t in dispatch_threads {
+                    let _ = t.join();
                 }
-                Err(e) => {
-                    let _ = ready_tx.send(Err(e));
-                    return;
-                }
-            };
-            dispatch_loop(&mut session, req_rx, window, batch_max, dispatch_shutdown)
-        })
-        .expect("spawn dispatch thread");
-    ready_rx
-        .recv()
-        .map_err(|_| anyhow::anyhow!("dispatch thread died during startup"))??;
+                return Err(e);
+            }
+            Err(_) => anyhow::bail!("dispatch thread died during startup"),
+        }
+    }
 
-    // Accept thread: one handler thread per connection.
+    // Accept thread: one handler thread per connection, pinned to a lane
+    // round-robin so a connection's requests always batch in one lane (and
+    // its responses therefore keep arriving in request order).
     let accept_shutdown = Arc::clone(&shutdown);
     let accept_thread = std::thread::Builder::new()
         .name("cagr-accept".to_string())
         .spawn(move || {
+            let mut next_lane = 0usize;
             for stream in listener.incoming() {
                 if accept_shutdown.load(std::sync::atomic::Ordering::SeqCst) {
                     break;
                 }
                 let Ok(stream) = stream else { continue };
-                let tx = req_tx.clone();
+                let tx = lane_txs[next_lane % lane_txs.len()].clone();
+                next_lane = next_lane.wrapping_add(1);
                 std::thread::Builder::new()
                     .name("cagr-conn".to_string())
                     .spawn(move || handle_connection(stream, tx))
@@ -153,12 +204,13 @@ where
         addr,
         shutdown,
         accept_thread: Some(accept_thread),
-        dispatch_thread: Some(dispatch_thread),
+        dispatch_threads,
     })
 }
 
 fn dispatch_loop(
     session: &mut Session,
+    lane: usize,
     req_rx: Receiver<Request>,
     window: Duration,
     batch_max: usize,
@@ -192,11 +244,21 @@ fn dispatch_loop(
         batch_sizes.push(queries.len());
         match session.run_batch(&queries) {
             Ok((outcomes, _stats)) => {
-                for outcome in outcomes {
-                    // Route each outcome back to the connection that sent it.
-                    if let Some(req) =
-                        pending.iter().find(|r| r.query.id == outcome.report.query_id)
-                    {
+                // Walk the batch in *request* order and route each reply to
+                // the connection that sent it: together with connection→lane
+                // pinning this guarantees every connection receives its
+                // responses in the order it issued the requests. Each
+                // outcome is consumed once, so duplicate query_ids in one
+                // batch each get their own (distinct) result.
+                let mut used = vec![false; outcomes.len()];
+                for req in &pending {
+                    let slot = outcomes
+                        .iter()
+                        .enumerate()
+                        .position(|(i, o)| !used[i] && o.report.query_id == req.query.id);
+                    if let Some(i) = slot {
+                        used[i] = true;
+                        let outcome = &outcomes[i];
                         let hits = Json::Arr(
                             outcome
                                 .hits
@@ -238,7 +300,7 @@ fn dispatch_loop(
         batch_sizes.iter().sum::<usize>() as f64 / batch_sizes.len() as f64
     };
     eprintln!(
-        "[cagr-server] policy={} batches={} mean-batch={:.1} cache-hit={:.1}% \
+        "[cagr-server] lane={lane} policy={} batches={} mean-batch={:.1} cache-hit={:.1}% \
          (hits={} misses={} prefetch-inserts={})",
         session.policy_name(),
         batch_sizes.len(),
@@ -261,8 +323,10 @@ fn handle_connection(stream: TcpStream, req_tx: Sender<Request>) {
 
     // Writer side runs independently so the connection is fully pipelined:
     // a client may have many requests in flight, which is what lets the
-    // dispatch thread form real arrival batches (paper §4.1). Responses
-    // are matched by `query_id`, not by order.
+    // dispatch thread form real arrival batches (paper §4.1). The lane
+    // emits replies in request order (see dispatch_loop), so a connection's
+    // responses arrive in the order its requests did; `query_id` matching
+    // still works for clients that prefer it.
     let writer_thread = std::thread::Builder::new()
         .name("cagr-conn-writer".to_string())
         .spawn(move || {
@@ -351,9 +415,10 @@ impl Client {
         self.recv()
     }
 
-    /// Pipelined send: many requests may be outstanding; match responses
-    /// by `query_id` (the connection is full-duplex, responses arrive in
-    /// completion order).
+    /// Pipelined send: many requests may be outstanding. The server
+    /// guarantees responses on a connection arrive in request order
+    /// (connection→lane pinning + request-order replies); matching by
+    /// `query_id` also works and stays robust to client-side reordering.
     pub fn send(&mut self, query: &Query) -> anyhow::Result<()> {
         let req = obj(vec![
             ("query_id", query.id.into()),

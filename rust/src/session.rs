@@ -29,9 +29,10 @@
 //! this module needs to wire them together by hand anymore.
 
 use std::collections::VecDeque;
+use std::sync::Arc;
 use std::time::Duration;
 
-use crate::cache::CacheStats;
+use crate::cache::{CacheStats, ShardedClusterCache};
 use crate::config::Config;
 use crate::coordinator::{BatchStats, Coordinator, Mode, QueryOutcome, SchedulePolicy};
 use crate::engine::SearchEngine;
@@ -54,6 +55,7 @@ pub struct SessionBuilder {
     dataset_name: Option<String>,
     policy: Option<Box<dyn SchedulePolicy>>,
     ensure: bool,
+    shared_cache: Option<Arc<ShardedClusterCache>>,
 }
 
 impl Default for SessionBuilder {
@@ -64,6 +66,7 @@ impl Default for SessionBuilder {
             dataset_name: None,
             policy: None,
             ensure: true,
+            shared_cache: None,
         }
     }
 }
@@ -117,10 +120,32 @@ impl SessionBuilder {
         self
     }
 
+    /// I/O worker threads for the parallel group executor (overrides
+    /// `cfg.io_workers`; 1 = the sequential fetch+score path).
+    pub fn io_workers(mut self, workers: usize) -> Self {
+        self.cfg.io_workers = workers;
+        self
+    }
+
+    /// Lock stripes for the cluster cache (overrides `cfg.cache_shards`;
+    /// ignored when a [`SessionBuilder::shared_cache`] is supplied).
+    pub fn cache_shards(mut self, shards: usize) -> Self {
+        self.cfg.cache_shards = shards;
+        self
+    }
+
+    /// Serve over an externally owned cluster cache instead of building a
+    /// private one — how a multi-lane server shares one cache (and its
+    /// capacity budget) across per-lane sessions.
+    pub fn shared_cache(mut self, cache: Arc<ShardedClusterCache>) -> Self {
+        self.shared_cache = Some(cache);
+        self
+    }
+
     /// Validate the configuration, resolve the dataset, provision the index
     /// if requested, and assemble the serving session.
     pub fn open(self) -> anyhow::Result<Session> {
-        let SessionBuilder { cfg, dataset, dataset_name, policy, ensure } = self;
+        let SessionBuilder { cfg, dataset, dataset_name, policy, ensure, shared_cache } = self;
         cfg.validate()?;
         let spec = match (dataset, dataset_name) {
             (Some(spec), _) => spec,
@@ -136,7 +161,7 @@ impl SessionBuilder {
         if ensure {
             runner::ensure_dataset(&cfg, &spec)?;
         }
-        let engine = SearchEngine::open(&cfg, &spec)?;
+        let engine = SearchEngine::open_shared(&cfg, &spec, shared_cache)?;
         Ok(Session {
             coordinator: Coordinator::new(engine, policy),
             spec,

@@ -1,8 +1,10 @@
 //! Fixed-size worker pool over std threads + channels (offline build: no
-//! tokio/rayon). Used by the index builder for parallel k-means assignment
-//! and by the server front-end for connection handling. The prefetcher uses
-//! its own dedicated thread (coordinator/prefetch.rs), not this pool, so
-//! that prefetch I/O can never be starved by bulk work.
+//! tokio/rayon). Used by the index builder for parallel k-means assignment,
+//! by the engine's parallel group executor as its I/O worker pool
+//! (engine/executor.rs), and by the server front-end for connection
+//! handling. The prefetcher uses its own dedicated thread
+//! (coordinator/prefetch.rs), not this pool, so that prefetch I/O can never
+//! be starved by bulk work.
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -22,8 +24,14 @@ pub struct ThreadPool {
 }
 
 impl ThreadPool {
-    /// Spawn `size` workers (at least 1).
+    /// Spawn `size` workers (at least 1) named `cagr-pool-<i>`.
     pub fn new(size: usize) -> ThreadPool {
+        Self::named("cagr-pool", size)
+    }
+
+    /// Spawn `size` workers (at least 1) named `<prefix>-<i>`, so e.g. the
+    /// engine's I/O workers show up as `cagr-io-0..n` in thread dumps.
+    pub fn named(prefix: &str, size: usize) -> ThreadPool {
         let size = size.max(1);
         let (tx, rx) = mpsc::channel::<Message>();
         let rx = Arc::new(Mutex::new(rx));
@@ -31,7 +39,7 @@ impl ThreadPool {
             .map(|i| {
                 let rx = Arc::clone(&rx);
                 thread::Builder::new()
-                    .name(format!("cagr-pool-{i}"))
+                    .name(format!("{prefix}-{i}"))
                     .spawn(move || loop {
                         let msg = { rx.lock().unwrap().recv() };
                         match msg {

@@ -1,0 +1,245 @@
+//! Concurrency stress suite: the lock-striped cluster cache under
+//! multi-threaded hammering, and the opportunistic prefetcher racing demand
+//! fetches through the shared `InFlight` registry.
+//!
+//! These tests are about *invariants under races*, not exact sequences:
+//! counter conservation (`hits + misses == lookups`), capacity discipline
+//! (`resident <= capacity` at every observation point), and pin safety
+//! (a pinned entry is never evicted). CI runs this file 32 times in a row
+//! (the flaky-detector job) so an interleaving-dependent failure breaks the
+//! build instead of flaking.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use cagr::cache::ShardedClusterCache;
+use cagr::config::{Backend, CachePolicy, Config, DiskProfile};
+use cagr::engine::{fetch_cluster, SearchEngine};
+use cagr::harness::runner::ensure_dataset;
+use cagr::index::ClusterBlock;
+use cagr::util::rng::Rng;
+use cagr::workload::DatasetSpec;
+
+const ALL_POLICIES: [CachePolicy; 4] = [
+    CachePolicy::Lru,
+    CachePolicy::Fifo,
+    CachePolicy::Lfu,
+    CachePolicy::CostAware,
+];
+
+fn stress_block(id: u32) -> Arc<ClusterBlock> {
+    Arc::new(ClusterBlock {
+        id,
+        len: 1,
+        dim: 2,
+        doc_ids: vec![id],
+        data: vec![id as f32, 0.0],
+        bytes_on_disk: 64 + id as u64,
+    })
+}
+
+/// 8 threads × get/insert/pin against one sharded cache; a reserved set of
+/// pinned entries (one per shard) must survive everything, counters must
+/// balance, and capacity must never be exceeded — under all four policies.
+#[test]
+fn sharded_cache_stress_all_policies() {
+    const THREADS: usize = 8;
+    const OPS: usize = 2_000;
+    const CAPACITY: usize = 16;
+    const SHARDS: usize = 4;
+    // Ids 0..SHARDS land one per shard and stay pinned for the whole run;
+    // worker ops only touch ids >= SHARDS.
+    const RESERVED: u32 = SHARDS as u32;
+
+    for policy in ALL_POLICIES {
+        let costs: Vec<u64> = (0..96).map(|i| (i % 13 + 1) as u64).collect();
+        let cache = Arc::new(ShardedClusterCache::from_config(policy, CAPACITY, SHARDS, costs));
+        for id in 0..RESERVED {
+            assert!(cache.insert(stress_block(id), false));
+        }
+        cache.pin(&[0, 1, 2, 3]);
+
+        let lookups = Arc::new(AtomicU64::new(0));
+        let mut workers = Vec::new();
+        for tid in 0..THREADS {
+            let cache = Arc::clone(&cache);
+            let lookups = Arc::clone(&lookups);
+            workers.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(0xC0C0 + tid as u64);
+                for op in 0..OPS {
+                    let id = RESERVED + rng.range(0, 60) as u32;
+                    match rng.range(0, 20) {
+                        0 => {
+                            // Rare extra pin; never unpinned — pinned
+                            // entries must simply stop being victims.
+                            cache.pin(&[id]);
+                        }
+                        1..=8 => {
+                            lookups.fetch_add(1, Ordering::SeqCst);
+                            let _ = cache.get(id);
+                        }
+                        _ => {
+                            // insert() on a resident id is a no-op, so
+                            // blind inserts are safe to race.
+                            cache.insert(stress_block(id), rng.f64() < 0.25);
+                        }
+                    }
+                    if op % 64 == 0 {
+                        assert!(
+                            cache.len() <= CAPACITY,
+                            "{policy:?}: resident {} > capacity {CAPACITY}",
+                            cache.len()
+                        );
+                    }
+                }
+            }));
+        }
+        for w in workers {
+            w.join().expect("stress worker panicked");
+        }
+
+        let s = cache.stats();
+        assert_eq!(
+            s.hits + s.misses,
+            lookups.load(Ordering::SeqCst),
+            "{policy:?}: lookup counters don't balance"
+        );
+        assert!(cache.len() <= CAPACITY, "{policy:?}: capacity exceeded");
+        assert_eq!(
+            s.insertions - s.evictions,
+            cache.len() as u64,
+            "{policy:?}: insert/evict ledger disagrees with residency"
+        );
+        assert!(s.insertions >= s.evictions, "{policy:?}: phantom evictions");
+        for id in 0..RESERVED {
+            assert!(cache.contains(id), "{policy:?}: pinned entry {id} was evicted");
+        }
+        assert!(cache.pinned_count() >= RESERVED as usize);
+    }
+}
+
+fn race_cfg(tag: &str) -> (Config, DatasetSpec) {
+    let mut cfg = Config::default();
+    cfg.data_dir =
+        std::env::temp_dir().join(format!("cagr-conc-{}-{tag}", std::process::id()));
+    cfg.clusters = 16;
+    cfg.nprobe = 4;
+    cfg.top_k = 5;
+    cfg.cache_entries = 8; // smaller than the cluster count: real evictions
+    cfg.cache_shards = 4;
+    cfg.io_workers = 1; // this test drives its own demand threads
+    cfg.kmeans_iters = 4;
+    cfg.kmeans_sample = 1_000;
+    cfg.backend = Backend::Native;
+    cfg.disk_profile = DiskProfile::None;
+    (cfg, DatasetSpec::tiny(0xC04C))
+}
+
+/// The prefetcher thread racing 8 demand-fetch threads over one sharded
+/// cache and one `InFlight` registry, for every policy: every fetch must
+/// return the right block, demand counters must stay conserved, and the
+/// prefetcher must never perturb them.
+#[test]
+fn prefetcher_races_demand_fetches() {
+    const THREADS: usize = 8;
+    const FETCHES: usize = 150;
+
+    let (mut cfg, spec) = race_cfg("race");
+    ensure_dataset(&cfg, &spec).unwrap();
+
+    for policy in ALL_POLICIES {
+        cfg.cache_policy = policy;
+        let engine = SearchEngine::open(&cfg, &spec).unwrap();
+        let pf = cagr::coordinator::Prefetcher::spawn(
+            engine.index.clone(),
+            Arc::clone(&engine.cache),
+            Arc::clone(&engine.disk),
+            Arc::clone(&engine.inflight),
+        );
+
+        let demand_fetches = Arc::new(AtomicU64::new(0));
+        let mut workers = Vec::new();
+        for tid in 0..THREADS {
+            let index = engine.index.clone();
+            let cache = Arc::clone(&engine.cache);
+            let disk = Arc::clone(&engine.disk);
+            let inflight = Arc::clone(&engine.inflight);
+            let demand_fetches = Arc::clone(&demand_fetches);
+            workers.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(0xFE7C + tid as u64);
+                for _ in 0..FETCHES {
+                    let cid = rng.range(0, 16) as u32;
+                    let outcome =
+                        fetch_cluster(&index, &cache, &disk, &inflight, cid, false).unwrap();
+                    assert_eq!(outcome.block.id, cid, "fetch returned the wrong cluster");
+                    demand_fetches.fetch_add(1, Ordering::SeqCst);
+                }
+            }));
+        }
+        // The prefetcher races the demand threads over the same clusters.
+        let mut rng = Rng::new(0x9F9F);
+        for _ in 0..40 {
+            let clusters: Vec<u32> = (0..4).map(|_| rng.range(0, 16) as u32).collect();
+            let pins: Vec<u32> = vec![rng.range(0, 16) as u32];
+            pf.request(clusters, pins);
+        }
+        for w in workers {
+            w.join().expect("demand worker panicked");
+        }
+        pf.quiesce();
+        engine.cache.unpin_all();
+
+        let s = engine.cache.stats();
+        // Every demand fetch lands at least one counted cache transaction;
+        // prefetch traffic must add none (peek/convert only).
+        assert!(
+            s.hits + s.misses >= demand_fetches.load(Ordering::SeqCst),
+            "{policy:?}: demand transactions under-counted"
+        );
+        assert!(engine.cache.len() <= engine.cache.capacity(), "{policy:?}");
+        assert_eq!(
+            s.insertions - s.evictions,
+            engine.cache.len() as u64,
+            "{policy:?}: ledger vs residency"
+        );
+        assert!(s.prefetch_inserts <= s.insertions, "{policy:?}");
+        drop(pf);
+    }
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}
+
+/// The parallel executor, the prefetcher, and a demand thread all pulling
+/// the same clusters: the InFlight registry must keep every block intact
+/// and the engine must keep producing full top-k results.
+#[test]
+fn parallel_executor_races_prefetcher() {
+    let (mut cfg, spec) = race_cfg("exec");
+    cfg.io_workers = 4;
+    ensure_dataset(&cfg, &spec).unwrap();
+    let mut engine = SearchEngine::open(&cfg, &spec).unwrap();
+    let pf = cagr::coordinator::Prefetcher::spawn(
+        engine.index.clone(),
+        Arc::clone(&engine.cache),
+        Arc::clone(&engine.disk),
+        Arc::clone(&engine.inflight),
+    );
+
+    let queries = cagr::workload::generate_queries(&spec);
+    let prepared = engine.prepare(&queries[..24]).unwrap();
+    for chunk in prepared.chunks(6) {
+        // Prefetch exactly what the next chunk needs, racing the executor.
+        pf.request(chunk.iter().flat_map(|pq| pq.clusters.clone()).collect(), vec![]);
+        let members: Vec<&cagr::engine::PreparedQuery> = chunk.iter().collect();
+        let out = engine.search_group(&members).unwrap();
+        for ((report, hits), pq) in out.iter().zip(chunk) {
+            assert_eq!(report.query_id, pq.query.id);
+            assert_eq!(hits.len(), cfg.top_k);
+            assert_eq!(report.cache_hits + report.cache_misses, cfg.nprobe as u64);
+        }
+        engine.cache.unpin_all();
+    }
+    pf.quiesce();
+    assert!(engine.cache.len() <= engine.cache.capacity());
+    drop(pf);
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}

@@ -22,6 +22,11 @@ fn test_cfg(tag: &str) -> (Config, DatasetSpec) {
     cfg.disk_profile = DiskProfile::None;
     cfg.batch_min = 10;
     cfg.batch_max = 40;
+    // Sequential, unsharded: these tests compare exact miss counts across
+    // runs, which is only deterministic without parallel fetch reordering
+    // under cache pressure (cache_entries < clusters here).
+    cfg.io_workers = 1;
+    cfg.cache_shards = 1;
     (cfg, DatasetSpec::tiny(0xE2E))
 }
 

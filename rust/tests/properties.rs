@@ -3,15 +3,19 @@
 //! inputs. Every case prints its seed on failure, so any regression is
 //! replayable.
 
-use cagr::cache::ClusterCache;
-use cagr::config::{CachePolicy, GroupingPolicy};
+use cagr::cache::{CacheStats, ClusterCache};
+use cagr::config::{Backend, CachePolicy, Config, DiskProfile, GroupingPolicy};
 use cagr::coordinator::grouping::group_queries;
 use cagr::coordinator::jaccard::{canonicalize, jaccard_sorted, union_sorted};
+use cagr::coordinator::JaccardGrouping;
+use cagr::engine::inflight::InFlight;
 use cagr::engine::PreparedQuery;
+use cagr::harness::runner::ensure_dataset;
 use cagr::index::{ClusterBlock, TopK};
+use cagr::session::Session;
 use cagr::util::json::Json;
 use cagr::util::rng::Rng;
-use cagr::workload::Query;
+use cagr::workload::{generate_queries, traffic, DatasetSpec, Query};
 
 use std::sync::Arc;
 
@@ -208,6 +212,125 @@ fn prop_cache_never_exceeds_capacity_and_stats_balance() {
             assert!(s.insertions >= s.evictions, "seed {seed}: evicted phantom entries");
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// Parallel executor parity: io_workers ∈ {1, 2, 8} must return identical
+// top-k hits and identical CacheStats totals to the sequential path on a
+// seeded workload (cache sized >= clusters so no eviction makes counters
+// order-dependent — the executor's documented parity regime).
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_parallel_executor_matches_sequential_path() {
+    let mut base_cfg = Config::default();
+    base_cfg.data_dir =
+        std::env::temp_dir().join(format!("cagr-props-par-{}", std::process::id()));
+    base_cfg.clusters = 16;
+    base_cfg.nprobe = 4;
+    base_cfg.top_k = 5;
+    base_cfg.cache_entries = 16; // >= clusters: no evictions
+    base_cfg.kmeans_iters = 4;
+    base_cfg.kmeans_sample = 1_000;
+    base_cfg.backend = Backend::Native;
+    base_cfg.disk_profile = DiskProfile::None;
+    base_cfg.batch_min = 12;
+    base_cfg.batch_max = 24;
+    base_cfg.io_workers = 1;
+    base_cfg.cache_shards = 1;
+    let spec = DatasetSpec::tiny(0x9A11);
+    ensure_dataset(&base_cfg, &spec).unwrap();
+    let queries = generate_queries(&spec);
+
+    let run = |io_workers: usize, cache_shards: usize| -> (Vec<(usize, Vec<u32>)>, CacheStats) {
+        let mut cfg = base_cfg.clone();
+        cfg.io_workers = io_workers;
+        cfg.cache_shards = cache_shards;
+        // QG (no prefetcher thread): fully deterministic in both modes.
+        let mut session = Session::builder()
+            .config(cfg.clone())
+            .dataset(spec.clone())
+            .policy(JaccardGrouping::default())
+            .ensure_dataset(false)
+            .open()
+            .unwrap();
+        let mut rows = Vec::new();
+        for batch in traffic::batches(&cfg, &queries) {
+            let (outcomes, _) = session.run_batch(&batch.queries).unwrap();
+            rows.extend(outcomes.iter().map(|o| {
+                (o.report.query_id, o.hits.iter().map(|h| h.doc_id).collect::<Vec<u32>>())
+            }));
+        }
+        rows.sort();
+        (rows, session.cache_stats())
+    };
+
+    let (seq_rows, seq_stats) = run(1, 1);
+    for (io_workers, cache_shards) in [(2usize, 2usize), (8, 4)] {
+        let (rows, stats) = run(io_workers, cache_shards);
+        assert_eq!(rows, seq_rows, "io_workers={io_workers}: top-k hits diverge");
+        assert_eq!(
+            stats, seq_stats,
+            "io_workers={io_workers} shards={cache_shards}: CacheStats totals diverge"
+        );
+    }
+    std::fs::remove_dir_all(&base_cfg.data_dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// InFlight exclusivity: the registry never admits two concurrent reads of
+// the same cluster id, no matter how the claim/release races interleave.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_inflight_never_admits_two_concurrent_reads() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    const THREADS: usize = 8;
+    const IDS: usize = 8;
+    let inflight = Arc::new(InFlight::new());
+    let active: Arc<Vec<AtomicUsize>> =
+        Arc::new((0..IDS).map(|_| AtomicUsize::new(0)).collect());
+    let violations = Arc::new(AtomicUsize::new(0));
+    let claims = Arc::new(AtomicUsize::new(0));
+
+    let mut threads = Vec::new();
+    for tid in 0..THREADS {
+        let inflight = Arc::clone(&inflight);
+        let active = Arc::clone(&active);
+        let violations = Arc::clone(&violations);
+        let claims = Arc::clone(&claims);
+        threads.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(11_000 + tid as u64);
+            for _ in 0..500 {
+                let id = rng.range(0, IDS) as u32;
+                if let Some(guard) = inflight.guard(id) {
+                    claims.fetch_add(1, Ordering::SeqCst);
+                    // While the guard lives, this thread is "reading" id:
+                    // any concurrent reader is a dedup violation.
+                    if active[id as usize].fetch_add(1, Ordering::SeqCst) != 0 {
+                        violations.fetch_add(1, Ordering::SeqCst);
+                    }
+                    std::thread::yield_now();
+                    active[id as usize].fetch_sub(1, Ordering::SeqCst);
+                    drop(guard);
+                } else {
+                    // Loser of the claim race: waiting must not panic and
+                    // must return once the reader releases (or time out).
+                    let _ = inflight.wait_for(id, std::time::Duration::from_millis(5));
+                }
+            }
+        }));
+    }
+    for t in threads {
+        t.join().expect("inflight prop thread panicked");
+    }
+    assert_eq!(
+        violations.load(Ordering::SeqCst),
+        0,
+        "two concurrent reads of one cluster admitted"
+    );
+    assert!(claims.load(Ordering::SeqCst) > 0, "no claims exercised");
 }
 
 // ---------------------------------------------------------------------------

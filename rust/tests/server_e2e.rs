@@ -25,17 +25,30 @@ fn test_cfg(tag: &str) -> (Config, DatasetSpec) {
 }
 
 fn launch(cfg: &Config, spec: &DatasetSpec, mode: Mode) -> cagr::server::ServerHandle {
+    launch_lanes(cfg, spec, mode, 1, None)
+}
+
+fn launch_lanes(
+    cfg: &Config,
+    spec: &DatasetSpec,
+    mode: Mode,
+    lanes: usize,
+    shared_cache: Option<std::sync::Arc<cagr::cache::ShardedClusterCache>>,
+) -> cagr::server::ServerHandle {
     ensure_dataset(cfg, spec).unwrap();
     let factory = {
         let cfg = cfg.clone();
         let spec = spec.clone();
         move || -> anyhow::Result<Session> {
-            Session::builder()
-                .config(cfg)
-                .dataset(spec)
+            let mut builder = Session::builder()
+                .config(cfg.clone())
+                .dataset(spec.clone())
                 .mode(mode)
-                .ensure_dataset(false)
-                .open()
+                .ensure_dataset(false);
+            if let Some(cache) = &shared_cache {
+                builder = builder.shared_cache(std::sync::Arc::clone(cache));
+            }
+            builder.open()
         }
     };
     start(
@@ -44,6 +57,7 @@ fn launch(cfg: &Config, spec: &DatasetSpec, mode: Mode) -> cagr::server::ServerH
             addr: "127.0.0.1:0".to_string(),
             batch_window: std::time::Duration::from_millis(5),
             batch_max: 32,
+            lanes,
         },
     )
     .unwrap()
@@ -104,6 +118,70 @@ fn concurrent_clients_are_batched_and_answered() {
         assert_eq!(latencies.len(), 8);
     }
     handle.shutdown();
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}
+
+#[test]
+fn multi_client_ordering_and_no_hit_leakage() {
+    // 4 concurrent connections, each pipelining interleaved requests over
+    // 2 dispatch lanes sharing one cluster cache. Every connection must
+    // receive (a) exactly the responses to its own queries — never another
+    // connection's — and (b) in exactly the order it sent the requests.
+    let (cfg, spec) = test_cfg("multi");
+    ensure_dataset(&cfg, &spec).unwrap();
+    let index = cagr::index::IvfIndex::open(&cfg.dataset_dir(spec.name)).unwrap();
+    let shared = std::sync::Arc::new(cagr::cache::ShardedClusterCache::from_config(
+        cfg.cache_policy,
+        cfg.cache_entries,
+        4,
+        index.meta.read_profile_us.clone(),
+    ));
+    let handle = launch_lanes(&cfg, &spec, Mode::QGP, 2, Some(std::sync::Arc::clone(&shared)));
+    let queries = generate_queries(&spec);
+    let addr = handle.addr;
+
+    let mut workers = Vec::new();
+    for t in 0..4usize {
+        // Interleaved stripes: connection t gets queries t, t+4, t+8, ...
+        let qs: Vec<_> = queries.iter().skip(t).step_by(4).take(8).cloned().collect();
+        workers.push(std::thread::spawn(move || {
+            let mut client = Client::connect(addr).unwrap();
+            for q in &qs {
+                client.send(q).unwrap();
+            }
+            let mut got = Vec::new();
+            for _ in 0..qs.len() {
+                got.push(client.recv().unwrap());
+            }
+            let sent: Vec<usize> = qs.iter().map(|q| q.id).collect();
+            let received: Vec<usize> = got.iter().map(|r| r.query_id).collect();
+            assert_eq!(
+                received, sent,
+                "connection {t}: responses out of request order or leaked"
+            );
+            got
+        }));
+    }
+
+    // Cross-check against direct engine results (no leakage of another
+    // query's hits into a response).
+    let mut engine = SearchEngine::open(&cfg, &spec).unwrap();
+    for (t, w) in workers.into_iter().enumerate() {
+        let got = w.join().unwrap();
+        for resp in got {
+            let q = queries.iter().find(|q| q.id == resp.query_id).unwrap();
+            let (_, direct) = engine.search_query(q).unwrap();
+            assert_eq!(
+                resp.hits.iter().map(|h| h.0).collect::<Vec<_>>(),
+                direct.iter().map(|h| h.doc_id).collect::<Vec<_>>(),
+                "connection {t} query {}: hits leaked or corrupted",
+                q.id
+            );
+        }
+    }
+    handle.shutdown();
+    // Both lanes served over the one shared cache.
+    assert!(shared.stats().insertions > 0, "shared cache never used");
     std::fs::remove_dir_all(&cfg.data_dir).ok();
 }
 

@@ -3,9 +3,11 @@
 //! the PJRT CPU client, builds the hotpotqa-sim index with the *real*
 //! encoder (python never runs — the HLO was lowered at `make artifacts`),
 //! starts the TCP front-end over a `Session`, and drives it with concurrent
-//! clients sending batched traffic. Reports throughput, latency percentiles,
-//! and cache efficiency for both the EdgeRAG (arrival-order) and CaGR-RAG
-//! (grouping + prefetch) schedule policies.
+//! [`cagr::client::Client`]s speaking the versioned wire protocol
+//! (`docs/PROTOCOL.md`). Reports throughput, latency percentiles, and —
+//! via the `stats` control-plane verb — server-side cache efficiency, for
+//! both the EdgeRAG (arrival-order) and CaGR-RAG (grouping + prefetch)
+//! schedule policies.
 //!
 //!     make artifacts && cargo run --release --example serve_workload
 //!
@@ -15,11 +17,12 @@
 //!   CAGR_SERVE_CLIENTS   concurrent clients   (default 8)
 //!   CAGR_SERVE_NATIVE=1  use the native backend instead of PJRT
 
+use cagr::client::{Client, ClientError};
 use cagr::config::{Backend, Config, DiskProfile};
 use cagr::coordinator::{ArrivalOrder, GroupingWithPrefetch};
 use cagr::harness::runner::ensure_dataset;
 use cagr::metrics::{render_table, LatencyRecorder};
-use cagr::server::{start, Client, ServerConfig};
+use cagr::server::{start, ServerConfig};
 use cagr::session::Session;
 use cagr::workload::{generate_queries, DatasetSpec, Query};
 
@@ -77,7 +80,7 @@ fn main() -> anyhow::Result<()> {
                 addr: "127.0.0.1:0".to_string(),
                 batch_window: std::time::Duration::from_millis(8),
                 batch_max: cfg.batch_max,
-                lanes: 1,
+                ..Default::default()
             },
         )?;
         let addr = handle.addr;
@@ -105,24 +108,41 @@ fn main() -> anyhow::Result<()> {
             threads.push(std::thread::spawn(move || -> anyhow::Result<Vec<f64>> {
                 // Pipelined client: keep up to WINDOW requests in flight so
                 // the server's batcher sees real arrival batches (§4.1);
-                // responses arrive in completion order and are matched by
-                // query id.
+                // the server answers a connection's admitted requests in
+                // order, but we match by query id anyway so the loop also
+                // survives structured errors (overload, deadlines).
                 const WINDOW: usize = 16;
                 let mut client = Client::connect(addr)?;
                 let mut sent_at = std::collections::HashMap::new();
                 let mut lats = Vec::with_capacity(stripe.len());
                 let mut next = 0usize;
-                while lats.len() < stripe.len() {
+                let mut done = 0usize;
+                while done < stripe.len() {
                     while next < stripe.len() && sent_at.len() < WINDOW {
-                        client.send(&stripe[next])?;
+                        client.submit(&stripe[next])?;
                         sent_at.insert(stripe[next].id, std::time::Instant::now());
                         next += 1;
                     }
-                    let resp = client.recv()?;
-                    let t0 = sent_at
-                        .remove(&resp.query_id)
-                        .ok_or_else(|| anyhow::anyhow!("unexpected response id"))?;
-                    lats.push(t0.elapsed().as_secs_f64());
+                    match client.recv() {
+                        Ok(resp) => {
+                            let t0 = sent_at
+                                .remove(&resp.query_id)
+                                .ok_or_else(|| anyhow::anyhow!("unexpected response id"))?;
+                            lats.push(t0.elapsed().as_secs_f64());
+                        }
+                        Err(ClientError::Server(e)) => {
+                            // Structured per-request error (e.g. overload
+                            // under an aggressive WINDOW): drop the sample,
+                            // keep the pipeline in sync via the echoed id.
+                            let id = e
+                                .query_id
+                                .ok_or_else(|| anyhow::anyhow!("server error without id: {e}"))?;
+                            sent_at.remove(&id);
+                            eprintln!("[client {c}] {e}");
+                        }
+                        Err(e) => return Err(e.into()),
+                    }
+                    done += 1;
                 }
                 Ok(lats)
             }));
@@ -134,6 +154,12 @@ fn main() -> anyhow::Result<()> {
             }
         }
         let wall = t0.elapsed().as_secs_f64();
+
+        // Server-side view over the control plane, then graceful stop.
+        let mut ctl = Client::connect(addr)?;
+        let stats = ctl.stats()?;
+        let lane0 = &stats.lanes[0];
+        let drained = ctl.drain()?;
         handle.shutdown();
 
         rows.push(vec![
@@ -144,16 +170,23 @@ fn main() -> anyhow::Result<()> {
             format!("{:.4}", recorder.p50()),
             format!("{:.4}", recorder.percentile(95.0)),
             format!("{:.4}", recorder.p99()),
+            format!("{:.1}%", 100.0 * lane0.cache.hit_ratio()),
+            format!("{}", lane0.groups),
+            format!("{}", drained.drained),
         ]);
     }
 
     println!(
         "\n{}",
         render_table(
-            &["system", "queries", "qps", "mean(s)", "p50(s)", "p95(s)", "p99(s)"],
+            &[
+                "system", "queries", "qps", "mean(s)", "p50(s)", "p95(s)", "p99(s)",
+                "cache-hit", "groups", "drained",
+            ],
             &rows
         )
     );
-    println!("(end-to-end over TCP, including client round-trips and batching delay)");
+    println!("(end-to-end over TCP, including client round-trips and batching delay;");
+    println!(" cache-hit/groups read over the wire via the `stats` verb)");
     Ok(())
 }

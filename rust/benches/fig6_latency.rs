@@ -6,12 +6,24 @@
 //! (on hotpotqa) and achieves lower average latency on all three datasets.
 //! Absolute seconds differ from the paper (scaled corpus + modeled NVMe);
 //! the reduction percentages are the comparable quantity.
+//!
+//! Outputs: `results/fig6_cdf.csv` (CDF series) and
+//! `results/fig6_latency.json` — a machine-readable summary (p99/mean per
+//! system per dataset + reductions) that CI uploads as a per-PR artifact,
+//! so before/after serving-latency numbers are captured for every change.
+//!
+//! Environment knobs (the CI smoke job shrinks the run to ~a minute):
+//!   CAGR_FIG6_SMOKE=1     tiny config: one dataset, scaled-down corpus,
+//!                         fewer queries — shape check + artifact only,
+//!                         not a paper-comparable measurement
+//!   CAGR_FIG6_QUERIES=N   cap queries per run (after warmup)
 
 use cagr::config::{Backend, Config, DiskProfile};
 use cagr::coordinator::{ArrivalOrder, GroupingWithPrefetch};
 use cagr::harness::banner;
 use cagr::harness::runner::{ensure_dataset, run_workload};
 use cagr::metrics::{cdf, render_table, write_csv};
+use cagr::util::json::{obj, Json};
 use cagr::workload::{generate_queries, DatasetSpec};
 
 /// Paper-reported p99 seconds (EdgeRAG, CaGR-RAG) per dataset, Fig. 6a.
@@ -22,22 +34,51 @@ const PAPER_P99: [(&str, f64, f64); 3] = [
 ];
 
 fn main() -> anyhow::Result<()> {
-    banner("Fig. 6: EdgeRAG vs CaGR-RAG latency (3 datasets)");
+    let smoke = std::env::var("CAGR_FIG6_SMOKE").is_ok();
+    let query_cap: Option<usize> =
+        std::env::var("CAGR_FIG6_QUERIES").ok().and_then(|v| v.parse().ok());
+    banner(if smoke {
+        "Fig. 6 (SMOKE): EdgeRAG vs CaGR-RAG latency, tiny config"
+    } else {
+        "Fig. 6: EdgeRAG vs CaGR-RAG latency (3 datasets)"
+    });
     let mut cfg = Config::default();
     cfg.backend = Backend::Native;
     cfg.disk_profile = DiskProfile::NvmeScaled;
+    if smoke {
+        cfg.clusters = 32;
+        cfg.nprobe = 4;
+        cfg.cache_entries = 12;
+        cfg.kmeans_iters = 5;
+        cfg.kmeans_sample = 2_000;
+    }
+
+    let mut specs = DatasetSpec::canonical();
+    if smoke {
+        specs.truncate(1);
+        for spec in &mut specs {
+            spec.n_docs = spec.n_docs.min(6_000);
+        }
+    }
+    let warmup = if smoke { 20 } else { 50 };
 
     let mut rows = Vec::new();
     let mut cdf_rows = Vec::new();
-    for spec in DatasetSpec::canonical() {
-        ensure_dataset(&cfg, &spec)?;
-        let queries = generate_queries(&spec);
+    let mut json_datasets = Vec::new();
+    for spec in &specs {
+        ensure_dataset(&cfg, spec)?;
+        let mut queries = generate_queries(spec);
+        if let Some(cap) = query_cap {
+            queries.truncate(warmup + cap);
+        } else if smoke {
+            queries.truncate(warmup + 100);
+        }
         let mut measured = Vec::new();
         for (label, policy) in [
             ("EdgeRAG", ArrivalOrder::boxed()),
             ("CaGR-RAG", GroupingWithPrefetch::boxed()),
         ] {
-            let result = run_workload(&cfg, &spec, policy, &queries, 50)?;
+            let result = run_workload(&cfg, spec, policy, &queries, warmup)?;
             for (lat, frac) in cdf::downsample(&result.recorder.cdf(), 50) {
                 cdf_rows.push(vec![
                     spec.name.to_string(),
@@ -64,6 +105,28 @@ fn main() -> anyhow::Result<()> {
             format!("{:.4}", cagr.mean_latency()),
             format!("{mean_red:.1}%"),
         ]);
+        json_datasets.push(obj(vec![
+            ("dataset", spec.name.into()),
+            ("n_docs", spec.n_docs.into()),
+            ("queries_measured", measured[0].1.recorder.len().into()),
+            (
+                "edgerag",
+                obj(vec![
+                    ("mean_s", Json::Num(edge.mean_latency())),
+                    ("p99_s", Json::Num(edge.p99_latency())),
+                ]),
+            ),
+            (
+                "cagr_rag",
+                obj(vec![
+                    ("mean_s", Json::Num(cagr.mean_latency())),
+                    ("p99_s", Json::Num(cagr.p99_latency())),
+                ]),
+            ),
+            ("p99_reduction_pct", Json::Num(p99_red)),
+            ("mean_reduction_pct", Json::Num(mean_red)),
+            ("paper_p99_reduction_pct", Json::Num(paper_red)),
+        ]));
     }
     println!(
         "{}",
@@ -86,10 +149,24 @@ fn main() -> anyhow::Result<()> {
         &["dataset", "system", "latency_s", "cdf"],
         &cdf_rows,
     )?;
+    let summary = obj(vec![
+        ("bench", "fig6_latency".into()),
+        ("smoke", smoke.into()),
+        ("backend", "native".into()),
+        ("disk_profile", "nvme-scaled".into()),
+        ("datasets", Json::Arr(json_datasets)),
+    ]);
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/fig6_latency.json", summary.pretty())?;
     println!("CDF series (incl. the 95th-100th pct zoom data): results/fig6_cdf.csv");
-    println!(
-        "paper shape: CaGR-RAG lower on every dataset; max p99 reduction on\n\
-         hotpotqa (paper: 51.55%)."
-    );
+    println!("machine-readable summary: results/fig6_latency.json");
+    if smoke {
+        println!("SMOKE RUN: shape check + artifact only; not paper-comparable.");
+    } else {
+        println!(
+            "paper shape: CaGR-RAG lower on every dataset; max p99 reduction on\n\
+             hotpotqa (paper: 51.55%)."
+        );
+    }
     Ok(())
 }

@@ -25,7 +25,12 @@
 //! still needed by the in-flight query group are pinned so a prefetch for
 //! the *next* group can never evict them. All policies respect pins, and
 //! pins are tracked per shard so a prefetch insert can only ever displace
-//! unpinned entries of its own stripe. Statistics are per shard, merged
+//! unpinned entries of its own stripe. Pins are tracked **per owner
+//! token** ([`next_pin_owner`]): on a cache shared across server lanes,
+//! each lane's engine/prefetcher pins under its own token and the
+//! group-switch release ([`ClusterCache::unpin_owner`]) drops only that
+//! lane's pins — one lane can no longer evict what a sibling lane
+//! prefetched. Statistics are per shard, merged
 //! into one [`CacheStats`] on read ([`CacheStats::merge`]) so callers see
 //! the same counters the single-mutex cache reported.
 
@@ -74,6 +79,21 @@ impl CacheStats {
     }
 }
 
+/// The owner token used by the owner-less [`ClusterCache::pin`] /
+/// [`ClusterCache::unpin_all`] convenience wrappers. Real owners (lane
+/// engines, their prefetchers) allocate distinct ids via
+/// [`next_pin_owner`].
+pub const DEFAULT_PIN_OWNER: u64 = 0;
+
+/// Allocate a fresh, process-unique pin-owner token (never
+/// [`DEFAULT_PIN_OWNER`]). Each serving engine takes one so that, on a
+/// cache shared across lanes, one lane's group-switch release can never
+/// drop a sibling lane's prefetch pins.
+pub fn next_pin_owner() -> u64 {
+    static NEXT: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(1);
+    NEXT.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+}
+
 /// One resident cache entry plus the book-keeping every policy shares.
 #[derive(Debug, Clone)]
 pub struct Entry {
@@ -86,7 +106,17 @@ pub struct Entry {
     pub access_count: u64,
     /// Offline-profiled read cost in microseconds (EdgeRAG input).
     pub cost_us: u64,
-    pub pinned: bool,
+    /// Owner tokens currently pinning this entry (deduplicated). The
+    /// entry is evictable only when empty; an owner releasing its pins
+    /// ([`ClusterCache::unpin_owner`]) leaves other owners' pins intact.
+    pub pins: Vec<u64>,
+}
+
+impl Entry {
+    /// True when any owner holds a pin on this entry.
+    pub fn is_pinned(&self) -> bool {
+        !self.pins.is_empty()
+    }
 }
 
 /// Replacement policy: chooses the eviction victim among unpinned entries.
@@ -224,7 +254,7 @@ impl ClusterCache {
                 inserted_at: self.clock,
                 access_count: 0,
                 cost_us,
-                pinned: false,
+                pins: Vec::new(),
             },
         );
         self.stats.insertions += 1;
@@ -235,23 +265,44 @@ impl ClusterCache {
     }
 
     /// Pin `ids` (resident ones only) so they cannot be evicted; used for
-    /// the in-flight group's residual working set.
+    /// the in-flight group's residual working set. Owner-less convenience:
+    /// pins under [`DEFAULT_PIN_OWNER`].
     pub fn pin(&mut self, ids: &[u32]) {
+        self.pin_as(DEFAULT_PIN_OWNER, ids);
+    }
+
+    /// Pin `ids` (resident ones only) under `owner` (idempotent per
+    /// owner). Pins from different owners stack: an entry stays
+    /// unevictable until *every* owner has released it.
+    pub fn pin_as(&mut self, owner: u64, ids: &[u32]) {
         for id in ids {
             if let Some(e) = self.entries.get_mut(id) {
-                e.pinned = true;
+                if !e.pins.contains(&owner) {
+                    e.pins.push(owner);
+                }
             }
         }
     }
 
+    /// Release every pin held by every owner (test/reset convenience; the
+    /// serving path releases per owner via [`ClusterCache::unpin_owner`]).
     pub fn unpin_all(&mut self) {
         for e in self.entries.values_mut() {
-            e.pinned = false;
+            e.pins.clear();
+        }
+    }
+
+    /// Release all pins `owner` holds, leaving other owners' pins intact —
+    /// a lane's group-switch release on a shared cache can no longer evict
+    /// what a sibling lane's prefetcher pinned.
+    pub fn unpin_owner(&mut self, owner: u64) {
+        for e in self.entries.values_mut() {
+            e.pins.retain(|&o| o != owner);
         }
     }
 
     pub fn pinned_count(&self) -> usize {
-        self.entries.values().filter(|e| e.pinned).count()
+        self.entries.values().filter(|e| e.is_pinned()).count()
     }
 
     /// Resident cluster ids (unordered).
@@ -263,7 +314,7 @@ impl ClusterCache {
     fn victim(&self) -> Option<u32> {
         self.entries
             .iter()
-            .filter(|(_, e)| !e.pinned)
+            .filter(|(_, e)| !e.is_pinned())
             .min_by(|(ia, ea), (ib, eb)| {
                 self.policy
                     .priority(ea)
@@ -375,6 +426,27 @@ mod tests {
         c.insert(test_block(3), false);
         assert!(c.contains(1), "pinned entry evicted");
         assert!(!c.contains(2));
+    }
+
+    #[test]
+    fn owner_pins_stack_and_release_independently() {
+        let mut c = cache(CachePolicy::Lru, 2);
+        c.insert(test_block(1), false);
+        c.insert(test_block(2), false);
+        c.pin_as(7, &[1]);
+        c.pin_as(8, &[1, 2]);
+        assert_eq!(c.pinned_count(), 2);
+        // Owner 8 releasing leaves owner 7's pin on entry 1 intact.
+        c.unpin_owner(8);
+        assert_eq!(c.pinned_count(), 1);
+        c.get(2); // 1 is least recent but still pinned by 7
+        c.insert(test_block(3), false);
+        assert!(c.contains(1), "entry pinned by a live owner was evicted");
+        assert!(!c.contains(2));
+        c.unpin_owner(7);
+        assert_eq!(c.pinned_count(), 0);
+        // Unpinning an owner with no pins is a no-op, not a panic.
+        c.unpin_owner(99);
     }
 
     #[test]

@@ -89,7 +89,7 @@ mod tests {
             inserted_at: inserted,
             access_count: count,
             cost_us: cost,
-            pinned: false,
+            pins: Vec::new(),
         }
     }
 

@@ -103,10 +103,19 @@ impl ShardedClusterCache {
     /// Pin resident entries so they cannot be evicted. Ids are grouped by
     /// shard and each shard's batch is pinned under a single lock
     /// acquisition, so a concurrent insert can never observe a shard with
-    /// only part of its batch pinned.
+    /// only part of its batch pinned. Owner-less convenience: pins under
+    /// [`super::DEFAULT_PIN_OWNER`].
     pub fn pin(&self, ids: &[u32]) {
+        self.pin_as(super::DEFAULT_PIN_OWNER, ids);
+    }
+
+    /// [`ShardedClusterCache::pin`] under an explicit owner token
+    /// (tracked per owner; see [`ClusterCache::pin_as`]). Lane engines
+    /// and their prefetchers pin with their own token so a sibling lane's
+    /// release never drops their pins.
+    pub fn pin_as(&self, owner: u64, ids: &[u32]) {
         if ids.len() == 1 {
-            self.shard(ids[0]).lock().unwrap().pin(ids);
+            self.shard(ids[0]).lock().unwrap().pin_as(owner, ids);
             return;
         }
         let n = self.shards.len();
@@ -116,14 +125,23 @@ impl ShardedClusterCache {
         }
         for (si, batch) in by_shard.iter().enumerate() {
             if !batch.is_empty() {
-                self.shards[si].lock().unwrap().pin(batch);
+                self.shards[si].lock().unwrap().pin_as(owner, batch);
             }
         }
     }
 
+    /// Release every pin of every owner (test/reset convenience).
     pub fn unpin_all(&self) {
         for shard in &self.shards {
             shard.lock().unwrap().unpin_all();
+        }
+    }
+
+    /// Release all pins held by `owner` across all shards, leaving other
+    /// owners' pins intact.
+    pub fn unpin_owner(&self, owner: u64) {
+        for shard in &self.shards {
+            shard.lock().unwrap().unpin_owner(owner);
         }
     }
 
@@ -248,6 +266,46 @@ mod tests {
         assert_eq!(c.pinned_count(), 0);
         assert!(c.insert(test_block(4), false));
         assert!(!c.contains(0), "unpinned entry evictable again");
+    }
+
+    #[test]
+    fn owner_scoped_unpin_releases_only_that_owner() {
+        // Two "lanes" pin overlapping sets on one shared cache; lane A's
+        // group-switch release must not drop lane B's pins (the recorded
+        // multi-lane ROADMAP follow-up).
+        let c = cache(CachePolicy::Lru, 4, 2);
+        for id in 0..4u32 {
+            c.insert(test_block(id), false);
+        }
+        let (lane_a, lane_b) = (crate::cache::next_pin_owner(), crate::cache::next_pin_owner());
+        c.pin_as(lane_a, &[0, 1]);
+        c.pin_as(lane_b, &[1, 2]);
+        assert_eq!(c.pinned_count(), 3);
+        c.unpin_owner(lane_a);
+        // 1 is still pinned by lane B; 0 became evictable.
+        assert_eq!(c.pinned_count(), 2);
+        // The cache is full; inserting must evict an *unpinned* entry only.
+        assert!(c.insert(test_block(5), false));
+        assert!(c.contains(1) && c.contains(2), "lane B's pins were released by lane A");
+        c.unpin_owner(lane_b);
+        assert_eq!(c.pinned_count(), 0);
+    }
+
+    #[test]
+    fn owner_pins_are_idempotent_per_owner() {
+        let c = cache(CachePolicy::Lru, 2, 1);
+        c.insert(test_block(0), false);
+        let owner = crate::cache::next_pin_owner();
+        c.pin_as(owner, &[0]);
+        c.pin_as(owner, &[0]); // double pin, single owner: no stacking
+        assert_eq!(c.pinned_count(), 1);
+        c.unpin_owner(owner); // one release drops the owner entirely
+        assert_eq!(c.pinned_count(), 0);
+        // Owner-less pin()/unpin_all() still behave as before.
+        c.pin(&[0]);
+        assert_eq!(c.pinned_count(), 1);
+        c.unpin_all();
+        assert_eq!(c.pinned_count(), 0);
     }
 
     #[test]

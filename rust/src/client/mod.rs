@@ -1,0 +1,294 @@
+//! First-class client library for the versioned serving protocol.
+//!
+//! [`Client`] speaks the typed wire format defined in [`crate::proto`]
+//! (JSON-lines over TCP, `docs/PROTOCOL.md`): it performs the version
+//! handshake at connect time, offers a blocking [`Client::search`], a
+//! pipelined [`Client::submit`] / [`Client::recv`] pair for keeping many
+//! requests in flight, the control-plane verbs ([`Client::stats`],
+//! [`Client::health`], [`Client::drain`]), and [`Client::reconnect`] for
+//! re-establishing a dropped connection to the same server.
+//!
+//! Errors are typed ([`ClientError`]): transport failures, protocol
+//! violations, and structured server errors ([`proto::ErrorReply`] — e.g.
+//! `overloaded`, `deadline-exceeded`) are distinguishable without string
+//! matching, and everything converts into `anyhow::Error` via `?`.
+//!
+//! ```text
+//! let mut client = Client::connect(addr)?;
+//! // Blocking round-trip:
+//! let reply = client.search(&query)?;
+//! // Latency-critical query: skip grouping, cap the wait at 50ms.
+//! let opts = SearchOptions { no_group: true, deadline_ms: Some(50), ..Default::default() };
+//! match client.search_with(&query, &opts) {
+//!     Ok(reply) => { /* hits */ }
+//!     Err(ClientError::Server(e)) if e.code == ErrorCode::DeadlineExceeded => { /* degrade */ }
+//!     Err(e) => return Err(e.into()),
+//! }
+//! // Pipelined: many in flight, match replies by query id.
+//! for q in &queries { client.submit(q)?; }
+//! for _ in &queries { let reply = client.recv()?; }
+//! ```
+
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+
+use crate::proto::{
+    DrainReply, ErrorCode, ErrorReply, HealthReply, Reply, Request, SearchOptions, SearchReply,
+    SearchRequest, StatsReply, PROTOCOL_VERSION,
+};
+use crate::workload::Query;
+
+/// Typed client-side failure.
+#[derive(Debug)]
+pub enum ClientError {
+    /// Transport-level failure (connect, read, write).
+    Io(std::io::Error),
+    /// The server closed the connection.
+    Closed,
+    /// The server sent something that is not a valid protocol reply, or a
+    /// reply that makes no sense at this point in the exchange.
+    Protocol(String),
+    /// A structured error reply from the server (overloaded,
+    /// deadline-exceeded, malformed, shutting-down, ...).
+    Server(ErrorReply),
+    /// The handshake failed: the server speaks a different version.
+    VersionMismatch { client: u32, server: String },
+}
+
+impl std::fmt::Display for ClientError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClientError::Io(e) => write!(f, "transport error: {e}"),
+            ClientError::Closed => write!(f, "connection closed by server"),
+            ClientError::Protocol(msg) => write!(f, "protocol violation: {msg}"),
+            ClientError::Server(e) => write!(f, "server error: {e}"),
+            ClientError::VersionMismatch { client, server } => {
+                write!(f, "protocol version mismatch: client speaks v{client}, server {server}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ClientError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ClientError::Io(e) => Some(e),
+            ClientError::Server(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ClientError {
+    fn from(e: std::io::Error) -> Self {
+        ClientError::Io(e)
+    }
+}
+
+/// A connection to a `cagr` server speaking protocol
+/// [`PROTOCOL_VERSION`]. See the module docs for the usage patterns.
+pub struct Client {
+    addr: SocketAddr,
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    server_version: u32,
+    /// Search/error replies read while waiting for a control-plane reply;
+    /// drained first by [`Client::recv`].
+    pending: VecDeque<Reply>,
+}
+
+impl Client {
+    /// Connect and perform the version handshake. Fails with
+    /// [`ClientError::VersionMismatch`] when the server rejects our
+    /// version.
+    pub fn connect(addr: SocketAddr) -> Result<Client, ClientError> {
+        let stream = TcpStream::connect(addr)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        let mut client = Client {
+            addr,
+            reader,
+            writer: stream,
+            server_version: 0,
+            pending: VecDeque::new(),
+        };
+        client.handshake()?;
+        Ok(client)
+    }
+
+    /// Tear down the current connection and establish a fresh one to the
+    /// same address (new handshake included). Replies still in flight on
+    /// the old connection are lost; resubmit what matters.
+    pub fn reconnect(&mut self) -> Result<(), ClientError> {
+        let stream = TcpStream::connect(self.addr)?;
+        self.reader = BufReader::new(stream.try_clone()?);
+        self.writer = stream;
+        self.pending.clear();
+        self.server_version = 0;
+        self.handshake()
+    }
+
+    fn handshake(&mut self) -> Result<(), ClientError> {
+        self.send_line(&Request::Hello { version: PROTOCOL_VERSION }.dump())?;
+        match self.read_reply()? {
+            Reply::Hello { version } => {
+                self.server_version = version;
+                Ok(())
+            }
+            Reply::Error(e) if e.code == ErrorCode::VersionMismatch => {
+                Err(ClientError::VersionMismatch {
+                    client: PROTOCOL_VERSION,
+                    server: e.message,
+                })
+            }
+            Reply::Error(e) => Err(ClientError::Server(e)),
+            other => Err(ClientError::Protocol(format!(
+                "expected hello reply, got {other:?}"
+            ))),
+        }
+    }
+
+    /// The protocol version the server acknowledged at handshake.
+    pub fn server_version(&self) -> u32 {
+        self.server_version
+    }
+
+    /// The address this client (re)connects to.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Blocking round-trip with server-default options. Assumes no other
+    /// submits are outstanding (otherwise the reply returned is simply the
+    /// next one; use [`Client::recv`] and match ids yourself).
+    pub fn search(&mut self, query: &Query) -> Result<SearchReply, ClientError> {
+        self.search_with(query, &SearchOptions::default())
+    }
+
+    /// Blocking round-trip with explicit per-request options.
+    pub fn search_with(
+        &mut self,
+        query: &Query,
+        options: &SearchOptions,
+    ) -> Result<SearchReply, ClientError> {
+        self.submit_with(query, options)?;
+        self.recv()
+    }
+
+    /// Pipelined send with server-default options: many requests may be in
+    /// flight; collect replies with [`Client::recv`].
+    pub fn submit(&mut self, query: &Query) -> Result<(), ClientError> {
+        self.submit_with(query, &SearchOptions::default())
+    }
+
+    /// Pipelined send with explicit per-request options.
+    pub fn submit_with(
+        &mut self,
+        query: &Query,
+        options: &SearchOptions,
+    ) -> Result<(), ClientError> {
+        let req = Request::Search(SearchRequest {
+            query: query.clone(),
+            options: options.clone(),
+        });
+        self.send_line(&req.dump())
+    }
+
+    /// Receive the next search outcome. A structured server error for a
+    /// request (overloaded, deadline-exceeded, malformed, ...) surfaces as
+    /// `Err(ClientError::Server(reply))` with `reply.query_id` set, so
+    /// pipelined callers can keep matching replies to requests one-for-one.
+    pub fn recv(&mut self) -> Result<SearchReply, ClientError> {
+        let reply = match self.pending.pop_front() {
+            Some(r) => r,
+            None => self.read_reply()?,
+        };
+        match reply {
+            Reply::Search(r) => Ok(r),
+            Reply::Error(e) => Err(ClientError::Server(e)),
+            other => Err(ClientError::Protocol(format!(
+                "expected search result, got {other:?}"
+            ))),
+        }
+    }
+
+    /// Control plane: per-lane cache/session counters. Search replies that
+    /// arrive while waiting are buffered for later [`Client::recv`] calls.
+    pub fn stats(&mut self) -> Result<StatsReply, ClientError> {
+        self.send_line(&Request::Stats.dump())?;
+        loop {
+            match self.read_reply()? {
+                Reply::Stats(s) => return Ok(s),
+                Reply::Error(e) if e.query_id.is_none() => {
+                    return Err(ClientError::Server(e))
+                }
+                other => self.pending.push_back(other),
+            }
+        }
+    }
+
+    /// Control plane: liveness + drain state.
+    pub fn health(&mut self) -> Result<HealthReply, ClientError> {
+        self.send_line(&Request::Health.dump())?;
+        loop {
+            match self.read_reply()? {
+                Reply::Health(h) => return Ok(h),
+                Reply::Error(e) if e.query_id.is_none() => {
+                    return Err(ClientError::Server(e))
+                }
+                other => self.pending.push_back(other),
+            }
+        }
+    }
+
+    /// Control plane: ask the server to stop admitting new queries and
+    /// wait (up to its configured drain timeout) for in-flight ones.
+    /// Blocks until the server replies.
+    pub fn drain(&mut self) -> Result<DrainReply, ClientError> {
+        self.send_line(&Request::Drain.dump())?;
+        loop {
+            match self.read_reply()? {
+                Reply::Drain(d) => return Ok(d),
+                Reply::Error(e) if e.query_id.is_none() => {
+                    return Err(ClientError::Server(e))
+                }
+                other => self.pending.push_back(other),
+            }
+        }
+    }
+
+    fn send_line(&mut self, line: &str) -> Result<(), ClientError> {
+        writeln!(self.writer, "{line}")?;
+        Ok(())
+    }
+
+    fn read_reply(&mut self) -> Result<Reply, ClientError> {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line)?;
+        if n == 0 {
+            return Err(ClientError::Closed);
+        }
+        Reply::parse_line(&line).map_err(|e| ClientError::Protocol(e.to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_error_formats_are_stable() {
+        let e = ClientError::Server(ErrorReply::new(
+            ErrorCode::Overloaded,
+            "lane full",
+            Some(3),
+        ));
+        let s = e.to_string();
+        assert!(s.contains("overloaded") && s.contains("lane full"), "{s}");
+        let e = ClientError::VersionMismatch { client: 1, server: "speaks v2".into() };
+        assert!(e.to_string().contains("v1"));
+        // Typed errors convert into anyhow::Error via `?`.
+        let f = || -> anyhow::Result<()> { Err(ClientError::Closed)? };
+        assert!(f().is_err());
+    }
+}

@@ -48,6 +48,9 @@ pub fn dispatch(
     let mut outcomes = Vec::with_capacity(prepared.len());
     let trigger = engine.cfg.prefetch_trigger;
     let cache = Arc::clone(&engine.cache);
+    // Release pins under the prefetcher's own token: on a shared cache
+    // this can only ever drop pins *this* lane's prefetcher set.
+    let pin_owner = prefetcher.map(|pf| pf.pin_owner());
     for (gi, group) in plan.groups.iter().enumerate() {
         let members: Vec<&PreparedQuery> =
             group.members.iter().map(|&qidx| &prepared[qidx]).collect();
@@ -75,11 +78,13 @@ pub fn dispatch(
                 if mi == last && trigger == PrefetchTrigger::AfterSearch {
                     fire(mi);
                 }
-                if mi == 0 && prefetcher.is_some() {
+                if let (0, Some(owner)) = (mi, pin_owner) {
                     // The group's first query has consumed the clusters the
-                    // prefetcher pinned for it; release the pins so normal
-                    // replacement resumes (prefetch.rs pins on insert).
-                    cache.unpin_all();
+                    // prefetcher pinned for it; release that owner's pins
+                    // so normal replacement resumes (prefetch.rs pins on
+                    // insert under the same token). Sibling lanes' pins on
+                    // a shared cache are untouched.
+                    cache.unpin_owner(owner);
                 }
             },
         )?;
@@ -87,8 +92,8 @@ pub fn dispatch(
             outcomes.push(QueryOutcome { report, hits, group: gi });
         }
     }
-    if prefetcher.is_some() {
-        cache.unpin_all();
+    if let Some(owner) = pin_owner {
+        cache.unpin_owner(owner);
     }
     Ok(outcomes)
 }

@@ -119,12 +119,13 @@ impl Coordinator {
     /// prefetch thread is spawned only when the policy wants it.
     pub fn new(engine: SearchEngine, policy: Box<dyn SchedulePolicy>) -> Coordinator {
         let prefetcher = if policy.wants_prefetch() {
-            Some(Prefetcher::spawn_with(
+            Some(Prefetcher::spawn_owned(
                 engine.index.clone(),
                 Arc::clone(&engine.cache),
                 Arc::clone(&engine.disk),
                 Arc::clone(&engine.inflight),
                 engine.cfg.size_aware_prefetch,
+                engine.pin_owner(),
             ))
         } else {
             None

@@ -50,19 +50,24 @@ pub struct Prefetcher {
     pub counters: Arc<PrefetchCounters>,
     /// Requests issued through this handle (pairs with `counters.completed`).
     issued: AtomicU64,
+    /// Owner token this prefetcher pins under; the dispatcher releases
+    /// exactly this owner's pins at each group switch.
+    pin_owner: u64,
 }
 
 impl Prefetcher {
     /// Spawn the prefetch thread over shared cache/disk/index/in-flight
     /// handles (the same `InFlight` the demand path uses, so demand misses
-    /// wait on prefetch reads instead of duplicating them).
+    /// wait on prefetch reads instead of duplicating them). Pins under
+    /// [`crate::cache::DEFAULT_PIN_OWNER`]; serving paths use
+    /// [`Prefetcher::spawn_owned`] with their engine's token.
     pub fn spawn(
         index: Arc<IvfIndex>,
         cache: Arc<ShardedClusterCache>,
         disk: Arc<Mutex<DiskModel>>,
         inflight: Arc<InFlight>,
     ) -> Prefetcher {
-        Self::spawn_with(index, cache, disk, inflight, true)
+        Self::spawn_owned(index, cache, disk, inflight, true, crate::cache::DEFAULT_PIN_OWNER)
     }
 
     /// Spawn with explicit size-aware issue ordering (extension knob).
@@ -73,14 +78,35 @@ impl Prefetcher {
         inflight: Arc<InFlight>,
         size_aware: bool,
     ) -> Prefetcher {
+        Self::spawn_owned(index, cache, disk, inflight, size_aware, crate::cache::DEFAULT_PIN_OWNER)
+    }
+
+    /// Spawn pinning under an explicit owner token (the engine's
+    /// `pin_owner`), so that on a cache shared across lanes this
+    /// prefetcher's pins survive a sibling lane's group-switch release.
+    pub fn spawn_owned(
+        index: Arc<IvfIndex>,
+        cache: Arc<ShardedClusterCache>,
+        disk: Arc<Mutex<DiskModel>>,
+        inflight: Arc<InFlight>,
+        size_aware: bool,
+        pin_owner: u64,
+    ) -> Prefetcher {
         let (tx, rx) = std::sync::mpsc::channel();
         let counters = Arc::new(PrefetchCounters::default());
         let thread_counters = Arc::clone(&counters);
         let handle = std::thread::Builder::new()
             .name("cagr-prefetch".to_string())
-            .spawn(move || run(index, cache, disk, inflight, rx, thread_counters, size_aware))
+            .spawn(move || {
+                run(index, cache, disk, inflight, rx, thread_counters, size_aware, pin_owner)
+            })
             .expect("spawn prefetcher");
-        Prefetcher { tx, handle: Some(handle), counters, issued: AtomicU64::new(0) }
+        Prefetcher { tx, handle: Some(handle), counters, issued: AtomicU64::new(0), pin_owner }
+    }
+
+    /// The owner token this prefetcher's pins are held under.
+    pub fn pin_owner(&self) -> u64 {
+        self.pin_owner
     }
 
     /// Request an asynchronous prefetch of `clusters`, protecting `pins`.
@@ -115,6 +141,7 @@ impl Drop for Prefetcher {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run(
     index: Arc<IvfIndex>,
     cache: Arc<ShardedClusterCache>,
@@ -123,12 +150,13 @@ fn run(
     rx: Receiver<Msg>,
     counters: Arc<PrefetchCounters>,
     size_aware: bool,
+    pin_owner: u64,
 ) {
     while let Ok(msg) = rx.recv() {
         match msg {
             Msg::Shutdown => break,
             Msg::Prefetch { clusters, pins } => {
-                cache.pin(&pins);
+                cache.pin_as(pin_owner, &pins);
                 // Parallel reads: NVMe queues are deep, and serialized
                 // prefetch would lose the race against the demand path.
                 let mut todo: Vec<u32> = clusters
@@ -168,7 +196,7 @@ fn run(
                                             // current query's own demand
                                             // inserts. The dispatcher unpins
                                             // after the group switch.
-                                            cache.pin(&[cid]);
+                                            cache.pin_as(pin_owner, &[cid]);
                                             if outcome.was_hit {
                                                 counters
                                                     .already_resident

@@ -181,6 +181,11 @@ pub struct SearchEngine {
     /// Shared in-flight read registry (demand path + I/O workers +
     /// prefetcher).
     pub inflight: Arc<inflight::InFlight>,
+    /// This engine's pin-owner token on the (possibly shared) cluster
+    /// cache: the dispatcher's group-switch release and the prefetcher's
+    /// pins both use it, so sibling lanes sharing one cache never release
+    /// each other's pins.
+    pin_owner: u64,
     /// I/O worker pool for the parallel group executor; `None` when
     /// `cfg.io_workers <= 1` (sequential path).
     pub(crate) io_pool: Option<Arc<ThreadPool>>,
@@ -260,22 +265,40 @@ impl SearchEngine {
             cache,
             disk: Arc::new(Mutex::new(disk)),
             inflight: Arc::new(inflight::InFlight::new()),
+            pin_owner: crate::cache::next_pin_owner(),
             io_pool,
         })
+    }
+
+    /// The pin-owner token this engine (and its prefetcher) pins under.
+    pub fn pin_owner(&self) -> u64 {
+        self.pin_owner
     }
 
     /// Encode a batch and run the first-level scan: the coordinator needs
     /// `C(q_i)` for every arriving query *before* grouping (paper §3.1 ①).
     pub fn prepare(&mut self, queries: &[Query]) -> anyhow::Result<Vec<PreparedQuery>> {
+        self.prepare_with(queries, None)
+    }
+
+    /// [`SearchEngine::prepare`] with an optional per-request `nprobe`
+    /// override (the serving protocol's `nprobe` option); clamped to
+    /// `1..=clusters`. `None` uses the configured default.
+    pub fn prepare_with(
+        &mut self,
+        queries: &[Query],
+        nprobe: Option<usize>,
+    ) -> anyhow::Result<Vec<PreparedQuery>> {
         if queries.is_empty() {
             return Ok(Vec::new());
         }
+        let nprobe = nprobe.unwrap_or(self.cfg.nprobe).clamp(1, self.index.meta.clusters);
         let t0 = Instant::now();
         let dim = self.index.meta.dim;
         let embeddings = self.compute.embed_queries(&self.spec, queries)?;
         let cluster_lists =
             self.compute
-                .nearest_centroids(&self.index, &embeddings, queries.len(), self.cfg.nprobe)?;
+                .nearest_centroids(&self.index, &embeddings, queries.len(), nprobe)?;
         let share = t0.elapsed() / queries.len() as u32;
         Ok(queries
             .iter()
@@ -292,8 +315,19 @@ impl SearchEngine {
 
     /// Search one prepared query: fetch + score its clusters, merge top-k.
     pub fn search(&mut self, pq: &PreparedQuery) -> anyhow::Result<(SearchReport, Vec<Hit>)> {
+        self.search_with(pq, None)
+    }
+
+    /// [`SearchEngine::search`] with an optional per-request `top_k`
+    /// override (the serving protocol's `top_k` option). `None` uses the
+    /// configured default.
+    pub fn search_with(
+        &mut self,
+        pq: &PreparedQuery,
+        top_k: Option<usize>,
+    ) -> anyhow::Result<(SearchReport, Vec<Hit>)> {
         let t0 = Instant::now();
-        let mut topk = TopK::new(self.cfg.top_k);
+        let mut topk = TopK::new(top_k.unwrap_or(self.cfg.top_k).max(1));
         let mut report = SearchReport {
             query_id: pq.query.id,
             nprobe: pq.clusters.len(),

@@ -20,9 +20,9 @@
 //! compiled artifacts through the PJRT CPU client (`runtime`), or a native
 //! rust fallback (`Backend::Native`, the default).
 //!
-//! ## Serving API
+//! ## In-process serving API
 //!
-//! The public entry point is [`session::Session`], built fluently and
+//! The embedded entry point is [`session::Session`], built fluently and
 //! driven with blocking batches or a non-blocking submit/poll loop:
 //!
 //! ```text
@@ -45,18 +45,48 @@
 //! [`coordinator::GroupingWithPrefetch`] (QGP, full CaGR-RAG); the legacy
 //! `Mode` enum survives only as a parsing shim for `--mode`-style flags.
 //!
-//! Start at `examples/quickstart.rs` for an end-to-end tour,
-//! [`engine::SearchEngine`] for single-query semantics, or
-//! [`coordinator::Coordinator`] for the batch pipeline underneath
-//! `Session`.
+//! ## Serving over the wire
+//!
+//! The TCP front-end ([`server`]) and the client library ([`client`])
+//! share one versioned, typed protocol ([`proto`], spec in
+//! `docs/PROTOCOL.md`): a version handshake, per-request options
+//! (`top_k`, `nprobe`, `deadline_ms`, `no_group`), structured error codes
+//! (`overloaded`, `deadline-exceeded`, ...), bounded per-lane admission,
+//! and the control-plane verbs `stats` / `health` / `drain`:
+//!
+//! ```text
+//! use cagr::client::Client;
+//! use cagr::proto::SearchOptions;
+//!
+//! let mut client = Client::connect(addr)?;          // handshake included
+//! let reply = client.search(&query)?;               // blocking round-trip
+//!
+//! // Latency-critical: skip grouping, bound the wait.
+//! let opts = SearchOptions { no_group: true, deadline_ms: Some(50), ..Default::default() };
+//! let reply = client.search_with(&query, &opts)?;
+//!
+//! // Pipelined: many in flight, replies matched by query id.
+//! for q in &queries { client.submit(q)?; }
+//! for _ in &queries { let r = client.recv()?; }
+//!
+//! let stats = client.stats()?;                      // control plane
+//! client.drain()?;                                  // graceful stop
+//! ```
+//!
+//! Start at `examples/quickstart.rs` for an end-to-end in-process tour and
+//! `examples/serve_workload.rs` for the full client/server loop;
+//! [`engine::SearchEngine`] has single-query semantics,
+//! [`coordinator::Coordinator`] the batch pipeline underneath `Session`.
 
 pub mod cache;
+pub mod client;
 pub mod config;
 pub mod coordinator;
 pub mod engine;
 pub mod harness;
 pub mod index;
 pub mod metrics;
+pub mod proto;
 pub mod runtime;
 pub mod server;
 pub mod session;

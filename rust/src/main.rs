@@ -3,7 +3,10 @@
 //! Subcommands:
 //!   build-index  --dataset <name|all> [--backend native|pjrt] ...
 //!   serve        --dataset <name> [--addr host:port] [--policy baseline|qg|qgp]
-//!                [--lanes N]    parallel dispatch lanes over one shared cache
+//!                [--lanes N] [--max-inflight N] [--drain-timeout 5s]
+//!   client       --addr host:port [--queries N] [--dataset <name>]
+//!                [--top-k K] [--nprobe N] [--deadline 100ms] [--no-group]
+//!                [--stats] [--health] [--drain]      drive a running server
 //!   search       --dataset <name> [--queries N] [--policy ..]   one-shot run
 //!   replay       --trace <file> [--policy ..]                   replay a trace
 //!   record-trace --dataset <name> --out <file>
@@ -39,7 +42,7 @@ fn main() {
 }
 
 fn usage() -> &'static str {
-    "usage: cagr <build-index|serve|search|replay|record-trace|info> [options]\n\
+    "usage: cagr <build-index|serve|client|search|replay|record-trace|info> [options]\n\
      run `cagr <subcommand> --help` conceptually: see README.md for options"
 }
 
@@ -91,6 +94,7 @@ fn run(args: &Args) -> anyhow::Result<()> {
     match args.command.as_deref() {
         Some("build-index") => cmd_build_index(args),
         Some("serve") => cmd_serve(args),
+        Some("client") => cmd_client(args),
         Some("search") => cmd_search(args),
         Some("replay") => cmd_replay(args),
         Some("record-trace") => cmd_record_trace(args),
@@ -162,28 +166,142 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             builder.open()
         }
     };
+    let defaults = server::ServerConfig::default();
     let server_cfg = server::ServerConfig {
         addr: args.get_or("addr", "127.0.0.1:7471").to_string(),
         batch_window: std::time::Duration::from_millis(args.get_u64("batch-window-ms", 10)?),
         batch_max: cfg.batch_max,
         lanes,
+        max_inflight_per_lane: args
+            .get_usize("max-inflight", defaults.max_inflight_per_lane)?
+            .max(1),
+        drain_timeout: args.get_duration("drain-timeout", defaults.drain_timeout)?,
     };
+    let max_inflight = server_cfg.max_inflight_per_lane;
     let handle = server::start(factory, server_cfg)?;
     println!(
-        "cagr serving {} on {} (policy={}, cache={}x{}, theta={}, lanes={}, io-workers={})",
+        "cagr serving {} on {} (proto=v{}, policy={}, cache={}x{}, theta={}, lanes={}, \
+         io-workers={}, max-inflight/lane={})",
         spec.name,
         handle.addr,
+        cagr::proto::PROTOCOL_VERSION,
         mode.name(),
         cfg.cache_policy.name(),
         cfg.cache_entries,
         cfg.theta,
         lanes,
-        cfg.io_workers
+        cfg.io_workers,
+        max_inflight
     );
     println!("press ctrl-c to stop");
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
+}
+
+/// Drive a running server over the versioned wire protocol: control-plane
+/// verbs (`--stats`, `--health`, `--drain`) or a pipelined query stream
+/// with optional per-request knobs (`--top-k`, `--nprobe`, `--deadline`,
+/// `--no-group`).
+fn cmd_client(args: &Args) -> anyhow::Result<()> {
+    use cagr::client::{Client, ClientError};
+    use cagr::proto::SearchOptions;
+
+    let addr: std::net::SocketAddr = args
+        .get_or("addr", "127.0.0.1:7471")
+        .parse()
+        .map_err(|_| anyhow::anyhow!("--addr expects host:port"))?;
+    let mut client = Client::connect(addr)?;
+    println!("connected to {addr} (server protocol v{})", client.server_version());
+
+    if args.flag("health") {
+        let h = client.health()?;
+        println!(
+            "health: status={} lanes={} inflight={} proto=v{}",
+            h.status, h.lanes, h.inflight, h.version
+        );
+        return Ok(());
+    }
+    if args.flag("stats") {
+        let s = client.stats()?;
+        println!("stats: draining={} total-queries={}", s.draining, s.queries());
+        for l in &s.lanes {
+            println!(
+                "  lane {}: policy={} inflight={} batches={} queries={} groups={} \
+                 cache-hit={:.1}% (hits={} misses={} prefetch-inserts={})",
+                l.lane,
+                l.policy,
+                l.inflight,
+                l.batches,
+                l.queries,
+                l.groups,
+                100.0 * l.cache.hit_ratio(),
+                l.cache.hits,
+                l.cache.misses,
+                l.cache.prefetch_inserts,
+            );
+        }
+        return Ok(());
+    }
+    if args.flag("drain") {
+        let d = client.drain()?;
+        println!("drain: drained={} remaining={}", d.drained, d.remaining);
+        return Ok(());
+    }
+
+    // Query mode: send a slice of the dataset's canonical query stream.
+    let spec = DatasetSpec::by_name(args.get_or("dataset", "nq-sim"))?;
+    let n = args.get_usize("queries", 20)?.min(spec.n_queries);
+    let window = args.get_usize("window", 16)?.max(1);
+    let opts = SearchOptions {
+        top_k: args.get("top-k").map(|v| v.parse()).transpose().map_err(|_| {
+            anyhow::anyhow!("--top-k expects an integer")
+        })?,
+        nprobe: args.get("nprobe").map(|v| v.parse()).transpose().map_err(|_| {
+            anyhow::anyhow!("--nprobe expects an integer")
+        })?,
+        deadline_ms: match args.get("deadline") {
+            Some(v) => Some(cagr::util::cli::parse_duration(v)?.as_millis() as u64),
+            None => None,
+        },
+        no_group: args.flag("no-group"),
+    };
+    let queries = generate_queries(&spec);
+    let mut recorder = cagr::metrics::LatencyRecorder::new();
+    let (mut ok, mut rejected) = (0usize, 0usize);
+    let mut next = 0usize;
+    let mut outstanding = 0usize;
+    let t0 = std::time::Instant::now();
+    while ok + rejected < n {
+        while next < n && outstanding < window {
+            client.submit_with(&queries[next], &opts)?;
+            next += 1;
+            outstanding += 1;
+        }
+        match client.recv() {
+            Ok(reply) => {
+                recorder.record_secs(reply.latency_us as f64 / 1e6);
+                ok += 1;
+            }
+            Err(ClientError::Server(e)) => {
+                eprintln!("  {e}");
+                rejected += 1;
+            }
+            Err(e) => return Err(e.into()),
+        }
+        outstanding -= 1;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "{} ok, {} rejected in {:.2}s ({:.1} qps); server-side latency mean={:.4}s p99={:.4}s",
+        ok,
+        rejected,
+        wall,
+        (ok + rejected) as f64 / wall.max(1e-9),
+        recorder.mean(),
+        recorder.p99()
+    );
+    Ok(())
 }
 
 fn cmd_search(args: &Args) -> anyhow::Result<()> {

@@ -1,0 +1,790 @@
+//! Versioned serving protocol: the typed wire format shared by the TCP
+//! server (`server`), the client library (`client`), the CLI, the examples,
+//! and the conformance suite (`rust/tests/proto.rs`).
+//!
+//! The transport is JSON-lines over TCP — one message object per line,
+//! serialized through [`crate::util::json`] (the build is offline; no
+//! serde). Every message carries a `"type"` tag; a line whose object has no
+//! tag but does have a `"query_id"` is accepted as a search request (the
+//! pre-versioning wire format, kept so hand-rolled clients stay easy).
+//!
+//! Client → server messages ([`Request`]):
+//!
+//! | type     | purpose                                                   |
+//! |----------|-----------------------------------------------------------|
+//! | `hello`  | version handshake; server replies `hello` or an error     |
+//! | `search` | one query + per-request [`SearchOptions`]                 |
+//! | `stats`  | control plane: per-lane cache/session counters            |
+//! | `health` | control plane: liveness + drain state                     |
+//! | `drain`  | control plane: stop admitting, wait for in-flight work    |
+//!
+//! Server → client messages ([`Reply`]) mirror them: `hello`, `result`,
+//! `error` (structured [`ErrorReply`] with an [`ErrorCode`]), `stats`,
+//! `health`, `drain`. The full field tables live in `docs/PROTOCOL.md`.
+//!
+//! Versioning policy: [`PROTOCOL_VERSION`] is a single integer bumped on
+//! every incompatible change. The handshake is optional but checked — a
+//! client that skips `hello` is assumed to speak the current version; a
+//! `hello` with any other version gets `ErrorCode::VersionMismatch`.
+//! Servers never reinterpret a mismatched client's messages.
+
+use crate::cache::CacheStats;
+use crate::coordinator::QueryOutcome;
+use crate::util::json::{obj, Json};
+use crate::workload::Query;
+
+/// Current wire-protocol version. Bumped on every incompatible change to
+/// the message shapes below (see `docs/PROTOCOL.md` for the policy).
+pub const PROTOCOL_VERSION: u32 = 1;
+
+/// Structured error categories carried by [`ErrorReply`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// The request line was not a valid message (bad JSON, missing fields,
+    /// wrong field types). The connection stays usable.
+    Malformed,
+    /// Admission control rejected the query: the lane already holds
+    /// `max_inflight_per_lane` queries. Back off and retry.
+    Overloaded,
+    /// The request's `deadline_ms` elapsed before a result was ready
+    /// (checked at dequeue and again after the search).
+    DeadlineExceeded,
+    /// The server is draining or shutting down and admits no new queries.
+    ShuttingDown,
+    /// Handshake version differs from [`PROTOCOL_VERSION`].
+    VersionMismatch,
+    /// The search itself failed server-side (I/O error, engine fault).
+    Internal,
+}
+
+impl ErrorCode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ErrorCode::Malformed => "malformed",
+            ErrorCode::Overloaded => "overloaded",
+            ErrorCode::DeadlineExceeded => "deadline-exceeded",
+            ErrorCode::ShuttingDown => "shutting-down",
+            ErrorCode::VersionMismatch => "version-mismatch",
+            ErrorCode::Internal => "internal",
+        }
+    }
+
+    /// Parse a code. Case-insensitive and whitespace-tolerant, consistent
+    /// with every other selector parser in the crate.
+    pub fn parse(s: &str) -> anyhow::Result<ErrorCode> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "malformed" => Ok(ErrorCode::Malformed),
+            "overloaded" => Ok(ErrorCode::Overloaded),
+            "deadline-exceeded" | "deadline_exceeded" => Ok(ErrorCode::DeadlineExceeded),
+            "shutting-down" | "shutting_down" => Ok(ErrorCode::ShuttingDown),
+            "version-mismatch" | "version_mismatch" => Ok(ErrorCode::VersionMismatch),
+            "internal" => Ok(ErrorCode::Internal),
+            other => anyhow::bail!(
+                "unknown error code '{other}' (accepted: malformed, overloaded, \
+                 deadline-exceeded, shutting-down, version-mismatch, internal)"
+            ),
+        }
+    }
+}
+
+impl std::fmt::Display for ErrorCode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Per-request knobs carried by a search request. Everything is optional;
+/// the zero value ([`SearchOptions::default`]) means "server defaults".
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct SearchOptions {
+    /// Results wanted for this query (server default when absent). A
+    /// `top_k` above the server's configured value forces the single-query
+    /// path (like `no_group`), where it is honored exactly.
+    pub top_k: Option<usize>,
+    /// Clusters to probe for this query (server default when absent;
+    /// clamped to the index's cluster count). Forces the single-query path.
+    pub nprobe: Option<usize>,
+    /// Latency budget in milliseconds, measured from the moment the server
+    /// reads the request. Expired queries get `ErrorCode::DeadlineExceeded`
+    /// instead of burning search work (checked at dequeue and post-search).
+    pub deadline_ms: Option<u64>,
+    /// Bypass grouping for this latency-critical query: it is searched on
+    /// the single-query path instead of waiting for a group plan.
+    pub no_group: bool,
+}
+
+impl SearchOptions {
+    /// True when every knob is at its server-default setting.
+    pub fn is_default(&self) -> bool {
+        *self == SearchOptions::default()
+    }
+}
+
+/// One search request: the query itself plus its per-request options.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SearchRequest {
+    pub query: Query,
+    pub options: SearchOptions,
+}
+
+impl SearchRequest {
+    pub fn new(query: Query) -> SearchRequest {
+        SearchRequest { query, options: SearchOptions::default() }
+    }
+}
+
+/// A parsed client → server message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Version handshake.
+    Hello { version: u32 },
+    /// One query.
+    Search(SearchRequest),
+    /// Control plane: per-lane cache/session counters.
+    Stats,
+    /// Control plane: liveness + drain state.
+    Health,
+    /// Control plane: stop admitting new queries, wait for in-flight ones.
+    Drain,
+}
+
+/// Failure to understand a request line. `query_id` is populated when the
+/// line parsed far enough to recover it, so pipelined clients can match the
+/// resulting [`ErrorReply`] to the request that caused it.
+#[derive(Debug, Clone)]
+pub struct WireError {
+    pub message: String,
+    pub query_id: Option<usize>,
+}
+
+impl WireError {
+    fn new(message: impl Into<String>) -> WireError {
+        WireError { message: message.into(), query_id: None }
+    }
+
+    fn with_id(message: impl Into<String>, query_id: Option<usize>) -> WireError {
+        WireError { message: message.into(), query_id }
+    }
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.message)
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl Request {
+    /// Parse one wire line. A line without a `"type"` tag but with a
+    /// `"query_id"` is a search request (legacy form).
+    pub fn parse_line(line: &str) -> Result<Request, WireError> {
+        let v = Json::parse(line.trim())
+            .map_err(|e| WireError::new(format!("bad request json: {e}")))?;
+        if v.as_obj().is_none() {
+            return Err(WireError::new("request must be a json object"));
+        }
+        match v.get("type").and_then(Json::as_str) {
+            Some("hello") => {
+                let version = v
+                    .get("version")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| WireError::new("hello missing 'version'"))?;
+                Ok(Request::Hello { version: version as u32 })
+            }
+            Some("search") => parse_search(&v).map(Request::Search),
+            Some("stats") => Ok(Request::Stats),
+            Some("health") => Ok(Request::Health),
+            Some("drain") => Ok(Request::Drain),
+            Some(other) => Err(WireError::new(format!("unknown request type '{other}'"))),
+            None if v.get("query_id").is_some() => parse_search(&v).map(Request::Search),
+            None => Err(WireError::new("request missing 'type' (and no 'query_id')")),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            Request::Hello { version } => obj(vec![
+                ("type", "hello".into()),
+                ("version", (*version as usize).into()),
+            ]),
+            Request::Search(req) => {
+                let mut pairs: Vec<(&str, Json)> = vec![
+                    ("type", "search".into()),
+                    ("query_id", req.query.id.into()),
+                    ("template", req.query.template.into()),
+                    ("topic", req.query.topic.into()),
+                    (
+                        "tokens",
+                        Json::Arr(
+                            req.query.tokens.iter().map(|&t| Json::Num(t as f64)).collect(),
+                        ),
+                    ),
+                ];
+                let o = &req.options;
+                if let Some(k) = o.top_k {
+                    pairs.push(("top_k", k.into()));
+                }
+                if let Some(n) = o.nprobe {
+                    pairs.push(("nprobe", n.into()));
+                }
+                if let Some(d) = o.deadline_ms {
+                    pairs.push(("deadline_ms", Json::Num(d as f64)));
+                }
+                if o.no_group {
+                    pairs.push(("no_group", true.into()));
+                }
+                obj(pairs)
+            }
+            Request::Stats => obj(vec![("type", "stats".into())]),
+            Request::Health => obj(vec![("type", "health".into())]),
+            Request::Drain => obj(vec![("type", "drain".into())]),
+        }
+    }
+
+    /// Serialize to one wire line (no trailing newline).
+    pub fn dump(&self) -> String {
+        self.to_json().dump()
+    }
+}
+
+fn parse_search(v: &Json) -> Result<SearchRequest, WireError> {
+    let id = v
+        .get("query_id")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| WireError::new("search missing 'query_id'"))?;
+    let opt_usize = |name: &str| -> Result<Option<usize>, WireError> {
+        match v.get(name) {
+            None => Ok(None),
+            Some(x) => x.as_usize().map(Some).ok_or_else(|| {
+                WireError::with_id(format!("'{name}' must be a non-negative integer"), Some(id))
+            }),
+        }
+    };
+    let tokens = match v.get("tokens") {
+        None => Vec::new(),
+        Some(x) => {
+            let arr = x.as_arr().ok_or_else(|| {
+                WireError::with_id("'tokens' must be an array", Some(id))
+            })?;
+            arr.iter()
+                .map(|t| {
+                    t.as_f64().map(|f| f as i32).ok_or_else(|| {
+                        WireError::with_id("non-numeric token", Some(id))
+                    })
+                })
+                .collect::<Result<Vec<i32>, WireError>>()?
+        }
+    };
+    let deadline_ms = match v.get("deadline_ms") {
+        None => None,
+        Some(x) => Some(x.as_f64().filter(|d| *d >= 0.0).map(|d| d as u64).ok_or_else(
+            || WireError::with_id("'deadline_ms' must be a non-negative number", Some(id)),
+        )?),
+    };
+    let no_group = match v.get("no_group") {
+        None => false,
+        Some(x) => x
+            .as_bool()
+            .ok_or_else(|| WireError::with_id("'no_group' must be a boolean", Some(id)))?,
+    };
+    let top_k = opt_usize("top_k")?;
+    let nprobe = opt_usize("nprobe")?;
+    if top_k == Some(0) {
+        return Err(WireError::with_id("'top_k' must be > 0", Some(id)));
+    }
+    if nprobe == Some(0) {
+        return Err(WireError::with_id("'nprobe' must be > 0", Some(id)));
+    }
+    Ok(SearchRequest {
+        query: Query {
+            id,
+            template: v.get("template").and_then(Json::as_usize).unwrap_or(0),
+            topic: v.get("topic").and_then(Json::as_usize).unwrap_or(0),
+            tokens,
+        },
+        options: SearchOptions { top_k, nprobe, deadline_ms, no_group },
+    })
+}
+
+/// One scored document in a search reply.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SearchHit {
+    pub doc: u32,
+    pub distance: f32,
+}
+
+/// The result of one query, as shipped over the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchReply {
+    pub query_id: usize,
+    pub latency_us: u64,
+    /// Group index the query was dispatched in (0 on the single-query path).
+    pub group: usize,
+    pub hits: Vec<SearchHit>,
+}
+
+impl SearchReply {
+    /// Build the wire reply from a session outcome — the single conversion
+    /// point between the serving stack's types and the protocol (there is
+    /// no hand-assembled response JSON anywhere else).
+    pub fn from_outcome(outcome: &QueryOutcome) -> SearchReply {
+        SearchReply {
+            query_id: outcome.report.query_id,
+            latency_us: outcome.report.latency.as_micros() as u64,
+            group: outcome.group,
+            hits: outcome
+                .hits
+                .iter()
+                .map(|h| SearchHit { doc: h.doc_id, distance: h.distance })
+                .collect(),
+        }
+    }
+}
+
+/// A structured error reply. Always carries a machine-readable
+/// [`ErrorCode`]; `query_id` is present whenever the error pertains to one
+/// request, so pipelined clients never desynchronize.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ErrorReply {
+    pub code: ErrorCode,
+    pub message: String,
+    pub query_id: Option<usize>,
+}
+
+impl ErrorReply {
+    pub fn new(code: ErrorCode, message: impl Into<String>, query_id: Option<usize>) -> Self {
+        ErrorReply { code, message: message.into(), query_id }
+    }
+}
+
+impl std::fmt::Display for ErrorReply {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.query_id {
+            Some(id) => write!(f, "[{}] query {id}: {}", self.code, self.message),
+            None => write!(f, "[{}] {}", self.code, self.message),
+        }
+    }
+}
+
+impl std::error::Error for ErrorReply {}
+
+/// One dispatch lane's counters in a [`StatsReply`]. Cache counters are
+/// reported per lane (lanes may share one cache, in which case each lane
+/// sees the same merged totals — summing across lanes would double-count).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LaneStats {
+    pub lane: usize,
+    pub policy: String,
+    /// Queries admitted to this lane and not yet replied to.
+    pub inflight: usize,
+    pub batches: usize,
+    pub queries: usize,
+    pub groups: usize,
+    pub grouping_cost_us: u64,
+    pub cache: CacheStats,
+}
+
+/// Control-plane reply to `stats`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StatsReply {
+    pub draining: bool,
+    pub lanes: Vec<LaneStats>,
+}
+
+impl StatsReply {
+    /// Total in-flight queries across all lanes.
+    pub fn inflight(&self) -> usize {
+        self.lanes.iter().map(|l| l.inflight).sum()
+    }
+
+    /// Total queries processed across all lanes.
+    pub fn queries(&self) -> usize {
+        self.lanes.iter().map(|l| l.queries).sum()
+    }
+}
+
+/// Control-plane reply to `health`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HealthReply {
+    /// `"ok"` or `"draining"`.
+    pub status: String,
+    pub version: u32,
+    pub lanes: usize,
+    pub inflight: usize,
+}
+
+/// Control-plane reply to `drain`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DrainReply {
+    /// True when all in-flight queries completed within the drain timeout.
+    pub drained: bool,
+    /// Queries still in flight when the reply was sent.
+    pub remaining: usize,
+}
+
+/// A parsed server → client message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Reply {
+    Hello { version: u32 },
+    Search(SearchReply),
+    Error(ErrorReply),
+    Stats(StatsReply),
+    Health(HealthReply),
+    Drain(DrainReply),
+}
+
+impl Reply {
+    pub fn parse_line(line: &str) -> Result<Reply, WireError> {
+        let v = Json::parse(line.trim())
+            .map_err(|e| WireError::new(format!("bad reply json: {e}")))?;
+        match v.get("type").and_then(Json::as_str) {
+            Some("hello") => Ok(Reply::Hello {
+                version: v
+                    .get("version")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| WireError::new("hello missing 'version'"))?
+                    as u32,
+            }),
+            Some("result") => {
+                let query_id = v
+                    .get("query_id")
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| WireError::new("result missing 'query_id'"))?;
+                let hits = v
+                    .get("hits")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| WireError::new("result missing 'hits'"))?
+                    .iter()
+                    .map(|h| {
+                        let doc = h.get("doc").and_then(Json::as_f64);
+                        let dist = h.get("distance").and_then(Json::as_f64);
+                        match (doc, dist) {
+                            (Some(d), Some(x)) => {
+                                Ok(SearchHit { doc: d as u32, distance: x as f32 })
+                            }
+                            _ => Err(WireError::new("malformed hit entry")),
+                        }
+                    })
+                    .collect::<Result<Vec<SearchHit>, WireError>>()?;
+                Ok(Reply::Search(SearchReply {
+                    query_id,
+                    latency_us: v.get("latency_us").and_then(Json::as_f64).unwrap_or(0.0)
+                        as u64,
+                    group: v.get("group").and_then(Json::as_usize).unwrap_or(0),
+                    hits,
+                }))
+            }
+            Some("error") => {
+                let code = v
+                    .get("code")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| WireError::new("error missing 'code'"))?;
+                let code = ErrorCode::parse(code)
+                    .map_err(|e| WireError::new(format!("{e}")))?;
+                Ok(Reply::Error(ErrorReply {
+                    code,
+                    message: v
+                        .get("message")
+                        .and_then(Json::as_str)
+                        .unwrap_or("")
+                        .to_string(),
+                    query_id: v.get("query_id").and_then(Json::as_usize),
+                }))
+            }
+            Some("stats") => {
+                let lanes = v
+                    .get("lanes")
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| WireError::new("stats missing 'lanes'"))?
+                    .iter()
+                    .map(parse_lane_stats)
+                    .collect::<Result<Vec<LaneStats>, WireError>>()?;
+                Ok(Reply::Stats(StatsReply {
+                    draining: v.get("draining").and_then(Json::as_bool).unwrap_or(false),
+                    lanes,
+                }))
+            }
+            Some("health") => Ok(Reply::Health(HealthReply {
+                status: v
+                    .get("status")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| WireError::new("health missing 'status'"))?
+                    .to_string(),
+                version: v.get("version").and_then(Json::as_usize).unwrap_or(0) as u32,
+                lanes: v.get("lanes").and_then(Json::as_usize).unwrap_or(0),
+                inflight: v.get("inflight").and_then(Json::as_usize).unwrap_or(0),
+            })),
+            Some("drain") => Ok(Reply::Drain(DrainReply {
+                drained: v
+                    .get("drained")
+                    .and_then(Json::as_bool)
+                    .ok_or_else(|| WireError::new("drain missing 'drained'"))?,
+                remaining: v.get("remaining").and_then(Json::as_usize).unwrap_or(0),
+            })),
+            Some(other) => Err(WireError::new(format!("unknown reply type '{other}'"))),
+            None => Err(WireError::new("reply missing 'type'")),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        match self {
+            Reply::Hello { version } => obj(vec![
+                ("type", "hello".into()),
+                ("version", (*version as usize).into()),
+            ]),
+            Reply::Search(r) => obj(vec![
+                ("type", "result".into()),
+                ("query_id", r.query_id.into()),
+                ("latency_us", Json::Num(r.latency_us as f64)),
+                ("group", r.group.into()),
+                (
+                    "hits",
+                    Json::Arr(
+                        r.hits
+                            .iter()
+                            .map(|h| {
+                                obj(vec![
+                                    ("doc", Json::Num(h.doc as f64)),
+                                    ("distance", Json::Num(h.distance as f64)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
+            Reply::Error(e) => {
+                let mut pairs: Vec<(&str, Json)> = vec![
+                    ("type", "error".into()),
+                    ("code", e.code.as_str().into()),
+                    ("message", e.message.as_str().into()),
+                ];
+                if let Some(id) = e.query_id {
+                    pairs.push(("query_id", id.into()));
+                }
+                obj(pairs)
+            }
+            Reply::Stats(s) => obj(vec![
+                ("type", "stats".into()),
+                ("draining", s.draining.into()),
+                (
+                    "lanes",
+                    Json::Arr(s.lanes.iter().map(lane_stats_json).collect()),
+                ),
+            ]),
+            Reply::Health(h) => obj(vec![
+                ("type", "health".into()),
+                ("status", h.status.as_str().into()),
+                ("version", (h.version as usize).into()),
+                ("lanes", h.lanes.into()),
+                ("inflight", h.inflight.into()),
+            ]),
+            Reply::Drain(d) => obj(vec![
+                ("type", "drain".into()),
+                ("drained", d.drained.into()),
+                ("remaining", d.remaining.into()),
+            ]),
+        }
+    }
+
+    /// Serialize to one wire line (no trailing newline).
+    pub fn dump(&self) -> String {
+        self.to_json().dump()
+    }
+}
+
+fn lane_stats_json(l: &LaneStats) -> Json {
+    obj(vec![
+        ("lane", l.lane.into()),
+        ("policy", l.policy.as_str().into()),
+        ("inflight", l.inflight.into()),
+        ("batches", l.batches.into()),
+        ("queries", l.queries.into()),
+        ("groups", l.groups.into()),
+        ("grouping_cost_us", Json::Num(l.grouping_cost_us as f64)),
+        (
+            "cache",
+            obj(vec![
+                ("hits", Json::Num(l.cache.hits as f64)),
+                ("misses", Json::Num(l.cache.misses as f64)),
+                ("insertions", Json::Num(l.cache.insertions as f64)),
+                ("evictions", Json::Num(l.cache.evictions as f64)),
+                ("rejected_inserts", Json::Num(l.cache.rejected_inserts as f64)),
+                ("prefetch_inserts", Json::Num(l.cache.prefetch_inserts as f64)),
+            ]),
+        ),
+    ])
+}
+
+fn parse_lane_stats(v: &Json) -> Result<LaneStats, WireError> {
+    let n = |parent: &Json, name: &str| -> u64 {
+        parent.get(name).and_then(Json::as_f64).unwrap_or(0.0) as u64
+    };
+    let cache = v.get("cache").cloned().unwrap_or(Json::Null);
+    Ok(LaneStats {
+        lane: v
+            .get("lane")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| WireError::new("lane stats missing 'lane'"))?,
+        policy: v.get("policy").and_then(Json::as_str).unwrap_or("").to_string(),
+        inflight: n(v, "inflight") as usize,
+        batches: n(v, "batches") as usize,
+        queries: n(v, "queries") as usize,
+        groups: n(v, "groups") as usize,
+        grouping_cost_us: n(v, "grouping_cost_us"),
+        cache: CacheStats {
+            hits: n(&cache, "hits"),
+            misses: n(&cache, "misses"),
+            insertions: n(&cache, "insertions"),
+            evictions: n(&cache, "evictions"),
+            rejected_inserts: n(&cache, "rejected_inserts"),
+            prefetch_inserts: n(&cache, "prefetch_inserts"),
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn query(id: usize) -> Query {
+        Query { id, template: 2, topic: 5, tokens: vec![1, 2, 3] }
+    }
+
+    #[test]
+    fn request_roundtrip_all_types() {
+        let mut search = SearchRequest::new(query(7));
+        search.options = SearchOptions {
+            top_k: Some(3),
+            nprobe: Some(6),
+            deadline_ms: Some(250),
+            no_group: true,
+        };
+        for req in [
+            Request::Hello { version: PROTOCOL_VERSION },
+            Request::Search(SearchRequest::new(query(1))),
+            Request::Search(search),
+            Request::Stats,
+            Request::Health,
+            Request::Drain,
+        ] {
+            let line = req.dump();
+            assert_eq!(Request::parse_line(&line).unwrap(), req, "{line}");
+        }
+    }
+
+    #[test]
+    fn legacy_untyped_search_line_accepted() {
+        let req = Request::parse_line(
+            r#"{"query_id": 5, "template": 1, "topic": 2, "tokens": [4, 5]}"#,
+        )
+        .unwrap();
+        match req {
+            Request::Search(s) => {
+                assert_eq!(s.query.id, 5);
+                assert_eq!(s.query.tokens, vec![4, 5]);
+                assert!(s.options.is_default());
+            }
+            other => panic!("expected search, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_requests_are_rejected_with_best_effort_id() {
+        assert!(Request::parse_line("not json").is_err());
+        assert!(Request::parse_line("[1,2]").is_err());
+        assert!(Request::parse_line(r#"{"type":"bogus"}"#).is_err());
+        assert!(Request::parse_line(r#"{"no_id": 1}"#).is_err());
+        // The id is recovered when the line parses far enough.
+        let err = Request::parse_line(r#"{"query_id": 9, "tokens": "oops"}"#).unwrap_err();
+        assert_eq!(err.query_id, Some(9));
+        let err = Request::parse_line(r#"{"query_id": 4, "top_k": 0}"#).unwrap_err();
+        assert_eq!(err.query_id, Some(4));
+        // Truncated line == invalid JSON.
+        let full = Request::Search(SearchRequest::new(query(3))).dump();
+        assert!(Request::parse_line(&full[..full.len() - 4]).is_err());
+    }
+
+    #[test]
+    fn reply_roundtrip_all_types() {
+        for reply in [
+            Reply::Hello { version: PROTOCOL_VERSION },
+            Reply::Search(SearchReply {
+                query_id: 11,
+                latency_us: 812,
+                group: 2,
+                hits: vec![
+                    SearchHit { doc: 123, distance: 0.25 },
+                    SearchHit { doc: 9, distance: 1.5 },
+                ],
+            }),
+            Reply::Error(ErrorReply::new(ErrorCode::Overloaded, "lane full", Some(11))),
+            Reply::Error(ErrorReply::new(ErrorCode::Malformed, "bad json", None)),
+            Reply::Stats(StatsReply {
+                draining: true,
+                lanes: vec![LaneStats {
+                    lane: 0,
+                    policy: "qgp".to_string(),
+                    inflight: 3,
+                    batches: 7,
+                    queries: 240,
+                    groups: 31,
+                    grouping_cost_us: 1500,
+                    cache: CacheStats {
+                        hits: 10,
+                        misses: 4,
+                        insertions: 4,
+                        evictions: 1,
+                        rejected_inserts: 0,
+                        prefetch_inserts: 2,
+                    },
+                }],
+            }),
+            Reply::Health(HealthReply {
+                status: "ok".to_string(),
+                version: PROTOCOL_VERSION,
+                lanes: 2,
+                inflight: 5,
+            }),
+            Reply::Drain(DrainReply { drained: false, remaining: 4 }),
+        ] {
+            let line = reply.dump();
+            assert_eq!(Reply::parse_line(&line).unwrap(), reply, "{line}");
+        }
+    }
+
+    #[test]
+    fn error_code_parse_is_case_insensitive_and_lists_accepted() {
+        assert_eq!(ErrorCode::parse(" OVERLOADED ").unwrap(), ErrorCode::Overloaded);
+        assert_eq!(
+            ErrorCode::parse("Deadline_Exceeded").unwrap(),
+            ErrorCode::DeadlineExceeded
+        );
+        let err = ErrorCode::parse("nope").unwrap_err().to_string();
+        assert!(err.contains("overloaded") && err.contains("shutting-down"), "{err}");
+    }
+
+    #[test]
+    fn distances_survive_the_wire_exactly() {
+        // f32 -> f64 -> shortest-roundtrip decimal -> f64 -> f32 is exact,
+        // which is what the Client<->Session parity test relies on.
+        for d in [0.1f32, 1.0 / 3.0, f32::MIN_POSITIVE, 1234.5678] {
+            let reply = Reply::Search(SearchReply {
+                query_id: 0,
+                latency_us: 0,
+                group: 0,
+                hits: vec![SearchHit { doc: 1, distance: d }],
+            });
+            match Reply::parse_line(&reply.dump()).unwrap() {
+                Reply::Search(r) => assert_eq!(r.hits[0].distance, d),
+                other => panic!("{other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn version_constant_is_wired_through_hello() {
+        let line = Request::Hello { version: PROTOCOL_VERSION }.dump();
+        assert!(line.contains("\"version\":1"), "{line}");
+    }
+}

@@ -1,40 +1,50 @@
 //! TCP serving front-end (S10): the stand-in for the paper's Kafka ingress.
 //!
-//! Protocol: JSON-lines over TCP. One request object per line:
-//!   {"query_id": 7, "template": 3, "topic": 12, "tokens": [..24 ints..]}
-//! One response object per line (order within a connection matches request
-//! order):
-//!   {"query_id": 7, "latency_us": 812, "group": 2,
-//!    "hits": [{"doc": 123, "distance": 0.4}, ...]}
+//! Speaks the versioned typed protocol of [`crate::proto`] (JSON-lines,
+//! `docs/PROTOCOL.md`): version handshake, per-request options (`top_k`,
+//! `nprobe`, `deadline_ms`, `no_group`), structured error replies, and the
+//! control-plane verbs `stats` / `health` / `drain`. The paired client
+//! library is [`crate::client::Client`]; both sides share the same message
+//! types, so there is no hand-assembled response JSON anywhere.
 //!
 //! Connection handlers feed per-lane queues; each **dispatch lane** is a
 //! thread that gathers its queue into arrival batches (up to `batch_max`
 //! or `batch_window`, mirroring §4.1's batching interval) and runs them
 //! through its own [`Session`]. Every session — and with it the PJRT
-//! runtime — stays on its lane's thread; handlers only do I/O. Connections
-//! are assigned to lanes round-robin at accept time, and within a batch
-//! replies are emitted in request order, so each connection's responses
-//! always arrive in the order its requests did. With `lanes > 1` the
-//! caller's session factory should share one cluster cache across lanes
-//! (`Session::builder().shared_cache(..)`) so the lanes cooperate on
-//! residency instead of duplicating it.
+//! runtime — stays on its lane's thread; handlers only do I/O and
+//! admission. Connections are assigned to lanes round-robin at accept
+//! time; within a batch all replies are built first and then emitted in
+//! request order, so a connection's *admitted* requests are always answered
+//! in the order they were sent. Admission rejections (`overloaded`,
+//! `shutting-down`) and malformed-line errors are replied immediately from
+//! the handler thread and may therefore overtake in-flight results —
+//! every error carries the request's `query_id`, so pipelined clients
+//! never desynchronize. With `lanes > 1` the caller's session factory
+//! should share one cluster cache across lanes
+//! (`Session::builder().shared_cache(..)`); prefetch pins are tracked per
+//! lane owner token, so one lane's group switch never releases a sibling
+//! lane's pins.
 //!
-//! Known multi-lane limitation: prefetch pins on a *shared* cache are
-//! best-effort across lanes — each lane's group-switch `unpin_all` also
-//! releases pins another lane's prefetcher set, so a cross-lane race can
-//! evict a sibling lane's prefetched cluster early. The cost is an extra
-//! disk read (results are unaffected; the demand path simply re-fetches);
-//! per-owner pin tokens are a recorded ROADMAP follow-up.
+//! Overload behavior: each lane admits at most
+//! [`ServerConfig::max_inflight_per_lane`] queries; beyond that, new
+//! queries get an immediate `overloaded` error instead of queueing without
+//! bound. A request's `deadline_ms` is checked when its batch is formed
+//! (expired queries skip the search entirely) and again after the search
+//! (a result that arrives too late is reported as `deadline-exceeded`,
+//! not as a success the client has stopped waiting for).
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::proto::{
+    self, ErrorCode, ErrorReply, Reply, Request, SearchReply, SearchRequest, PROTOCOL_VERSION,
+};
 use crate::session::Session;
-use crate::util::json::{obj, Json};
 use crate::workload::Query;
 
 /// Front-end tunables.
@@ -48,6 +58,12 @@ pub struct ServerConfig {
     /// Dispatch lanes: independent batcher threads, each with its own
     /// `Session`. Connections are pinned to a lane round-robin (at least 1).
     pub lanes: usize,
+    /// Admission bound: queries a lane may hold (queued + batching) before
+    /// new ones are refused with an `overloaded` error (at least 1).
+    pub max_inflight_per_lane: usize,
+    /// How long a `drain` verb waits for in-flight queries to finish
+    /// before replying with `drained: false`.
+    pub drain_timeout: Duration,
 }
 
 impl Default for ServerConfig {
@@ -57,19 +73,50 @@ impl Default for ServerConfig {
             batch_window: Duration::from_millis(10),
             batch_max: 100,
             lanes: 1,
+            max_inflight_per_lane: 256,
+            drain_timeout: Duration::from_secs(5),
         }
     }
 }
 
-struct Request {
-    query: Query,
+/// One admitted query travelling from a connection handler to its lane.
+struct Work {
+    request: SearchRequest,
+    received_at: Instant,
     reply: Sender<String>,
+}
+
+/// Per-lane state shared between the lane's dispatch thread and every
+/// connection handler pinned to it.
+struct LaneShared {
+    /// Admitted-but-unanswered queries (the admission counter).
+    inflight: AtomicUsize,
+    /// Published after every batch for the `stats` verb.
+    snapshot: Mutex<proto::LaneStats>,
+}
+
+/// State shared across the whole server (handlers + lanes + handle).
+struct ServerState {
+    shutdown: AtomicBool,
+    draining: AtomicBool,
+    lanes: Vec<Arc<LaneShared>>,
+    drain_timeout: Duration,
+}
+
+impl ServerState {
+    fn total_inflight(&self) -> usize {
+        self.lanes.iter().map(|l| l.inflight.load(Ordering::SeqCst)).sum()
+    }
+
+    fn admitting(&self) -> bool {
+        !self.draining.load(Ordering::SeqCst) && !self.shutdown.load(Ordering::SeqCst)
+    }
 }
 
 /// Running server handle; dropping it shuts the server down.
 pub struct ServerHandle {
     pub addr: std::net::SocketAddr,
-    shutdown: Arc<std::sync::atomic::AtomicBool>,
+    state: Arc<ServerState>,
     accept_thread: Option<JoinHandle<()>>,
     dispatch_threads: Vec<JoinHandle<()>>,
 }
@@ -79,8 +126,20 @@ impl ServerHandle {
         self.stop();
     }
 
+    /// Stop admitting new queries without shutting down (what the wire
+    /// `drain` verb does; exposed for embedders).
+    pub fn start_drain(&self) {
+        self.state.draining.store(true, Ordering::SeqCst);
+    }
+
+    /// Queries admitted and not yet answered, across all lanes.
+    pub fn inflight(&self) -> usize {
+        self.state.total_inflight()
+    }
+
     fn stop(&mut self) {
-        self.shutdown.store(true, std::sync::atomic::Ordering::SeqCst);
+        self.state.shutdown.store(true, Ordering::SeqCst);
+        self.state.draining.store(true, Ordering::SeqCst);
         // Unblock the acceptor with a dummy connection.
         let _ = TcpStream::connect(self.addr);
         if let Some(t) = self.accept_thread.take() {
@@ -124,23 +183,45 @@ where
     let listener = TcpListener::bind(&cfg.addr)
         .map_err(|e| anyhow::anyhow!("binding {}: {e}", cfg.addr))?;
     let addr = listener.local_addr()?;
-    let shutdown = Arc::new(std::sync::atomic::AtomicBool::new(false));
     let lanes = cfg.lanes.max(1);
+    let max_inflight = cfg.max_inflight_per_lane.max(1);
+    let state = Arc::new(ServerState {
+        shutdown: AtomicBool::new(false),
+        draining: AtomicBool::new(false),
+        lanes: (0..lanes)
+            .map(|lane| {
+                Arc::new(LaneShared {
+                    inflight: AtomicUsize::new(0),
+                    snapshot: Mutex::new(proto::LaneStats {
+                        lane,
+                        policy: String::new(),
+                        inflight: 0,
+                        batches: 0,
+                        queries: 0,
+                        groups: 0,
+                        grouping_cost_us: 0,
+                        cache: Default::default(),
+                    }),
+                })
+            })
+            .collect(),
+        drain_timeout: cfg.drain_timeout,
+    });
     let factory = Arc::new(session_factory);
 
     // One dispatch lane per thread: build the lane's session, signal
     // readiness, then batch + search until shutdown.
     let window = cfg.batch_window;
     let batch_max = cfg.batch_max;
-    let mut lane_txs: Vec<Sender<Request>> = Vec::with_capacity(lanes);
+    let mut lane_txs: Vec<Sender<Work>> = Vec::with_capacity(lanes);
     let mut dispatch_threads = Vec::with_capacity(lanes);
     let (ready_tx, ready_rx) = std::sync::mpsc::channel::<anyhow::Result<()>>();
     for lane in 0..lanes {
-        let (req_tx, req_rx) = std::sync::mpsc::channel::<Request>();
+        let (req_tx, req_rx) = std::sync::mpsc::channel::<Work>();
         lane_txs.push(req_tx);
         let factory = Arc::clone(&factory);
         let ready_tx = ready_tx.clone();
-        let dispatch_shutdown = Arc::clone(&shutdown);
+        let lane_state = Arc::clone(&state);
         let thread = std::thread::Builder::new()
             .name(format!("cagr-dispatch-{lane}"))
             .spawn(move || {
@@ -154,7 +235,7 @@ where
                         return;
                     }
                 };
-                dispatch_loop(&mut session, lane, req_rx, window, batch_max, dispatch_shutdown)
+                dispatch_loop(&mut session, lane, req_rx, window, batch_max, lane_state)
             })
             .expect("spawn dispatch thread");
         dispatch_threads.push(thread);
@@ -166,7 +247,7 @@ where
             Ok(Err(e)) => {
                 // Abort startup: wake every healthy lane (dropping the
                 // senders disconnects their queues) and surface the error.
-                shutdown.store(true, std::sync::atomic::Ordering::SeqCst);
+                state.shutdown.store(true, Ordering::SeqCst);
                 drop(lane_txs);
                 for t in dispatch_threads {
                     let _ = t.join();
@@ -179,22 +260,26 @@ where
 
     // Accept thread: one handler thread per connection, pinned to a lane
     // round-robin so a connection's requests always batch in one lane (and
-    // its responses therefore keep arriving in request order).
-    let accept_shutdown = Arc::clone(&shutdown);
+    // its admitted responses therefore keep arriving in request order).
+    let accept_state = Arc::clone(&state);
     let accept_thread = std::thread::Builder::new()
         .name("cagr-accept".to_string())
         .spawn(move || {
             let mut next_lane = 0usize;
             for stream in listener.incoming() {
-                if accept_shutdown.load(std::sync::atomic::Ordering::SeqCst) {
+                if accept_state.shutdown.load(Ordering::SeqCst) {
                     break;
                 }
                 let Ok(stream) = stream else { continue };
-                let tx = lane_txs[next_lane % lane_txs.len()].clone();
+                let lane = next_lane % accept_state.lanes.len();
+                let tx = lane_txs[lane].clone();
                 next_lane = next_lane.wrapping_add(1);
+                let conn_state = Arc::clone(&accept_state);
                 std::thread::Builder::new()
                     .name("cagr-conn".to_string())
-                    .spawn(move || handle_connection(stream, tx))
+                    .spawn(move || {
+                        handle_connection(stream, tx, conn_state, lane, max_inflight)
+                    })
                     .ok();
             }
         })
@@ -202,29 +287,74 @@ where
 
     Ok(ServerHandle {
         addr,
-        shutdown,
+        state,
         accept_thread: Some(accept_thread),
         dispatch_threads,
     })
 }
 
+/// True when the request's deadline (if any) has elapsed at `now`.
+fn deadline_expired(work: &Work, now: Instant) -> bool {
+    match work.request.options.deadline_ms {
+        Some(ms) => now.duration_since(work.received_at) > Duration::from_millis(ms),
+        None => false,
+    }
+}
+
+/// Whether a request must run on the single-query path: it asked to skip
+/// grouping, or carries options the grouped batch path cannot honor.
+fn wants_bypass(req: &SearchRequest, session_top_k: usize) -> bool {
+    req.options.no_group
+        || req.options.nprobe.is_some()
+        || req.options.top_k.is_some_and(|k| k > session_top_k)
+}
+
+fn error_line(code: ErrorCode, message: impl Into<String>, query_id: Option<usize>) -> String {
+    Reply::Error(ErrorReply::new(code, message, query_id)).dump()
+}
+
+fn deadline_error(id: usize, elapsed: Duration, budget_ms: u64) -> String {
+    error_line(
+        ErrorCode::DeadlineExceeded,
+        format!("deadline {budget_ms}ms exceeded after {}ms", elapsed.as_millis()),
+        Some(id),
+    )
+}
+
 fn dispatch_loop(
     session: &mut Session,
     lane: usize,
-    req_rx: Receiver<Request>,
+    req_rx: Receiver<Work>,
     window: Duration,
     batch_max: usize,
-    shutdown: Arc<std::sync::atomic::AtomicBool>,
+    state: Arc<ServerState>,
 ) {
+    let lane_shared = Arc::clone(&state.lanes[lane]);
+    let publish = |session: &Session, lane_shared: &LaneShared| {
+        let totals = session.stats();
+        let cache = session.cache_stats();
+        let mut snap = lane_shared.snapshot.lock().unwrap();
+        snap.policy = session.policy_name().to_string();
+        snap.inflight = lane_shared.inflight.load(Ordering::SeqCst);
+        snap.batches = totals.batches;
+        snap.queries = totals.queries;
+        snap.groups = totals.groups;
+        snap.grouping_cost_us = totals.grouping_cost.as_micros() as u64;
+        snap.cache = cache;
+    };
+    publish(session, &lane_shared); // stats on an idle server report zeros + policy
     let mut batch_sizes: Vec<usize> = Vec::new();
     loop {
-        if shutdown.load(std::sync::atomic::Ordering::SeqCst) {
+        if state.shutdown.load(Ordering::SeqCst) {
             break;
         }
         // Block for the first request, then gather until window/batch_max.
         let first = match req_rx.recv_timeout(Duration::from_millis(50)) {
             Ok(r) => r,
-            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                publish(session, &lane_shared);
+                continue;
+            }
             Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
         };
         let mut pending = vec![first];
@@ -240,58 +370,142 @@ fn dispatch_loop(
             }
         }
 
-        let queries: Vec<Query> = pending.iter().map(|r| r.query.clone()).collect();
-        batch_sizes.push(queries.len());
-        match session.run_batch(&queries) {
-            Ok((outcomes, _stats)) => {
-                // Walk the batch in *request* order and route each reply to
-                // the connection that sent it: together with connection→lane
-                // pinning this guarantees every connection receives its
-                // responses in the order it issued the requests. Each
-                // outcome is consumed once, so duplicate query_ids in one
-                // batch each get their own (distinct) result.
-                let mut used = vec![false; outcomes.len()];
-                for req in &pending {
-                    let slot = outcomes
-                        .iter()
-                        .enumerate()
-                        .position(|(i, o)| !used[i] && o.report.query_id == req.query.id);
-                    if let Some(i) = slot {
-                        used[i] = true;
-                        let outcome = &outcomes[i];
-                        let hits = Json::Arr(
-                            outcome
-                                .hits
-                                .iter()
-                                .map(|h| {
-                                    obj(vec![
-                                        ("doc", Json::Num(h.doc_id as f64)),
-                                        ("distance", Json::Num(h.distance as f64)),
-                                    ])
-                                })
-                                .collect(),
-                        );
-                        let resp = obj(vec![
-                            ("query_id", outcome.report.query_id.into()),
-                            (
-                                "latency_us",
-                                Json::Num(outcome.report.latency.as_micros() as f64),
+        // Per-request reply slots, filled in three passes (deadline drops,
+        // grouped batch, single-query bypass) and emitted in request order
+        // at the end, so a connection's admitted requests are answered in
+        // the order they were sent.
+        let mut replies: Vec<Option<String>> = vec![None; pending.len()];
+
+        // Pass 1 — dequeue-time deadline check: a query whose budget
+        // elapsed while it sat in the queue skips the search entirely.
+        let dequeued_at = Instant::now();
+        for (i, work) in pending.iter().enumerate() {
+            if deadline_expired(work, dequeued_at) {
+                replies[i] = Some(deadline_error(
+                    work.request.query.id,
+                    dequeued_at.duration_since(work.received_at),
+                    work.request.options.deadline_ms.unwrap_or(0),
+                ));
+            }
+        }
+
+        // Pass 2 — the grouped batch: everything still unanswered that the
+        // batch path can honor (per-request deadline + top_k <= session's).
+        let session_top_k = session.config().top_k;
+        let grouped: Vec<usize> = (0..pending.len())
+            .filter(|&i| {
+                replies[i].is_none() && !wants_bypass(&pending[i].request, session_top_k)
+            })
+            .collect();
+        if !grouped.is_empty() {
+            let queries: Vec<Query> =
+                grouped.iter().map(|&i| pending[i].request.query.clone()).collect();
+            batch_sizes.push(queries.len());
+            match session.run_batch(&queries) {
+                Ok((outcomes, _stats)) => {
+                    let done = Instant::now();
+                    // Route each outcome to the request that produced it.
+                    // Each outcome is consumed once, so duplicate query_ids
+                    // in one batch each get their own (distinct) result.
+                    let mut used = vec![false; outcomes.len()];
+                    for &i in &grouped {
+                        let work = &pending[i];
+                        let slot = outcomes.iter().enumerate().position(|(oi, o)| {
+                            !used[oi] && o.report.query_id == work.request.query.id
+                        });
+                        replies[i] = Some(match slot {
+                            Some(oi) => {
+                                used[oi] = true;
+                                finish_reply(work, &outcomes[oi], done)
+                            }
+                            // A request the session returned no outcome for
+                            // must still be answered — a silent drop would
+                            // desynchronize pipelined clients.
+                            None => error_line(
+                                ErrorCode::Internal,
+                                "no outcome produced for query",
+                                Some(work.request.query.id),
                             ),
-                            ("group", outcome.group.into()),
-                            ("hits", hits),
-                        ]);
-                        let _ = req.reply.send(resp.dump());
+                        });
+                    }
+                }
+                Err(e) => {
+                    for &i in &grouped {
+                        replies[i] = Some(error_line(
+                            ErrorCode::Internal,
+                            format!("{e}"),
+                            Some(pending[i].request.query.id),
+                        ));
                     }
                 }
             }
-            Err(e) => {
-                let msg = obj(vec![("error", format!("{e}").into())]).dump();
-                for req in &pending {
-                    let _ = req.reply.send(msg.clone());
-                }
+        }
+
+        // Pass 3 — single-query bypass: `no_group` and option overrides.
+        for (i, work) in pending.iter().enumerate() {
+            if replies[i].is_some() {
+                continue;
             }
+            // Re-check the deadline: the grouped batch just ran, and a
+            // latency-critical query whose budget died waiting for it must
+            // skip its search, not burn one past the deadline.
+            let now = Instant::now();
+            if deadline_expired(work, now) {
+                replies[i] = Some(deadline_error(
+                    work.request.query.id,
+                    now.duration_since(work.received_at),
+                    work.request.options.deadline_ms.unwrap_or(0),
+                ));
+                continue;
+            }
+            let outcome = session.run_one(&work.request.query, &work.request.options);
+            let done = Instant::now();
+            replies[i] = Some(match outcome {
+                Ok(o) => finish_reply(work, &o, done),
+                Err(e) => error_line(
+                    ErrorCode::Internal,
+                    format!("{e}"),
+                    Some(work.request.query.id),
+                ),
+            });
+        }
+
+        // Publish counters *before* replying so a `stats` issued right
+        // after the last reply always covers this batch; then emit every
+        // reply in request order and release the admission slots. Exactly
+        // one reply per admitted request, always.
+        publish(session, &lane_shared);
+        for (work, reply) in pending.iter().zip(replies) {
+            let line = reply.unwrap_or_else(|| {
+                error_line(
+                    ErrorCode::Internal,
+                    "request fell through every dispatch pass",
+                    Some(work.request.query.id),
+                )
+            });
+            // Release the slot before writing: once a client holds the
+            // reply, the counters it can observe (stats/health/drain) no
+            // longer include the request.
+            lane_shared.inflight.fetch_sub(1, Ordering::SeqCst);
+            let _ = work.reply.send(line);
         }
     }
+    // Admitted-but-unprocessed work (shutdown mid-queue) still gets a
+    // structured reply; never a silent drop. Drain with a grace window,
+    // not just try_recv: a handler that passed its admission check just
+    // before the shutdown flag flipped may complete its send microseconds
+    // after an instantaneous drain would have finished — once the channel
+    // stays empty for the grace period, any later handler send fails
+    // (req_rx drops with this function) and the handler replies itself.
+    while let Ok(work) = req_rx.recv_timeout(Duration::from_millis(100)) {
+        lane_shared.inflight.fetch_sub(1, Ordering::SeqCst);
+        let _ = work.reply.send(error_line(
+            ErrorCode::ShuttingDown,
+            "server shutting down",
+            Some(work.request.query.id),
+        ));
+    }
+    publish(session, &lane_shared);
     // Shutdown diagnostics (stderr): demand cache behaviour + batch shape.
     let stats = session.cache_stats();
     let mean_batch = if batch_sizes.is_empty() {
@@ -312,7 +526,31 @@ fn dispatch_loop(
     );
 }
 
-fn handle_connection(stream: TcpStream, req_tx: Sender<Request>) {
+/// Build the final wire reply for a completed search: the post-search
+/// deadline check runs here (a too-late result is an error, not a success
+/// the client stopped waiting for), and a smaller requested `top_k` trims
+/// the hit list.
+fn finish_reply(work: &Work, outcome: &crate::coordinator::QueryOutcome, done: Instant) -> String {
+    if let Some(ms) = work.request.options.deadline_ms {
+        let elapsed = done.duration_since(work.received_at);
+        if elapsed > Duration::from_millis(ms) {
+            return deadline_error(work.request.query.id, elapsed, ms);
+        }
+    }
+    let mut reply = SearchReply::from_outcome(outcome);
+    if let Some(k) = work.request.options.top_k {
+        reply.hits.truncate(k);
+    }
+    Reply::Search(reply).dump()
+}
+
+fn handle_connection(
+    stream: TcpStream,
+    req_tx: Sender<Work>,
+    state: Arc<ServerState>,
+    lane: usize,
+    max_inflight: usize,
+) {
     let peer_reader = match stream.try_clone() {
         Ok(s) => s,
         Err(_) => return,
@@ -323,10 +561,7 @@ fn handle_connection(stream: TcpStream, req_tx: Sender<Request>) {
 
     // Writer side runs independently so the connection is fully pipelined:
     // a client may have many requests in flight, which is what lets the
-    // dispatch thread form real arrival batches (paper §4.1). The lane
-    // emits replies in request order (see dispatch_loop), so a connection's
-    // responses arrive in the order its requests did; `query_id` matching
-    // still works for clients that prefer it.
+    // dispatch thread form real arrival batches (paper §4.1).
     let writer_thread = std::thread::Builder::new()
         .name("cagr-conn-writer".to_string())
         .spawn(move || {
@@ -338,22 +573,105 @@ fn handle_connection(stream: TcpStream, req_tx: Sender<Request>) {
         })
         .expect("spawn connection writer");
 
+    let lane_shared = Arc::clone(&state.lanes[lane]);
     for line in reader.lines() {
         let Ok(line) = line else { break };
         if line.trim().is_empty() {
             continue;
         }
-        match parse_request(&line) {
-            Ok(query) => {
-                if req_tx.send(Request { query, reply: reply_tx.clone() }).is_err() {
-                    break;
+        let reply = match Request::parse_line(&line) {
+            Err(e) => {
+                // A bad line yields a structured error and the connection
+                // stays usable — never a silent drop that would
+                // desynchronize a pipelined client.
+                Some(error_line(ErrorCode::Malformed, e.message, e.query_id))
+            }
+            Ok(Request::Hello { version }) => Some(if version == PROTOCOL_VERSION {
+                Reply::Hello { version: PROTOCOL_VERSION }.dump()
+            } else {
+                error_line(
+                    ErrorCode::VersionMismatch,
+                    format!("server speaks v{PROTOCOL_VERSION}, client sent v{version}"),
+                    None,
+                )
+            }),
+            Ok(Request::Health) => Some(
+                Reply::Health(proto::HealthReply {
+                    status: if state.admitting() { "ok" } else { "draining" }.to_string(),
+                    version: PROTOCOL_VERSION,
+                    lanes: state.lanes.len(),
+                    inflight: state.total_inflight(),
+                })
+                .dump(),
+            ),
+            Ok(Request::Stats) => {
+                let lanes = state
+                    .lanes
+                    .iter()
+                    .map(|l| {
+                        let mut snap = l.snapshot.lock().unwrap().clone();
+                        snap.inflight = l.inflight.load(Ordering::SeqCst);
+                        snap
+                    })
+                    .collect();
+                Some(
+                    Reply::Stats(proto::StatsReply {
+                        draining: !state.admitting(),
+                        lanes,
+                    })
+                    .dump(),
+                )
+            }
+            Ok(Request::Drain) => {
+                state.draining.store(true, Ordering::SeqCst);
+                let deadline = Instant::now() + state.drain_timeout;
+                let mut remaining = state.total_inflight();
+                while remaining > 0 && Instant::now() < deadline {
+                    std::thread::sleep(Duration::from_millis(1));
+                    remaining = state.total_inflight();
+                }
+                Some(
+                    Reply::Drain(proto::DrainReply { drained: remaining == 0, remaining })
+                        .dump(),
+                )
+            }
+            Ok(Request::Search(request)) => {
+                let id = request.query.id;
+                if !state.admitting() {
+                    Some(error_line(
+                        ErrorCode::ShuttingDown,
+                        "server is draining; not admitting new queries",
+                        Some(id),
+                    ))
+                } else if !try_admit(&lane_shared.inflight, max_inflight) {
+                    Some(error_line(
+                        ErrorCode::Overloaded,
+                        format!("lane {lane} at max_inflight_per_lane={max_inflight}"),
+                        Some(id),
+                    ))
+                } else {
+                    let work = Work {
+                        request,
+                        received_at: Instant::now(),
+                        reply: reply_tx.clone(),
+                    };
+                    if req_tx.send(work).is_err() {
+                        // Lane gone (shutdown): release the slot, answer.
+                        lane_shared.inflight.fetch_sub(1, Ordering::SeqCst);
+                        Some(error_line(
+                            ErrorCode::ShuttingDown,
+                            "server shutting down",
+                            Some(id),
+                        ))
+                    } else {
+                        None // the lane will reply
+                    }
                 }
             }
-            Err(e) => {
-                let msg = obj(vec![("error", format!("{e}").into())]).dump();
-                if reply_tx.send(msg).is_err() {
-                    break;
-                }
+        };
+        if let Some(line) = reply {
+            if reply_tx.send(line).is_err() {
+                break;
             }
         }
     }
@@ -361,137 +679,71 @@ fn handle_connection(stream: TcpStream, req_tx: Sender<Request>) {
     let _ = writer_thread.join();
 }
 
-fn parse_request(line: &str) -> anyhow::Result<Query> {
-    let v = Json::parse(line).map_err(|e| anyhow::anyhow!("bad request json: {e}"))?;
-    let field = |name: &str| -> anyhow::Result<usize> {
-        v.get(name)
-            .and_then(Json::as_usize)
-            .ok_or_else(|| anyhow::anyhow!("request missing '{name}'"))
-    };
-    let tokens = match v.get("tokens").and_then(Json::as_arr) {
-        Some(arr) => arr
-            .iter()
-            .map(|t| {
-                t.as_f64()
-                    .map(|f| f as i32)
-                    .ok_or_else(|| anyhow::anyhow!("non-numeric token"))
-            })
-            .collect::<anyhow::Result<Vec<i32>>>()?,
-        None => Vec::new(),
-    };
-    Ok(Query {
-        id: field("query_id")?,
-        template: field("template").unwrap_or(0),
-        topic: field("topic").unwrap_or(0),
-        tokens,
-    })
-}
-
-/// Line-protocol client.
-pub struct Client {
-    reader: BufReader<TcpStream>,
-    writer: TcpStream,
-}
-
-/// One parsed response.
-#[derive(Debug, Clone)]
-pub struct Response {
-    pub query_id: usize,
-    pub latency_us: u64,
-    pub group: usize,
-    pub hits: Vec<(u32, f32)>,
-}
-
-impl Client {
-    pub fn connect(addr: std::net::SocketAddr) -> anyhow::Result<Client> {
-        let stream = TcpStream::connect(addr)?;
-        let reader = BufReader::new(stream.try_clone()?);
-        Ok(Client { reader, writer: stream })
-    }
-
-    /// Synchronous request/response (single query in flight).
-    pub fn search(&mut self, query: &Query) -> anyhow::Result<Response> {
-        self.send(query)?;
-        self.recv()
-    }
-
-    /// Pipelined send: many requests may be outstanding. The server
-    /// guarantees responses on a connection arrive in request order
-    /// (connection→lane pinning + request-order replies); matching by
-    /// `query_id` also works and stays robust to client-side reordering.
-    pub fn send(&mut self, query: &Query) -> anyhow::Result<()> {
-        let req = obj(vec![
-            ("query_id", query.id.into()),
-            ("template", query.template.into()),
-            ("topic", query.topic.into()),
-            (
-                "tokens",
-                Json::Arr(query.tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
-            ),
-        ]);
-        writeln!(self.writer, "{}", req.dump())?;
-        Ok(())
-    }
-
-    /// Receive the next response off the connection.
-    pub fn recv(&mut self) -> anyhow::Result<Response> {
-        let mut line = String::new();
-        self.reader.read_line(&mut line)?;
-        anyhow::ensure!(!line.is_empty(), "connection closed");
-        let v = Json::parse(line.trim()).map_err(|e| anyhow::anyhow!("bad response: {e}"))?;
-        if let Some(err) = v.get("error").and_then(Json::as_str) {
-            anyhow::bail!("server error: {err}");
+/// Reserve one admission slot unless the lane is full (compare-exchange so
+/// racing handler threads can never exceed the bound).
+fn try_admit(inflight: &AtomicUsize, max: usize) -> bool {
+    let mut cur = inflight.load(Ordering::SeqCst);
+    loop {
+        if cur >= max {
+            return false;
         }
-        Ok(Response {
-            query_id: v
-                .get("query_id")
-                .and_then(Json::as_usize)
-                .ok_or_else(|| anyhow::anyhow!("response missing query_id"))?,
-            latency_us: v.get("latency_us").and_then(Json::as_f64).unwrap_or(0.0) as u64,
-            group: v.get("group").and_then(Json::as_usize).unwrap_or(0),
-            hits: v
-                .get("hits")
-                .and_then(Json::as_arr)
-                .map(|arr| {
-                    arr.iter()
-                        .filter_map(|h| {
-                            Some((
-                                h.get("doc")?.as_f64()? as u32,
-                                h.get("distance")?.as_f64()? as f32,
-                            ))
-                        })
-                        .collect()
-                })
-                .unwrap_or_default(),
-        })
+        match inflight.compare_exchange(cur, cur + 1, Ordering::SeqCst, Ordering::SeqCst) {
+            Ok(_) => return true,
+            Err(actual) => cur = actual,
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::proto::SearchOptions;
 
-    #[test]
-    fn parse_request_full() {
-        let q = parse_request(
-            r#"{"query_id": 5, "template": 1, "topic": 2, "tokens": [1,2,3]}"#,
-        )
-        .unwrap();
-        assert_eq!(q.id, 5);
-        assert_eq!(q.template, 1);
-        assert_eq!(q.tokens, vec![1, 2, 3]);
+    fn work(id: usize, deadline_ms: Option<u64>, age: Duration) -> Work {
+        let (tx, _rx) = std::sync::mpsc::channel();
+        Work {
+            request: SearchRequest {
+                query: Query { id, template: 0, topic: 0, tokens: vec![] },
+                options: SearchOptions { deadline_ms, ..Default::default() },
+            },
+            received_at: Instant::now() - age,
+            reply: tx,
+        }
     }
 
     #[test]
-    fn parse_request_minimal() {
-        let q = parse_request(r#"{"query_id": 9}"#).unwrap();
-        assert_eq!(q.id, 9);
-        assert!(q.tokens.is_empty());
+    fn deadline_expiry_logic() {
+        let now = Instant::now();
+        assert!(!deadline_expired(&work(1, None, Duration::from_millis(500)), now));
+        assert!(!deadline_expired(&work(1, Some(1000), Duration::from_millis(10)), now));
+        assert!(deadline_expired(&work(1, Some(5), Duration::from_millis(50)), now));
     }
 
     #[test]
-    fn parse_request_rejects_garbage() {
-        assert!(parse_request("not json").is_err());
-        assert!(parse_request(r#"{"no_id": 1}"#).is_err());
+    fn bypass_detection() {
+        let plain = work(1, Some(100), Duration::ZERO);
+        assert!(!wants_bypass(&plain.request, 10), "deadline alone stays grouped");
+        let mut w = work(2, None, Duration::ZERO);
+        w.request.options.no_group = true;
+        assert!(wants_bypass(&w.request, 10));
+        let mut w = work(3, None, Duration::ZERO);
+        w.request.options.nprobe = Some(2);
+        assert!(wants_bypass(&w.request, 10));
+        let mut w = work(4, None, Duration::ZERO);
+        w.request.options.top_k = Some(5);
+        assert!(!wants_bypass(&w.request, 10), "smaller top_k truncates in-batch");
+        w.request.options.top_k = Some(25);
+        assert!(wants_bypass(&w.request, 10), "larger top_k needs the bypass path");
+    }
+
+    #[test]
+    fn admission_counter_is_race_safe_at_the_bound() {
+        let inflight = AtomicUsize::new(0);
+        assert!(try_admit(&inflight, 2));
+        assert!(try_admit(&inflight, 2));
+        assert!(!try_admit(&inflight, 2));
+        inflight.fetch_sub(1, Ordering::SeqCst);
+        assert!(try_admit(&inflight, 2));
+        assert_eq!(inflight.load(Ordering::SeqCst), 2);
     }
 }

@@ -200,6 +200,23 @@ impl Session {
         Ok((outcomes, stats))
     }
 
+    /// Search one query on the single-query path — no grouping, no batch
+    /// wait — honoring per-request option overrides. This is what the TCP
+    /// server runs for `no_group` / `nprobe` / oversized-`top_k` requests
+    /// (proto [`crate::proto::SearchOptions`]); in-process embedders can
+    /// use it for latency-critical lookups that must not wait for a plan.
+    pub fn run_one(
+        &mut self,
+        query: &Query,
+        opts: &crate::proto::SearchOptions,
+    ) -> anyhow::Result<QueryOutcome> {
+        let engine = &mut self.coordinator.engine;
+        let prepared = engine.prepare_with(std::slice::from_ref(query), opts.nprobe)?;
+        let (report, hits) = engine.search_with(&prepared[0], opts.top_k)?;
+        self.totals.queries += 1;
+        Ok(QueryOutcome { report, hits, group: 0 })
+    }
+
     /// Enqueue one query without doing any work (non-blocking).
     pub fn submit(&mut self, query: Query) {
         self.pending.push_back(query);

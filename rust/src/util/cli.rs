@@ -94,6 +94,45 @@ impl Args {
     pub fn keys(&self) -> impl Iterator<Item = &str> {
         self.opts.keys().map(|s| s.as_str()).chain(self.flags.iter().map(|s| s.as_str()))
     }
+
+    /// Parse a duration option (`"250ms"`, `"5s"`, `"1m"`, bare number =
+    /// milliseconds). See [`parse_duration`].
+    pub fn get_duration(
+        &self,
+        name: &str,
+        default: std::time::Duration,
+    ) -> anyhow::Result<std::time::Duration> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => parse_duration(v)
+                .map_err(|e| anyhow::anyhow!("--{name}: {e}")),
+        }
+    }
+}
+
+/// Parse a human duration: a number followed by an optional unit, one of
+/// `ms`, `s`, `m` (case-insensitive, whitespace-tolerant — consistent with
+/// the config enum parsers). A bare number means milliseconds.
+pub fn parse_duration(s: &str) -> anyhow::Result<std::time::Duration> {
+    let t = s.trim().to_ascii_lowercase();
+    let (digits, unit) = match t.find(|c: char| !c.is_ascii_digit() && c != '.') {
+        Some(pos) => t.split_at(pos),
+        None => (t.as_str(), "ms"),
+    };
+    let value: f64 = digits
+        .trim()
+        .parse()
+        .map_err(|_| anyhow::anyhow!("invalid duration '{s}' (examples: 250ms, 5s, 1m)"))?;
+    let ms = match unit.trim() {
+        "ms" | "" => value,
+        "s" => value * 1_000.0,
+        "m" => value * 60_000.0,
+        other => anyhow::bail!(
+            "unknown duration unit '{other}' in '{s}' (accepted: ms, s, m)"
+        ),
+    };
+    anyhow::ensure!(ms >= 0.0 && ms.is_finite(), "duration '{s}' out of range");
+    Ok(std::time::Duration::from_micros((ms * 1_000.0) as u64))
 }
 
 #[cfg(test)]
@@ -147,5 +186,27 @@ mod tests {
     fn last_occurrence_wins() {
         let a = parse("x --n 1 --n 2");
         assert_eq!(a.get("n"), Some("2"));
+    }
+
+    #[test]
+    fn durations_parse_case_insensitively() {
+        use std::time::Duration;
+        assert_eq!(parse_duration("250ms").unwrap(), Duration::from_millis(250));
+        assert_eq!(parse_duration("250").unwrap(), Duration::from_millis(250));
+        assert_eq!(parse_duration(" 5S ").unwrap(), Duration::from_secs(5));
+        assert_eq!(parse_duration("1M").unwrap(), Duration::from_secs(60));
+        assert_eq!(parse_duration("1.5s").unwrap(), Duration::from_millis(1500));
+        let err = parse_duration("5h").unwrap_err().to_string();
+        assert!(err.contains("ms") && err.contains("accepted"), "{err}");
+        assert!(parse_duration("fast").is_err());
+        let a = parse("x --drain-timeout 2s");
+        assert_eq!(
+            a.get_duration("drain-timeout", Duration::ZERO).unwrap(),
+            Duration::from_secs(2)
+        );
+        assert_eq!(
+            a.get_duration("missing", Duration::from_millis(7)).unwrap(),
+            Duration::from_millis(7)
+        );
     }
 }

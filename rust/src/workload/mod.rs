@@ -136,7 +136,7 @@ impl DatasetSpec {
 
 /// One query of a workload: latent factors + token form (+ lazily attached
 /// embedding, depending on the backend).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Query {
     pub id: usize,
     pub template: usize,

@@ -1,0 +1,491 @@
+//! Protocol conformance suite for the versioned serving protocol
+//! (`docs/PROTOCOL.md`): version handshake, malformed/truncated lines,
+//! per-request options, deadline and overload behavior, drain semantics,
+//! and the Client <-> Session wire-parity guarantee.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use cagr::client::{Client, ClientError};
+use cagr::config::{Backend, Config, DiskProfile};
+use cagr::coordinator::Mode;
+use cagr::harness::runner::ensure_dataset;
+use cagr::proto::{ErrorCode, Reply, Request, SearchOptions, PROTOCOL_VERSION};
+use cagr::server::{start, ServerConfig, ServerHandle};
+use cagr::session::Session;
+use cagr::workload::{generate_queries, DatasetSpec};
+
+fn test_cfg(tag: &str) -> (Config, DatasetSpec) {
+    let mut cfg = Config::default();
+    cfg.data_dir = std::env::temp_dir().join(format!("cagr-proto-{}-{tag}", std::process::id()));
+    cfg.clusters = 16;
+    cfg.nprobe = 4;
+    cfg.top_k = 5;
+    cfg.cache_entries = 8;
+    cfg.kmeans_iters = 4;
+    cfg.kmeans_sample = 2_000;
+    cfg.backend = Backend::Native;
+    cfg.disk_profile = DiskProfile::None;
+    (cfg, DatasetSpec::tiny(0x9A07))
+}
+
+fn launch(
+    cfg: &Config,
+    spec: &DatasetSpec,
+    lanes: usize,
+    shared_cache: Option<std::sync::Arc<cagr::cache::ShardedClusterCache>>,
+    tune: impl FnOnce(&mut ServerConfig),
+) -> ServerHandle {
+    ensure_dataset(cfg, spec).unwrap();
+    let factory = {
+        let cfg = cfg.clone();
+        let spec = spec.clone();
+        move || -> anyhow::Result<Session> {
+            let mut builder = Session::builder()
+                .config(cfg.clone())
+                .dataset(spec.clone())
+                .mode(Mode::QGP)
+                .ensure_dataset(false);
+            if let Some(cache) = &shared_cache {
+                builder = builder.shared_cache(std::sync::Arc::clone(cache));
+            }
+            builder.open()
+        }
+    };
+    let mut server_cfg = ServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        batch_window: Duration::from_millis(5),
+        batch_max: 32,
+        lanes,
+        ..Default::default()
+    };
+    tune(&mut server_cfg);
+    start(factory, server_cfg).unwrap()
+}
+
+/// Raw line-level exchange helper for tests that must step outside the
+/// typed client (bad lines, truncated writes, wrong versions).
+struct RawConn {
+    stream: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl RawConn {
+    fn connect(addr: std::net::SocketAddr) -> RawConn {
+        let stream = TcpStream::connect(addr).unwrap();
+        let reader = BufReader::new(stream.try_clone().unwrap());
+        RawConn { stream, reader }
+    }
+
+    fn send(&mut self, line: &str) {
+        writeln!(self.stream, "{line}").unwrap();
+    }
+
+    fn recv(&mut self) -> Reply {
+        let mut line = String::new();
+        self.reader.read_line(&mut line).unwrap();
+        assert!(!line.is_empty(), "connection closed unexpectedly");
+        Reply::parse_line(&line).unwrap()
+    }
+}
+
+#[test]
+fn handshake_accepts_current_version_and_rejects_others() {
+    let (cfg, spec) = test_cfg("version");
+    let handle = launch(&cfg, &spec, 1, None, |_| {});
+
+    // The typed client performs the handshake and records the version.
+    let client = Client::connect(handle.addr).unwrap();
+    assert_eq!(client.server_version(), PROTOCOL_VERSION);
+
+    // A future version is refused with a structured version-mismatch
+    // error naming the server's version — and the connection survives.
+    let mut raw = RawConn::connect(handle.addr);
+    raw.send(&Request::Hello { version: PROTOCOL_VERSION + 1 }.dump());
+    match raw.recv() {
+        Reply::Error(e) => {
+            assert_eq!(e.code, ErrorCode::VersionMismatch);
+            assert!(e.message.contains(&format!("v{PROTOCOL_VERSION}")), "{}", e.message);
+        }
+        other => panic!("expected version-mismatch error, got {other:?}"),
+    }
+    raw.send(&Request::Hello { version: PROTOCOL_VERSION }.dump());
+    assert_eq!(raw.recv(), Reply::Hello { version: PROTOCOL_VERSION });
+
+    handle.shutdown();
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}
+
+#[test]
+fn malformed_and_truncated_lines_get_structured_errors() {
+    let (cfg, spec) = test_cfg("malformed");
+    let handle = launch(&cfg, &spec, 1, None, |_| {});
+    let queries = generate_queries(&spec);
+    let mut raw = RawConn::connect(handle.addr);
+
+    // Each bad line yields exactly one malformed error; the connection
+    // stays usable throughout (no silent drops that would desynchronize a
+    // pipelined client).
+    let full = Request::Search(cagr::proto::SearchRequest::new(queries[0].clone())).dump();
+    let cases: Vec<String> = vec![
+        "this is not json".to_string(),
+        "{\"type\": \"search\"".to_string(),          // truncated JSON
+        full[..full.len() - 7].to_string(),            // truncated mid-object
+        "[1, 2, 3]".to_string(),                       // not an object
+        "{\"type\": \"teleport\"}".to_string(),        // unknown verb
+        "{\"template\": 1}".to_string(),               // no type, no query_id
+        "{\"query_id\": 41, \"tokens\": \"x\"}".to_string(), // bad field type
+    ];
+    for line in &cases {
+        raw.send(line);
+        match raw.recv() {
+            Reply::Error(e) => assert_eq!(e.code, ErrorCode::Malformed, "line: {line}"),
+            other => panic!("line {line}: expected error, got {other:?}"),
+        }
+    }
+    // The bad-field case parsed far enough to recover the id.
+    raw.send("{\"query_id\": 41, \"tokens\": \"x\"}");
+    match raw.recv() {
+        Reply::Error(e) => assert_eq!(e.query_id, Some(41)),
+        other => panic!("{other:?}"),
+    }
+
+    // Still alive: a well-formed search on the same connection succeeds.
+    raw.send(&Request::Search(cagr::proto::SearchRequest::new(queries[1].clone())).dump());
+    match raw.recv() {
+        Reply::Search(r) => assert_eq!(r.query_id, queries[1].id),
+        other => panic!("expected result, got {other:?}"),
+    }
+
+    handle.shutdown();
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}
+
+#[test]
+fn per_request_options_are_honored() {
+    let (cfg, spec) = test_cfg("options");
+    let handle = launch(&cfg, &spec, 1, None, |_| {});
+    let queries = generate_queries(&spec);
+    let mut client = Client::connect(handle.addr).unwrap();
+
+    // Smaller top_k trims the grouped-path reply.
+    let opts = SearchOptions { top_k: Some(2), ..Default::default() };
+    let r = client.search_with(&queries[0], &opts).unwrap();
+    assert_eq!(r.hits.len(), 2);
+
+    // Larger top_k than the server default runs the single-query path and
+    // is honored exactly.
+    let opts = SearchOptions { top_k: Some(9), ..Default::default() };
+    let r = client.search_with(&queries[0], &opts).unwrap();
+    assert_eq!(r.hits.len(), 9);
+
+    // no_group + nprobe=clusters: single-query path, probing everything —
+    // the reply must equal the exhaustive oracle exactly (docs and
+    // distances), proving the override reached the engine.
+    let opts = SearchOptions {
+        no_group: true,
+        nprobe: Some(cfg.clusters),
+        ..Default::default()
+    };
+    let exact = client.search_with(&queries[2], &opts).unwrap();
+    assert_eq!(exact.group, 0, "bypass path reports group 0");
+    assert_eq!(exact.hits.len(), cfg.top_k);
+
+    // A generous deadline passes untouched.
+    let opts = SearchOptions { deadline_ms: Some(60_000), ..Default::default() };
+    let r = client.search_with(&queries[3], &opts).unwrap();
+    assert_eq!(r.query_id, queries[3].id);
+
+    handle.shutdown();
+
+    let mut engine = cagr::engine::SearchEngine::open(&cfg, &spec).unwrap();
+    let prepared = engine.prepare(&queries[2..3]).unwrap();
+    let oracle = engine.exhaustive_search(&prepared[0]).unwrap();
+    assert_eq!(
+        exact.hits.iter().map(|h| (h.doc, h.distance)).collect::<Vec<_>>(),
+        oracle.iter().map(|h| (h.doc_id, h.distance)).collect::<Vec<_>>(),
+        "nprobe=clusters over the wire must match the exhaustive oracle"
+    );
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}
+
+#[test]
+fn expired_deadline_yields_deadline_exceeded() {
+    let (cfg, spec) = test_cfg("deadline");
+    // A wide batch window guarantees the request sits in the batcher
+    // longer than its 0ms budget: the dequeue-time check must fire.
+    let handle = launch(&cfg, &spec, 1, None, |sc| {
+        sc.batch_window = Duration::from_millis(30);
+    });
+    let queries = generate_queries(&spec);
+    let mut client = Client::connect(handle.addr).unwrap();
+
+    let opts = SearchOptions { deadline_ms: Some(0), ..Default::default() };
+    match client.search_with(&queries[0], &opts) {
+        Err(ClientError::Server(e)) => {
+            assert_eq!(e.code, ErrorCode::DeadlineExceeded);
+            assert_eq!(e.query_id, Some(queries[0].id));
+        }
+        other => panic!("expected deadline-exceeded, got {other:?}"),
+    }
+    // The connection is fine; an undeadlined query still succeeds.
+    let r = client.search(&queries[1]).unwrap();
+    assert_eq!(r.query_id, queries[1].id);
+
+    handle.shutdown();
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}
+
+#[test]
+fn overload_yields_structured_errors_not_hangs_or_drops() {
+    let (cfg, spec) = test_cfg("overload");
+    const MAX_INFLIGHT: usize = 2;
+    const TOTAL: usize = 24;
+    // One lane, tiny admission bound, slow batcher: pipelined requests
+    // pile up at admission while the lane sleeps in its gather window, so
+    // rejections are guaranteed.
+    let handle = launch(&cfg, &spec, 1, None, |sc| {
+        sc.max_inflight_per_lane = MAX_INFLIGHT;
+        sc.batch_window = Duration::from_millis(100);
+        sc.batch_max = 4;
+    });
+    let queries = generate_queries(&spec);
+    let mut client = Client::connect(handle.addr).unwrap();
+    for q in &queries[..TOTAL] {
+        client.submit(q).unwrap();
+    }
+
+    // Exactly one reply per request — overload must reject, not hang or
+    // silently drop.
+    let (mut ok_ids, mut overloaded_ids) = (Vec::new(), Vec::new());
+    for _ in 0..TOTAL {
+        match client.recv() {
+            Ok(r) => ok_ids.push(r.query_id),
+            Err(ClientError::Server(e)) => {
+                assert_eq!(e.code, ErrorCode::Overloaded, "{e}");
+                overloaded_ids.push(e.query_id.expect("overload error carries the id"));
+            }
+            Err(e) => panic!("unexpected client error: {e}"),
+        }
+    }
+    assert!(
+        !overloaded_ids.is_empty(),
+        "{TOTAL} pipelined queries against max_inflight={MAX_INFLIGHT} must trip admission"
+    );
+    assert!(!ok_ids.is_empty(), "admitted queries must still be answered");
+    let mut all: Vec<usize> = ok_ids.iter().chain(&overloaded_ids).copied().collect();
+    all.sort_unstable();
+    let mut want: Vec<usize> = queries[..TOTAL].iter().map(|q| q.id).collect();
+    want.sort_unstable();
+    assert_eq!(all, want, "every request answered exactly once");
+
+    // After the backlog clears, the same connection admits again. The
+    // admission slots release just after the last replies are written, so
+    // tolerate a brief Overloaded window before giving up.
+    let mut readmitted = None;
+    for _ in 0..100 {
+        match client.search(&queries[TOTAL]) {
+            Ok(r) => {
+                readmitted = Some(r);
+                break;
+            }
+            Err(ClientError::Server(e)) if e.code == ErrorCode::Overloaded => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => panic!("unexpected error while re-admitting: {e}"),
+        }
+    }
+    let r = readmitted.expect("admission never recovered after overload");
+    assert_eq!(r.query_id, queries[TOTAL].id);
+
+    handle.shutdown();
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}
+
+#[test]
+fn drain_rejects_new_queries_and_completes_in_flight() {
+    let (cfg, spec) = test_cfg("drain");
+    let handle = launch(&cfg, &spec, 1, None, |sc| {
+        // Deep gather window: the batch cannot complete before the test
+        // has observed all submissions in flight and issued the drain.
+        sc.batch_window = Duration::from_millis(300);
+        sc.drain_timeout = Duration::from_secs(10);
+    });
+    let queries = generate_queries(&spec);
+
+    // Keep a pipeline of queries in flight on one connection...
+    let mut busy = Client::connect(handle.addr).unwrap();
+    const IN_FLIGHT: usize = 8;
+    for q in &queries[..IN_FLIGHT] {
+        busy.submit(q).unwrap();
+    }
+
+    // ...wait until every one of them is admitted (the 300ms-deep batcher
+    // is still gathering, so they stay in flight), then drain from a
+    // second connection: the verb blocks until the in-flight queries
+    // completed.
+    let mut ctl = Client::connect(handle.addr).unwrap();
+    let t0 = std::time::Instant::now();
+    while ctl.health().unwrap().inflight < IN_FLIGHT {
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "submitted queries never became in-flight"
+        );
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let d = ctl.drain().unwrap();
+    assert!(d.drained, "in-flight queries must complete within the drain timeout");
+    assert_eq!(d.remaining, 0);
+
+    // The in-flight queries were all answered normally.
+    for q in &queries[..IN_FLIGHT] {
+        let r = busy.recv().unwrap();
+        assert_eq!(r.query_id, q.id);
+    }
+
+    // New queries are refused with shutting-down, on both connections.
+    for c in [&mut busy, &mut ctl] {
+        match c.search(&queries[IN_FLIGHT]) {
+            Err(ClientError::Server(e)) => assert_eq!(e.code, ErrorCode::ShuttingDown),
+            other => panic!("expected shutting-down, got {other:?}"),
+        }
+    }
+
+    // Health reflects the drained state.
+    let h = ctl.health().unwrap();
+    assert_eq!(h.status, "draining");
+    assert_eq!(h.inflight, 0);
+
+    handle.shutdown();
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}
+
+#[test]
+fn control_plane_stats_and_health_expose_counters() {
+    let (cfg, spec) = test_cfg("stats");
+    let handle = launch(&cfg, &spec, 2, None, |_| {});
+    let queries = generate_queries(&spec);
+    let mut client = Client::connect(handle.addr).unwrap();
+
+    let h = client.health().unwrap();
+    assert_eq!(h.status, "ok");
+    assert_eq!(h.version, PROTOCOL_VERSION);
+    assert_eq!(h.lanes, 2);
+
+    const N: usize = 12;
+    for q in &queries[..N] {
+        let r = client.search(q).unwrap();
+        assert_eq!(r.query_id, q.id);
+    }
+    // Snapshots are published after every batch, so by the time the last
+    // reply arrived the lane's counters cover all N queries.
+    let s = client.stats().unwrap();
+    assert!(!s.draining);
+    assert_eq!(s.lanes.len(), 2);
+    assert_eq!(s.queries(), N, "lane counters must cover the served queries");
+    // This connection is pinned to one lane; that lane saw every batch.
+    let busy = s.lanes.iter().find(|l| l.queries == N).expect("one busy lane");
+    assert_eq!(busy.policy, "qgp");
+    assert!(busy.batches >= 1);
+    assert!(busy.cache.hits + busy.cache.misses > 0, "cache counters over the wire");
+    assert_eq!(s.inflight(), 0);
+
+    handle.shutdown();
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}
+
+#[test]
+fn client_reconnect_reestablishes_connection_and_handshake() {
+    let (cfg, spec) = test_cfg("reconnect");
+    let handle = launch(&cfg, &spec, 1, None, |_| {});
+    let queries = generate_queries(&spec);
+    let mut client = Client::connect(handle.addr).unwrap();
+    let first = client.search(&queries[0]).unwrap();
+
+    // Leave a submit outstanding, then reconnect: the old connection (and
+    // its pending reply) is abandoned, the handshake runs again, and the
+    // fresh connection serves — no stale reply bleeds into the new one.
+    client.submit(&queries[1]).unwrap();
+    client.reconnect().unwrap();
+    assert_eq!(client.server_version(), PROTOCOL_VERSION);
+    let again = client.search(&queries[0]).unwrap();
+    assert_eq!(again.query_id, first.query_id);
+    assert_eq!(again.hits, first.hits, "same index, same results after reconnect");
+
+    // After shutdown the failure is typed — a transport error once the
+    // socket is gone, or a structured shutting-down reply if this
+    // connection's handler is still winding down. Never a hang or panic.
+    handle.shutdown();
+    match client.search(&queries[2]) {
+        Err(ClientError::Io(_)) | Err(ClientError::Closed) => {}
+        Err(ClientError::Server(e)) => assert_eq!(e.code, ErrorCode::ShuttingDown),
+        other => panic!("expected an error after shutdown, got {other:?}"),
+    }
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}
+
+#[test]
+fn wire_parity_with_in_process_session() {
+    // The acceptance gate: a seeded workload through `Client` against a
+    // 2-lane server (shared cache) returns bit-identical hits *and*
+    // distances to the in-process `Session` path.
+    let (cfg, spec) = test_cfg("parity");
+    ensure_dataset(&cfg, &spec).unwrap();
+    let index = cagr::index::IvfIndex::open(&cfg.dataset_dir(spec.name)).unwrap();
+    let shared = std::sync::Arc::new(cagr::cache::ShardedClusterCache::from_config(
+        cfg.cache_policy,
+        cfg.cache_entries,
+        cfg.cache_shards,
+        index.meta.read_profile_us.clone(),
+    ));
+    let handle = launch(&cfg, &spec, 2, Some(shared), |_| {});
+    let queries = generate_queries(&spec);
+    const N: usize = 40;
+
+    // Over the wire, pipelined in a window of 8.
+    let mut client = Client::connect(handle.addr).unwrap();
+    let mut served: Vec<Option<cagr::proto::SearchReply>> = vec![None; N];
+    let mut next = 0usize;
+    let mut outstanding = 0usize;
+    let mut done = 0usize;
+    while done < N {
+        while next < N && outstanding < 8 {
+            client.submit(&queries[next]).unwrap();
+            next += 1;
+            outstanding += 1;
+        }
+        let r = client.recv().unwrap();
+        outstanding -= 1;
+        assert!(served[r.query_id].is_none(), "duplicate reply for {}", r.query_id);
+        served[r.query_id] = Some(r);
+        done += 1;
+    }
+    handle.shutdown();
+
+    // In process, same seeded stream through a fresh Session.
+    let mut session = Session::builder()
+        .config(cfg.clone())
+        .dataset(spec.clone())
+        .mode(Mode::QGP)
+        .ensure_dataset(false)
+        .open()
+        .unwrap();
+    let (outcomes, _) = session.run_batch(&queries[..N]).unwrap();
+
+    for outcome in &outcomes {
+        let over_wire = served[outcome.report.query_id]
+            .as_ref()
+            .expect("every query answered over the wire");
+        let wire_hits: Vec<(u32, f32)> =
+            over_wire.hits.iter().map(|h| (h.doc, h.distance)).collect();
+        let direct_hits: Vec<(u32, f32)> =
+            outcome.hits.iter().map(|h| (h.doc_id, h.distance)).collect();
+        assert_eq!(
+            wire_hits, direct_hits,
+            "query {}: wire hits/distances diverge from in-process session",
+            outcome.report.query_id
+        );
+    }
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}

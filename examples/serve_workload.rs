@@ -78,8 +78,8 @@ fn main() -> anyhow::Result<()> {
             factory,
             ServerConfig {
                 addr: "127.0.0.1:0".to_string(),
-                batch_window: std::time::Duration::from_millis(8),
-                batch_max: cfg.batch_max,
+                window_max_wait: std::time::Duration::from_millis(8),
+                window_max_queries: cfg.batch_max,
                 ..Default::default()
             },
         )?;

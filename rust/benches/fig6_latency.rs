@@ -17,14 +17,25 @@
 //!                         fewer queries — shape check + artifact only,
 //!                         not a paper-comparable measurement
 //!   CAGR_FIG6_QUERIES=N   cap queries per run (after warmup)
+//!   CAGR_FIG6_CONNS=1     also run the connection-shape comparison when
+//!                         not in smoke mode (smoke always runs it)
+//!
+//! The connection-shape comparison drives the *TCP serving stack* with the
+//! same traffic fragmented two ways — many small connections vs few large
+//! ones — and writes `results/fig6_conns_many.json` /
+//! `results/fig6_conns_few.json`. The streaming scheduler pools queries
+//! across connections before grouping, so cache-hit ratio and latency
+//! should hold steady as traffic fragments; per-connection batching used
+//! to degrade here. CI uploads both summaries per PR so window-pooling
+//! regressions are visible.
 
 use cagr::config::{Backend, Config, DiskProfile};
 use cagr::coordinator::{ArrivalOrder, GroupingWithPrefetch};
 use cagr::harness::banner;
 use cagr::harness::runner::{ensure_dataset, run_workload};
-use cagr::metrics::{cdf, render_table, write_csv};
+use cagr::metrics::{cdf, render_table, write_csv, LatencyRecorder};
 use cagr::util::json::{obj, Json};
-use cagr::workload::{generate_queries, DatasetSpec};
+use cagr::workload::{generate_queries, DatasetSpec, Query};
 
 /// Paper-reported p99 seconds (EdgeRAG, CaGR-RAG) per dataset, Fig. 6a.
 const PAPER_P99: [(&str, f64, f64); 3] = [
@@ -32,6 +43,100 @@ const PAPER_P99: [(&str, f64, f64); 3] = [
     ("hotpotqa-sim", 1.5365, 0.7445),
     ("fever-sim", 1.287, 0.7584),
 ];
+
+/// Drive the TCP serving stack with `traffic` fragmented over `conns`
+/// pipelined connections (depth `pipeline` each); returns the end-to-end
+/// client latency samples and the server's final `stats` snapshot.
+fn serve_shape(
+    cfg: &Config,
+    spec: &DatasetSpec,
+    traffic: &[Query],
+    conns: usize,
+    pipeline: usize,
+) -> anyhow::Result<(LatencyRecorder, cagr::proto::StatsReply)> {
+    use cagr::client::{Client, ClientError};
+    use std::sync::Arc;
+
+    let index = cagr::index::IvfIndex::open(&cfg.dataset_dir(spec.name))?;
+    let cache = Arc::new(cagr::cache::ShardedClusterCache::from_config(
+        cfg.cache_policy,
+        cfg.cache_entries,
+        cfg.cache_shards,
+        index.meta.read_profile_us.clone(),
+    ));
+    let inflight = Arc::new(cagr::engine::inflight::InFlight::new());
+    let factory = {
+        let cfg = cfg.clone();
+        let spec = spec.clone();
+        move || {
+            cagr::session::Session::builder()
+                .config(cfg.clone())
+                .dataset(spec.clone())
+                .policy(GroupingWithPrefetch::default())
+                .ensure_dataset(false)
+                .shared_cache(Arc::clone(&cache))
+                .shared_inflight(Arc::clone(&inflight))
+                .open()
+        }
+    };
+    let handle = cagr::server::start(
+        factory,
+        cagr::server::ServerConfig {
+            addr: "127.0.0.1:0".to_string(),
+            window_max_wait: std::time::Duration::from_millis(10),
+            window_max_queries: cfg.batch_max,
+            lanes: 2,
+            ..Default::default()
+        },
+    )?;
+    let addr = handle.addr;
+    let mut threads = Vec::new();
+    for c in 0..conns {
+        let stripe: Vec<Query> =
+            traffic.iter().skip(c).step_by(conns).cloned().collect();
+        threads.push(std::thread::spawn(move || -> anyhow::Result<Vec<f64>> {
+            let mut client = Client::connect(addr)?;
+            let mut sent_at = std::collections::HashMap::new();
+            let mut lats = Vec::with_capacity(stripe.len());
+            let mut next = 0usize;
+            let mut done = 0usize;
+            while done < stripe.len() {
+                while next < stripe.len() && sent_at.len() < pipeline {
+                    client.submit(&stripe[next])?;
+                    sent_at.insert(stripe[next].id, std::time::Instant::now());
+                    next += 1;
+                }
+                match client.recv() {
+                    Ok(resp) => {
+                        if let Some(t0) = sent_at.remove(&resp.query_id) {
+                            lats.push(t0.elapsed().as_secs_f64());
+                        }
+                    }
+                    Err(ClientError::Server(e)) => {
+                        // Structured rejection (overload/deadline): drop
+                        // the sample, keep the pipeline in sync by id.
+                        if let Some(id) = e.query_id {
+                            sent_at.remove(&id);
+                        }
+                    }
+                    Err(e) => return Err(e.into()),
+                }
+                done += 1;
+            }
+            Ok(lats)
+        }));
+    }
+    let mut recorder = LatencyRecorder::new();
+    for t in threads {
+        for lat in t.join().expect("shape client thread")? {
+            recorder.record_secs(lat);
+        }
+    }
+    let mut ctl = Client::connect(addr)?;
+    let stats = ctl.stats()?;
+    handle.shutdown();
+    Ok((recorder, stats))
+}
 
 fn main() -> anyhow::Result<()> {
     let smoke = std::env::var("CAGR_FIG6_SMOKE").is_ok();
@@ -160,6 +265,64 @@ fn main() -> anyhow::Result<()> {
     std::fs::write("results/fig6_latency.json", summary.pretty())?;
     println!("CDF series (incl. the 95th-100th pct zoom data): results/fig6_cdf.csv");
     println!("machine-readable summary: results/fig6_latency.json");
+
+    // Connection-shape comparison over the serving stack: the same traffic
+    // fragmented across many small connections vs pooled on a few large
+    // ones. The streaming scheduler's cross-connection window should keep
+    // the two shapes close; a regression here means pooling broke.
+    if smoke || std::env::var("CAGR_FIG6_CONNS").is_ok() {
+        let spec = &specs[0];
+        let mut traffic = generate_queries(spec);
+        traffic.truncate(64);
+        let mut shape_rows = Vec::new();
+        for (label, conns, pipeline, out) in [
+            ("many-small", 8usize, 4usize, "results/fig6_conns_many.json"),
+            ("few-large", 2, 16, "results/fig6_conns_few.json"),
+        ] {
+            let (recorder, stats) = serve_shape(&cfg, spec, &traffic, conns, pipeline)?;
+            let lane0 = &stats.lanes[0];
+            let hit = lane0.cache.hit_ratio();
+            let g = &stats.scheduler;
+            shape_rows.push(vec![
+                label.to_string(),
+                conns.to_string(),
+                format!("{:.4}", recorder.mean()),
+                format!("{:.4}", recorder.p99()),
+                format!("{:.1}%", 100.0 * hit),
+                format!("{:.1}", g.mean_occupancy()),
+                g.cross_conn_groups.to_string(),
+            ]);
+            let summary = obj(vec![
+                ("bench", "fig6_conn_shapes".into()),
+                ("shape", label.into()),
+                ("dataset", spec.name.into()),
+                ("connections", conns.into()),
+                ("pipeline_depth", pipeline.into()),
+                ("queries", traffic.len().into()),
+                ("latency", recorder.summary_json()),
+                ("cache_hit_ratio", Json::Num(hit)),
+                ("shared_cache", stats.shared_cache.into()),
+                ("scheduler", g.to_json()),
+            ]);
+            std::fs::write(out, summary.pretty())?;
+        }
+        println!(
+            "\nconnection shapes (same traffic, pooled by the streaming scheduler):\n{}",
+            render_table(
+                &[
+                    "shape",
+                    "conns",
+                    "mean(s)",
+                    "p99(s)",
+                    "cache-hit",
+                    "mean-window",
+                    "cross-conn groups",
+                ],
+                &shape_rows
+            )
+        );
+        println!("summaries: results/fig6_conns_many.json, results/fig6_conns_few.json");
+    }
     if smoke {
         println!("SMOKE RUN: shape check + artifact only; not paper-comparable.");
     } else {

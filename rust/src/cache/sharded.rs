@@ -16,6 +16,15 @@
 //! sum of per-shard capacities, so `len() <= capacity()` always holds.
 //! Statistics are kept per shard and merged on read via
 //! [`CacheStats::merge`].
+//!
+//! On a cache shared across lane executors, pins are tracked per owner
+//! token ([`ShardedClusterCache::pin_as`] / `unpin_owner`): each lane's
+//! prefetcher pins under its engine's token and the dispatcher releases
+//! only that owner at a group switch, so pins from different lanes stack
+//! and release independently even though the lanes now also share one
+//! `InFlight` read registry (a sibling's prefetch a lane waits on still
+//! lands pinned under the *prefetching* lane's token — the waiting lane
+//! counts a hit and never double-pins).
 
 use std::sync::{Arc, Mutex};
 

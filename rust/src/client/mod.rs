@@ -5,8 +5,11 @@
 //! handshake at connect time, offers a blocking [`Client::search`], a
 //! pipelined [`Client::submit`] / [`Client::recv`] pair for keeping many
 //! requests in flight, the control-plane verbs ([`Client::stats`],
-//! [`Client::health`], [`Client::drain`]), and [`Client::reconnect`] for
-//! re-establishing a dropped connection to the same server.
+//! [`Client::health`], [`Client::drain`], [`Client::resume`]), a built-in
+//! exponential-backoff retry for `overloaded` rejections
+//! ([`Client::search_with_retry`] + [`RetryPolicy`]), and
+//! [`Client::reconnect`] for re-establishing a dropped connection to the
+//! same server.
 //!
 //! Errors are typed ([`ClientError`]): transport failures, protocol
 //! violations, and structured server errors ([`proto::ErrorReply`] — e.g.
@@ -32,12 +35,56 @@
 use std::collections::VecDeque;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
 
 use crate::proto::{
-    DrainReply, ErrorCode, ErrorReply, HealthReply, Reply, Request, SearchOptions, SearchReply,
-    SearchRequest, StatsReply, PROTOCOL_VERSION,
+    DrainReply, ErrorCode, ErrorReply, HealthReply, Reply, Request, ResumeReply, SearchOptions,
+    SearchReply, SearchRequest, StatsReply, PROTOCOL_VERSION,
 };
+use crate::util::rng::Rng;
 use crate::workload::Query;
+
+/// Exponential-backoff policy for retrying `overloaded` rejections
+/// ([`Client::search_with_retry`]). Delays follow "full jitter": attempt
+/// `n` sleeps a uniformly random fraction of
+/// `min(max_delay, base_delay * 2^n)`, drawn from the crate's seeded
+/// [`Rng`] so retry schedules are reproducible (per-query streams are
+/// derived from `seed ^ query_id`).
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    /// Total attempts, including the first (at least 1).
+    pub max_attempts: u32,
+    /// Backoff scale for the first retry.
+    pub base_delay: Duration,
+    /// Upper bound on any single backoff sleep.
+    pub max_delay: Duration,
+    /// Jitter seed; fix it to make a retry schedule reproducible.
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 5,
+            base_delay: Duration::from_millis(10),
+            max_delay: Duration::from_secs(1),
+            seed: 0xCA6E_7E72,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// The sleep before retry number `attempt` (0-based: the delay after
+    /// the first failure is `backoff(0, ..)`). Full jitter in
+    /// `[0, min(max_delay, base_delay * 2^attempt))`.
+    pub fn backoff(&self, attempt: u32, rng: &mut Rng) -> Duration {
+        let exp = self
+            .base_delay
+            .saturating_mul(2u32.saturating_pow(attempt.min(30)))
+            .min(self.max_delay);
+        exp.mul_f64(rng.f64())
+    }
+}
 
 /// Typed client-side failure.
 #[derive(Debug)]
@@ -175,6 +222,32 @@ impl Client {
         self.recv()
     }
 
+    /// [`Client::search_with`] wrapped in capped exponential-backoff
+    /// retries for `overloaded` rejections. Any other outcome — success or
+    /// a different error — is returned immediately. Assumes no other
+    /// submits are outstanding (each attempt is one blocking round-trip).
+    pub fn search_with_retry(
+        &mut self,
+        query: &Query,
+        options: &SearchOptions,
+        policy: &RetryPolicy,
+    ) -> Result<SearchReply, ClientError> {
+        let mut rng = Rng::new(policy.seed ^ query.id as u64);
+        let mut attempt = 0u32;
+        loop {
+            match self.search_with(query, options) {
+                Err(ClientError::Server(e))
+                    if e.code == ErrorCode::Overloaded
+                        && attempt + 1 < policy.max_attempts.max(1) =>
+                {
+                    std::thread::sleep(policy.backoff(attempt, &mut rng));
+                    attempt += 1;
+                }
+                other => return other,
+            }
+        }
+    }
+
     /// Pipelined send with server-default options: many requests may be in
     /// flight; collect replies with [`Client::recv`].
     pub fn submit(&mut self, query: &Query) -> Result<(), ClientError> {
@@ -257,6 +330,22 @@ impl Client {
         }
     }
 
+    /// Control plane: resume admission after a `drain` (the inverse verb;
+    /// rolling restarts that abort). The reply's `admitting` is false when
+    /// the server is past draining and actually shutting down.
+    pub fn resume(&mut self) -> Result<ResumeReply, ClientError> {
+        self.send_line(&Request::Resume.dump())?;
+        loop {
+            match self.read_reply()? {
+                Reply::Resume(r) => return Ok(r),
+                Reply::Error(e) if e.query_id.is_none() => {
+                    return Err(ClientError::Server(e))
+                }
+                other => self.pending.push_back(other),
+            }
+        }
+    }
+
     fn send_line(&mut self, line: &str) -> Result<(), ClientError> {
         writeln!(self.writer, "{line}")?;
         Ok(())
@@ -290,5 +379,39 @@ mod tests {
         // Typed errors convert into anyhow::Error via `?`.
         let f = || -> anyhow::Result<()> { Err(ClientError::Closed)? };
         assert!(f().is_err());
+    }
+
+    #[test]
+    fn retry_backoff_grows_is_capped_and_jittered() {
+        let policy = RetryPolicy {
+            max_attempts: 6,
+            base_delay: Duration::from_millis(10),
+            max_delay: Duration::from_millis(120),
+            seed: 7,
+        };
+        let mut rng = Rng::new(policy.seed);
+        // Every delay stays under the exponential envelope and the cap.
+        for attempt in 0..8 {
+            let d = policy.backoff(attempt, &mut rng);
+            let envelope = policy
+                .base_delay
+                .saturating_mul(2u32.saturating_pow(attempt))
+                .min(policy.max_delay);
+            assert!(d <= envelope, "attempt {attempt}: {d:?} > {envelope:?}");
+            assert!(d <= policy.max_delay);
+        }
+        // Deterministic for a fixed seed (reproducible retry schedules)...
+        let schedule = |seed: u64| -> Vec<Duration> {
+            let mut rng = Rng::new(seed);
+            (0..4).map(|a| policy.backoff(a, &mut rng)).collect()
+        };
+        assert_eq!(schedule(42), schedule(42));
+        // ...and actually jittered: not every draw collapses to the same
+        // fraction of the envelope.
+        let draws = schedule(42);
+        assert!(draws.iter().any(|d| !d.is_zero()), "all-zero jitter");
+        // Overflow-safe at absurd attempt counts.
+        let mut rng = Rng::new(1);
+        assert!(policy.backoff(u32::MAX, &mut rng) <= policy.max_delay);
     }
 }

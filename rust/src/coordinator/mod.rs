@@ -21,6 +21,7 @@ pub mod grouping;
 pub mod jaccard;
 pub mod policy;
 pub mod prefetch;
+pub mod scheduler;
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -33,6 +34,7 @@ pub use dispatcher::QueryOutcome;
 pub use grouping::{group_queries, reorder_groups_greedy, GroupPlan, QueryGroup};
 pub use policy::{ArrivalOrder, GroupingWithPrefetch, JaccardGrouping, PolicyCtx, SchedulePolicy};
 pub use prefetch::Prefetcher;
+pub use scheduler::{bypasses_window, SessionScheduler, WindowAccumulator, WindowConfig};
 
 /// Legacy coordinator operating mode (§4.4 terminology).
 ///

@@ -1,0 +1,370 @@
+//! Streaming scheduler core: cross-connection micro-batch windows.
+//!
+//! The paper's win comes from grouping queries that share cluster-access
+//! patterns — and grouping quality rises with the number of queries the
+//! grouper can see at once. Per-connection (or per-lane) batching starves
+//! it: at high connection counts each lane sees a thin slice of traffic and
+//! group quality collapses toward arrival order. This module pools queries
+//! from *all* producers into one time/size-bounded **micro-batch window**
+//! before the [`SchedulePolicy`](super::SchedulePolicy) runs, so grouping
+//! quality *improves* with traffic instead of degrading.
+//!
+//! Three pieces, shared by the TCP server and the in-process API so both
+//! run the identical core:
+//!
+//! * [`WindowConfig`] / [`WindowAccumulator`] — the pooling window itself:
+//!   opens at the first arrival, flushes when it holds
+//!   [`WindowConfig::max_queries`] or [`WindowConfig::max_wait`] elapses,
+//!   whichever comes first. Pure state machine (caller supplies `Instant`s),
+//!   so the flush discipline is unit-testable without threads.
+//! * [`bypasses_window`] — the deadline gate: a query whose remaining
+//!   `deadline_ms` budget cannot survive a full window wait must not be
+//!   pooled; it bypasses the window onto the single-query path.
+//! * [`SessionScheduler`] — drives one [`Session`] through the same
+//!   window/bypass discipline the TCP server applies across connections;
+//!   [`Session::scheduler`](crate::session::Session::scheduler) hands one
+//!   out. In-process embedders feeding queries from many logical sources
+//!   get the same pooled grouping the wire path gets.
+//!
+//! The TCP server (`crate::server`) runs the window accumulation on a
+//! dedicated scheduler thread fed by every connection handler, and hands
+//! whole flushed windows to lane executors that share one cluster cache and
+//! one cross-lane [`InFlight`](crate::engine::inflight::InFlight) registry
+//! — see `docs/SCHEDULER.md` for the full design note.
+
+use std::time::{Duration, Instant};
+
+use crate::coordinator::QueryOutcome;
+use crate::proto::SearchOptions;
+use crate::session::Session;
+use crate::workload::Query;
+
+/// Bounds of one pooling window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WindowConfig {
+    /// Flush when the window holds this many queries (paper batch bound).
+    pub max_queries: usize,
+    /// Flush when the first pooled query has waited this long.
+    pub max_wait: Duration,
+}
+
+impl Default for WindowConfig {
+    fn default() -> Self {
+        WindowConfig { max_queries: 100, max_wait: Duration::from_millis(10) }
+    }
+}
+
+/// True when a query with this deadline budget cannot survive sitting in a
+/// pooling window for the full `max_wait`: `waited` time has already
+/// elapsed since receipt, and the remainder of the budget is no larger than
+/// the worst-case window wait. Such a query must bypass the window (it
+/// would otherwise be dead on arrival at the executor). Queries without a
+/// deadline never bypass.
+pub fn bypasses_window(deadline_ms: Option<u64>, waited: Duration, max_wait: Duration) -> bool {
+    match deadline_ms {
+        Some(ms) => Duration::from_millis(ms).saturating_sub(waited) <= max_wait,
+        None => false,
+    }
+}
+
+/// Time/size-bounded accumulator for one pooling window. Generic over the
+/// pooled item so the server can pool connection-tagged work units and the
+/// in-process scheduler can pool plain queries.
+#[derive(Debug)]
+pub struct WindowAccumulator<T> {
+    cfg: WindowConfig,
+    items: Vec<T>,
+    opened_at: Option<Instant>,
+}
+
+impl<T> WindowAccumulator<T> {
+    pub fn new(cfg: WindowConfig) -> WindowAccumulator<T> {
+        WindowAccumulator {
+            cfg: WindowConfig { max_queries: cfg.max_queries.max(1), max_wait: cfg.max_wait },
+            items: Vec::new(),
+            opened_at: None,
+        }
+    }
+
+    pub fn config(&self) -> WindowConfig {
+        self.cfg
+    }
+
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// The window holds `max_queries` and must flush.
+    pub fn is_full(&self) -> bool {
+        self.items.len() >= self.cfg.max_queries
+    }
+
+    /// Pool one item; the window opens (its wait clock starts) at the first
+    /// push after a flush.
+    pub fn push(&mut self, item: T, now: Instant) {
+        if self.items.is_empty() {
+            self.opened_at = Some(now);
+        }
+        self.items.push(item);
+    }
+
+    /// Whether the window should flush at `now`: full, or open longer than
+    /// `max_wait`. An empty window is never ready.
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.items.is_empty() {
+            return false;
+        }
+        if self.is_full() {
+            return true;
+        }
+        match self.opened_at {
+            Some(t) => now.duration_since(t) >= self.cfg.max_wait,
+            None => false,
+        }
+    }
+
+    /// Time until the open window's wait bound elapses (`None` when the
+    /// window is empty; zero when already due). Drives the server's timed
+    /// receive so a sparse trickle still flushes on schedule.
+    pub fn time_left(&self, now: Instant) -> Option<Duration> {
+        let opened = self.opened_at?;
+        if self.items.is_empty() {
+            return None;
+        }
+        Some((opened + self.cfg.max_wait).saturating_duration_since(now))
+    }
+
+    /// Take the pooled window and reset for the next one.
+    pub fn take(&mut self) -> Vec<T> {
+        self.opened_at = None;
+        std::mem::take(&mut self.items)
+    }
+}
+
+/// Lifetime totals of one [`SessionScheduler`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SchedulerTotals {
+    /// Windows flushed into the session's batch pipeline.
+    pub windows: usize,
+    /// Queries pooled through windows.
+    pub pooled: usize,
+    /// Queries that bypassed the window onto the single-query path.
+    pub bypassed: usize,
+    /// Pooled queries whose deadline elapsed before their window flushed;
+    /// they skipped the search (collect them via
+    /// [`SessionScheduler::take_expired`]).
+    pub expired: usize,
+}
+
+/// One pooled submission: the query plus what the flush-time deadline
+/// check needs (mirrors the TCP server's dequeue-time pass).
+struct Pooled {
+    query: Query,
+    deadline_ms: Option<u64>,
+    received_at: Instant,
+}
+
+/// Drives one [`Session`] through the streaming-scheduler discipline: pool
+/// submissions into a micro-batch window, run the session's grouping over
+/// the pooled window at flush time, and route deadline-critical queries
+/// around the window entirely. This is the in-process twin of the TCP
+/// server's scheduler thread — identical window-formation and bypass logic,
+/// minus the sockets.
+///
+/// ```text
+/// let mut sched = session.scheduler(WindowConfig { max_queries: 64, ..Default::default() });
+/// for q in &queries {
+///     for outcome in sched.submit(q, None)? { /* deliver */ }
+/// }
+/// for outcome in sched.flush()? { /* deliver the final partial window */ }
+/// ```
+pub struct SessionScheduler<'a> {
+    session: &'a mut Session,
+    acc: WindowAccumulator<Pooled>,
+    totals: SchedulerTotals,
+    expired: Vec<Query>,
+}
+
+impl<'a> SessionScheduler<'a> {
+    pub(crate) fn new(session: &'a mut Session, cfg: WindowConfig) -> SessionScheduler<'a> {
+        SessionScheduler {
+            session,
+            acc: WindowAccumulator::new(cfg),
+            totals: SchedulerTotals::default(),
+            expired: Vec::new(),
+        }
+    }
+
+    /// Submit one query. A query whose deadline cannot survive the window
+    /// runs immediately on the single-query path and its outcome is
+    /// returned; otherwise the query pools (its deadline, if any, is
+    /// re-checked at flush), and the returned outcomes are whatever a
+    /// size-triggered flush produced (usually empty).
+    pub fn submit(
+        &mut self,
+        query: &Query,
+        deadline_ms: Option<u64>,
+    ) -> anyhow::Result<Vec<QueryOutcome>> {
+        if bypasses_window(deadline_ms, Duration::ZERO, self.acc.config().max_wait) {
+            self.totals.bypassed += 1;
+            let opts = SearchOptions { deadline_ms, ..Default::default() };
+            return self.session.run_one(query, &opts).map(|o| vec![o]);
+        }
+        self.acc.push(
+            Pooled { query: query.clone(), deadline_ms, received_at: Instant::now() },
+            Instant::now(),
+        );
+        if self.acc.is_full() {
+            self.flush()
+        } else {
+            Ok(Vec::new())
+        }
+    }
+
+    /// Flush the window if its wait bound elapsed; returns the outcomes
+    /// (empty when the window is still filling). Call this periodically
+    /// when the submission stream can go quiet.
+    pub fn poll(&mut self) -> anyhow::Result<Vec<QueryOutcome>> {
+        if self.acc.ready(Instant::now()) {
+            self.flush()
+        } else {
+            Ok(Vec::new())
+        }
+    }
+
+    /// Force-flush the pooled window through the session's grouped batch
+    /// pipeline (no-op on an empty window).
+    ///
+    /// Mirrors the TCP server's dequeue-time deadline pass: a pooled query
+    /// whose budget elapsed while it waited (the caller delayed the flush
+    /// past its `deadline_ms`) skips the search entirely — it produces no
+    /// outcome here; collect the dropped queries via
+    /// [`SessionScheduler::take_expired`].
+    pub fn flush(&mut self) -> anyhow::Result<Vec<QueryOutcome>> {
+        if self.acc.is_empty() {
+            return Ok(Vec::new());
+        }
+        let window = self.acc.take();
+        self.totals.windows += 1;
+        self.totals.pooled += window.len();
+        let now = Instant::now();
+        let mut batch = Vec::with_capacity(window.len());
+        for pooled in window {
+            let dead = pooled.deadline_ms.is_some_and(|ms| {
+                now.duration_since(pooled.received_at) > Duration::from_millis(ms)
+            });
+            if dead {
+                self.totals.expired += 1;
+                self.expired.push(pooled.query);
+            } else {
+                batch.push(pooled.query);
+            }
+        }
+        if batch.is_empty() {
+            return Ok(Vec::new());
+        }
+        let (outcomes, _stats) = self.session.run_batch(&batch)?;
+        Ok(outcomes)
+    }
+
+    /// Queries whose deadline elapsed before their window flushed, drained
+    /// (the in-process analogue of the wire `deadline-exceeded` error).
+    pub fn take_expired(&mut self) -> Vec<Query> {
+        std::mem::take(&mut self.expired)
+    }
+
+    /// Queries pooled and not yet flushed.
+    pub fn pending(&self) -> usize {
+        self.acc.len()
+    }
+
+    /// Lifetime totals (windows, pooled, bypassed, expired).
+    pub fn totals(&self) -> SchedulerTotals {
+        self.totals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_flushes_on_size() {
+        let mut acc: WindowAccumulator<u32> =
+            WindowAccumulator::new(WindowConfig { max_queries: 3, max_wait: Duration::from_secs(60) });
+        let t0 = Instant::now();
+        assert!(!acc.ready(t0), "empty window is never ready");
+        acc.push(1, t0);
+        acc.push(2, t0);
+        assert!(!acc.ready(t0));
+        acc.push(3, t0);
+        assert!(acc.is_full());
+        assert!(acc.ready(t0), "full window flushes regardless of time");
+        assert_eq!(acc.take(), vec![1, 2, 3]);
+        assert!(acc.is_empty());
+        assert!(!acc.ready(t0));
+    }
+
+    #[test]
+    fn window_flushes_on_time() {
+        let cfg = WindowConfig { max_queries: 100, max_wait: Duration::from_millis(50) };
+        let mut acc: WindowAccumulator<u32> = WindowAccumulator::new(cfg);
+        let t0 = Instant::now();
+        acc.push(7, t0);
+        assert!(!acc.ready(t0));
+        assert!(!acc.ready(t0 + Duration::from_millis(49)));
+        assert!(acc.ready(t0 + Duration::from_millis(50)));
+        // The wait clock restarts at the first push of the *next* window.
+        let _ = acc.take();
+        let t1 = t0 + Duration::from_millis(200);
+        acc.push(8, t1);
+        assert!(!acc.ready(t1 + Duration::from_millis(10)));
+        assert!(acc.ready(t1 + Duration::from_millis(50)));
+    }
+
+    #[test]
+    fn time_left_counts_down_to_zero() {
+        let cfg = WindowConfig { max_queries: 10, max_wait: Duration::from_millis(40) };
+        let mut acc: WindowAccumulator<u32> = WindowAccumulator::new(cfg);
+        let t0 = Instant::now();
+        assert_eq!(acc.time_left(t0), None, "empty window has no deadline");
+        acc.push(1, t0);
+        assert_eq!(acc.time_left(t0), Some(Duration::from_millis(40)));
+        assert_eq!(
+            acc.time_left(t0 + Duration::from_millis(15)),
+            Some(Duration::from_millis(25))
+        );
+        assert_eq!(acc.time_left(t0 + Duration::from_millis(90)), Some(Duration::ZERO));
+    }
+
+    #[test]
+    fn zero_max_queries_is_clamped() {
+        let mut acc: WindowAccumulator<u32> =
+            WindowAccumulator::new(WindowConfig { max_queries: 0, max_wait: Duration::ZERO });
+        let t0 = Instant::now();
+        acc.push(1, t0);
+        assert!(acc.is_full(), "clamped to 1: every push flushes");
+    }
+
+    #[test]
+    fn deadline_bypass_rule() {
+        let w = Duration::from_millis(10);
+        // No deadline never bypasses.
+        assert!(!bypasses_window(None, Duration::ZERO, w));
+        // Budget comfortably above the window wait: pool it.
+        assert!(!bypasses_window(Some(100), Duration::ZERO, w));
+        // Budget at or under the window wait: cannot survive, bypass.
+        assert!(bypasses_window(Some(10), Duration::ZERO, w));
+        assert!(bypasses_window(Some(0), Duration::ZERO, w));
+        // Time already waited eats the budget.
+        assert!(bypasses_window(Some(100), Duration::from_millis(95), w));
+        assert!(!bypasses_window(Some(100), Duration::from_millis(50), w));
+        // Degenerate zero-wait window only diverts already-expired budgets.
+        assert!(!bypasses_window(Some(5), Duration::ZERO, Duration::ZERO));
+        assert!(bypasses_window(Some(5), Duration::from_millis(5), Duration::ZERO));
+    }
+}

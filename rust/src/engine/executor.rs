@@ -6,9 +6,12 @@
 //! not `Send`). The fetch pipeline runs a bounded window ahead of the
 //! scoring cursor so a large group cannot flood the cache, and every read
 //! goes through [`fetch_cluster`], so the [`InFlight`] registry
-//! deduplicates races against the opportunistic prefetcher and against
-//! sibling lanes: a cluster needed by five grouped queries is read from
-//! disk once and scored for all five.
+//! deduplicates races against the opportunistic prefetcher and — when the
+//! server shares one registry across lane engines
+//! (`Session::builder().shared_inflight(..)`) — against sibling lanes
+//! executing other windows: a cluster needed by five grouped queries is
+//! read from disk once and scored for all five, and a cluster two lanes
+//! miss on concurrently is read once server-wide.
 //!
 //! Accounting contract (the parity properties in rust/tests/properties.rs):
 //!

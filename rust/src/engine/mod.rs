@@ -26,7 +26,12 @@
 //! disk model keeps its own mutex (it owns the deterministic latency RNG),
 //! and the [`inflight::InFlight`] registry deduplicates concurrent reads of
 //! the same cluster across all of those actors — whoever loses the claim
-//! race waits for the winner's read instead of issuing a second one.
+//! race waits for the winner's read instead of issuing a second one. A
+//! multi-lane server passes every lane engine the *same* registry
+//! ([`SearchEngine::open_shared`] /
+//! `Session::builder().shared_inflight(..)`) alongside the shared cache,
+//! so the dedup holds server-wide: a cluster two lanes miss on
+//! concurrently is still read from disk exactly once.
 //!
 //! Latency accounting under overlap: each unique fetch's simulated disk
 //! time is attributed once and amortized across the group members that
@@ -196,15 +201,19 @@ impl SearchEngine {
     /// cost table is the offline read-latency profile from `meta.json`
     /// (EdgeRAG §4.1; zeros if the index was never profiled).
     pub fn open(cfg: &Config, spec: &DatasetSpec) -> anyhow::Result<SearchEngine> {
-        Self::open_shared(cfg, spec, None)
+        Self::open_shared(cfg, spec, None, None)
     }
 
     /// Like [`SearchEngine::open`], but serve over an externally owned
-    /// cache (multi-lane servers share one cache across lane engines).
+    /// cache and/or in-flight read registry (multi-lane servers share both
+    /// across lane engines, so a cluster is read from disk at most once
+    /// server-wide — without the shared registry two lanes missing on the
+    /// same cluster concurrently would each issue the read).
     pub fn open_shared(
         cfg: &Config,
         spec: &DatasetSpec,
         shared_cache: Option<Arc<ShardedClusterCache>>,
+        shared_inflight: Option<Arc<inflight::InFlight>>,
     ) -> anyhow::Result<SearchEngine> {
         let index = IvfIndex::open(&cfg.dataset_dir(spec.name))?;
         let compute = Compute::new(cfg.backend, &cfg.artifacts_dir, &cfg.encoder_model, spec)?;
@@ -217,7 +226,7 @@ impl SearchEngine {
             index.meta.embedding,
             want
         );
-        Self::assemble_shared(cfg, spec, index, compute, shared_cache)
+        Self::assemble_shared(cfg, spec, index, compute, shared_cache, shared_inflight)
     }
 
     /// Assemble from parts (tests build tiny indexes directly).
@@ -227,16 +236,18 @@ impl SearchEngine {
         index: IvfIndex,
         compute: Compute,
     ) -> anyhow::Result<SearchEngine> {
-        Self::assemble_shared(cfg, spec, index, compute, None)
+        Self::assemble_shared(cfg, spec, index, compute, None, None)
     }
 
-    /// Assemble from parts over an optional externally owned cache.
+    /// Assemble from parts over an optional externally owned cache and
+    /// in-flight registry.
     pub fn assemble_shared(
         cfg: &Config,
         spec: &DatasetSpec,
         index: IvfIndex,
         compute: Compute,
         shared_cache: Option<Arc<ShardedClusterCache>>,
+        shared_inflight: Option<Arc<inflight::InFlight>>,
     ) -> anyhow::Result<SearchEngine> {
         cfg.validate()?;
         anyhow::ensure!(
@@ -264,7 +275,7 @@ impl SearchEngine {
             compute,
             cache,
             disk: Arc::new(Mutex::new(disk)),
-            inflight: Arc::new(inflight::InFlight::new()),
+            inflight: shared_inflight.unwrap_or_else(|| Arc::new(inflight::InFlight::new())),
             pin_owner: crate::cache::next_pin_owner(),
             io_pool,
         })

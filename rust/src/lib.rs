@@ -4,13 +4,15 @@
 //! for Disk-based Vector Search in RAG Systems"* (Jeong et al., 2025) as a
 //! three-layer rust + JAX + Pallas stack:
 //!
-//! * **Layer 3 (this crate)** — the serving stack: dynamic batching,
+//! * **Layer 3 (this crate)** — the serving stack: a streaming scheduler
+//!   pooling queries from all connections into micro-batch windows,
 //!   context-aware query grouping by Jaccard similarity of cluster-access
-//!   sets, opportunistic cluster prefetching across group switches, a
-//!   parallel pipelined group executor over a lock-striped cluster cache
-//!   (`Config::io_workers` / `Config::cache_shards`), a disk-based IVF
-//!   index with pluggable replacement policies, a multi-lane TCP
-//!   front-end, and the EdgeRAG baseline.
+//!   sets over the pooled window, opportunistic cluster prefetching across
+//!   group switches, a parallel pipelined group executor over a
+//!   lock-striped cluster cache (`Config::io_workers` /
+//!   `Config::cache_shards`) with a server-wide in-flight read registry,
+//!   a disk-based IVF index with pluggable replacement policies, a
+//!   multi-lane TCP front-end, and the EdgeRAG baseline.
 //! * **Layer 2 (python/compile/model.py)** — the embedding encoder and
 //!   scoring graphs in JAX, AOT-lowered to HLO text once at build time.
 //! * **Layer 1 (python/compile/kernels/)** — Pallas kernels for the scoring
@@ -47,15 +49,27 @@
 //!
 //! ## Serving over the wire
 //!
-//! The TCP front-end ([`server`]) and the client library ([`client`])
-//! share one versioned, typed protocol ([`proto`], spec in
-//! `docs/PROTOCOL.md`): a version handshake, per-request options
-//! (`top_k`, `nprobe`, `deadline_ms`, `no_group`), structured error codes
-//! (`overloaded`, `deadline-exceeded`, ...), bounded per-lane admission,
-//! and the control-plane verbs `stats` / `health` / `drain`:
+//! The TCP front-end ([`server`]) runs the **streaming scheduler core**
+//! (`coordinator::scheduler`, design note in `docs/SCHEDULER.md`): every
+//! connection feeds one time/size-bounded micro-batch window, the active
+//! [`coordinator::SchedulePolicy`] groups the *pooled* window — so group
+//! quality improves with traffic instead of degrading with connection
+//! count — and lane executors share one cluster cache plus one in-flight
+//! read registry, so a cluster is read from disk at most once
+//! server-wide. Deadline-critical queries bypass the window; admission is
+//! a global budget with a per-connection fairness bound; a per-connection
+//! sequencer keeps replies in request order. The in-process twin is
+//! [`session::Session::scheduler`] — both run the identical window logic.
+//!
+//! The server and the client library ([`client`]) share one versioned,
+//! typed protocol ([`proto`], spec in `docs/PROTOCOL.md`): a version
+//! handshake, per-request options (`top_k`, `nprobe`, `deadline_ms`,
+//! `no_group`), structured error codes (`overloaded`,
+//! `deadline-exceeded`, ...), and the control-plane verbs `stats` /
+//! `health` / `drain` / `resume`:
 //!
 //! ```text
-//! use cagr::client::Client;
+//! use cagr::client::{Client, RetryPolicy};
 //! use cagr::proto::SearchOptions;
 //!
 //! let mut client = Client::connect(addr)?;          // handshake included
@@ -65,12 +79,16 @@
 //! let opts = SearchOptions { no_group: true, deadline_ms: Some(50), ..Default::default() };
 //! let reply = client.search_with(&query, &opts)?;
 //!
+//! // Overload-tolerant: capped exponential backoff with jitter.
+//! let reply = client.search_with_retry(&query, &opts, &RetryPolicy::default())?;
+//!
 //! // Pipelined: many in flight, replies matched by query id.
 //! for q in &queries { client.submit(q)?; }
 //! for _ in &queries { let r = client.recv()?; }
 //!
-//! let stats = client.stats()?;                      // control plane
-//! client.drain()?;                                  // graceful stop
+//! let stats = client.stats()?;                      // window gauges, cache views
+//! client.drain()?;                                  // graceful stop...
+//! client.resume()?;                                 // ...or abort the restart
 //! ```
 //!
 //! Start at `examples/quickstart.rs` for an end-to-end in-process tour and

@@ -3,10 +3,13 @@
 //! Subcommands:
 //!   build-index  --dataset <name|all> [--backend native|pjrt] ...
 //!   serve        --dataset <name> [--addr host:port] [--policy baseline|qg|qgp]
-//!                [--lanes N] [--max-inflight N] [--drain-timeout 5s]
+//!                [--lanes N] [--window-ms 10] [--window-queries N]
+//!                [--max-inflight N] [--max-inflight-per-conn N]
+//!                [--drain-timeout 5s]
 //!   client       --addr host:port [--queries N] [--dataset <name>]
 //!                [--top-k K] [--nprobe N] [--deadline 100ms] [--no-group]
-//!                [--stats] [--health] [--drain]      drive a running server
+//!                [--retries N] [--stats] [--health] [--drain] [--resume]
+//!                drive a running server
 //!   search       --dataset <name> [--queries N] [--policy ..]   one-shot run
 //!   replay       --trace <file> [--policy ..]                   replay a trace
 //!   record-trace --dataset <name> --out <file>
@@ -137,17 +140,20 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let lanes = args.get_usize("lanes", 1)?.max(1);
     // Provision in the foreground (build progress on the caller's tty),
     // then hand the server a session factory; each lane's session is
-    // constructed on its own dispatch thread (PJRT is not Send). Multiple
-    // lanes share one sharded cluster cache so they cooperate on residency.
+    // constructed on its own executor thread (PJRT is not Send). Multiple
+    // lanes share one sharded cluster cache *and* one in-flight read
+    // registry, so a cluster is read from disk at most once server-wide.
     runner::ensure_dataset(&cfg, spec)?;
-    let shared_cache = if lanes > 1 {
+    let shared = if lanes > 1 {
         let index = cagr::index::IvfIndex::open(&cfg.dataset_dir(spec.name))?;
-        Some(std::sync::Arc::new(cagr::cache::ShardedClusterCache::from_config(
+        let cache = std::sync::Arc::new(cagr::cache::ShardedClusterCache::from_config(
             cfg.cache_policy,
             cfg.cache_entries,
             cfg.cache_shards,
             index.meta.read_profile_us.clone(),
-        )))
+        ));
+        let inflight = std::sync::Arc::new(cagr::engine::inflight::InFlight::new());
+        Some((cache, inflight))
     } else {
         None
     };
@@ -160,8 +166,10 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
                 .dataset(spec.clone())
                 .boxed_policy(mode.to_policy())
                 .ensure_dataset(false);
-            if let Some(cache) = &shared_cache {
-                builder = builder.shared_cache(std::sync::Arc::clone(cache));
+            if let Some((cache, inflight)) = &shared {
+                builder = builder
+                    .shared_cache(std::sync::Arc::clone(cache))
+                    .shared_inflight(std::sync::Arc::clone(inflight));
             }
             builder.open()
         }
@@ -169,19 +177,24 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let defaults = server::ServerConfig::default();
     let server_cfg = server::ServerConfig {
         addr: args.get_or("addr", "127.0.0.1:7471").to_string(),
-        batch_window: std::time::Duration::from_millis(args.get_u64("batch-window-ms", 10)?),
-        batch_max: cfg.batch_max,
+        window_max_wait: std::time::Duration::from_millis(args.get_u64("window-ms", 10)?),
+        window_max_queries: args.get_usize("window-queries", cfg.batch_max)?.max(1),
         lanes,
-        max_inflight_per_lane: args
-            .get_usize("max-inflight", defaults.max_inflight_per_lane)?
+        max_inflight: args.get_usize("max-inflight", defaults.max_inflight)?.max(1),
+        max_inflight_per_conn: args
+            .get_usize("max-inflight-per-conn", defaults.max_inflight_per_conn)?
             .max(1),
         drain_timeout: args.get_duration("drain-timeout", defaults.drain_timeout)?,
     };
-    let max_inflight = server_cfg.max_inflight_per_lane;
+    let (max_inflight, max_per_conn, window_q) = (
+        server_cfg.max_inflight,
+        server_cfg.max_inflight_per_conn,
+        server_cfg.window_max_queries,
+    );
     let handle = server::start(factory, server_cfg)?;
     println!(
         "cagr serving {} on {} (proto=v{}, policy={}, cache={}x{}, theta={}, lanes={}, \
-         io-workers={}, max-inflight/lane={})",
+         io-workers={}, window={}q, max-inflight={} (per-conn {}))",
         spec.name,
         handle.addr,
         cagr::proto::PROTOCOL_VERSION,
@@ -191,7 +204,9 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         cfg.theta,
         lanes,
         cfg.io_workers,
-        max_inflight
+        window_q,
+        max_inflight,
+        max_per_conn
     );
     println!("press ctrl-c to stop");
     loop {
@@ -200,11 +215,11 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 }
 
 /// Drive a running server over the versioned wire protocol: control-plane
-/// verbs (`--stats`, `--health`, `--drain`) or a pipelined query stream
-/// with optional per-request knobs (`--top-k`, `--nprobe`, `--deadline`,
-/// `--no-group`).
+/// verbs (`--stats`, `--health`, `--drain`, `--resume`) or a pipelined
+/// query stream with optional per-request knobs (`--top-k`, `--nprobe`,
+/// `--deadline`, `--no-group`, `--retries` for overload backoff).
 fn cmd_client(args: &Args) -> anyhow::Result<()> {
-    use cagr::client::{Client, ClientError};
+    use cagr::client::{Client, ClientError, RetryPolicy};
     use cagr::proto::SearchOptions;
 
     let addr: std::net::SocketAddr = args
@@ -224,7 +239,28 @@ fn cmd_client(args: &Args) -> anyhow::Result<()> {
     }
     if args.flag("stats") {
         let s = client.stats()?;
-        println!("stats: draining={} total-queries={}", s.draining, s.queries());
+        println!(
+            "stats: draining={} total-queries={} shared-cache={}",
+            s.draining,
+            s.queries(),
+            s.shared_cache
+        );
+        if s.shared_cache {
+            println!("  (lanes share one cache: per-lane cache counters are views, don't sum)");
+        }
+        let g = &s.scheduler;
+        println!(
+            "  scheduler: windows={} pooled={} mean-occupancy={:.1} max-occupancy={} \
+             multi-conn-windows={} groups={} cross-conn-groups={} express={}",
+            g.windows,
+            g.window_queries,
+            g.mean_occupancy(),
+            g.max_occupancy,
+            g.multi_conn_windows,
+            g.groups,
+            g.cross_conn_groups,
+            g.express,
+        );
         for l in &s.lanes {
             println!(
                 "  lane {}: policy={} inflight={} batches={} queries={} groups={} \
@@ -248,6 +284,11 @@ fn cmd_client(args: &Args) -> anyhow::Result<()> {
         println!("drain: drained={} remaining={}", d.drained, d.remaining);
         return Ok(());
     }
+    if args.flag("resume") {
+        let r = client.resume()?;
+        println!("resume: admitting={}", r.admitting);
+        return Ok(());
+    }
 
     // Query mode: send a slice of the dataset's canonical query stream.
     let spec = DatasetSpec::by_name(args.get_or("dataset", "nq-sim"))?;
@@ -267,6 +308,13 @@ fn cmd_client(args: &Args) -> anyhow::Result<()> {
         no_group: args.flag("no-group"),
     };
     let queries = generate_queries(&spec);
+    // Overload handling: with --retries N, an overloaded rejection is
+    // resubmitted up to N times with the client library's jittered
+    // exponential backoff instead of being counted as rejected.
+    let retries = args.get_usize("retries", 0)? as u32;
+    let retry_policy = RetryPolicy::default();
+    let mut retry_rng = cagr::util::rng::Rng::new(0xC11E_27);
+    let mut attempts: std::collections::HashMap<usize, u32> = std::collections::HashMap::new();
     let mut recorder = cagr::metrics::LatencyRecorder::new();
     let (mut ok, mut rejected) = (0usize, 0usize);
     let mut next = 0usize;
@@ -282,14 +330,29 @@ fn cmd_client(args: &Args) -> anyhow::Result<()> {
             Ok(reply) => {
                 recorder.record_secs(reply.latency_us as f64 / 1e6);
                 ok += 1;
+                outstanding -= 1;
             }
             Err(ClientError::Server(e)) => {
-                eprintln!("  {e}");
-                rejected += 1;
+                let attempt = e.query_id.map(|id| *attempts.entry(id).or_insert(0));
+                match (e.code, e.query_id, attempt) {
+                    (cagr::proto::ErrorCode::Overloaded, Some(id), Some(a))
+                        if a < retries && id < n =>
+                    {
+                        std::thread::sleep(retry_policy.backoff(a, &mut retry_rng));
+                        attempts.insert(id, a + 1);
+                        client.submit_with(&queries[id], &opts)?;
+                        // One reply consumed, one request resubmitted:
+                        // outstanding is unchanged, nothing is counted yet.
+                    }
+                    _ => {
+                        eprintln!("  {e}");
+                        rejected += 1;
+                        outstanding -= 1;
+                    }
+                }
             }
             Err(e) => return Err(e.into()),
         }
-        outstanding -= 1;
     }
     let wall = t0.elapsed().as_secs_f64();
     println!(

@@ -47,6 +47,84 @@ impl SearchReport {
     }
 }
 
+/// Gauges describing the streaming scheduler's micro-batch windows: how
+/// full the cross-connection pooling window runs, how often groups span
+/// more than one connection (the quantity the pooled scheduler exists to
+/// raise — per-lane batching could never produce one), and how much
+/// traffic bypasses the window for deadline or option reasons.
+///
+/// The TCP server accumulates one instance behind a mutex and publishes it
+/// through the `stats` control verb ([`crate::proto::StatsReply`]).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct WindowGauges {
+    /// Micro-batch windows dispatched.
+    pub windows: u64,
+    /// Queries pooled through windows (mean occupancy = this / windows).
+    pub window_queries: u64,
+    /// Largest window dispatched.
+    pub max_occupancy: u64,
+    /// Windows that pooled queries from more than one connection.
+    pub multi_conn_windows: u64,
+    /// Schedule groups observed across all windows.
+    pub groups: u64,
+    /// Groups whose members came from more than one connection.
+    pub cross_conn_groups: u64,
+    /// Queries that bypassed the window (deadline too tight to survive the
+    /// window wait, or per-request options forcing the single-query path).
+    pub express: u64,
+}
+
+impl WindowGauges {
+    /// Record one dispatched window.
+    pub fn record_window(
+        &mut self,
+        occupancy: usize,
+        distinct_conns: usize,
+        groups: usize,
+        cross_conn_groups: usize,
+    ) {
+        self.windows += 1;
+        self.window_queries += occupancy as u64;
+        self.max_occupancy = self.max_occupancy.max(occupancy as u64);
+        if distinct_conns > 1 {
+            self.multi_conn_windows += 1;
+        }
+        self.groups += groups as u64;
+        self.cross_conn_groups += cross_conn_groups as u64;
+    }
+
+    /// Record one query dispatched around the window.
+    pub fn record_express(&mut self) {
+        self.express += 1;
+    }
+
+    /// Mean queries per window (0 when no window was dispatched yet).
+    pub fn mean_occupancy(&self) -> f64 {
+        if self.windows == 0 {
+            0.0
+        } else {
+            self.window_queries as f64 / self.windows as f64
+        }
+    }
+
+    /// The canonical JSON form — used by the wire protocol's `stats` reply
+    /// and the bench artifacts, so the two can never drift apart.
+    /// `mean_occupancy` is included as a derived convenience field;
+    /// parsers reconstruct the gauges from the counter fields alone.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("windows", Json::Num(self.windows as f64)),
+            ("window_queries", Json::Num(self.window_queries as f64)),
+            ("mean_occupancy", Json::Num(self.mean_occupancy())),
+            ("max_occupancy", Json::Num(self.max_occupancy as f64)),
+            ("multi_conn_windows", Json::Num(self.multi_conn_windows as f64)),
+            ("groups", Json::Num(self.groups as f64)),
+            ("cross_conn_groups", Json::Num(self.cross_conn_groups as f64)),
+            ("express", Json::Num(self.express as f64)),
+        ])
+    }
+}
+
 /// A set of latency samples with percentile/summary queries.
 #[derive(Debug, Clone, Default)]
 pub struct LatencyRecorder {
@@ -276,6 +354,23 @@ mod tests {
         let text = std::fs::read_to_string(&path).unwrap();
         assert_eq!(text, "a,b\n1,2\n");
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn window_gauges_accumulate() {
+        let mut g = WindowGauges::default();
+        assert_eq!(g.mean_occupancy(), 0.0);
+        g.record_window(8, 3, 2, 1); // 8 queries from 3 conns, 2 groups
+        g.record_window(4, 1, 4, 0); // single-connection window
+        g.record_express();
+        assert_eq!(g.windows, 2);
+        assert_eq!(g.window_queries, 12);
+        assert_eq!(g.max_occupancy, 8);
+        assert_eq!(g.multi_conn_windows, 1);
+        assert_eq!(g.groups, 6);
+        assert_eq!(g.cross_conn_groups, 1);
+        assert_eq!(g.express, 1);
+        assert!((g.mean_occupancy() - 6.0).abs() < 1e-12);
     }
 
     #[test]

@@ -14,13 +14,15 @@
 //! |----------|-----------------------------------------------------------|
 //! | `hello`  | version handshake; server replies `hello` or an error     |
 //! | `search` | one query + per-request [`SearchOptions`]                 |
-//! | `stats`  | control plane: per-lane cache/session counters            |
+//! | `stats`  | control plane: scheduler gauges + per-lane counters       |
 //! | `health` | control plane: liveness + drain state                     |
 //! | `drain`  | control plane: stop admitting, wait for in-flight work    |
+//! | `resume` | control plane: undo `drain` — start admitting again       |
 //!
 //! Server → client messages ([`Reply`]) mirror them: `hello`, `result`,
 //! `error` (structured [`ErrorReply`] with an [`ErrorCode`]), `stats`,
-//! `health`, `drain`. The full field tables live in `docs/PROTOCOL.md`.
+//! `health`, `drain`, `resume`. The full field tables live in
+//! `docs/PROTOCOL.md`.
 //!
 //! Versioning policy: [`PROTOCOL_VERSION`] is a single integer bumped on
 //! every incompatible change. The handshake is optional but checked — a
@@ -30,6 +32,7 @@
 
 use crate::cache::CacheStats;
 use crate::coordinator::QueryOutcome;
+use crate::metrics::WindowGauges;
 use crate::util::json::{obj, Json};
 use crate::workload::Query;
 
@@ -43,8 +46,11 @@ pub enum ErrorCode {
     /// The request line was not a valid message (bad JSON, missing fields,
     /// wrong field types). The connection stays usable.
     Malformed,
-    /// Admission control rejected the query: the lane already holds
-    /// `max_inflight_per_lane` queries. Back off and retry.
+    /// Admission control rejected the query: the server-wide budget
+    /// (`max_inflight`) or this connection's fairness bound
+    /// (`max_inflight_per_conn`) is exhausted. Back off and retry
+    /// ([`crate::client::Client::search_with_retry`] standardizes the
+    /// backoff).
     Overloaded,
     /// The request's `deadline_ms` elapsed before a result was ready
     /// (checked at dequeue and again after the search).
@@ -146,6 +152,9 @@ pub enum Request {
     Health,
     /// Control plane: stop admitting new queries, wait for in-flight ones.
     Drain,
+    /// Control plane: resume admission after a `drain` (rolling restarts
+    /// that abort). Additive verb; no version bump.
+    Resume,
 }
 
 /// Failure to understand a request line. `query_id` is populated when the
@@ -196,6 +205,7 @@ impl Request {
             Some("stats") => Ok(Request::Stats),
             Some("health") => Ok(Request::Health),
             Some("drain") => Ok(Request::Drain),
+            Some("resume") => Ok(Request::Resume),
             Some(other) => Err(WireError::new(format!("unknown request type '{other}'"))),
             None if v.get("query_id").is_some() => parse_search(&v).map(Request::Search),
             None => Err(WireError::new("request missing 'type' (and no 'query_id')")),
@@ -239,6 +249,7 @@ impl Request {
             Request::Stats => obj(vec![("type", "stats".into())]),
             Request::Health => obj(vec![("type", "health".into())]),
             Request::Drain => obj(vec![("type", "drain".into())]),
+            Request::Resume => obj(vec![("type", "resume".into())]),
         }
     }
 
@@ -376,7 +387,9 @@ impl std::error::Error for ErrorReply {}
 pub struct LaneStats {
     pub lane: usize,
     pub policy: String,
-    /// Queries admitted to this lane and not yet replied to.
+    /// In-flight queries. Admission is a single server-wide budget, so the
+    /// live count is reported on lane 0's entry (other lanes report 0) —
+    /// summing lane entries yields the server total exactly once.
     pub inflight: usize,
     pub batches: usize,
     pub queries: usize,
@@ -389,6 +402,16 @@ pub struct LaneStats {
 #[derive(Debug, Clone, PartialEq)]
 pub struct StatsReply {
     pub draining: bool,
+    /// True when every lane serves one shared cluster cache: each lane's
+    /// `cache` counters are then *views of the same cache* and must not be
+    /// summed across lanes (machine-checkable form of the prose warning in
+    /// `docs/PROTOCOL.md`). Additive field; absent in old replies parses
+    /// as `false`.
+    pub shared_cache: bool,
+    /// Streaming-scheduler gauges: window occupancy, cross-connection
+    /// group span, express bypasses. Additive field; absent parses as all
+    /// zeros.
+    pub scheduler: WindowGauges,
     pub lanes: Vec<LaneStats>,
 }
 
@@ -423,6 +446,15 @@ pub struct DrainReply {
     pub remaining: usize,
 }
 
+/// Control-plane reply to `resume`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResumeReply {
+    /// True when the server is admitting queries again. False when it is
+    /// past draining and actually shutting down — a `resume` cannot undo
+    /// that.
+    pub admitting: bool,
+}
+
 /// A parsed server → client message.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Reply {
@@ -432,6 +464,7 @@ pub enum Reply {
     Stats(StatsReply),
     Health(HealthReply),
     Drain(DrainReply),
+    Resume(ResumeReply),
 }
 
 impl Reply {
@@ -502,6 +535,14 @@ impl Reply {
                     .collect::<Result<Vec<LaneStats>, WireError>>()?;
                 Ok(Reply::Stats(StatsReply {
                     draining: v.get("draining").and_then(Json::as_bool).unwrap_or(false),
+                    shared_cache: v
+                        .get("shared_cache")
+                        .and_then(Json::as_bool)
+                        .unwrap_or(false),
+                    scheduler: v
+                        .get("scheduler")
+                        .map(parse_window_gauges)
+                        .unwrap_or_default(),
                     lanes,
                 }))
             }
@@ -521,6 +562,12 @@ impl Reply {
                     .and_then(Json::as_bool)
                     .ok_or_else(|| WireError::new("drain missing 'drained'"))?,
                 remaining: v.get("remaining").and_then(Json::as_usize).unwrap_or(0),
+            })),
+            Some("resume") => Ok(Reply::Resume(ResumeReply {
+                admitting: v
+                    .get("admitting")
+                    .and_then(Json::as_bool)
+                    .ok_or_else(|| WireError::new("resume missing 'admitting'"))?,
             })),
             Some(other) => Err(WireError::new(format!("unknown reply type '{other}'"))),
             None => Err(WireError::new("reply missing 'type'")),
@@ -567,6 +614,8 @@ impl Reply {
             Reply::Stats(s) => obj(vec![
                 ("type", "stats".into()),
                 ("draining", s.draining.into()),
+                ("shared_cache", s.shared_cache.into()),
+                ("scheduler", s.scheduler.to_json()),
                 (
                     "lanes",
                     Json::Arr(s.lanes.iter().map(lane_stats_json).collect()),
@@ -584,12 +633,29 @@ impl Reply {
                 ("drained", d.drained.into()),
                 ("remaining", d.remaining.into()),
             ]),
+            Reply::Resume(r) => obj(vec![
+                ("type", "resume".into()),
+                ("admitting", r.admitting.into()),
+            ]),
         }
     }
 
     /// Serialize to one wire line (no trailing newline).
     pub fn dump(&self) -> String {
         self.to_json().dump()
+    }
+}
+
+fn parse_window_gauges(v: &Json) -> WindowGauges {
+    let n = |name: &str| -> u64 { v.get(name).and_then(Json::as_f64).unwrap_or(0.0) as u64 };
+    WindowGauges {
+        windows: n("windows"),
+        window_queries: n("window_queries"),
+        max_occupancy: n("max_occupancy"),
+        multi_conn_windows: n("multi_conn_windows"),
+        groups: n("groups"),
+        cross_conn_groups: n("cross_conn_groups"),
+        express: n("express"),
     }
 }
 
@@ -667,6 +733,7 @@ mod tests {
             Request::Stats,
             Request::Health,
             Request::Drain,
+            Request::Resume,
         ] {
             let line = req.dump();
             assert_eq!(Request::parse_line(&line).unwrap(), req, "{line}");
@@ -722,6 +789,16 @@ mod tests {
             Reply::Error(ErrorReply::new(ErrorCode::Malformed, "bad json", None)),
             Reply::Stats(StatsReply {
                 draining: true,
+                shared_cache: true,
+                scheduler: WindowGauges {
+                    windows: 4,
+                    window_queries: 37,
+                    max_occupancy: 16,
+                    multi_conn_windows: 3,
+                    groups: 9,
+                    cross_conn_groups: 5,
+                    express: 2,
+                },
                 lanes: vec![LaneStats {
                     lane: 0,
                     policy: "qgp".to_string(),
@@ -747,9 +824,26 @@ mod tests {
                 inflight: 5,
             }),
             Reply::Drain(DrainReply { drained: false, remaining: 4 }),
+            Reply::Resume(ResumeReply { admitting: true }),
+            Reply::Resume(ResumeReply { admitting: false }),
         ] {
             let line = reply.dump();
             assert_eq!(Reply::parse_line(&line).unwrap(), reply, "{line}");
+        }
+    }
+
+    #[test]
+    fn stats_additive_fields_default_when_absent() {
+        // A pre-scheduler server's stats line (no shared_cache, no
+        // scheduler object) must still parse: additive fields, no version
+        // bump.
+        let legacy = r#"{"type":"stats","draining":false,"lanes":[]}"#;
+        match Reply::parse_line(legacy).unwrap() {
+            Reply::Stats(s) => {
+                assert!(!s.shared_cache);
+                assert_eq!(s.scheduler, WindowGauges::default());
+            }
+            other => panic!("{other:?}"),
         }
     }
 

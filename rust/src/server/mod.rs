@@ -1,46 +1,72 @@
-//! TCP serving front-end (S10): the stand-in for the paper's Kafka ingress.
+//! TCP serving front-end (S10) around the **streaming scheduler core**.
 //!
 //! Speaks the versioned typed protocol of [`crate::proto`] (JSON-lines,
 //! `docs/PROTOCOL.md`): version handshake, per-request options (`top_k`,
 //! `nprobe`, `deadline_ms`, `no_group`), structured error replies, and the
-//! control-plane verbs `stats` / `health` / `drain`. The paired client
-//! library is [`crate::client::Client`]; both sides share the same message
-//! types, so there is no hand-assembled response JSON anywhere.
+//! control-plane verbs `stats` / `health` / `drain` / `resume`. The paired
+//! client library is [`crate::client::Client`]; both sides share the same
+//! message types, so there is no hand-assembled response JSON anywhere.
 //!
-//! Connection handlers feed per-lane queues; each **dispatch lane** is a
-//! thread that gathers its queue into arrival batches (up to `batch_max`
-//! or `batch_window`, mirroring §4.1's batching interval) and runs them
-//! through its own [`Session`]. Every session — and with it the PJRT
-//! runtime — stays on its lane's thread; handlers only do I/O and
-//! admission. Connections are assigned to lanes round-robin at accept
-//! time; within a batch all replies are built first and then emitted in
-//! request order, so a connection's *admitted* requests are always answered
-//! in the order they were sent. Admission rejections (`overloaded`,
+//! ## Architecture (see `docs/SCHEDULER.md` for the design note)
+//!
+//! Connection handlers no longer feed per-lane queues. Every admitted
+//! query flows into **one scheduler thread** that pools queries from *all*
+//! connections into a time/size-bounded micro-batch window
+//! ([`ServerConfig::window_max_queries`] / [`ServerConfig::window_max_wait`],
+//! via [`crate::coordinator::scheduler::WindowAccumulator`]). A flushed
+//! window travels whole to the next free **lane executor** — a thread
+//! owning one [`Session`] — which runs the active `SchedulePolicy`'s
+//! grouping over the pooled window. Grouping therefore sees the union of
+//! all connections' traffic: group quality *improves* with connection
+//! count instead of collapsing toward arrival order the way per-lane
+//! batching did. Queries that cannot be pooled bypass the window as
+//! *express* dispatches: a `deadline_ms` too tight to survive the window
+//! wait ([`crate::coordinator::scheduler::bypasses_window`]), or options
+//! forcing the single-query path (`no_group`, an `nprobe` override, an
+//! oversized `top_k`).
+//!
+//! With `lanes > 1` the caller's session factory should share one cluster
+//! cache *and* one in-flight read registry across lanes
+//! (`Session::builder().shared_cache(..).shared_inflight(..)`): the shared
+//! registry extends read dedup across lanes, so a cluster two lanes miss
+//! on concurrently is read from disk at most once server-wide. Prefetch
+//! pins stay per lane-owner token, so one lane's group switch never
+//! releases a sibling's pins.
+//!
+//! ## Admission and ordering
+//!
+//! Admission is a **global budget** ([`ServerConfig::max_inflight`]
+//! server-wide) plus a per-connection fairness bound
+//! ([`ServerConfig::max_inflight_per_conn`]) so one pipelined client
+//! cannot monopolize the pool; beyond either bound a query gets an
+//! immediate `overloaded` error instead of queueing without bound.
+//!
+//! Because one connection's queries may land in different windows executed
+//! by different lanes concurrently, each admitted request carries a
+//! per-connection sequence number and replies pass through a
+//! **per-connection sequencer** that buffers out-of-order results — a
+//! connection's admitted requests are always answered in the order they
+//! were sent, exactly as before. Admission rejections (`overloaded`,
 //! `shutting-down`) and malformed-line errors are replied immediately from
-//! the handler thread and may therefore overtake in-flight results —
-//! every error carries the request's `query_id`, so pipelined clients
-//! never desynchronize. With `lanes > 1` the caller's session factory
-//! should share one cluster cache across lanes
-//! (`Session::builder().shared_cache(..)`); prefetch pins are tracked per
-//! lane owner token, so one lane's group switch never releases a sibling
-//! lane's pins.
+//! the handler thread and may overtake in-flight results; every error
+//! carries the request's `query_id`, so pipelined clients never
+//! desynchronize.
 //!
-//! Overload behavior: each lane admits at most
-//! [`ServerConfig::max_inflight_per_lane`] queries; beyond that, new
-//! queries get an immediate `overloaded` error instead of queueing without
-//! bound. A request's `deadline_ms` is checked when its batch is formed
+//! A request's `deadline_ms` is checked when its window is executed
 //! (expired queries skip the search entirely) and again after the search
-//! (a result that arrives too late is reported as `deadline-exceeded`,
-//! not as a success the client has stopped waiting for).
+//! (a result that arrives too late is reported as `deadline-exceeded`).
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
+use crate::coordinator::scheduler::{bypasses_window, WindowAccumulator, WindowConfig};
+use crate::metrics::WindowGauges;
 use crate::proto::{
     self, ErrorCode, ErrorReply, Reply, Request, SearchReply, SearchRequest, PROTOCOL_VERSION,
 };
@@ -51,16 +77,21 @@ use crate::workload::Query;
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
     pub addr: String,
-    /// Max time the batcher waits to fill a batch.
-    pub batch_window: Duration,
-    /// Max queries per batch (paper: 100).
-    pub batch_max: usize,
-    /// Dispatch lanes: independent batcher threads, each with its own
-    /// `Session`. Connections are pinned to a lane round-robin (at least 1).
+    /// Max time the scheduler holds an open micro-batch window before
+    /// flushing it (the pooling window; paper §4.1's batching interval).
+    pub window_max_wait: Duration,
+    /// Max queries pooled into one window (paper: 100).
+    pub window_max_queries: usize,
+    /// Lane executors: threads each owning a `Session`, consuming whole
+    /// windows from the shared scheduler (at least 1).
     pub lanes: usize,
-    /// Admission bound: queries a lane may hold (queued + batching) before
-    /// new ones are refused with an `overloaded` error (at least 1).
-    pub max_inflight_per_lane: usize,
+    /// Global admission budget: queries the whole server may hold
+    /// (queued + windowed + executing) before new ones are refused with an
+    /// `overloaded` error (at least 1).
+    pub max_inflight: usize,
+    /// Per-connection fairness bound on in-flight queries, so one
+    /// pipelined client cannot monopolize the global budget (at least 1).
+    pub max_inflight_per_conn: usize,
     /// How long a `drain` verb waits for in-flight queries to finish
     /// before replying with `drained: false`.
     pub drain_timeout: Duration,
@@ -70,47 +101,144 @@ impl Default for ServerConfig {
     fn default() -> Self {
         ServerConfig {
             addr: "127.0.0.1:7471".to_string(),
-            batch_window: Duration::from_millis(10),
-            batch_max: 100,
+            window_max_wait: Duration::from_millis(10),
+            window_max_queries: 100,
             lanes: 1,
-            max_inflight_per_lane: 256,
+            max_inflight: 1024,
+            max_inflight_per_conn: 256,
             drain_timeout: Duration::from_secs(5),
         }
     }
 }
 
-/// One admitted query travelling from a connection handler to its lane.
+/// Per-connection reply routing: the writer channel plus the sequencer
+/// that restores request order across windows executed by different lanes.
+struct ConnShared {
+    /// Stable id for cross-connection gauges (group span, window span).
+    id: u64,
+    /// Lines to the connection's writer thread.
+    tx: Sender<String>,
+    /// This connection's admitted-but-unanswered queries.
+    inflight: AtomicUsize,
+    /// Next sequence number to assign at admission (handler thread only).
+    next_seq: AtomicU64,
+    /// Reorder buffer: replies emit strictly in sequence order.
+    sequencer: Mutex<Sequencer>,
+}
+
+#[derive(Default)]
+struct Sequencer {
+    next_emit: u64,
+    held: HashMap<u64, String>,
+}
+
+impl ConnShared {
+    /// Route the reply for sequence `seq`; emits every line that is now in
+    /// order. Every assigned sequence number must pass through here exactly
+    /// once, or later replies would be held forever.
+    fn send_seq(&self, seq: u64, line: String) {
+        let mut s = self.sequencer.lock().unwrap();
+        s.held.insert(seq, line);
+        while let Some(ready) = s.held.remove(&s.next_emit) {
+            s.next_emit += 1;
+            // Writer gone (client disconnected): drop silently; the
+            // sequencer still advances so siblings don't back up.
+            let _ = self.tx.send(ready);
+        }
+    }
+}
+
+/// One admitted query travelling from its connection handler through the
+/// scheduler to a lane executor.
 struct Work {
     request: SearchRequest,
     received_at: Instant,
-    reply: Sender<String>,
+    conn: Arc<ConnShared>,
+    seq: u64,
 }
 
-/// Per-lane state shared between the lane's dispatch thread and every
-/// connection handler pinned to it.
+/// A unit of lane work produced by the scheduler.
+enum Job {
+    /// A flushed cross-connection micro-batch window.
+    Window(Vec<Work>),
+    /// A query dispatched around the window (deadline/options bypass).
+    Express(Work),
+}
+
+impl Job {
+    fn works(self) -> Vec<Work> {
+        match self {
+            Job::Window(w) => w,
+            Job::Express(w) => vec![w],
+        }
+    }
+}
+
+/// MPMC queue feeding lane executors (std has no multi-consumer channel).
+#[derive(Default)]
+struct JobQueue {
+    q: Mutex<std::collections::VecDeque<Job>>,
+    cv: Condvar,
+}
+
+impl JobQueue {
+    fn push(&self, job: Job) {
+        self.q.lock().unwrap().push_back(job);
+        self.cv.notify_one();
+    }
+
+    /// Pop the next job, waiting up to `timeout`. `None` on timeout (or a
+    /// spurious wakeup with an empty queue) — callers loop and re-check
+    /// shutdown.
+    fn pop_timeout(&self, timeout: Duration) -> Option<Job> {
+        let mut q = self.q.lock().unwrap();
+        if q.is_empty() {
+            let (guard, _) = self.cv.wait_timeout(q, timeout).unwrap();
+            q = guard;
+        }
+        q.pop_front()
+    }
+}
+
+/// Per-lane state shared between the lane's executor thread and the stats
+/// verb.
 struct LaneShared {
-    /// Admitted-but-unanswered queries (the admission counter).
-    inflight: AtomicUsize,
-    /// Published after every batch for the `stats` verb.
+    /// Published after every job for the `stats` verb.
     snapshot: Mutex<proto::LaneStats>,
 }
 
-/// State shared across the whole server (handlers + lanes + handle).
+/// State shared across the whole server (handlers + scheduler + lanes +
+/// handle).
 struct ServerState {
     shutdown: AtomicBool,
     draining: AtomicBool,
+    /// Global admission counter (queued + windowed + executing).
+    inflight: AtomicUsize,
+    max_inflight: usize,
+    max_inflight_per_conn: usize,
     lanes: Vec<Arc<LaneShared>>,
+    /// Streaming-scheduler gauges, published through `stats`.
+    gauges: Mutex<WindowGauges>,
+    /// True when every lane serves one shared cluster cache (stats field).
+    shared_cache: AtomicBool,
     drain_timeout: Duration,
 }
 
 impl ServerState {
-    fn total_inflight(&self) -> usize {
-        self.lanes.iter().map(|l| l.inflight.load(Ordering::SeqCst)).sum()
-    }
-
     fn admitting(&self) -> bool {
         !self.draining.load(Ordering::SeqCst) && !self.shutdown.load(Ordering::SeqCst)
     }
+
+    fn total_inflight(&self) -> usize {
+        self.inflight.load(Ordering::SeqCst)
+    }
+}
+
+/// Release the admission slots and route `line` as `work`'s one reply.
+fn finish(state: &ServerState, work: &Work, line: String) {
+    state.inflight.fetch_sub(1, Ordering::SeqCst);
+    work.conn.inflight.fetch_sub(1, Ordering::SeqCst);
+    work.conn.send_seq(work.seq, line);
 }
 
 /// Running server handle; dropping it shuts the server down.
@@ -118,7 +246,8 @@ pub struct ServerHandle {
     pub addr: std::net::SocketAddr,
     state: Arc<ServerState>,
     accept_thread: Option<JoinHandle<()>>,
-    dispatch_threads: Vec<JoinHandle<()>>,
+    scheduler_thread: Option<JoinHandle<()>>,
+    lane_threads: Vec<JoinHandle<()>>,
 }
 
 impl ServerHandle {
@@ -132,7 +261,12 @@ impl ServerHandle {
         self.state.draining.store(true, Ordering::SeqCst);
     }
 
-    /// Queries admitted and not yet answered, across all lanes.
+    /// Resume admission after a drain (the wire `resume` verb).
+    pub fn resume(&self) {
+        self.state.draining.store(false, Ordering::SeqCst);
+    }
+
+    /// Queries admitted and not yet answered, server-wide.
     pub fn inflight(&self) -> usize {
         self.state.total_inflight()
     }
@@ -145,7 +279,10 @@ impl ServerHandle {
         if let Some(t) = self.accept_thread.take() {
             let _ = t.join();
         }
-        for t in self.dispatch_threads.drain(..) {
+        if let Some(t) = self.scheduler_thread.take() {
+            let _ = t.join();
+        }
+        for t in self.lane_threads.drain(..) {
             let _ = t.join();
         }
     }
@@ -157,25 +294,36 @@ impl Drop for ServerHandle {
     }
 }
 
+/// What a lane reports back through the startup handshake: the serving
+/// defaults the scheduler needs for bypass classification, plus an opaque
+/// cache identity tag so the server can tell whether all lanes share one
+/// cache (the `shared_cache` stats field).
+struct LaneBoot {
+    top_k: usize,
+    cache_tag: usize,
+}
+
 /// Start serving on `cfg.addr` (use port 0 for an ephemeral port).
 ///
 /// Takes a *session factory* rather than a session because the PJRT client
 /// is not `Send`: each lane's session (and with it the compiled
 /// executables) is constructed on — and never leaves — that lane's
-/// dispatch thread. The factory is invoked once per lane (`cfg.lanes`
+/// executor thread. The factory is invoked once per lane (`cfg.lanes`
 /// total); construction errors are propagated back through the startup
-/// handshake. A typical factory is a `Session::builder()...open()` call,
-/// cloning its captured config per invocation:
+/// handshake. With `lanes > 1`, pass the lanes one shared cache *and* one
+/// shared in-flight registry so they cooperate:
 ///
 /// ```text
 /// let factory = move || {
-///     Session::builder().config(cfg.clone()).dataset(spec.clone()).open()
+///     Session::builder()
+///         .config(cfg.clone())
+///         .dataset(spec.clone())
+///         .shared_cache(Arc::clone(&cache))
+///         .shared_inflight(Arc::clone(&inflight))
+///         .open()
 /// };
 /// let handle = server::start(factory, ServerConfig::default())?;
 /// ```
-///
-/// With `lanes > 1`, pass the lanes one shared cache so they cooperate:
-/// `Session::builder().shared_cache(Arc::clone(&cache))`.
 pub fn start<F>(session_factory: F, cfg: ServerConfig) -> anyhow::Result<ServerHandle>
 where
     F: Fn() -> anyhow::Result<Session> + Send + Sync + 'static,
@@ -184,14 +332,15 @@ where
         .map_err(|e| anyhow::anyhow!("binding {}: {e}", cfg.addr))?;
     let addr = listener.local_addr()?;
     let lanes = cfg.lanes.max(1);
-    let max_inflight = cfg.max_inflight_per_lane.max(1);
     let state = Arc::new(ServerState {
         shutdown: AtomicBool::new(false),
         draining: AtomicBool::new(false),
+        inflight: AtomicUsize::new(0),
+        max_inflight: cfg.max_inflight.max(1),
+        max_inflight_per_conn: cfg.max_inflight_per_conn.max(1),
         lanes: (0..lanes)
             .map(|lane| {
                 Arc::new(LaneShared {
-                    inflight: AtomicUsize::new(0),
                     snapshot: Mutex::new(proto::LaneStats {
                         lane,
                         policy: String::new(),
@@ -205,29 +354,32 @@ where
                 })
             })
             .collect(),
+        gauges: Mutex::new(WindowGauges::default()),
+        shared_cache: AtomicBool::new(false),
         drain_timeout: cfg.drain_timeout,
     });
     let factory = Arc::new(session_factory);
+    let jobs = Arc::new(JobQueue::default());
 
-    // One dispatch lane per thread: build the lane's session, signal
-    // readiness, then batch + search until shutdown.
-    let window = cfg.batch_window;
-    let batch_max = cfg.batch_max;
-    let mut lane_txs: Vec<Sender<Work>> = Vec::with_capacity(lanes);
-    let mut dispatch_threads = Vec::with_capacity(lanes);
-    let (ready_tx, ready_rx) = std::sync::mpsc::channel::<anyhow::Result<()>>();
+    // Lane executors: build the lane's session, report its serving
+    // defaults, then consume jobs until shutdown.
+    let mut lane_threads = Vec::with_capacity(lanes);
+    let (ready_tx, ready_rx) = std::sync::mpsc::channel::<anyhow::Result<LaneBoot>>();
     for lane in 0..lanes {
-        let (req_tx, req_rx) = std::sync::mpsc::channel::<Work>();
-        lane_txs.push(req_tx);
         let factory = Arc::clone(&factory);
         let ready_tx = ready_tx.clone();
         let lane_state = Arc::clone(&state);
+        let lane_jobs = Arc::clone(&jobs);
         let thread = std::thread::Builder::new()
-            .name(format!("cagr-dispatch-{lane}"))
+            .name(format!("cagr-lane-{lane}"))
             .spawn(move || {
                 let mut session = match (&*factory)() {
                     Ok(s) => {
-                        let _ = ready_tx.send(Ok(()));
+                        let boot = LaneBoot {
+                            top_k: s.config().top_k,
+                            cache_tag: Arc::as_ptr(&s.engine().cache) as usize,
+                        };
+                        let _ = ready_tx.send(Ok(boot));
                         s
                     }
                     Err(e) => {
@@ -235,51 +387,67 @@ where
                         return;
                     }
                 };
-                dispatch_loop(&mut session, lane, req_rx, window, batch_max, lane_state)
+                lane_loop(&mut session, lane, &lane_jobs, &lane_state)
             })
-            .expect("spawn dispatch thread");
-        dispatch_threads.push(thread);
+            .expect("spawn lane executor");
+        lane_threads.push(thread);
     }
     drop(ready_tx);
+    let mut boots = Vec::with_capacity(lanes);
     for _ in 0..lanes {
         match ready_rx.recv() {
-            Ok(Ok(())) => {}
+            Ok(Ok(boot)) => boots.push(boot),
             Ok(Err(e)) => {
-                // Abort startup: wake every healthy lane (dropping the
-                // senders disconnects their queues) and surface the error.
+                // Abort startup: flag every healthy lane down and surface
+                // the error (lanes poll the flag between job waits).
                 state.shutdown.store(true, Ordering::SeqCst);
-                drop(lane_txs);
-                for t in dispatch_threads {
+                for t in lane_threads {
                     let _ = t.join();
                 }
                 return Err(e);
             }
-            Err(_) => anyhow::bail!("dispatch thread died during startup"),
+            Err(_) => anyhow::bail!("lane executor died during startup"),
         }
     }
+    let session_top_k = boots[0].top_k;
+    state.shared_cache.store(
+        boots.iter().all(|b| b.cache_tag == boots[0].cache_tag),
+        Ordering::SeqCst,
+    );
 
-    // Accept thread: one handler thread per connection, pinned to a lane
-    // round-robin so a connection's requests always batch in one lane (and
-    // its admitted responses therefore keep arriving in request order).
+    // The scheduler thread: pools admitted queries from all connections
+    // into micro-batch windows and feeds the lane executors.
+    let (work_tx, work_rx) = std::sync::mpsc::channel::<Work>();
+    let window_cfg = WindowConfig {
+        max_queries: cfg.window_max_queries.max(1),
+        max_wait: cfg.window_max_wait,
+    };
+    let sched_state = Arc::clone(&state);
+    let sched_jobs = Arc::clone(&jobs);
+    let scheduler_thread = std::thread::Builder::new()
+        .name("cagr-scheduler".to_string())
+        .spawn(move || scheduler_loop(work_rx, &sched_jobs, &sched_state, window_cfg, session_top_k))
+        .expect("spawn scheduler thread");
+
+    // Accept thread: one handler thread per connection; every handler
+    // feeds the one scheduler.
     let accept_state = Arc::clone(&state);
     let accept_thread = std::thread::Builder::new()
         .name("cagr-accept".to_string())
         .spawn(move || {
-            let mut next_lane = 0usize;
+            let mut next_conn_id = 0u64;
             for stream in listener.incoming() {
                 if accept_state.shutdown.load(Ordering::SeqCst) {
                     break;
                 }
                 let Ok(stream) = stream else { continue };
-                let lane = next_lane % accept_state.lanes.len();
-                let tx = lane_txs[lane].clone();
-                next_lane = next_lane.wrapping_add(1);
+                let conn_id = next_conn_id;
+                next_conn_id = next_conn_id.wrapping_add(1);
+                let tx = work_tx.clone();
                 let conn_state = Arc::clone(&accept_state);
                 std::thread::Builder::new()
                     .name("cagr-conn".to_string())
-                    .spawn(move || {
-                        handle_connection(stream, tx, conn_state, lane, max_inflight)
-                    })
+                    .spawn(move || handle_connection(stream, tx, conn_state, conn_id))
                     .ok();
             }
         })
@@ -289,7 +457,8 @@ where
         addr,
         state,
         accept_thread: Some(accept_thread),
-        dispatch_threads,
+        scheduler_thread: Some(scheduler_thread),
+        lane_threads,
     })
 }
 
@@ -302,7 +471,7 @@ fn deadline_expired(work: &Work, now: Instant) -> bool {
 }
 
 /// Whether a request must run on the single-query path: it asked to skip
-/// grouping, or carries options the grouped batch path cannot honor.
+/// grouping, or carries options the grouped window path cannot honor.
 fn wants_bypass(req: &SearchRequest, session_top_k: usize) -> bool {
     req.options.no_group
         || req.options.nprobe.is_some()
@@ -321,21 +490,97 @@ fn deadline_error(id: usize, elapsed: Duration, budget_ms: u64) -> String {
     )
 }
 
-fn dispatch_loop(
-    session: &mut Session,
-    lane: usize,
-    req_rx: Receiver<Work>,
-    window: Duration,
-    batch_max: usize,
-    state: Arc<ServerState>,
+fn shutting_down_line(id: usize) -> String {
+    error_line(ErrorCode::ShuttingDown, "server shutting down", Some(id))
+}
+
+/// The scheduler thread: receive admitted work from every connection,
+/// divert express traffic (deadline/option bypass) straight to the lanes,
+/// and pool everything else into time/size-bounded windows.
+fn scheduler_loop(
+    rx: Receiver<Work>,
+    jobs: &JobQueue,
+    state: &ServerState,
+    window_cfg: WindowConfig,
+    session_top_k: usize,
 ) {
+    let mut acc: WindowAccumulator<Work> = WindowAccumulator::new(window_cfg);
+    let max_wait = window_cfg.max_wait;
+    // Route one admitted request: express traffic skips the window.
+    let classify = |acc: &mut WindowAccumulator<Work>, work: Work, now: Instant| {
+        let waited = now.duration_since(work.received_at);
+        if wants_bypass(&work.request, session_top_k)
+            || bypasses_window(work.request.options.deadline_ms, waited, max_wait)
+        {
+            state.gauges.lock().unwrap().record_express();
+            jobs.push(Job::Express(work));
+        } else {
+            acc.push(work, now);
+        }
+    };
+    'serve: loop {
+        if state.shutdown.load(Ordering::SeqCst) {
+            break;
+        }
+        if acc.is_empty() {
+            // No open window: block for the next request (bounded so the
+            // shutdown flag is honored promptly).
+            match rx.recv_timeout(Duration::from_millis(50)) {
+                Ok(work) => classify(&mut acc, work, Instant::now()),
+                Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
+                Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break 'serve,
+            }
+            continue;
+        }
+        // A window is open: gather until full or its wait bound elapses.
+        // A drain flushes the window immediately so in-flight work clears
+        // as fast as the lanes allow.
+        let now = Instant::now();
+        let flush_now = acc.ready(now)
+            || state.draining.load(Ordering::SeqCst)
+            || state.shutdown.load(Ordering::SeqCst);
+        if flush_now {
+            jobs.push(Job::Window(acc.take()));
+            continue;
+        }
+        let left = acc.time_left(now).unwrap_or(Duration::ZERO);
+        match rx.recv_timeout(left.min(Duration::from_millis(50))) {
+            Ok(work) => classify(&mut acc, work, Instant::now()),
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                // All producers gone: flush what we pooled, then exit.
+                jobs.push(Job::Window(acc.take()));
+                break 'serve;
+            }
+        }
+    }
+    // Shutdown: a window still accumulating was admitted but will not be
+    // processed — answer it, and drain late handler sends with a grace
+    // window (a handler that passed admission just before the flag flipped
+    // may complete its send microseconds later).
+    for work in acc.take() {
+        let line = shutting_down_line(work.request.query.id);
+        finish(state, &work, line);
+    }
+    while let Ok(work) = rx.recv_timeout(Duration::from_millis(100)) {
+        let line = shutting_down_line(work.request.query.id);
+        finish(state, &work, line);
+    }
+}
+
+/// One lane executor: consume jobs, run them through this lane's session,
+/// route replies through each connection's sequencer.
+fn lane_loop(session: &mut Session, lane: usize, jobs: &JobQueue, state: &ServerState) {
     let lane_shared = Arc::clone(&state.lanes[lane]);
     let publish = |session: &Session, lane_shared: &LaneShared| {
         let totals = session.stats();
         let cache = session.cache_stats();
         let mut snap = lane_shared.snapshot.lock().unwrap();
         snap.policy = session.policy_name().to_string();
-        snap.inflight = lane_shared.inflight.load(Ordering::SeqCst);
+        // Admission is global; the live count is attributed to lane 0's
+        // stats entry (refreshed by the stats verb) so summing lane
+        // entries still yields the server-wide in-flight total.
+        snap.inflight = 0;
         snap.batches = totals.batches;
         snap.queries = totals.queries;
         snap.groups = totals.groups;
@@ -343,187 +588,208 @@ fn dispatch_loop(
         snap.cache = cache;
     };
     publish(session, &lane_shared); // stats on an idle server report zeros + policy
-    let mut batch_sizes: Vec<usize> = Vec::new();
+    let mut window_sizes: Vec<usize> = Vec::new();
     loop {
         if state.shutdown.load(Ordering::SeqCst) {
             break;
         }
-        // Block for the first request, then gather until window/batch_max.
-        let first = match req_rx.recv_timeout(Duration::from_millis(50)) {
-            Ok(r) => r,
-            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
-                publish(session, &lane_shared);
-                continue;
-            }
-            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break,
+        let Some(job) = jobs.pop_timeout(Duration::from_millis(50)) else {
+            publish(session, &lane_shared);
+            continue;
         };
-        let mut pending = vec![first];
-        let deadline = Instant::now() + window;
-        while pending.len() < batch_max {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
+        // Counters publish *before* the replies route, so a `stats` issued
+        // right after the last reply always covers this job's work.
+        match job {
+            Job::Express(work) => {
+                let line = run_single(session, &work);
+                publish(session, &lane_shared);
+                finish(state, &work, line);
             }
-            match req_rx.recv_timeout(deadline - now) {
-                Ok(r) => pending.push(r),
-                Err(_) => break,
-            }
-        }
-
-        // Per-request reply slots, filled in three passes (deadline drops,
-        // grouped batch, single-query bypass) and emitted in request order
-        // at the end, so a connection's admitted requests are answered in
-        // the order they were sent.
-        let mut replies: Vec<Option<String>> = vec![None; pending.len()];
-
-        // Pass 1 — dequeue-time deadline check: a query whose budget
-        // elapsed while it sat in the queue skips the search entirely.
-        let dequeued_at = Instant::now();
-        for (i, work) in pending.iter().enumerate() {
-            if deadline_expired(work, dequeued_at) {
-                replies[i] = Some(deadline_error(
-                    work.request.query.id,
-                    dequeued_at.duration_since(work.received_at),
-                    work.request.options.deadline_ms.unwrap_or(0),
-                ));
-            }
-        }
-
-        // Pass 2 — the grouped batch: everything still unanswered that the
-        // batch path can honor (per-request deadline + top_k <= session's).
-        let session_top_k = session.config().top_k;
-        let grouped: Vec<usize> = (0..pending.len())
-            .filter(|&i| {
-                replies[i].is_none() && !wants_bypass(&pending[i].request, session_top_k)
-            })
-            .collect();
-        if !grouped.is_empty() {
-            let queries: Vec<Query> =
-                grouped.iter().map(|&i| pending[i].request.query.clone()).collect();
-            batch_sizes.push(queries.len());
-            match session.run_batch(&queries) {
-                Ok((outcomes, _stats)) => {
-                    let done = Instant::now();
-                    // Route each outcome to the request that produced it.
-                    // Each outcome is consumed once, so duplicate query_ids
-                    // in one batch each get their own (distinct) result.
-                    let mut used = vec![false; outcomes.len()];
-                    for &i in &grouped {
-                        let work = &pending[i];
-                        let slot = outcomes.iter().enumerate().position(|(oi, o)| {
-                            !used[oi] && o.report.query_id == work.request.query.id
-                        });
-                        replies[i] = Some(match slot {
-                            Some(oi) => {
-                                used[oi] = true;
-                                finish_reply(work, &outcomes[oi], done)
-                            }
-                            // A request the session returned no outcome for
-                            // must still be answered — a silent drop would
-                            // desynchronize pipelined clients.
-                            None => error_line(
-                                ErrorCode::Internal,
-                                "no outcome produced for query",
-                                Some(work.request.query.id),
-                            ),
-                        });
-                    }
+            Job::Window(works) => {
+                if works.is_empty() {
+                    continue;
                 }
-                Err(e) => {
-                    for &i in &grouped {
-                        replies[i] = Some(error_line(
-                            ErrorCode::Internal,
-                            format!("{e}"),
-                            Some(pending[i].request.query.id),
-                        ));
-                    }
+                window_sizes.push(works.len());
+                let replies = run_window(session, &works, state);
+                publish(session, &lane_shared);
+                // Route every reply; exactly one per admitted request,
+                // always. The slots release before the sequencer emits, so
+                // once a client holds the reply the counters it can
+                // observe no longer include the request.
+                for (work, line) in works.iter().zip(replies) {
+                    finish(state, work, line);
                 }
             }
-        }
-
-        // Pass 3 — single-query bypass: `no_group` and option overrides.
-        for (i, work) in pending.iter().enumerate() {
-            if replies[i].is_some() {
-                continue;
-            }
-            // Re-check the deadline: the grouped batch just ran, and a
-            // latency-critical query whose budget died waiting for it must
-            // skip its search, not burn one past the deadline.
-            let now = Instant::now();
-            if deadline_expired(work, now) {
-                replies[i] = Some(deadline_error(
-                    work.request.query.id,
-                    now.duration_since(work.received_at),
-                    work.request.options.deadline_ms.unwrap_or(0),
-                ));
-                continue;
-            }
-            let outcome = session.run_one(&work.request.query, &work.request.options);
-            let done = Instant::now();
-            replies[i] = Some(match outcome {
-                Ok(o) => finish_reply(work, &o, done),
-                Err(e) => error_line(
-                    ErrorCode::Internal,
-                    format!("{e}"),
-                    Some(work.request.query.id),
-                ),
-            });
-        }
-
-        // Publish counters *before* replying so a `stats` issued right
-        // after the last reply always covers this batch; then emit every
-        // reply in request order and release the admission slots. Exactly
-        // one reply per admitted request, always.
-        publish(session, &lane_shared);
-        for (work, reply) in pending.iter().zip(replies) {
-            let line = reply.unwrap_or_else(|| {
-                error_line(
-                    ErrorCode::Internal,
-                    "request fell through every dispatch pass",
-                    Some(work.request.query.id),
-                )
-            });
-            // Release the slot before writing: once a client holds the
-            // reply, the counters it can observe (stats/health/drain) no
-            // longer include the request.
-            lane_shared.inflight.fetch_sub(1, Ordering::SeqCst);
-            let _ = work.reply.send(line);
         }
     }
-    // Admitted-but-unprocessed work (shutdown mid-queue) still gets a
-    // structured reply; never a silent drop. Drain with a grace window,
-    // not just try_recv: a handler that passed its admission check just
-    // before the shutdown flag flipped may complete its send microseconds
-    // after an instantaneous drain would have finished — once the channel
-    // stays empty for the grace period, any later handler send fails
-    // (req_rx drops with this function) and the handler replies itself.
-    while let Ok(work) = req_rx.recv_timeout(Duration::from_millis(100)) {
-        lane_shared.inflight.fetch_sub(1, Ordering::SeqCst);
-        let _ = work.reply.send(error_line(
-            ErrorCode::ShuttingDown,
-            "server shutting down",
-            Some(work.request.query.id),
-        ));
+    // Jobs still queued at shutdown get structured replies; never a silent
+    // drop. Drain with a grace window: the scheduler may push a final
+    // window microseconds after the flag flips.
+    while let Some(job) = jobs.pop_timeout(Duration::from_millis(100)) {
+        for work in job.works() {
+            let line = shutting_down_line(work.request.query.id);
+            finish(state, &work, line);
+        }
     }
     publish(session, &lane_shared);
-    // Shutdown diagnostics (stderr): demand cache behaviour + batch shape.
+    // Shutdown diagnostics (stderr): demand cache behaviour + window shape.
     let stats = session.cache_stats();
-    let mean_batch = if batch_sizes.is_empty() {
+    let mean_window = if window_sizes.is_empty() {
         0.0
     } else {
-        batch_sizes.iter().sum::<usize>() as f64 / batch_sizes.len() as f64
+        window_sizes.iter().sum::<usize>() as f64 / window_sizes.len() as f64
     };
     eprintln!(
-        "[cagr-server] lane={lane} policy={} batches={} mean-batch={:.1} cache-hit={:.1}% \
+        "[cagr-server] lane={lane} policy={} windows={} mean-window={:.1} cache-hit={:.1}% \
          (hits={} misses={} prefetch-inserts={})",
         session.policy_name(),
-        batch_sizes.len(),
-        mean_batch,
+        window_sizes.len(),
+        mean_window,
         100.0 * stats.hit_ratio(),
         stats.hits,
         stats.misses,
         stats.prefetch_inserts,
     );
+}
+
+/// The single-query dispatch sequence, shared by express jobs and a
+/// window's bypass leftovers so the two paths can never drift apart:
+/// pre-search deadline check, `run_one`, then the post-search deadline +
+/// `top_k` trim via [`finish_reply`]; engine errors map to `internal`.
+fn run_single(session: &mut Session, work: &Work) -> String {
+    let now = Instant::now();
+    if deadline_expired(work, now) {
+        return deadline_error(
+            work.request.query.id,
+            now.duration_since(work.received_at),
+            work.request.options.deadline_ms.unwrap_or(0),
+        );
+    }
+    match session.run_one(&work.request.query, &work.request.options) {
+        Ok(outcome) => finish_reply(work, &outcome, Instant::now()),
+        Err(e) => error_line(ErrorCode::Internal, format!("{e}"), Some(work.request.query.id)),
+    }
+}
+
+/// Execute one pooled window: the dequeue-time deadline pass, the grouped
+/// batch over everything the batch path can honor, a single-query pass for
+/// the rest, plus cross-connection gauge updates. Returns one reply line
+/// per work, aligned; the caller routes them.
+fn run_window(session: &mut Session, works: &[Work], state: &ServerState) -> Vec<String> {
+    // Per-request reply slots, filled in three passes; the per-connection
+    // sequencer restores request order after routing.
+    let mut replies: Vec<Option<String>> = vec![None; works.len()];
+
+    // Pass 1 — dequeue-time deadline check: a query whose budget elapsed
+    // while it pooled in the window skips the search entirely.
+    let dequeued_at = Instant::now();
+    for (i, work) in works.iter().enumerate() {
+        if deadline_expired(work, dequeued_at) {
+            replies[i] = Some(deadline_error(
+                work.request.query.id,
+                dequeued_at.duration_since(work.received_at),
+                work.request.options.deadline_ms.unwrap_or(0),
+            ));
+        }
+    }
+
+    // Pass 2 — the grouped batch: everything still unanswered that the
+    // batch path can honor. (The scheduler already diverted option-bypass
+    // requests express; the re-check is defensive and free.)
+    let session_top_k = session.config().top_k;
+    let grouped: Vec<usize> = (0..works.len())
+        .filter(|&i| replies[i].is_none() && !wants_bypass(&works[i].request, session_top_k))
+        .collect();
+    // Cross-connection span: which connections contributed, and which
+    // schedule groups pooled queries from more than one connection — the
+    // gauge per-lane batching could never move off zero.
+    let mut group_conns: HashMap<usize, std::collections::HashSet<u64>> = HashMap::new();
+    if !grouped.is_empty() {
+        let queries: Vec<Query> =
+            grouped.iter().map(|&i| works[i].request.query.clone()).collect();
+        match session.run_batch(&queries) {
+            Ok((outcomes, _stats)) => {
+                let done = Instant::now();
+                // Route each outcome to the request that produced it. Each
+                // outcome is consumed once, so duplicate query_ids in one
+                // window each get their own (distinct) result.
+                let mut used = vec![false; outcomes.len()];
+                for &i in &grouped {
+                    let work = &works[i];
+                    let slot = outcomes.iter().enumerate().position(|(oi, o)| {
+                        !used[oi] && o.report.query_id == work.request.query.id
+                    });
+                    replies[i] = Some(match slot {
+                        Some(oi) => {
+                            used[oi] = true;
+                            group_conns
+                                .entry(outcomes[oi].group)
+                                .or_default()
+                                .insert(work.conn.id);
+                            finish_reply(work, &outcomes[oi], done)
+                        }
+                        // A request the session returned no outcome for
+                        // must still be answered — a silent drop would
+                        // desynchronize pipelined clients.
+                        None => error_line(
+                            ErrorCode::Internal,
+                            "no outcome produced for query",
+                            Some(work.request.query.id),
+                        ),
+                    });
+                }
+            }
+            Err(e) => {
+                for &i in &grouped {
+                    replies[i] = Some(error_line(
+                        ErrorCode::Internal,
+                        format!("{e}"),
+                        Some(works[i].request.query.id),
+                    ));
+                }
+            }
+        }
+    }
+
+    // Pass 3 — single-query leftovers (defensive bypass catch-all). The
+    // shared `run_single` re-checks the deadline first: the grouped batch
+    // just ran, and a latency-critical query whose budget died waiting for
+    // it must skip its search, not burn one past the deadline.
+    for (i, work) in works.iter().enumerate() {
+        if replies[i].is_none() {
+            replies[i] = Some(run_single(session, work));
+        }
+    }
+
+    // Window gauges: occupancy, connection span, cross-connection groups.
+    {
+        let distinct_conns = works
+            .iter()
+            .map(|w| w.conn.id)
+            .collect::<std::collections::HashSet<u64>>()
+            .len();
+        let cross = group_conns.values().filter(|conns| conns.len() > 1).count();
+        state.gauges.lock().unwrap().record_window(
+            works.len(),
+            distinct_conns,
+            group_conns.len(),
+            cross,
+        );
+    }
+
+    replies
+        .into_iter()
+        .zip(works)
+        .map(|(reply, work)| {
+            reply.unwrap_or_else(|| {
+                error_line(
+                    ErrorCode::Internal,
+                    "request fell through every dispatch pass",
+                    Some(work.request.query.id),
+                )
+            })
+        })
+        .collect()
 }
 
 /// Build the final wire reply for a completed search: the post-search
@@ -546,10 +812,9 @@ fn finish_reply(work: &Work, outcome: &crate::coordinator::QueryOutcome, done: I
 
 fn handle_connection(
     stream: TcpStream,
-    req_tx: Sender<Work>,
+    work_tx: Sender<Work>,
     state: Arc<ServerState>,
-    lane: usize,
-    max_inflight: usize,
+    conn_id: u64,
 ) {
     let peer_reader = match stream.try_clone() {
         Ok(s) => s,
@@ -560,8 +825,8 @@ fn handle_connection(
     let (reply_tx, reply_rx) = std::sync::mpsc::channel::<String>();
 
     // Writer side runs independently so the connection is fully pipelined:
-    // a client may have many requests in flight, which is what lets the
-    // dispatch thread form real arrival batches (paper §4.1).
+    // a client may have many requests in flight, which is what fills the
+    // scheduler's cross-connection window (paper §4.1).
     let writer_thread = std::thread::Builder::new()
         .name("cagr-conn-writer".to_string())
         .spawn(move || {
@@ -573,7 +838,13 @@ fn handle_connection(
         })
         .expect("spawn connection writer");
 
-    let lane_shared = Arc::clone(&state.lanes[lane]);
+    let conn = Arc::new(ConnShared {
+        id: conn_id,
+        tx: reply_tx.clone(),
+        inflight: AtomicUsize::new(0),
+        next_seq: AtomicU64::new(0),
+        sequencer: Mutex::new(Sequencer::default()),
+    });
     for line in reader.lines() {
         let Ok(line) = line else { break };
         if line.trim().is_empty() {
@@ -608,15 +879,21 @@ fn handle_connection(
                 let lanes = state
                     .lanes
                     .iter()
-                    .map(|l| {
+                    .enumerate()
+                    .map(|(i, l)| {
                         let mut snap = l.snapshot.lock().unwrap().clone();
-                        snap.inflight = l.inflight.load(Ordering::SeqCst);
+                        // Admission is a single global counter: report it
+                        // on lane 0 so the per-lane sum equals the server
+                        // total instead of multiply counting it.
+                        snap.inflight = if i == 0 { state.total_inflight() } else { 0 };
                         snap
                     })
                     .collect();
                 Some(
                     Reply::Stats(proto::StatsReply {
                         draining: !state.admitting(),
+                        shared_cache: state.shared_cache.load(Ordering::SeqCst),
+                        scheduler: state.gauges.lock().unwrap().clone(),
                         lanes,
                     })
                     .dump(),
@@ -635,6 +912,12 @@ fn handle_connection(
                         .dump(),
                 )
             }
+            Ok(Request::Resume) => {
+                if !state.shutdown.load(Ordering::SeqCst) {
+                    state.draining.store(false, Ordering::SeqCst);
+                }
+                Some(Reply::Resume(proto::ResumeReply { admitting: state.admitting() }).dump())
+            }
             Ok(Request::Search(request)) => {
                 let id = request.query.id;
                 if !state.admitting() {
@@ -643,28 +926,43 @@ fn handle_connection(
                         "server is draining; not admitting new queries",
                         Some(id),
                     ))
-                } else if !try_admit(&lane_shared.inflight, max_inflight) {
+                } else if !try_admit(&state.inflight, state.max_inflight) {
                     Some(error_line(
                         ErrorCode::Overloaded,
-                        format!("lane {lane} at max_inflight_per_lane={max_inflight}"),
+                        format!("server at max_inflight={}", state.max_inflight),
+                        Some(id),
+                    ))
+                } else if !try_admit(&conn.inflight, state.max_inflight_per_conn) {
+                    state.inflight.fetch_sub(1, Ordering::SeqCst);
+                    Some(error_line(
+                        ErrorCode::Overloaded,
+                        format!(
+                            "connection at max_inflight_per_conn={}",
+                            state.max_inflight_per_conn
+                        ),
                         Some(id),
                     ))
                 } else {
+                    // Admitted: the request owns the next sequence slot;
+                    // every path from here routes exactly one reply
+                    // through the sequencer under this number.
+                    let seq = conn.next_seq.fetch_add(1, Ordering::SeqCst);
                     let work = Work {
                         request,
                         received_at: Instant::now(),
-                        reply: reply_tx.clone(),
+                        conn: Arc::clone(&conn),
+                        seq,
                     };
-                    if req_tx.send(work).is_err() {
-                        // Lane gone (shutdown): release the slot, answer.
-                        lane_shared.inflight.fetch_sub(1, Ordering::SeqCst);
-                        Some(error_line(
-                            ErrorCode::ShuttingDown,
-                            "server shutting down",
-                            Some(id),
-                        ))
+                    if work_tx.send(work).is_err() {
+                        // Scheduler gone (shutdown): answer ourselves,
+                        // through the sequencer so no later reply is held
+                        // hostage by a gap in the sequence.
+                        state.inflight.fetch_sub(1, Ordering::SeqCst);
+                        conn.inflight.fetch_sub(1, Ordering::SeqCst);
+                        conn.send_seq(seq, shutting_down_line(id));
+                        None
                     } else {
-                        None // the lane will reply
+                        None // the scheduler and a lane will reply
                     }
                 }
             }
@@ -676,11 +974,12 @@ fn handle_connection(
         }
     }
     drop(reply_tx);
+    drop(conn);
     let _ = writer_thread.join();
 }
 
-/// Reserve one admission slot unless the lane is full (compare-exchange so
-/// racing handler threads can never exceed the bound).
+/// Reserve one admission slot unless the counter is at `max`
+/// (compare-exchange so racing handler threads can never exceed a bound).
 fn try_admit(inflight: &AtomicUsize, max: usize) -> bool {
     let mut cur = inflight.load(Ordering::SeqCst);
     loop {
@@ -699,15 +998,28 @@ mod tests {
     use super::*;
     use crate::proto::SearchOptions;
 
+    fn conn() -> (Arc<ConnShared>, Receiver<String>) {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let conn = Arc::new(ConnShared {
+            id: 0,
+            tx,
+            inflight: AtomicUsize::new(0),
+            next_seq: AtomicU64::new(0),
+            sequencer: Mutex::new(Sequencer::default()),
+        });
+        (conn, rx)
+    }
+
     fn work(id: usize, deadline_ms: Option<u64>, age: Duration) -> Work {
-        let (tx, _rx) = std::sync::mpsc::channel();
+        let (conn, _rx) = conn();
         Work {
             request: SearchRequest {
                 query: Query { id, template: 0, topic: 0, tokens: vec![] },
                 options: SearchOptions { deadline_ms, ..Default::default() },
             },
             received_at: Instant::now() - age,
-            reply: tx,
+            conn,
+            seq: 0,
         }
     }
 
@@ -722,7 +1034,7 @@ mod tests {
     #[test]
     fn bypass_detection() {
         let plain = work(1, Some(100), Duration::ZERO);
-        assert!(!wants_bypass(&plain.request, 10), "deadline alone stays grouped");
+        assert!(!wants_bypass(&plain.request, 10), "deadline alone stays pooled");
         let mut w = work(2, None, Duration::ZERO);
         w.request.options.no_group = true;
         assert!(wants_bypass(&w.request, 10));
@@ -731,7 +1043,7 @@ mod tests {
         assert!(wants_bypass(&w.request, 10));
         let mut w = work(4, None, Duration::ZERO);
         w.request.options.top_k = Some(5);
-        assert!(!wants_bypass(&w.request, 10), "smaller top_k truncates in-batch");
+        assert!(!wants_bypass(&w.request, 10), "smaller top_k truncates in-window");
         w.request.options.top_k = Some(25);
         assert!(wants_bypass(&w.request, 10), "larger top_k needs the bypass path");
     }
@@ -745,5 +1057,34 @@ mod tests {
         inflight.fetch_sub(1, Ordering::SeqCst);
         assert!(try_admit(&inflight, 2));
         assert_eq!(inflight.load(Ordering::SeqCst), 2);
+    }
+
+    #[test]
+    fn sequencer_restores_request_order() {
+        // Replies arriving 2, 0, 1, 3 (windows on different lanes finish
+        // out of order) must reach the writer as 0, 1, 2, 3.
+        let (conn, rx) = conn();
+        conn.send_seq(2, "r2".to_string());
+        assert!(rx.try_recv().is_err(), "held until the gap closes");
+        conn.send_seq(0, "r0".to_string());
+        assert_eq!(rx.try_recv().unwrap(), "r0");
+        assert!(rx.try_recv().is_err(), "seq 1 still missing");
+        conn.send_seq(1, "r1".to_string());
+        assert_eq!(rx.try_recv().unwrap(), "r1");
+        assert_eq!(rx.try_recv().unwrap(), "r2");
+        conn.send_seq(3, "r3".to_string());
+        assert_eq!(rx.try_recv().unwrap(), "r3");
+        assert!(conn.sequencer.lock().unwrap().held.is_empty());
+    }
+
+    #[test]
+    fn job_queue_delivers_and_times_out() {
+        let q = JobQueue::default();
+        assert!(q.pop_timeout(Duration::from_millis(5)).is_none());
+        q.push(Job::Window(Vec::new()));
+        match q.pop_timeout(Duration::from_millis(5)) {
+            Some(Job::Window(w)) => assert!(w.is_empty()),
+            other => panic!("expected the pushed window, got {:?}", other.is_some()),
+        }
     }
 }

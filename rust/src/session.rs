@@ -34,7 +34,9 @@ use std::time::Duration;
 
 use crate::cache::{CacheStats, ShardedClusterCache};
 use crate::config::Config;
+use crate::coordinator::scheduler::{SessionScheduler, WindowConfig};
 use crate::coordinator::{BatchStats, Coordinator, Mode, QueryOutcome, SchedulePolicy};
+use crate::engine::inflight::InFlight;
 use crate::engine::SearchEngine;
 use crate::harness::runner;
 use crate::workload::{DatasetSpec, Query};
@@ -56,6 +58,7 @@ pub struct SessionBuilder {
     policy: Option<Box<dyn SchedulePolicy>>,
     ensure: bool,
     shared_cache: Option<Arc<ShardedClusterCache>>,
+    shared_inflight: Option<Arc<InFlight>>,
 }
 
 impl Default for SessionBuilder {
@@ -67,6 +70,7 @@ impl Default for SessionBuilder {
             policy: None,
             ensure: true,
             shared_cache: None,
+            shared_inflight: None,
         }
     }
 }
@@ -142,10 +146,28 @@ impl SessionBuilder {
         self
     }
 
+    /// Serve over an externally owned in-flight read registry instead of a
+    /// private one — how a multi-lane server deduplicates disk reads
+    /// *across* lanes: with one registry, a cluster two lanes miss on
+    /// concurrently is read from disk exactly once and the loser waits for
+    /// the winner's read. Pair with [`SessionBuilder::shared_cache`].
+    pub fn shared_inflight(mut self, inflight: Arc<InFlight>) -> Self {
+        self.shared_inflight = Some(inflight);
+        self
+    }
+
     /// Validate the configuration, resolve the dataset, provision the index
     /// if requested, and assemble the serving session.
     pub fn open(self) -> anyhow::Result<Session> {
-        let SessionBuilder { cfg, dataset, dataset_name, policy, ensure, shared_cache } = self;
+        let SessionBuilder {
+            cfg,
+            dataset,
+            dataset_name,
+            policy,
+            ensure,
+            shared_cache,
+            shared_inflight,
+        } = self;
         cfg.validate()?;
         let spec = match (dataset, dataset_name) {
             (Some(spec), _) => spec,
@@ -161,7 +183,7 @@ impl SessionBuilder {
         if ensure {
             runner::ensure_dataset(&cfg, &spec)?;
         }
-        let engine = SearchEngine::open_shared(&cfg, &spec, shared_cache)?;
+        let engine = SearchEngine::open_shared(&cfg, &spec, shared_cache, shared_inflight)?;
         Ok(Session {
             coordinator: Coordinator::new(engine, policy),
             spec,
@@ -215,6 +237,16 @@ impl Session {
         let (report, hits) = engine.search_with(&prepared[0], opts.top_k)?;
         self.totals.queries += 1;
         Ok(QueryOutcome { report, hits, group: 0 })
+    }
+
+    /// Drive this session through the streaming-scheduler core: pooled
+    /// micro-batch windows with deadline-aware bypass — the identical
+    /// window-formation and bypass logic the TCP server applies across
+    /// connections (`crate::coordinator::scheduler`). Use this instead of
+    /// hand-rolled `run_batch` calls when queries trickle in from many
+    /// logical sources and you want grouping quality to rise with traffic.
+    pub fn scheduler(&mut self, window: WindowConfig) -> SessionScheduler<'_> {
+        SessionScheduler::new(self, window)
     }
 
     /// Enqueue one query without doing any work (non-blocking).

@@ -34,6 +34,12 @@ pub struct DiskModel {
     failing: HashSet<u32>,
     /// Total simulated latency injected so far (metrics/debug).
     pub injected: Duration,
+    /// Disk reads performed so far. Every fetch path asks this model for a
+    /// read latency exactly once per actual cluster read (even under the
+    /// `None` profile), so on an engine — or a set of engines sharing one
+    /// model — this counts *unique* fetches: the quantity the cross-lane
+    /// `InFlight` dedup and the pooled scheduler exist to minimize.
+    pub reads: u64,
 }
 
 impl DiskModel {
@@ -43,12 +49,15 @@ impl DiskModel {
             rng: Rng::new(seed).derive(0xD15C),
             failing: HashSet::new(),
             injected: Duration::ZERO,
+            reads: 0,
         }
     }
 
     /// Latency to inject for a cluster file of `bytes` (on top of the real
     /// read). Deterministic except for ±5% jitter from the seeded RNG.
+    /// Also counts the read into [`DiskModel::reads`].
     pub fn read_latency(&mut self, bytes: u64) -> Duration {
+        self.reads += 1;
         let (base_us, bytes_per_us) = match self.profile {
             DiskProfile::None => return Duration::ZERO,
             // 80 us issue latency; 2 GiB/s sequential => ~2147 bytes/us.
@@ -163,5 +172,18 @@ mod tests {
         let d1 = m.read_latency(1 << 20);
         let d2 = m.read_latency(1 << 20);
         assert_eq!(m.injected, d1 + d2);
+    }
+
+    #[test]
+    fn reads_count_every_profile() {
+        // The unique-fetch counter must tick even when no latency is
+        // injected — scheduler tests compare read counts under `None`.
+        let mut m = DiskModel::new(DiskProfile::None, 5);
+        let _ = m.read_latency(1 << 20);
+        let _ = m.read_latency(1 << 10);
+        assert_eq!(m.reads, 2);
+        let mut m = DiskModel::new(DiskProfile::Nvme, 5);
+        let _ = m.read_latency(1 << 20);
+        assert_eq!(m.reads, 1);
     }
 }

@@ -55,8 +55,8 @@ fn launch(
     };
     let mut server_cfg = ServerConfig {
         addr: "127.0.0.1:0".to_string(),
-        batch_window: Duration::from_millis(5),
-        batch_max: 32,
+        window_max_wait: Duration::from_millis(5),
+        window_max_queries: 32,
         lanes,
         ..Default::default()
     };
@@ -213,10 +213,10 @@ fn per_request_options_are_honored() {
 #[test]
 fn expired_deadline_yields_deadline_exceeded() {
     let (cfg, spec) = test_cfg("deadline");
-    // A wide batch window guarantees the request sits in the batcher
-    // longer than its 0ms budget: the dequeue-time check must fire.
+    // A 0ms budget cannot survive any window: the scheduler dispatches it
+    // express, and the pre-search deadline check fires at the lane.
     let handle = launch(&cfg, &spec, 1, None, |sc| {
-        sc.batch_window = Duration::from_millis(30);
+        sc.window_max_wait = Duration::from_millis(30);
     });
     let queries = generate_queries(&spec);
     let mut client = Client::connect(handle.addr).unwrap();
@@ -242,13 +242,12 @@ fn overload_yields_structured_errors_not_hangs_or_drops() {
     let (cfg, spec) = test_cfg("overload");
     const MAX_INFLIGHT: usize = 2;
     const TOTAL: usize = 24;
-    // One lane, tiny admission bound, slow batcher: pipelined requests
-    // pile up at admission while the lane sleeps in its gather window, so
-    // rejections are guaranteed.
+    // Tiny global budget, slow window: pipelined requests pile up at
+    // admission while the scheduler gathers, so rejections are guaranteed.
     let handle = launch(&cfg, &spec, 1, None, |sc| {
-        sc.max_inflight_per_lane = MAX_INFLIGHT;
-        sc.batch_window = Duration::from_millis(100);
-        sc.batch_max = 4;
+        sc.max_inflight = MAX_INFLIGHT;
+        sc.window_max_wait = Duration::from_millis(100);
+        sc.window_max_queries = 4;
     });
     let queries = generate_queries(&spec);
     let mut client = Client::connect(handle.addr).unwrap();
@@ -307,9 +306,10 @@ fn overload_yields_structured_errors_not_hangs_or_drops() {
 fn drain_rejects_new_queries_and_completes_in_flight() {
     let (cfg, spec) = test_cfg("drain");
     let handle = launch(&cfg, &spec, 1, None, |sc| {
-        // Deep gather window: the batch cannot complete before the test
-        // has observed all submissions in flight and issued the drain.
-        sc.batch_window = Duration::from_millis(300);
+        // Deep pooling window: the window cannot flush before the test
+        // has observed all submissions in flight and issued the drain
+        // (the drain itself force-flushes the open window).
+        sc.window_max_wait = Duration::from_millis(300);
         sc.drain_timeout = Duration::from_secs(10);
     });
     let queries = generate_queries(&spec);
@@ -378,18 +378,60 @@ fn control_plane_stats_and_health_expose_counters() {
         let r = client.search(q).unwrap();
         assert_eq!(r.query_id, q.id);
     }
-    // Snapshots are published after every batch, so by the time the last
-    // reply arrived the lane's counters cover all N queries.
+    // Snapshots are published before each job's replies route, so by the
+    // time the last reply arrived the counters cover all N queries. The
+    // scheduler hands windows to whichever lane is free, so the per-lane
+    // split is timing-dependent — the sum covers every query exactly once.
     let s = client.stats().unwrap();
     assert!(!s.draining);
     assert_eq!(s.lanes.len(), 2);
     assert_eq!(s.queries(), N, "lane counters must cover the served queries");
-    // This connection is pinned to one lane; that lane saw every batch.
-    let busy = s.lanes.iter().find(|l| l.queries == N).expect("one busy lane");
-    assert_eq!(busy.policy, "qgp");
+    for l in &s.lanes {
+        assert_eq!(l.policy, "qgp", "idle and busy lanes both report their policy");
+    }
+    let busy = s.lanes.iter().find(|l| l.queries > 0).expect("a busy lane");
     assert!(busy.batches >= 1);
     assert!(busy.cache.hits + busy.cache.misses > 0, "cache counters over the wire");
     assert_eq!(s.inflight(), 0);
+    // Scheduler gauges cover the pooled traffic; these lanes were built
+    // with separate caches, and the stats reply must say so.
+    assert!(s.scheduler.windows >= 1);
+    assert_eq!(s.scheduler.window_queries as usize, N);
+    assert!(!s.shared_cache, "independent per-lane caches must not advertise sharing");
+
+    handle.shutdown();
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}
+
+#[test]
+fn resume_reopens_admission_after_drain() {
+    let (cfg, spec) = test_cfg("resume");
+    let handle = launch(&cfg, &spec, 1, None, |_| {});
+    let queries = generate_queries(&spec);
+    let mut ctl = Client::connect(handle.addr).unwrap();
+
+    // Drain: admission closes.
+    let d = ctl.drain().unwrap();
+    assert!(d.drained);
+    match ctl.search(&queries[0]) {
+        Err(ClientError::Server(e)) => assert_eq!(e.code, ErrorCode::ShuttingDown),
+        other => panic!("expected shutting-down while drained, got {other:?}"),
+    }
+    assert_eq!(ctl.health().unwrap().status, "draining");
+
+    // Resume: the rolling restart aborted; the server admits again — on
+    // this connection and on a fresh one.
+    let r = ctl.resume().unwrap();
+    assert!(r.admitting, "resume must reopen admission");
+    assert_eq!(ctl.health().unwrap().status, "ok");
+    let reply = ctl.search(&queries[0]).unwrap();
+    assert_eq!(reply.query_id, queries[0].id);
+    let mut fresh = Client::connect(handle.addr).unwrap();
+    let reply = fresh.search(&queries[1]).unwrap();
+    assert_eq!(reply.query_id, queries[1].id);
+
+    // Resume is idempotent on an already-admitting server.
+    assert!(ctl.resume().unwrap().admitting);
 
     handle.shutdown();
     std::fs::remove_dir_all(&cfg.data_dir).ok();

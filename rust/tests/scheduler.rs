@@ -1,0 +1,613 @@
+//! Streaming-scheduler suite: cross-connection micro-batch pooling must be
+//! *correct* (identical results to single-connection submission and to the
+//! exhaustive oracle), *profitable* (pooled grouping beats the
+//! per-connection baseline on cache hits and unique disk fetches — the
+//! PR's acceptance gate), and *well-behaved* (window flush discipline,
+//! deadline bypass, global admission, per-connection fairness, gauges).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use cagr::client::{Client, ClientError, RetryPolicy};
+use cagr::config::{Backend, Config, DiskProfile};
+use cagr::coordinator::scheduler::WindowConfig;
+use cagr::coordinator::{JaccardGrouping, Mode};
+use cagr::harness::runner::ensure_dataset;
+use cagr::proto::{ErrorCode, SearchOptions};
+use cagr::server::{start, ServerConfig, ServerHandle};
+use cagr::session::Session;
+use cagr::workload::{generate_queries, DatasetSpec, Query};
+
+fn test_cfg(tag: &str) -> (Config, DatasetSpec) {
+    let mut cfg = Config::default();
+    cfg.data_dir =
+        std::env::temp_dir().join(format!("cagr-sched-{}-{tag}", std::process::id()));
+    cfg.clusters = 16;
+    cfg.nprobe = 4;
+    cfg.top_k = 5;
+    cfg.cache_entries = 8;
+    cfg.kmeans_iters = 4;
+    cfg.kmeans_sample = 2_000;
+    cfg.backend = Backend::Native;
+    cfg.disk_profile = DiskProfile::None;
+    (cfg, DatasetSpec::tiny(0x5C8E))
+}
+
+fn launch(
+    cfg: &Config,
+    spec: &DatasetSpec,
+    lanes: usize,
+    mode: Mode,
+    shared: bool,
+    tune: impl FnOnce(&mut ServerConfig),
+) -> ServerHandle {
+    ensure_dataset(cfg, spec).unwrap();
+    let shared_parts = if shared {
+        let index = cagr::index::IvfIndex::open(&cfg.dataset_dir(spec.name)).unwrap();
+        let cache = Arc::new(cagr::cache::ShardedClusterCache::from_config(
+            cfg.cache_policy,
+            cfg.cache_entries,
+            cfg.cache_shards,
+            index.meta.read_profile_us.clone(),
+        ));
+        let inflight = Arc::new(cagr::engine::inflight::InFlight::new());
+        Some((cache, inflight))
+    } else {
+        None
+    };
+    let factory = {
+        let cfg = cfg.clone();
+        let spec = spec.clone();
+        move || -> anyhow::Result<Session> {
+            let mut builder = Session::builder()
+                .config(cfg.clone())
+                .dataset(spec.clone())
+                .mode(mode)
+                .ensure_dataset(false);
+            if let Some((cache, inflight)) = &shared_parts {
+                builder = builder
+                    .shared_cache(Arc::clone(cache))
+                    .shared_inflight(Arc::clone(inflight));
+            }
+            builder.open()
+        }
+    };
+    let mut server_cfg = ServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        window_max_wait: Duration::from_millis(5),
+        window_max_queries: 32,
+        lanes,
+        ..Default::default()
+    };
+    tune(&mut server_cfg);
+    start(factory, server_cfg).unwrap()
+}
+
+/// Pipeline `queries` through one connection, windowed; replies keyed by
+/// query id. Panics on any server error.
+fn drive(client: &mut Client, queries: &[Query], window: usize) -> Vec<(usize, Vec<(u32, f32)>)> {
+    let mut out = Vec::with_capacity(queries.len());
+    let mut next = 0usize;
+    let mut outstanding = 0usize;
+    while out.len() < queries.len() {
+        while next < queries.len() && outstanding < window {
+            client.submit(&queries[next]).unwrap();
+            next += 1;
+            outstanding += 1;
+        }
+        let r = client.recv().unwrap();
+        outstanding -= 1;
+        out.push((r.query_id, r.hits.iter().map(|h| (h.doc, h.distance)).collect()));
+    }
+    out
+}
+
+/// The acceptance-criteria conformance test: a cross-connection micro-batch
+/// (8 connections × 4 queries) must produce hits/distances identical to
+/// (a) the same 32 queries submitted on ONE connection and (b) the
+/// exhaustive oracle (nprobe = clusters makes IVF exact).
+#[test]
+fn pooled_window_parity_with_single_connection_and_oracle() {
+    let (mut cfg, spec) = test_cfg("parity");
+    cfg.nprobe = cfg.clusters; // exact search: oracle-comparable
+    cfg.io_workers = 1;
+    cfg.cache_shards = 1;
+    let queries = {
+        ensure_dataset(&cfg, &spec).unwrap();
+        generate_queries(&spec)
+    };
+    const CONNS: usize = 8;
+    const PER_CONN: usize = 4;
+    const N: usize = CONNS * PER_CONN;
+
+    // 8 connections × 4 queries each, pooled by the scheduler. A wide
+    // window wait makes one big cross-connection window near-certain, but
+    // correctness must not depend on how the windows actually cut.
+    let handle = launch(&cfg, &spec, 1, Mode::QGP, false, |sc| {
+        sc.window_max_wait = Duration::from_millis(100);
+        sc.window_max_queries = N;
+    });
+    let addr = handle.addr;
+    let mut workers = Vec::new();
+    for c in 0..CONNS {
+        let stripe: Vec<Query> =
+            queries.iter().skip(c).step_by(CONNS).take(PER_CONN).cloned().collect();
+        workers.push(std::thread::spawn(move || {
+            let mut client = Client::connect(addr).unwrap();
+            drive(&mut client, &stripe, PER_CONN)
+        }));
+    }
+    let mut pooled: Vec<Option<Vec<(u32, f32)>>> = vec![None; N];
+    for w in workers {
+        for (id, hits) in w.join().unwrap() {
+            assert!(pooled[id].is_none(), "duplicate reply for query {id}");
+            pooled[id] = Some(hits);
+        }
+    }
+    handle.shutdown();
+
+    // The same 32 queries on one connection against a fresh server.
+    let handle = launch(&cfg, &spec, 1, Mode::QGP, false, |sc| {
+        sc.window_max_wait = Duration::from_millis(100);
+        sc.window_max_queries = N;
+    });
+    let mut client = Client::connect(handle.addr).unwrap();
+    let single = drive(&mut client, &queries[..N], N);
+    handle.shutdown();
+    for (id, hits) in &single {
+        assert_eq!(
+            pooled[*id].as_ref().unwrap(),
+            hits,
+            "query {id}: pooled cross-connection result diverges from single-connection"
+        );
+    }
+
+    // And against the exhaustive oracle.
+    let mut engine = cagr::engine::SearchEngine::open(&cfg, &spec).unwrap();
+    let prepared = engine.prepare(&queries[..N]).unwrap();
+    for pq in &prepared {
+        let oracle: Vec<(u32, f32)> = engine
+            .exhaustive_search(pq)
+            .unwrap()
+            .iter()
+            .map(|h| (h.doc_id, h.distance))
+            .collect();
+        assert_eq!(
+            pooled[pq.query.id].as_ref().unwrap(),
+            &oracle,
+            "query {}: pooled result diverges from the exhaustive oracle",
+            pq.query.id
+        );
+    }
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}
+
+/// The acceptance gate: 8 connections × 4 queries each on the smoke
+/// config. The scheduler's pooled grouping must achieve a cache hit ratio
+/// >= the per-connection baseline and STRICTLY fewer unique disk fetches
+/// than per-connection worlds with their own caches/registries (the shape
+/// per-lane serving degenerates to at high connection counts).
+///
+/// Deterministic by construction: io_workers = 1, no prefetch policy, and
+/// a cache >= the cluster count so neither side re-reads evicted blocks.
+/// 32 queries × nprobe 4 over 16 clusters guarantee cross-connection
+/// cluster overlap (pigeonhole), so pooling must save reads.
+#[test]
+fn pooled_grouping_beats_per_connection_baseline() {
+    let (mut cfg, spec) = test_cfg("accept");
+    cfg.cache_entries = 16; // >= clusters: no evictions on either side
+    cfg.io_workers = 1;
+    cfg.cache_shards = 1;
+    ensure_dataset(&cfg, &spec).unwrap();
+    let queries = generate_queries(&spec);
+    const CONNS: usize = 8;
+    const PER_CONN: usize = 4;
+
+    // Per-connection baseline: each connection's thin slice batched in its
+    // own session (own cache, own InFlight) — what per-lane serving gave a
+    // connection pinned to its own lane.
+    let (mut base_hits, mut base_misses, mut base_reads) = (0u64, 0u64, 0u64);
+    for c in 0..CONNS {
+        let stripe: Vec<Query> =
+            queries.iter().skip(c).step_by(CONNS).take(PER_CONN).cloned().collect();
+        let mut session = Session::builder()
+            .config(cfg.clone())
+            .dataset(spec.clone())
+            .policy(JaccardGrouping::default())
+            .ensure_dataset(false)
+            .open()
+            .unwrap();
+        session.run_batch(&stripe).unwrap();
+        let s = session.cache_stats();
+        base_hits += s.hits;
+        base_misses += s.misses;
+        base_reads += session.engine().disk.lock().unwrap().reads;
+    }
+
+    // Pooled: the same 32 queries through ONE session driven by the
+    // streaming-scheduler core, interleaved round-robin the way arrivals
+    // from 8 connections interleave.
+    let mut session = Session::builder()
+        .config(cfg.clone())
+        .dataset(spec.clone())
+        .policy(JaccardGrouping::default())
+        .ensure_dataset(false)
+        .open()
+        .unwrap();
+    let mut sched = session.scheduler(WindowConfig {
+        max_queries: CONNS * PER_CONN,
+        max_wait: Duration::from_secs(10),
+    });
+    let mut outcomes = Vec::new();
+    for i in 0..PER_CONN {
+        for c in 0..CONNS {
+            let q = queries.iter().skip(c).step_by(CONNS).nth(i).unwrap();
+            outcomes.extend(sched.submit(q, None).unwrap());
+        }
+    }
+    assert_eq!(
+        outcomes.len(),
+        CONNS * PER_CONN,
+        "window of exactly 32 must have flushed on the 32nd submit"
+    );
+    let totals = sched.totals();
+    assert_eq!((totals.windows, totals.pooled, totals.bypassed), (1, 32, 0));
+    let s = session.cache_stats();
+    let pooled_reads = session.engine().disk.lock().unwrap().reads;
+
+    let base_ratio = base_hits as f64 / (base_hits + base_misses) as f64;
+    let pooled_ratio = s.hits as f64 / (s.hits + s.misses) as f64;
+    assert!(
+        pooled_ratio >= base_ratio,
+        "pooled hit ratio {pooled_ratio:.3} < per-connection baseline {base_ratio:.3}"
+    );
+    assert!(
+        pooled_reads < base_reads,
+        "pooled grouping must read strictly fewer unique clusters: \
+         pooled {pooled_reads} vs per-connection {base_reads}"
+    );
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}
+
+/// In-process scheduler parity: driving a session through SessionScheduler
+/// windows must produce the same per-query results as a direct run_batch.
+#[test]
+fn session_scheduler_matches_run_batch() {
+    let (cfg, spec) = test_cfg("inproc");
+    ensure_dataset(&cfg, &spec).unwrap();
+    let queries = generate_queries(&spec);
+    const N: usize = 24;
+
+    let mut direct = Session::builder()
+        .config(cfg.clone())
+        .dataset(spec.clone())
+        .mode(Mode::QG)
+        .ensure_dataset(false)
+        .open()
+        .unwrap();
+    let (want, _) = direct.run_batch(&queries[..N]).unwrap();
+
+    let mut session = Session::builder()
+        .config(cfg.clone())
+        .dataset(spec.clone())
+        .mode(Mode::QG)
+        .ensure_dataset(false)
+        .open()
+        .unwrap();
+    let mut sched = session
+        .scheduler(WindowConfig { max_queries: N, max_wait: Duration::from_secs(10) });
+    let mut got = Vec::new();
+    for q in &queries[..N] {
+        got.extend(sched.submit(q, None).unwrap());
+    }
+    let key = |outs: &[cagr::coordinator::QueryOutcome]| {
+        let mut v: Vec<(usize, Vec<u32>)> = outs
+            .iter()
+            .map(|o| (o.report.query_id, o.hits.iter().map(|h| h.doc_id).collect()))
+            .collect();
+        v.sort();
+        v
+    };
+    assert_eq!(key(&got), key(&want), "windowed scheduling changed results");
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}
+
+/// In-process flush-time deadline pass: a pooled query whose budget died
+/// while the caller delayed the flush must skip the search (the server's
+/// dequeue-time check, mirrored), surfacing through `take_expired`.
+#[test]
+fn session_scheduler_drops_expired_pooled_queries_at_flush() {
+    let (cfg, spec) = test_cfg("expire");
+    ensure_dataset(&cfg, &spec).unwrap();
+    let queries = generate_queries(&spec);
+    let mut session = Session::builder()
+        .config(cfg.clone())
+        .dataset(spec.clone())
+        .mode(Mode::QG)
+        .ensure_dataset(false)
+        .open()
+        .unwrap();
+    let mut sched = session
+        .scheduler(WindowConfig { max_queries: 8, max_wait: Duration::from_millis(10) });
+
+    // 50ms budget > 10ms window wait: pooled, not bypassed. A second query
+    // without a deadline pools alongside it.
+    assert!(sched.submit(&queries[0], Some(50)).unwrap().is_empty());
+    assert!(sched.submit(&queries[1], None).unwrap().is_empty());
+    assert_eq!(sched.pending(), 2);
+
+    // The embedder dawdles past the deadline before driving the flush.
+    std::thread::sleep(Duration::from_millis(80));
+    let outcomes = sched.poll().unwrap();
+    assert_eq!(outcomes.len(), 1, "only the undeadlined query searches");
+    assert_eq!(outcomes[0].report.query_id, queries[1].id);
+    let expired = sched.take_expired();
+    assert_eq!(expired.len(), 1);
+    assert_eq!(expired[0].id, queries[0].id, "the expired query is reported, not searched");
+    assert!(sched.take_expired().is_empty(), "take_expired drains");
+    let totals = sched.totals();
+    assert_eq!((totals.windows, totals.pooled, totals.expired), (1, 2, 1));
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}
+
+/// A deadline too tight to survive the window must bypass it: the express
+/// query completes while a plain query on another connection is still
+/// pooling in a deep window.
+#[test]
+fn deadline_bypass_skips_window() {
+    let (cfg, spec) = test_cfg("bypass");
+    let handle = launch(&cfg, &spec, 1, Mode::QGP, false, |sc| {
+        sc.window_max_wait = Duration::from_millis(400);
+        sc.window_max_queries = 100;
+    });
+    let queries = generate_queries(&spec);
+
+    // Connection A: a plain query that will pool for the full 400ms wait.
+    let mut slow = Client::connect(handle.addr).unwrap();
+    slow.submit(&queries[0]).unwrap();
+
+    // Connection B: a deadline the window wait would kill — the scheduler
+    // must dispatch it express, well before A's window flushes.
+    let mut fast = Client::connect(handle.addr).unwrap();
+    let t0 = Instant::now();
+    let opts = SearchOptions { deadline_ms: Some(300), ..Default::default() };
+    let express = fast.search_with(&queries[1], &opts).unwrap();
+    let express_elapsed = t0.elapsed();
+    assert_eq!(express.query_id, queries[1].id);
+    assert_eq!(express.group, 0, "express queries run the single-query path");
+
+    // A's reply only lands once its window flushed.
+    let slow_reply = slow.recv().unwrap();
+    let window_elapsed = t0.elapsed();
+    assert_eq!(slow_reply.query_id, queries[0].id);
+    assert!(
+        express_elapsed < Duration::from_millis(250),
+        "express query waited like a pooled one: {express_elapsed:?}"
+    );
+    assert!(
+        window_elapsed > express_elapsed,
+        "pooled query ({window_elapsed:?}) should outlast the express one \
+         ({express_elapsed:?})"
+    );
+
+    // The gauges saw one express dispatch.
+    let mut ctl = Client::connect(handle.addr).unwrap();
+    let stats = ctl.stats().unwrap();
+    assert!(stats.scheduler.express >= 1, "express dispatch not counted");
+    handle.shutdown();
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}
+
+/// A full window must flush immediately on the size bound, not wait out
+/// its (here: effectively infinite) time bound.
+#[test]
+fn window_flushes_on_max_queries() {
+    let (cfg, spec) = test_cfg("sizeflush");
+    let handle = launch(&cfg, &spec, 1, Mode::QGP, false, |sc| {
+        sc.window_max_wait = Duration::from_secs(30);
+        sc.window_max_queries = 4;
+    });
+    let queries = generate_queries(&spec);
+    let mut client = Client::connect(handle.addr).unwrap();
+    let t0 = Instant::now();
+    for q in &queries[..4] {
+        client.submit(q).unwrap();
+    }
+    for q in &queries[..4] {
+        let r = client.recv().unwrap();
+        assert_eq!(r.query_id, q.id, "replies in request order");
+    }
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "4 queries against window_max_queries=4 must flush on size, not time"
+    );
+    handle.shutdown();
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}
+
+/// Global admission: the server-wide budget bounds in-flight queries
+/// across ALL connections; every request is answered exactly once; and the
+/// built-in retry helper eventually gets through after the backlog clears.
+#[test]
+fn global_admission_budget_spans_connections() {
+    let (cfg, spec) = test_cfg("globadm");
+    const MAX_INFLIGHT: usize = 2;
+    const PER_CONN: usize = 12;
+    let handle = launch(&cfg, &spec, 1, Mode::QGP, false, |sc| {
+        sc.max_inflight = MAX_INFLIGHT;
+        sc.max_inflight_per_conn = 100; // only the global budget binds
+        sc.window_max_wait = Duration::from_millis(100);
+        sc.window_max_queries = 4;
+    });
+    let queries = generate_queries(&spec);
+
+    let mut a = Client::connect(handle.addr).unwrap();
+    let mut b = Client::connect(handle.addr).unwrap();
+    for i in 0..PER_CONN {
+        a.submit(&queries[i]).unwrap();
+        b.submit(&queries[PER_CONN + i]).unwrap();
+    }
+    let mut ok = 0usize;
+    let mut overloaded = 0usize;
+    for conn in [&mut a, &mut b] {
+        let mut answered = std::collections::HashSet::new();
+        for _ in 0..PER_CONN {
+            match conn.recv() {
+                Ok(r) => {
+                    assert!(answered.insert(r.query_id), "duplicate reply {}", r.query_id);
+                    ok += 1;
+                }
+                Err(ClientError::Server(e)) => {
+                    assert_eq!(e.code, ErrorCode::Overloaded, "{e}");
+                    assert!(e.message.contains("max_inflight="), "{}", e.message);
+                    assert!(answered.insert(e.query_id.unwrap()), "duplicate error");
+                    overloaded += 1;
+                }
+                Err(e) => panic!("unexpected client error: {e}"),
+            }
+        }
+    }
+    assert_eq!(ok + overloaded, 2 * PER_CONN, "every request answered exactly once");
+    assert!(
+        overloaded > 0,
+        "{} pipelined queries against max_inflight={MAX_INFLIGHT} must trip admission",
+        2 * PER_CONN
+    );
+    assert!(ok > 0, "admitted queries must still be answered");
+
+    // The retry satellite end-to-end: exponential backoff rides out any
+    // residual backlog.
+    let policy = RetryPolicy { max_attempts: 50, ..Default::default() };
+    let r = a
+        .search_with_retry(&queries[2 * PER_CONN], &SearchOptions::default(), &policy)
+        .expect("retry helper should get through once the backlog clears");
+    assert_eq!(r.query_id, queries[2 * PER_CONN].id);
+    handle.shutdown();
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}
+
+/// Per-connection fairness: one greedy pipelined connection hits its own
+/// bound while a second connection still gets admitted instantly.
+#[test]
+fn per_connection_floor_protects_other_connections() {
+    let (cfg, spec) = test_cfg("fairadm");
+    const PER_CONN_CAP: usize = 2;
+    let handle = launch(&cfg, &spec, 1, Mode::QGP, false, |sc| {
+        sc.max_inflight = 100; // only the per-connection bound binds
+        sc.max_inflight_per_conn = PER_CONN_CAP;
+        sc.window_max_wait = Duration::from_millis(200);
+        sc.window_max_queries = 100;
+    });
+    let queries = generate_queries(&spec);
+
+    // Greedy connection: 10 pipelined submissions against a cap of 2.
+    let mut greedy = Client::connect(handle.addr).unwrap();
+    for q in &queries[..10] {
+        greedy.submit(q).unwrap();
+    }
+    // A well-behaved second connection is admitted while the greedy one's
+    // backlog is still pooling (the 200ms window holds its admitted pair).
+    let mut polite = Client::connect(handle.addr).unwrap();
+    let r = polite.search(&queries[10]).unwrap();
+    assert_eq!(r.query_id, queries[10].id);
+
+    let mut ok = 0usize;
+    let mut overloaded = 0usize;
+    for _ in 0..10 {
+        match greedy.recv() {
+            Ok(_) => ok += 1,
+            Err(ClientError::Server(e)) => {
+                assert_eq!(e.code, ErrorCode::Overloaded, "{e}");
+                assert!(e.message.contains("max_inflight_per_conn="), "{}", e.message);
+                overloaded += 1;
+            }
+            Err(e) => panic!("unexpected client error: {e}"),
+        }
+    }
+    assert_eq!(ok + overloaded, 10);
+    assert!(overloaded > 0, "10 pipelined against a per-conn cap of 2 must reject");
+    handle.shutdown();
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}
+
+/// The stats verb exposes the pooling evidence: shared_cache flag, window
+/// gauges, and — with two connections pooling into one window under the
+/// arrival-order policy — a group that spans connections.
+#[test]
+fn stats_expose_shared_cache_and_cross_connection_gauges() {
+    let (cfg, spec) = test_cfg("gauges");
+    // Baseline policy: the whole window dispatches as ONE group, so a
+    // multi-connection window deterministically yields a cross-connection
+    // group.
+    let handle = launch(&cfg, &spec, 2, Mode::Baseline, true, |sc| {
+        sc.window_max_wait = Duration::from_millis(500);
+        sc.window_max_queries = 100;
+    });
+    let queries = generate_queries(&spec);
+
+    let mut a = Client::connect(handle.addr).unwrap();
+    let mut b = Client::connect(handle.addr).unwrap();
+    for i in 0..4 {
+        a.submit(&queries[i]).unwrap();
+        b.submit(&queries[4 + i]).unwrap();
+    }
+    for _ in 0..4 {
+        a.recv().unwrap();
+        b.recv().unwrap();
+    }
+
+    let mut ctl = Client::connect(handle.addr).unwrap();
+    let s = ctl.stats().unwrap();
+    assert!(s.shared_cache, "two lanes over one cache must advertise shared_cache");
+    let g = &s.scheduler;
+    assert!(g.windows >= 1, "at least one window dispatched");
+    assert_eq!(g.window_queries, 8, "all 8 queries pooled through windows");
+    assert!(g.max_occupancy >= 2);
+    assert!(
+        g.multi_conn_windows >= 1,
+        "a 500ms window over two pipelining connections must pool both"
+    );
+    assert!(
+        g.cross_conn_groups >= 1,
+        "arrival-order grouping over a multi-connection window must span connections"
+    );
+    // Lane views of one shared cache: identical counters, not summed.
+    assert_eq!(s.lanes.len(), 2);
+    handle.shutdown();
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}
+
+/// Single-lane sequential config: the scheduler path must keep the per-
+/// connection reply order guarantee under interleaved multi-connection
+/// load (the sequencer's job), mirroring the old per-lane guarantee.
+#[test]
+fn reply_order_preserved_across_windows() {
+    let (cfg, spec) = test_cfg("order");
+    let handle = launch(&cfg, &spec, 2, Mode::QGP, true, |sc| {
+        sc.window_max_wait = Duration::from_millis(2);
+        sc.window_max_queries = 4; // many small windows over 2 lanes
+    });
+    let queries = generate_queries(&spec);
+    let addr = handle.addr;
+    let mut workers = Vec::new();
+    for t in 0..4usize {
+        let qs: Vec<Query> = queries.iter().skip(t).step_by(4).take(12).cloned().collect();
+        workers.push(std::thread::spawn(move || {
+            let mut client = Client::connect(addr).unwrap();
+            for q in &qs {
+                client.submit(q).unwrap();
+            }
+            let sent: Vec<usize> = qs.iter().map(|q| q.id).collect();
+            let mut got = Vec::new();
+            for _ in 0..qs.len() {
+                got.push(client.recv().unwrap().query_id);
+            }
+            assert_eq!(got, sent, "connection {t}: replies out of request order");
+        }));
+    }
+    for w in workers {
+        w.join().unwrap();
+    }
+    handle.shutdown();
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}

@@ -58,8 +58,8 @@ fn launch_lanes(
         factory,
         ServerConfig {
             addr: "127.0.0.1:0".to_string(),
-            batch_window: std::time::Duration::from_millis(5),
-            batch_max: 32,
+            window_max_wait: std::time::Duration::from_millis(5),
+            window_max_queries: 32,
             lanes,
             ..Default::default()
         },

@@ -1,0 +1,233 @@
+//! Grouping-cost microbench: Algorithm 1 at window sizes 100 / 1 000 /
+//! 10 000 under three engines —
+//!
+//!  * `naive`        — the O(window² · nprobe) oracle (`group_queries`)
+//!  * `indexed`      — bitset kernels + postings pruning
+//!                     (`group_queries_indexed`; `indexed-sorted` is the
+//!                     same engine on the sorted-vec fallback rep)
+//!  * `incremental`  — `IncrementalGrouper`: the per-admission assign cost
+//!                     (paid inside the window wait) reported separately
+//!                     from the flush cost (`finish()`), which must stay
+//!                     O(groups) — independent of window member count.
+//!
+//! The workload is topical (queries drawn from a fixed set of topic
+//! cluster-profiles with noise), matching the paper's premise that
+//! concurrent RAG queries share cluster-access patterns; universe 100 and
+//! nprobe 10 are the paper's §4.1 defaults. Every run is checked for
+//! oracle parity before timing.
+//!
+//! Emits `results/grouping_cost.json` (uploaded per PR by CI's
+//! bench-smoke job). Acceptance gates live in the summary: the indexed
+//! engine ≥5× naive at window 1 000, and the incremental flush cost flat
+//! across window sizes.
+//!
+//! Env knobs: `CAGR_GROUPING_FULL=1` also times naive at window 10 000
+//! (skipped by default — it is the quadratic arm the PR retires).
+
+use std::time::{Duration, Instant};
+
+use cagr::config::GroupingPolicy;
+use cagr::coordinator::grouping::{group_queries, group_queries_indexed, IncrementalGrouper};
+use cagr::coordinator::jaccard::ClusterUniverse;
+use cagr::engine::PreparedQuery;
+use cagr::harness::{banner, bench, format_duration};
+use cagr::metrics::render_table;
+use cagr::util::json::{obj, Json};
+use cagr::util::rng::Rng;
+use cagr::workload::Query;
+
+const UNIVERSE: usize = 100; // paper §4.1
+const NPROBE: usize = 10;
+const TOPICS: usize = 32;
+const THETA: f64 = 0.5;
+const LINK: GroupingPolicy = GroupingPolicy::SingleLink;
+
+/// Per-topic cluster profiles: distinct nprobe-sized id sets.
+fn topic_bases(rng: &mut Rng) -> Vec<Vec<u32>> {
+    (0..TOPICS)
+        .map(|_| {
+            let mut s = std::collections::BTreeSet::new();
+            while s.len() < NPROBE {
+                s.insert(rng.range(0, UNIVERSE) as u32);
+            }
+            s.into_iter().collect()
+        })
+        .collect()
+}
+
+/// A window of topical queries: each takes a topic's profile with 2 ids
+/// re-rolled (so intra-topic J ≈ 0.67 clears θ = 0.5, cross-topic rarely
+/// does) — raw lists, duplicates and all, like `prepare` hands over.
+fn topical_window(rng: &mut Rng, bases: &[Vec<u32>], n: usize) -> Vec<PreparedQuery> {
+    (0..n)
+        .map(|id| {
+            let mut clusters = bases[rng.range(0, bases.len())].clone();
+            for _ in 0..2 {
+                let pos = rng.range(0, clusters.len());
+                clusters[pos] = rng.range(0, UNIVERSE) as u32;
+            }
+            PreparedQuery {
+                query: Query { id, template: 0, topic: 0, tokens: vec![] },
+                embedding: vec![],
+                clusters,
+                prep_cost: Duration::ZERO,
+            }
+        })
+        .collect()
+}
+
+fn mean_us(d: Duration, reps: usize) -> f64 {
+    d.as_secs_f64() * 1e6 / reps.max(1) as f64
+}
+
+fn main() -> anyhow::Result<()> {
+    banner("grouping_cost: Algorithm 1 — naive vs indexed vs incremental");
+    let full = std::env::var("CAGR_GROUPING_FULL").is_ok();
+    let mut rng = Rng::new(0xCA6E);
+    let bases = topic_bases(&mut rng);
+    let universe = ClusterUniverse::new(UNIVERSE, 1024);
+
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let mut json_windows: Vec<Json> = Vec::new();
+    let mut speedup_at_1000 = 0.0f64;
+    let mut flush_by_window: Vec<(usize, f64)> = Vec::new();
+
+    for &w in &[100usize, 1_000, 10_000] {
+        let batch = topical_window(&mut rng, &bases, w);
+
+        // Oracle parity before any timing: all three engines must agree.
+        let oracle = group_queries(&batch, THETA, LINK);
+        let indexed_plan = group_queries_indexed(&batch, THETA, LINK, universe);
+        assert_eq!(
+            indexed_plan.dispatch_order(),
+            oracle.dispatch_order(),
+            "indexed engine diverged from the oracle at window {w}"
+        );
+        assert_eq!(indexed_plan.groups.len(), oracle.groups.len());
+        let groups = oracle.groups.len();
+
+        let iters = (2_000 / w).clamp(2, 20);
+        let time_naive = w < 10_000 || full;
+        let naive = time_naive.then(|| {
+            bench(&format!("naive w={w}"), 1, iters, || {
+                std::hint::black_box(group_queries(&batch, THETA, LINK));
+            })
+        });
+        let indexed = bench(&format!("indexed w={w}"), 1, iters, || {
+            std::hint::black_box(group_queries_indexed(&batch, THETA, LINK, universe));
+        });
+        let indexed_sorted = bench(&format!("indexed-sorted w={w}"), 1, iters, || {
+            std::hint::black_box(group_queries_indexed(
+                &batch,
+                THETA,
+                LINK,
+                ClusterUniverse::sorted(),
+            ));
+        });
+
+        // Incremental: assign cost (amortized into the window wait) and
+        // flush cost (the only work left on the flush path) timed apart.
+        let mut assign_total = Duration::ZERO;
+        let mut flush_total = Duration::ZERO;
+        for _ in 0..iters {
+            let mut grouper = IncrementalGrouper::new(THETA, LINK, universe);
+            let t0 = Instant::now();
+            for (i, pq) in batch.iter().enumerate() {
+                grouper.assign(i, &pq.clusters);
+            }
+            assign_total += t0.elapsed();
+            let t1 = Instant::now();
+            let plan = grouper.finish();
+            flush_total += t1.elapsed();
+            std::hint::black_box(plan);
+        }
+        let assign_us = mean_us(assign_total, iters);
+        let flush_us = mean_us(flush_total, iters);
+        flush_by_window.push((w, flush_us));
+
+        let naive_us = naive.as_ref().map(|s| s.mean.as_secs_f64() * 1e6);
+        let indexed_us = indexed.mean.as_secs_f64() * 1e6;
+        let speedup = naive_us.map(|n| n / indexed_us);
+        if w == 1_000 {
+            speedup_at_1000 = speedup.unwrap_or(0.0);
+        }
+
+        rows.push(vec![
+            w.to_string(),
+            groups.to_string(),
+            naive
+                .as_ref()
+                .map(|s| format_duration(s.mean))
+                .unwrap_or_else(|| "(skipped)".to_string()),
+            format_duration(indexed.mean),
+            format_duration(indexed_sorted.mean),
+            format!("{assign_us:.1}us"),
+            format!("{flush_us:.1}us"),
+            speedup.map(|s| format!("{s:.1}x")).unwrap_or_else(|| "-".to_string()),
+        ]);
+        json_windows.push(obj(vec![
+            ("window", w.into()),
+            ("groups", groups.into()),
+            ("naive_us", naive_us.map(Json::Num).unwrap_or(Json::Null)),
+            ("indexed_us", Json::Num(indexed_us)),
+            ("indexed_sorted_us", Json::Num(indexed_sorted.mean.as_secs_f64() * 1e6)),
+            ("incremental_assign_us", Json::Num(assign_us)),
+            ("incremental_flush_us", Json::Num(flush_us)),
+            (
+                "speedup_indexed_vs_naive",
+                speedup.map(Json::Num).unwrap_or(Json::Null),
+            ),
+        ]));
+    }
+
+    println!(
+        "{}",
+        render_table(
+            &[
+                "window",
+                "groups",
+                "naive",
+                "indexed",
+                "indexed-sorted",
+                "incr assign",
+                "incr flush",
+                "speedup",
+            ],
+            &rows
+        )
+    );
+
+    // The flush-cost acceptance signal: incremental flush work is O(groups)
+    // and must not scale with window member count (groups are capped by the
+    // topic count here, so the ratio stays near 1 while members grow 100x).
+    let flush_flat = {
+        let (w0, f0) = flush_by_window[0];
+        let (wn, fn_) = *flush_by_window.last().unwrap();
+        println!(
+            "incremental flush cost: {f0:.1}us at window {w0} -> {fn_:.1}us at window {wn} \
+             (members grew {}x)",
+            wn / w0
+        );
+        fn_ / f0.max(1e-9)
+    };
+
+    let summary = obj(vec![
+        ("bench", "grouping_cost".into()),
+        ("theta", Json::Num(THETA)),
+        ("link", "single-link".into()),
+        ("universe", UNIVERSE.into()),
+        ("nprobe", NPROBE.into()),
+        ("topics", TOPICS.into()),
+        ("windows", Json::Arr(json_windows)),
+        ("speedup_indexed_vs_naive_at_1000", Json::Num(speedup_at_1000)),
+        ("flush_cost_growth_ratio", Json::Num(flush_flat)),
+    ]);
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/grouping_cost.json", summary.pretty())?;
+    println!("machine-readable summary: results/grouping_cost.json");
+    println!(
+        "acceptance: speedup_indexed_vs_naive_at_1000 = {speedup_at_1000:.1}x (gate: >= 5x); \
+         flush cost growth {flush_flat:.2}x across a 100x member growth (gate: ~flat)"
+    );
+    Ok(())
+}

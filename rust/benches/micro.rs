@@ -6,8 +6,8 @@
 use cagr::cache::ClusterCache;
 use cagr::config::geometry::{CENTROID_PAD, EMBED_DIM, SCORE_N, SCORE_Q, SEQ_LEN};
 use cagr::config::{CachePolicy, GroupingPolicy};
-use cagr::coordinator::grouping::group_queries;
-use cagr::coordinator::jaccard::{canonicalize, jaccard_sorted};
+use cagr::coordinator::grouping::{group_queries, group_queries_indexed};
+use cagr::coordinator::jaccard::{canonicalize, jaccard_sorted, ClusterSet, ClusterUniverse};
 use cagr::engine::PreparedQuery;
 use cagr::harness::{banner, bench, BenchStats};
 use cagr::index::{distance, ClusterBlock, TopK};
@@ -52,13 +52,36 @@ fn main() -> anyhow::Result<()> {
         }
     }));
 
-    // Algorithm 1 over a full paper-sized batch.
+    // Bitset Jaccard kernel over the same pairs (the ClusterSet rep the
+    // serving grouper uses at the paper's 100-cluster universe).
+    let universe = ClusterUniverse::new(100, 1024);
+    let bitsets: Vec<ClusterSet> =
+        sets.iter().map(|s| ClusterSet::from_ids(s, universe)).collect();
+    stats.push(bench("jaccard bitset(2w) x 19900 pairs", 2, 20, || {
+        for i in 0..bitsets.len() {
+            for j in (i + 1)..bitsets.len() {
+                acc += bitsets[i].jaccard(&bitsets[j]);
+            }
+        }
+    }));
+
+    // Algorithm 1 over a full paper-sized batch: the naive oracle vs the
+    // indexed engine the serving policies run (full sweep: grouping_cost
+    // bench).
     let batch100 = random_batch(&mut rng, 100);
     stats.push(bench("group_queries(batch=100, theta=0.5)", 5, 50, || {
         std::hint::black_box(group_queries(&batch100, 0.5, GroupingPolicy::SingleLink));
     }));
     stats.push(bench("group_queries(batch=100, complete-link)", 5, 50, || {
         std::hint::black_box(group_queries(&batch100, 0.5, GroupingPolicy::CompleteLink));
+    }));
+    stats.push(bench("group_queries_indexed(batch=100, theta=0.5)", 5, 50, || {
+        std::hint::black_box(group_queries_indexed(
+            &batch100,
+            0.5,
+            GroupingPolicy::SingleLink,
+            universe,
+        ));
     }));
 
     // Cache get/insert under the cost-aware policy.

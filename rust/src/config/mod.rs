@@ -231,6 +231,12 @@ pub struct Config {
     /// Jaccard similarity threshold theta (paper: 0.5).
     pub theta: f64,
     pub grouping: GroupingPolicy,
+    /// Largest cluster universe for which the grouping engine stores
+    /// cluster sets as fixed-width `u64` bitmaps (Jaccard = popcount, union
+    /// = word-wise OR; the paper's 100-cluster default needs 2 words).
+    /// Above this (or at 0, which disables the bitmap) sets fall back to
+    /// sorted id vectors — same results, merge-based kernels.
+    pub grouping_bitmap_threshold: usize,
     /// Opportunistic prefetch on group switch (QGP vs QG in Fig. 7).
     pub prefetch: bool,
     /// When the prefetch fires relative to the group's last query.
@@ -272,6 +278,7 @@ impl Default for Config {
             io_workers: available_cores(),
             theta: 0.5,
             grouping: GroupingPolicy::SingleLink,
+            grouping_bitmap_threshold: 1024,
             prefetch: true,
             prefetch_trigger: PrefetchTrigger::LastQueryStart,
             group_order: GroupOrder::Arrival,
@@ -338,6 +345,7 @@ impl Config {
                     .map_err(|_| anyhow::anyhow!("'theta' expects a number, got '{value}'"))?
             }
             "grouping" => self.grouping = GroupingPolicy::parse(value)?,
+            "grouping_bitmap_threshold" => self.grouping_bitmap_threshold = parse_usize(value)?,
             "prefetch_trigger" => self.prefetch_trigger = PrefetchTrigger::parse(value)?,
             "group_order" => self.group_order = GroupOrder::parse(value)?,
             "size_aware_prefetch" => {
@@ -437,6 +445,8 @@ mod tests {
         assert_eq!(c.batch_min, 20);
         assert_eq!(c.batch_max, 100);
         assert!(c.prefetch);
+        // The paper's 100-cluster universe comfortably fits the bitmap rep.
+        assert_eq!(c.grouping_bitmap_threshold, 1024);
         // Parallelism defaults track the machine but are always >= 1.
         assert!(c.io_workers >= 1);
         assert!(c.cache_shards >= 1);
@@ -466,10 +476,13 @@ mod tests {
         c.set("cache_policy", "lru").unwrap();
         c.set("backend", "pjrt").unwrap();
         c.set("prefetch", "false").unwrap();
+        c.set("grouping_bitmap_threshold", "0").unwrap();
         assert!((c.theta - 0.3).abs() < 1e-12);
         assert_eq!(c.cache_policy, CachePolicy::Lru);
         assert_eq!(c.backend, Backend::Pjrt);
         assert!(!c.prefetch);
+        assert_eq!(c.grouping_bitmap_threshold, 0, "0 disables the bitmap rep");
+        assert!(c.set("grouping_bitmap_threshold", "many").is_err());
     }
 
     #[test]

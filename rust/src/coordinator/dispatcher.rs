@@ -61,7 +61,9 @@ pub fn dispatch(
         let fire = |mi: usize| {
             // Fire-and-forget prefetch of whatever the policy wants loaded
             // for the upcoming switch, protecting the in-flight query's
-            // working set.
+            // working set. The pin-set clone is owned because it crosses
+            // the prefetch thread's channel; it happens once per group
+            // switch, never per query.
             if let (Some(pf), Some(clusters)) = (prefetcher, policy.prefetch_at(plan, gi)) {
                 pf.request(clusters, members[mi].clusters.clone());
             }

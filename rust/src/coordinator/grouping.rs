@@ -11,13 +11,32 @@
 //! list, the group's cluster union `C(G_i)`, and the first query of the
 //! *next* group with its clusters `C(q_F(G_{i+1}))` — exactly what the
 //! opportunistic prefetcher needs at a group switch.
+//!
+//! Two implementations share the [`GroupPlan`] output (docs/GROUPING.md):
+//!
+//!  * [`group_queries`] — the naive O(window² · nprobe) scan, a direct
+//!    transcription of Algorithm 1 over sorted-vec kernels. Kept as the
+//!    **test oracle**; not on any serving path.
+//!  * [`IncrementalGrouper`] / [`group_queries_indexed`] — the serving
+//!    engine: [`ClusterSet`] bitmap kernels, an inverted
+//!    `cluster → group ids` postings index so a candidate is only scored
+//!    against groups sharing at least one cluster (for θ > 0 every other
+//!    group has J = 0), a cardinality upper bound
+//!    (`J <= min(|A|,|B|) / max(|A|,|B|)`) ahead of each exact kernel, and
+//!    single-link short-circuiting on the first member clearing θ. The
+//!    incremental form assigns queries **as they are admitted** to a
+//!    pooling window, so flush-time work collapses to the `next_first`
+//!    link rebuild (plus the optional greedy reorder) — O(groups), not
+//!    O(window²). Both produce the *identical* partition, group order, and
+//!    links as the oracle (rust/tests/grouping_oracle.rs).
 
-use std::time::Duration;
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
 
 use crate::config::GroupingPolicy;
 use crate::engine::PreparedQuery;
 
-use super::jaccard::{canonicalize, jaccard_sorted, union_sorted};
+use super::jaccard::{canonicalize, jaccard_sorted, union_sorted, ClusterSet, ClusterUniverse};
 
 /// One query group `G_k`.
 #[derive(Debug, Clone)]
@@ -25,9 +44,9 @@ pub struct QueryGroup {
     /// Indices into the prepared batch, in arrival order.
     pub members: Vec<usize>,
     /// Canonical cluster sets of each member (parallel to `members`).
-    pub member_clusters: Vec<Vec<u32>>,
-    /// `C(G_i)`: sorted union of the members' cluster sets.
-    pub clusters: Vec<u32>,
+    pub member_clusters: Vec<ClusterSet>,
+    /// `C(G_i)`: union of the members' cluster sets.
+    pub clusters: ClusterSet,
 }
 
 /// The paper's data structure `D` (Eq. 5): groups in dispatch order plus,
@@ -36,7 +55,8 @@ pub struct QueryGroup {
 pub struct GroupPlan {
     pub groups: Vec<QueryGroup>,
     /// `next_first[i] = (batch index of q_F(G_{i+1}), C(q_F(G_{i+1})))`;
-    /// `None` for the last group.
+    /// `None` for the last group. The clusters travel as a plain id list —
+    /// it is what the prefetcher ultimately fetches.
     pub next_first: Vec<Option<(usize, Vec<u32>)>>,
     /// Wall-clock cost of running the grouping algorithm (reported by the
     /// micro bench; not charged to query latency, matching the paper's
@@ -54,15 +74,6 @@ impl GroupPlan {
     /// grouping and sends them ... to vector database").
     pub fn dispatch_order(&self) -> Vec<usize> {
         self.groups.iter().flat_map(|g| g.members.iter().copied()).collect()
-    }
-}
-
-/// Similarity of a candidate set against an existing group under a policy.
-fn group_similarity(policy: GroupingPolicy, group: &QueryGroup, candidate: &[u32]) -> f64 {
-    let sims = group.member_clusters.iter().map(|m| jaccard_sorted(m, candidate));
-    match policy {
-        GroupingPolicy::SingleLink => sims.fold(0.0, f64::max),
-        GroupingPolicy::CompleteLink => sims.fold(1.0, f64::min),
     }
 }
 
@@ -84,21 +95,29 @@ pub fn arrival_plan(prepared: &[PreparedQuery]) -> GroupPlan {
         groups: vec![QueryGroup {
             members: (0..prepared.len()).collect(),
             member_clusters: Vec::new(),
-            clusters: Vec::new(),
+            clusters: ClusterSet::empty(),
         }],
         next_first: vec![None],
         grouping_cost: Duration::ZERO,
     }
 }
 
-/// Algorithm 1 over a prepared batch.
+/// Algorithm 1 over a prepared batch — the naive O(n² · nprobe) transcription
+/// over sorted-vec kernels. This is the **oracle** the indexed engine is
+/// checked against; serving paths use [`group_queries_indexed`] (identical
+/// output, near-linear cost).
 pub fn group_queries(
     prepared: &[PreparedQuery],
     theta: f64,
     policy: GroupingPolicy,
 ) -> GroupPlan {
-    let t0 = std::time::Instant::now();
-    let mut groups: Vec<QueryGroup> = Vec::new();
+    let t0 = Instant::now();
+    struct NaiveGroup {
+        members: Vec<usize>,
+        member_sets: Vec<Vec<u32>>,
+        union: Vec<u32>,
+    }
+    let mut groups: Vec<NaiveGroup> = Vec::new();
 
     // Step 1: assign each query to the first group clearing θ, else found
     // a new group.
@@ -106,22 +125,36 @@ pub fn group_queries(
         let cset = canonicalize(&pq.clusters);
         let mut assigned = false;
         for group in groups.iter_mut() {
-            if group_similarity(policy, group, &cset) >= theta {
-                group.clusters = union_sorted(&group.clusters, &cset);
+            let sims = group.member_sets.iter().map(|m| jaccard_sorted(m, &cset));
+            let sim = match policy {
+                GroupingPolicy::SingleLink => sims.fold(0.0, f64::max),
+                GroupingPolicy::CompleteLink => sims.fold(1.0, f64::min),
+            };
+            if sim >= theta {
+                group.union = union_sorted(&group.union, &cset);
                 group.members.push(idx);
-                group.member_clusters.push(cset.clone());
+                group.member_sets.push(cset.clone());
                 assigned = true;
                 break;
             }
         }
         if !assigned {
-            groups.push(QueryGroup {
+            groups.push(NaiveGroup {
                 members: vec![idx],
-                member_clusters: vec![cset.clone()],
-                clusters: cset,
+                member_sets: vec![cset.clone()],
+                union: cset,
             });
         }
     }
+
+    let groups: Vec<QueryGroup> = groups
+        .into_iter()
+        .map(|g| QueryGroup {
+            members: g.members,
+            member_clusters: g.member_sets.into_iter().map(ClusterSet::from_sorted).collect(),
+            clusters: ClusterSet::from_sorted(g.union),
+        })
+        .collect();
 
     // Steps 2–3: first query of the next group, per group.
     let next_first = next_first_links(&groups);
@@ -129,12 +162,239 @@ pub fn group_queries(
     GroupPlan { groups, next_first, grouping_cost: t0.elapsed() }
 }
 
+/// [`group_queries`] through the indexed engine: identical output, but a
+/// postings index + cardinality bound + bitset kernels replace the
+/// quadratic scan. This is what the serving policies run at flush time.
+pub fn group_queries_indexed(
+    prepared: &[PreparedQuery],
+    theta: f64,
+    policy: GroupingPolicy,
+    universe: ClusterUniverse,
+) -> GroupPlan {
+    let mut grouper = IncrementalGrouper::new(theta, policy, universe);
+    for (idx, pq) in prepared.iter().enumerate() {
+        grouper.assign(idx, &pq.clusters);
+    }
+    grouper.finish()
+}
+
+/// Inverted `cluster id → group ids` postings maintained during assignment.
+/// Ids inside the bitmap universe index a dense table; out-of-range ids
+/// (sorted-fallback sets) spill into a map, so correctness never depends on
+/// the universe bound. Lists are deduplicated by construction (a group
+/// gains a cluster at most once) but *not* sorted — an old group can gain a
+/// new cluster late — so candidate gathering sorts its deduped result.
+struct Postings {
+    dense: Vec<Vec<u32>>,
+    sparse: HashMap<u32, Vec<u32>>,
+}
+
+impl Postings {
+    fn new(universe: ClusterUniverse) -> Postings {
+        Postings { dense: vec![Vec::new(); universe.dense_len()], sparse: HashMap::new() }
+    }
+
+    fn add(&mut self, id: u32, gid: u32) {
+        if (id as usize) < self.dense.len() {
+            self.dense[id as usize].push(gid);
+        } else {
+            self.sparse.entry(id).or_default().push(gid);
+        }
+    }
+
+    fn list(&self, id: u32) -> &[u32] {
+        if (id as usize) < self.dense.len() {
+            &self.dense[id as usize]
+        } else {
+            self.sparse.get(&id).map(|v| v.as_slice()).unwrap_or(&[])
+        }
+    }
+
+    fn clear(&mut self) {
+        for l in &mut self.dense {
+            l.clear();
+        }
+        self.sparse.clear();
+    }
+}
+
+/// Incremental Algorithm 1: assign queries to groups one at a time —
+/// oracle-identical to [`group_queries`] over the same sequence — and take
+/// the finished [`GroupPlan`] at window flush. The streaming scheduler
+/// assigns each query *as it is admitted* to the pooling window, so the
+/// quadratic part of grouping is amortized into the window wait the query
+/// was already paying and [`IncrementalGrouper::finish`] only rebuilds the
+/// `next_first` links: O(groups), independent of member count.
+pub struct IncrementalGrouper {
+    theta: f64,
+    link: GroupingPolicy,
+    universe: ClusterUniverse,
+    groups: Vec<QueryGroup>,
+    postings: Postings,
+    /// Groups holding at least one empty-set member: the only candidates an
+    /// empty cluster set can match (J(∅, m) is 1 for empty m, else 0), and
+    /// invisible to the id-keyed postings.
+    has_empty_member: Vec<bool>,
+    /// Candidate-dedup stamps, one per group (`stamp` bumps per gather, so
+    /// no clearing between assignments).
+    seen: Vec<u64>,
+    stamp: u64,
+    /// Scratch: gathered candidate group ids.
+    cand: Vec<u32>,
+    cost: Duration,
+}
+
+impl IncrementalGrouper {
+    pub fn new(theta: f64, link: GroupingPolicy, universe: ClusterUniverse) -> IncrementalGrouper {
+        IncrementalGrouper {
+            theta,
+            link,
+            universe,
+            groups: Vec::new(),
+            postings: Postings::new(universe),
+            has_empty_member: Vec::new(),
+            seen: Vec::new(),
+            stamp: 0,
+            cand: Vec::new(),
+            cost: Duration::ZERO,
+        }
+    }
+
+    /// Groups formed so far in the open window.
+    pub fn group_count(&self) -> usize {
+        self.groups.len()
+    }
+
+    /// Assign one query (batch position `batch_idx`, raw cluster ids) to
+    /// the first group clearing θ in creation order, founding a new group
+    /// otherwise; returns the group index. Exactly Algorithm 1's decision,
+    /// reached through the postings index instead of the full scan.
+    pub fn assign(&mut self, batch_idx: usize, cluster_ids: &[u32]) -> usize {
+        let t0 = Instant::now();
+        let cset = ClusterSet::from_ids(cluster_ids, self.universe);
+        let gid = match self.find_group(&cset) {
+            Some(g) => {
+                // Clusters new to the union get this group appended to
+                // their postings (each group enters a cluster's list once;
+                // `groups` and `postings` are disjoint fields, so the
+                // direct loop borrows cleanly).
+                for id in cset.iter() {
+                    if !self.groups[g].clusters.contains(id) {
+                        self.postings.add(id, g as u32);
+                    }
+                }
+                let group = &mut self.groups[g];
+                group.clusters.union_with(&cset);
+                group.members.push(batch_idx);
+                if cset.is_empty() {
+                    self.has_empty_member[g] = true;
+                }
+                group.member_clusters.push(cset);
+                g
+            }
+            None => {
+                let g = self.groups.len();
+                for id in cset.iter() {
+                    self.postings.add(id, g as u32);
+                }
+                self.has_empty_member.push(cset.is_empty());
+                self.seen.push(0);
+                self.groups.push(QueryGroup {
+                    members: vec![batch_idx],
+                    clusters: cset.clone(),
+                    member_clusters: vec![cset],
+                });
+                g
+            }
+        };
+        self.cost += t0.elapsed();
+        gid
+    }
+
+    /// First group (creation order) the candidate set joins, or `None`.
+    fn find_group(&mut self, cset: &ClusterSet) -> Option<usize> {
+        if self.groups.is_empty() {
+            return None;
+        }
+        // J ∈ [0, 1], so θ <= 0 accepts every group — the first wins, the
+        // same decision the naive scan reaches.
+        if self.theta <= 0.0 {
+            return Some(0);
+        }
+        let mut cand = std::mem::take(&mut self.cand);
+        cand.clear();
+        if cset.is_empty() {
+            // Only groups holding an empty member can clear θ > 0.
+            cand.extend(
+                self.has_empty_member
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &e)| e)
+                    .map(|(g, _)| g as u32),
+            );
+        } else {
+            // Candidate pruning: for θ > 0 a group sharing no cluster with
+            // the candidate has J = 0 against every member — only groups in
+            // some probed cluster's postings can match.
+            self.stamp += 1;
+            for id in cset.iter() {
+                for &g in self.postings.list(id) {
+                    if self.seen[g as usize] != self.stamp {
+                        self.seen[g as usize] = self.stamp;
+                        cand.push(g);
+                    }
+                }
+            }
+            // Algorithm 1 takes the FIRST group clearing θ in creation
+            // order; posting lists are unsorted, so order the candidates.
+            cand.sort_unstable();
+        }
+        let found = cand.iter().map(|&g| g as usize).find(|&g| self.group_matches(g, cset));
+        self.cand = cand;
+        found
+    }
+
+    fn group_matches(&self, g: usize, cset: &ClusterSet) -> bool {
+        let members = &self.groups[g].member_clusters;
+        let clears = |m: &ClusterSet| {
+            // Cardinality bound first: when even min/max misses θ the exact
+            // kernel cannot clear it (jaccard_upper_bound is monotone over
+            // the computed values, so this never disagrees with the oracle).
+            cset.jaccard_upper_bound(m) >= self.theta && cset.jaccard(m) >= self.theta
+        };
+        match self.link {
+            // Single-link short-circuits on the first member clearing θ —
+            // the same decision as the naive `max over members >= θ`.
+            GroupingPolicy::SingleLink => members.iter().any(clears),
+            // Complete-link short-circuits on the first member *missing* θ.
+            GroupingPolicy::CompleteLink => members.iter().all(clears),
+        }
+    }
+
+    /// Take the accumulated plan and reset for the next window. This is the
+    /// only flush-time work the incremental path pays: the `next_first`
+    /// link rebuild — O(groups), independent of how many members each group
+    /// holds (the caller may still run the optional greedy reorder on top).
+    pub fn finish(&mut self) -> GroupPlan {
+        let t0 = Instant::now();
+        let groups = std::mem::take(&mut self.groups);
+        self.postings.clear();
+        self.has_empty_member.clear();
+        self.seen.clear();
+        self.stamp = 0;
+        let next_first = next_first_links(&groups);
+        let grouping_cost = self.cost + t0.elapsed();
+        self.cost = Duration::ZERO;
+        GroupPlan { groups, next_first, grouping_cost }
+    }
+}
+
 fn next_first_links(groups: &[QueryGroup]) -> Vec<Option<(usize, Vec<u32>)>> {
     (0..groups.len())
         .map(|i| {
             groups.get(i + 1).map(|g| {
                 let first = g.members[0];
-                (first, g.member_clusters[0].clone())
+                (first, g.member_clusters[0].to_vec())
             })
         })
         .collect()
@@ -146,24 +406,35 @@ fn next_first_links(groups: &[QueryGroup]) -> Vec<Option<(usize, Vec<u32>)>> {
 /// one, so consecutive groups share residual cache content. Rebuilds the
 /// `next_first` links for the new order.
 pub fn reorder_groups_greedy(plan: &mut GroupPlan) {
-    let t0 = std::time::Instant::now();
+    let t0 = Instant::now();
     let n = plan.groups.len();
     if n <= 2 {
         return;
     }
-    let mut remaining: Vec<QueryGroup> = plan.groups.drain(..).collect();
+    // Selection over an occupancy map instead of the former `Vec::remove`,
+    // which memmoved O(n) group payloads per pick (O(n²) shuffle overall).
+    // Scanning every slot in creation order and replacing on `>=`
+    // reproduces the historical tie-break exactly: among equal
+    // similarities the latest-created unvisited group wins (the old
+    // `Iterator::max_by` kept the last maximum, and `Vec::remove`
+    // preserved creation order among the remainder).
+    let mut slots: Vec<Option<QueryGroup>> = plan.groups.drain(..).map(Some).collect();
     let mut ordered = Vec::with_capacity(n);
     // Start from the first-created group (earliest arrivals keep priority).
-    ordered.push(remaining.remove(0));
-    while !remaining.is_empty() {
+    ordered.push(slots[0].take().unwrap());
+    for _ in 1..n {
         let current = ordered.last().unwrap();
-        let (best_idx, _) = remaining
-            .iter()
-            .enumerate()
-            .map(|(i, g)| (i, jaccard_sorted(&current.clusters, &g.clusters)))
-            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap_or(std::cmp::Ordering::Equal))
-            .unwrap();
-        ordered.push(remaining.remove(best_idx));
+        let mut best: Option<(usize, f64)> = None;
+        for (i, slot) in slots.iter().enumerate() {
+            let Some(g) = slot else { continue };
+            let sim = current.clusters.jaccard(&g.clusters);
+            match best {
+                Some((_, b)) if sim < b => {}
+                _ => best = Some((i, sim)),
+            }
+        }
+        let (pick, _) = best.expect("unvisited groups remain");
+        ordered.push(slots[pick].take().unwrap());
     }
     plan.groups = ordered;
     plan.next_first = next_first_links(&plan.groups);
@@ -206,7 +477,7 @@ mod tests {
         let plan = group_queries(&batch, 0.0, GroupingPolicy::SingleLink);
         assert_eq!(plan.groups.len(), 1);
         assert_eq!(plan.groups[0].members, vec![0, 1, 2]);
-        assert_eq!(plan.groups[0].clusters, vec![1, 2, 3]);
+        assert_eq!(plan.groups[0].clusters.to_vec(), vec![1, 2, 3]);
     }
 
     #[test]
@@ -226,27 +497,33 @@ mod tests {
 
     #[test]
     fn every_query_in_exactly_one_group() {
-        // Invariant: grouping is a partition, for any theta/policy.
+        // Invariant: grouping is a partition, for any theta/policy — for
+        // the oracle AND the indexed engine.
         let batch: Vec<PreparedQuery> = (0..40)
             .map(|i| {
                 let base = (i % 5) as u32 * 10;
                 pq(i, &[base, base + 1, base + 2, (i as u32) % 3 + 50])
             })
             .collect();
+        let universe = ClusterUniverse::new(100, 1024);
         for theta in [0.0, 0.2, 0.5, 0.8, 1.0] {
             for policy in [GroupingPolicy::SingleLink, GroupingPolicy::CompleteLink] {
-                let plan = group_queries(&batch, theta, policy);
-                let mut seen = vec![false; batch.len()];
-                for g in &plan.groups {
-                    assert_eq!(g.members.len(), g.member_clusters.len());
-                    for &m in &g.members {
-                        assert!(!seen[m], "query {m} in two groups (theta={theta})");
-                        seen[m] = true;
+                for plan in [
+                    group_queries(&batch, theta, policy),
+                    group_queries_indexed(&batch, theta, policy, universe),
+                ] {
+                    let mut seen = vec![false; batch.len()];
+                    for g in &plan.groups {
+                        assert_eq!(g.members.len(), g.member_clusters.len());
+                        for &m in &g.members {
+                            assert!(!seen[m], "query {m} in two groups (theta={theta})");
+                            seen[m] = true;
+                        }
                     }
+                    assert!(seen.iter().all(|&s| s), "partition incomplete");
+                    assert_eq!(plan.total_queries(), batch.len());
+                    assert_eq!(plan.dispatch_order().len(), batch.len());
                 }
-                assert!(seen.iter().all(|&s| s), "partition incomplete");
-                assert_eq!(plan.total_queries(), batch.len());
-                assert_eq!(plan.dispatch_order().len(), batch.len());
             }
         }
     }
@@ -258,7 +535,7 @@ mod tests {
         let g = &plan.groups[0];
         for (mi, m) in g.members.iter().enumerate() {
             let _ = m;
-            for c in &g.member_clusters[mi] {
+            for c in g.member_clusters[mi].iter() {
                 assert!(g.clusters.contains(c));
             }
         }
@@ -290,6 +567,10 @@ mod tests {
         let plan = group_queries(&[], 0.5, GroupingPolicy::SingleLink);
         assert!(plan.groups.is_empty());
         assert!(plan.next_first.is_empty());
+        let indexed =
+            group_queries_indexed(&[], 0.5, GroupingPolicy::SingleLink, ClusterUniverse::sorted());
+        assert!(indexed.groups.is_empty());
+        assert!(indexed.next_first.is_empty());
     }
 
     #[test]
@@ -343,9 +624,118 @@ mod tests {
     }
 
     #[test]
+    fn greedy_reorder_tie_break_is_pinned() {
+        // Four mutually disjoint singleton groups: every similarity is 0,
+        // so every pick is a tie. The historical algorithm (max_by over the
+        // shrinking remainder) chose the LAST maximum, i.e. the
+        // latest-created unvisited group: A, then D, then C, then B. The
+        // position-map selection must preserve that exact order.
+        let batch = vec![pq(0, &[1]), pq(1, &[2]), pq(2, &[3]), pq(3, &[4])];
+        let mut plan = group_queries(&batch, 0.9, GroupingPolicy::SingleLink);
+        assert_eq!(plan.groups.len(), 4);
+        super::reorder_groups_greedy(&mut plan);
+        let order: Vec<usize> = plan.groups.iter().map(|g| g.members[0]).collect();
+        assert_eq!(order, vec![0, 3, 2, 1], "tie-break order changed");
+    }
+
+    #[test]
     fn duplicate_cluster_ids_are_canonicalized() {
         let batch = vec![pq(0, &[2, 2, 1]), pq(1, &[1, 2])];
         let plan = group_queries(&batch, 0.99, GroupingPolicy::SingleLink);
         assert_eq!(plan.groups.len(), 1, "duplicates must not break identity");
+        let indexed = group_queries_indexed(
+            &batch,
+            0.99,
+            GroupingPolicy::SingleLink,
+            ClusterUniverse::new(100, 1024),
+        );
+        assert_eq!(indexed.groups.len(), 1);
+        assert_eq!(indexed.groups[0].clusters.to_vec(), vec![1, 2]);
+    }
+
+    #[test]
+    fn indexed_matches_oracle_on_small_batches() {
+        let batch = vec![
+            pq(0, &[1, 2, 3]),
+            pq(1, &[9, 8, 7]),
+            pq(2, &[3, 2, 1]),
+            pq(3, &[7, 8]),
+            pq(4, &[1, 2, 50]),
+        ];
+        for theta in [0.0, 0.3, 0.5, 1.0] {
+            for policy in [GroupingPolicy::SingleLink, GroupingPolicy::CompleteLink] {
+                let want = group_queries(&batch, theta, policy);
+                for universe in [ClusterUniverse::new(100, 1024), ClusterUniverse::sorted()] {
+                    let got = group_queries_indexed(&batch, theta, policy, universe);
+                    assert_eq!(got.groups.len(), want.groups.len(), "theta={theta}");
+                    for (g, w) in got.groups.iter().zip(&want.groups) {
+                        assert_eq!(g.members, w.members, "theta={theta}");
+                        assert_eq!(g.clusters, w.clusters, "theta={theta}");
+                        assert_eq!(g.member_clusters, w.member_clusters, "theta={theta}");
+                    }
+                    assert_eq!(got.next_first, want.next_first, "theta={theta}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_cluster_sets_follow_the_convention() {
+        // J(∅, ∅) = 1 groups empty-set queries together at any θ; J(∅, m)
+        // = 0 keeps them out of non-empty groups for θ > 0.
+        let batch = vec![pq(0, &[]), pq(1, &[1]), pq(2, &[]), pq(3, &[1, 1])];
+        for policy in [GroupingPolicy::SingleLink, GroupingPolicy::CompleteLink] {
+            let want = group_queries(&batch, 0.5, policy);
+            let got = group_queries_indexed(
+                &batch,
+                0.5,
+                policy,
+                ClusterUniverse::new(100, 1024),
+            );
+            let members: Vec<Vec<usize>> = got.groups.iter().map(|g| g.members.clone()).collect();
+            assert_eq!(members, vec![vec![0, 2], vec![1, 3]]);
+            assert_eq!(
+                members,
+                want.groups.iter().map(|g| g.members.clone()).collect::<Vec<_>>()
+            );
+        }
+    }
+
+    #[test]
+    fn incremental_grouper_resets_between_windows() {
+        let universe = ClusterUniverse::new(100, 1024);
+        let mut grouper = IncrementalGrouper::new(0.5, GroupingPolicy::SingleLink, universe);
+        grouper.assign(0, &[1, 2]);
+        grouper.assign(1, &[50, 51]);
+        assert_eq!(grouper.group_count(), 2);
+        let first = grouper.finish();
+        assert_eq!(first.groups.len(), 2);
+        assert_eq!(grouper.group_count(), 0, "finish drains the window");
+
+        // Second window: stale postings from window one must not leak in.
+        grouper.assign(0, &[1, 2]);
+        let second = grouper.finish();
+        assert_eq!(second.groups.len(), 1);
+        assert_eq!(second.groups[0].members, vec![0]);
+        assert!(second.next_first[0].is_none());
+    }
+
+    #[test]
+    fn indexed_grouping_uses_bitmaps_under_the_threshold() {
+        let batch = vec![pq(0, &[1, 2]), pq(1, &[90, 91])];
+        let bitmap = group_queries_indexed(
+            &batch,
+            0.5,
+            GroupingPolicy::SingleLink,
+            ClusterUniverse::new(100, 1024),
+        );
+        assert!(bitmap.groups.iter().all(|g| g.clusters.is_bitmap()));
+        let fallback = group_queries_indexed(
+            &batch,
+            0.5,
+            GroupingPolicy::SingleLink,
+            ClusterUniverse::new(100_000, 1024),
+        );
+        assert!(fallback.groups.iter().all(|g| !g.clusters.is_bitmap()));
     }
 }

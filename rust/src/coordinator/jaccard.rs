@@ -1,7 +1,25 @@
 //! Jaccard similarity over cluster-ID sets (paper Eq. 2).
 //!
-//! Cluster sets are small (nprobe ≈ 10) sorted `u32` vectors; the
-//! intersection is a linear merge — no hashing, no allocation.
+//! Two layers:
+//!
+//!  * The historical sorted-vec kernels ([`jaccard_sorted`] /
+//!    [`union_sorted`] / [`canonicalize`]) — a linear merge over small
+//!    (nprobe ≈ 10) sorted `u32` vectors. These remain the reference
+//!    implementation and the test oracle's substrate.
+//!  * [`ClusterSet`] — the serving representation. When the cluster
+//!    universe is small (paper default 100 clusters; anything up to
+//!    [`Config::grouping_bitmap_threshold`](crate::config::Config)) a set
+//!    is a fixed-width `u64` bitmap: Jaccard becomes
+//!    `popcount(A & B) / popcount(A | B)` and union a word-wise OR in
+//!    place — no allocation, no branch-heavy merge. Above the threshold
+//!    (or for out-of-range ids) it falls back to the sorted-vec form, so
+//!    correctness never depends on the universe bound.
+//!
+//! Both representations produce bit-identical similarity values: the
+//! intersection and union sizes are integers either way and the final
+//! division is the same `f64` operation, so the indexed grouping engine
+//! built on `ClusterSet` is oracle-equivalent to the naive sorted-vec
+//! Algorithm 1 (asserted by `rust/tests/grouping_oracle.rs`).
 
 /// Jaccard similarity `|A ∩ B| / |A ∪ B|` of two *sorted, deduplicated*
 /// slices. Returns 1.0 for two empty sets (identical by convention).
@@ -11,19 +29,7 @@ pub fn jaccard_sorted(a: &[u32], b: &[u32]) -> f64 {
     if a.is_empty() && b.is_empty() {
         return 1.0;
     }
-    let mut inter = 0usize;
-    let (mut i, mut j) = (0usize, 0usize);
-    while i < a.len() && j < b.len() {
-        match a[i].cmp(&b[j]) {
-            std::cmp::Ordering::Less => i += 1,
-            std::cmp::Ordering::Greater => j += 1,
-            std::cmp::Ordering::Equal => {
-                inter += 1;
-                i += 1;
-                j += 1;
-            }
-        }
-    }
+    let inter = sorted_intersection_len(a, b);
     let union = a.len() + b.len() - inter;
     inter as f64 / union as f64
 }
@@ -54,6 +60,269 @@ pub fn union_sorted(a: &[u32], b: &[u32]) -> Vec<u32> {
         }
     }
     out
+}
+
+/// Linear-merge intersection size of two sorted, deduplicated slices.
+fn sorted_intersection_len(a: &[u32], b: &[u32]) -> usize {
+    let (mut i, mut j, mut inter) = (0usize, 0usize, 0usize);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                inter += 1;
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    inter
+}
+
+/// Chooses the in-memory representation [`ClusterSet`] uses for one
+/// grouping run: a fixed-width bitmap when the whole cluster universe fits
+/// under the configured threshold, the sorted-vec fallback otherwise.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ClusterUniverse {
+    words: Option<usize>,
+}
+
+impl ClusterUniverse {
+    /// Universe of `n_clusters` ids with the bitmap engaging only when
+    /// `n_clusters <= bitmap_threshold` (a threshold of 0 disables the
+    /// bitmap entirely). The paper's default universe (100 clusters) needs
+    /// two 64-bit words per set.
+    pub fn new(n_clusters: usize, bitmap_threshold: usize) -> ClusterUniverse {
+        let words = if bitmap_threshold > 0 && n_clusters <= bitmap_threshold {
+            Some(n_clusters.max(1).div_ceil(64))
+        } else {
+            None
+        };
+        ClusterUniverse { words }
+    }
+
+    /// Always use the sorted-vec representation (unbounded ids).
+    pub fn sorted() -> ClusterUniverse {
+        ClusterUniverse { words: None }
+    }
+
+    /// Bitmap words per set, `None` when the fallback representation is in
+    /// effect.
+    pub fn words(&self) -> Option<usize> {
+        self.words
+    }
+
+    /// Number of ids the dense/bitmap range covers (0 in fallback mode).
+    pub fn dense_len(&self) -> usize {
+        self.words.map(|w| w * 64).unwrap_or(0)
+    }
+}
+
+/// A canonical cluster-ID set in one of two representations: a fixed-width
+/// `u64` bitmap (small universes — the serving default) or a sorted,
+/// deduplicated id vector (the fallback above
+/// `Config::grouping_bitmap_threshold` or for out-of-range ids).
+///
+/// All operations are representation-agnostic and mixed-representation
+/// calls are legal (they take the slower generic path); equality is
+/// semantic — two sets holding the same ids compare equal across
+/// representations.
+#[derive(Debug, Clone)]
+pub struct ClusterSet {
+    repr: Repr,
+    /// Cached cardinality, so `|A|` is O(1) in both representations (the
+    /// candidate-pruning upper bound needs it per comparison).
+    card: u32,
+}
+
+#[derive(Debug, Clone)]
+enum Repr {
+    Bits(Box<[u64]>),
+    Sorted(Vec<u32>),
+}
+
+impl ClusterSet {
+    /// The empty set (sorted representation; unions adapt as needed).
+    pub fn empty() -> ClusterSet {
+        ClusterSet { repr: Repr::Sorted(Vec::new()), card: 0 }
+    }
+
+    /// Canonicalize raw (possibly unsorted, possibly duplicated) ids into a
+    /// set under `universe`'s representation choice. Ids beyond the bitmap
+    /// width force the sorted fallback for this set only.
+    pub fn from_ids(ids: &[u32], universe: ClusterUniverse) -> ClusterSet {
+        if let Some(words) = universe.words() {
+            let limit = (words * 64) as u64;
+            if ids.iter().all(|&id| (id as u64) < limit) {
+                let mut bits = vec![0u64; words].into_boxed_slice();
+                for &id in ids {
+                    bits[(id / 64) as usize] |= 1u64 << (id % 64);
+                }
+                let card = bits.iter().map(|w| w.count_ones()).sum();
+                return ClusterSet { repr: Repr::Bits(bits), card };
+            }
+        }
+        let v = canonicalize(ids);
+        let card = v.len() as u32;
+        ClusterSet { repr: Repr::Sorted(v), card }
+    }
+
+    /// Wrap an already sorted + deduplicated id vector (the naive oracle's
+    /// native form) without re-canonicalizing.
+    pub fn from_sorted(ids: Vec<u32>) -> ClusterSet {
+        debug_assert!(ids.windows(2).all(|w| w[0] < w[1]), "ids not sorted/unique");
+        let card = ids.len() as u32;
+        ClusterSet { repr: Repr::Sorted(ids), card }
+    }
+
+    /// Number of ids in the set.
+    pub fn len(&self) -> usize {
+        self.card as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.card == 0
+    }
+
+    /// Whether this set uses the bitmap representation (observability and
+    /// tests; behaviour never depends on it).
+    pub fn is_bitmap(&self) -> bool {
+        matches!(self.repr, Repr::Bits(_))
+    }
+
+    pub fn contains(&self, id: u32) -> bool {
+        match &self.repr {
+            Repr::Bits(w) => {
+                let wi = (id / 64) as usize;
+                wi < w.len() && w[wi] & (1u64 << (id % 64)) != 0
+            }
+            Repr::Sorted(v) => v.binary_search(&id).is_ok(),
+        }
+    }
+
+    /// Ascending iterator over member ids (both representations).
+    pub fn iter(&self) -> ClusterSetIter<'_> {
+        ClusterSetIter {
+            inner: match &self.repr {
+                Repr::Bits(w) => IterRepr::Bits { words: w, next_word: 0, cur: 0, base: 0 },
+                Repr::Sorted(v) => IterRepr::Sorted(v.iter()),
+            },
+        }
+    }
+
+    /// The ids as a sorted vector (prefetch requests travel as id lists).
+    pub fn to_vec(&self) -> Vec<u32> {
+        self.iter().collect()
+    }
+
+    /// `|A ∩ B|`. Same-representation pairs take the fast path (word-wise
+    /// AND + popcount, or the linear merge); mixed pairs probe the smaller
+    /// structure against the other's membership test.
+    pub fn intersection_len(&self, other: &ClusterSet) -> usize {
+        match (&self.repr, &other.repr) {
+            (Repr::Bits(a), Repr::Bits(b)) => {
+                // Widths may differ across universes; bits beyond the
+                // shorter width are absent from that set by construction.
+                a.iter().zip(b.iter()).map(|(x, y)| (x & y).count_ones() as usize).sum()
+            }
+            (Repr::Sorted(a), Repr::Sorted(b)) => sorted_intersection_len(a, b),
+            (Repr::Sorted(v), Repr::Bits(_)) => {
+                v.iter().filter(|&&id| other.contains(id)).count()
+            }
+            (Repr::Bits(_), Repr::Sorted(v)) => {
+                v.iter().filter(|&&id| self.contains(id)).count()
+            }
+        }
+    }
+
+    /// Jaccard similarity `|A ∩ B| / |A ∪ B|`; 1.0 for two empty sets (the
+    /// [`jaccard_sorted`] convention). Values are bit-identical to the
+    /// sorted-vec kernel: the operands of the final division are the same
+    /// integers.
+    pub fn jaccard(&self, other: &ClusterSet) -> f64 {
+        if self.card == 0 && other.card == 0 {
+            return 1.0;
+        }
+        let inter = self.intersection_len(other);
+        let union = self.card as usize + other.card as usize - inter;
+        inter as f64 / union as f64
+    }
+
+    /// Cardinality-only upper bound on [`ClusterSet::jaccard`]:
+    /// `|A∩B| <= min(|A|,|B|)` and `|A∪B| >= max(|A|,|B|)`, so
+    /// `J <= min/max`. Because f64 division is correctly rounded (hence
+    /// monotone), `jaccard() <= jaccard_upper_bound()` holds for the
+    /// *computed* values too — pruning on `bound < θ` can never disagree
+    /// with the exact kernel's `J >= θ` test.
+    pub fn jaccard_upper_bound(&self, other: &ClusterSet) -> f64 {
+        let (a, b) = (self.card, other.card);
+        if a == 0 && b == 0 {
+            return 1.0;
+        }
+        if a == 0 || b == 0 {
+            return 0.0;
+        }
+        a.min(b) as f64 / a.max(b) as f64
+    }
+
+    /// `A ∪= B` in place. Bitmap ∪ bitmap is a word-wise OR with no
+    /// allocation; any other pairing rebuilds through the sorted merge.
+    pub fn union_with(&mut self, other: &ClusterSet) {
+        if let (Repr::Bits(a), Repr::Bits(b)) = (&mut self.repr, &other.repr) {
+            if b.len() <= a.len() {
+                for (i, w) in b.iter().enumerate() {
+                    a[i] |= *w;
+                }
+                self.card = a.iter().map(|w| w.count_ones()).sum();
+                return;
+            }
+        }
+        let merged = union_sorted(&self.to_vec(), &other.to_vec());
+        self.card = merged.len() as u32;
+        self.repr = Repr::Sorted(merged);
+    }
+}
+
+impl PartialEq for ClusterSet {
+    /// Semantic equality: same member ids, regardless of representation.
+    fn eq(&self, other: &ClusterSet) -> bool {
+        self.card == other.card && self.iter().eq(other.iter())
+    }
+}
+
+impl Eq for ClusterSet {}
+
+/// Ascending id iterator over a [`ClusterSet`].
+pub struct ClusterSetIter<'a> {
+    inner: IterRepr<'a>,
+}
+
+enum IterRepr<'a> {
+    Bits { words: &'a [u64], next_word: usize, cur: u64, base: u32 },
+    Sorted(std::slice::Iter<'a, u32>),
+}
+
+impl Iterator for ClusterSetIter<'_> {
+    type Item = u32;
+
+    fn next(&mut self) -> Option<u32> {
+        match &mut self.inner {
+            IterRepr::Bits { words, next_word, cur, base } => {
+                while *cur == 0 {
+                    if *next_word >= words.len() {
+                        return None;
+                    }
+                    *cur = words[*next_word];
+                    *base = (*next_word as u32) * 64;
+                    *next_word += 1;
+                }
+                let bit = cur.trailing_zeros();
+                *cur &= *cur - 1;
+                Some(*base + bit)
+            }
+            IterRepr::Sorted(it) => it.next().copied(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -121,5 +390,143 @@ mod tests {
     fn union_with_empty() {
         assert_eq!(union_sorted(&[1, 2], &[]), vec![1, 2]);
         assert_eq!(union_sorted(&[], &[7]), vec![7]);
+    }
+
+    // -- ClusterSet (bitset kernels + sorted fallback) -----------------------
+
+    fn universes() -> [(&'static str, ClusterUniverse); 2] {
+        [
+            ("bitmap", ClusterUniverse::new(100, 1024)),
+            ("sorted", ClusterUniverse::sorted()),
+        ]
+    }
+
+    #[test]
+    fn universe_picks_representation() {
+        assert_eq!(ClusterUniverse::new(100, 1024).words(), Some(2));
+        assert_eq!(ClusterUniverse::new(64, 1024).words(), Some(1));
+        assert_eq!(ClusterUniverse::new(65, 1024).words(), Some(2));
+        assert_eq!(ClusterUniverse::new(1024, 1024).words(), Some(16));
+        assert_eq!(ClusterUniverse::new(1025, 1024).words(), None, "above threshold");
+        assert_eq!(ClusterUniverse::new(100, 0).words(), None, "0 disables the bitmap");
+        assert_eq!(ClusterUniverse::sorted().words(), None);
+        assert_eq!(ClusterUniverse::new(100, 1024).dense_len(), 128);
+        assert_eq!(ClusterUniverse::sorted().dense_len(), 0);
+    }
+
+    #[test]
+    fn cluster_set_canonicalizes_and_iterates_sorted() {
+        for (tag, u) in universes() {
+            let s = ClusterSet::from_ids(&[5, 1, 5, 3, 1, 64, 99], u);
+            assert_eq!(s.to_vec(), vec![1, 3, 5, 64, 99], "{tag}");
+            assert_eq!(s.len(), 5, "{tag}");
+            assert!(!s.is_empty(), "{tag}");
+            assert!(s.contains(64) && s.contains(1) && !s.contains(2), "{tag}");
+            assert_eq!(s.is_bitmap(), u.words().is_some(), "{tag}");
+
+            let e = ClusterSet::from_ids(&[], u);
+            assert!(e.is_empty() && e.to_vec().is_empty(), "{tag}");
+        }
+    }
+
+    #[test]
+    fn out_of_range_ids_fall_back_per_set() {
+        let u = ClusterUniverse::new(100, 1024); // bitmap covers ids < 128
+        let in_range = ClusterSet::from_ids(&[1, 99], u);
+        let out_of_range = ClusterSet::from_ids(&[1, 5000], u);
+        assert!(in_range.is_bitmap());
+        assert!(!out_of_range.is_bitmap(), "id 5000 exceeds the 2-word width");
+        // Mixed-representation operations stay correct.
+        assert_eq!(in_range.intersection_len(&out_of_range), 1);
+        assert!((in_range.jaccard(&out_of_range) - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cluster_set_jaccard_matches_sorted_kernel_randomized() {
+        let mut rng = Rng::new(77);
+        for trial in 0..300 {
+            let mk_raw = |rng: &mut Rng| -> Vec<u32> {
+                let n = rng.range(0, 14);
+                (0..n).map(|_| rng.range(0, 100) as u32).collect::<Vec<_>>()
+            };
+            let ra = mk_raw(&mut rng);
+            let rb = mk_raw(&mut rng);
+            let (ca, cb) = (canonicalize(&ra), canonicalize(&rb));
+            let want = jaccard_sorted(&ca, &cb);
+            for (tag_a, ua) in universes() {
+                for (tag_b, ub) in universes() {
+                    let a = ClusterSet::from_ids(&ra, ua);
+                    let b = ClusterSet::from_ids(&rb, ub);
+                    assert_eq!(
+                        a.jaccard(&b),
+                        want,
+                        "trial {trial}: {tag_a}x{tag_b} diverges from sorted kernel"
+                    );
+                    assert!(
+                        a.jaccard(&b) <= a.jaccard_upper_bound(&b),
+                        "trial {trial}: upper bound not an upper bound"
+                    );
+                    // Union parity against the sorted kernel.
+                    let mut u = a.clone();
+                    u.union_with(&b);
+                    assert_eq!(u.to_vec(), union_sorted(&ca, &cb), "trial {trial}");
+                    assert_eq!(u.len(), union_sorted(&ca, &cb).len(), "trial {trial}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cluster_set_semantic_equality_across_representations() {
+        let bits = ClusterSet::from_ids(&[3, 1, 64], ClusterUniverse::new(100, 1024));
+        let sorted = ClusterSet::from_ids(&[64, 3, 1, 1], ClusterUniverse::sorted());
+        assert!(bits.is_bitmap() && !sorted.is_bitmap());
+        assert_eq!(bits, sorted);
+        assert_ne!(bits, ClusterSet::empty());
+        assert_eq!(ClusterSet::empty(), ClusterSet::from_ids(&[], ClusterUniverse::new(8, 64)));
+    }
+
+    #[test]
+    fn cluster_set_empty_conventions() {
+        let e1 = ClusterSet::empty();
+        let e2 = ClusterSet::from_ids(&[], ClusterUniverse::new(100, 1024));
+        let x = ClusterSet::from_ids(&[4], ClusterUniverse::new(100, 1024));
+        assert_eq!(e1.jaccard(&e2), 1.0, "two empty sets are identical by convention");
+        assert_eq!(e1.jaccard_upper_bound(&e2), 1.0);
+        assert_eq!(e1.jaccard(&x), 0.0);
+        assert_eq!(e1.jaccard_upper_bound(&x), 0.0);
+    }
+
+    #[test]
+    fn cluster_set_from_sorted_trusts_input() {
+        let s = ClusterSet::from_sorted(vec![2, 9, 40]);
+        assert_eq!(s.to_vec(), vec![2, 9, 40]);
+        assert_eq!(s.len(), 3);
+        assert!(!s.is_bitmap());
+    }
+
+    #[test]
+    fn upper_bound_prunes_only_true_negatives() {
+        // bound < θ must imply exact J < θ for every random pair (the
+        // pruning soundness the indexed grouper relies on).
+        let mut rng = Rng::new(91);
+        let u = ClusterUniverse::new(60, 1024);
+        for trial in 0..200 {
+            let n1 = rng.range(0, 12);
+            let n2 = rng.range(0, 12);
+            let a = ClusterSet::from_ids(
+                &(0..n1).map(|_| rng.range(0, 60) as u32).collect::<Vec<_>>(),
+                u,
+            );
+            let b = ClusterSet::from_ids(
+                &(0..n2).map(|_| rng.range(0, 60) as u32).collect::<Vec<_>>(),
+                u,
+            );
+            for theta in [0.1, 0.3, 0.5, 0.8, 1.0] {
+                if a.jaccard_upper_bound(&b) < theta {
+                    assert!(a.jaccard(&b) < theta, "trial {trial}: pruned a true match");
+                }
+            }
+        }
     }
 }

@@ -31,8 +31,15 @@ use crate::engine::SearchEngine;
 use crate::workload::Query;
 
 pub use dispatcher::QueryOutcome;
-pub use grouping::{group_queries, reorder_groups_greedy, GroupPlan, QueryGroup};
-pub use policy::{ArrivalOrder, GroupingWithPrefetch, JaccardGrouping, PolicyCtx, SchedulePolicy};
+pub use grouping::{
+    group_queries, group_queries_indexed, reorder_groups_greedy, GroupPlan, IncrementalGrouper,
+    QueryGroup,
+};
+pub use jaccard::{ClusterSet, ClusterUniverse};
+pub use policy::{
+    ArrivalOrder, GroupingWithPrefetch, IncrementalParams, JaccardGrouping, PolicyCtx,
+    SchedulePolicy,
+};
 pub use prefetch::Prefetcher;
 pub use scheduler::{bypasses_window, SessionScheduler, WindowAccumulator, WindowConfig};
 
@@ -161,10 +168,23 @@ impl Coordinator {
             let ctx = PolicyCtx { cfg: &self.engine.cfg };
             self.policy.plan(&prepared, &ctx)
         };
+        self.process_planned(&prepared, &plan)
+    }
+
+    /// Like [`Coordinator::process_batch`], but over an already prepared
+    /// batch with an externally built plan — the incremental scheduler path
+    /// (`coordinator::scheduler`) prepares queries and assigns them to
+    /// groups as they are admitted to the pooling window, then dispatches
+    /// the accumulated plan here at flush.
+    pub fn process_planned(
+        &mut self,
+        prepared: &[crate::engine::PreparedQuery],
+        plan: &GroupPlan,
+    ) -> anyhow::Result<(Vec<QueryOutcome>, BatchStats)> {
         let grouping = self.policy.is_grouping();
         let prefetching = self.policy.wants_prefetch();
         let stats = BatchStats {
-            batch_size: queries.len(),
+            batch_size: prepared.len(),
             groups: if grouping { plan.groups.len() } else { 0 },
             grouping_cost: if grouping { plan.grouping_cost } else { Duration::ZERO },
             // One prefetch per group switch — only when this policy actually
@@ -173,12 +193,19 @@ impl Coordinator {
         };
         let outcomes = dispatcher::dispatch(
             &mut self.engine,
-            &prepared,
-            &plan,
+            prepared,
+            plan,
             self.policy.as_ref(),
             self.prefetcher.as_ref(),
         )?;
         Ok((outcomes, stats))
+    }
+
+    /// Resolved incremental-grouping knobs of the active policy, or `None`
+    /// when its plans cannot be built incrementally.
+    pub fn incremental_params(&self) -> Option<IncrementalParams> {
+        let ctx = PolicyCtx { cfg: &self.engine.cfg };
+        self.policy.incremental_params(&ctx)
     }
 
     /// Prefetcher counters (zeros when the policy runs without prefetch).

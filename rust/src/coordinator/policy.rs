@@ -25,11 +25,24 @@ use crate::config::{Config, GroupOrder, GroupingPolicy};
 use crate::engine::PreparedQuery;
 
 use super::grouping::{self, GroupPlan};
+use super::jaccard::ClusterUniverse;
 
 /// Everything a policy may consult while planning one arrival batch.
 pub struct PolicyCtx<'a> {
     /// The serving configuration of the engine the plan will run on.
     pub cfg: &'a Config,
+}
+
+/// Fully resolved Algorithm 1 knobs for a policy instance: what the
+/// incremental grouping path ([`crate::coordinator::scheduler`]) needs to
+/// assign queries to groups *at admission* and still reproduce the plan
+/// this policy would have built at flush time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct IncrementalParams {
+    pub theta: f64,
+    pub link: GroupingPolicy,
+    pub order: GroupOrder,
+    pub universe: ClusterUniverse,
 }
 
 /// A batch-scheduling strategy: plans the dispatch order of one prepared
@@ -72,6 +85,15 @@ pub trait SchedulePolicy: Send {
             .get(group_idx)?
             .as_ref()
             .map(|(_, clusters)| clusters.clone())
+    }
+
+    /// Resolved Algorithm 1 knobs, when this policy's plans are exactly
+    /// incremental Jaccard grouping — the contract that lets the streaming
+    /// scheduler assign pooled queries to groups at admission instead of
+    /// re-planning the whole window at flush. Policies with bespoke `plan`
+    /// logic return `None` (the default) and keep the flush-time path.
+    fn incremental_params(&self, _ctx: &PolicyCtx<'_>) -> Option<IncrementalParams> {
+        None
     }
 }
 
@@ -122,12 +144,25 @@ impl JaccardGrouping {
         Box::new(JaccardGrouping::default())
     }
 
+    /// Resolve every knob against the config (per-instance overrides win).
+    fn resolved(&self, ctx: &PolicyCtx<'_>) -> IncrementalParams {
+        IncrementalParams {
+            theta: self.theta.unwrap_or(ctx.cfg.theta),
+            link: self.link.unwrap_or(ctx.cfg.grouping),
+            order: self.order.unwrap_or(ctx.cfg.group_order),
+            universe: ClusterUniverse::new(
+                ctx.cfg.clusters,
+                ctx.cfg.grouping_bitmap_threshold,
+            ),
+        }
+    }
+
     fn make_plan(&self, prepared: &[PreparedQuery], ctx: &PolicyCtx<'_>) -> GroupPlan {
-        let theta = self.theta.unwrap_or(ctx.cfg.theta);
-        let link = self.link.unwrap_or(ctx.cfg.grouping);
-        let order = self.order.unwrap_or(ctx.cfg.group_order);
-        let mut plan = grouping::group_queries(prepared, theta, link);
-        if order == GroupOrder::Greedy {
+        let p = self.resolved(ctx);
+        // The indexed engine: oracle-identical to naive `group_queries`,
+        // near-linear instead of O(window²) (docs/GROUPING.md).
+        let mut plan = grouping::group_queries_indexed(prepared, p.theta, p.link, p.universe);
+        if p.order == GroupOrder::Greedy {
             grouping::reorder_groups_greedy(&mut plan);
         }
         plan
@@ -141,6 +176,10 @@ impl SchedulePolicy for JaccardGrouping {
 
     fn plan(&self, prepared: &[PreparedQuery], ctx: &PolicyCtx<'_>) -> GroupPlan {
         self.make_plan(prepared, ctx)
+    }
+
+    fn incremental_params(&self, ctx: &PolicyCtx<'_>) -> Option<IncrementalParams> {
+        Some(self.resolved(ctx))
     }
 }
 
@@ -171,6 +210,10 @@ impl SchedulePolicy for GroupingWithPrefetch {
 
     fn wants_prefetch(&self) -> bool {
         true
+    }
+
+    fn incremental_params(&self, ctx: &PolicyCtx<'_>) -> Option<IncrementalParams> {
+        Some(self.grouping.resolved(ctx))
     }
 }
 
@@ -228,6 +271,31 @@ mod tests {
         let grouped = JaccardGrouping { theta: Some(0.0), ..Default::default() };
         let plan = grouped.plan(&batch(), &ctx);
         assert_eq!(plan.groups.len(), 1, "theta=0 override must group everything");
+    }
+
+    #[test]
+    fn incremental_params_resolve_config_and_overrides() {
+        let cfg = Config::default();
+        let ctx = PolicyCtx { cfg: &cfg };
+        assert!(
+            ArrivalOrder.incremental_params(&ctx).is_none(),
+            "arrival order has no incremental grouping contract"
+        );
+        let p = JaccardGrouping::default().incremental_params(&ctx).unwrap();
+        assert_eq!(p.theta, cfg.theta);
+        assert_eq!(p.link, cfg.grouping);
+        assert_eq!(p.order, cfg.group_order);
+        assert_eq!(
+            p.universe,
+            super::super::jaccard::ClusterUniverse::new(
+                cfg.clusters,
+                cfg.grouping_bitmap_threshold
+            )
+        );
+        let over = JaccardGrouping { theta: Some(0.9), ..Default::default() };
+        assert_eq!(over.incremental_params(&ctx).unwrap().theta, 0.9);
+        let qgp = GroupingWithPrefetch::default().incremental_params(&ctx).unwrap();
+        assert_eq!(qgp, p, "QGP inherits its grouping knobs");
     }
 
     #[test]

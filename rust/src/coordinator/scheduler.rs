@@ -24,7 +24,11 @@
 //!   window/bypass discipline the TCP server applies across connections;
 //!   [`Session::scheduler`](crate::session::Session::scheduler) hands one
 //!   out. In-process embedders feeding queries from many logical sources
-//!   get the same pooled grouping the wire path gets.
+//!   get the same pooled grouping the wire path gets — and, under the
+//!   built-in Jaccard policies, queries are prepared and **assigned to
+//!   groups at admission** (incremental Algorithm 1, docs/GROUPING.md), so
+//!   the window flush dispatches a ready-made plan instead of bursting
+//!   O(window²) grouping work onto the flush path.
 //!
 //! The TCP server (`crate::server`) runs the window accumulation on a
 //! dedicated scheduler thread fed by every connection handler, and hands
@@ -34,7 +38,11 @@
 
 use std::time::{Duration, Instant};
 
+use crate::config::GroupOrder;
+use crate::coordinator::grouping::{group_queries_indexed, reorder_groups_greedy, IncrementalGrouper};
+use crate::coordinator::policy::IncrementalParams;
 use crate::coordinator::QueryOutcome;
+use crate::engine::PreparedQuery;
 use crate::proto::SearchOptions;
 use crate::session::Session;
 use crate::workload::Query;
@@ -161,19 +169,54 @@ pub struct SchedulerTotals {
 }
 
 /// One pooled submission: the query plus what the flush-time deadline
-/// check needs (mirrors the TCP server's dequeue-time pass).
+/// check needs (mirrors the TCP server's dequeue-time pass). The
+/// incremental path stores the prepared form (encode + first-level scan,
+/// done at admission) — which already owns the query — so neither path
+/// clones the query twice.
 struct Pooled {
-    query: Query,
+    form: PooledForm,
     deadline_ms: Option<u64>,
     received_at: Instant,
 }
 
+enum PooledForm {
+    /// Flush-time path: grouping happens at flush, `run_batch` prepares.
+    Raw(Query),
+    /// Incremental path: prepared (and group-assigned) at admission.
+    Prepared(PreparedQuery),
+}
+
+impl PooledForm {
+    fn into_query(self) -> Query {
+        match self {
+            PooledForm::Raw(q) => q,
+            PooledForm::Prepared(pq) => pq.query,
+        }
+    }
+}
+
+/// Incremental-grouping state: the policy's resolved Algorithm 1 knobs and
+/// the grouper accumulating the open window's partition.
+struct IncrementalState {
+    params: IncrementalParams,
+    grouper: IncrementalGrouper,
+}
+
 /// Drives one [`Session`] through the streaming-scheduler discipline: pool
-/// submissions into a micro-batch window, run the session's grouping over
-/// the pooled window at flush time, and route deadline-critical queries
-/// around the window entirely. This is the in-process twin of the TCP
-/// server's scheduler thread — identical window-formation and bypass logic,
-/// minus the sockets.
+/// submissions into a micro-batch window, and route deadline-critical
+/// queries around the window entirely. This is the in-process twin of the
+/// TCP server's scheduler thread — identical window-formation and bypass
+/// logic, minus the sockets.
+///
+/// When the session's policy exposes
+/// [`IncrementalParams`](crate::coordinator::IncrementalParams) (the
+/// built-in Jaccard policies do), each submission is prepared and assigned
+/// to its group **at admission** — Algorithm 1's cost is amortized into
+/// the window wait the query was already paying — and flush only runs the
+/// optional greedy reorder plus the `next_first` link rebuild before
+/// dispatching. The partition is identical to what flush-time grouping
+/// would have produced (rust/tests/grouping_oracle.rs); policies without
+/// the contract keep the historical flush-time `run_batch` path.
 ///
 /// ```text
 /// let mut sched = session.scheduler(WindowConfig { max_queries: 64, ..Default::default() });
@@ -185,17 +228,28 @@ struct Pooled {
 pub struct SessionScheduler<'a> {
     session: &'a mut Session,
     acc: WindowAccumulator<Pooled>,
+    inc: Option<IncrementalState>,
     totals: SchedulerTotals,
     expired: Vec<Query>,
+    /// Admission-time grouping cost of windows that dispatched nothing
+    /// (every member expired): attached to the next dispatched plan so the
+    /// session's grouping-cost totals never undercount.
+    carried_cost: Duration,
 }
 
 impl<'a> SessionScheduler<'a> {
     pub(crate) fn new(session: &'a mut Session, cfg: WindowConfig) -> SessionScheduler<'a> {
+        let inc = session.incremental_params().map(|params| IncrementalState {
+            grouper: IncrementalGrouper::new(params.theta, params.link, params.universe),
+            params,
+        });
         SessionScheduler {
             session,
             acc: WindowAccumulator::new(cfg),
+            inc,
             totals: SchedulerTotals::default(),
             expired: Vec::new(),
+            carried_cost: Duration::ZERO,
         }
     }
 
@@ -214,10 +268,16 @@ impl<'a> SessionScheduler<'a> {
             let opts = SearchOptions { deadline_ms, ..Default::default() };
             return self.session.run_one(query, &opts).map(|o| vec![o]);
         }
-        self.acc.push(
-            Pooled { query: query.clone(), deadline_ms, received_at: Instant::now() },
-            Instant::now(),
-        );
+        // Incremental path: prepare + assign NOW, off the flush path.
+        let form = match &mut self.inc {
+            Some(st) => {
+                let pq = self.session.prepare_one(query)?;
+                st.grouper.assign(self.acc.len(), &pq.clusters);
+                PooledForm::Prepared(pq)
+            }
+            None => PooledForm::Raw(query.clone()),
+        };
+        self.acc.push(Pooled { form, deadline_ms, received_at: Instant::now() }, Instant::now());
         if self.acc.is_full() {
             self.flush()
         } else {
@@ -252,23 +312,75 @@ impl<'a> SessionScheduler<'a> {
         self.totals.windows += 1;
         self.totals.pooled += window.len();
         let now = Instant::now();
-        let mut batch = Vec::with_capacity(window.len());
+        let mut alive = Vec::with_capacity(window.len());
+        let mut dead = 0usize;
         for pooled in window {
-            let dead = pooled.deadline_ms.is_some_and(|ms| {
+            let expired = pooled.deadline_ms.is_some_and(|ms| {
                 now.duration_since(pooled.received_at) > Duration::from_millis(ms)
             });
-            if dead {
+            if expired {
                 self.totals.expired += 1;
-                self.expired.push(pooled.query);
+                dead += 1;
+                self.expired.push(pooled.form.into_query());
             } else {
-                batch.push(pooled.query);
+                alive.push(pooled);
             }
         }
-        if batch.is_empty() {
-            return Ok(Vec::new());
+        match &mut self.inc {
+            Some(st) => {
+                // The grouper accumulated over the whole window (including
+                // any now-expired members); always drain it so the next
+                // window starts clean.
+                let mut plan = st.grouper.finish();
+                plan.grouping_cost += std::mem::take(&mut self.carried_cost);
+                if alive.is_empty() {
+                    // Nothing to dispatch, so there is no plan to report the
+                    // admission-time cost through — carry it into the next
+                    // dispatched window instead of dropping it.
+                    self.carried_cost = plan.grouping_cost;
+                    return Ok(Vec::new());
+                }
+                let prepared: Vec<PreparedQuery> = alive
+                    .into_iter()
+                    .map(|p| match p.form {
+                        PooledForm::Prepared(pq) => pq,
+                        PooledForm::Raw(_) => {
+                            unreachable!("incremental window items are prepared at submit")
+                        }
+                    })
+                    .collect();
+                if dead > 0 {
+                    // Dropped members would leave holes in the incremental
+                    // partition; regroup the survivors — identical to what
+                    // flush-time grouping over them would produce, and the
+                    // expiry path is rare by construction. The window's true
+                    // Algorithm 1 cost is the admission-time work PLUS the
+                    // regroup, so carry the discarded plan's cost over.
+                    let admission_cost = plan.grouping_cost;
+                    plan = group_queries_indexed(
+                        &prepared,
+                        st.params.theta,
+                        st.params.link,
+                        st.params.universe,
+                    );
+                    plan.grouping_cost += admission_cost;
+                }
+                if st.params.order == GroupOrder::Greedy {
+                    reorder_groups_greedy(&mut plan);
+                }
+                let (outcomes, _stats) = self.session.run_planned(&prepared, &plan)?;
+                Ok(outcomes)
+            }
+            None => {
+                if alive.is_empty() {
+                    return Ok(Vec::new());
+                }
+                let batch: Vec<Query> =
+                    alive.into_iter().map(|p| p.form.into_query()).collect();
+                let (outcomes, _stats) = self.session.run_batch(&batch)?;
+                Ok(outcomes)
+            }
         }
-        let (outcomes, _stats) = self.session.run_batch(&batch)?;
-        Ok(outcomes)
     }
 
     /// Queries whose deadline elapsed before their window flushed, drained

@@ -278,8 +278,10 @@ where
                 }
             }
             let t0 = Instant::now();
-            let dists = engine.compute.score_block(&pq.embedding, 1, &block)?;
-            topk.push_block(&block.doc_ids, &dists);
+            // Per-engine scratch: scoring stays on this (dispatch) thread,
+            // so the buffer is never contended.
+            engine.compute.score_block_into(&pq.embedding, 1, &block, &mut engine.score_scratch)?;
+            topk.push_block(&block.doc_ids, &engine.score_scratch);
             score_time += t0.elapsed();
         }
         report.simulated = io_share;

@@ -194,6 +194,12 @@ pub struct SearchEngine {
     /// I/O worker pool for the parallel group executor; `None` when
     /// `cfg.io_workers <= 1` (sequential path).
     pub(crate) io_pool: Option<Arc<ThreadPool>>,
+    /// Reusable per-block distance buffer: scoring runs once per probed
+    /// cluster per query, and allocating the distance matrix fresh each
+    /// time was pure churn on the hot path (`Compute::score_block_into`
+    /// resizes it to the block at hand). Scoring stays on the dispatch
+    /// thread in both execution modes, so one buffer per engine suffices.
+    pub(crate) score_scratch: Vec<f32>,
 }
 
 impl SearchEngine {
@@ -278,6 +284,7 @@ impl SearchEngine {
             inflight: shared_inflight.unwrap_or_else(|| Arc::new(inflight::InFlight::new())),
             pin_owner: crate::cache::next_pin_owner(),
             io_pool,
+            score_scratch: Vec::new(),
         })
     }
 
@@ -354,8 +361,13 @@ impl SearchEngine {
                 report.bytes_read += outcome.bytes_read;
                 report.simulated += outcome.simulated;
             }
-            let dists = self.compute.score_block(&pq.embedding, 1, &outcome.block)?;
-            topk.push_block(&outcome.block.doc_ids, &dists);
+            self.compute.score_block_into(
+                &pq.embedding,
+                1,
+                &outcome.block,
+                &mut self.score_scratch,
+            )?;
+            topk.push_block(&outcome.block.doc_ids, &self.score_scratch);
         }
         report.latency = t0.elapsed() + pq.prep_cost;
         Ok((report, topk.into_sorted()))
@@ -384,8 +396,8 @@ impl SearchEngine {
         let mut topk = TopK::new(self.cfg.top_k);
         for cid in 0..self.index.meta.clusters as u32 {
             let block = Arc::new(self.index.read_cluster(cid)?);
-            let dists = self.compute.score_block(&pq.embedding, 1, &block)?;
-            topk.push_block(&block.doc_ids, &dists);
+            self.compute.score_block_into(&pq.embedding, 1, &block, &mut self.score_scratch)?;
+            topk.push_block(&block.doc_ids, &self.score_scratch);
         }
         Ok(topk.into_sorted())
     }
@@ -535,9 +547,7 @@ mod tests {
         for pq in &prepared {
             assert_eq!(pq.clusters.len(), engine.cfg.nprobe);
             assert_eq!(pq.embedding.len(), engine.index.meta.dim);
-            let mut unique = pq.clusters.clone();
-            unique.sort_unstable();
-            unique.dedup();
+            let unique: std::collections::HashSet<u32> = pq.clusters.iter().copied().collect();
             assert_eq!(unique.len(), pq.clusters.len(), "duplicate cluster ids");
         }
         std::fs::remove_dir_all(&dir).ok();

@@ -72,6 +72,11 @@ pub struct WindowGauges {
     /// Queries that bypassed the window (deadline too tight to survive the
     /// window wait, or per-request options forcing the single-query path).
     pub express: u64,
+    /// Total microseconds spent running Algorithm 1 over dispatched
+    /// windows — the quantity the indexed grouping engine exists to keep
+    /// negligible (docs/GROUPING.md); watch it against `window_queries` in
+    /// production.
+    pub grouping_cost_us: u64,
 }
 
 impl WindowGauges {
@@ -98,6 +103,11 @@ impl WindowGauges {
         self.express += 1;
     }
 
+    /// Record the grouping cost one dispatched window paid.
+    pub fn record_grouping_cost(&mut self, cost: Duration) {
+        self.grouping_cost_us += cost.as_micros() as u64;
+    }
+
     /// Mean queries per window (0 when no window was dispatched yet).
     pub fn mean_occupancy(&self) -> f64 {
         if self.windows == 0 {
@@ -121,6 +131,7 @@ impl WindowGauges {
             ("groups", Json::Num(self.groups as f64)),
             ("cross_conn_groups", Json::Num(self.cross_conn_groups as f64)),
             ("express", Json::Num(self.express as f64)),
+            ("grouping_cost_us", Json::Num(self.grouping_cost_us as f64)),
         ])
     }
 }
@@ -363,6 +374,8 @@ mod tests {
         g.record_window(8, 3, 2, 1); // 8 queries from 3 conns, 2 groups
         g.record_window(4, 1, 4, 0); // single-connection window
         g.record_express();
+        g.record_grouping_cost(Duration::from_micros(120));
+        g.record_grouping_cost(Duration::from_micros(30));
         assert_eq!(g.windows, 2);
         assert_eq!(g.window_queries, 12);
         assert_eq!(g.max_occupancy, 8);
@@ -370,6 +383,7 @@ mod tests {
         assert_eq!(g.groups, 6);
         assert_eq!(g.cross_conn_groups, 1);
         assert_eq!(g.express, 1);
+        assert_eq!(g.grouping_cost_us, 150);
         assert!((g.mean_occupancy() - 6.0).abs() < 1e-12);
     }
 

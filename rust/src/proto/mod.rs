@@ -656,6 +656,7 @@ fn parse_window_gauges(v: &Json) -> WindowGauges {
         groups: n("groups"),
         cross_conn_groups: n("cross_conn_groups"),
         express: n("express"),
+        grouping_cost_us: n("grouping_cost_us"),
     }
 }
 
@@ -798,6 +799,7 @@ mod tests {
                     groups: 9,
                     cross_conn_groups: 5,
                     express: 2,
+                    grouping_cost_us: 740,
                 },
                 lanes: vec![LaneStats {
                     lane: 0,

@@ -302,24 +302,36 @@ impl Compute {
         nq: usize,
         block: &ClusterBlock,
     ) -> anyhow::Result<Vec<f32>> {
+        let mut out = Vec::new();
+        self.score_block_into(queries, nq, block, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`Compute::score_block`] writing into a caller-owned buffer, resized
+    /// to exactly `nq * block.len`. The engine's serving loop scores one
+    /// block per probed cluster per query; routing those through one
+    /// per-engine scratch buffer removes a heap allocation from every
+    /// fetch+score step.
+    pub fn score_block_into(
+        &self,
+        queries: &[f32],
+        nq: usize,
+        block: &ClusterBlock,
+        out: &mut Vec<f32>,
+    ) -> anyhow::Result<()> {
         let dim = block.dim;
         debug_assert_eq!(queries.len(), nq * dim);
         anyhow::ensure!(nq <= SCORE_Q, "score_block: nq {nq} > SCORE_Q {SCORE_Q}");
+        out.clear();
+        out.resize(nq * block.len, 0f32);
         match self {
             Compute::Native { .. } => {
-                let mut out = vec![0f32; nq * block.len];
-                distance::l2_many_to_many(
-                    queries,
-                    &block.data[..block.len * dim],
-                    dim,
-                    &mut out,
-                );
-                Ok(out)
+                distance::l2_many_to_many(queries, &block.data[..block.len * dim], dim, out);
+                Ok(())
             }
             Compute::Pjrt { runtime, .. } => {
                 let mut qbuf = vec![0f32; SCORE_Q * EMBED_DIM];
                 qbuf[..nq * dim].copy_from_slice(queries);
-                let mut out = vec![0f32; nq * block.len];
                 let padded = block.padded_len();
                 debug_assert_eq!(padded % SCORE_N, 0);
                 for (c, chunk) in block.data.chunks_exact(SCORE_N * dim).enumerate() {
@@ -334,7 +346,7 @@ impl Compute {
                             .copy_from_slice(&dists[q * SCORE_N..q * SCORE_N + valid]);
                     }
                 }
-                Ok(out)
+                Ok(())
             }
         }
     }

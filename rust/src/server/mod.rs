@@ -708,7 +708,12 @@ fn run_window(session: &mut Session, works: &[Work], state: &ServerState) -> Vec
         let queries: Vec<Query> =
             grouped.iter().map(|&i| works[i].request.query.clone()).collect();
         match session.run_batch(&queries) {
-            Ok((outcomes, _stats)) => {
+            Ok((outcomes, stats)) => {
+                // Grouping cost per window, straight into the scheduler
+                // gauges: the indexed engine's whole point is keeping this
+                // negligible relative to the window wait, and the `stats`
+                // verb is where production watches it.
+                state.gauges.lock().unwrap().record_grouping_cost(stats.grouping_cost);
                 let done = Instant::now();
                 // Route each outcome to the request that produced it. Each
                 // outcome is consumed once, so duplicate query_ids in one

@@ -35,9 +35,11 @@ use std::time::Duration;
 use crate::cache::{CacheStats, ShardedClusterCache};
 use crate::config::Config;
 use crate::coordinator::scheduler::{SessionScheduler, WindowConfig};
-use crate::coordinator::{BatchStats, Coordinator, Mode, QueryOutcome, SchedulePolicy};
+use crate::coordinator::{
+    BatchStats, Coordinator, GroupPlan, IncrementalParams, Mode, QueryOutcome, SchedulePolicy,
+};
 use crate::engine::inflight::InFlight;
-use crate::engine::SearchEngine;
+use crate::engine::{PreparedQuery, SearchEngine};
 use crate::harness::runner;
 use crate::workload::{DatasetSpec, Query};
 
@@ -220,6 +222,40 @@ impl Session {
         self.totals.groups += stats.groups;
         self.totals.grouping_cost += stats.grouping_cost;
         Ok((outcomes, stats))
+    }
+
+    /// Dispatch an already prepared batch under an externally built
+    /// [`GroupPlan`] — the incremental scheduler's flush path: queries were
+    /// prepared and assigned to groups as they were admitted
+    /// ([`SessionScheduler`]), so flush-time work is the dispatch itself,
+    /// not a re-run of Algorithm 1. Plan member indices must index into
+    /// `prepared`. Totals are updated exactly as for
+    /// [`Session::run_batch`].
+    pub fn run_planned(
+        &mut self,
+        prepared: &[PreparedQuery],
+        plan: &GroupPlan,
+    ) -> anyhow::Result<(Vec<QueryOutcome>, BatchStats)> {
+        let (outcomes, stats) = self.coordinator.process_planned(prepared, plan)?;
+        self.totals.batches += 1;
+        self.totals.queries += stats.batch_size;
+        self.totals.groups += stats.groups;
+        self.totals.grouping_cost += stats.grouping_cost;
+        Ok((outcomes, stats))
+    }
+
+    /// Encode + first-level scan for a single query (what the incremental
+    /// scheduler runs at admission, so `C(q_i)` is known before the window
+    /// flushes).
+    pub fn prepare_one(&mut self, query: &Query) -> anyhow::Result<PreparedQuery> {
+        let mut prepared = self.coordinator.engine.prepare(std::slice::from_ref(query))?;
+        Ok(prepared.remove(0))
+    }
+
+    /// Resolved incremental-grouping knobs of the active policy (`None`
+    /// when its plans cannot be built incrementally).
+    pub fn incremental_params(&self) -> Option<IncrementalParams> {
+        self.coordinator.incremental_params()
     }
 
     /// Search one query on the single-query path — no grouping, no batch

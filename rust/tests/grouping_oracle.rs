@@ -1,0 +1,270 @@
+//! Oracle-parity suite for the indexed/incremental grouping engine: over
+//! randomized batches, `group_queries_indexed` and `IncrementalGrouper`
+//! must produce the *identical* partition, group order, member order,
+//! cluster unions, and `next_first` links as the naive Algorithm 1
+//! transcription `group_queries` — across both link policies, the paper's
+//! θ sweep, the bitmap and sorted-vec representations (including the
+//! above-threshold fallback and per-set out-of-range fallback), duplicate
+//! cluster ids, and empty cluster sets. The greedy inter-group reorder
+//! must also agree on every representation (Jaccard values are
+//! bit-identical across kernels).
+
+use cagr::config::GroupingPolicy;
+use cagr::coordinator::grouping::{
+    group_queries, group_queries_indexed, reorder_groups_greedy, GroupPlan, IncrementalGrouper,
+};
+use cagr::coordinator::jaccard::ClusterUniverse;
+use cagr::engine::PreparedQuery;
+use cagr::util::rng::Rng;
+use cagr::workload::Query;
+
+const THETAS: [f64; 5] = [0.0, 0.3, 0.5, 0.8, 1.0];
+const LINKS: [GroupingPolicy; 2] = [GroupingPolicy::SingleLink, GroupingPolicy::CompleteLink];
+
+/// Raw (unsorted, possibly duplicated, possibly empty) cluster lists — the
+/// grouping engines must canonicalize internally.
+fn random_batch(
+    rng: &mut Rng,
+    n: usize,
+    universe: u32,
+    max_len: usize,
+    allow_empty: bool,
+) -> Vec<PreparedQuery> {
+    (0..n)
+        .map(|id| {
+            let lo = usize::from(!allow_empty);
+            let len = rng.range(lo, max_len + 1);
+            let clusters: Vec<u32> =
+                (0..len).map(|_| rng.range(0, universe as usize) as u32).collect();
+            PreparedQuery {
+                query: Query { id, template: 0, topic: 0, tokens: vec![] },
+                embedding: vec![],
+                clusters,
+                prep_cost: std::time::Duration::ZERO,
+            }
+        })
+        .collect()
+}
+
+/// Everything a plan asserts about the partition, flattened to plain data
+/// so plans built over different representations compare directly.
+type Fingerprint = (
+    Vec<(Vec<usize>, Vec<Vec<u32>>, Vec<u32>)>,
+    Vec<Option<(usize, Vec<u32>)>>,
+);
+
+fn fingerprint(plan: &GroupPlan) -> Fingerprint {
+    (
+        plan.groups
+            .iter()
+            .map(|g| {
+                (
+                    g.members.clone(),
+                    g.member_clusters.iter().map(|c| c.to_vec()).collect(),
+                    g.clusters.to_vec(),
+                )
+            })
+            .collect(),
+        plan.next_first.clone(),
+    )
+}
+
+fn incremental_plan(
+    batch: &[PreparedQuery],
+    theta: f64,
+    link: GroupingPolicy,
+    universe: ClusterUniverse,
+) -> GroupPlan {
+    let mut grouper = IncrementalGrouper::new(theta, link, universe);
+    for (idx, pq) in batch.iter().enumerate() {
+        let gid = grouper.assign(idx, &pq.clusters);
+        assert!(gid < grouper.group_count(), "assign returned an unknown group");
+    }
+    grouper.finish()
+}
+
+/// The core sweep: naive vs indexed vs incremental over one universe.
+fn assert_oracle_parity(seed_base: u64, universe_ids: u32, universe: ClusterUniverse, tag: &str) {
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(seed_base + seed);
+        let n = rng.range(0, 120);
+        let batch = random_batch(&mut rng, n, universe_ids, 12, true);
+        for theta in THETAS {
+            for link in LINKS {
+                let want = group_queries(&batch, theta, link);
+                let indexed = group_queries_indexed(&batch, theta, link, universe);
+                let incremental = incremental_plan(&batch, theta, link, universe);
+                let wf = fingerprint(&want);
+                assert_eq!(
+                    fingerprint(&indexed),
+                    wf,
+                    "{tag} seed {seed}: indexed diverges (theta={theta}, {link:?})"
+                );
+                assert_eq!(
+                    fingerprint(&incremental),
+                    wf,
+                    "{tag} seed {seed}: incremental diverges (theta={theta}, {link:?})"
+                );
+
+                // The greedy inter-group reorder must agree too (its
+                // Jaccard comparisons are bit-identical across kernels).
+                let mut want_g = want.clone();
+                let mut indexed_g = indexed.clone();
+                let mut incremental_g = incremental.clone();
+                reorder_groups_greedy(&mut want_g);
+                reorder_groups_greedy(&mut indexed_g);
+                reorder_groups_greedy(&mut incremental_g);
+                let wgf = fingerprint(&want_g);
+                assert_eq!(
+                    fingerprint(&indexed_g),
+                    wgf,
+                    "{tag} seed {seed}: greedy reorder diverges (theta={theta}, {link:?})"
+                );
+                assert_eq!(
+                    fingerprint(&incremental_g),
+                    wgf,
+                    "{tag} seed {seed}: greedy reorder (incremental) diverges"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn oracle_parity_bitmap_universe() {
+    // Paper-shaped universe: 60 ids, well under the threshold -> 1-word
+    // bitmaps.
+    assert_oracle_parity(10_000, 60, ClusterUniverse::new(60, 1024), "bitmap");
+}
+
+#[test]
+fn oracle_parity_sorted_fallback_universe() {
+    // Universe above the threshold: every set takes the sorted-vec form.
+    assert_oracle_parity(20_000, 5_000, ClusterUniverse::new(5_000, 1024), "sorted");
+}
+
+#[test]
+fn oracle_parity_mixed_representation() {
+    // Universe declared small (bitmap engages) but ids drawn far beyond the
+    // bitmap width: sets fall back per-set, so bitmap and sorted members
+    // coexist inside one run and inside single groups.
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(30_000 + seed);
+        let n = rng.range(0, 80);
+        let universe = ClusterUniverse::new(64, 1024); // 1 word: ids < 64
+        let batch: Vec<PreparedQuery> = (0..n)
+            .map(|id| {
+                let len = rng.range(0, 10);
+                let clusters: Vec<u32> = (0..len)
+                    .map(|_| {
+                        if rng.f64() < 0.5 {
+                            rng.range(0, 40) as u32 // in bitmap range
+                        } else {
+                            1_000 + rng.range(0, 40) as u32 // out of range
+                        }
+                    })
+                    .collect();
+                PreparedQuery {
+                    query: Query { id, template: 0, topic: 0, tokens: vec![] },
+                    embedding: vec![],
+                    clusters,
+                    prep_cost: std::time::Duration::ZERO,
+                }
+            })
+            .collect();
+        for theta in [0.0, 0.5, 1.0] {
+            for link in LINKS {
+                let want = fingerprint(&group_queries(&batch, theta, link));
+                let got = fingerprint(&group_queries_indexed(&batch, theta, link, universe));
+                assert_eq!(got, want, "seed {seed}: mixed-rep run diverges (theta={theta})");
+            }
+        }
+    }
+}
+
+#[test]
+fn representations_produce_identical_plans() {
+    // The representation is invisible in the output: bitmap vs sorted runs
+    // over the same batch fingerprint identically.
+    for seed in 0..30u64 {
+        let mut rng = Rng::new(40_000 + seed);
+        let n = rng.range(1, 90);
+        let batch = random_batch(&mut rng, n, 100, 10, true);
+        for theta in [0.3, 0.5, 0.8] {
+            for link in LINKS {
+                let bitmap = group_queries_indexed(
+                    &batch,
+                    theta,
+                    link,
+                    ClusterUniverse::new(100, 1024),
+                );
+                let sorted =
+                    group_queries_indexed(&batch, theta, link, ClusterUniverse::sorted());
+                assert!(bitmap.groups.iter().all(|g| g.clusters.is_bitmap()), "seed {seed}");
+                assert!(sorted.groups.iter().all(|g| !g.clusters.is_bitmap()), "seed {seed}");
+                assert_eq!(fingerprint(&bitmap), fingerprint(&sorted), "seed {seed}");
+            }
+        }
+    }
+}
+
+#[test]
+fn duplicate_ids_and_empty_sets_match_oracle() {
+    // Degenerate shapes the randomized sweep hits only occasionally, pinned
+    // explicitly: heavy duplication and empty cluster sets (J(∅,∅) = 1, so
+    // empty-set queries group together at every θ; J(∅,m) = 0 keeps them
+    // out of non-empty groups for θ > 0).
+    let mk = |clusters: &[&[u32]]| -> Vec<PreparedQuery> {
+        clusters
+            .iter()
+            .enumerate()
+            .map(|(id, c)| PreparedQuery {
+                query: Query { id, template: 0, topic: 0, tokens: vec![] },
+                embedding: vec![],
+                clusters: c.to_vec(),
+                prep_cost: std::time::Duration::ZERO,
+            })
+            .collect()
+    };
+    let batches: Vec<Vec<PreparedQuery>> = vec![
+        mk(&[&[2, 2, 1], &[1, 2], &[2, 1, 1, 2]]),
+        mk(&[&[], &[1], &[], &[1, 1], &[]]),
+        mk(&[&[], &[], &[]]),
+        mk(&[&[7, 7, 7], &[7], &[8], &[]]),
+    ];
+    for batch in &batches {
+        for theta in THETAS {
+            for link in LINKS {
+                let want = fingerprint(&group_queries(batch, theta, link));
+                for universe in [ClusterUniverse::new(100, 1024), ClusterUniverse::sorted()] {
+                    let indexed =
+                        fingerprint(&group_queries_indexed(batch, theta, link, universe));
+                    let incremental =
+                        fingerprint(&incremental_plan(batch, theta, link, universe));
+                    assert_eq!(indexed, want, "theta={theta} {link:?}");
+                    assert_eq!(incremental, want, "theta={theta} {link:?}");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn incremental_grouper_windows_are_independent() {
+    // Reusing one grouper across windows (the scheduler's lifecycle) must
+    // match a fresh grouper per window: no postings/stamp leakage.
+    let mut rng = Rng::new(55_000);
+    let universe = ClusterUniverse::new(60, 1024);
+    let mut reused = IncrementalGrouper::new(0.5, GroupingPolicy::SingleLink, universe);
+    for window in 0..10 {
+        let n = rng.range(1, 60);
+        let batch = random_batch(&mut rng, n, 60, 10, true);
+        for (idx, pq) in batch.iter().enumerate() {
+            reused.assign(idx, &pq.clusters);
+        }
+        let got = fingerprint(&reused.finish());
+        let want =
+            fingerprint(&group_queries(&batch, 0.5, GroupingPolicy::SingleLink));
+        assert_eq!(got, want, "window {window}: reused grouper diverges from fresh oracle");
+    }
+}

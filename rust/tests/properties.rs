@@ -124,7 +124,7 @@ fn prop_complete_link_groups_satisfy_pairwise_theta() {
         for (gi, g) in plan.groups.iter().enumerate() {
             for i in 0..g.member_clusters.len() {
                 for j in (i + 1)..g.member_clusters.len() {
-                    let s = jaccard_sorted(&g.member_clusters[i], &g.member_clusters[j]);
+                    let s = g.member_clusters[i].jaccard(&g.member_clusters[j]);
                     assert!(
                         s >= theta,
                         "seed {seed}: group {gi} pair ({i},{j}) sim {s} < theta {theta}"
@@ -147,7 +147,7 @@ fn prop_next_first_chain_is_consistent() {
             match (nf, plan.groups.get(i + 1)) {
                 (Some((idx, clusters)), Some(next)) => {
                     assert_eq!(*idx, next.members[0], "seed {seed}");
-                    assert_eq!(clusters, &next.member_clusters[0], "seed {seed}");
+                    assert_eq!(clusters, &next.member_clusters[0].to_vec(), "seed {seed}");
                 }
                 (None, None) => {}
                 _ => panic!("seed {seed}: next_first/groups mismatch at {i}"),

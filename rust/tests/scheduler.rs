@@ -300,6 +300,7 @@ fn session_scheduler_matches_run_batch() {
     for q in &queries[..N] {
         got.extend(sched.submit(q, None).unwrap());
     }
+    drop(sched);
     let key = |outs: &[cagr::coordinator::QueryOutcome]| {
         let mut v: Vec<(usize, Vec<u32>)> = outs
             .iter()
@@ -309,6 +310,14 @@ fn session_scheduler_matches_run_batch() {
         v
     };
     assert_eq!(key(&got), key(&want), "windowed scheduling changed results");
+    // The incremental path (QG exposes incremental_params) dispatched a
+    // ready-made plan at flush; the session's totals must reflect it just
+    // like a run_batch would.
+    assert!(session.incremental_params().is_some(), "QG must expose incremental grouping");
+    let totals = session.stats();
+    assert_eq!(totals.batches, 1, "one window dispatched through run_planned");
+    assert_eq!(totals.queries, N);
+    assert!(totals.groups >= 1, "incremental flush must report its groups");
     std::fs::remove_dir_all(&cfg.data_dir).ok();
 }
 

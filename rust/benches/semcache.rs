@@ -1,0 +1,191 @@
+//! Semantic-cache threshold sweep: hit ratio vs answer quality on a
+//! repeated-query / topical-drift trace (docs/SEMCACHE.md).
+//!
+//! For each `semcache_threshold` in the sweep, the full trace is replayed
+//! against a fresh cache: probes that hit serve the cached top-k, misses
+//! compute the cold result and insert it. Because the Native embedding is
+//! a pure function of the query id, the cold truth for every unique id is
+//! computed once up front, so the sweep isolates the cache's behavior.
+//!
+//! Reported per threshold:
+//!  * hit ratio (the latency/disk win — a hit skips embedding+search)
+//!  * recall@k of cache-served answers against the cold truth (the
+//!    quality price of approximate matching; exactly 1.0 at threshold 0)
+//!  * mean probe cost (must stay negligible next to a search)
+//!
+//! Emits `results/semcache.json` (uploaded per PR by CI's bench-smoke
+//! job). The acceptance line justifies the shipped default threshold:
+//! at `DEFAULT_THRESHOLD` the near-duplicate band should be captured
+//! (hit ratio well above the verbatim-only floor at threshold 0) while
+//! served-answer recall stays high; the widest threshold shows the
+//! quality cliff that rules it out as a default.
+//!
+//! Env knobs: `CAGR_SEMCACHE_SMOKE=1` shrinks the trace for CI.
+
+use std::collections::{HashMap, HashSet};
+use std::time::{Duration, Instant};
+
+use cagr::config::{Backend, Config, DiskProfile};
+use cagr::engine::{PreparedQuery, SearchEngine};
+use cagr::harness::banner;
+use cagr::harness::runner::ensure_dataset;
+use cagr::index::Hit;
+use cagr::metrics::render_table;
+use cagr::semcache::{SemCache, SemCacheConfig, DEFAULT_THRESHOLD};
+use cagr::util::json::{obj, Json};
+use cagr::workload::repeat::{repeated_trace, RepeatTraceConfig};
+use cagr::workload::DatasetSpec;
+
+const THRESHOLDS: [f32; 6] = [0.0, 0.02, 0.05, 0.10, 0.20, 0.40];
+const CAPACITY: usize = 512;
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::var("CAGR_SEMCACHE_SMOKE").is_ok();
+    banner(if smoke {
+        "semcache (SMOKE): threshold sweep — hit ratio vs recall@k"
+    } else {
+        "semcache: threshold sweep — hit ratio vs recall@k"
+    });
+
+    let mut cfg = Config::default();
+    cfg.data_dir =
+        std::env::temp_dir().join(format!("cagr-bench-semc-{}", std::process::id()));
+    cfg.clusters = 32;
+    cfg.nprobe = 8;
+    cfg.top_k = 10;
+    cfg.cache_entries = 32;
+    cfg.kmeans_iters = 4;
+    cfg.kmeans_sample = 2_000;
+    cfg.backend = Backend::Native;
+    cfg.disk_profile = DiskProfile::None;
+    let spec = DatasetSpec::tiny(0x5EBE);
+    ensure_dataset(&cfg, &spec)?;
+
+    let trace_cfg = RepeatTraceConfig {
+        n_queries: if smoke { 256 } else { 2_048 },
+        duplicate_ratio: 0.5,
+        jitter_radius: 0.5, // half the repeats are near-duplicates
+        drift_rate: 0.02,
+        history: 64,
+        seed: 0x5EBE_01,
+    };
+    let trace = repeated_trace(&spec, &trace_cfg);
+
+    // Cold truth per unique id, computed once.
+    let mut engine = SearchEngine::open(&cfg, &spec)?;
+    let mut prepared: HashMap<usize, PreparedQuery> = HashMap::new();
+    let mut truth: HashMap<usize, Vec<Hit>> = HashMap::new();
+    for q in &trace {
+        if prepared.contains_key(&q.id) {
+            continue;
+        }
+        let pq = engine.prepare(std::slice::from_ref(q))?.remove(0);
+        let (_, hits) = engine.search(&pq)?;
+        truth.insert(q.id, hits);
+        prepared.insert(q.id, pq);
+    }
+    println!(
+        "trace: {} queries, {} unique ({} re-issues)",
+        trace.len(),
+        prepared.len(),
+        trace.len() - prepared.len()
+    );
+
+    let top_k = cfg.top_k;
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let mut json_thresholds: Vec<Json> = Vec::new();
+    let mut shipped = (0.0f64, 1.0f64); // (hit_ratio, recall) at the default
+    for &t in &THRESHOLDS {
+        let sc = SemCache::new(SemCacheConfig {
+            capacity: CAPACITY,
+            threshold: t,
+            ttl: Duration::ZERO,
+        });
+        let mut hit_recall_sum = 0.0f64;
+        let mut hits_served = 0usize;
+        let mut probe_total = Duration::ZERO;
+        for q in &trace {
+            let pq = &prepared[&q.id];
+            let t0 = Instant::now();
+            let served = sc.probe(&pq.embedding, top_k);
+            probe_total += t0.elapsed();
+            match served {
+                Some(hits) => {
+                    let want: HashSet<u32> =
+                        truth[&q.id].iter().map(|h| h.doc_id).collect();
+                    let overlap = hits.iter().filter(|h| want.contains(&h.doc_id)).count();
+                    hit_recall_sum += overlap as f64 / want.len().max(1) as f64;
+                    hits_served += 1;
+                }
+                None => sc.insert(&pq.embedding, top_k, &truth[&q.id]),
+            }
+        }
+        let stats = sc.stats();
+        let hit_ratio = stats.hit_ratio();
+        let recall = if hits_served > 0 { hit_recall_sum / hits_served as f64 } else { 1.0 };
+        let probe_us = probe_total.as_secs_f64() * 1e6 / trace.len() as f64;
+        if t == 0.0 {
+            assert!(
+                (recall - 1.0).abs() < 1e-12,
+                "threshold 0 is exact-duplicate-only; its hits must replay the cold \
+                 result verbatim (recall {recall})"
+            );
+        }
+        if (t - DEFAULT_THRESHOLD).abs() < 1e-6 {
+            shipped = (hit_ratio, recall);
+        }
+        rows.push(vec![
+            format!("{t:.2}"),
+            format!("{:.1}%", 100.0 * hit_ratio),
+            format!("{recall:.3}"),
+            format!("{probe_us:.2}us"),
+            stats.evictions.to_string(),
+        ]);
+        json_thresholds.push(obj(vec![
+            ("threshold", Json::Num(t as f64)),
+            ("hit_ratio", Json::Num(hit_ratio)),
+            ("recall_at_k_hits", Json::Num(recall)),
+            ("hits", Json::Num(stats.hits as f64)),
+            ("misses", Json::Num(stats.misses as f64)),
+            ("evictions", Json::Num(stats.evictions as f64)),
+            ("mean_probe_us", Json::Num(probe_us)),
+        ]));
+    }
+
+    println!(
+        "{}",
+        render_table(&["threshold", "hit ratio", "recall@k (hits)", "probe", "evictions"], &rows)
+    );
+
+    let summary = obj(vec![
+        ("bench", "semcache".into()),
+        ("smoke", Json::Bool(smoke)),
+        ("capacity", CAPACITY.into()),
+        ("top_k", top_k.into()),
+        (
+            "trace",
+            obj(vec![
+                ("n_queries", trace_cfg.n_queries.into()),
+                ("duplicate_ratio", Json::Num(trace_cfg.duplicate_ratio)),
+                ("jitter_radius", Json::Num(trace_cfg.jitter_radius)),
+                ("drift_rate", Json::Num(trace_cfg.drift_rate)),
+            ]),
+        ),
+        ("thresholds", Json::Arr(json_thresholds)),
+        ("shipped_threshold", Json::Num(DEFAULT_THRESHOLD as f64)),
+        ("shipped_hit_ratio", Json::Num(shipped.0)),
+        ("shipped_recall_at_k", Json::Num(shipped.1)),
+    ]);
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/semcache.json", summary.pretty())?;
+    println!("machine-readable summary: results/semcache.json");
+    println!(
+        "acceptance: shipped default {DEFAULT_THRESHOLD} serves {:.1}% of the trace from \
+         cache at recall@{top_k} = {:.3} (threshold 0 is the verbatim-only floor; the \
+         widest threshold shows the recall cliff that rules it out)",
+        100.0 * shipped.0,
+        shipped.1
+    );
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+    Ok(())
+}

@@ -247,6 +247,20 @@ pub struct Config {
     /// "considering the size of the next file to be read").
     pub size_aware_prefetch: bool,
 
+    // -- semantic result cache (docs/SEMCACHE.md) ------------------------------
+    /// Entries in the semantic result cache; 0 disables the tier entirely
+    /// (the shipped default — behavior is then bit-identical to a build
+    /// without it).
+    pub semcache_capacity: usize,
+    /// Maximum squared L2 distance between a query embedding and a cached
+    /// entry for an approximate answer-cache hit. 0.0 = exact duplicates
+    /// only. Default from the `semcache` bench curve
+    /// (results/semcache.json).
+    pub semcache_threshold: f64,
+    /// Maximum age of a cached answer in milliseconds; 0 = entries live
+    /// until LRU eviction.
+    pub semcache_ttl_ms: u64,
+
     // -- traffic (paper §4.1) --------------------------------------------------
     /// Batch size bounds, inclusive (paper: 20..=100).
     pub batch_min: usize,
@@ -283,6 +297,9 @@ impl Default for Config {
             prefetch_trigger: PrefetchTrigger::LastQueryStart,
             group_order: GroupOrder::Arrival,
             size_aware_prefetch: true,
+            semcache_capacity: 0,
+            semcache_threshold: crate::semcache::DEFAULT_THRESHOLD as f64,
+            semcache_ttl_ms: 0,
             batch_min: 20,
             batch_max: 100,
             backend: Backend::Native,
@@ -358,6 +375,17 @@ impl Config {
                     .parse()
                     .map_err(|_| anyhow::anyhow!("'prefetch' expects true/false"))?
             }
+            "semcache_capacity" => self.semcache_capacity = parse_usize(value)?,
+            "semcache_threshold" => {
+                self.semcache_threshold = value.parse().map_err(|_| {
+                    anyhow::anyhow!("'semcache_threshold' expects a number, got '{value}'")
+                })?
+            }
+            "semcache_ttl_ms" => {
+                self.semcache_ttl_ms = value.parse().map_err(|_| {
+                    anyhow::anyhow!("'semcache_ttl_ms' expects a u64, got '{value}'")
+                })?
+            }
             "batch_min" => self.batch_min = parse_usize(value)?,
             "batch_max" => self.batch_max = parse_usize(value)?,
             "backend" => self.backend = Backend::parse(value)?,
@@ -407,6 +435,12 @@ impl Config {
         if !(0.0..=1.0).contains(&self.theta) {
             anyhow::bail!("theta ({}) must be in [0, 1]", self.theta);
         }
+        if !self.semcache_threshold.is_finite() || self.semcache_threshold < 0.0 {
+            anyhow::bail!(
+                "semcache_threshold ({}) must be a finite number >= 0",
+                self.semcache_threshold
+            );
+        }
         if self.batch_min == 0 || self.batch_min > self.batch_max {
             anyhow::bail!(
                 "batch range [{}, {}] invalid",
@@ -415,6 +449,17 @@ impl Config {
             );
         }
         Ok(())
+    }
+
+    /// The semantic-result-cache configuration these knobs describe
+    /// ([`crate::semcache::SemCache::from_config`] turns it into a live
+    /// cache, or `None` when `semcache_capacity` is 0).
+    pub fn semcache(&self) -> crate::semcache::SemCacheConfig {
+        crate::semcache::SemCacheConfig {
+            capacity: self.semcache_capacity,
+            threshold: self.semcache_threshold as f32,
+            ttl: std::time::Duration::from_millis(self.semcache_ttl_ms),
+        }
     }
 
     /// Path of one dataset's built index directory. Indexes are segregated
@@ -511,6 +556,31 @@ mod tests {
         c = Config::default();
         c.clusters = 200; // exceeds CENTROID_PAD
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn semcache_knobs_parse_and_validate() {
+        let mut c = Config::default();
+        assert_eq!(c.semcache_capacity, 0, "the answer tier ships disabled");
+        assert!(!c.semcache().enabled());
+        c.set("semcache_capacity", "512").unwrap();
+        c.set("semcache_threshold", "0.25").unwrap();
+        c.set("semcache_ttl_ms", "30000").unwrap();
+        let sc = c.semcache();
+        assert!(sc.enabled());
+        assert_eq!(sc.capacity, 512);
+        assert!((sc.threshold - 0.25).abs() < 1e-6);
+        assert_eq!(sc.ttl, std::time::Duration::from_secs(30));
+        c.validate().unwrap();
+        c.semcache_threshold = -0.1;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("semcache_threshold"), "{err}");
+        c.semcache_threshold = f64::NAN;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        assert!(c.set("semcache_capacity", "lots").is_err());
+        assert!(c.set("semcache_threshold", "tight").is_err());
+        assert!(c.set("semcache_ttl_ms", "soon").is_err());
     }
 
     #[test]

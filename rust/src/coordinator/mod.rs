@@ -121,6 +121,12 @@ pub struct Coordinator {
     pub engine: SearchEngine,
     policy: Box<dyn SchedulePolicy>,
     prefetcher: Option<Prefetcher>,
+    /// Semantic result cache this coordinator feeds: every completed
+    /// default-path batch inserts its answers here (probing happens
+    /// upstream — `session::Session::run_one` and the scheduler). `None`
+    /// (the default) keeps behavior bit-identical to a build without the
+    /// tier.
+    semcache: Option<Arc<crate::semcache::SemCache>>,
 }
 
 impl Coordinator {
@@ -139,7 +145,17 @@ impl Coordinator {
         } else {
             None
         };
-        Coordinator { engine, policy, prefetcher }
+        Coordinator { engine, policy, prefetcher, semcache: None }
+    }
+
+    /// Attach (or detach) the semantic result cache completed batches feed.
+    pub fn set_semcache(&mut self, semcache: Option<Arc<crate::semcache::SemCache>>) {
+        self.semcache = semcache;
+    }
+
+    /// The attached semantic result cache, if any.
+    pub fn semcache(&self) -> Option<&Arc<crate::semcache::SemCache>> {
+        self.semcache.as_ref()
     }
 
     /// Legacy shim: construct from a [`Mode`] selector.
@@ -164,11 +180,21 @@ impl Coordinator {
         queries: &[Query],
     ) -> anyhow::Result<(Vec<QueryOutcome>, BatchStats)> {
         let prepared = self.engine.prepare(queries)?;
+        self.process_prepared(&prepared)
+    }
+
+    /// Plan + dispatch an already prepared batch — the path for callers
+    /// that embedded the queries themselves (the semantic-cache miss flow,
+    /// which prepares once to probe and must not prepare again).
+    pub fn process_prepared(
+        &mut self,
+        prepared: &[crate::engine::PreparedQuery],
+    ) -> anyhow::Result<(Vec<QueryOutcome>, BatchStats)> {
         let plan = {
             let ctx = PolicyCtx { cfg: &self.engine.cfg };
-            self.policy.plan(&prepared, &ctx)
+            self.policy.plan(prepared, &ctx)
         };
-        self.process_planned(&prepared, &plan)
+        self.process_planned(prepared, &plan)
     }
 
     /// Like [`Coordinator::process_batch`], but over an already prepared
@@ -198,6 +224,21 @@ impl Coordinator {
             self.policy.as_ref(),
             self.prefetcher.as_ref(),
         )?;
+        // Insert-on-completion for the semantic result cache: every
+        // default-path answer (all batch flows end here) becomes a cache
+        // entry keyed by its embedding + the session-default top_k.
+        if let Some(sc) = &self.semcache {
+            let top_k = self.engine.cfg.top_k.max(1);
+            let embeddings: std::collections::HashMap<usize, &[f32]> = prepared
+                .iter()
+                .map(|pq| (pq.query.id, pq.embedding.as_slice()))
+                .collect();
+            for o in &outcomes {
+                if let Some(emb) = embeddings.get(&o.report.query_id) {
+                    sc.insert(emb, top_k, &o.hits);
+                }
+            }
+        }
         Ok((outcomes, stats))
     }
 

@@ -43,6 +43,7 @@ use crate::coordinator::grouping::{group_queries_indexed, reorder_groups_greedy,
 use crate::coordinator::policy::IncrementalParams;
 use crate::coordinator::QueryOutcome;
 use crate::engine::PreparedQuery;
+use crate::metrics::SearchReport;
 use crate::proto::SearchOptions;
 use crate::session::Session;
 use crate::workload::Query;
@@ -258,6 +259,12 @@ impl<'a> SessionScheduler<'a> {
     /// returned; otherwise the query pools (its deadline, if any, is
     /// re-checked at flush), and the returned outcomes are whatever a
     /// size-triggered flush produced (usually empty).
+    ///
+    /// With a semantic result cache attached to the session
+    /// ([`crate::semcache`]), the query probes it *before* pooling: a hit
+    /// is answered immediately — it never enters the window, never
+    /// groups, never touches disk — and a miss pools in prepared form so
+    /// the admission-time embedding is not recomputed at flush.
     pub fn submit(
         &mut self,
         query: &Query,
@@ -268,14 +275,30 @@ impl<'a> SessionScheduler<'a> {
             let opts = SearchOptions { deadline_ms, ..Default::default() };
             return self.session.run_one(query, &opts).map(|o| vec![o]);
         }
-        // Incremental path: prepare + assign NOW, off the flush path.
-        let form = match &mut self.inc {
-            Some(st) => {
-                let pq = self.session.prepare_one(query)?;
-                st.grouper.assign(self.acc.len(), &pq.clusters);
-                PooledForm::Prepared(pq)
+        // Incremental path: prepare + assign NOW, off the flush path. The
+        // semantic cache also needs the embedding at admission (to probe),
+        // so its presence forces the prepared form even under flush-time
+        // policies.
+        let semcache = self.session.semcache().cloned();
+        let form = if semcache.is_some() || self.inc.is_some() {
+            let pq = self.session.prepare_one(query)?;
+            if let Some(sc) = &semcache {
+                let top_k = self.session.config().top_k.max(1);
+                if let Some(hits) = sc.probe(&pq.embedding, top_k) {
+                    let report = SearchReport {
+                        query_id: pq.query.id,
+                        latency: pq.prep_cost,
+                        ..Default::default()
+                    };
+                    return Ok(vec![QueryOutcome { report, hits, group: 0 }]);
+                }
             }
-            None => PooledForm::Raw(query.clone()),
+            if let Some(st) = &mut self.inc {
+                st.grouper.assign(self.acc.len(), &pq.clusters);
+            }
+            PooledForm::Prepared(pq)
+        } else {
+            PooledForm::Raw(query.clone())
         };
         self.acc.push(Pooled { form, deadline_ms, received_at: Instant::now() }, Instant::now());
         if self.acc.is_full() {
@@ -374,6 +397,19 @@ impl<'a> SessionScheduler<'a> {
             None => {
                 if alive.is_empty() {
                     return Ok(Vec::new());
+                }
+                // With the semantic cache attached, misses were prepared at
+                // admission (to probe) — dispatch without re-embedding.
+                if alive.iter().all(|p| matches!(p.form, PooledForm::Prepared(_))) {
+                    let prepared: Vec<PreparedQuery> = alive
+                        .into_iter()
+                        .map(|p| match p.form {
+                            PooledForm::Prepared(pq) => pq,
+                            PooledForm::Raw(_) => unreachable!(),
+                        })
+                        .collect();
+                    let (outcomes, _stats) = self.session.run_prepared(&prepared)?;
+                    return Ok(outcomes);
                 }
                 let batch: Vec<Query> =
                     alive.into_iter().map(|p| p.form.into_query()).collect();

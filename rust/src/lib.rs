@@ -61,6 +61,15 @@
 //! sequencer keeps replies in request order. The in-process twin is
 //! [`session::Session::scheduler`] — both run the identical window logic.
 //!
+//! In front of the scheduler sits an optional **semantic result cache**
+//! ([`semcache`], design note in `docs/SEMCACHE.md`): recently answered
+//! query embeddings are indexed in memory, and a new query landing within
+//! `Config::semcache_threshold` (squared L2) of one is served its cached
+//! top-k directly — skipping grouping and disk entirely. It ships disabled
+//! (`semcache_capacity = 0`); turn it on with `cagr serve
+//! --semcache-capacity 4096`, opt out per request with
+//! `SearchOptions::no_cache`.
+//!
 //! The server and the client library ([`client`]) share one versioned,
 //! typed protocol ([`proto`], spec in `docs/PROTOCOL.md`): a version
 //! handshake, per-request options (`top_k`, `nprobe`, `deadline_ms`,
@@ -106,6 +115,7 @@ pub mod index;
 pub mod metrics;
 pub mod proto;
 pub mod runtime;
+pub mod semcache;
 pub mod server;
 pub mod session;
 pub mod sim;

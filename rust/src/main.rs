@@ -5,11 +5,12 @@
 //!   serve        --dataset <name> [--addr host:port] [--policy baseline|qg|qgp]
 //!                [--lanes N] [--window-ms 10] [--window-queries N]
 //!                [--max-inflight N] [--max-inflight-per-conn N]
-//!                [--drain-timeout 5s]
+//!                [--drain-timeout 5s] [--semcache-capacity N]
+//!                [--semcache-threshold D2] [--semcache-ttl 30s]
 //!   client       --addr host:port [--queries N] [--dataset <name>]
 //!                [--top-k K] [--nprobe N] [--deadline 100ms] [--no-group]
-//!                [--retries N] [--stats] [--health] [--drain] [--resume]
-//!                drive a running server
+//!                [--no-cache] [--retries N] [--stats] [--health] [--drain]
+//!                [--resume]  drive a running server
 //!   search       --dataset <name> [--queries N] [--policy ..]   one-shot run
 //!   replay       --trace <file> [--policy ..]                   replay a trace
 //!   record-trace --dataset <name> --out <file>
@@ -68,10 +69,18 @@ fn load_config(args: &Args) -> anyhow::Result<Config> {
         ("seed", "seed"),
         ("data-dir", "data_dir"),
         ("artifacts-dir", "artifacts_dir"),
+        ("semcache-capacity", "semcache_capacity"),
+        ("semcache-threshold", "semcache_threshold"),
     ] {
         if let Some(v) = args.get(flag) {
             cfg.set(key, v)?;
         }
+    }
+    // The cache TTL takes a human duration on the CLI ("30s", "5m") and is
+    // stored in the config as milliseconds.
+    if let Some(v) = args.get("semcache-ttl") {
+        let ttl = cagr::util::cli::parse_duration(v)?;
+        cfg.set("semcache_ttl_ms", &ttl.as_millis().to_string())?;
     }
     // Generic overrides: --set a=1,b=2
     if let Some(sets) = args.get("set") {
@@ -185,6 +194,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             .get_usize("max-inflight-per-conn", defaults.max_inflight_per_conn)?
             .max(1),
         drain_timeout: args.get_duration("drain-timeout", defaults.drain_timeout)?,
+        semcache: cfg.semcache(),
     };
     let (max_inflight, max_per_conn, window_q) = (
         server_cfg.max_inflight,
@@ -192,9 +202,14 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         server_cfg.window_max_queries,
     );
     let handle = server::start(factory, server_cfg)?;
+    let semcache_desc = if cfg.semcache_capacity > 0 {
+        format!("{}@{}", cfg.semcache_capacity, cfg.semcache_threshold)
+    } else {
+        "off".to_string()
+    };
     println!(
         "cagr serving {} on {} (proto=v{}, policy={}, cache={}x{}, theta={}, lanes={}, \
-         io-workers={}, window={}q, max-inflight={} (per-conn {}))",
+         io-workers={}, window={}q, max-inflight={} (per-conn {}), semcache={})",
         spec.name,
         handle.addr,
         cagr::proto::PROTOCOL_VERSION,
@@ -206,7 +221,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         cfg.io_workers,
         window_q,
         max_inflight,
-        max_per_conn
+        max_per_conn,
+        semcache_desc
     );
     println!("press ctrl-c to stop");
     loop {
@@ -217,7 +233,8 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 /// Drive a running server over the versioned wire protocol: control-plane
 /// verbs (`--stats`, `--health`, `--drain`, `--resume`) or a pipelined
 /// query stream with optional per-request knobs (`--top-k`, `--nprobe`,
-/// `--deadline`, `--no-group`, `--retries` for overload backoff).
+/// `--deadline`, `--no-group`, `--no-cache` to opt out of the semantic
+/// result cache, `--retries` for overload backoff).
 fn cmd_client(args: &Args) -> anyhow::Result<()> {
     use cagr::client::{Client, ClientError, RetryPolicy};
     use cagr::proto::SearchOptions;
@@ -261,6 +278,17 @@ fn cmd_client(args: &Args) -> anyhow::Result<()> {
             g.cross_conn_groups,
             g.express,
         );
+        if let Some(sc) = &s.semcache {
+            println!(
+                "  semcache: probes={} hits={} ({:.1}%) misses={} insertions={} evictions={}",
+                sc.probes,
+                sc.hits,
+                100.0 * sc.hit_ratio(),
+                sc.misses,
+                sc.insertions,
+                sc.evictions,
+            );
+        }
         for l in &s.lanes {
             println!(
                 "  lane {}: policy={} inflight={} batches={} queries={} groups={} \
@@ -306,6 +334,7 @@ fn cmd_client(args: &Args) -> anyhow::Result<()> {
             None => None,
         },
         no_group: args.flag("no-group"),
+        no_cache: args.flag("no-cache"),
     };
     let queries = generate_queries(&spec);
     // Overload handling: with --retries N, an overloaded rejection is

@@ -77,6 +77,11 @@ pub struct WindowGauges {
     /// negligible (docs/GROUPING.md); watch it against `window_queries` in
     /// production.
     pub grouping_cost_us: u64,
+    /// Total microseconds the scheduler thread spent receiving, admitting,
+    /// and classifying work for dispatched windows — the single-threaded
+    /// recv loop whose cost decides whether the scheduler needs sharding
+    /// (ROADMAP: measure before sharding).
+    pub recv_loop_cost_us: u64,
 }
 
 impl WindowGauges {
@@ -108,6 +113,12 @@ impl WindowGauges {
         self.grouping_cost_us += cost.as_micros() as u64;
     }
 
+    /// Record time the scheduler thread spent on its recv loop (receiving,
+    /// admitting, classifying) for one dispatched window.
+    pub fn record_recv_cost(&mut self, cost: Duration) {
+        self.recv_loop_cost_us += cost.as_micros() as u64;
+    }
+
     /// Mean queries per window (0 when no window was dispatched yet).
     pub fn mean_occupancy(&self) -> f64 {
         if self.windows == 0 {
@@ -132,6 +143,7 @@ impl WindowGauges {
             ("cross_conn_groups", Json::Num(self.cross_conn_groups as f64)),
             ("express", Json::Num(self.express as f64)),
             ("grouping_cost_us", Json::Num(self.grouping_cost_us as f64)),
+            ("recv_loop_cost_us", Json::Num(self.recv_loop_cost_us as f64)),
         ])
     }
 }
@@ -376,6 +388,8 @@ mod tests {
         g.record_express();
         g.record_grouping_cost(Duration::from_micros(120));
         g.record_grouping_cost(Duration::from_micros(30));
+        g.record_recv_cost(Duration::from_micros(40));
+        g.record_recv_cost(Duration::from_micros(5));
         assert_eq!(g.windows, 2);
         assert_eq!(g.window_queries, 12);
         assert_eq!(g.max_occupancy, 8);
@@ -384,6 +398,7 @@ mod tests {
         assert_eq!(g.cross_conn_groups, 1);
         assert_eq!(g.express, 1);
         assert_eq!(g.grouping_cost_us, 150);
+        assert_eq!(g.recv_loop_cost_us, 45);
         assert!((g.mean_occupancy() - 6.0).abs() < 1e-12);
     }
 

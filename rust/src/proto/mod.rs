@@ -33,6 +33,7 @@
 use crate::cache::CacheStats;
 use crate::coordinator::QueryOutcome;
 use crate::metrics::WindowGauges;
+use crate::semcache::SemCacheStats;
 use crate::util::json::{obj, Json};
 use crate::workload::Query;
 
@@ -117,6 +118,12 @@ pub struct SearchOptions {
     /// Bypass grouping for this latency-critical query: it is searched on
     /// the single-query path instead of waiting for a group plan.
     pub no_group: bool,
+    /// Skip the semantic result cache probe for this query: the reply is
+    /// guaranteed to be computed cold (fresh grouping + disk work), never
+    /// served from a previously answered neighbor. The cold result may
+    /// still be *inserted* into the cache. No-op when the server runs with
+    /// the cache disabled. Additive field; absent parses as `false`.
+    pub no_cache: bool,
 }
 
 impl SearchOptions {
@@ -244,6 +251,9 @@ impl Request {
                 if o.no_group {
                     pairs.push(("no_group", true.into()));
                 }
+                if o.no_cache {
+                    pairs.push(("no_cache", true.into()));
+                }
                 obj(pairs)
             }
             Request::Stats => obj(vec![("type", "stats".into())]),
@@ -293,12 +303,16 @@ fn parse_search(v: &Json) -> Result<SearchRequest, WireError> {
             || WireError::with_id("'deadline_ms' must be a non-negative number", Some(id)),
         )?),
     };
-    let no_group = match v.get("no_group") {
-        None => false,
-        Some(x) => x
-            .as_bool()
-            .ok_or_else(|| WireError::with_id("'no_group' must be a boolean", Some(id)))?,
+    let flag = |name: &str| -> Result<bool, WireError> {
+        match v.get(name) {
+            None => Ok(false),
+            Some(x) => x.as_bool().ok_or_else(|| {
+                WireError::with_id(format!("'{name}' must be a boolean"), Some(id))
+            }),
+        }
     };
+    let no_group = flag("no_group")?;
+    let no_cache = flag("no_cache")?;
     let top_k = opt_usize("top_k")?;
     let nprobe = opt_usize("nprobe")?;
     if top_k == Some(0) {
@@ -314,7 +328,7 @@ fn parse_search(v: &Json) -> Result<SearchRequest, WireError> {
             topic: v.get("topic").and_then(Json::as_usize).unwrap_or(0),
             tokens,
         },
-        options: SearchOptions { top_k, nprobe, deadline_ms, no_group },
+        options: SearchOptions { top_k, nprobe, deadline_ms, no_group, no_cache },
     })
 }
 
@@ -412,6 +426,11 @@ pub struct StatsReply {
     /// group span, express bypasses. Additive field; absent parses as all
     /// zeros.
     pub scheduler: WindowGauges,
+    /// Semantic result cache counters ([`crate::semcache`]). Additive
+    /// field; `None` when the server runs with the cache disabled (or the
+    /// reply predates the field) — distinct from `Some` all-zeros, which
+    /// means "enabled but not yet exercised".
+    pub semcache: Option<SemCacheStats>,
     pub lanes: Vec<LaneStats>,
 }
 
@@ -543,6 +562,7 @@ impl Reply {
                         .get("scheduler")
                         .map(parse_window_gauges)
                         .unwrap_or_default(),
+                    semcache: v.get("semcache").map(parse_semcache_stats),
                     lanes,
                 }))
             }
@@ -611,16 +631,22 @@ impl Reply {
                 }
                 obj(pairs)
             }
-            Reply::Stats(s) => obj(vec![
-                ("type", "stats".into()),
-                ("draining", s.draining.into()),
-                ("shared_cache", s.shared_cache.into()),
-                ("scheduler", s.scheduler.to_json()),
-                (
+            Reply::Stats(s) => {
+                let mut pairs: Vec<(&str, Json)> = vec![
+                    ("type", "stats".into()),
+                    ("draining", s.draining.into()),
+                    ("shared_cache", s.shared_cache.into()),
+                    ("scheduler", s.scheduler.to_json()),
+                ];
+                if let Some(sc) = &s.semcache {
+                    pairs.push(("semcache", sc.to_json()));
+                }
+                pairs.push((
                     "lanes",
                     Json::Arr(s.lanes.iter().map(lane_stats_json).collect()),
-                ),
-            ]),
+                ));
+                obj(pairs)
+            }
             Reply::Health(h) => obj(vec![
                 ("type", "health".into()),
                 ("status", h.status.as_str().into()),
@@ -657,6 +683,18 @@ fn parse_window_gauges(v: &Json) -> WindowGauges {
         cross_conn_groups: n("cross_conn_groups"),
         express: n("express"),
         grouping_cost_us: n("grouping_cost_us"),
+        recv_loop_cost_us: n("recv_loop_cost_us"),
+    }
+}
+
+fn parse_semcache_stats(v: &Json) -> SemCacheStats {
+    let n = |name: &str| -> u64 { v.get(name).and_then(Json::as_f64).unwrap_or(0.0) as u64 };
+    SemCacheStats {
+        probes: n("probes"),
+        hits: n("hits"),
+        misses: n("misses"),
+        insertions: n("insertions"),
+        evictions: n("evictions"),
     }
 }
 
@@ -726,6 +764,7 @@ mod tests {
             nprobe: Some(6),
             deadline_ms: Some(250),
             no_group: true,
+            no_cache: true,
         };
         for req in [
             Request::Hello { version: PROTOCOL_VERSION },
@@ -800,7 +839,15 @@ mod tests {
                     cross_conn_groups: 5,
                     express: 2,
                     grouping_cost_us: 740,
+                    recv_loop_cost_us: 95,
                 },
+                semcache: Some(SemCacheStats {
+                    probes: 12,
+                    hits: 5,
+                    misses: 7,
+                    insertions: 7,
+                    evictions: 2,
+                }),
                 lanes: vec![LaneStats {
                     lane: 0,
                     policy: "qgp".to_string(),
@@ -818,6 +865,14 @@ mod tests {
                         prefetch_inserts: 2,
                     },
                 }],
+            }),
+            // A semcache-disabled server omits the object entirely.
+            Reply::Stats(StatsReply {
+                draining: false,
+                shared_cache: false,
+                scheduler: WindowGauges::default(),
+                semcache: None,
+                lanes: vec![],
             }),
             Reply::Health(HealthReply {
                 status: "ok".to_string(),
@@ -844,6 +899,7 @@ mod tests {
             Reply::Stats(s) => {
                 assert!(!s.shared_cache);
                 assert_eq!(s.scheduler, WindowGauges::default());
+                assert_eq!(s.semcache, None);
             }
             other => panic!("{other:?}"),
         }

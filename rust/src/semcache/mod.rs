@@ -1,0 +1,599 @@
+//! Semantic result cache (S11): an approximate-match answer tier in front
+//! of the streaming scheduler.
+//!
+//! CaGR-RAG's grouping machinery protects *cluster-cache* efficiency, but at
+//! production scale many arriving queries are near-duplicates of recently
+//! answered ones, and every one of them still pays admission, grouping,
+//! scoring, and disk. Following the approximate-caching observation of
+//! Bergman et al. (PAPERS.md), this module keeps a small in-memory store of
+//! recently answered **query embeddings → top-k results**; a new query
+//! probes it before entering the pooling window, and a hit within the
+//! configured distance threshold is answered directly — admission, grouping,
+//! and disk are skipped entirely, so the PR 4/PR 5 scheduler sees only
+//! genuinely novel traffic.
+//!
+//! Key semantics:
+//!
+//! * **Keying** — entries are keyed by the query's unit-norm embedding plus
+//!   the effective `top_k` the result was computed at (an entry never serves
+//!   a request with a different `top_k`; the server trims per-request
+//!   `top_k` overrides downstream exactly as it does on the cold path).
+//!   Results computed under a non-default `nprobe` are never probed or
+//!   inserted — they are not the default-path answer.
+//! * **Threshold** — `threshold` bounds the *squared L2 distance* between
+//!   the probe embedding and a stored entry. Embeddings are unit-norm, so
+//!   `d² = 2(1 − cosθ)`. `0.0` means exact-duplicate-only: identical
+//!   embeddings have `d² == 0.0` exactly, so no approximate match can serve.
+//! * **Disable** — capacity `0` disables the tier: [`SemCache::from_config`]
+//!   returns `None` and no call site probes or inserts, so behavior is
+//!   bit-identical to a build without the tier.
+//! * **Eviction** — LRU over a monotonic touch tick, bounded by `capacity`;
+//!   plus a max-age TTL (`Duration::ZERO` = no age bound) enforced lazily on
+//!   the entries a probe scans.
+//! * **Probe structure** — a flat scan up to [`FLAT_SCAN_LIMIT`] entries;
+//!   above that, a centroid-bucketed index (≈√n buckets, rebuilt
+//!   periodically and maintained incrementally between rebuilds) limits the
+//!   scan to the [`BUCKET_PROBES`] nearest buckets. Exact duplicates always
+//!   land in the probe's nearest bucket (assignment and probe share the
+//!   same nearest-centroid rule), so bucketing never breaks
+//!   exact-duplicate hits; a jittered near-duplicate missing the scanned
+//!   buckets degrades to a cache miss, never to a wrong answer.
+//!
+//! The counters satisfy `probes == hits + misses` by construction; the TCP
+//! server publishes a snapshot through the `stats` verb
+//! ([`crate::proto::StatsReply`]). See docs/SEMCACHE.md for placement and
+//! the interaction with express bypass and drain.
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::index::Hit;
+use crate::util::json::{obj, Json};
+
+/// Above this entry count the probe switches from a flat scan to the
+/// centroid-bucketed index.
+pub const FLAT_SCAN_LIMIT: usize = 256;
+
+/// Nearest buckets scanned per probe once the index is active.
+const BUCKET_PROBES: usize = 2;
+
+/// Shipped default for `semcache_threshold` (squared L2 over unit-norm
+/// embeddings), chosen from the `semcache` bench's hit-ratio-vs-recall@k
+/// curve (results/semcache.json): same-latent near-duplicates sit around
+/// d² ≈ 0.09 on the synthetic workloads while cross-latent pairs sit near
+/// d² ≈ 1–2, so 0.10 captures the former without touching the latter.
+pub const DEFAULT_THRESHOLD: f32 = 0.10;
+
+/// Knobs of the semantic cache tier (see `Config::semcache_*` for the
+/// file/CLI plumbing and `cagr serve --semcache-*` for the server flags).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SemCacheConfig {
+    /// Maximum entries; `0` disables the tier entirely.
+    pub capacity: usize,
+    /// Maximum squared L2 distance for an approximate hit; `0.0` serves
+    /// exact duplicates only.
+    pub threshold: f32,
+    /// Maximum entry age; `Duration::ZERO` means entries live until LRU
+    /// eviction.
+    pub ttl: Duration,
+}
+
+impl Default for SemCacheConfig {
+    fn default() -> Self {
+        SemCacheConfig {
+            capacity: 0,
+            threshold: DEFAULT_THRESHOLD,
+            ttl: Duration::ZERO,
+        }
+    }
+}
+
+impl SemCacheConfig {
+    /// Whether this configuration enables the tier at all.
+    pub fn enabled(&self) -> bool {
+        self.capacity > 0
+    }
+}
+
+/// Counter snapshot of one [`SemCache`]. `probes == hits + misses` always.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SemCacheStats {
+    pub probes: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+}
+
+impl SemCacheStats {
+    pub fn hit_ratio(&self) -> f64 {
+        if self.probes == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.probes as f64
+        }
+    }
+
+    /// Canonical JSON form — shared by the `stats` wire reply and the bench
+    /// artifacts, so the two can never drift apart.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("probes", Json::Num(self.probes as f64)),
+            ("hits", Json::Num(self.hits as f64)),
+            ("misses", Json::Num(self.misses as f64)),
+            ("insertions", Json::Num(self.insertions as f64)),
+            ("evictions", Json::Num(self.evictions as f64)),
+        ])
+    }
+}
+
+fn d2(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+}
+
+struct Entry {
+    embedding: Vec<f32>,
+    top_k: usize,
+    hits: Vec<Hit>,
+    inserted_at: Instant,
+    last_used: u64,
+    /// Bucket this entry is filed under while the index is active
+    /// (meaningless when `Inner::index` is `None`).
+    bucket: usize,
+}
+
+struct BucketIndex {
+    centroids: Vec<Vec<f32>>,
+    members: Vec<Vec<usize>>,
+}
+
+#[derive(Default)]
+struct Inner {
+    entries: Vec<Entry>,
+    index: Option<BucketIndex>,
+    /// Monotonic LRU clock: bumped on every insert and every served hit.
+    tick: u64,
+    inserts_since_rebuild: usize,
+    stats: SemCacheStats,
+}
+
+impl Inner {
+    fn nearest_bucket(centroids: &[Vec<f32>], embedding: &[f32]) -> usize {
+        let mut best = 0usize;
+        let mut best_d = f32::INFINITY;
+        for (i, c) in centroids.iter().enumerate() {
+            let d = d2(c, embedding);
+            if d < best_d {
+                best_d = d;
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Rebuild the centroid-bucketed index: ≈√n centroids seeded from
+    /// evenly spaced entries, one mean-refinement pass, then a final
+    /// assignment that also stamps every entry's bucket.
+    fn rebuild_index(&mut self) {
+        let n = self.entries.len();
+        self.inserts_since_rebuild = 0;
+        if n == 0 {
+            self.index = None;
+            return;
+        }
+        let b = (n as f64).sqrt().ceil() as usize;
+        let dim = self.entries[0].embedding.len();
+        let mut centroids: Vec<Vec<f32>> =
+            (0..b).map(|i| self.entries[i * n / b].embedding.clone()).collect();
+        // Assignment pass + one mean refinement.
+        let mut members: Vec<Vec<usize>> = vec![Vec::new(); b];
+        for (i, e) in self.entries.iter().enumerate() {
+            members[Self::nearest_bucket(&centroids, &e.embedding)].push(i);
+        }
+        for (bk, m) in members.iter().enumerate() {
+            if m.is_empty() {
+                continue;
+            }
+            let mut mean = vec![0.0f32; dim];
+            for &i in m {
+                for (acc, &x) in mean.iter_mut().zip(&self.entries[i].embedding) {
+                    *acc += x;
+                }
+            }
+            let inv = 1.0 / m.len() as f32;
+            mean.iter_mut().for_each(|x| *x *= inv);
+            centroids[bk] = mean;
+        }
+        let mut members: Vec<Vec<usize>> = vec![Vec::new(); b];
+        for i in 0..n {
+            let bk = Self::nearest_bucket(&centroids, &self.entries[i].embedding);
+            self.entries[i].bucket = bk;
+            members[bk].push(i);
+        }
+        self.index = Some(BucketIndex { centroids, members });
+    }
+
+    fn maybe_rebuild(&mut self, capacity: usize) {
+        let due = self.index.is_none()
+            || self.inserts_since_rebuild >= (capacity / 4).max(64);
+        if self.entries.len() > FLAT_SCAN_LIMIT && due {
+            self.rebuild_index();
+        }
+    }
+
+    /// Slots a probe for `embedding` must scan: all of them in flat mode,
+    /// the nearest [`BUCKET_PROBES`] buckets' members in indexed mode. The
+    /// nearest bucket here is the same first-minimum the assignment rule
+    /// picks, so an exact duplicate is always among the candidates.
+    fn candidate_slots(&self, embedding: &[f32]) -> Vec<usize> {
+        match &self.index {
+            Some(ix) if !ix.centroids.is_empty() => {
+                let mut order: Vec<(f32, usize)> = ix
+                    .centroids
+                    .iter()
+                    .enumerate()
+                    .map(|(i, c)| (d2(c, embedding), i))
+                    .collect();
+                order.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                order
+                    .iter()
+                    .take(BUCKET_PROBES)
+                    .flat_map(|&(_, b)| ix.members[b].iter().copied())
+                    .collect()
+            }
+            _ => (0..self.entries.len()).collect(),
+        }
+    }
+
+    /// Remove the entry at `slot`, keeping the bucket index consistent
+    /// (swap-remove moves the last entry into `slot`).
+    fn remove_at(&mut self, slot: usize) {
+        let last = self.entries.len() - 1;
+        if let Some(ix) = &mut self.index {
+            let b = self.entries[slot].bucket;
+            ix.members[b].retain(|&s| s != slot);
+            if slot != last {
+                let bl = self.entries[last].bucket;
+                for s in ix.members[bl].iter_mut() {
+                    if *s == last {
+                        *s = slot;
+                    }
+                }
+            }
+        }
+        self.entries.swap_remove(slot);
+    }
+
+    fn expired(&self, slot: usize, now: Instant, ttl: Duration) -> bool {
+        !ttl.is_zero() && now.duration_since(self.entries[slot].inserted_at) > ttl
+    }
+}
+
+/// The semantic result cache. `Send + Sync`: one shared instance serves all
+/// server lanes (interior mutex; probes and inserts are short and
+/// allocation-light).
+pub struct SemCache {
+    cfg: SemCacheConfig,
+    inner: Mutex<Inner>,
+}
+
+impl SemCache {
+    /// Build from a config, or `None` when `capacity == 0` — the disable
+    /// contract: with no cache handle in play, no call site probes or
+    /// inserts and behavior is bit-identical to a build without the tier.
+    pub fn from_config(cfg: &SemCacheConfig) -> Option<Arc<SemCache>> {
+        if cfg.enabled() {
+            Some(Arc::new(SemCache::new(cfg.clone())))
+        } else {
+            None
+        }
+    }
+
+    pub fn new(cfg: SemCacheConfig) -> SemCache {
+        SemCache { cfg, inner: Mutex::new(Inner::default()) }
+    }
+
+    pub fn config(&self) -> &SemCacheConfig {
+        &self.cfg
+    }
+
+    /// Probe for a recently answered query within `threshold` of
+    /// `embedding`, computed at the same effective `top_k`. A hit returns
+    /// the cached top-k (and refreshes the entry's LRU position); expired
+    /// entries encountered along the way are dropped. Counts exactly one
+    /// probe and exactly one of hit/miss.
+    pub fn probe(&self, embedding: &[f32], top_k: usize) -> Option<Vec<Hit>> {
+        let now = Instant::now();
+        let mut inner = self.inner.lock().unwrap();
+        inner.stats.probes += 1;
+        inner.maybe_rebuild(self.cfg.capacity);
+
+        let slots = inner.candidate_slots(embedding);
+        let mut stale: Vec<usize> = Vec::new();
+        let mut best: Option<(f32, usize)> = None;
+        for &s in &slots {
+            if inner.expired(s, now, self.cfg.ttl) {
+                stale.push(s);
+                continue;
+            }
+            let e = &inner.entries[s];
+            if e.top_k != top_k {
+                continue;
+            }
+            let d = d2(&e.embedding, embedding);
+            if d <= self.cfg.threshold && best.map(|(bd, _)| d < bd).unwrap_or(true) {
+                best = Some((d, s));
+            }
+        }
+
+        let served = best.map(|(_, s)| {
+            inner.tick += 1;
+            let tick = inner.tick;
+            let e = &mut inner.entries[s];
+            e.last_used = tick;
+            e.hits.clone()
+        });
+
+        // Lazy TTL sweep over the scanned slots, after the served entry's
+        // hits were cloned (removal may shuffle slot indices).
+        stale.sort_unstable_by(|a, b| b.cmp(a));
+        for s in stale {
+            inner.remove_at(s);
+            inner.stats.evictions += 1;
+        }
+
+        if served.is_some() {
+            inner.stats.hits += 1;
+        } else {
+            inner.stats.misses += 1;
+        }
+        served
+    }
+
+    /// Insert (or refresh) the answer for `embedding` computed at `top_k`.
+    /// An entry with the identical embedding and `top_k` is refreshed in
+    /// place; otherwise LRU entries are evicted down to capacity first.
+    pub fn insert(&self, embedding: &[f32], top_k: usize, hits: &[Hit]) {
+        if self.cfg.capacity == 0 {
+            return; // directly-constructed disabled cache: nothing to hold
+        }
+        let now = Instant::now();
+        let mut inner = self.inner.lock().unwrap();
+        inner.maybe_rebuild(self.cfg.capacity);
+        inner.tick += 1;
+        let tick = inner.tick;
+
+        // Exact-duplicate refresh: same embedding + same top_k.
+        let slots = inner.candidate_slots(embedding);
+        let dup = slots.iter().copied().find(|&s| {
+            let e = &inner.entries[s];
+            e.top_k == top_k && e.embedding.as_slice() == embedding
+        });
+        if let Some(s) = dup {
+            let e = &mut inner.entries[s];
+            e.hits = hits.to_vec();
+            e.inserted_at = now;
+            e.last_used = tick;
+            inner.stats.insertions += 1;
+            return;
+        }
+
+        while inner.entries.len() >= self.cfg.capacity {
+            let lru = inner
+                .entries
+                .iter()
+                .enumerate()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(i, _)| i)
+                .expect("capacity > 0 implies entries to evict");
+            inner.remove_at(lru);
+            inner.stats.evictions += 1;
+        }
+
+        let bucket = match &inner.index {
+            Some(ix) if !ix.centroids.is_empty() => {
+                Inner::nearest_bucket(&ix.centroids, embedding)
+            }
+            _ => 0,
+        };
+        let slot = inner.entries.len();
+        inner.entries.push(Entry {
+            embedding: embedding.to_vec(),
+            top_k,
+            hits: hits.to_vec(),
+            inserted_at: now,
+            last_used: tick,
+            bucket,
+        });
+        if let Some(ix) = &mut inner.index {
+            if !ix.centroids.is_empty() {
+                ix.members[bucket].push(slot);
+            }
+        }
+        inner.stats.insertions += 1;
+        inner.inserts_since_rebuild += 1;
+    }
+
+    /// Resident entries.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Counter snapshot.
+    pub fn stats(&self) -> SemCacheStats {
+        self.inner.lock().unwrap().stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(capacity: usize, threshold: f32) -> SemCacheConfig {
+        SemCacheConfig { capacity, threshold, ttl: Duration::ZERO }
+    }
+
+    fn emb(x: f32, y: f32) -> Vec<f32> {
+        vec![x, y, 0.0, 0.0]
+    }
+
+    fn hits(seed: u32) -> Vec<Hit> {
+        vec![Hit { doc_id: seed, distance: seed as f32 * 0.25 }]
+    }
+
+    #[test]
+    fn capacity_zero_disables_construction() {
+        assert!(SemCache::from_config(&SemCacheConfig::default()).is_none());
+        let on = SemCacheConfig { capacity: 4, ..Default::default() };
+        assert!(SemCache::from_config(&on).is_some());
+        assert!(!SemCacheConfig::default().enabled());
+        assert!(on.enabled());
+    }
+
+    #[test]
+    fn threshold_zero_hits_only_exact_duplicates() {
+        let sc = SemCache::new(cfg(8, 0.0));
+        sc.insert(&emb(1.0, 0.0), 5, &hits(7));
+        assert_eq!(sc.probe(&emb(1.0, 0.0), 5), Some(hits(7)));
+        // d² = 1e-6: an approximate match, which threshold 0.0 must refuse.
+        assert_eq!(sc.probe(&emb(1.001, 0.0), 5), None);
+    }
+
+    #[test]
+    fn near_duplicates_hit_within_threshold() {
+        let sc = SemCache::new(cfg(8, 0.05));
+        sc.insert(&emb(1.0, 0.0), 5, &hits(3));
+        // d² = 0.01 <= 0.05: approximate hit.
+        assert_eq!(sc.probe(&emb(1.1, 0.0), 5), Some(hits(3)));
+        // d² = 2.0: miss.
+        assert_eq!(sc.probe(&emb(0.0, 1.0), 5), None);
+    }
+
+    #[test]
+    fn closest_entry_wins_among_candidates() {
+        let sc = SemCache::new(cfg(8, 1.0));
+        sc.insert(&emb(1.0, 0.0), 5, &hits(1));
+        sc.insert(&emb(1.5, 0.0), 5, &hits(2));
+        assert_eq!(sc.probe(&emb(1.4, 0.0), 5), Some(hits(2)));
+    }
+
+    #[test]
+    fn top_k_mismatch_never_serves() {
+        let sc = SemCache::new(cfg(8, 1.0));
+        sc.insert(&emb(1.0, 0.0), 5, &hits(1));
+        assert_eq!(sc.probe(&emb(1.0, 0.0), 3), None);
+        assert_eq!(sc.probe(&emb(1.0, 0.0), 5), Some(hits(1)));
+    }
+
+    #[test]
+    fn lru_eviction_prefers_least_recently_used() {
+        let sc = SemCache::new(cfg(2, 0.0));
+        sc.insert(&emb(1.0, 0.0), 5, &hits(1));
+        sc.insert(&emb(2.0, 0.0), 5, &hits(2));
+        // Touch the older entry so the newer one becomes the LRU victim.
+        assert!(sc.probe(&emb(1.0, 0.0), 5).is_some());
+        sc.insert(&emb(3.0, 0.0), 5, &hits(3));
+        assert_eq!(sc.len(), 2);
+        assert_eq!(sc.probe(&emb(2.0, 0.0), 5), None, "LRU entry evicted");
+        assert!(sc.probe(&emb(1.0, 0.0), 5).is_some());
+        assert!(sc.probe(&emb(3.0, 0.0), 5).is_some());
+        assert_eq!(sc.stats().evictions, 1);
+    }
+
+    #[test]
+    fn ttl_expires_entries() {
+        let sc = SemCache::new(SemCacheConfig {
+            capacity: 4,
+            threshold: 0.0,
+            ttl: Duration::from_millis(10),
+        });
+        sc.insert(&emb(1.0, 0.0), 5, &hits(1));
+        assert!(sc.probe(&emb(1.0, 0.0), 5).is_some());
+        std::thread::sleep(Duration::from_millis(25));
+        assert_eq!(sc.probe(&emb(1.0, 0.0), 5), None);
+        assert_eq!(sc.len(), 0, "expired entry dropped by the probe sweep");
+        assert_eq!(sc.stats().evictions, 1);
+    }
+
+    #[test]
+    fn insert_refreshes_exact_duplicate_in_place() {
+        let sc = SemCache::new(cfg(8, 0.0));
+        sc.insert(&emb(1.0, 0.0), 5, &hits(1));
+        sc.insert(&emb(1.0, 0.0), 5, &hits(9));
+        assert_eq!(sc.len(), 1);
+        assert_eq!(sc.probe(&emb(1.0, 0.0), 5), Some(hits(9)));
+        let s = sc.stats();
+        assert_eq!(s.insertions, 2);
+        assert_eq!(s.evictions, 0);
+    }
+
+    #[test]
+    fn bucketed_index_still_serves_exact_duplicates() {
+        // Past FLAT_SCAN_LIMIT the probe scans only the nearest buckets;
+        // exact duplicates must keep hitting.
+        let n = 2 * FLAT_SCAN_LIMIT;
+        let sc = SemCache::new(cfg(n + 8, 0.0));
+        let e = |i: usize| emb(i as f32 * 0.01, 1.0);
+        for i in 0..n {
+            sc.insert(&e(i), 5, &hits(i as u32));
+        }
+        assert_eq!(sc.len(), n);
+        for i in (0..n).step_by(37) {
+            assert_eq!(sc.probe(&e(i), 5), Some(hits(i as u32)), "entry {i}");
+        }
+        let s = sc.stats();
+        assert_eq!(s.probes, s.hits + s.misses);
+        assert_eq!(s.misses, 0);
+    }
+
+    #[test]
+    fn eviction_under_bucketed_index_stays_consistent() {
+        let n = 2 * FLAT_SCAN_LIMIT;
+        let sc = SemCache::new(cfg(n, 0.0));
+        let e = |i: usize| emb(i as f32 * 0.01, 1.0);
+        // Overfill by 50%: every insert past `n` evicts the LRU entry while
+        // the bucket index is live; hits on recent entries must survive the
+        // index maintenance.
+        for i in 0..(n + n / 2) {
+            sc.insert(&e(i), 5, &hits(i as u32));
+        }
+        assert_eq!(sc.len(), n);
+        for i in ((n)..(n + n / 2)).step_by(41) {
+            assert_eq!(sc.probe(&e(i), 5), Some(hits(i as u32)), "entry {i}");
+        }
+        assert_eq!(sc.stats().evictions as usize, n / 2);
+    }
+
+    #[test]
+    fn counters_conserve_probes() {
+        let sc = SemCache::new(cfg(4, 0.0));
+        sc.insert(&emb(1.0, 0.0), 5, &hits(1));
+        let _ = sc.probe(&emb(1.0, 0.0), 5); // hit
+        let _ = sc.probe(&emb(2.0, 0.0), 5); // miss
+        let _ = sc.probe(&emb(1.0, 0.0), 3); // top_k mismatch -> miss
+        let s = sc.stats();
+        assert_eq!(s.probes, 3);
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.misses, 2);
+        assert_eq!(s.probes, s.hits + s.misses);
+        assert!((s.hit_ratio() - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stats_json_shape() {
+        let sc = SemCache::new(cfg(4, 0.0));
+        sc.insert(&emb(1.0, 0.0), 5, &hits(1));
+        let _ = sc.probe(&emb(1.0, 0.0), 5);
+        let j = sc.stats().to_json();
+        assert_eq!(j.get("probes").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("hits").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("misses").unwrap().as_usize(), Some(0));
+        assert_eq!(j.get("insertions").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("evictions").unwrap().as_usize(), Some(0));
+    }
+}

@@ -95,6 +95,12 @@ pub struct ServerConfig {
     /// How long a `drain` verb waits for in-flight queries to finish
     /// before replying with `drained: false`.
     pub drain_timeout: Duration,
+    /// Semantic result cache tier ([`crate::semcache`], `docs/SEMCACHE.md`).
+    /// One cache is shared by every lane; capacity 0 (the default)
+    /// disables the tier and serving is bit-identical to a build without
+    /// it. The server-owned cache replaces any session-private one the
+    /// factory may have attached, so all lanes always share one view.
+    pub semcache: crate::semcache::SemCacheConfig,
 }
 
 impl Default for ServerConfig {
@@ -107,6 +113,7 @@ impl Default for ServerConfig {
             max_inflight: 1024,
             max_inflight_per_conn: 256,
             drain_timeout: Duration::from_secs(5),
+            semcache: Default::default(),
         }
     }
 }
@@ -221,6 +228,8 @@ struct ServerState {
     gauges: Mutex<WindowGauges>,
     /// True when every lane serves one shared cluster cache (stats field).
     shared_cache: AtomicBool,
+    /// The semantic result cache all lanes share (`None` = tier disabled).
+    semcache: Option<Arc<crate::semcache::SemCache>>,
     drain_timeout: Duration,
 }
 
@@ -356,6 +365,7 @@ where
             .collect(),
         gauges: Mutex::new(WindowGauges::default()),
         shared_cache: AtomicBool::new(false),
+        semcache: crate::semcache::SemCache::from_config(&cfg.semcache),
         drain_timeout: cfg.drain_timeout,
     });
     let factory = Arc::new(session_factory);
@@ -387,6 +397,10 @@ where
                         return;
                     }
                 };
+                // Every lane serves the one server-owned semantic cache
+                // (or none): a session-private cache would fragment hit
+                // state across lanes and double-serve inserts.
+                session.coordinator_mut().set_semcache(lane_state.semcache.clone());
                 lane_loop(&mut session, lane, &lane_jobs, &lane_state)
             })
             .expect("spawn lane executor");
@@ -506,8 +520,15 @@ fn scheduler_loop(
 ) {
     let mut acc: WindowAccumulator<Work> = WindowAccumulator::new(window_cfg);
     let max_wait = window_cfg.max_wait;
+    // Time this thread actually spends classifying/pooling (not blocked in
+    // recv): accumulated per item and flushed into the `recv_loop_cost_us`
+    // gauge when a window dispatches — the ROADMAP's "measure the recv
+    // loop before sharding it" number. Express classification cost folds
+    // into the next dispatched window's figure.
+    let recv_cost: std::cell::Cell<Duration> = std::cell::Cell::new(Duration::ZERO);
     // Route one admitted request: express traffic skips the window.
     let classify = |acc: &mut WindowAccumulator<Work>, work: Work, now: Instant| {
+        let t0 = Instant::now();
         let waited = now.duration_since(work.received_at);
         if wants_bypass(&work.request, session_top_k)
             || bypasses_window(work.request.options.deadline_ms, waited, max_wait)
@@ -517,6 +538,7 @@ fn scheduler_loop(
         } else {
             acc.push(work, now);
         }
+        recv_cost.set(recv_cost.get() + t0.elapsed());
     };
     'serve: loop {
         if state.shutdown.load(Ordering::SeqCst) {
@@ -540,6 +562,7 @@ fn scheduler_loop(
             || state.draining.load(Ordering::SeqCst)
             || state.shutdown.load(Ordering::SeqCst);
         if flush_now {
+            state.gauges.lock().unwrap().record_recv_cost(recv_cost.take());
             jobs.push(Job::Window(acc.take()));
             continue;
         }
@@ -549,6 +572,7 @@ fn scheduler_loop(
             Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
             Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
                 // All producers gone: flush what we pooled, then exit.
+                state.gauges.lock().unwrap().record_recv_cost(recv_cost.take());
                 jobs.push(Job::Window(acc.take()));
                 break 'serve;
             }
@@ -705,9 +729,68 @@ fn run_window(session: &mut Session, works: &[Work], state: &ServerState) -> Vec
     // gauge per-lane batching could never move off zero.
     let mut group_conns: HashMap<usize, std::collections::HashSet<u64>> = HashMap::new();
     if !grouped.is_empty() {
-        let queries: Vec<Query> =
-            grouped.iter().map(|&i| works[i].request.query.clone()).collect();
-        match session.run_batch(&queries) {
+        // Semantic-cache probe (docs/SEMCACHE.md): the wire path probes
+        // here, on the lane, because only a lane owns an embedder — the
+        // scheduler thread can't embed, so pooled work is checked right
+        // before the batch instead of before the window. A hit is answered
+        // through `finish_reply` like any cold result (same deadline check,
+        // same `top_k` trim); misses carry their prepared form into the
+        // batch so the embedding is never computed twice.
+        let semcache = session.semcache().cloned();
+        let mut pending: Vec<usize> = Vec::with_capacity(grouped.len());
+        let mut prepared: Vec<crate::engine::PreparedQuery> = Vec::new();
+        if let Some(sc) = &semcache {
+            let probe_top_k = session_top_k.max(1);
+            for &i in &grouped {
+                let work = &works[i];
+                match session.prepare_one(&work.request.query) {
+                    Ok(pq) => {
+                        let hit = if work.request.options.no_cache {
+                            None
+                        } else {
+                            sc.probe(&pq.embedding, probe_top_k)
+                        };
+                        match hit {
+                            Some(hits) => {
+                                let report = crate::metrics::SearchReport {
+                                    query_id: pq.query.id,
+                                    latency: pq.prep_cost,
+                                    ..Default::default()
+                                };
+                                let outcome =
+                                    crate::coordinator::QueryOutcome { report, hits, group: 0 };
+                                replies[i] = Some(finish_reply(work, &outcome, Instant::now()));
+                            }
+                            None => {
+                                pending.push(i);
+                                prepared.push(pq);
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        replies[i] = Some(error_line(
+                            ErrorCode::Internal,
+                            format!("{e}"),
+                            Some(work.request.query.id),
+                        ));
+                    }
+                }
+            }
+        } else {
+            pending = grouped.clone();
+        }
+        let result = if semcache.is_some() {
+            if prepared.is_empty() {
+                Ok((Vec::new(), Default::default()))
+            } else {
+                session.run_prepared(&prepared)
+            }
+        } else {
+            let queries: Vec<Query> =
+                pending.iter().map(|&i| works[i].request.query.clone()).collect();
+            session.run_batch(&queries)
+        };
+        match result {
             Ok((outcomes, stats)) => {
                 // Grouping cost per window, straight into the scheduler
                 // gauges: the indexed engine's whole point is keeping this
@@ -719,7 +802,7 @@ fn run_window(session: &mut Session, works: &[Work], state: &ServerState) -> Vec
                 // outcome is consumed once, so duplicate query_ids in one
                 // window each get their own (distinct) result.
                 let mut used = vec![false; outcomes.len()];
-                for &i in &grouped {
+                for &i in &pending {
                     let work = &works[i];
                     let slot = outcomes.iter().enumerate().position(|(oi, o)| {
                         !used[oi] && o.report.query_id == work.request.query.id
@@ -745,7 +828,7 @@ fn run_window(session: &mut Session, works: &[Work], state: &ServerState) -> Vec
                 }
             }
             Err(e) => {
-                for &i in &grouped {
+                for &i in &pending {
                     replies[i] = Some(error_line(
                         ErrorCode::Internal,
                         format!("{e}"),
@@ -899,6 +982,7 @@ fn handle_connection(
                         draining: !state.admitting(),
                         shared_cache: state.shared_cache.load(Ordering::SeqCst),
                         scheduler: state.gauges.lock().unwrap().clone(),
+                        semcache: state.semcache.as_ref().map(|sc| sc.stats()),
                         lanes,
                     })
                     .dump(),

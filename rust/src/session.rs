@@ -61,6 +61,7 @@ pub struct SessionBuilder {
     ensure: bool,
     shared_cache: Option<Arc<ShardedClusterCache>>,
     shared_inflight: Option<Arc<InFlight>>,
+    semcache: Option<Arc<crate::semcache::SemCache>>,
 }
 
 impl Default for SessionBuilder {
@@ -73,6 +74,7 @@ impl Default for SessionBuilder {
             ensure: true,
             shared_cache: None,
             shared_inflight: None,
+            semcache: None,
         }
     }
 }
@@ -158,6 +160,16 @@ impl SessionBuilder {
         self
     }
 
+    /// Serve with this semantic result cache ([`crate::semcache`]): the
+    /// single-query and scheduler paths probe it before doing search work,
+    /// and completed default-path answers are inserted. A multi-lane
+    /// server passes one shared `Arc` to every lane. Without this call the
+    /// session follows `cfg.semcache_*` (disabled by default).
+    pub fn semcache(mut self, semcache: Arc<crate::semcache::SemCache>) -> Self {
+        self.semcache = Some(semcache);
+        self
+    }
+
     /// Validate the configuration, resolve the dataset, provision the index
     /// if requested, and assemble the serving session.
     pub fn open(self) -> anyhow::Result<Session> {
@@ -169,6 +181,7 @@ impl SessionBuilder {
             ensure,
             shared_cache,
             shared_inflight,
+            semcache,
         } = self;
         cfg.validate()?;
         let spec = match (dataset, dataset_name) {
@@ -185,9 +198,13 @@ impl SessionBuilder {
         if ensure {
             runner::ensure_dataset(&cfg, &spec)?;
         }
+        let semcache =
+            semcache.or_else(|| crate::semcache::SemCache::from_config(&cfg.semcache()));
         let engine = SearchEngine::open_shared(&cfg, &spec, shared_cache, shared_inflight)?;
+        let mut coordinator = Coordinator::new(engine, policy);
+        coordinator.set_semcache(semcache);
         Ok(Session {
-            coordinator: Coordinator::new(engine, policy),
+            coordinator,
             spec,
             pending: VecDeque::new(),
             totals: SessionStats::default(),
@@ -263,16 +280,56 @@ impl Session {
     /// server runs for `no_group` / `nprobe` / oversized-`top_k` requests
     /// (proto [`crate::proto::SearchOptions`]); in-process embedders can
     /// use it for latency-critical lookups that must not wait for a plan.
+    /// The semantic result cache is consulted here too (express and
+    /// single-query traffic): a probe within threshold answers without
+    /// search work. Requests overriding `nprobe` never probe or insert —
+    /// their answers are not the default-path answer — and
+    /// `opts.no_cache` skips the probe (the cold answer is still
+    /// inserted).
     pub fn run_one(
         &mut self,
         query: &Query,
         opts: &crate::proto::SearchOptions,
     ) -> anyhow::Result<QueryOutcome> {
+        let semcache = self.coordinator.semcache().cloned();
         let engine = &mut self.coordinator.engine;
+        let use_cache = semcache.is_some() && opts.nprobe.is_none();
+        let top_k_eff = opts.top_k.unwrap_or(engine.cfg.top_k).max(1);
         let prepared = engine.prepare_with(std::slice::from_ref(query), opts.nprobe)?;
-        let (report, hits) = engine.search_with(&prepared[0], opts.top_k)?;
+        let pq = &prepared[0];
+        if use_cache && !opts.no_cache {
+            if let Some(hits) = semcache.as_ref().unwrap().probe(&pq.embedding, top_k_eff) {
+                self.totals.queries += 1;
+                let report = crate::metrics::SearchReport {
+                    query_id: pq.query.id,
+                    latency: pq.prep_cost,
+                    ..Default::default()
+                };
+                return Ok(QueryOutcome { report, hits, group: 0 });
+            }
+        }
+        let (report, hits) = engine.search_with(pq, opts.top_k)?;
+        if use_cache {
+            semcache.as_ref().unwrap().insert(&pq.embedding, top_k_eff, &hits);
+        }
         self.totals.queries += 1;
         Ok(QueryOutcome { report, hits, group: 0 })
+    }
+
+    /// Plan + dispatch an already prepared batch — the scheduler's flush
+    /// path for pooled semantic-cache misses, which were prepared once at
+    /// admission (to probe the cache) and must not be embedded again.
+    /// Totals are updated exactly as for [`Session::run_batch`].
+    pub fn run_prepared(
+        &mut self,
+        prepared: &[PreparedQuery],
+    ) -> anyhow::Result<(Vec<QueryOutcome>, BatchStats)> {
+        let (outcomes, stats) = self.coordinator.process_prepared(prepared)?;
+        self.totals.batches += 1;
+        self.totals.queries += stats.batch_size;
+        self.totals.groups += stats.groups;
+        self.totals.grouping_cost += stats.grouping_cost;
+        Ok((outcomes, stats))
     }
 
     /// Drive this session through the streaming-scheduler core: pooled
@@ -351,6 +408,12 @@ impl Session {
     /// Wait for in-flight prefetches to settle (measurement hygiene).
     pub fn quiesce(&self) {
         self.coordinator.quiesce();
+    }
+
+    /// The semantic result cache this session serves from, if one is
+    /// attached (counter snapshots, direct probes in tests).
+    pub fn semcache(&self) -> Option<&Arc<crate::semcache::SemCache>> {
+        self.coordinator.semcache()
     }
 
     /// The underlying engine (single-query search, prepare, exhaustive

@@ -20,6 +20,7 @@
 //!  * `Native` — embeddings are synthesized directly in embedding space from
 //!    the same template/topic latents (fast path for tests and benches).
 
+pub mod repeat;
 pub mod tokens;
 pub mod trace;
 pub mod traffic;

@@ -1,0 +1,251 @@
+//! Repeated-query / topical-drift trace generator (the semantic-cache
+//! workload, docs/SEMCACHE.md).
+//!
+//! Production RAG traffic is not a stream of fresh queries: users re-ask
+//! what was just asked (verbatim repeats), paraphrase it (near-duplicates),
+//! and the topical focus of the crowd drifts over time. This module
+//! synthesizes such a trace over any [`DatasetSpec`] so the semantic result
+//! cache's win is measurable and replayable:
+//!
+//! * **Verbatim repeats** re-issue a recent query *with its id* — the
+//!   Native embedding path derives the vector from the id, so the repeat's
+//!   embedding is bit-identical (a `semcache_threshold = 0` hit).
+//! * **Near-duplicates** reuse a recent query's template/topic latents
+//!   under a fresh id — a fresh noise draw, so the embedding lands within
+//!   the workload's `query_noise` radius of the original (an approximate
+//!   hit for thresholds around [`crate::semcache::DEFAULT_THRESHOLD`]).
+//! * **Topical drift** confines fresh queries to a sliding window of
+//!   topics whose start advances stochastically, so cache entries go stale
+//!   at a controllable rate.
+//!
+//! Everything is derived from [`Rng`] streams seeded by
+//! [`RepeatTraceConfig::seed`]: the same spec + config reproduce the trace
+//! byte for byte.
+
+use crate::util::rng::Rng;
+
+use super::{tokens, DatasetSpec, Query};
+
+/// Knobs of one repeated-query trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RepeatTraceConfig {
+    /// Trace length.
+    pub n_queries: usize,
+    /// Probability a step re-issues a query from the recent history
+    /// instead of drawing a fresh one.
+    pub duplicate_ratio: f64,
+    /// Fraction of re-issues sent as *near*-duplicates (same
+    /// template/topic latents, fresh id — a fresh noise draw at the
+    /// workload's `query_noise` radius). `0.0` = all repeats verbatim,
+    /// `1.0` = all repeats jittered.
+    pub jitter_radius: f64,
+    /// Per-step probability the topical focus window advances one topic.
+    pub drift_rate: f64,
+    /// Recency window (in queries) repeats are drawn from.
+    pub history: usize,
+    pub seed: u64,
+}
+
+impl Default for RepeatTraceConfig {
+    fn default() -> Self {
+        RepeatTraceConfig {
+            n_queries: 512,
+            duplicate_ratio: 0.5,
+            jitter_radius: 0.25,
+            drift_rate: 0.01,
+            history: 64,
+            seed: 0x5E3D,
+        }
+    }
+}
+
+/// Generate a repeated-query / topical-drift trace over `spec`.
+///
+/// Fresh ids start at `spec.n_queries` so they never collide with the base
+/// stream of [`super::generate_queries`] — an id collision would silently
+/// alias two distinct queries onto one Native-path embedding.
+pub fn repeated_trace(spec: &DatasetSpec, cfg: &RepeatTraceConfig) -> Vec<Query> {
+    let mut rng = Rng::new(cfg.seed).derive(0x5E3D_CA7E);
+    let mut out: Vec<Query> = Vec::with_capacity(cfg.n_queries);
+    let mut next_fresh = 0usize;
+    let mut focus = 0usize;
+    // Fresh queries draw topics from a window of ~1/4 of the topic space,
+    // anchored at the drifting focus.
+    let window = (spec.n_topics / 4).max(1);
+    let mut fresh_id = |next: &mut usize| {
+        let id = spec.n_queries + *next;
+        *next += 1;
+        id
+    };
+    for _ in 0..cfg.n_queries {
+        if cfg.drift_rate > 0.0 && rng.f64() < cfg.drift_rate {
+            focus = (focus + 1) % spec.n_topics;
+        }
+        let repeat = !out.is_empty() && rng.f64() < cfg.duplicate_ratio;
+        let q = if repeat {
+            let lo = out.len().saturating_sub(cfg.history.max(1));
+            let src = out[rng.range(lo, out.len())].clone();
+            if rng.f64() < cfg.jitter_radius {
+                let id = fresh_id(&mut next_fresh);
+                Query {
+                    id,
+                    template: src.template,
+                    topic: src.topic,
+                    tokens: tokens::query_tokens(spec, id, src.template, src.topic),
+                }
+            } else {
+                src
+            }
+        } else {
+            let id = fresh_id(&mut next_fresh);
+            let template = rng.range(0, spec.n_templates);
+            let topic = (focus + rng.zipf(window, spec.topic_zipf_s)) % spec.n_topics;
+            Query {
+                id,
+                template,
+                topic,
+                tokens: tokens::query_tokens(spec, id, template, topic),
+            }
+        };
+        out.push(q);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::{HashMap, HashSet};
+
+    fn spec() -> DatasetSpec {
+        DatasetSpec::tiny(3)
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let s = spec();
+        let cfg = RepeatTraceConfig::default();
+        let a = repeated_trace(&s, &cfg);
+        let b = repeated_trace(&s, &cfg);
+        assert_eq!(a, b);
+        let mut c2 = cfg.clone();
+        c2.seed ^= 1;
+        let c = repeated_trace(&s, &c2);
+        assert_ne!(
+            a.iter().map(|q| q.id).collect::<Vec<_>>(),
+            c.iter().map(|q| q.id).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn latents_in_range_and_ids_offset() {
+        let s = spec();
+        let trace = repeated_trace(&s, &RepeatTraceConfig::default());
+        assert_eq!(trace.len(), 512);
+        for q in &trace {
+            assert!(q.template < s.n_templates);
+            assert!(q.topic < s.n_topics);
+            assert!(q.id >= s.n_queries, "trace ids must not collide with the base stream");
+        }
+    }
+
+    #[test]
+    fn duplicate_ratio_shapes_the_trace() {
+        let s = spec();
+        let cfg = RepeatTraceConfig {
+            n_queries: 1000,
+            duplicate_ratio: 0.5,
+            jitter_radius: 0.0,
+            ..Default::default()
+        };
+        let trace = repeated_trace(&s, &cfg);
+        let mut seen = HashSet::new();
+        let repeats = trace.iter().filter(|q| !seen.insert(q.id)).count();
+        let frac = repeats as f64 / trace.len() as f64;
+        assert!((0.35..0.65).contains(&frac), "repeat fraction {frac}");
+    }
+
+    #[test]
+    fn jitter_zero_repeats_verbatim() {
+        let s = spec();
+        let cfg = RepeatTraceConfig { jitter_radius: 0.0, ..Default::default() };
+        let trace = repeated_trace(&s, &cfg);
+        let mut first: HashMap<usize, &Query> = HashMap::new();
+        for q in &trace {
+            match first.get(&q.id) {
+                Some(orig) => assert_eq!(*orig, q, "verbatim repeat must be identical"),
+                None => {
+                    first.insert(q.id, q);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn jitter_one_never_reuses_ids_but_reuses_latents() {
+        let s = spec();
+        let cfg = RepeatTraceConfig {
+            n_queries: 600,
+            duplicate_ratio: 0.5,
+            jitter_radius: 1.0,
+            ..Default::default()
+        };
+        let trace = repeated_trace(&s, &cfg);
+        let ids: HashSet<usize> = trace.iter().map(|q| q.id).collect();
+        assert_eq!(ids.len(), trace.len(), "jitter 1.0 always draws a fresh id");
+        // Near-duplicates share latents with a recent predecessor.
+        let near = trace
+            .windows(cfg.history)
+            .filter(|w| {
+                let last = &w[w.len() - 1];
+                w[..w.len() - 1]
+                    .iter()
+                    .any(|p| p.template == last.template && p.topic == last.topic)
+            })
+            .count();
+        assert!(
+            near > trace.len() / 4,
+            "expected many latent-sharing near-duplicates, got {near}"
+        );
+    }
+
+    #[test]
+    fn drift_widens_the_topic_set() {
+        let s = spec();
+        let window = (s.n_topics / 4).max(1);
+        let pinned = repeated_trace(
+            &s,
+            &RepeatTraceConfig {
+                n_queries: 400,
+                duplicate_ratio: 0.0,
+                drift_rate: 0.0,
+                ..Default::default()
+            },
+        );
+        assert!(
+            pinned.iter().all(|q| q.topic < window),
+            "with no drift, fresh topics stay inside the initial focus window"
+        );
+        let drifting = repeated_trace(
+            &s,
+            &RepeatTraceConfig {
+                n_queries: 400,
+                duplicate_ratio: 0.0,
+                drift_rate: 0.2,
+                ..Default::default()
+            },
+        );
+        let topics: HashSet<usize> = drifting.iter().map(|q| q.topic).collect();
+        assert!(
+            topics.len() > window,
+            "drift must move the focus past the initial window ({} topics seen)",
+            topics.len()
+        );
+    }
+
+    #[test]
+    fn empty_trace_is_ok() {
+        let cfg = RepeatTraceConfig { n_queries: 0, ..Default::default() };
+        assert!(repeated_trace(&spec(), &cfg).is_empty());
+    }
+}

@@ -1,0 +1,225 @@
+//! Semantic-result-cache suite (docs/SEMCACHE.md): the approximate answer
+//! tier must be *transparent* (capacity 0 and threshold-0 hits are
+//! bit-identical to the cold path), *profitable* (a repeated workload sees
+//! hits and strictly fewer disk reads), *accountable* (probe/hit/miss
+//! gauge conservation over the `stats` verb), and *escapable* (`no_cache`
+//! opts a request out of the probe).
+
+use std::time::Duration;
+
+use cagr::client::Client;
+use cagr::config::{Backend, Config, DiskProfile};
+use cagr::coordinator::scheduler::WindowConfig;
+use cagr::coordinator::Mode;
+use cagr::harness::runner::ensure_dataset;
+use cagr::proto::SearchOptions;
+use cagr::semcache::SemCacheConfig;
+use cagr::server::{start, ServerConfig, ServerHandle};
+use cagr::session::Session;
+use cagr::workload::repeat::{repeated_trace, RepeatTraceConfig};
+use cagr::workload::{generate_queries, DatasetSpec, Query};
+
+fn test_cfg(tag: &str) -> (Config, DatasetSpec) {
+    let mut cfg = Config::default();
+    cfg.data_dir =
+        std::env::temp_dir().join(format!("cagr-semc-{}-{tag}", std::process::id()));
+    cfg.clusters = 16;
+    cfg.nprobe = 4;
+    cfg.top_k = 5;
+    cfg.cache_entries = 8;
+    cfg.kmeans_iters = 4;
+    cfg.kmeans_sample = 2_000;
+    cfg.backend = Backend::Native;
+    cfg.disk_profile = DiskProfile::None;
+    cfg.io_workers = 1;
+    cfg.cache_shards = 1;
+    (cfg, DatasetSpec::tiny(0x5E3C))
+}
+
+fn launch(cfg: &Config, spec: &DatasetSpec, tune: impl FnOnce(&mut ServerConfig)) -> ServerHandle {
+    ensure_dataset(cfg, spec).unwrap();
+    let factory = {
+        let cfg = cfg.clone();
+        let spec = spec.clone();
+        move || -> anyhow::Result<Session> {
+            Session::builder()
+                .config(cfg.clone())
+                .dataset(spec.clone())
+                .mode(Mode::QGP)
+                .ensure_dataset(false)
+                .open()
+        }
+    };
+    let mut server_cfg = ServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        window_max_wait: Duration::from_millis(20),
+        window_max_queries: 8,
+        lanes: 1,
+        ..Default::default()
+    };
+    tune(&mut server_cfg);
+    start(factory, server_cfg).unwrap()
+}
+
+/// Pipeline `queries` through one connection; replies keyed by query id
+/// with f32 distances captured bit-exactly.
+fn drive(client: &mut Client, queries: &[Query]) -> Vec<(usize, Vec<(u32, u32)>)> {
+    let mut out = Vec::with_capacity(queries.len());
+    for q in queries {
+        client.submit(q).unwrap();
+    }
+    for _ in queries {
+        let r = client.recv().unwrap();
+        out.push((
+            r.query_id,
+            r.hits.iter().map(|h| (h.doc, h.distance.to_bits())).collect(),
+        ));
+    }
+    out.sort();
+    out
+}
+
+/// Run one workload through a session via the in-process scheduler;
+/// returns (sorted results, disk reads, semcache stats if enabled).
+fn run_scheduled(
+    cfg: &Config,
+    spec: &DatasetSpec,
+    workload: &[Query],
+) -> (Vec<(usize, Vec<(u32, u32)>)>, u64, Option<cagr::semcache::SemCacheStats>) {
+    let mut session = Session::builder()
+        .config(cfg.clone())
+        .dataset(spec.clone())
+        .mode(Mode::QG)
+        .ensure_dataset(false)
+        .open()
+        .unwrap();
+    let mut sched = session
+        .scheduler(WindowConfig { max_queries: 8, max_wait: Duration::from_secs(10) });
+    let mut outcomes = Vec::new();
+    for q in workload {
+        outcomes.extend(sched.submit(q, None).unwrap());
+    }
+    // Cache hits answer at submit time without occupying the window, so
+    // the final window may be partial regardless of trace length.
+    outcomes.extend(sched.flush().unwrap());
+    drop(sched);
+    assert_eq!(outcomes.len(), workload.len(), "every submitted query answered");
+    let mut results: Vec<(usize, Vec<(u32, u32)>)> = outcomes
+        .iter()
+        .map(|o| {
+            (
+                o.report.query_id,
+                o.hits.iter().map(|h| (h.doc_id, h.distance.to_bits())).collect(),
+            )
+        })
+        .collect();
+    results.sort();
+    let stats = session.semcache().map(|sc| sc.stats());
+    let reads = session.engine().disk.lock().unwrap().reads;
+    (results, reads, stats)
+}
+
+/// The acceptance gate, in-process: a repeated workload (60% re-issues,
+/// all verbatim) through the scheduler with an exact-only cache
+/// (`threshold = 0`) must return bit-identical results to the uncached
+/// run, take strictly fewer disk reads, see hits, and conserve its
+/// gauges (probes = hits + misses).
+#[test]
+fn exact_cache_parity_and_disk_savings_on_repeated_workload() {
+    let (mut cfg, spec) = test_cfg("inproc");
+    // A cluster cache far smaller than the working set forces the cold
+    // path to re-read evicted clusters on every re-issue — the reads the
+    // semantic cache exists to save.
+    cfg.cache_entries = 4;
+    ensure_dataset(&cfg, &spec).unwrap();
+    let workload = repeated_trace(
+        &spec,
+        &RepeatTraceConfig {
+            n_queries: 48,
+            duplicate_ratio: 0.6,
+            jitter_radius: 0.0, // verbatim repeats only: exact-match hits
+            drift_rate: 0.05,
+            history: 16,
+            seed: 0x5E3C_01,
+        },
+    );
+
+    let (cold, cold_reads, cold_stats) = run_scheduled(&cfg, &spec, &workload);
+    assert!(cold_stats.is_none(), "capacity 0 must not attach a cache");
+
+    let mut cached_cfg = cfg.clone();
+    cached_cfg.semcache_capacity = 64;
+    cached_cfg.semcache_threshold = 0.0;
+    let (warm, warm_reads, warm_stats) = run_scheduled(&cached_cfg, &spec, &workload);
+
+    assert_eq!(cold, warm, "cache hits must be bit-identical to the cold path");
+    let s = warm_stats.expect("enabled cache must report stats");
+    assert!(s.hits > 0, "a 60%-repeat workload must see cache hits: {s:?}");
+    assert_eq!(s.probes, s.hits + s.misses, "gauge conservation: {s:?}");
+    assert!(s.insertions > 0, "completed misses must populate the cache");
+    assert!(
+        warm_reads < cold_reads,
+        "served repeats must skip disk: cached {warm_reads} vs cold {cold_reads} reads"
+    );
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}
+
+/// End-to-end over TCP: repeats of pooled queries are answered from the
+/// lane-side probe with replies identical to the cold pass; the `stats`
+/// verb exposes the semcache gauges; `no_cache` skips the probe (probe
+/// count frozen) while still returning the correct result.
+#[test]
+fn server_cache_hits_identical_replies_and_stats() {
+    let (cfg, spec) = test_cfg("server");
+    let handle = launch(&cfg, &spec, |sc| {
+        sc.semcache = SemCacheConfig {
+            capacity: 64,
+            threshold: 0.0,
+            ttl: Duration::ZERO,
+        };
+    });
+    let queries = generate_queries(&spec);
+    let mut client = Client::connect(handle.addr).unwrap();
+
+    let cold = drive(&mut client, &queries[..8]);
+    let warm = drive(&mut client, &queries[..8]);
+    assert_eq!(cold, warm, "cache-served replies diverge from the cold pass");
+
+    let mut ctl = Client::connect(handle.addr).unwrap();
+    let s = ctl.stats().unwrap();
+    let sc = s.semcache.expect("enabled semcache must appear in stats");
+    assert!(sc.hits >= 8, "all 8 repeats must hit the exact-match cache: {sc:?}");
+    assert_eq!(sc.probes, sc.hits + sc.misses, "gauge conservation: {sc:?}");
+    assert!(sc.insertions >= 1);
+
+    // Opt-out: `no_cache` must skip the probe entirely (probe gauge does
+    // not move) and still answer correctly.
+    let opts = SearchOptions { no_cache: true, ..Default::default() };
+    let r = client.search_with(&queries[0], &opts).unwrap();
+    let mut got: Vec<(u32, u32)> =
+        r.hits.iter().map(|h| (h.doc, h.distance.to_bits())).collect();
+    got.sort();
+    let mut want = cold.iter().find(|(id, _)| *id == queries[0].id).unwrap().1.clone();
+    want.sort();
+    assert_eq!(got, want, "no_cache reply diverges from the cold result");
+    let after = ctl.stats().unwrap().semcache.unwrap();
+    assert_eq!(after.probes, sc.probes, "no_cache request must not probe");
+
+    handle.shutdown();
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}
+
+/// A server without a cache (the capacity-0 default) reports no semcache
+/// stats at all — clients can tell "disabled" from "enabled but unused".
+#[test]
+fn server_without_cache_reports_none() {
+    let (cfg, spec) = test_cfg("off");
+    let handle = launch(&cfg, &spec, |_| {});
+    let queries = generate_queries(&spec);
+    let mut client = Client::connect(handle.addr).unwrap();
+    drive(&mut client, &queries[..4]);
+    let s = client.stats().unwrap();
+    assert!(s.semcache.is_none(), "capacity 0 must not report semcache stats");
+    handle.shutdown();
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}

@@ -19,6 +19,11 @@
 //!   CAGR_FIG6_QUERIES=N   cap queries per run (after warmup)
 //!   CAGR_FIG6_CONNS=1     also run the connection-shape comparison when
 //!                         not in smoke mode (smoke always runs it)
+//!   CAGR_FIG6_WINDOW=1    also run the pooling-window sweep (static
+//!                         100/250/1000-query windows + the adaptive
+//!                         controller) when not in smoke mode; writes
+//!                         `results/window_sweep.json` (smoke always
+//!                         runs it)
 //!
 //! The connection-shape comparison drives the *TCP serving stack* with the
 //! same traffic fragmented two ways — many small connections vs few large
@@ -53,6 +58,7 @@ fn serve_shape(
     traffic: &[Query],
     conns: usize,
     pipeline: usize,
+    tune: impl FnOnce(&mut cagr::server::ServerConfig),
 ) -> anyhow::Result<(LatencyRecorder, cagr::proto::StatsReply)> {
     use cagr::client::{Client, ClientError};
     use std::sync::Arc;
@@ -79,16 +85,15 @@ fn serve_shape(
                 .open()
         }
     };
-    let handle = cagr::server::start(
-        factory,
-        cagr::server::ServerConfig {
-            addr: "127.0.0.1:0".to_string(),
-            window_max_wait: std::time::Duration::from_millis(10),
-            window_max_queries: cfg.batch_max,
-            lanes: 2,
-            ..Default::default()
-        },
-    )?;
+    let mut server_cfg = cagr::server::ServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        window_max_wait: std::time::Duration::from_millis(10),
+        window_max_queries: cfg.batch_max,
+        lanes: 2,
+        ..Default::default()
+    };
+    tune(&mut server_cfg);
+    let handle = cagr::server::start(factory, server_cfg)?;
     let addr = handle.addr;
     let mut threads = Vec::new();
     for c in 0..conns {
@@ -279,7 +284,7 @@ fn main() -> anyhow::Result<()> {
             ("many-small", 8usize, 4usize, "results/fig6_conns_many.json"),
             ("few-large", 2, 16, "results/fig6_conns_few.json"),
         ] {
-            let (recorder, stats) = serve_shape(&cfg, spec, &traffic, conns, pipeline)?;
+            let (recorder, stats) = serve_shape(&cfg, spec, &traffic, conns, pipeline, |_| {})?;
             let lane0 = &stats.lanes[0];
             let hit = lane0.cache.hit_ratio();
             let g = &stats.scheduler;
@@ -322,6 +327,79 @@ fn main() -> anyhow::Result<()> {
             )
         );
         println!("summaries: results/fig6_conns_many.json, results/fig6_conns_few.json");
+    }
+
+    // Pooling-window sweep (PR 7): the same traffic under static windows
+    // of 100/250/1000 queries plus the adaptive controller — how window
+    // sizing moves tail latency, occupancy, and grouping quality over the
+    // full serving stack. Writes results/window_sweep.json whenever it
+    // runs (CI's bench-smoke job uploads it as an artifact).
+    if smoke || std::env::var("CAGR_FIG6_WINDOW").is_ok() {
+        let spec = &specs[0];
+        let mut traffic = generate_queries(spec);
+        traffic.truncate(64);
+        let mut arms = Vec::new();
+        let mut rows = Vec::new();
+        for (label, window_queries, adaptive) in [
+            ("w100", 100usize, false),
+            ("w250", 250, false),
+            ("w1000", 1000, false),
+            ("adaptive", 100, true),
+        ] {
+            let (recorder, stats) = serve_shape(&cfg, spec, &traffic, 8, 8, |sc| {
+                sc.window_max_queries = window_queries;
+                if adaptive {
+                    sc.adaptive = cagr::coordinator::AdaptiveConfig {
+                        enabled: true,
+                        min_queries: 8,
+                        max_queries: 1_000,
+                        min_wait: std::time::Duration::from_millis(1),
+                        max_wait: std::time::Duration::from_millis(100),
+                    };
+                }
+            })?;
+            let g = &stats.scheduler;
+            rows.push(vec![
+                label.to_string(),
+                window_queries.to_string(),
+                format!("{:.4}", recorder.mean()),
+                format!("{:.4}", recorder.p99()),
+                format!("{:.1}", g.mean_occupancy()),
+                format!("{}q/{:.1}ms", g.window_limit, g.window_wait_us as f64 / 1_000.0),
+                g.adaptations.to_string(),
+            ]);
+            arms.push(obj(vec![
+                ("arm", label.into()),
+                ("window_max_queries", window_queries.into()),
+                ("adaptive", Json::Bool(adaptive)),
+                ("latency", recorder.summary_json()),
+                ("scheduler", g.to_json()),
+            ]));
+        }
+        let doc = obj(vec![
+            ("bench", "window_sweep".into()),
+            ("dataset", spec.name.into()),
+            ("connections", 8usize.into()),
+            ("queries", traffic.len().into()),
+            ("arms", Json::Arr(arms)),
+        ]);
+        std::fs::write("results/window_sweep.json", doc.pretty())?;
+        println!(
+            "\npooling-window sweep (same traffic, 8 connections):\n{}",
+            render_table(
+                &[
+                    "arm",
+                    "window",
+                    "mean(s)",
+                    "p99(s)",
+                    "mean-occupancy",
+                    "effective-window",
+                    "adaptations",
+                ],
+                &rows
+            )
+        );
+        println!("summary: results/window_sweep.json");
     }
     if smoke {
         println!("SMOKE RUN: shape check + artifact only; not paper-comparable.");

@@ -261,6 +261,23 @@ pub struct Config {
     /// until LRU eviction.
     pub semcache_ttl_ms: u64,
 
+    // -- adaptive pooling window (docs/SCHEDULER.md) ---------------------------
+    /// Retune the scheduler's pooling window per flush from observed
+    /// arrival rate and grouping feedback (CALL direction). Off by
+    /// default: the static window is reproduced bit-for-bit.
+    pub adaptive_window: bool,
+    /// Adaptive clamp: the controller never narrows `max_queries` below
+    /// this.
+    pub adaptive_min_queries: usize,
+    /// Adaptive clamp: the controller never widens `max_queries` past
+    /// this.
+    pub adaptive_max_queries: usize,
+    /// Adaptive clamp: lower bound on the window wait, milliseconds.
+    pub adaptive_min_wait_ms: u64,
+    /// Adaptive clamp: upper bound on the window wait, milliseconds
+    /// (only reached when windows show grouping payoff).
+    pub adaptive_max_wait_ms: u64,
+
     // -- traffic (paper §4.1) --------------------------------------------------
     /// Batch size bounds, inclusive (paper: 20..=100).
     pub batch_min: usize,
@@ -300,6 +317,11 @@ impl Default for Config {
             semcache_capacity: 0,
             semcache_threshold: crate::semcache::DEFAULT_THRESHOLD as f64,
             semcache_ttl_ms: 0,
+            adaptive_window: false,
+            adaptive_min_queries: 8,
+            adaptive_max_queries: 1_000,
+            adaptive_min_wait_ms: 1,
+            adaptive_max_wait_ms: 100,
             batch_min: 20,
             batch_max: 100,
             backend: Backend::Native,
@@ -381,6 +403,27 @@ impl Config {
                     anyhow::anyhow!("'semcache_threshold' expects a number, got '{value}'")
                 })?
             }
+            "adaptive_window" => {
+                self.adaptive_window = match value.trim().to_ascii_lowercase().as_str() {
+                    "on" | "true" | "1" => true,
+                    "off" | "false" | "0" => false,
+                    other => anyhow::bail!(
+                        "'adaptive_window' expects on/off (or true/false), got '{other}'"
+                    ),
+                }
+            }
+            "adaptive_min_queries" => self.adaptive_min_queries = parse_usize(value)?,
+            "adaptive_max_queries" => self.adaptive_max_queries = parse_usize(value)?,
+            "adaptive_min_wait_ms" => {
+                self.adaptive_min_wait_ms = value.parse().map_err(|_| {
+                    anyhow::anyhow!("'adaptive_min_wait_ms' expects a u64, got '{value}'")
+                })?
+            }
+            "adaptive_max_wait_ms" => {
+                self.adaptive_max_wait_ms = value.parse().map_err(|_| {
+                    anyhow::anyhow!("'adaptive_max_wait_ms' expects a u64, got '{value}'")
+                })?
+            }
             "semcache_ttl_ms" => {
                 self.semcache_ttl_ms = value.parse().map_err(|_| {
                     anyhow::anyhow!("'semcache_ttl_ms' expects a u64, got '{value}'")
@@ -446,6 +489,22 @@ impl Config {
                 "batch range [{}, {}] invalid",
                 self.batch_min,
                 self.batch_max
+            );
+        }
+        if self.adaptive_min_queries == 0
+            || self.adaptive_min_queries > self.adaptive_max_queries
+        {
+            anyhow::bail!(
+                "adaptive query clamp [{}, {}] invalid (min must be >= 1 and <= max)",
+                self.adaptive_min_queries,
+                self.adaptive_max_queries
+            );
+        }
+        if self.adaptive_min_wait_ms > self.adaptive_max_wait_ms {
+            anyhow::bail!(
+                "adaptive wait clamp [{} ms, {} ms] invalid (min must be <= max)",
+                self.adaptive_min_wait_ms,
+                self.adaptive_max_wait_ms
             );
         }
         Ok(())
@@ -581,6 +640,40 @@ mod tests {
         assert!(c.set("semcache_capacity", "lots").is_err());
         assert!(c.set("semcache_threshold", "tight").is_err());
         assert!(c.set("semcache_ttl_ms", "soon").is_err());
+    }
+
+    #[test]
+    fn adaptive_knobs_parse_and_validate() {
+        let mut c = Config::default();
+        assert!(!c.adaptive_window, "the controller ships off");
+        c.validate().unwrap();
+        c.set("adaptive_window", "on").unwrap();
+        assert!(c.adaptive_window);
+        c.set("adaptive_window", "off").unwrap();
+        assert!(!c.adaptive_window);
+        c.set("adaptive_window", "true").unwrap();
+        c.set("adaptive_min_queries", "16").unwrap();
+        c.set("adaptive_max_queries", "512").unwrap();
+        c.set("adaptive_min_wait_ms", "2").unwrap();
+        c.set("adaptive_max_wait_ms", "50").unwrap();
+        assert!(c.adaptive_window);
+        assert_eq!((c.adaptive_min_queries, c.adaptive_max_queries), (16, 512));
+        assert_eq!((c.adaptive_min_wait_ms, c.adaptive_max_wait_ms), (2, 50));
+        c.validate().unwrap();
+        // Clamp invariants: min >= 1 and min <= max, both dimensions.
+        c.adaptive_min_queries = 0;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("adaptive query clamp"), "{err}");
+        c.adaptive_min_queries = 600;
+        assert!(c.validate().is_err(), "min_queries above max_queries");
+        c.adaptive_min_queries = 16;
+        c.adaptive_min_wait_ms = 80;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("adaptive wait clamp"), "{err}");
+        let mut c = Config::default();
+        assert!(c.set("adaptive_window", "maybe").is_err());
+        assert!(c.set("adaptive_min_queries", "few").is_err());
+        assert!(c.set("adaptive_max_wait_ms", "soon").is_err());
     }
 
     #[test]

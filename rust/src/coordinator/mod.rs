@@ -41,7 +41,10 @@ pub use policy::{
     SchedulePolicy,
 };
 pub use prefetch::Prefetcher;
-pub use scheduler::{bypasses_window, SessionScheduler, WindowAccumulator, WindowConfig};
+pub use scheduler::{
+    bypasses_window, AdaptiveConfig, AdaptiveWindow, FlushFeedback, SessionScheduler,
+    WindowAccumulator, WindowConfig,
+};
 
 /// Legacy coordinator operating mode (§4.4 terminology).
 ///

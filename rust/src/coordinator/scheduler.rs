@@ -38,7 +38,7 @@
 
 use std::time::{Duration, Instant};
 
-use crate::config::GroupOrder;
+use crate::config::{Config, GroupOrder};
 use crate::coordinator::grouping::{group_queries_indexed, reorder_groups_greedy, IncrementalGrouper};
 use crate::coordinator::policy::IncrementalParams;
 use crate::coordinator::QueryOutcome;
@@ -60,6 +60,196 @@ pub struct WindowConfig {
 impl Default for WindowConfig {
     fn default() -> Self {
         WindowConfig { max_queries: 100, max_wait: Duration::from_millis(10) }
+    }
+}
+
+/// Clamp bounds + enable switch for the [`AdaptiveWindow`] controller.
+/// `enabled == false` is the contract-level off switch: the controller
+/// becomes a constant function returning the static window, so
+/// `adaptive_window=off` reproduces the PR 4 scheduler bit-for-bit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AdaptiveConfig {
+    /// Retune the window per flush; off = static window, verbatim.
+    pub enabled: bool,
+    /// Lower clamp for `max_queries` (never narrows below this).
+    pub min_queries: usize,
+    /// Upper clamp for `max_queries` (never widens past this).
+    pub max_queries: usize,
+    /// Lower clamp for `max_wait`.
+    pub min_wait: Duration,
+    /// Upper clamp for `max_wait` — only reachable when the window shows
+    /// grouping payoff; ungroupable traffic stays at the static wait.
+    pub max_wait: Duration,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        AdaptiveConfig {
+            enabled: false,
+            min_queries: 8,
+            max_queries: 1_000,
+            min_wait: Duration::from_millis(1),
+            max_wait: Duration::from_millis(100),
+        }
+    }
+}
+
+impl AdaptiveConfig {
+    /// The disabled controller (static window, bit-for-bit).
+    pub fn off() -> AdaptiveConfig {
+        AdaptiveConfig::default()
+    }
+
+    /// Resolve the controller knobs from the layered [`Config`]
+    /// (`adaptive_window`, `adaptive_{min,max}_queries`,
+    /// `adaptive_{min,max}_wait_ms`).
+    pub fn from_config(cfg: &Config) -> AdaptiveConfig {
+        AdaptiveConfig {
+            enabled: cfg.adaptive_window,
+            min_queries: cfg.adaptive_min_queries,
+            max_queries: cfg.adaptive_max_queries,
+            min_wait: Duration::from_millis(cfg.adaptive_min_wait_ms),
+            max_wait: Duration::from_millis(cfg.adaptive_max_wait_ms),
+        }
+    }
+}
+
+/// What one flushed window tells the controller: how full it got, how long
+/// it was open, and whether pooling actually paid (merged or
+/// cross-connection groups) versus what the pooling overhead cost
+/// (Algorithm 1 + the scheduler recv loop).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FlushFeedback {
+    /// Queries the flushed window held.
+    pub occupancy: usize,
+    /// How long the window was open (first push → flush): together with
+    /// `occupancy` this is the observed arrival rate.
+    pub waited: Duration,
+    /// Groups the window produced (`== occupancy` means nothing merged).
+    pub groups: usize,
+    /// Groups spanning more than one connection (the `cross_conn_groups`
+    /// gauge) — direct evidence that cross-connection pooling paid.
+    pub cross_conn_groups: usize,
+    /// Algorithm 1 cost attributed to this window (`grouping_cost_us`).
+    pub grouping_cost: Duration,
+    /// Scheduler-thread classify/pool cost (`recv_loop_cost_us`).
+    pub recv_cost: Duration,
+}
+
+impl FlushFeedback {
+    /// True when the window showed grouping payoff: queries merged into
+    /// fewer groups than members, or groups spanned connections. A zero
+    /// group count means no grouping evidence at all (e.g. the server's
+    /// first window, whose lagged gauges haven't moved yet) — not payoff.
+    fn payoff(&self) -> bool {
+        self.cross_conn_groups > 0 || (self.groups > 0 && self.groups < self.occupancy)
+    }
+}
+
+/// Per-flush feedback controller for the pooling window (CALL direction,
+/// PAPERS.md): widen `max_queries` multiplicatively while windows flush
+/// full (arrival rate outruns the window), narrow when they flush nearly
+/// empty or when grouping/recv overhead rivals the wait itself, and set
+/// `max_wait` to the time `max_queries` arrivals take at the observed
+/// rate. Every output is clamped to [`AdaptiveConfig`]'s bounds; with
+/// `enabled == false` the controller always returns the static base
+/// window and counts nothing.
+#[derive(Debug, Clone)]
+pub struct AdaptiveWindow {
+    cfg: AdaptiveConfig,
+    base: WindowConfig,
+    current: WindowConfig,
+    adaptations: u64,
+    widened: u64,
+    narrowed: u64,
+}
+
+impl AdaptiveWindow {
+    pub fn new(base: WindowConfig, cfg: AdaptiveConfig) -> AdaptiveWindow {
+        let current = if cfg.enabled {
+            WindowConfig {
+                max_queries: base.max_queries.clamp(cfg.min_queries.max(1), cfg.max_queries.max(1)),
+                max_wait: base.max_wait.clamp(cfg.min_wait.min(cfg.max_wait), cfg.max_wait),
+            }
+        } else {
+            base
+        };
+        AdaptiveWindow { cfg, base, current, adaptations: 0, widened: 0, narrowed: 0 }
+    }
+
+    /// The window bounds to apply to the next pooling window.
+    pub fn current(&self) -> WindowConfig {
+        self.current
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.cfg.enabled
+    }
+
+    /// (adaptations, widened, narrowed) — a retune that changes both
+    /// dimensions in opposite directions counts under both widened and
+    /// narrowed.
+    pub fn counters(&self) -> (u64, u64, u64) {
+        (self.adaptations, self.widened, self.narrowed)
+    }
+
+    /// Feed one flushed window's observations; returns the retuned config
+    /// for the next window. Empty flushes (drain ticks) are ignored — no
+    /// arrival-rate signal.
+    pub fn observe(&mut self, fb: &FlushFeedback) -> WindowConfig {
+        if !self.cfg.enabled || fb.occupancy == 0 {
+            return self.current;
+        }
+        let prev = self.current;
+        let floor = self.cfg.min_queries.max(1);
+        let ceil = self.cfg.max_queries.max(floor);
+
+        // Size: multiplicative-increase when the window filled (the
+        // arrival rate outran it — a bigger window sees more groupable
+        // context), halve when it flushed under a quarter full. The
+        // [ceil/4, ceil) dead band gives the loop a fixed point instead of
+        // oscillating around the boundary.
+        let mut mq = prev.max_queries;
+        if fb.occupancy >= prev.max_queries {
+            mq = mq.saturating_mul(2).clamp(floor, ceil);
+        } else if fb.occupancy.saturating_mul(4) < prev.max_queries {
+            mq = (mq / 2).clamp(floor, ceil);
+        }
+        // Overhead guard: when Algorithm 1 + the recv loop cost a quarter
+        // of the wait they are supposed to amortize, widening cannot pay —
+        // back off instead.
+        if (fb.grouping_cost + fb.recv_cost).saturating_mul(4) > prev.max_wait {
+            mq = (prev.max_queries / 2).clamp(floor, ceil);
+        }
+
+        // Wait: the time `mq` arrivals take at the observed rate
+        // (occupancy arrivals took `waited`). Integer µs math keeps the
+        // loop deterministic. Only windows with demonstrated grouping
+        // payoff may hold past the static base wait — ungroupable traffic
+        // gains nothing from waiting, so its latency stays bounded by the
+        // operator's static choice.
+        let waited_us = fb.waited.as_micros().max(1) as u64;
+        let desired_us = waited_us.saturating_mul(mq as u64) / (fb.occupancy as u64);
+        let hi = if fb.payoff() {
+            self.cfg.max_wait
+        } else {
+            self.cfg.max_wait.min(self.base.max_wait)
+        };
+        let lo = self.cfg.min_wait.min(hi);
+        let wait = Duration::from_micros(desired_us).clamp(lo, hi);
+
+        let next = WindowConfig { max_queries: mq, max_wait: wait };
+        if next != prev {
+            self.adaptations += 1;
+            if next.max_queries > prev.max_queries || next.max_wait > prev.max_wait {
+                self.widened += 1;
+            }
+            if next.max_queries < prev.max_queries || next.max_wait < prev.max_wait {
+                self.narrowed += 1;
+            }
+        }
+        self.current = next;
+        next
     }
 }
 
@@ -97,6 +287,22 @@ impl<T> WindowAccumulator<T> {
 
     pub fn config(&self) -> WindowConfig {
         self.cfg
+    }
+
+    /// Retarget the window bounds (the adaptive controller's per-flush
+    /// retune). Takes effect immediately — `is_full`/`ready` consult the
+    /// new bounds even for an already-open window.
+    pub fn set_config(&mut self, cfg: WindowConfig) {
+        self.cfg = WindowConfig { max_queries: cfg.max_queries.max(1), max_wait: cfg.max_wait };
+    }
+
+    /// How long the open window has been accumulating at `now` (`None`
+    /// when empty) — the controller's arrival-rate observation.
+    pub fn open_for(&self, now: Instant) -> Option<Duration> {
+        if self.items.is_empty() {
+            return None;
+        }
+        self.opened_at.map(|t| now.duration_since(t))
     }
 
     pub fn len(&self) -> usize {
@@ -230,6 +436,7 @@ pub struct SessionScheduler<'a> {
     session: &'a mut Session,
     acc: WindowAccumulator<Pooled>,
     inc: Option<IncrementalState>,
+    ctl: AdaptiveWindow,
     totals: SchedulerTotals,
     expired: Vec<Query>,
     /// Admission-time grouping cost of windows that dispatched nothing
@@ -240,14 +447,24 @@ pub struct SessionScheduler<'a> {
 
 impl<'a> SessionScheduler<'a> {
     pub(crate) fn new(session: &'a mut Session, cfg: WindowConfig) -> SessionScheduler<'a> {
+        SessionScheduler::new_with(session, cfg, AdaptiveConfig::off())
+    }
+
+    pub(crate) fn new_with(
+        session: &'a mut Session,
+        base: WindowConfig,
+        adaptive: AdaptiveConfig,
+    ) -> SessionScheduler<'a> {
         let inc = session.incremental_params().map(|params| IncrementalState {
             grouper: IncrementalGrouper::new(params.theta, params.link, params.universe),
             params,
         });
+        let ctl = AdaptiveWindow::new(base, adaptive);
         SessionScheduler {
             session,
-            acc: WindowAccumulator::new(cfg),
+            acc: WindowAccumulator::new(ctl.current()),
             inc,
+            ctl,
             totals: SchedulerTotals::default(),
             expired: Vec::new(),
             carried_cost: Duration::ZERO,
@@ -331,10 +548,12 @@ impl<'a> SessionScheduler<'a> {
         if self.acc.is_empty() {
             return Ok(Vec::new());
         }
+        let now = Instant::now();
+        let waited = self.acc.open_for(now).unwrap_or_default();
         let window = self.acc.take();
+        let occupancy = window.len();
         self.totals.windows += 1;
         self.totals.pooled += window.len();
-        let now = Instant::now();
         let mut alive = Vec::with_capacity(window.len());
         let mut dead = 0usize;
         for pooled in window {
@@ -361,6 +580,7 @@ impl<'a> SessionScheduler<'a> {
                     // admission-time cost through — carry it into the next
                     // dispatched window instead of dropping it.
                     self.carried_cost = plan.grouping_cost;
+                    self.retune(occupancy, waited, plan.groups.len(), plan.grouping_cost);
                     return Ok(Vec::new());
                 }
                 let prepared: Vec<PreparedQuery> = alive
@@ -391,10 +611,15 @@ impl<'a> SessionScheduler<'a> {
                 if st.params.order == GroupOrder::Greedy {
                     reorder_groups_greedy(&mut plan);
                 }
+                self.retune(occupancy, waited, plan.groups.len(), plan.grouping_cost);
                 let (outcomes, _stats) = self.session.run_planned(&prepared, &plan)?;
                 Ok(outcomes)
             }
             None => {
+                // Flush-time policies expose no group count here; treat the
+                // window as ungroupable (groups == occupancy) so the
+                // controller never holds it past the static wait.
+                self.retune(occupancy, waited, occupancy, Duration::ZERO);
                 if alive.is_empty() {
                     return Ok(Vec::new());
                 }
@@ -417,6 +642,38 @@ impl<'a> SessionScheduler<'a> {
                 Ok(outcomes)
             }
         }
+    }
+
+    /// Feed one flushed window's observations to the adaptive controller
+    /// and apply the retuned bounds to the (now empty) accumulator. With
+    /// the controller disabled this is a no-op: `observe` returns the
+    /// unchanged static config and `set_config` re-applies it verbatim.
+    fn retune(
+        &mut self,
+        occupancy: usize,
+        waited: Duration,
+        groups: usize,
+        grouping_cost: Duration,
+    ) {
+        let fb = FlushFeedback {
+            occupancy,
+            waited,
+            groups,
+            // In-process pooling has one logical producer and no recv
+            // thread; those signals only exist on the wire path.
+            cross_conn_groups: 0,
+            grouping_cost,
+            recv_cost: Duration::ZERO,
+        };
+        let next = self.ctl.observe(&fb);
+        self.acc.set_config(next);
+    }
+
+    /// The adaptive window controller (static/disabled when constructed
+    /// via [`Session::scheduler`]). Exposes the effective window and the
+    /// adaptation counters.
+    pub fn controller(&self) -> &AdaptiveWindow {
+        &self.ctl
     }
 
     /// Queries whose deadline elapsed before their window flushed, drained
@@ -496,6 +753,122 @@ mod tests {
         let t0 = Instant::now();
         acc.push(1, t0);
         assert!(acc.is_full(), "clamped to 1: every push flushes");
+    }
+
+    #[test]
+    fn set_config_applies_to_open_window() {
+        let mut acc: WindowAccumulator<u32> = WindowAccumulator::new(WindowConfig {
+            max_queries: 10,
+            max_wait: Duration::from_millis(50),
+        });
+        let t0 = Instant::now();
+        acc.push(1, t0);
+        acc.push(2, t0);
+        assert!(!acc.ready(t0));
+        assert_eq!(acc.open_for(t0 + Duration::from_millis(7)), Some(Duration::from_millis(7)));
+        // Narrowing the size bound below the current occupancy makes the
+        // open window immediately full.
+        acc.set_config(WindowConfig { max_queries: 2, max_wait: Duration::from_millis(50) });
+        assert!(acc.is_full());
+        assert!(acc.ready(t0));
+        let _ = acc.take();
+        assert_eq!(acc.open_for(t0), None, "empty window has no open duration");
+        // The zero clamp survives retargeting.
+        acc.set_config(WindowConfig { max_queries: 0, max_wait: Duration::ZERO });
+        acc.push(3, t0);
+        assert!(acc.is_full(), "clamped to 1 after set_config");
+    }
+
+    fn fb(occupancy: usize, waited_ms: u64, groups: usize) -> FlushFeedback {
+        FlushFeedback {
+            occupancy,
+            waited: Duration::from_millis(waited_ms),
+            groups,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn adaptive_off_is_identity() {
+        // Even a base outside the clamps passes through untouched, and no
+        // feedback — however extreme — moves it or counts an adaptation.
+        let base = WindowConfig { max_queries: 5_000, max_wait: Duration::from_secs(9) };
+        let mut ctl = AdaptiveWindow::new(base, AdaptiveConfig::off());
+        assert_eq!(ctl.current(), base);
+        for occ in [0usize, 1, 100, 5_000, 50_000] {
+            assert_eq!(ctl.observe(&fb(occ, 1, 1)), base);
+        }
+        assert_eq!(ctl.counters(), (0, 0, 0));
+        assert!(!ctl.enabled());
+    }
+
+    #[test]
+    fn adaptive_widens_on_full_windows_and_narrows_on_sparse() {
+        let cfg = AdaptiveConfig { enabled: true, ..AdaptiveConfig::default() };
+        let base = WindowConfig { max_queries: 16, max_wait: Duration::from_millis(10) };
+        let mut ctl = AdaptiveWindow::new(base, cfg);
+        // Full window with grouping payoff: size doubles.
+        let next = ctl.observe(&fb(16, 10, 4));
+        assert_eq!(next.max_queries, 32);
+        // Nearly-empty windows walk the size back down to the floor.
+        for _ in 0..16 {
+            ctl.observe(&fb(1, 10, 1));
+        }
+        assert_eq!(ctl.current().max_queries, cfg.min_queries);
+        let (adaptations, widened, narrowed) = ctl.counters();
+        assert!(widened >= 1 && narrowed >= 1 && adaptations >= 2);
+    }
+
+    #[test]
+    fn adaptive_outputs_stay_within_clamps() {
+        let cfg = AdaptiveConfig {
+            enabled: true,
+            min_queries: 4,
+            max_queries: 64,
+            min_wait: Duration::from_millis(2),
+            max_wait: Duration::from_millis(40),
+        };
+        let base = WindowConfig { max_queries: 16, max_wait: Duration::from_millis(10) };
+        let mut ctl = AdaptiveWindow::new(base, cfg);
+        for occ in [64usize, 64, 64, 64, 1, 1, 1, 1, 1_000, 0, 3] {
+            let w = ctl.observe(&fb(occ, 1, 1));
+            assert!((cfg.min_queries..=cfg.max_queries).contains(&w.max_queries), "{w:?}");
+            assert!(w.max_wait >= cfg.min_wait && w.max_wait <= cfg.max_wait, "{w:?}");
+        }
+    }
+
+    #[test]
+    fn adaptive_wait_capped_at_base_without_grouping_payoff() {
+        let cfg = AdaptiveConfig { enabled: true, ..AdaptiveConfig::default() };
+        let base = WindowConfig { max_queries: 16, max_wait: Duration::from_millis(10) };
+        let mut ctl = AdaptiveWindow::new(base, cfg);
+        // Slow trickle, groups == occupancy (nothing merged): the desired
+        // wait is huge, but without payoff it may not exceed the static
+        // base wait.
+        let w = ctl.observe(&fb(2, 10, 2));
+        assert!(w.max_wait <= base.max_wait, "{w:?}");
+        // The same trickle WITH merge evidence may hold up to the clamp.
+        let w = ctl.observe(&fb(2, 10, 1));
+        assert!(w.max_wait > base.max_wait && w.max_wait <= cfg.max_wait, "{w:?}");
+    }
+
+    #[test]
+    fn adaptive_overhead_guard_backs_off() {
+        let cfg = AdaptiveConfig { enabled: true, ..AdaptiveConfig::default() };
+        let base = WindowConfig { max_queries: 64, max_wait: Duration::from_millis(10) };
+        let mut ctl = AdaptiveWindow::new(base, cfg);
+        // Half-full window (dead band for size) but grouping cost rivals
+        // the wait: the guard must narrow the window anyway.
+        let heavy = FlushFeedback {
+            occupancy: 32,
+            waited: Duration::from_millis(10),
+            groups: 8,
+            cross_conn_groups: 2,
+            grouping_cost: Duration::from_millis(4),
+            recv_cost: Duration::from_millis(1),
+        };
+        let next = ctl.observe(&heavy);
+        assert!(next.max_queries < base.max_queries, "{next:?}");
     }
 
     #[test]

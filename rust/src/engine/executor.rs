@@ -57,9 +57,76 @@ use crate::util::threadpool::ThreadPool;
 
 /// How many unique-cluster fetches may run ahead of the scoring cursor:
 /// enough to keep the workers busy, but bounded by half the cache so the
-/// pipeline cannot evict blocks it has not scored yet.
-fn fetch_window(io_workers: usize, cache_entries: usize) -> usize {
+/// pipeline cannot evict blocks it has not scored yet. This is the
+/// *static* seed; [`FetchTuner`] retunes the depth per executed group
+/// from observed pressure.
+pub(crate) fn fetch_window(io_workers: usize, cache_entries: usize) -> usize {
     io_workers.saturating_mul(2).min((cache_entries / 2).max(1))
+}
+
+/// AIMD tuner for the fetch-pipeline depth (ROADMAP carry-forward: watch
+/// the observed `rejected_inserts` / re-fetch rate instead of pinning the
+/// static `cache_entries / 2` bound forever).
+///
+/// The static bound is pessimistic: with ample cache it leaves the I/O
+/// workers underfed, and with heavy pin pressure it can still run too
+/// deep. The tuner starts each engine at the static seed and retunes per
+/// executed group from two pressure signals:
+///
+///  * the sharded cache's `rejected_inserts` counter moved — the pipeline
+///    (or the prefetcher it shares the cache with) fetched into fully
+///    pinned shards, so fetched blocks are being dropped;
+///  * the group re-fetched a cluster on a later touch (a block the
+///    pipeline paid to read was evicted before scoring finished with it —
+///    the window outran the cache).
+///
+/// Pressure halves the depth (multiplicative decrease); a clean group
+/// grows it by one (additive increase) up to `cap` — one less than the
+/// cache, so the pipeline can never flood the whole cache even when
+/// pressure-free. Groups that error out mid-execution simply skip the
+/// observation. With `io_workers <= 1` the parallel executor never runs
+/// and the tuner stays untouched, preserving the sequential path bit for
+/// bit.
+#[derive(Debug, Clone, Copy, Default)]
+pub(crate) struct FetchTuner {
+    /// Current depth; 0 = no group executed yet (the first group seeds
+    /// from the static bound).
+    window: usize,
+    /// Cache-wide rejected-insert total at the last observation, so each
+    /// group is judged on the counter's *delta*.
+    last_rejected: u64,
+}
+
+impl FetchTuner {
+    /// Depth for the next group: seeded from the static `base`, then
+    /// whatever the AIMD loop last settled on, clamped to `[1, cap]`.
+    pub(crate) fn window(&mut self, base: usize, cap: usize) -> usize {
+        if self.window == 0 {
+            self.window = base;
+        }
+        self.window = self.window.clamp(1, cap.max(1));
+        self.window
+    }
+
+    /// The settled depth, or 0 if no parallel group has run yet.
+    pub(crate) fn current(&self) -> usize {
+        self.window
+    }
+
+    /// Feed one executed group's evidence: the cache's lifetime
+    /// rejected-insert total and this group's later-touch re-fetch count.
+    pub(crate) fn observe(&mut self, rejected_total: u64, refetches: u64, cap: usize) {
+        let pressured = rejected_total > self.last_rejected || refetches > 0;
+        self.last_rejected = rejected_total;
+        if self.window == 0 {
+            return;
+        }
+        self.window = if pressured {
+            (self.window / 2).max(1)
+        } else {
+            (self.window + 1).min(cap.max(1))
+        };
+    }
 }
 
 /// Execute one group of prepared queries. `before_member(i)` /
@@ -124,12 +191,17 @@ struct FetchPipeline<'a> {
 }
 
 impl<'a> FetchPipeline<'a> {
-    fn new(engine: &SearchEngine, pool: &'a ThreadPool, uniq: Vec<u32>) -> FetchPipeline<'a> {
+    fn new(
+        engine: &SearchEngine,
+        pool: &'a ThreadPool,
+        uniq: Vec<u32>,
+        window: usize,
+    ) -> FetchPipeline<'a> {
         let (tx, rx) = mpsc::channel();
         FetchPipeline {
             pool,
             uniq,
-            window: fetch_window(engine.cfg.io_workers, engine.cfg.cache_entries),
+            window,
             issued: 0,
             index: Arc::clone(&engine.index),
             cache: Arc::clone(&engine.cache),
@@ -198,9 +270,17 @@ where
         }
     }
 
-    let mut pipeline = FetchPipeline::new(engine, pool, uniq);
+    // Pipeline depth: the AIMD-tuned window, capped one below the cache
+    // so even a pressure-free pipeline cannot flood every entry.
+    let base = fetch_window(engine.cfg.io_workers, engine.cfg.cache_entries);
+    let cap = engine.cfg.cache_entries.saturating_sub(1).max(1);
+    let depth = engine.fetch_tuner.window(base, cap);
+    let mut pipeline = FetchPipeline::new(engine, pool, uniq, depth);
     let mut consumed = 0usize; // unique clusters consumed by scoring
     pipeline.top_up(consumed);
+    // Later-touch misses: blocks the pipeline fetched but the cache lost
+    // before scoring got there — the tuner's re-fetch pressure signal.
+    let mut refetches = 0u64;
 
     // Amortized share of each group-missed cluster's simulated disk time,
     // charged to every member that probes it.
@@ -269,6 +349,7 @@ where
                     report.bytes_read += outcome.bytes_read;
                     io_share += outcome.simulated;
                     paid_own_read = true;
+                    refetches += 1;
                 }
                 block = outcome.block;
             }
@@ -289,6 +370,8 @@ where
         after_member(mi);
         out.push((report, topk.into_sorted()));
     }
+    let rejected_total = engine.cache.stats().rejected_inserts;
+    engine.fetch_tuner.observe(rejected_total, refetches, cap);
     Ok(out)
 }
 
@@ -305,6 +388,38 @@ mod tests {
         assert_eq!(fetch_window(8, 6), 3);
         assert_eq!(fetch_window(8, 1), 1, "never zero");
         assert_eq!(fetch_window(4, 100), 8);
+    }
+
+    #[test]
+    fn fetch_tuner_aimd_grows_clean_and_halves_under_pressure() {
+        let mut t = FetchTuner::default();
+        assert_eq!(t.current(), 0, "untouched until the first group");
+        // Seeds from the static base, clamped by the cap.
+        assert_eq!(t.window(8, 31), 8);
+        // Clean groups: +1 per group up to the cap.
+        for want in [9, 10, 11] {
+            t.observe(0, 0, 31);
+            assert_eq!(t.window(8, 31), want);
+        }
+        for _ in 0..40 {
+            t.observe(0, 0, 31);
+        }
+        assert_eq!(t.window(8, 31), 31, "additive growth stops at the cap");
+        // A rejected-insert delta halves; an unchanged total does not.
+        t.observe(5, 0, 31);
+        assert_eq!(t.window(8, 31), 15);
+        t.observe(5, 0, 31);
+        assert_eq!(t.window(8, 31), 16, "same total = no new rejections");
+        // Re-fetches halve too, and the floor is 1.
+        for _ in 0..8 {
+            t.observe(5, 3, 31);
+        }
+        assert_eq!(t.window(8, 31), 1, "never zero");
+        // A shrunken cap re-clamps whatever the loop settled on.
+        for _ in 0..40 {
+            t.observe(5, 0, 31);
+        }
+        assert_eq!(t.window(8, 4), 4);
     }
 
     #[test]

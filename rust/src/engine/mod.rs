@@ -200,6 +200,11 @@ pub struct SearchEngine {
     /// resizes it to the block at hand). Scoring stays on the dispatch
     /// thread in both execution modes, so one buffer per engine suffices.
     pub(crate) score_scratch: Vec<f32>,
+    /// AIMD depth tuner for the parallel executor's fetch pipeline:
+    /// retunes per executed group from observed `rejected_inserts` /
+    /// re-fetch pressure instead of pinning the static
+    /// `min(2·io_workers, cache_entries/2)` bound.
+    pub(crate) fetch_tuner: executor::FetchTuner,
 }
 
 impl SearchEngine {
@@ -285,7 +290,19 @@ impl SearchEngine {
             pin_owner: crate::cache::next_pin_owner(),
             io_pool,
             score_scratch: Vec::new(),
+            fetch_tuner: executor::FetchTuner::default(),
         })
+    }
+
+    /// The fetch-pipeline depth the next parallel group will run with: the
+    /// AIMD-settled depth once a group has executed, else the static seed.
+    /// Purely observational (tests and stats); `io_workers <= 1` engines
+    /// never execute a parallel group, so they always report the seed.
+    pub fn effective_fetch_window(&self) -> usize {
+        match self.fetch_tuner.current() {
+            0 => executor::fetch_window(self.cfg.io_workers, self.cfg.cache_entries),
+            depth => depth,
+        }
     }
 
     /// The pin-owner token this engine (and its prefetcher) pins under.

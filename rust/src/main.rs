@@ -19,10 +19,15 @@
 //! `--policy` selects a schedule policy by name (`--mode` is the legacy
 //! spelling and keeps working); all serving goes through `session::Session`.
 //!
-//! Config: `--config <file.json>` loads a JSON config; any config key can be
-//! overridden with `--set key=value` (repeatable via comma list). Frequent
-//! keys also have first-class flags: --theta, --nprobe, --cache-entries,
-//! --cache-policy, --backend, --disk-profile, --seed.
+//! Config: layered precedence **file < env < CLI** (the usual ops
+//! convention): `--config <file.json>` loads a JSON config, then any
+//! `CAGR_CFG_<KEY>` environment variable overrides that key (e.g.
+//! `CAGR_CFG_THETA=0.4`, `CAGR_CFG_ADAPTIVE_WINDOW=on`), then CLI flags
+//! override both. Any config key can be set with `--set key=value`
+//! (repeatable via comma list). Frequent keys also have first-class flags:
+//! --theta, --nprobe, --cache-entries, --cache-policy, --backend,
+//! --disk-profile, --seed, --adaptive-window, --adaptive-min-queries,
+//! --adaptive-max-queries, --adaptive-min-wait-ms, --adaptive-max-wait-ms.
 
 use cagr::config::Config;
 use cagr::coordinator::Mode;
@@ -50,11 +55,34 @@ fn usage() -> &'static str {
      run `cagr <subcommand> --help` conceptually: see README.md for options"
 }
 
+/// Apply `CAGR_CFG_<KEY>` environment overrides — the middle layer of the
+/// file < env < CLI precedence chain. Variables are applied in sorted key
+/// order so the outcome never depends on environment iteration order; an
+/// unknown key is an error (same contract as `--set`).
+fn apply_env_overrides(
+    cfg: &mut Config,
+    vars: impl Iterator<Item = (String, String)>,
+) -> anyhow::Result<()> {
+    let mut overrides: Vec<(String, String)> = vars
+        .filter_map(|(k, v)| {
+            k.strip_prefix("CAGR_CFG_").map(|key| (key.to_ascii_lowercase(), v))
+        })
+        .collect();
+    overrides.sort();
+    for (key, value) in overrides {
+        cfg.set(&key, &value)
+            .map_err(|e| anyhow::anyhow!("env CAGR_CFG_{}: {e}", key.to_ascii_uppercase()))?;
+    }
+    Ok(())
+}
+
 fn load_config(args: &Args) -> anyhow::Result<Config> {
     let mut cfg = match args.get("config") {
         Some(path) => Config::from_file(std::path::Path::new(path))?,
         None => Config::default(),
     };
+    // Environment layer: overrides the file, is overridden by flags.
+    apply_env_overrides(&mut cfg, std::env::vars())?;
     // First-class flags.
     for (flag, key) in [
         ("theta", "theta"),
@@ -71,6 +99,11 @@ fn load_config(args: &Args) -> anyhow::Result<Config> {
         ("artifacts-dir", "artifacts_dir"),
         ("semcache-capacity", "semcache_capacity"),
         ("semcache-threshold", "semcache_threshold"),
+        ("adaptive-window", "adaptive_window"),
+        ("adaptive-min-queries", "adaptive_min_queries"),
+        ("adaptive-max-queries", "adaptive_max_queries"),
+        ("adaptive-min-wait-ms", "adaptive_min_wait_ms"),
+        ("adaptive-max-wait-ms", "adaptive_max_wait_ms"),
     ] {
         if let Some(v) = args.get(flag) {
             cfg.set(key, v)?;
@@ -195,6 +228,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             .max(1),
         drain_timeout: args.get_duration("drain-timeout", defaults.drain_timeout)?,
         semcache: cfg.semcache(),
+        adaptive: cagr::coordinator::AdaptiveConfig::from_config(&cfg),
     };
     let (max_inflight, max_per_conn, window_q) = (
         server_cfg.max_inflight,
@@ -207,9 +241,20 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     } else {
         "off".to_string()
     };
+    let adaptive_desc = if cfg.adaptive_window {
+        format!(
+            "on [{}..{}]q/[{}..{}]ms",
+            cfg.adaptive_min_queries,
+            cfg.adaptive_max_queries,
+            cfg.adaptive_min_wait_ms,
+            cfg.adaptive_max_wait_ms
+        )
+    } else {
+        "off".to_string()
+    };
     println!(
         "cagr serving {} on {} (proto=v{}, policy={}, cache={}x{}, theta={}, lanes={}, \
-         io-workers={}, window={}q, max-inflight={} (per-conn {}), semcache={})",
+         io-workers={}, window={}q, adaptive={}, max-inflight={} (per-conn {}), semcache={})",
         spec.name,
         handle.addr,
         cagr::proto::PROTOCOL_VERSION,
@@ -220,6 +265,7 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         lanes,
         cfg.io_workers,
         window_q,
+        adaptive_desc,
         max_inflight,
         max_per_conn,
         semcache_desc
@@ -277,6 +323,14 @@ fn cmd_client(args: &Args) -> anyhow::Result<()> {
             g.groups,
             g.cross_conn_groups,
             g.express,
+        );
+        println!(
+            "  window: effective={}q/{:.1}ms adaptations={} (widened={} narrowed={})",
+            g.window_limit,
+            g.window_wait_us as f64 / 1_000.0,
+            g.adaptations,
+            g.widened,
+            g.narrowed,
         );
         if let Some(sc) = &s.semcache {
             println!(
@@ -512,5 +566,41 @@ fn print_run_summary(name: &str, result: &runner::RunResult) {
             result.groups_total,
             result.grouping_cost.as_secs_f64() * 1e3
         );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The env layer of the file < env < CLI precedence chain: only
+    /// `CAGR_CFG_*` variables apply, keys are case-normalized, values are
+    /// applied in sorted key order, and unknown keys are hard errors
+    /// naming the offending variable.
+    #[test]
+    fn env_overrides_apply_between_file_and_flags() {
+        let mut cfg = Config::default();
+        cfg.set("theta", "0.3").unwrap(); // the "file" layer
+        let vars = vec![
+            ("CAGR_CFG_THETA".to_string(), "0.7".to_string()),
+            ("CAGR_CFG_ADAPTIVE_WINDOW".to_string(), "on".to_string()),
+            ("CAGR_CFG_ADAPTIVE_MAX_QUERIES".to_string(), "256".to_string()),
+            // Non-config environment noise must be ignored, including the
+            // bench/test smoke knobs that share the CAGR_ prefix.
+            ("CAGR_FIG6_SMOKE".to_string(), "1".to_string()),
+            ("PATH".to_string(), "/usr/bin".to_string()),
+        ];
+        apply_env_overrides(&mut cfg, vars.into_iter()).unwrap();
+        assert!((cfg.theta - 0.7).abs() < 1e-12, "env overrides the file layer");
+        assert!(cfg.adaptive_window);
+        assert_eq!(cfg.adaptive_max_queries, 256);
+        // The CLI layer (cfg.set from flags) overrides env in load_config;
+        // the same call applied afterwards models that ordering.
+        cfg.set("theta", "0.9").unwrap();
+        assert!((cfg.theta - 0.9).abs() < 1e-12, "flags override env");
+
+        let bad = vec![("CAGR_CFG_NO_SUCH_KEY".to_string(), "1".to_string())];
+        let err = apply_env_overrides(&mut cfg, bad.into_iter()).unwrap_err().to_string();
+        assert!(err.contains("CAGR_CFG_NO_SUCH_KEY"), "{err}");
     }
 }

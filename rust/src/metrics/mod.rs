@@ -82,6 +82,18 @@ pub struct WindowGauges {
     /// recv loop whose cost decides whether the scheduler needs sharding
     /// (ROADMAP: measure before sharding).
     pub recv_loop_cost_us: u64,
+    /// Effective pooling-window size bound right now: the static config,
+    /// or the adaptive controller's latest output when `adaptive_window`
+    /// is on.
+    pub window_limit: u64,
+    /// Effective pooling-window wait bound right now, microseconds.
+    pub window_wait_us: u64,
+    /// Adaptive-controller retunes applied (0 when `adaptive_window=off`).
+    pub adaptations: u64,
+    /// Retunes that widened the window (size or wait).
+    pub widened: u64,
+    /// Retunes that narrowed the window (size or wait).
+    pub narrowed: u64,
 }
 
 impl WindowGauges {
@@ -119,6 +131,22 @@ impl WindowGauges {
         self.recv_loop_cost_us += cost.as_micros() as u64;
     }
 
+    /// Publish the effective window bounds (called once at startup with
+    /// the static window, then per retune by the adaptive controller, so
+    /// `stats` always reports what the scheduler is actually running).
+    pub fn set_effective_window(&mut self, max_queries: usize, max_wait: Duration) {
+        self.window_limit = max_queries as u64;
+        self.window_wait_us = max_wait.as_micros() as u64;
+    }
+
+    /// Publish the adaptive controller's lifetime counters (absolute
+    /// values, not deltas — the controller owns the running totals).
+    pub fn record_adaptation(&mut self, adaptations: u64, widened: u64, narrowed: u64) {
+        self.adaptations = adaptations;
+        self.widened = widened;
+        self.narrowed = narrowed;
+    }
+
     /// Mean queries per window (0 when no window was dispatched yet).
     pub fn mean_occupancy(&self) -> f64 {
         if self.windows == 0 {
@@ -144,6 +172,11 @@ impl WindowGauges {
             ("express", Json::Num(self.express as f64)),
             ("grouping_cost_us", Json::Num(self.grouping_cost_us as f64)),
             ("recv_loop_cost_us", Json::Num(self.recv_loop_cost_us as f64)),
+            ("window_limit", Json::Num(self.window_limit as f64)),
+            ("window_wait_us", Json::Num(self.window_wait_us as f64)),
+            ("adaptations", Json::Num(self.adaptations as f64)),
+            ("widened", Json::Num(self.widened as f64)),
+            ("narrowed", Json::Num(self.narrowed as f64)),
         ])
     }
 }
@@ -400,6 +433,12 @@ mod tests {
         assert_eq!(g.grouping_cost_us, 150);
         assert_eq!(g.recv_loop_cost_us, 45);
         assert!((g.mean_occupancy() - 6.0).abs() < 1e-12);
+        // Effective-window gauges overwrite (state, not accumulation).
+        g.set_effective_window(100, Duration::from_millis(10));
+        g.set_effective_window(250, Duration::from_micros(2_500));
+        g.record_adaptation(3, 2, 1);
+        assert_eq!((g.window_limit, g.window_wait_us), (250, 2_500));
+        assert_eq!((g.adaptations, g.widened, g.narrowed), (3, 2, 1));
     }
 
     #[test]

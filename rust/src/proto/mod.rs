@@ -684,6 +684,12 @@ fn parse_window_gauges(v: &Json) -> WindowGauges {
         express: n("express"),
         grouping_cost_us: n("grouping_cost_us"),
         recv_loop_cost_us: n("recv_loop_cost_us"),
+        // Additive fields (PR 7): absent on older servers → default 0.
+        window_limit: n("window_limit"),
+        window_wait_us: n("window_wait_us"),
+        adaptations: n("adaptations"),
+        widened: n("widened"),
+        narrowed: n("narrowed"),
     }
 }
 
@@ -840,6 +846,11 @@ mod tests {
                     express: 2,
                     grouping_cost_us: 740,
                     recv_loop_cost_us: 95,
+                    window_limit: 128,
+                    window_wait_us: 7_500,
+                    adaptations: 6,
+                    widened: 4,
+                    narrowed: 2,
                 },
                 semcache: Some(SemCacheStats {
                     probes: 12,

@@ -65,7 +65,10 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::scheduler::{bypasses_window, WindowAccumulator, WindowConfig};
+use crate::coordinator::scheduler::{
+    bypasses_window, AdaptiveConfig, AdaptiveWindow, FlushFeedback, WindowAccumulator,
+    WindowConfig,
+};
 use crate::metrics::WindowGauges;
 use crate::proto::{
     self, ErrorCode, ErrorReply, Reply, Request, SearchReply, SearchRequest, PROTOCOL_VERSION,
@@ -101,6 +104,11 @@ pub struct ServerConfig {
     /// it. The server-owned cache replaces any session-private one the
     /// factory may have attached, so all lanes always share one view.
     pub semcache: crate::semcache::SemCacheConfig,
+    /// Adaptive window controller: retunes `window_max_wait` /
+    /// `window_max_queries` per flush from observed arrival rate and the
+    /// grouping gauges, within configured clamps. Disabled by default —
+    /// the static window runs bit-for-bit.
+    pub adaptive: AdaptiveConfig,
 }
 
 impl Default for ServerConfig {
@@ -114,6 +122,7 @@ impl Default for ServerConfig {
             max_inflight_per_conn: 256,
             drain_timeout: Duration::from_secs(5),
             semcache: Default::default(),
+            adaptive: AdaptiveConfig::off(),
         }
     }
 }
@@ -438,9 +447,19 @@ where
     };
     let sched_state = Arc::clone(&state);
     let sched_jobs = Arc::clone(&jobs);
+    let adaptive_cfg = cfg.adaptive;
     let scheduler_thread = std::thread::Builder::new()
         .name("cagr-scheduler".to_string())
-        .spawn(move || scheduler_loop(work_rx, &sched_jobs, &sched_state, window_cfg, session_top_k))
+        .spawn(move || {
+            scheduler_loop(
+                work_rx,
+                &sched_jobs,
+                &sched_state,
+                window_cfg,
+                adaptive_cfg,
+                session_top_k,
+            )
+        })
         .expect("spawn scheduler thread");
 
     // Accept thread: one handler thread per connection; every handler
@@ -516,22 +535,36 @@ fn scheduler_loop(
     jobs: &JobQueue,
     state: &ServerState,
     window_cfg: WindowConfig,
+    adaptive_cfg: AdaptiveConfig,
     session_top_k: usize,
 ) {
-    let mut acc: WindowAccumulator<Work> = WindowAccumulator::new(window_cfg);
-    let max_wait = window_cfg.max_wait;
+    // The adaptive controller owns the effective window bounds; disabled
+    // (the default) it is a constant returning `window_cfg`, so the static
+    // scheduler runs bit-for-bit.
+    let mut ctl = AdaptiveWindow::new(window_cfg, adaptive_cfg);
+    let mut acc: WindowAccumulator<Work> = WindowAccumulator::new(ctl.current());
+    // Grouping-gauge snapshots from the previous flush, for delta-based
+    // controller feedback.
+    let (mut last_groups, mut last_cross, mut last_gcost) = (0u64, 0u64, 0u64);
+    {
+        // `stats` reports the effective window even before any traffic.
+        let cur = ctl.current();
+        state.gauges.lock().unwrap().set_effective_window(cur.max_queries, cur.max_wait);
+    }
     // Time this thread actually spends classifying/pooling (not blocked in
     // recv): accumulated per item and flushed into the `recv_loop_cost_us`
     // gauge when a window dispatches — the ROADMAP's "measure the recv
     // loop before sharding it" number. Express classification cost folds
     // into the next dispatched window's figure.
     let recv_cost: std::cell::Cell<Duration> = std::cell::Cell::new(Duration::ZERO);
-    // Route one admitted request: express traffic skips the window.
+    // Route one admitted request: express traffic skips the window. The
+    // bypass check uses the *effective* wait bound so a widened window
+    // diverts the deadlines it would now starve.
     let classify = |acc: &mut WindowAccumulator<Work>, work: Work, now: Instant| {
         let t0 = Instant::now();
         let waited = now.duration_since(work.received_at);
         if wants_bypass(&work.request, session_top_k)
-            || bypasses_window(work.request.options.deadline_ms, waited, max_wait)
+            || bypasses_window(work.request.options.deadline_ms, waited, acc.config().max_wait)
         {
             state.gauges.lock().unwrap().record_express();
             jobs.push(Job::Express(work));
@@ -562,7 +595,35 @@ fn scheduler_loop(
             || state.draining.load(Ordering::SeqCst)
             || state.shutdown.load(Ordering::SeqCst);
         if flush_now {
-            state.gauges.lock().unwrap().record_recv_cost(recv_cost.take());
+            let occupancy = acc.len();
+            let waited = acc.open_for(now).unwrap_or_default();
+            let spent = recv_cost.take();
+            {
+                let mut g = state.gauges.lock().unwrap();
+                g.record_recv_cost(spent);
+                // Grouping-quality signals are written by lane threads
+                // after dispatch, so the deltas read here describe
+                // previously dispatched windows — one-window-lagged
+                // feedback, fine for a controller that only shapes the
+                // NEXT window.
+                let fb = FlushFeedback {
+                    occupancy,
+                    waited,
+                    groups: g.groups.saturating_sub(last_groups) as usize,
+                    cross_conn_groups: g.cross_conn_groups.saturating_sub(last_cross) as usize,
+                    grouping_cost: Duration::from_micros(
+                        g.grouping_cost_us.saturating_sub(last_gcost),
+                    ),
+                    recv_cost: spent,
+                };
+                (last_groups, last_cross, last_gcost) =
+                    (g.groups, g.cross_conn_groups, g.grouping_cost_us);
+                let next = ctl.observe(&fb);
+                acc.set_config(next);
+                g.set_effective_window(next.max_queries, next.max_wait);
+                let (adaptations, widened, narrowed) = ctl.counters();
+                g.record_adaptation(adaptations, widened, narrowed);
+            }
             jobs.push(Job::Window(acc.take()));
             continue;
         }

@@ -34,7 +34,7 @@ use std::time::Duration;
 
 use crate::cache::{CacheStats, ShardedClusterCache};
 use crate::config::Config;
-use crate::coordinator::scheduler::{SessionScheduler, WindowConfig};
+use crate::coordinator::scheduler::{AdaptiveConfig, SessionScheduler, WindowConfig};
 use crate::coordinator::{
     BatchStats, Coordinator, GroupPlan, IncrementalParams, Mode, QueryOutcome, SchedulePolicy,
 };
@@ -340,6 +340,19 @@ impl Session {
     /// logical sources and you want grouping quality to rise with traffic.
     pub fn scheduler(&mut self, window: WindowConfig) -> SessionScheduler<'_> {
         SessionScheduler::new(self, window)
+    }
+
+    /// Like [`Session::scheduler`], with the adaptive window controller
+    /// attached: the pooling window retunes itself per flush from observed
+    /// arrival rate and grouping feedback, within `adaptive`'s clamps.
+    /// `adaptive.enabled == false` reproduces [`Session::scheduler`]
+    /// bit-for-bit (pinned by `rust/tests/adaptive.rs`).
+    pub fn scheduler_with(
+        &mut self,
+        window: WindowConfig,
+        adaptive: AdaptiveConfig,
+    ) -> SessionScheduler<'_> {
+        SessionScheduler::new_with(self, window, adaptive)
     }
 
     /// Enqueue one query without doing any work (non-blocking).

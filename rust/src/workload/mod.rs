@@ -21,6 +21,7 @@
 //!    the same template/topic latents (fast path for tests and benches).
 
 pub mod repeat;
+pub mod scenario;
 pub mod tokens;
 pub mod trace;
 pub mod traffic;

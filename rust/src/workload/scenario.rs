@@ -1,0 +1,404 @@
+//! Deterministic serving scenarios: seeded arrival traces that stress the
+//! scheduler the way production traffic does (ROADMAP item 5 / the CALL
+//! direction in PAPERS.md).
+//!
+//! A [`ScenarioTrace`] is a replayable sequence of [`Arrival`]s — a query,
+//! a logical source connection, and a virtual arrival offset — so the same
+//! trace can drive the in-process [`SessionScheduler`]
+//! (`rust/tests/adaptive.rs`), the TCP stack, or a bench, and two runs with
+//! the same seed see byte-identical traffic. Five scenarios ship:
+//!
+//! * **diurnal** — a triangle load curve: sparse at the edges, a dense
+//!   peak mid-trace (the daily traffic wave compressed into one trace).
+//! * **flash-crowd** — a steady trickle interrupted by a burst of
+//!   near-duplicate queries about one hot template/topic (everyone asks
+//!   about the same breaking event at once).
+//! * **topic-drift** — constant rate, but the topical focus (and hence
+//!   cluster popularity) slides across the topic space over the trace.
+//! * **slow-client** — fast connections interleaved with one client whose
+//!   arrivals stall for long gaps (the backpressure shape: a consumer that
+//!   cannot keep up still trickles queries in).
+//! * **drain-resume** — a steady trace carrying a mid-trace restart marker
+//!   ([`ScenarioTrace::drain_at`]): the driver drains, tears the scheduler
+//!   down, and resumes — no admitted query may be lost across the seam.
+//!
+//! Content composes with the existing generators: [`trace`] synthesizes
+//! scenario-appropriate queries (fresh ids offset at `spec.n_queries`,
+//! same contract as [`super::repeat`]), while [`pace`] wraps *any* query
+//! stream — e.g. [`super::repeat::repeated_trace`] output or
+//! [`super::traffic::batches`] flattened — in a scenario's arrival pacing.
+//!
+//! [`SessionScheduler`]: crate::coordinator::scheduler::SessionScheduler
+
+use std::time::Duration;
+
+use crate::util::rng::Rng;
+
+use super::{tokens, DatasetSpec, Query};
+
+/// The five shipped scenarios.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scenario {
+    Diurnal,
+    FlashCrowd,
+    TopicDrift,
+    SlowClient,
+    DrainResume,
+}
+
+impl Scenario {
+    pub fn all() -> [Scenario; 5] {
+        [
+            Scenario::Diurnal,
+            Scenario::FlashCrowd,
+            Scenario::TopicDrift,
+            Scenario::SlowClient,
+            Scenario::DrainResume,
+        ]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Scenario::Diurnal => "diurnal",
+            Scenario::FlashCrowd => "flash-crowd",
+            Scenario::TopicDrift => "topic-drift",
+            Scenario::SlowClient => "slow-client",
+            Scenario::DrainResume => "drain-resume",
+        }
+    }
+
+    /// Per-scenario salt so trace content and pacing draw from disjoint
+    /// seeded streams even under one [`ScenarioConfig::seed`].
+    fn salt(self) -> u64 {
+        match self {
+            Scenario::Diurnal => 0xD10_41,
+            Scenario::FlashCrowd => 0xF1A_5C,
+            Scenario::TopicDrift => 0x70_D81F,
+            Scenario::SlowClient => 0x510_C11,
+            Scenario::DrainResume => 0xD8A1_4E,
+        }
+    }
+}
+
+/// One arrival: a query, its logical source connection, and its virtual
+/// offset from trace start.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Arrival {
+    pub query: Query,
+    pub conn: usize,
+    pub at: Duration,
+}
+
+/// A named, seeded, replayable arrival trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioTrace {
+    pub name: &'static str,
+    pub arrivals: Vec<Arrival>,
+    /// Arrival index at which the drain→resume restart happens (the
+    /// drain-resume scenario only): the driver flushes, tears the
+    /// scheduler down, and resumes from this index.
+    pub drain_at: Option<usize>,
+}
+
+impl ScenarioTrace {
+    /// Arrival indices whose gap from the previous arrival is at least
+    /// `gap` — the points where a real scheduler's wait bound would have
+    /// elapsed, so a virtual-time driver flushes its open window *before*
+    /// submitting these.
+    pub fn breaks(&self, gap: Duration) -> Vec<usize> {
+        self.arrivals
+            .windows(2)
+            .enumerate()
+            .filter(|(_, w)| w[1].at.saturating_sub(w[0].at) >= gap)
+            .map(|(i, _)| i + 1)
+            .collect()
+    }
+
+    /// Virtual length of the trace (offset of the last arrival).
+    pub fn duration(&self) -> Duration {
+        self.arrivals.last().map(|a| a.at).unwrap_or_default()
+    }
+}
+
+/// Knobs shared by every scenario generator.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioConfig {
+    /// Trace length in queries.
+    pub n_queries: usize,
+    /// Logical source connections (slow-client reserves conn 0 as the
+    /// slow one; at least 2 are used there).
+    pub conns: usize,
+    pub seed: u64,
+}
+
+impl Default for ScenarioConfig {
+    fn default() -> Self {
+        ScenarioConfig { n_queries: 256, conns: 8, seed: 0x5CE_A71 }
+    }
+}
+
+/// Generate `scenario`'s full trace over `spec`: scenario-appropriate
+/// query content (fresh ids offset at `spec.n_queries`, so they never
+/// alias the [`super::generate_queries`] stream) wrapped in the
+/// scenario's arrival pacing via [`pace`].
+pub fn trace(spec: &DatasetSpec, scenario: Scenario, cfg: &ScenarioConfig) -> ScenarioTrace {
+    let mut rng = Rng::new(cfg.seed).derive(scenario.salt());
+    let n = cfg.n_queries;
+    let window = (spec.n_topics / 4).max(1);
+    let mut queries = Vec::with_capacity(n);
+    // Flash crowd: the middle third re-asks one hot template/topic.
+    let (burst_lo, burst_hi) = (n / 3, 2 * n / 3);
+    let hot_template = rng.range(0, spec.n_templates);
+    let hot_topic = rng.range(0, spec.n_topics);
+    for i in 0..n {
+        let id = spec.n_queries + i;
+        let (template, topic) = match scenario {
+            Scenario::TopicDrift => {
+                // The focus slides across the whole topic space over the
+                // trace; queries draw zipf-near it — cluster popularity
+                // shifts mid-run.
+                let focus = i * spec.n_topics / n.max(1);
+                (
+                    rng.range(0, spec.n_templates),
+                    (focus + rng.zipf(window, spec.topic_zipf_s)) % spec.n_topics,
+                )
+            }
+            Scenario::FlashCrowd if (burst_lo..burst_hi).contains(&i) => {
+                // Near-duplicates of the hot query: fresh ids (fresh
+                // noise draws), shared latents — maximally groupable.
+                (hot_template, hot_topic)
+            }
+            _ => (
+                rng.range(0, spec.n_templates),
+                rng.zipf(spec.n_topics, spec.topic_zipf_s),
+            ),
+        };
+        queries.push(Query {
+            id,
+            template,
+            topic,
+            tokens: tokens::query_tokens(spec, id, template, topic),
+        });
+    }
+    pace(queries, scenario, cfg)
+}
+
+/// Wrap any query stream in `scenario`'s arrival pacing (connection
+/// assignment + virtual inter-arrival gaps). Content is untouched, so
+/// this composes with [`super::repeat::repeated_trace`] and
+/// [`super::traffic::batches`] output directly.
+pub fn pace(queries: Vec<Query>, scenario: Scenario, cfg: &ScenarioConfig) -> ScenarioTrace {
+    let mut rng = Rng::new(cfg.seed).derive(scenario.salt() ^ 0xBACE_D0);
+    let n = queries.len();
+    let conns = cfg.conns.max(1);
+    let mut arrivals = Vec::with_capacity(n);
+    let mut at = Duration::ZERO;
+    let (burst_lo, burst_hi) = (n / 3, 2 * n / 3);
+    for (i, query) in queries.into_iter().enumerate() {
+        let (gap_us, conn) = match scenario {
+            Scenario::Diurnal => {
+                // Triangle rate: inter-arrival gap interpolates from the
+                // trough (20 ms) at the edges to the peak (200 µs) at the
+                // middle of the trace.
+                let half = (n / 2).max(1);
+                let dist = i.abs_diff(half); // 0 at peak .. half at edges
+                let gap = 200 + (20_000 - 200) * dist as u64 / half as u64;
+                (gap, rng.range(0, conns))
+            }
+            Scenario::FlashCrowd => {
+                let gap = if (burst_lo..burst_hi).contains(&i) { 50 } else { 5_000 };
+                (gap, rng.range(0, conns))
+            }
+            Scenario::TopicDrift => (2_000, rng.range(0, conns)),
+            Scenario::SlowClient => {
+                // Conn 0 is the slow client: rare arrivals, each preceded
+                // by a long stall; everyone else streams fast.
+                if conns >= 2 && rng.range(0, 10) == 0 {
+                    (10_000, 0)
+                } else if conns >= 2 {
+                    (300, 1 + rng.range(0, conns - 1))
+                } else {
+                    (300, 0)
+                }
+            }
+            Scenario::DrainResume => (1_000, rng.range(0, conns)),
+        };
+        at += Duration::from_micros(gap_us);
+        arrivals.push(Arrival { query, conn, at });
+    }
+    let drain_at = match scenario {
+        Scenario::DrainResume if n > 0 => Some(n / 2),
+        _ => None,
+    };
+    ScenarioTrace { name: scenario.name(), arrivals, drain_at }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+
+    fn spec() -> DatasetSpec {
+        DatasetSpec::tiny(3)
+    }
+
+    #[test]
+    fn deterministic_given_seed_and_distinct_across_seeds() {
+        let s = spec();
+        let cfg = ScenarioConfig::default();
+        for sc in Scenario::all() {
+            let a = trace(&s, sc, &cfg);
+            let b = trace(&s, sc, &cfg);
+            assert_eq!(a, b, "{}: same seed must replay byte-identically", sc.name());
+            let c = trace(&s, sc, &ScenarioConfig { seed: cfg.seed ^ 1, ..cfg.clone() });
+            assert_ne!(a, c, "{}: a different seed must change the trace", sc.name());
+        }
+    }
+
+    #[test]
+    fn arrivals_are_monotone_latents_in_range_ids_offset() {
+        let s = spec();
+        let cfg = ScenarioConfig::default();
+        for sc in Scenario::all() {
+            let t = trace(&s, sc, &cfg);
+            assert_eq!(t.arrivals.len(), cfg.n_queries);
+            assert_eq!(t.name, sc.name());
+            let mut prev = Duration::ZERO;
+            for a in &t.arrivals {
+                assert!(a.at > prev, "{}: arrival offsets strictly increase", sc.name());
+                prev = a.at;
+                assert!(a.conn < cfg.conns);
+                assert!(a.query.template < s.n_templates);
+                assert!(a.query.topic < s.n_topics);
+                assert!(a.query.id >= s.n_queries, "{}: id aliases the base stream", sc.name());
+            }
+            assert_eq!(t.duration(), prev);
+        }
+    }
+
+    #[test]
+    fn diurnal_peak_is_denser_than_trough() {
+        let t = trace(&spec(), Scenario::Diurnal, &ScenarioConfig::default());
+        let n = t.arrivals.len();
+        let gap = |i: usize| t.arrivals[i].at - t.arrivals[i - 1].at;
+        // Mid-trace gaps sit near the 200 µs peak; edge gaps near 20 ms.
+        assert!(gap(n / 2) < Duration::from_millis(1), "peak gap {:?}", gap(n / 2));
+        assert!(gap(1) > Duration::from_millis(10), "trough gap {:?}", gap(1));
+        assert!(gap(n - 1) > Duration::from_millis(10));
+    }
+
+    #[test]
+    fn flash_crowd_burst_is_dense_hot_and_bracketed() {
+        let s = spec();
+        let t = trace(&s, Scenario::FlashCrowd, &ScenarioConfig::default());
+        let n = t.arrivals.len();
+        let (lo, hi) = (n / 3, 2 * n / 3);
+        let burst = &t.arrivals[lo..hi];
+        // One hot template/topic, arriving ~100x faster than the trickle.
+        let latents: HashSet<(usize, usize)> =
+            burst.iter().map(|a| (a.query.template, a.query.topic)).collect();
+        assert_eq!(latents.len(), 1, "burst queries share one hot latent pair");
+        let burst_gap = burst[1].at - burst[0].at;
+        let trickle_gap = t.arrivals[1].at - t.arrivals[0].at;
+        assert!(burst_gap * 20 < trickle_gap, "burst {burst_gap:?} vs trickle {trickle_gap:?}");
+        // Fresh ids even inside the burst: near-duplicates, not repeats.
+        let ids: HashSet<usize> = t.arrivals.iter().map(|a| a.query.id).collect();
+        assert_eq!(ids.len(), n);
+    }
+
+    #[test]
+    fn topic_drift_moves_the_focus_across_the_space() {
+        let s = spec();
+        let t = trace(&s, Scenario::TopicDrift, &ScenarioConfig::default());
+        let n = t.arrivals.len();
+        let topics = |r: std::ops::Range<usize>| -> HashSet<usize> {
+            t.arrivals[r].iter().map(|a| a.query.topic).collect()
+        };
+        let head = topics(0..n / 4);
+        let tail = topics(3 * n / 4..n);
+        assert_ne!(head, tail, "the popular topic set must shift over the trace");
+        let all: HashSet<usize> = t.arrivals.iter().map(|a| a.query.topic).collect();
+        assert!(all.len() > (s.n_topics / 4).max(1), "drift covers more than one focus window");
+    }
+
+    #[test]
+    fn slow_client_is_sparse_and_stalled() {
+        let t = trace(&spec(), Scenario::SlowClient, &ScenarioConfig::default());
+        let slow: Vec<usize> = t
+            .arrivals
+            .iter()
+            .enumerate()
+            .filter(|(_, a)| a.conn == 0)
+            .map(|(i, _)| i)
+            .collect();
+        let frac = slow.len() as f64 / t.arrivals.len() as f64;
+        assert!((0.02..0.3).contains(&frac), "slow-client fraction {frac}");
+        // Every slow arrival follows a stall an order of magnitude longer
+        // than the fast stream's gap.
+        for &i in slow.iter().filter(|&&i| i > 0) {
+            let gap = t.arrivals[i].at - t.arrivals[i - 1].at;
+            assert!(gap >= Duration::from_millis(10), "slow arrival {i} gap {gap:?}");
+        }
+    }
+
+    #[test]
+    fn drain_resume_marks_the_seam_and_others_do_not() {
+        let cfg = ScenarioConfig::default();
+        for sc in Scenario::all() {
+            let t = trace(&spec(), sc, &cfg);
+            match sc {
+                Scenario::DrainResume => {
+                    assert_eq!(t.drain_at, Some(cfg.n_queries / 2));
+                }
+                _ => assert_eq!(t.drain_at, None, "{}", sc.name()),
+            }
+        }
+    }
+
+    #[test]
+    fn breaks_mark_gaps_at_least_the_window_wait() {
+        let t = trace(&spec(), Scenario::FlashCrowd, &ScenarioConfig::default());
+        let breaks = t.breaks(Duration::from_millis(1));
+        assert!(!breaks.is_empty(), "the 5 ms trickle must break a 1 ms window");
+        for &i in &breaks {
+            let gap = t.arrivals[i].at - t.arrivals[i - 1].at;
+            assert!(gap >= Duration::from_millis(1));
+        }
+        // Inside the burst (50 µs gaps) there are no 1 ms breaks.
+        let n = t.arrivals.len();
+        assert!(
+            breaks.iter().all(|&i| !(n / 3 + 1..2 * n / 3).contains(&i)),
+            "burst arrivals must pool, not break"
+        );
+    }
+
+    #[test]
+    fn pace_composes_with_the_repeat_generator() {
+        let s = spec();
+        let base = super::super::repeat::repeated_trace(
+            &s,
+            &super::super::repeat::RepeatTraceConfig {
+                n_queries: 64,
+                ..Default::default()
+            },
+        );
+        let cfg = ScenarioConfig { n_queries: base.len(), ..Default::default() };
+        let t = pace(base.clone(), Scenario::Diurnal, &cfg);
+        assert_eq!(t.arrivals.len(), base.len());
+        for (a, q) in t.arrivals.iter().zip(&base) {
+            assert_eq!(&a.query, q, "pace must not rewrite query content");
+        }
+    }
+
+    #[test]
+    fn empty_trace_is_ok() {
+        let cfg = ScenarioConfig { n_queries: 0, ..Default::default() };
+        for sc in Scenario::all() {
+            let t = trace(&spec(), sc, &cfg);
+            assert!(t.arrivals.is_empty());
+            assert_eq!(t.drain_at, None);
+            assert_eq!(t.duration(), Duration::ZERO);
+            assert!(t.breaks(Duration::from_millis(1)).is_empty());
+        }
+    }
+}

@@ -1,0 +1,420 @@
+//! Adaptive-window scenario matrix (PR 7 acceptance suite).
+//!
+//! Each [`Scenario`] trace is replayed twice through the in-process
+//! [`SessionScheduler`] — once with the static PR 4 window, once with the
+//! adaptive controller — under a deterministic virtual-time driver:
+//!
+//! * arrivals are submitted in trace order;
+//! * a window wait-expires when the next arrival's virtual offset is more
+//!   than the *static base* `max_wait` past the window's opening arrival
+//!   (the same rule for both arms, so the arms differ only through the
+//!   controller's **size** dimension — the wait dimension needs a real
+//!   clock and is pinned by the unit tests in
+//!   `rust/src/coordinator/scheduler.rs` and the live server path);
+//! * everything downstream is pinned deterministic: `io_workers = 1`,
+//!   `cache_shards = 1`, `DiskProfile::None`, Native backend, and disk
+//!   traffic is compared via the `DiskModel.reads` counter.
+//!
+//! Gates: per scenario the adaptive arm's cache hit ratio must be at
+//! least the static arm's and its unique disk reads at most the static
+//! arm's; burst pooling delay (p99, virtual time) must stay within a
+//! bounded factor of static; drain→resume must lose zero admitted
+//! queries; and `adaptive_window = off` must be bit-for-bit identical to
+//! the plain static scheduler.
+//!
+//! With `CAGR_SCENARIO_SMOKE=1` each scenario also drops a JSON summary
+//! in `results/scenario_<name>.json` (consumed by CI's bench-smoke job).
+
+use std::collections::HashMap;
+use std::time::Duration;
+
+use cagr::config::{Backend, Config, DiskProfile};
+use cagr::coordinator::scheduler::{AdaptiveConfig, WindowConfig};
+use cagr::coordinator::JaccardGrouping;
+use cagr::harness::runner::ensure_dataset;
+use cagr::session::Session;
+use cagr::util::json::{obj, Json};
+use cagr::workload::scenario::{trace, Scenario, ScenarioConfig, ScenarioTrace};
+use cagr::workload::DatasetSpec;
+
+/// Static base window shared by both arms: 16 queries / 5 ms.
+const BASE: WindowConfig =
+    WindowConfig { max_queries: 16, max_wait: Duration::from_millis(5) };
+
+fn adaptive_cfg() -> AdaptiveConfig {
+    AdaptiveConfig {
+        enabled: true,
+        min_queries: 8,
+        max_queries: 64,
+        min_wait: Duration::from_millis(1),
+        max_wait: Duration::from_millis(100),
+    }
+}
+
+fn test_cfg(tag: &str) -> (Config, DatasetSpec) {
+    let mut cfg = Config::default();
+    cfg.data_dir =
+        std::env::temp_dir().join(format!("cagr-adapt-{}-{tag}", std::process::id()));
+    cfg.clusters = 16;
+    cfg.nprobe = 4;
+    cfg.top_k = 5;
+    // Fewer cache entries than clusters: eviction pressure, so grouping
+    // quality (and hence window sizing) shows up in hits and disk reads.
+    cfg.cache_entries = 8;
+    cfg.cache_shards = 1;
+    cfg.io_workers = 1;
+    cfg.kmeans_iters = 4;
+    cfg.kmeans_sample = 2_000;
+    cfg.backend = Backend::Native;
+    cfg.disk_profile = DiskProfile::None;
+    (cfg, DatasetSpec::tiny(0xADA7))
+}
+
+fn open_session(cfg: &Config, spec: &DatasetSpec) -> Session {
+    Session::builder()
+        .config(cfg.clone())
+        .dataset(spec.clone())
+        .policy(JaccardGrouping::default())
+        .ensure_dataset(false)
+        .open()
+        .unwrap()
+}
+
+/// One arm's replay summary.
+struct RunStats {
+    /// `(query_id, hits)` in delivery order.
+    outcomes: Vec<(usize, Vec<(u32, f32)>)>,
+    /// Per-query virtual pooling delay, µs.
+    delays_us: Vec<u64>,
+    hits: u64,
+    misses: u64,
+    reads: u64,
+    windows: usize,
+    pooled: usize,
+    /// `(adaptations, widened, narrowed)` from the controller.
+    counters: (u64, u64, u64),
+}
+
+impl RunStats {
+    fn hit_ratio(&self) -> f64 {
+        self.hits as f64 / (self.hits + self.misses).max(1) as f64
+    }
+
+    fn p99_delay_us(&self) -> u64 {
+        let mut d = self.delays_us.clone();
+        d.sort_unstable();
+        d.get(d.len().saturating_sub(1) * 99 / 100).copied().unwrap_or(0)
+    }
+}
+
+/// Replay `t` through a fresh session under the virtual-time driver.
+/// `adaptive = None` is the static arm. `restart_at = Some(i)` drops the
+/// scheduler after flushing arrival `i` and resumes on a new scheduler
+/// over the *same* session (the drain→resume seam).
+fn run_trace(
+    cfg: &Config,
+    spec: &DatasetSpec,
+    t: &ScenarioTrace,
+    adaptive: Option<AdaptiveConfig>,
+    restart_at: Option<usize>,
+) -> RunStats {
+    let mut session = open_session(cfg, spec);
+    let adaptive = adaptive.unwrap_or_else(AdaptiveConfig::off);
+    let mut outcomes = Vec::new();
+    let mut delays_us: Vec<u64> = Vec::with_capacity(t.arrivals.len());
+    // Open-window bookkeeping in virtual time: opening arrival offset and
+    // the (id, at) of every pooled-but-unanswered member.
+    let mut open_at: Option<Duration> = None;
+    let mut pending: Vec<(usize, Duration)> = Vec::new();
+    let mut windows = 0usize;
+    let mut pooled = 0usize;
+    let mut counters = (0, 0, 0);
+
+    let record = |produced: Vec<cagr::coordinator::QueryOutcome>,
+                  flushed_at: Duration,
+                  pending: &mut Vec<(usize, Duration)>,
+                  delays: &mut Vec<u64>,
+                  outcomes: &mut Vec<(usize, Vec<(u32, f32)>)>| {
+        if produced.is_empty() {
+            return false;
+        }
+        for (_, at) in pending.drain(..) {
+            delays.push(flushed_at.saturating_sub(at).as_micros() as u64);
+        }
+        for o in produced {
+            outcomes.push((
+                o.report.query_id,
+                o.hits.iter().map(|h| (h.doc, h.distance)).collect(),
+            ));
+        }
+        true
+    };
+
+    let segments: Vec<(usize, usize)> = match restart_at {
+        Some(i) => vec![(0, i), (i, t.arrivals.len())],
+        None => vec![(0, t.arrivals.len())],
+    };
+    for (seg_lo, seg_hi) in segments {
+        let mut sched = session.scheduler_with(BASE, adaptive);
+        for a in &t.arrivals[seg_lo..seg_hi] {
+            // Static-base wait expiry (same rule both arms): the window
+            // would have flushed `max_wait` after it opened.
+            if let Some(opened) = open_at {
+                if a.at.saturating_sub(opened) > BASE.max_wait {
+                    let produced = sched.flush().unwrap();
+                    if record(
+                        produced,
+                        opened + BASE.max_wait,
+                        &mut pending,
+                        &mut delays_us,
+                        &mut outcomes,
+                    ) {
+                        windows += 1;
+                    }
+                    open_at = None;
+                }
+            }
+            pending.push((a.query.id, a.at));
+            pooled += 1;
+            let produced = sched.submit(&a.query, None).unwrap();
+            if record(produced, a.at, &mut pending, &mut delays_us, &mut outcomes) {
+                // Size-triggered flush: delivered at this arrival's offset.
+                windows += 1;
+                open_at = None;
+            } else {
+                open_at.get_or_insert(a.at);
+            }
+        }
+        // Segment drain (trace end, or the drain→resume seam).
+        let flushed_at = t.arrivals[..seg_hi]
+            .last()
+            .map(|a| a.at)
+            .unwrap_or_default();
+        let produced = sched.flush().unwrap();
+        if record(produced, flushed_at, &mut pending, &mut delays_us, &mut outcomes) {
+            windows += 1;
+        }
+        open_at = None;
+        counters = sched.controller().counters();
+        let totals = sched.totals();
+        assert_eq!(totals.bypassed, 0, "no deadlines in scenario traces");
+    }
+
+    let s = session.cache_stats();
+    RunStats {
+        outcomes,
+        delays_us,
+        hits: s.hits,
+        misses: s.misses,
+        reads: session.engine().disk.lock().unwrap().reads,
+        windows,
+        pooled,
+        counters,
+    }
+}
+
+fn scenario_json(name: &str, stat: &RunStats, adaptive: bool) -> Json {
+    obj(vec![
+        ("scenario", name.into()),
+        ("adaptive", Json::Bool(adaptive)),
+        ("queries", stat.pooled.into()),
+        ("windows", stat.windows.into()),
+        ("cache_hit_ratio", Json::Num(stat.hit_ratio())),
+        ("disk_reads", Json::Num(stat.reads as f64)),
+        ("p99_pool_delay_us", Json::Num(stat.p99_delay_us() as f64)),
+        ("adaptations", Json::Num(stat.counters.0 as f64)),
+        ("widened", Json::Num(stat.counters.1 as f64)),
+        ("narrowed", Json::Num(stat.counters.2 as f64)),
+    ])
+}
+
+fn maybe_emit(name: &str, stat_static: &RunStats, stat_adaptive: &RunStats) {
+    if std::env::var("CAGR_SCENARIO_SMOKE").is_err() {
+        return;
+    }
+    std::fs::create_dir_all("results").unwrap();
+    let doc = obj(vec![
+        ("static", scenario_json(name, stat_static, false)),
+        ("adaptive", scenario_json(name, stat_adaptive, true)),
+    ]);
+    let path = format!("results/scenario_{}.json", name.replace('-', "_"));
+    std::fs::write(&path, doc.pretty()).unwrap();
+    eprintln!("wrote {path}");
+}
+
+/// The matrix gate: every scenario, adaptive vs static. Adaptive must
+/// match or beat static on cache hit ratio and unique disk reads — the
+/// controller may only *help* grouping quality — and both arms must
+/// answer every admitted query exactly once.
+#[test]
+fn adaptive_matches_or_beats_static_across_scenarios() {
+    let (cfg, spec) = test_cfg("matrix");
+    ensure_dataset(&cfg, &spec).unwrap();
+    let scfg = ScenarioConfig::default();
+    for sc in Scenario::all() {
+        let t = trace(&spec, sc, &scfg);
+        let stat = run_trace(&cfg, &spec, &t, None, None);
+        let adap = run_trace(&cfg, &spec, &t, Some(adaptive_cfg()), None);
+        for (label, r) in [("static", &stat), ("adaptive", &adap)] {
+            assert_eq!(
+                r.outcomes.len(),
+                t.arrivals.len(),
+                "{}/{label}: every admitted query answered exactly once",
+                sc.name()
+            );
+            let mut ids: Vec<usize> = r.outcomes.iter().map(|(id, _)| *id).collect();
+            ids.sort_unstable();
+            ids.dedup();
+            assert_eq!(ids.len(), t.arrivals.len(), "{}/{label}: duplicate ids", sc.name());
+        }
+        assert!(
+            adap.hit_ratio() >= stat.hit_ratio(),
+            "{}: adaptive hit ratio {:.4} < static {:.4}",
+            sc.name(),
+            adap.hit_ratio(),
+            stat.hit_ratio()
+        );
+        assert!(
+            adap.reads <= stat.reads,
+            "{}: adaptive disk reads {} > static {}",
+            sc.name(),
+            adap.reads,
+            stat.reads
+        );
+        maybe_emit(sc.name(), &stat, &adap);
+    }
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}
+
+/// Burst latency gate: on the flash-crowd trace the adaptive arm may pool
+/// deeper than static (that is the point), but its p99 virtual pooling
+/// delay must stay within the clamp-implied bound — `max_queries` ratio
+/// (64/16 = 4×) plus the static wait — not grow unboundedly.
+#[test]
+fn adaptive_burst_p99_inflation_is_bounded() {
+    let (cfg, spec) = test_cfg("burst");
+    ensure_dataset(&cfg, &spec).unwrap();
+    let t = trace(&spec, Scenario::FlashCrowd, &ScenarioConfig::default());
+    let stat = run_trace(&cfg, &spec, &t, None, None);
+    let adap = run_trace(&cfg, &spec, &t, Some(adaptive_cfg()), None);
+    let bound_us = stat.p99_delay_us() * 8 + BASE.max_wait.as_micros() as u64;
+    assert!(
+        adap.p99_delay_us() <= bound_us,
+        "adaptive p99 pool delay {} µs exceeds bound {} µs (static p99 {} µs)",
+        adap.p99_delay_us(),
+        bound_us,
+        stat.p99_delay_us()
+    );
+    // And the controller must actually have adapted on this trace.
+    assert!(adap.counters.0 > 0, "flash crowd must trigger adaptations");
+    assert!(adap.counters.1 > 0, "the burst must widen the window");
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}
+
+/// Drain→resume: tear the scheduler down mid-trace (flushing first) and
+/// resume on a fresh scheduler over the same session. Zero admitted
+/// queries may be lost across the seam, in either arm, and the disk-read
+/// counter pins the replay deterministic.
+#[test]
+fn drain_resume_loses_no_admitted_queries() {
+    let (cfg, spec) = test_cfg("drain");
+    ensure_dataset(&cfg, &spec).unwrap();
+    let t = trace(&spec, Scenario::DrainResume, &ScenarioConfig::default());
+    let seam = t.drain_at.expect("drain-resume trace carries the seam index");
+    for adaptive in [None, Some(adaptive_cfg())] {
+        let r = run_trace(&cfg, &spec, &t, adaptive, Some(seam));
+        assert_eq!(r.outcomes.len(), t.arrivals.len(), "lost queries across the seam");
+        let mut ids: Vec<usize> = r.outcomes.iter().map(|(id, _)| *id).collect();
+        ids.sort_unstable();
+        let mut want: Vec<usize> = t.arrivals.iter().map(|a| a.query.id).collect();
+        want.sort_unstable();
+        assert_eq!(ids, want, "every admitted id answered exactly once");
+        // Deterministic replay: a second identical run reads the same
+        // number of unique clusters from disk.
+        let again = run_trace(&cfg, &spec, &t, adaptive, Some(seam));
+        assert_eq!(r.reads, again.reads, "drain→resume replay must be deterministic");
+    }
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}
+
+/// `adaptive_window = off` bit-for-bit parity: the same trace through
+/// `Session::scheduler` (the PR 4 static path) and through
+/// `scheduler_with(.., AdaptiveConfig::off())` must produce identical
+/// outcome sequences, cache stats, and disk reads.
+#[test]
+fn adaptive_off_is_bit_identical_to_static_scheduler() {
+    let (cfg, spec) = test_cfg("offpar");
+    ensure_dataset(&cfg, &spec).unwrap();
+    let t = trace(&spec, Scenario::Diurnal, &ScenarioConfig::default());
+
+    let drive = |use_off_controller: bool| {
+        let mut session = open_session(&cfg, &spec);
+        let mut outcomes: Vec<(usize, Vec<(u32, f32)>)> = Vec::new();
+        {
+            let mut sched = if use_off_controller {
+                session.scheduler_with(BASE, AdaptiveConfig::off())
+            } else {
+                session.scheduler(BASE)
+            };
+            let mut open_at: Option<Duration> = None;
+            for a in &t.arrivals {
+                if let Some(opened) = open_at {
+                    if a.at.saturating_sub(opened) > BASE.max_wait {
+                        for o in sched.flush().unwrap() {
+                            outcomes.push((
+                                o.report.query_id,
+                                o.hits.iter().map(|h| (h.doc, h.distance)).collect(),
+                            ));
+                        }
+                        open_at = None;
+                    }
+                }
+                let produced = sched.submit(&a.query, None).unwrap();
+                if produced.is_empty() {
+                    open_at.get_or_insert(a.at);
+                } else {
+                    for o in produced {
+                        outcomes.push((
+                            o.report.query_id,
+                            o.hits.iter().map(|h| (h.doc, h.distance)).collect(),
+                        ));
+                    }
+                    open_at = None;
+                }
+            }
+            for o in sched.flush().unwrap() {
+                outcomes.push((
+                    o.report.query_id,
+                    o.hits.iter().map(|h| (h.doc, h.distance)).collect(),
+                ));
+            }
+            assert_eq!(sched.controller().counters(), (0, 0, 0));
+        }
+        let s = session.cache_stats();
+        let reads = session.engine().disk.lock().unwrap().reads;
+        (outcomes, s.hits, s.misses, reads)
+    };
+
+    let a = drive(false);
+    let b = drive(true);
+    assert_eq!(a, b, "adaptive_window=off must be bit-identical to the static scheduler");
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}
+
+/// Fresh queries only: scenario traces never collide with the base query
+/// stream's ids (the Native embedding path keys vectors by id).
+#[test]
+fn scenario_traces_use_fresh_ids() {
+    let (_cfg, spec) = test_cfg("ids");
+    let scfg = ScenarioConfig::default();
+    for sc in Scenario::all() {
+        let t = trace(&spec, sc, &scfg);
+        let mut map: HashMap<usize, &cagr::workload::Query> = HashMap::new();
+        for a in &t.arrivals {
+            assert!(a.query.id >= spec.n_queries, "{}: id aliases base stream", sc.name());
+            if let Some(prev) = map.insert(a.query.id, &a.query) {
+                assert_eq!(prev, &a.query, "{}: one id, one query", sc.name());
+            }
+        }
+    }
+}

@@ -396,3 +396,113 @@ fn parallel_executor_races_prefetcher() {
     drop(pf);
     std::fs::remove_dir_all(&cfg.data_dir).ok();
 }
+
+/// Regression for the adaptive fetch-pipeline depth (the AIMD
+/// `FetchTuner`): with ample cache — zero rejections, zero re-fetches —
+/// clean groups must grow the depth above the static
+/// `min(2·io_workers, cache_entries/2)` seed, with every result still
+/// full and every counter conserved; with a fully pinned cache every
+/// group that touches a non-resident cluster takes a rejected insert,
+/// and that pressure must narrow the depth back below the seed. Both
+/// halves run under `io_workers = 4`, i.e. with racy fetch completion
+/// order — the pressure signals are chosen so the verdict is
+/// interleaving-independent (the grow arm cannot evict at all; the
+/// shrink arm's chunks each span more distinct clusters than the cache
+/// holds, so some insert is rejected no matter which blocks are
+/// resident), and the tuner must stay inside `[1, cache_entries-1]`
+/// throughout.
+#[test]
+fn fetch_tuner_adapts_depth_to_observed_pressure() {
+    // Ample cache: capacity 32 over 16 clusters — pressure-free.
+    let (mut cfg, spec) = race_cfg("tuner-grow");
+    cfg.io_workers = 4;
+    cfg.cache_entries = 32;
+    ensure_dataset(&cfg, &spec).unwrap();
+    let mut engine = SearchEngine::open(&cfg, &spec).unwrap();
+    let seed = engine.effective_fetch_window();
+    assert_eq!(seed, 8, "static seed: min(2*4, 32/2)");
+    let queries = cagr::workload::generate_queries(&spec);
+    let prepared = engine.prepare(&queries[..32]).unwrap();
+    for chunk in prepared.chunks(4) {
+        let members: Vec<&cagr::engine::PreparedQuery> = chunk.iter().collect();
+        let out = engine.search_group(&members).unwrap();
+        for ((report, hits), pq) in out.iter().zip(chunk) {
+            assert_eq!(report.query_id, pq.query.id);
+            assert_eq!(hits.len(), cfg.top_k);
+            assert_eq!(report.cache_hits + report.cache_misses, cfg.nprobe as u64);
+        }
+    }
+    assert!(
+        engine.effective_fetch_window() > seed,
+        "8 clean groups must have grown the depth past the static seed {seed}, got {}",
+        engine.effective_fetch_window()
+    );
+    assert!(engine.effective_fetch_window() < cfg.cache_entries);
+    let s = engine.cache.stats();
+    assert_eq!(
+        s.insertions - s.evictions,
+        engine.cache.len() as u64,
+        "conservation under tuned depth"
+    );
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+
+    // Pinned cache: 8 entries in one shard, warmed to capacity and then
+    // fully pinned — every later insert is rejected. Each 32-query chunk
+    // provably spans more distinct clusters than the cache holds, so the
+    // chunk misses on some non-resident cluster and takes a rejected
+    // insert no matter which 8 blocks the warm-up interleaving left
+    // resident: two guaranteed halvings from any depth <= 7 (the cap)
+    // land below the seed of 4.
+    let (mut cfg, spec) = race_cfg("tuner-shrink");
+    cfg.io_workers = 4;
+    cfg.cache_entries = 8;
+    cfg.cache_shards = 1;
+    ensure_dataset(&cfg, &spec).unwrap();
+    let mut engine = SearchEngine::open(&cfg, &spec).unwrap();
+    let seed = engine.effective_fetch_window();
+    assert_eq!(seed, 4, "static seed: min(2*4, 8/2)");
+    let queries = cagr::workload::generate_queries(&spec);
+    let prepared = engine.prepare(&queries).unwrap();
+    for chunk in prepared.chunks(8) {
+        let members: Vec<&cagr::engine::PreparedQuery> = chunk.iter().collect();
+        engine.search_group(&members).unwrap();
+    }
+    assert_eq!(
+        engine.cache.len(),
+        engine.cache.capacity(),
+        "warm pass must fill the shard (dataset spans >= cache_entries clusters)"
+    );
+    engine.cache.pin(&engine.cache.resident_ids());
+    for chunk in prepared.chunks(32) {
+        let mut uniq: Vec<u32> = chunk.iter().flat_map(|pq| pq.clusters.clone()).collect();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert!(
+            uniq.len() > engine.cache.capacity(),
+            "precondition: chunk footprint {} must exceed capacity {}",
+            uniq.len(),
+            engine.cache.capacity()
+        );
+        let members: Vec<&cagr::engine::PreparedQuery> = chunk.iter().collect();
+        let out = engine.search_group(&members).unwrap();
+        for (report, hits) in &out {
+            assert_eq!(hits.len(), cfg.top_k);
+            assert_eq!(report.cache_hits + report.cache_misses, cfg.nprobe as u64);
+        }
+    }
+    assert!(
+        engine.effective_fetch_window() < seed,
+        "rejected-insert pressure must narrow the depth below the seed {seed}, got {}",
+        engine.effective_fetch_window()
+    );
+    assert!(engine.effective_fetch_window() >= 1);
+    engine.cache.unpin_all();
+    assert!(engine.cache.len() <= engine.cache.capacity());
+    let s = engine.cache.stats();
+    assert_eq!(
+        s.insertions - s.evictions,
+        engine.cache.len() as u64,
+        "conservation under narrowed depth"
+    );
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}

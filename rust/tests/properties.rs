@@ -7,7 +7,9 @@ use cagr::cache::{CacheStats, ClusterCache};
 use cagr::config::{Backend, CachePolicy, Config, DiskProfile, GroupingPolicy};
 use cagr::coordinator::grouping::group_queries;
 use cagr::coordinator::jaccard::{canonicalize, jaccard_sorted, union_sorted};
-use cagr::coordinator::JaccardGrouping;
+use cagr::coordinator::{
+    AdaptiveConfig, AdaptiveWindow, FlushFeedback, JaccardGrouping, WindowConfig,
+};
 use cagr::engine::inflight::InFlight;
 use cagr::engine::PreparedQuery;
 use cagr::harness::runner::ensure_dataset;
@@ -18,6 +20,7 @@ use cagr::util::rng::Rng;
 use cagr::workload::{generate_queries, traffic, DatasetSpec, Query};
 
 use std::sync::Arc;
+use std::time::Duration;
 
 fn random_cluster_set(rng: &mut Rng, universe: u32, max_len: usize) -> Vec<u32> {
     let len = rng.range(1, max_len + 1);
@@ -400,5 +403,152 @@ fn prop_json_garbage_never_panics() {
             .map(|_| char::from_u32(rng.range(32, 127) as u32).unwrap())
             .collect();
         let _ = Json::parse(&garbage); // must return, never panic
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Adaptive pooling-window controller properties (PR 7)
+// ---------------------------------------------------------------------------
+
+/// A random *valid* clamp config (min <= max on both axes, as
+/// `Config::validate` enforces).
+fn random_adaptive_cfg(rng: &mut Rng) -> AdaptiveConfig {
+    let min_queries = rng.range(1, 64);
+    let min_wait_us = rng.range(1_000, 5_000) as u64;
+    AdaptiveConfig {
+        enabled: true,
+        min_queries,
+        max_queries: min_queries + rng.range(0, 2_000),
+        min_wait: Duration::from_micros(min_wait_us),
+        max_wait: Duration::from_micros(min_wait_us + rng.range(0, 200_000) as u64),
+    }
+}
+
+fn random_feedback(rng: &mut Rng) -> FlushFeedback {
+    let occupancy = rng.range(0, 5_000);
+    FlushFeedback {
+        occupancy,
+        waited: Duration::from_micros(rng.range(0, 500_000) as u64),
+        groups: rng.range(0, occupancy.max(1) + 1),
+        cross_conn_groups: rng.range(0, 64),
+        grouping_cost: Duration::from_micros(rng.range(0, 50_000) as u64),
+        recv_cost: Duration::from_micros(rng.range(0, 50_000) as u64),
+    }
+}
+
+/// Every config the controller ever emits sits inside the clamps — for
+/// any valid clamp config, any base (including bases *outside* the
+/// clamps), and any feedback (including degenerate occupancy 0 / huge
+/// occupancy). Counter bookkeeping stays consistent throughout.
+#[test]
+fn prop_adaptive_outputs_always_within_clamps() {
+    for seed in 0..200u64 {
+        let mut rng = Rng::new(12_000 + seed);
+        let cfg = random_adaptive_cfg(&mut rng);
+        let base = WindowConfig {
+            max_queries: rng.range(1, 5_000),
+            max_wait: Duration::from_micros(rng.range(1, 1_000_000) as u64),
+        };
+        let mut ctl = AdaptiveWindow::new(base, cfg);
+        let in_clamps = |w: WindowConfig, tag: &str| {
+            assert!(
+                (cfg.min_queries..=cfg.max_queries).contains(&w.max_queries),
+                "seed {seed} {tag}: max_queries {} outside [{}, {}]",
+                w.max_queries,
+                cfg.min_queries,
+                cfg.max_queries
+            );
+            assert!(
+                w.max_wait <= cfg.max_wait,
+                "seed {seed} {tag}: max_wait {:?} above clamp {:?}",
+                w.max_wait,
+                cfg.max_wait
+            );
+        };
+        in_clamps(ctl.current(), "initial");
+        for step in 0..50 {
+            let next = ctl.observe(&random_feedback(&mut rng));
+            in_clamps(next, "observed");
+            assert_eq!(next, ctl.current(), "seed {seed} step {step}: observe returns current");
+            let (adaptations, widened, narrowed) = ctl.counters();
+            assert!(widened <= adaptations, "seed {seed}: widened > adaptations");
+            assert!(narrowed <= adaptations, "seed {seed}: narrowed > adaptations");
+            assert!(
+                adaptations <= widened + narrowed,
+                "seed {seed}: an adaptation must widen or narrow"
+            );
+        }
+    }
+}
+
+/// Under a constant arrival rate the loop reaches a fixed point: after a
+/// burn-in the adaptation counter freezes (the dead band prevents
+/// oscillation around the clamp boundary), and the settled config is
+/// inside the clamps. The arrival process is simulated with exact integer
+/// math — a window either fills (`occupancy = max_queries` before the
+/// wait expires) or wait-expires with `occupancy = max_wait / gap`.
+#[test]
+fn prop_adaptive_converges_under_constant_rate() {
+    for seed in 0..50u64 {
+        let mut rng = Rng::new(13_000 + seed);
+        let cfg = random_adaptive_cfg(&mut rng);
+        let base = WindowConfig {
+            max_queries: rng.range(1, 256),
+            max_wait: Duration::from_micros(rng.range(1_000, 50_000) as u64),
+        };
+        let gap_us = rng.range(20, 2_000) as u64; // one arrival per gap
+        let mut ctl = AdaptiveWindow::new(base, cfg);
+        let mut frozen_at: Option<u64> = None;
+        for step in 0..400 {
+            let cur = ctl.current();
+            let by_wait = ((cur.max_wait.as_micros() as u64 / gap_us) as usize).max(1);
+            let occupancy = cur.max_queries.min(by_wait);
+            let waited = Duration::from_micros(occupancy as u64 * gap_us);
+            // Constant grouping quality: half the members merge.
+            let fb = FlushFeedback {
+                occupancy,
+                waited,
+                groups: (occupancy / 2).max(1),
+                ..Default::default()
+            };
+            ctl.observe(&fb);
+            if step == 300 {
+                frozen_at = Some(ctl.counters().0);
+            }
+        }
+        let (adaptations, _, _) = ctl.counters();
+        assert_eq!(
+            Some(adaptations),
+            frozen_at,
+            "seed {seed} (gap {gap_us} µs): controller still adapting after burn-in \
+             (config {:?})",
+            ctl.current()
+        );
+        let settled = ctl.current();
+        assert!((cfg.min_queries..=cfg.max_queries).contains(&settled.max_queries));
+        assert!(settled.max_wait <= cfg.max_wait, "seed {seed}");
+    }
+}
+
+/// `enabled == false` makes the controller a constant function: the base
+/// window comes back verbatim — even bases far outside the clamps — and
+/// the counters never move. This is the contract `adaptive_window=off`
+/// parity rests on (rust/tests/adaptive.rs pins the end-to-end half).
+#[test]
+fn prop_adaptive_off_is_identity() {
+    for seed in 0..200u64 {
+        let mut rng = Rng::new(14_000 + seed);
+        let base = WindowConfig {
+            max_queries: rng.range(1, 10_000),
+            max_wait: Duration::from_micros(rng.range(1, 10_000_000) as u64),
+        };
+        let mut ctl = AdaptiveWindow::new(base, AdaptiveConfig::off());
+        assert!(!ctl.enabled());
+        assert_eq!(ctl.current(), base, "seed {seed}: base must pass through untouched");
+        for _ in 0..50 {
+            let next = ctl.observe(&random_feedback(&mut rng));
+            assert_eq!(next, base, "seed {seed}: disabled controller must never retune");
+        }
+        assert_eq!(ctl.counters(), (0, 0, 0), "seed {seed}: counters must not move");
     }
 }

@@ -359,6 +359,80 @@ impl Client {
         }
         Reply::parse_line(&line).map_err(|e| ClientError::Protocol(e.to_string()))
     }
+
+    /// Split the connection into independently owned send and receive
+    /// halves, so one thread can keep submitting while another collects
+    /// replies — the shard router's scatter/collect threads each own one
+    /// half of every shard connection. Replies buffered by earlier
+    /// control-plane calls move to the read half.
+    pub fn into_split(self) -> (ClientWriter, ClientReader) {
+        (
+            ClientWriter { writer: self.writer },
+            ClientReader { reader: self.reader, pending: self.pending },
+        )
+    }
+}
+
+/// The send half of a split [`Client`] connection ([`Client::into_split`]).
+pub struct ClientWriter {
+    writer: TcpStream,
+}
+
+impl ClientWriter {
+    /// Pipelined send with explicit per-request options (the split-half
+    /// equivalent of [`Client::submit_with`]).
+    pub fn submit_with(
+        &mut self,
+        query: &Query,
+        options: &SearchOptions,
+    ) -> Result<(), ClientError> {
+        let req = Request::Search(SearchRequest {
+            query: query.clone(),
+            options: options.clone(),
+        });
+        writeln!(self.writer, "{}", req.dump())?;
+        Ok(())
+    }
+
+    /// Send a pre-rendered protocol line.
+    pub fn send_line(&mut self, line: &str) -> Result<(), ClientError> {
+        writeln!(self.writer, "{line}")?;
+        Ok(())
+    }
+}
+
+impl Drop for ClientWriter {
+    /// Half-close on drop: the split halves hold dup'd descriptors, so
+    /// merely closing the writer's fd would leave the connection open as
+    /// long as the read half lives — the server would never see EOF and a
+    /// reader blocked on the socket would never wake. An explicit
+    /// write-shutdown sends FIN; the server finishes its in-flight
+    /// replies, closes, and the read half drains to `Closed`.
+    fn drop(&mut self) {
+        let _ = self.writer.shutdown(std::net::Shutdown::Write);
+    }
+}
+
+/// The receive half of a split [`Client`] connection
+/// ([`Client::into_split`]).
+pub struct ClientReader {
+    reader: BufReader<TcpStream>,
+    pending: VecDeque<Reply>,
+}
+
+impl ClientReader {
+    /// Read the next typed reply off the wire (buffered replies first).
+    pub fn read_reply(&mut self) -> Result<Reply, ClientError> {
+        if let Some(r) = self.pending.pop_front() {
+            return Ok(r);
+        }
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line)?;
+        if n == 0 {
+            return Err(ClientError::Closed);
+        }
+        Reply::parse_line(&line).map_err(|e| ClientError::Protocol(e.to_string()))
+    }
 }
 
 #[cfg(test)]

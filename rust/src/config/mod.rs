@@ -139,6 +139,38 @@ impl PrefetchTrigger {
     }
 }
 
+/// How the shard plan assigns clusters to shards (docs/SHARDING.md).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardPolicy {
+    /// `cluster % shards` — uniform, oblivious to traffic.
+    Hash,
+    /// Popularity-weighted LPT bin-packing: clusters sorted by observed
+    /// (or size-proxied) weight, each placed on the lightest shard; hot
+    /// clusters (>= 2x mean weight) are replicated onto extra shards so
+    /// the router can spread their traffic.
+    Popularity,
+}
+
+impl ShardPolicy {
+    /// Parse a selector. Case-insensitive and whitespace-tolerant.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "hash" => Ok(ShardPolicy::Hash),
+            "popularity" | "weighted" => Ok(ShardPolicy::Popularity),
+            other => anyhow::bail!(
+                "unknown shard policy '{other}' (accepted: hash, popularity|weighted)"
+            ),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ShardPolicy::Hash => "hash",
+            ShardPolicy::Popularity => "popularity",
+        }
+    }
+}
+
 /// Scoring/encoding backend selector (DESIGN.md §6).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Backend {
@@ -278,6 +310,16 @@ pub struct Config {
     /// (only reached when windows show grouping payoff).
     pub adaptive_max_wait_ms: u64,
 
+    // -- sharded serving tier (docs/SHARDING.md) -------------------------------
+    /// Number of shard servers behind the scatter-gather router; 0 = the
+    /// unsharded single-server stack (default — no router in the path).
+    pub shards: usize,
+    /// Replicas for hot clusters under the popularity plan (capped at
+    /// `shards`); 1 = no replication. Ignored by the hash plan.
+    pub shard_replicas: usize,
+    /// How clusters are assigned to shards.
+    pub shard_policy: ShardPolicy,
+
     // -- traffic (paper §4.1) --------------------------------------------------
     /// Batch size bounds, inclusive (paper: 20..=100).
     pub batch_min: usize,
@@ -322,6 +364,9 @@ impl Default for Config {
             adaptive_max_queries: 1_000,
             adaptive_min_wait_ms: 1,
             adaptive_max_wait_ms: 100,
+            shards: 0,
+            shard_replicas: 1,
+            shard_policy: ShardPolicy::Hash,
             batch_min: 20,
             batch_max: 100,
             backend: Backend::Native,
@@ -429,6 +474,9 @@ impl Config {
                     anyhow::anyhow!("'semcache_ttl_ms' expects a u64, got '{value}'")
                 })?
             }
+            "shards" => self.shards = parse_usize(value)?,
+            "shard_replicas" => self.shard_replicas = parse_usize(value)?,
+            "shard_policy" => self.shard_policy = ShardPolicy::parse(value)?,
             "batch_min" => self.batch_min = parse_usize(value)?,
             "batch_max" => self.batch_max = parse_usize(value)?,
             "backend" => self.backend = Backend::parse(value)?,
@@ -506,6 +554,16 @@ impl Config {
                 self.adaptive_min_wait_ms,
                 self.adaptive_max_wait_ms
             );
+        }
+        if self.shards > self.clusters {
+            anyhow::bail!(
+                "shards ({}) must be <= clusters ({}) — an empty shard serves nothing",
+                self.shards,
+                self.clusters
+            );
+        }
+        if self.shard_replicas == 0 {
+            anyhow::bail!("shard_replicas must be >= 1 (1 = no replication)");
         }
         Ok(())
     }
@@ -674,6 +732,32 @@ mod tests {
         assert!(c.set("adaptive_window", "maybe").is_err());
         assert!(c.set("adaptive_min_queries", "few").is_err());
         assert!(c.set("adaptive_max_wait_ms", "soon").is_err());
+    }
+
+    #[test]
+    fn shard_knobs_parse_and_validate() {
+        let mut c = Config::default();
+        assert_eq!(c.shards, 0, "the serving tier ships unsharded");
+        assert_eq!(c.shard_replicas, 1);
+        assert_eq!(c.shard_policy, ShardPolicy::Hash);
+        c.validate().unwrap();
+        c.set("shards", "4").unwrap();
+        c.set("shard_replicas", "2").unwrap();
+        c.set("shard_policy", "popularity").unwrap();
+        assert_eq!((c.shards, c.shard_replicas), (4, 2));
+        assert_eq!(c.shard_policy, ShardPolicy::Popularity);
+        c.validate().unwrap();
+        c.shards = c.clusters + 1;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("shards"), "{err}");
+        c = Config::default();
+        c.shard_replicas = 0;
+        assert!(c.validate().unwrap_err().to_string().contains("shard_replicas"));
+        let mut c = Config::default();
+        assert!(c.set("shards", "many").is_err());
+        assert!(c.set("shard_policy", "roundrobin").is_err());
+        assert_eq!(ShardPolicy::parse(" Weighted ").unwrap(), ShardPolicy::Popularity);
+        assert_eq!(ShardPolicy::Hash.name(), "hash");
     }
 
     #[test]

@@ -239,6 +239,11 @@ pub struct IncrementalGrouper {
     /// no clearing between assignments).
     seen: Vec<u64>,
     stamp: u64,
+    /// Smallest member cardinality per group, for the group-level prune:
+    /// `J(c, m) <= |c ∩ C(G)| / max(|c|, min member card)` holds for every
+    /// member at once, so one union intersection can rule out the whole
+    /// member loop.
+    group_min_card: Vec<u32>,
     /// Scratch: gathered candidate group ids.
     cand: Vec<u32>,
     cost: Duration,
@@ -255,6 +260,7 @@ impl IncrementalGrouper {
             has_empty_member: Vec::new(),
             seen: Vec::new(),
             stamp: 0,
+            group_min_card: Vec::new(),
             cand: Vec::new(),
             cost: Duration::ZERO,
         }
@@ -289,6 +295,7 @@ impl IncrementalGrouper {
                 if cset.is_empty() {
                     self.has_empty_member[g] = true;
                 }
+                self.group_min_card[g] = self.group_min_card[g].min(cset.len() as u32);
                 group.member_clusters.push(cset);
                 g
             }
@@ -299,6 +306,7 @@ impl IncrementalGrouper {
                 }
                 self.has_empty_member.push(cset.is_empty());
                 self.seen.push(0);
+                self.group_min_card.push(cset.len() as u32);
                 self.groups.push(QueryGroup {
                     members: vec![batch_idx],
                     clusters: cset.clone(),
@@ -355,6 +363,30 @@ impl IncrementalGrouper {
     }
 
     fn group_matches(&self, g: usize, cset: &ClusterSet) -> bool {
+        // Group-level prune ahead of the member loop (ROADMAP: candidate
+        // pruning via union-cardinality bounds). Every member m is a subset
+        // of the group union C(G), so `|c∩m| <= |c∩C(G)|`, and
+        // `|c∪m| >= max(|c|, |m|) >= max(|c|, min member card)` — hence
+        // `J(c, m) <= |c∩C(G)| / max(|c|, min_card)` for ALL members at
+        // once. When even this bound misses θ, single-link's `any` and
+        // complete-link's `all` (a group always holds >= 1 member) are both
+        // false without touching a single member set. The bound is the same
+        // correctly-rounded f64 division the exact kernel computes, and
+        // division is monotone in both operands, so the computed bound can
+        // never land below a computed member Jaccard — pruning on
+        // `bound < θ` cannot disagree with the oracle
+        // (rust/tests/grouping_oracle.rs pins parity).
+        if self.theta > 0.0 {
+            let denom = cset.len().max(self.group_min_card[g] as usize);
+            // denom == 0 means both `c` and some member are empty —
+            // J(∅, ∅) = 1 by convention, so the prune must stand aside.
+            if denom > 0 {
+                let inter = cset.intersection_len(&self.groups[g].clusters);
+                if (inter as f64) / (denom as f64) < self.theta {
+                    return false;
+                }
+            }
+        }
         let members = &self.groups[g].member_clusters;
         let clears = |m: &ClusterSet| {
             // Cardinality bound first: when even min/max misses θ the exact
@@ -382,6 +414,7 @@ impl IncrementalGrouper {
         self.has_empty_member.clear();
         self.seen.clear();
         self.stamp = 0;
+        self.group_min_card.clear();
         let next_first = next_first_links(&groups);
         let grouping_cost = self.cost + t0.elapsed();
         self.cost = Duration::ZERO;
@@ -718,6 +751,56 @@ mod tests {
         assert_eq!(second.groups.len(), 1);
         assert_eq!(second.groups[0].members, vec![0]);
         assert!(second.next_first[0].is_none());
+    }
+
+    #[test]
+    fn group_prune_bound_exactly_at_theta_does_not_prune() {
+        // Candidate {1,2,3,4} vs group {{1,2}}: the union bound is
+        // |c∩U| / max(|c|, min_card) = 2/4 = 0.5 — exactly θ — and the
+        // member Jaccard is also exactly 0.5. `bound < θ` is strict, so the
+        // member loop must still run and admit the query.
+        let batch = vec![pq(0, &[1, 2]), pq(1, &[1, 2, 3, 4])];
+        for universe in [ClusterUniverse::new(100, 1024), ClusterUniverse::sorted()] {
+            let plan =
+                group_queries_indexed(&batch, 0.5, GroupingPolicy::SingleLink, universe);
+            assert_eq!(plan.groups.len(), 1, "boundary bound must not prune");
+            assert_eq!(plan.groups[0].members, vec![0, 1]);
+        }
+    }
+
+    #[test]
+    fn group_prune_never_admits_via_the_inflated_union() {
+        // Complete-link at θ = 0.5: {1,2,3} and {2,3,4} group (J = 2/4 =
+        // 0.5), union {1,2,3,4}, min member card 3. Candidate {1,2} scores
+        // bound = |c∩U| / max(|c|, min_card) = 2/3 ≥ θ — the prune lets it
+        // through — but member {2,3,4} misses (J = 1/5 < 0.5), so
+        // complete-link must still reject and found a new group. The prune
+        // can only ever reject; admission stays with the member loop.
+        let batch = vec![pq(0, &[1, 2, 3]), pq(1, &[2, 3, 4]), pq(2, &[1, 2])];
+        let want = group_queries(&batch, 0.5, GroupingPolicy::CompleteLink);
+        for universe in [ClusterUniverse::new(100, 1024), ClusterUniverse::sorted()] {
+            let got =
+                group_queries_indexed(&batch, 0.5, GroupingPolicy::CompleteLink, universe);
+            let members = |p: &GroupPlan| -> Vec<Vec<usize>> {
+                p.groups.iter().map(|g| g.members.clone()).collect()
+            };
+            assert_eq!(members(&got), members(&want));
+            assert_eq!(members(&got), vec![vec![0, 1], vec![2]]);
+        }
+        // Single-link chain where the prune stays above θ and the member
+        // loop admits: {1,2,3} ∪ {3,4,5} at θ = 0.2, candidate {5,6} —
+        // bound 1/3, member J({5,6},{3,4,5}) = 1/4 ≥ 0.2.
+        let chain = vec![pq(0, &[1, 2, 3]), pq(1, &[3, 4, 5]), pq(2, &[5, 6])];
+        let want = group_queries(&chain, 0.2, GroupingPolicy::SingleLink);
+        let got = group_queries_indexed(
+            &chain,
+            0.2,
+            GroupingPolicy::SingleLink,
+            ClusterUniverse::new(100, 1024),
+        );
+        assert_eq!(want.groups.len(), 1);
+        assert_eq!(got.groups.len(), 1);
+        assert_eq!(got.groups[0].members, vec![0, 1, 2]);
     }
 
     #[test]

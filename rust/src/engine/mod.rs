@@ -240,6 +240,31 @@ impl SearchEngine {
         Self::assemble_shared(cfg, spec, index, compute, shared_cache, shared_inflight)
     }
 
+    /// Like [`SearchEngine::open_shared`], but serve a *shard's view* of the
+    /// index: only `owned` clusters are scannable and fetchable
+    /// ([`IvfIndex::restrict`]). Doc ids stay global, so per-shard top-k
+    /// lists from restricted engines merge without translation.
+    pub fn open_restricted(
+        cfg: &Config,
+        spec: &DatasetSpec,
+        owned: &[u32],
+        shared_cache: Option<Arc<ShardedClusterCache>>,
+        shared_inflight: Option<Arc<inflight::InFlight>>,
+    ) -> anyhow::Result<SearchEngine> {
+        let index = IvfIndex::open(&cfg.dataset_dir(spec.name))?;
+        let compute = Compute::new(cfg.backend, &cfg.artifacts_dir, &cfg.encoder_model, spec)?;
+        let want = embedding_label(cfg.backend, &cfg.encoder_model);
+        anyhow::ensure!(
+            index.meta.embedding == want,
+            "index at {} was built with embedding '{}' but the config asks for '{}'; \
+             rebuild with `cagr build-index` or switch backend",
+            index.dir.display(),
+            index.meta.embedding,
+            want
+        );
+        Self::assemble_shared(cfg, spec, index.restrict(owned), compute, shared_cache, shared_inflight)
+    }
+
     /// Assemble from parts (tests build tiny indexes directly).
     pub fn assemble(
         cfg: &Config,
@@ -334,6 +359,17 @@ impl SearchEngine {
         let cluster_lists =
             self.compute
                 .nearest_centroids(&self.index, &embeddings, queries.len(), nprobe)?;
+        let mut cluster_lists = cluster_lists;
+        if self.index.allowed.is_some() {
+            // Restricted shard view: the poisoned centroid rows already lose
+            // every nearest race while owned rows remain, but when nprobe
+            // exceeds the owned count the tail of the list would still be
+            // unowned ids — drop them so the scan only ever yields what this
+            // shard can serve.
+            for list in &mut cluster_lists {
+                list.retain(|&c| self.index.is_owned(c));
+            }
+        }
         let share = t0.elapsed() / queries.len() as u32;
         Ok(queries
             .iter()
@@ -346,6 +382,36 @@ impl SearchEngine {
                 prep_cost: share,
             })
             .collect())
+    }
+
+    /// Prepare a router sub-request: the embedding is computed locally, but
+    /// the cluster list is the router's pre-resolved subset — no
+    /// first-level scan runs on the shard (the router already scanned the
+    /// full centroid table). Every id must be in range and owned by this
+    /// view; a violation is a routing bug and surfaces as an error rather
+    /// than silently degrading recall.
+    pub fn prepare_routed(
+        &mut self,
+        query: &Query,
+        clusters: &[u32],
+    ) -> anyhow::Result<PreparedQuery> {
+        let t0 = Instant::now();
+        let dim = self.index.meta.dim;
+        for &c in clusters {
+            anyhow::ensure!(
+                (c as usize) < self.index.meta.clusters,
+                "routed cluster id {c} out of range (clusters={})",
+                self.index.meta.clusters
+            );
+            anyhow::ensure!(self.index.is_owned(c), "routed cluster id {c} not owned by this shard");
+        }
+        let embeddings = self.compute.embed_queries(&self.spec, std::slice::from_ref(query))?;
+        Ok(PreparedQuery {
+            query: query.clone(),
+            embedding: embeddings[..dim].to_vec(),
+            clusters: clusters.to_vec(),
+            prep_cost: t0.elapsed(),
+        })
     }
 
     /// Search one prepared query: fetch + score its clusters, merge top-k.
@@ -587,6 +653,52 @@ mod tests {
     fn empty_prepare_is_ok() {
         let (mut engine, dir) = tiny_engine("empty", |_| {});
         assert!(engine.prepare(&[]).unwrap().is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn restricted_engine_scans_and_routes_only_owned_clusters() {
+        let (mut full, dir) = tiny_engine("restricted", |_| {});
+        let queries = generate_queries(&full.spec);
+        let prepared = full.prepare(&queries[..4]).unwrap();
+
+        // Restrict to half the clusters and rebuild an engine over the view.
+        let owned: Vec<u32> = (0..16).filter(|c| c % 2 == 0).collect();
+        let view = full.index.restrict(&owned);
+        let compute = crate::runtime::Compute::new(
+            full.cfg.backend,
+            &full.cfg.artifacts_dir,
+            &full.cfg.encoder_model,
+            &full.spec,
+        )
+        .unwrap();
+        let mut shard =
+            super::SearchEngine::assemble(&full.cfg, &full.spec, view, compute).unwrap();
+
+        // The local scan never yields unowned ids, even with nprobe == all.
+        let scanned = shard.prepare_with(&queries[..4], Some(16)).unwrap();
+        for pq in &scanned {
+            assert!(!pq.clusters.is_empty());
+            assert!(pq.clusters.iter().all(|c| c % 2 == 0), "unowned id scanned");
+        }
+
+        // Routed prep: owned subset searches to the same hits as the full
+        // engine fetching exactly those clusters (global doc ids).
+        let sub: Vec<u32> = prepared[0].clusters.iter().copied().filter(|c| c % 2 == 0).collect();
+        if !sub.is_empty() {
+            let routed = shard.prepare_routed(&prepared[0].query, &sub).unwrap();
+            assert_eq!(routed.clusters, sub);
+            assert_eq!(routed.embedding, prepared[0].embedding);
+            let (_, shard_hits) = shard.search(&routed).unwrap();
+            let mut oracle = prepared[0].clone();
+            oracle.clusters = sub.clone();
+            let (_, full_hits) = full.search(&oracle).unwrap();
+            assert_eq!(shard_hits, full_hits);
+        }
+
+        // Misrouted sub-requests are hard errors.
+        assert!(shard.prepare_routed(&prepared[0].query, &[1]).is_err(), "unowned");
+        assert!(shard.prepare_routed(&prepared[0].query, &[999]).is_err(), "out of range");
         std::fs::remove_dir_all(&dir).ok();
     }
 

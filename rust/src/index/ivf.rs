@@ -132,6 +132,15 @@ pub struct IvfIndex {
     pub meta: IvfMeta,
     /// `clusters x dim` row-major.
     pub centroids: Vec<f32>,
+    /// Shard ownership filter: `None` means the full index (every cluster
+    /// owned); `Some(mask)` is a restricted view created by [`restrict`]
+    /// that owns only the clusters whose mask bit is set. Cluster ids and
+    /// doc ids are *global* either way — a restricted view is the same
+    /// index with most of its clusters fenced off, so per-shard results
+    /// merge without any id translation.
+    ///
+    /// [`restrict`]: IvfIndex::restrict
+    pub allowed: Option<Box<[bool]>>,
 }
 
 impl IvfIndex {
@@ -199,7 +208,7 @@ impl IvfIndex {
         };
         meta.save(dir)?;
 
-        Ok(IvfIndex { dir: dir.to_path_buf(), meta, centroids: km.centroids })
+        Ok(IvfIndex { dir: dir.to_path_buf(), meta, centroids: km.centroids, allowed: None })
     }
 
     /// Open a previously built index (loads centroids + meta only).
@@ -220,7 +229,62 @@ impl IvfIndex {
             meta.clusters,
             meta.dim
         );
-        Ok(IvfIndex { dir: dir.to_path_buf(), meta, centroids })
+        Ok(IvfIndex { dir: dir.to_path_buf(), meta, centroids, allowed: None })
+    }
+
+    /// A shard's view of this index: only `owned` clusters are servable.
+    ///
+    /// Unowned centroid rows are overwritten with [`CENTROID_PAD_FILL`] so
+    /// they can never win a `nearest_centroids` race — a restricted view
+    /// asked to scan locally (rather than handed pre-resolved clusters by
+    /// the router) still only probes what it owns. [`read_cluster`] on an
+    /// unowned id is a hard error, not a silent empty read: the router
+    /// misrouting a sub-request must surface, never degrade recall.
+    ///
+    /// Out-of-range ids in `owned` are ignored; duplicate ids are fine.
+    ///
+    /// [`read_cluster`]: IvfIndex::read_cluster
+    pub fn restrict(&self, owned: &[u32]) -> IvfIndex {
+        let mut mask = vec![false; self.meta.clusters].into_boxed_slice();
+        for &c in owned {
+            if (c as usize) < self.meta.clusters {
+                mask[c as usize] = true;
+            }
+        }
+        let dim = self.meta.dim;
+        let mut centroids = self.centroids.clone();
+        for (c, ok) in mask.iter().enumerate() {
+            if !ok {
+                centroids[c * dim..(c + 1) * dim].fill(CENTROID_PAD_FILL);
+            }
+        }
+        IvfIndex {
+            dir: self.dir.clone(),
+            meta: self.meta.clone(),
+            centroids,
+            allowed: Some(mask),
+        }
+    }
+
+    /// Does this view serve cluster `id`? Always true on the full index.
+    pub fn is_owned(&self, id: u32) -> bool {
+        match &self.allowed {
+            None => (id as usize) < self.meta.clusters,
+            Some(mask) => mask.get(id as usize).copied().unwrap_or(false),
+        }
+    }
+
+    /// Cluster ids this view owns, ascending. The full index owns all.
+    pub fn owned_clusters(&self) -> Vec<u32> {
+        match &self.allowed {
+            None => (0..self.meta.clusters as u32).collect(),
+            Some(mask) => mask
+                .iter()
+                .enumerate()
+                .filter(|(_, &ok)| ok)
+                .map(|(c, _)| c as u32)
+                .collect(),
+        }
     }
 
     /// First-level lookup (native path): ids of the `nprobe` nearest
@@ -261,6 +325,10 @@ impl IvfIndex {
             (id as usize) < self.meta.clusters,
             "cluster id {id} out of range (clusters={})",
             self.meta.clusters
+        );
+        anyhow::ensure!(
+            self.is_owned(id),
+            "cluster id {id} not owned by this shard view"
         );
         storage::read_cluster(&self.dir, id, SCORE_N)
     }
@@ -402,6 +470,55 @@ mod tests {
         let pool = ThreadPool::new(2);
         let idx = IvfIndex::build(&dir, "tiny", "native", &data, dim, &build_params(), &pool).unwrap();
         assert!(idx.read_cluster(999).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn restricted_view_owns_only_its_clusters() {
+        let dir = tmpdir("restrict");
+        let (data, _, dim) = tiny_embeddings();
+        let pool = ThreadPool::new(2);
+        let idx = IvfIndex::build(&dir, "tiny", "native", &data, dim, &build_params(), &pool).unwrap();
+        let owned = [1u32, 4, 7, 999]; // out-of-range id is ignored
+        let view = idx.restrict(&owned);
+        assert_eq!(view.owned_clusters(), vec![1, 4, 7]);
+        assert!(view.is_owned(4) && !view.is_owned(0) && !view.is_owned(999));
+        // Full index owns everything.
+        assert!(idx.is_owned(0) && !idx.is_owned(idx.meta.clusters as u32));
+        assert_eq!(idx.owned_clusters().len(), idx.meta.clusters);
+
+        // Owned clusters read the same bytes as through the full index;
+        // unowned ids are a hard error.
+        let a = idx.read_cluster(4).unwrap();
+        let b = view.read_cluster(4).unwrap();
+        assert_eq!(a.doc_ids, b.doc_ids);
+        let err = view.read_cluster(0).unwrap_err().to_string();
+        assert!(err.contains("not owned"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn restricted_view_poisons_unowned_centroids() {
+        let dir = tmpdir("poison");
+        let (data, _, dim) = tiny_embeddings();
+        let pool = ThreadPool::new(2);
+        let idx = IvfIndex::build(&dir, "tiny", "native", &data, dim, &build_params(), &pool).unwrap();
+        let owned = [0u32, 3, 5, 9];
+        let view = idx.restrict(&owned);
+        // Owned rows untouched, unowned rows are all pad fill.
+        for c in 0..idx.meta.clusters {
+            let row = &view.centroids[c * dim..(c + 1) * dim];
+            if owned.contains(&(c as u32)) {
+                assert_eq!(row, &idx.centroids[c * dim..(c + 1) * dim], "cluster {c}");
+            } else {
+                assert!(row.iter().all(|&x| x == CENTROID_PAD_FILL), "cluster {c}");
+            }
+        }
+        // A local scan on the view therefore only ever returns owned ids.
+        let q = &data[..dim];
+        for got in view.nearest_centroids(q, owned.len()) {
+            assert!(owned.contains(&got), "unowned cluster {got} won a nearest race");
+        }
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -5,6 +5,13 @@
 //! score blocks through this structure is equivalent to the paper's "merge
 //! clusters into a temporary index, then search" (Code 1, steps 4–5) but
 //! never materializes the merged index.
+//!
+//! Selection is **canonical**: candidates are totally ordered by
+//! `(distance, doc_id)`, so the retained set depends only on the candidate
+//! *set*, never on arrival order. That total order is what makes sharded
+//! serving exact — merging per-shard top-k lists through a fresh `TopK`
+//! yields bit-identical results to one collector over the union
+//! (`rust/tests/topk_merge.rs`), including under exact distance ties.
 
 /// One search hit: global document id + squared L2 distance.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -13,12 +20,19 @@ pub struct Hit {
     pub distance: f32,
 }
 
-/// Bounded best-k collector (smallest distances win).
+/// Bounded best-k collector (smallest distances win; ties by doc id).
 #[derive(Debug, Clone)]
 pub struct TopK {
     k: usize,
-    /// Max-heap on distance: `heap[0]` is the worst retained hit.
+    /// Max-heap on `(distance, doc_id)`: `heap[0]` is the worst retained hit.
     heap: Vec<Hit>,
+}
+
+/// The canonical total order: `a` ranks strictly worse than `b` when it is
+/// farther, or equally far with a larger doc id.
+#[inline]
+fn worse(a: &Hit, b: &Hit) -> bool {
+    a.distance > b.distance || (a.distance == b.distance && a.doc_id > b.doc_id)
 }
 
 impl TopK {
@@ -36,8 +50,9 @@ impl TopK {
         self.heap.is_empty()
     }
 
-    /// Current admission threshold: any candidate at or beyond this distance
-    /// cannot enter. `f32::INFINITY` until the collector is full.
+    /// Current admission threshold: any candidate strictly beyond this
+    /// distance cannot enter (at this exact distance it may still enter on
+    /// the doc-id tie-break). `f32::INFINITY` until the collector is full.
     #[inline]
     pub fn threshold(&self) -> f32 {
         if self.heap.len() < self.k {
@@ -50,11 +65,12 @@ impl TopK {
     /// Offer one candidate.
     #[inline]
     pub fn push(&mut self, doc_id: u32, distance: f32) {
+        let hit = Hit { doc_id, distance };
         if self.heap.len() < self.k {
-            self.heap.push(Hit { doc_id, distance });
+            self.heap.push(hit);
             self.sift_up(self.heap.len() - 1);
-        } else if distance < self.heap[0].distance {
-            self.heap[0] = Hit { doc_id, distance };
+        } else if worse(&self.heap[0], &hit) {
+            self.heap[0] = hit;
             self.sift_down(0);
         }
     }
@@ -64,7 +80,9 @@ impl TopK {
         debug_assert_eq!(doc_ids.len(), distances.len());
         for (&id, &d) in doc_ids.iter().zip(distances) {
             // Fast reject against the threshold before touching the heap.
-            if d < self.threshold() {
+            // `<=` not `<`: an equal-distance candidate may still displace
+            // the root on the doc-id tie-break.
+            if d <= self.threshold() {
                 self.push(id, d);
             }
         }
@@ -85,7 +103,7 @@ impl TopK {
     fn sift_up(&mut self, mut i: usize) {
         while i > 0 {
             let parent = (i - 1) / 2;
-            if self.heap[i].distance > self.heap[parent].distance {
+            if worse(&self.heap[i], &self.heap[parent]) {
                 self.heap.swap(i, parent);
                 i = parent;
             } else {
@@ -98,10 +116,10 @@ impl TopK {
         loop {
             let (l, r) = (2 * i + 1, 2 * i + 2);
             let mut largest = i;
-            if l < self.heap.len() && self.heap[l].distance > self.heap[largest].distance {
+            if l < self.heap.len() && worse(&self.heap[l], &self.heap[largest]) {
                 largest = l;
             }
-            if r < self.heap.len() && self.heap[r].distance > self.heap[largest].distance {
+            if r < self.heap.len() && worse(&self.heap[r], &self.heap[largest]) {
                 largest = r;
             }
             if largest == i {
@@ -197,13 +215,47 @@ mod tests {
 
     #[test]
     fn deterministic_tie_break() {
-        // Equal distances: first arrivals are retained (strict `<` admission),
-        // and the output is ordered by doc id within a tie.
+        // Equal distances resolve by doc id (canonical `(distance, doc_id)`
+        // order): the k smallest doc ids at the tied distance are retained,
+        // regardless of arrival order.
         let mut tk = TopK::new(2);
         tk.push(9, 1.0);
         tk.push(3, 1.0);
-        tk.push(7, 1.0); // not admitted: 1.0 is not < threshold 1.0
+        tk.push(7, 1.0); // displaces 9 on the doc-id tie-break
         let got: Vec<u32> = tk.into_sorted().iter().map(|h| h.doc_id).collect();
-        assert_eq!(got, vec![3, 9]);
+        assert_eq!(got, vec![3, 7]);
+    }
+
+    #[test]
+    fn selection_is_arrival_order_independent_under_ties() {
+        // Every permutation of a tie-heavy candidate set retains the same
+        // hits — the property sharded merge parity rests on.
+        let ids: [u32; 5] = [9, 3, 7, 1, 5];
+        let ds: [f32; 5] = [1.0, 1.0, 1.0, 2.0, 1.0];
+        let mut rng = Rng::new(11);
+        let baseline: Vec<Hit> = {
+            let mut tk = TopK::new(3);
+            for (&id, &d) in ids.iter().zip(&ds) {
+                tk.push(id, d);
+            }
+            tk.into_sorted()
+        };
+        assert_eq!(
+            baseline.iter().map(|h| h.doc_id).collect::<Vec<_>>(),
+            vec![3, 5, 7]
+        );
+        for _ in 0..20 {
+            let mut order: Vec<usize> = (0..ids.len()).collect();
+            // Fisher–Yates off the crate rng.
+            for i in (1..order.len()).rev() {
+                let j = rng.range(0, i + 1);
+                order.swap(i, j);
+            }
+            let mut tk = TopK::new(3);
+            for &i in &order {
+                tk.push(ids[i], ds[i]);
+            }
+            assert_eq!(tk.into_sorted(), baseline);
+        }
     }
 }

@@ -100,6 +100,18 @@
 //! client.resume()?;                                 // ...or abort the restart
 //! ```
 //!
+//! ## Sharded serving
+//!
+//! `cagr serve --shards N` runs the single-binary sharded tier
+//! ([`shard`], design note in `docs/SHARDING.md`): IVF clusters are
+//! partitioned across N in-process shard servers (hash by default;
+//! `--shard-policy popularity` balances by cluster size and replicates
+//! hot clusters for `--shard-replicas` owners), and a scatter-gather
+//! router in front speaks the same wire protocol as an unsharded server —
+//! clients don't change. Per-shard top-k streams merge exactly through
+//! [`index::TopK`]'s canonical order; with `--shards 1` serving is
+//! bit-identical to the unsharded stack (`rust/tests/sharding.rs`).
+//!
 //! Start at `examples/quickstart.rs` for an end-to-end in-process tour and
 //! `examples/serve_workload.rs` for the full client/server loop;
 //! [`engine::SearchEngine`] has single-query semantics,
@@ -118,6 +130,7 @@ pub mod runtime;
 pub mod semcache;
 pub mod server;
 pub mod session;
+pub mod shard;
 pub mod sim;
 pub mod util;
 pub mod workload;

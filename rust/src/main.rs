@@ -7,6 +7,8 @@
 //!                [--max-inflight N] [--max-inflight-per-conn N]
 //!                [--drain-timeout 5s] [--semcache-capacity N]
 //!                [--semcache-threshold D2] [--semcache-ttl 30s]
+//!                [--shards N] [--shard-policy hash|popularity]
+//!                [--shard-replicas N]    sharded tier (docs/SHARDING.md)
 //!   client       --addr host:port [--queries N] [--dataset <name>]
 //!                [--top-k K] [--nprobe N] [--deadline 100ms] [--no-group]
 //!                [--no-cache] [--retries N] [--stats] [--health] [--drain]
@@ -99,6 +101,9 @@ fn load_config(args: &Args) -> anyhow::Result<Config> {
         ("artifacts-dir", "artifacts_dir"),
         ("semcache-capacity", "semcache_capacity"),
         ("semcache-threshold", "semcache_threshold"),
+        ("shards", "shards"),
+        ("shard-policy", "shard_policy"),
+        ("shard-replicas", "shard_replicas"),
         ("adaptive-window", "adaptive_window"),
         ("adaptive-min-queries", "adaptive_min_queries"),
         ("adaptive-max-queries", "adaptive_max_queries"),
@@ -180,6 +185,48 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     anyhow::ensure!(specs.len() == 1, "serve requires a single --dataset");
     let spec = &specs[0];
     let lanes = args.get_usize("lanes", 1)?.max(1);
+    let defaults = server::ServerConfig::default();
+    let server_cfg = server::ServerConfig {
+        addr: args.get_or("addr", "127.0.0.1:7471").to_string(),
+        window_max_wait: std::time::Duration::from_millis(args.get_u64("window-ms", 10)?),
+        window_max_queries: args.get_usize("window-queries", cfg.batch_max)?.max(1),
+        lanes,
+        max_inflight: args.get_usize("max-inflight", defaults.max_inflight)?.max(1),
+        max_inflight_per_conn: args
+            .get_usize("max-inflight-per-conn", defaults.max_inflight_per_conn)?
+            .max(1),
+        drain_timeout: args.get_duration("drain-timeout", defaults.drain_timeout)?,
+        semcache: cfg.semcache(),
+        adaptive: cagr::coordinator::AdaptiveConfig::from_config(&cfg),
+    };
+
+    // Sharded tier: partition clusters across in-process shard servers
+    // and put the scatter-gather router on the requested address
+    // (docs/SHARDING.md). The wire surface is identical either way.
+    if cfg.shards > 0 {
+        let tier = cagr::shard::tier::start(&cfg, spec, mode, &server_cfg)?;
+        println!(
+            "cagr serving {} on {} (proto=v{}, policy={}, shards={}, shard-policy={}, \
+             replicas={}, replicated-clusters={}, lanes={}/shard)",
+            spec.name,
+            tier.addr(),
+            cagr::proto::PROTOCOL_VERSION,
+            mode.name(),
+            cfg.shards,
+            cfg.shard_policy.name(),
+            cfg.shard_replicas,
+            tier.plan.replicated(),
+            lanes,
+        );
+        for (s, addr) in tier.shard_addrs().into_iter().enumerate() {
+            println!("  shard {s}: {addr} ({} clusters)", tier.plan.owned_by(s).len());
+        }
+        println!("press ctrl-c to stop");
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+
     // Provision in the foreground (build progress on the caller's tty),
     // then hand the server a session factory; each lane's session is
     // constructed on its own executor thread (PJRT is not Send). Multiple
@@ -215,20 +262,6 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
             }
             builder.open()
         }
-    };
-    let defaults = server::ServerConfig::default();
-    let server_cfg = server::ServerConfig {
-        addr: args.get_or("addr", "127.0.0.1:7471").to_string(),
-        window_max_wait: std::time::Duration::from_millis(args.get_u64("window-ms", 10)?),
-        window_max_queries: args.get_usize("window-queries", cfg.batch_max)?.max(1),
-        lanes,
-        max_inflight: args.get_usize("max-inflight", defaults.max_inflight)?.max(1),
-        max_inflight_per_conn: args
-            .get_usize("max-inflight-per-conn", defaults.max_inflight_per_conn)?
-            .max(1),
-        drain_timeout: args.get_duration("drain-timeout", defaults.drain_timeout)?,
-        semcache: cfg.semcache(),
-        adaptive: cagr::coordinator::AdaptiveConfig::from_config(&cfg),
     };
     let (max_inflight, max_per_conn, window_q) = (
         server_cfg.max_inflight,
@@ -343,6 +376,18 @@ fn cmd_client(args: &Args) -> anyhow::Result<()> {
                 sc.evictions,
             );
         }
+        if let Some(sh) = &s.shards {
+            println!(
+                "  shards: {} fanout={} merged={} multi-shard={} replica-routed={} errors={}",
+                sh.shards, sh.fanout, sh.merged, sh.multi_shard, sh.replica_routed, sh.errors,
+            );
+            for l in &sh.per_shard {
+                println!(
+                    "    shard {}: sub-requests={} clusters={}",
+                    l.shard, l.requests, l.clusters
+                );
+            }
+        }
         for l in &s.lanes {
             println!(
                 "  lane {}: policy={} inflight={} batches={} queries={} groups={} \
@@ -389,6 +434,10 @@ fn cmd_client(args: &Args) -> anyhow::Result<()> {
         },
         no_group: args.flag("no-group"),
         no_cache: args.flag("no-cache"),
+        // Pre-resolved cluster routing is the shard router's internal
+        // sub-request contract, not a CLI surface.
+        clusters: None,
+        shard: None,
     };
     let queries = generate_queries(&spec);
     // Overload handling: with --retries N, an overloaded rejection is

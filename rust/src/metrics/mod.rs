@@ -181,6 +181,110 @@ impl WindowGauges {
     }
 }
 
+/// One shard server's slice of the router gauges.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ShardLoad {
+    /// Shard index in the plan.
+    pub shard: u64,
+    /// Sub-requests routed to this shard.
+    pub requests: u64,
+    /// Cluster ids carried by those sub-requests (fan-out weight).
+    pub clusters: u64,
+}
+
+/// Gauges describing the scatter-gather router tier (`crate::shard`): how
+/// wide queries fan out across shard servers, how the merge behaves, and
+/// how replica steering distributes load. The router accumulates one
+/// instance behind a mutex and publishes it through the `stats` verb
+/// ([`crate::proto::StatsReply::shards`]); an unsharded server omits the
+/// field entirely.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct ShardGauges {
+    /// Shard servers behind the router.
+    pub shards: u64,
+    /// Sub-requests fanned out to shard servers.
+    pub fanout: u64,
+    /// Queries whose per-shard partial results were merged and answered.
+    pub merged: u64,
+    /// Queries whose cluster list spanned more than one shard.
+    pub multi_shard: u64,
+    /// Cluster routing decisions where a replicated cluster was steered to
+    /// the less-loaded of its owners (0 without replication).
+    pub replica_routed: u64,
+    /// Sub-requests answered by a shard with an error (overloaded,
+    /// unreachable, internal) — the router maps these to structured error
+    /// replies (`docs/PROTOCOL.md`).
+    pub errors: u64,
+    /// Per-shard routing load, indexable by `shard`.
+    pub per_shard: Vec<ShardLoad>,
+}
+
+impl ShardGauges {
+    /// Fresh gauges for a plan of `shards` shard servers.
+    pub fn new(shards: usize) -> ShardGauges {
+        ShardGauges {
+            shards: shards as u64,
+            per_shard: (0..shards)
+                .map(|s| ShardLoad { shard: s as u64, requests: 0, clusters: 0 })
+                .collect(),
+            ..Default::default()
+        }
+    }
+
+    /// Record one routed query: `parts[s]` = cluster ids sent to shard `s`
+    /// (only shards that received a sub-request appear).
+    pub fn record_scatter(&mut self, parts: &[(usize, usize)], replica_routed: u64) {
+        self.fanout += parts.len() as u64;
+        if parts.len() > 1 {
+            self.multi_shard += 1;
+        }
+        self.replica_routed += replica_routed;
+        for &(shard, clusters) in parts {
+            if let Some(load) = self.per_shard.get_mut(shard) {
+                load.requests += 1;
+                load.clusters += clusters as u64;
+            }
+        }
+    }
+
+    /// Record one completed merge.
+    pub fn record_merge(&mut self) {
+        self.merged += 1;
+    }
+
+    /// Record one sub-request that came back as an error.
+    pub fn record_error(&mut self) {
+        self.errors += 1;
+    }
+
+    /// The canonical JSON form, used by the wire `stats` reply.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("shards", Json::Num(self.shards as f64)),
+            ("fanout", Json::Num(self.fanout as f64)),
+            ("merged", Json::Num(self.merged as f64)),
+            ("multi_shard", Json::Num(self.multi_shard as f64)),
+            ("replica_routed", Json::Num(self.replica_routed as f64)),
+            ("errors", Json::Num(self.errors as f64)),
+            (
+                "per_shard",
+                Json::Arr(
+                    self.per_shard
+                        .iter()
+                        .map(|l| {
+                            obj(vec![
+                                ("shard", Json::Num(l.shard as f64)),
+                                ("requests", Json::Num(l.requests as f64)),
+                                ("clusters", Json::Num(l.clusters as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
 /// A set of latency samples with percentile/summary queries.
 #[derive(Debug, Clone, Default)]
 pub struct LatencyRecorder {

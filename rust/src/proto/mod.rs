@@ -32,7 +32,7 @@
 
 use crate::cache::CacheStats;
 use crate::coordinator::QueryOutcome;
-use crate::metrics::WindowGauges;
+use crate::metrics::{ShardGauges, ShardLoad, WindowGauges};
 use crate::semcache::SemCacheStats;
 use crate::util::json::{obj, Json};
 use crate::workload::Query;
@@ -124,6 +124,20 @@ pub struct SearchOptions {
     /// still be *inserted* into the cache. No-op when the server runs with
     /// the cache disabled. Additive field; absent parses as `false`.
     pub no_cache: bool,
+    /// Shard sub-request: probe exactly these pre-resolved cluster ids
+    /// instead of running the first-level centroid scan. Set by the
+    /// scatter-gather router (`crate::shard`), which resolved the query's
+    /// nprobe clusters against the shard plan; a shard server skips its own
+    /// scan, searches the listed clusters, and replies with its local
+    /// top-k. Takes the single-query path (like `no_group`) and skips the
+    /// semantic cache — a partial answer must never be cached or served as
+    /// a whole one. Additive field; absent parses as `None`.
+    pub clusters: Option<Vec<u32>>,
+    /// Shard sub-request: which shard (by plan index) this sub-request
+    /// targets — diagnostic stamp carried alongside `clusters` so shard
+    /// logs and traces can attribute sub-requests without knowing the
+    /// router's plan. Additive field; absent parses as `None`.
+    pub shard: Option<usize>,
 }
 
 impl SearchOptions {
@@ -254,6 +268,15 @@ impl Request {
                 if o.no_cache {
                     pairs.push(("no_cache", true.into()));
                 }
+                if let Some(cl) = &o.clusters {
+                    pairs.push((
+                        "clusters",
+                        Json::Arr(cl.iter().map(|&c| Json::Num(c as f64)).collect()),
+                    ));
+                }
+                if let Some(s) = o.shard {
+                    pairs.push(("shard", s.into()));
+                }
                 obj(pairs)
             }
             Request::Stats => obj(vec![("type", "stats".into())]),
@@ -321,6 +344,27 @@ fn parse_search(v: &Json) -> Result<SearchRequest, WireError> {
     if nprobe == Some(0) {
         return Err(WireError::with_id("'nprobe' must be > 0", Some(id)));
     }
+    let clusters = match v.get("clusters") {
+        None => None,
+        Some(x) => {
+            let arr = x.as_arr().ok_or_else(|| {
+                WireError::with_id("'clusters' must be an array", Some(id))
+            })?;
+            Some(
+                arr.iter()
+                    .map(|c| {
+                        c.as_usize().map(|u| u as u32).ok_or_else(|| {
+                            WireError::with_id(
+                                "'clusters' entries must be non-negative integers",
+                                Some(id),
+                            )
+                        })
+                    })
+                    .collect::<Result<Vec<u32>, WireError>>()?,
+            )
+        }
+    };
+    let shard = opt_usize("shard")?;
     Ok(SearchRequest {
         query: Query {
             id,
@@ -328,7 +372,15 @@ fn parse_search(v: &Json) -> Result<SearchRequest, WireError> {
             topic: v.get("topic").and_then(Json::as_usize).unwrap_or(0),
             tokens,
         },
-        options: SearchOptions { top_k, nprobe, deadline_ms, no_group, no_cache },
+        options: SearchOptions {
+            top_k,
+            nprobe,
+            deadline_ms,
+            no_group,
+            no_cache,
+            clusters,
+            shard,
+        },
     })
 }
 
@@ -431,6 +483,10 @@ pub struct StatsReply {
     /// reply predates the field) — distinct from `Some` all-zeros, which
     /// means "enabled but not yet exercised".
     pub semcache: Option<SemCacheStats>,
+    /// Scatter-gather router gauges ([`crate::shard`]): fan-out, merges,
+    /// replica steering, per-shard load. Additive field; `None` on an
+    /// unsharded server (or a reply predating the field).
+    pub shards: Option<ShardGauges>,
     pub lanes: Vec<LaneStats>,
 }
 
@@ -563,6 +619,7 @@ impl Reply {
                         .map(parse_window_gauges)
                         .unwrap_or_default(),
                     semcache: v.get("semcache").map(parse_semcache_stats),
+                    shards: v.get("shards").map(parse_shard_gauges),
                     lanes,
                 }))
             }
@@ -641,6 +698,9 @@ impl Reply {
                 if let Some(sc) = &s.semcache {
                     pairs.push(("semcache", sc.to_json()));
                 }
+                if let Some(sh) = &s.shards {
+                    pairs.push(("shards", sh.to_json()));
+                }
                 pairs.push((
                     "lanes",
                     Json::Arr(s.lanes.iter().map(lane_stats_json).collect()),
@@ -690,6 +750,33 @@ fn parse_window_gauges(v: &Json) -> WindowGauges {
         adaptations: n("adaptations"),
         widened: n("widened"),
         narrowed: n("narrowed"),
+    }
+}
+
+fn parse_shard_gauges(v: &Json) -> ShardGauges {
+    let n = |parent: &Json, name: &str| -> u64 {
+        parent.get(name).and_then(Json::as_f64).unwrap_or(0.0) as u64
+    };
+    ShardGauges {
+        shards: n(v, "shards"),
+        fanout: n(v, "fanout"),
+        merged: n(v, "merged"),
+        multi_shard: n(v, "multi_shard"),
+        replica_routed: n(v, "replica_routed"),
+        errors: n(v, "errors"),
+        per_shard: v
+            .get("per_shard")
+            .and_then(Json::as_arr)
+            .map(|arr| {
+                arr.iter()
+                    .map(|l| ShardLoad {
+                        shard: n(l, "shard"),
+                        requests: n(l, "requests"),
+                        clusters: n(l, "clusters"),
+                    })
+                    .collect()
+            })
+            .unwrap_or_default(),
     }
 }
 
@@ -771,11 +858,22 @@ mod tests {
             deadline_ms: Some(250),
             no_group: true,
             no_cache: true,
+            clusters: None,
+            shard: None,
+        };
+        // A router sub-request: pre-resolved cluster list + shard stamp.
+        let mut sub = SearchRequest::new(query(8));
+        sub.options = SearchOptions {
+            top_k: Some(5),
+            clusters: Some(vec![3, 0, 11]),
+            shard: Some(2),
+            ..Default::default()
         };
         for req in [
             Request::Hello { version: PROTOCOL_VERSION },
             Request::Search(SearchRequest::new(query(1))),
             Request::Search(search),
+            Request::Search(sub),
             Request::Stats,
             Request::Health,
             Request::Drain,
@@ -859,6 +957,18 @@ mod tests {
                     insertions: 7,
                     evictions: 2,
                 }),
+                shards: Some(ShardGauges {
+                    shards: 2,
+                    fanout: 19,
+                    merged: 12,
+                    multi_shard: 7,
+                    replica_routed: 3,
+                    errors: 1,
+                    per_shard: vec![
+                        ShardLoad { shard: 0, requests: 10, clusters: 31 },
+                        ShardLoad { shard: 1, requests: 9, clusters: 27 },
+                    ],
+                }),
                 lanes: vec![LaneStats {
                     lane: 0,
                     policy: "qgp".to_string(),
@@ -877,12 +987,13 @@ mod tests {
                     },
                 }],
             }),
-            // A semcache-disabled server omits the object entirely.
+            // A semcache-disabled, unsharded server omits both objects.
             Reply::Stats(StatsReply {
                 draining: false,
                 shared_cache: false,
                 scheduler: WindowGauges::default(),
                 semcache: None,
+                shards: None,
                 lanes: vec![],
             }),
             Reply::Health(HealthReply {
@@ -911,6 +1022,7 @@ mod tests {
                 assert!(!s.shared_cache);
                 assert_eq!(s.scheduler, WindowGauges::default());
                 assert_eq!(s.semcache, None);
+                assert_eq!(s.shards, None);
             }
             other => panic!("{other:?}"),
         }

@@ -142,10 +142,30 @@ struct ConnShared {
     sequencer: Mutex<Sequencer>,
 }
 
+/// Reorder buffer restoring per-connection request order: replies are
+/// accepted tagged with their request sequence number and released
+/// strictly in sequence. Shared with the shard router, whose collector
+/// threads finish sub-replies out of order across shards yet must answer
+/// each client connection in request order.
 #[derive(Default)]
-struct Sequencer {
+pub struct Sequencer {
     next_emit: u64,
     held: HashMap<u64, String>,
+}
+
+impl Sequencer {
+    /// Accept the reply for sequence `seq`; returns every line that is now
+    /// in order (possibly none). Each sequence number must be accepted
+    /// exactly once, or later replies are held forever.
+    pub fn accept(&mut self, seq: u64, line: String) -> Vec<String> {
+        self.held.insert(seq, line);
+        let mut ready = Vec::new();
+        while let Some(next) = self.held.remove(&self.next_emit) {
+            self.next_emit += 1;
+            ready.push(next);
+        }
+        ready
+    }
 }
 
 impl ConnShared {
@@ -154,9 +174,7 @@ impl ConnShared {
     /// once, or later replies would be held forever.
     fn send_seq(&self, seq: u64, line: String) {
         let mut s = self.sequencer.lock().unwrap();
-        s.held.insert(seq, line);
-        while let Some(ready) = s.held.remove(&s.next_emit) {
-            s.next_emit += 1;
+        for ready in s.accept(seq, line) {
             // Writer gone (client disconnected): drop silently; the
             // sequencer still advances so siblings don't back up.
             let _ = self.tx.send(ready);
@@ -508,6 +526,7 @@ fn deadline_expired(work: &Work, now: Instant) -> bool {
 fn wants_bypass(req: &SearchRequest, session_top_k: usize) -> bool {
     req.options.no_group
         || req.options.nprobe.is_some()
+        || req.options.clusters.is_some()
         || req.options.top_k.is_some_and(|k| k > session_top_k)
 }
 
@@ -1044,6 +1063,10 @@ fn handle_connection(
                         shared_cache: state.shared_cache.load(Ordering::SeqCst),
                         scheduler: state.gauges.lock().unwrap().clone(),
                         semcache: state.semcache.as_ref().map(|sc| sc.stats()),
+                        // A single data-plane server never reports router
+                        // gauges; the shard router overwrites this field
+                        // when it aggregates per-shard stats.
+                        shards: None,
                         lanes,
                     })
                     .dump(),
@@ -1196,6 +1219,9 @@ mod tests {
         assert!(!wants_bypass(&w.request, 10), "smaller top_k truncates in-window");
         w.request.options.top_k = Some(25);
         assert!(wants_bypass(&w.request, 10), "larger top_k needs the bypass path");
+        let mut w = work(5, None, Duration::ZERO);
+        w.request.options.clusters = Some(vec![1, 2]);
+        assert!(wants_bypass(&w.request, 10), "router sub-requests run express");
     }
 
     #[test]

@@ -62,6 +62,7 @@ pub struct SessionBuilder {
     shared_cache: Option<Arc<ShardedClusterCache>>,
     shared_inflight: Option<Arc<InFlight>>,
     semcache: Option<Arc<crate::semcache::SemCache>>,
+    cluster_filter: Option<Vec<u32>>,
 }
 
 impl Default for SessionBuilder {
@@ -75,6 +76,7 @@ impl Default for SessionBuilder {
             shared_cache: None,
             shared_inflight: None,
             semcache: None,
+            cluster_filter: None,
         }
     }
 }
@@ -170,6 +172,16 @@ impl SessionBuilder {
         self
     }
 
+    /// Serve a shard's view of the index: only these cluster ids are
+    /// scannable and fetchable ([`crate::index::IvfIndex::restrict`]).
+    /// This is how `cagr serve --shards N` builds each shard server's
+    /// sessions; doc ids stay global so the router can merge per-shard
+    /// top-k lists directly.
+    pub fn cluster_filter(mut self, owned: Vec<u32>) -> Self {
+        self.cluster_filter = Some(owned);
+        self
+    }
+
     /// Validate the configuration, resolve the dataset, provision the index
     /// if requested, and assemble the serving session.
     pub fn open(self) -> anyhow::Result<Session> {
@@ -182,6 +194,7 @@ impl SessionBuilder {
             shared_cache,
             shared_inflight,
             semcache,
+            cluster_filter,
         } = self;
         cfg.validate()?;
         let spec = match (dataset, dataset_name) {
@@ -200,7 +213,12 @@ impl SessionBuilder {
         }
         let semcache =
             semcache.or_else(|| crate::semcache::SemCache::from_config(&cfg.semcache()));
-        let engine = SearchEngine::open_shared(&cfg, &spec, shared_cache, shared_inflight)?;
+        let engine = match &cluster_filter {
+            Some(owned) => {
+                SearchEngine::open_restricted(&cfg, &spec, owned, shared_cache, shared_inflight)?
+            }
+            None => SearchEngine::open_shared(&cfg, &spec, shared_cache, shared_inflight)?,
+        };
         let mut coordinator = Coordinator::new(engine, policy);
         coordinator.set_semcache(semcache);
         Ok(Session {
@@ -285,7 +303,9 @@ impl Session {
     /// search work. Requests overriding `nprobe` never probe or insert —
     /// their answers are not the default-path answer — and
     /// `opts.no_cache` skips the probe (the cold answer is still
-    /// inserted).
+    /// inserted). A request carrying `opts.clusters` is a shard router
+    /// sub-request: the pre-resolved clusters are searched directly (no
+    /// local scan, no semantic cache on either side).
     pub fn run_one(
         &mut self,
         query: &Query,
@@ -293,6 +313,16 @@ impl Session {
     ) -> anyhow::Result<QueryOutcome> {
         let semcache = self.coordinator.semcache().cloned();
         let engine = &mut self.coordinator.engine;
+        if let Some(clusters) = &opts.clusters {
+            // Router sub-request: the cluster list is pre-resolved against
+            // the full centroid table, so no local scan runs, and the
+            // semantic cache is never touched — a shard's partial answer is
+            // not the full answer and must not be cached or served as one.
+            let pq = engine.prepare_routed(query, clusters)?;
+            let (report, hits) = engine.search_with(&pq, opts.top_k)?;
+            self.totals.queries += 1;
+            return Ok(QueryOutcome { report, hits, group: 0 });
+        }
         let use_cache = semcache.is_some() && opts.nprobe.is_none();
         let top_k_eff = opts.top_k.unwrap_or(engine.cfg.top_k).max(1);
         let prepared = engine.prepare_with(std::slice::from_ref(query), opts.nprobe)?;

@@ -1,0 +1,32 @@
+//! Sharded serving tier: IVF cluster partitioning + a scatter-gather
+//! router over the typed protocol (`docs/SHARDING.md`).
+//!
+//! Three layers, composable and individually testable:
+//!
+//! * [`plan`] — [`plan::ShardPlan`]: the static cluster → shard
+//!   assignment (hash default; popularity-weighted LPT with hot-cluster
+//!   replication under [`crate::config::ShardPolicy::Popularity`]).
+//! * [`router`] — the protocol front-end: resolves each query's nprobe
+//!   clusters against the full centroid table, scatters per-shard
+//!   sub-requests down pipelined [`crate::client::Client`] connections,
+//!   merges the partial top-k streams exactly via [`crate::index::TopK`],
+//!   and answers every client connection in request order through the
+//!   server's [`crate::server::Sequencer`].
+//! * [`tier`] — [`tier::ShardTier`]: the single-binary sim behind
+//!   `cagr serve --shards N`, spawning in-process shard servers over
+//!   loopback plus the router in front.
+//!
+//! Shard servers are the **unchanged** [`crate::server`] stack: each one
+//! serves its cluster subset through a filtered index view
+//! ([`crate::index::IvfIndex::restrict`]) and treats routed sub-requests
+//! as ordinary express-path searches. With `--shards 1` the tier is
+//! bit-identical to an unsharded server on hits, distances, and disk
+//! reads (`rust/tests/sharding.rs`).
+
+pub mod plan;
+pub mod router;
+pub mod tier;
+
+pub use plan::ShardPlan;
+pub use router::{RouterConfig, RouterHandle};
+pub use tier::ShardTier;

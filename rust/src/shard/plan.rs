@@ -1,0 +1,219 @@
+//! Cluster → shard partitioning (`docs/SHARDING.md`).
+//!
+//! A [`ShardPlan`] assigns every IVF cluster id to one or more shard
+//! servers. Two policies ([`crate::config::ShardPolicy`]):
+//!
+//! * **hash** — `cluster % shards`. Stateless and uniform over ids; the
+//!   default, and the policy the `--shards 1` parity guarantee is proved
+//!   against (one shard owns everything either way).
+//! * **popularity** — weighted LPT (longest-processing-time) bin packing
+//!   over per-cluster weights (document counts by default): clusters are
+//!   placed heaviest-first onto the currently lightest shard, so the
+//!   per-shard weight spread is bounded even when cluster sizes are
+//!   skewed. Clusters at least twice the mean weight are additionally
+//!   **replicated** onto up to `replicas` shards; the router steers each
+//!   query to the least-loaded owner, turning a hot cluster from a
+//!   single-shard hotspot into spread load.
+//!
+//! The plan is deterministic: ties in weight break by cluster id, ties in
+//! load break by shard id. Every cluster always has at least one owner,
+//! and owner lists are sorted ascending.
+
+use crate::config::{Config, ShardPolicy};
+
+/// An assignment of every cluster id to its owning shard(s).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardPlan {
+    /// Number of shard servers the plan spans (at least 1).
+    pub shards: usize,
+    /// `owners[cluster]` = sorted shard ids serving that cluster
+    /// (non-empty; length > 1 only for replicated hot clusters).
+    pub owners: Vec<Vec<usize>>,
+}
+
+impl ShardPlan {
+    /// The default policy: cluster `c` lives on shard `c % shards`.
+    pub fn hash(clusters: usize, shards: usize) -> ShardPlan {
+        let shards = shards.max(1);
+        ShardPlan {
+            shards,
+            owners: (0..clusters).map(|c| vec![c % shards]).collect(),
+        }
+    }
+
+    /// Popularity-weighted LPT packing with hot-cluster replication.
+    ///
+    /// `weights[c]` is cluster `c`'s popularity proxy (document count);
+    /// zero-weight clusters still cost 1 so empty shards never soak up
+    /// every remaining cluster. `replicas` caps how many shards may own
+    /// one hot cluster (clamped to `[1, shards]`).
+    pub fn popularity(weights: &[u64], shards: usize, replicas: usize) -> ShardPlan {
+        let shards = shards.max(1);
+        let clusters = weights.len();
+        let cost = |c: usize| weights[c].max(1);
+
+        // LPT: heaviest cluster first (ties by id), always onto the
+        // lightest shard (ties by shard id).
+        let mut order: Vec<usize> = (0..clusters).collect();
+        order.sort_by(|&a, &b| weights[b].cmp(&weights[a]).then(a.cmp(&b)));
+        let mut load = vec![0u64; shards];
+        let mut owners: Vec<Vec<usize>> = vec![Vec::new(); clusters];
+        let lightest = |load: &[u64], skip: &[usize]| -> Option<usize> {
+            (0..load.len())
+                .filter(|s| !skip.contains(s))
+                .min_by_key(|&s| (load[s], s))
+        };
+        for &c in &order {
+            let s = lightest(&load, &[]).expect("at least one shard");
+            owners[c].push(s);
+            load[s] += cost(c);
+        }
+
+        // Replicate hot clusters (weight ≥ 2× mean) onto additional
+        // lightest shards so the router can steer around the hotspot.
+        let replicas = replicas.clamp(1, shards);
+        if replicas > 1 && clusters > 0 {
+            let mean = (weights.iter().sum::<u64>() / clusters as u64).max(1);
+            for c in 0..clusters {
+                if weights[c] < 2 * mean {
+                    continue;
+                }
+                while owners[c].len() < replicas {
+                    let Some(s) = lightest(&load, &owners[c]) else { break };
+                    owners[c].push(s);
+                    load[s] += cost(c);
+                }
+            }
+        }
+        for o in &mut owners {
+            o.sort_unstable();
+        }
+        ShardPlan { shards, owners }
+    }
+
+    /// Build the plan the config asks for; `weights` feeds the popularity
+    /// policy (its length fixes the cluster count for both policies).
+    pub fn from_config(cfg: &Config, weights: &[u64]) -> ShardPlan {
+        match cfg.shard_policy {
+            ShardPolicy::Hash => ShardPlan::hash(weights.len(), cfg.shards),
+            ShardPolicy::Popularity => {
+                ShardPlan::popularity(weights, cfg.shards, cfg.shard_replicas)
+            }
+        }
+    }
+
+    /// The shard ids owning `cluster` (empty only for out-of-range ids).
+    pub fn owners(&self, cluster: u32) -> &[usize] {
+        self.owners.get(cluster as usize).map(|o| o.as_slice()).unwrap_or(&[])
+    }
+
+    /// Every cluster id shard `shard` serves, ascending — the
+    /// `cluster_filter` for that shard's sessions.
+    pub fn owned_by(&self, shard: usize) -> Vec<u32> {
+        (0..self.owners.len() as u32)
+            .filter(|&c| self.owners[c as usize].contains(&shard))
+            .collect()
+    }
+
+    /// Clusters with more than one owner (hot replicas).
+    pub fn replicated(&self) -> usize {
+        self.owners.iter().filter(|o| o.len() > 1).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hash_plan_partitions_every_cluster_exactly_once() {
+        let plan = ShardPlan::hash(10, 4);
+        assert_eq!(plan.shards, 4);
+        for c in 0..10u32 {
+            assert_eq!(plan.owners(c), &[c as usize % 4]);
+        }
+        // owned_by covers the id space as a partition.
+        let mut seen = vec![0usize; 10];
+        for s in 0..4 {
+            for c in plan.owned_by(s) {
+                seen[c as usize] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&n| n == 1), "partition, no gaps or overlaps");
+        assert_eq!(plan.replicated(), 0);
+        // One shard degenerates to "own everything".
+        let one = ShardPlan::hash(6, 1);
+        assert_eq!(one.owned_by(0), (0..6).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn popularity_plan_balances_skewed_weights() {
+        // One giant cluster + many small ones: LPT must not stack smalls
+        // onto the giant's shard.
+        let weights = vec![100, 10, 10, 10, 10, 10, 10, 10, 10, 10, 10];
+        let plan = ShardPlan::popularity(&weights, 2, 1);
+        let load = |s: usize| -> u64 {
+            plan.owned_by(s).iter().map(|&c| weights[c as usize]).sum()
+        };
+        // Perfect split is 100 vs 100; LPT achieves it here.
+        assert_eq!(load(0) + load(1), 200);
+        assert!(load(0).abs_diff(load(1)) <= 10, "{} vs {}", load(0), load(1));
+        // Every cluster owned exactly once without replication.
+        assert!(weights.iter().enumerate().all(|(c, _)| plan.owners(c as u32).len() == 1));
+    }
+
+    #[test]
+    fn popularity_plan_replicates_hot_clusters() {
+        // Cluster 0 is ≥ 2× the mean; with replicas=3 over 4 shards it
+        // gains two extra owners, the cool clusters stay single-owner.
+        let weights = vec![400, 10, 10, 10, 10, 10, 10, 10];
+        let plan = ShardPlan::popularity(&weights, 4, 3);
+        assert_eq!(plan.owners(0).len(), 3, "hot cluster replicated");
+        for c in 1..8u32 {
+            assert_eq!(plan.owners(c).len(), 1, "cool cluster {c} not replicated");
+        }
+        assert_eq!(plan.replicated(), 1);
+        // Owner lists are sorted and distinct.
+        let o = plan.owners(0);
+        assert!(o.windows(2).all(|w| w[0] < w[1]), "{o:?}");
+        // owned_by is consistent with owners().
+        for s in 0..4 {
+            for c in plan.owned_by(s) {
+                assert!(plan.owners(c).contains(&s));
+            }
+        }
+    }
+
+    #[test]
+    fn popularity_replicas_clamp_to_shard_count() {
+        let weights = vec![500, 1, 1];
+        let plan = ShardPlan::popularity(&weights, 2, 16);
+        assert_eq!(plan.owners(0).len(), 2, "cannot replicate past the shard count");
+        // Zero-weight clusters still get exactly one owner.
+        let plan = ShardPlan::popularity(&[0, 0, 0, 0], 2, 1);
+        assert!((0..4u32).all(|c| plan.owners(c).len() == 1));
+    }
+
+    #[test]
+    fn plans_are_deterministic() {
+        let weights = vec![7, 7, 7, 3, 3, 9, 1, 0, 12, 5];
+        let a = ShardPlan::popularity(&weights, 3, 2);
+        let b = ShardPlan::popularity(&weights, 3, 2);
+        assert_eq!(a, b);
+        assert_eq!(ShardPlan::hash(10, 3), ShardPlan::hash(10, 3));
+    }
+
+    #[test]
+    fn from_config_selects_the_policy() {
+        let mut cfg = Config::default();
+        cfg.shards = 2;
+        let weights = vec![5u64; 6];
+        assert_eq!(ShardPlan::from_config(&cfg, &weights), ShardPlan::hash(6, 2));
+        cfg.shard_policy = crate::config::ShardPolicy::Popularity;
+        cfg.shard_replicas = 2;
+        assert_eq!(
+            ShardPlan::from_config(&cfg, &weights),
+            ShardPlan::popularity(&weights, 2, 2)
+        );
+    }
+}

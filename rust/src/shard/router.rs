@@ -1,0 +1,835 @@
+//! Scatter-gather router over the typed protocol (`docs/SHARDING.md`).
+//!
+//! The router is a protocol-speaking front-end that owns **no index
+//! data** except the centroid table: it accepts ordinary client
+//! connections (same handshake, same verbs as an unsharded server),
+//! resolves each query's `nprobe` nearest clusters against the *full*
+//! centroid set, partitions that cluster list by the [`ShardPlan`]'s
+//! owners, and fans one *sub-request* per involved shard down pipelined
+//! [`crate::client::Client`] connections. Sub-requests are plain `search`
+//! requests whose options carry the pre-resolved cluster subset
+//! (`options.clusters`) — shard servers run them on the express path with
+//! no local centroid scan and no semantic-cache probe (a partial answer
+//! must never be cached as the full one). Per-shard top-k streams merge
+//! through [`crate::index::TopK`], whose canonical `(distance, doc_id)`
+//! order makes the merge exact (`rust/tests/topk_merge.rs`).
+//!
+//! ## Ordering
+//!
+//! Sub-replies finish out of order *across* shards (a two-shard query may
+//! complete after a later one-shard query), so client-facing replies pass
+//! through the same per-connection [`Sequencer`] the server uses: each
+//! admitted request takes a sequence number, and its merged reply is
+//! released strictly in request order. *Within* one shard connection the
+//! correlation is FIFO — valid because shard servers answer each
+//! connection in request order (their own sequencer) and the resolver is
+//! the **sole writer** on every shard connection: the merge slot is
+//! enqueued on the shard's pending queue *before* the sub-request bytes
+//! are written, so the collector popping the front always holds the right
+//! slot.
+//!
+//! ## Replica steering and error mapping
+//!
+//! A cluster with several owners (popularity plan replication) is routed
+//! to the owner with the fewest outstanding sub-requests (ties to the
+//! lowest shard id). Shard errors map per `docs/PROTOCOL.md`: overload /
+//! deadline / drain rejections pass through with the original query id; a
+//! dead shard connection fails every query it still owes with `internal`
+//! ("shard N unreachable"); anything else a shard reports surfaces as
+//! `internal` tagged with the shard id. One failed sub-request fails the
+//! whole query — a silently partial answer would be indistinguishable
+//! from a complete one.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::client::{Client, ClientReader, ClientWriter};
+use crate::config::Config;
+use crate::index::{IvfIndex, TopK};
+use crate::metrics::ShardGauges;
+use crate::proto::{
+    self, ErrorCode, ErrorReply, Reply, Request, SearchHit, SearchOptions, SearchReply,
+    SearchRequest, PROTOCOL_VERSION,
+};
+use crate::server::Sequencer;
+use crate::shard::plan::ShardPlan;
+use crate::workload::DatasetSpec;
+
+/// Router tunables. The data-plane knobs (nprobe, top_k defaults) come
+/// from the same [`Config`] the shard servers run.
+pub struct RouterConfig {
+    /// Listen address (`"127.0.0.1:0"` for an ephemeral port).
+    pub addr: String,
+    /// One shard server address per plan shard, indexable by shard id.
+    pub shard_addrs: Vec<SocketAddr>,
+    pub plan: ShardPlan,
+    pub cfg: Config,
+    pub spec: DatasetSpec,
+}
+
+/// State shared by connection handlers, the resolver, and the collectors.
+struct RouterShared {
+    shutdown: AtomicBool,
+    draining: AtomicBool,
+    shard_addrs: Vec<SocketAddr>,
+    /// Outstanding sub-requests per shard — the replica-steering signal
+    /// and the health verb's inflight figure.
+    loads: Vec<AtomicU64>,
+    gauges: Mutex<ShardGauges>,
+}
+
+/// Per-client-connection reply routing: writer channel + the sequencer
+/// restoring request order over out-of-order merge completions.
+struct RouterConn {
+    tx: Sender<String>,
+    next_seq: AtomicU64,
+    sequencer: Mutex<Sequencer>,
+}
+
+impl RouterConn {
+    fn send_seq(&self, seq: u64, line: String) {
+        let mut s = self.sequencer.lock().unwrap();
+        for ready in s.accept(seq, line) {
+            let _ = self.tx.send(ready);
+        }
+    }
+}
+
+/// One query mid-merge: collectors for every involved shard fold their
+/// sub-reply in; whoever folds the last one emits the client reply.
+struct MergeState {
+    conn: Arc<RouterConn>,
+    seq: u64,
+    query_id: usize,
+    top_k: usize,
+    started: Instant,
+    remaining: usize,
+    hits: Vec<SearchHit>,
+    /// First error recorded wins; a later success cannot un-fail a query.
+    error: Option<ErrorReply>,
+}
+
+impl MergeState {
+    /// Build the final reply line (call only when `remaining == 0`).
+    fn finish_line(&mut self) -> String {
+        match self.error.take() {
+            Some(mut e) => {
+                e.query_id = Some(self.query_id);
+                Reply::Error(e).dump()
+            }
+            None => {
+                let mut topk = TopK::new(self.top_k.max(1));
+                for h in &self.hits {
+                    topk.push(h.doc, h.distance);
+                }
+                let hits = topk
+                    .into_sorted()
+                    .into_iter()
+                    .map(|h| SearchHit { doc: h.doc_id, distance: h.distance })
+                    .collect();
+                Reply::Search(SearchReply {
+                    query_id: self.query_id,
+                    latency_us: self.started.elapsed().as_micros() as u64,
+                    group: 0,
+                    hits,
+                })
+                .dump()
+            }
+        }
+    }
+}
+
+type PendingQueue = Mutex<VecDeque<Arc<Mutex<MergeState>>>>;
+
+/// A request travelling from its connection handler to the resolver.
+enum RouterMsg {
+    Route { conn: Arc<RouterConn>, seq: u64, request: SearchRequest, received_at: Instant },
+    Shutdown,
+}
+
+/// Running router; dropping it shuts the router down (shard servers are
+/// owned elsewhere — see [`crate::shard::tier`]).
+pub struct RouterHandle {
+    pub addr: SocketAddr,
+    shared: Arc<RouterShared>,
+    resolver_tx: Sender<RouterMsg>,
+    accept_thread: Option<JoinHandle<()>>,
+    resolver_thread: Option<JoinHandle<()>>,
+    collector_threads: Vec<JoinHandle<()>>,
+}
+
+impl RouterHandle {
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        if self.shared.shutdown.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        self.shared.draining.store(true, Ordering::SeqCst);
+        // Resolver exits on the sentinel and drops the shard writers; the
+        // shard servers see EOF, close, and the collectors drain out.
+        let _ = self.resolver_tx.send(RouterMsg::Shutdown);
+        if let Some(t) = self.resolver_thread.take() {
+            let _ = t.join();
+        }
+        for t in self.collector_threads.drain(..) {
+            let _ = t.join();
+        }
+        // Unblock the acceptor with a dummy connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for RouterHandle {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Start the router: connect to every shard (handshake included), boot
+/// the resolver (which owns the embedder — PJRT is not `Send`, so the
+/// compute backend is built on, and never leaves, that thread), then
+/// accept client connections on `cfg.addr`.
+pub fn start(cfg: RouterConfig) -> anyhow::Result<RouterHandle> {
+    anyhow::ensure!(
+        cfg.shard_addrs.len() == cfg.plan.shards,
+        "router needs one address per plan shard ({} != {})",
+        cfg.shard_addrs.len(),
+        cfg.plan.shards
+    );
+    let listener = TcpListener::bind(&cfg.addr)
+        .map_err(|e| anyhow::anyhow!("router binding {}: {e}", cfg.addr))?;
+    let addr = listener.local_addr()?;
+    let shards = cfg.plan.shards;
+    let shared = Arc::new(RouterShared {
+        shutdown: AtomicBool::new(false),
+        draining: AtomicBool::new(false),
+        shard_addrs: cfg.shard_addrs.clone(),
+        loads: (0..shards).map(|_| AtomicU64::new(0)).collect(),
+        gauges: Mutex::new(ShardGauges::new(shards)),
+    });
+
+    // Data-plane connections: one pipelined client per shard, split into
+    // a resolver-owned write half and a collector-owned read half.
+    let mut writers = Vec::with_capacity(shards);
+    let mut collector_threads = Vec::with_capacity(shards);
+    let pending: Vec<Arc<PendingQueue>> =
+        (0..shards).map(|_| Arc::new(Mutex::new(VecDeque::new()))).collect();
+    for (s, &shard_addr) in cfg.shard_addrs.iter().enumerate() {
+        let client = Client::connect(shard_addr)
+            .map_err(|e| anyhow::anyhow!("connecting shard {s} at {shard_addr}: {e}"))?;
+        let (writer, reader) = client.into_split();
+        writers.push(writer);
+        let q = Arc::clone(&pending[s]);
+        let sh = Arc::clone(&shared);
+        let thread = std::thread::Builder::new()
+            .name(format!("cagr-collect-{s}"))
+            .spawn(move || collector_loop(s, reader, &q, &sh))
+            .expect("spawn shard collector");
+        collector_threads.push(thread);
+    }
+
+    // The resolver thread: embeds, scans centroids, scatters. Startup is
+    // handshaked so a compute-backend failure surfaces here, not as a
+    // wedged router.
+    let (resolver_tx, resolver_rx) = std::sync::mpsc::channel::<RouterMsg>();
+    let (boot_tx, boot_rx) = std::sync::mpsc::channel::<anyhow::Result<()>>();
+    let index = Arc::new(IvfIndex::open(&cfg.cfg.dataset_dir(cfg.spec.name))?);
+    let resolver_thread = {
+        let shared = Arc::clone(&shared);
+        let pending: Vec<Arc<PendingQueue>> = pending.iter().map(Arc::clone).collect();
+        let plan = cfg.plan.clone();
+        let config = cfg.cfg.clone();
+        let spec = cfg.spec.clone();
+        std::thread::Builder::new()
+            .name("cagr-resolver".to_string())
+            .spawn(move || {
+                let compute = match crate::runtime::Compute::new(
+                    config.backend,
+                    &config.artifacts_dir,
+                    &config.encoder_model,
+                    &spec,
+                ) {
+                    Ok(c) => {
+                        let _ = boot_tx.send(Ok(()));
+                        c
+                    }
+                    Err(e) => {
+                        let _ = boot_tx.send(Err(e));
+                        return;
+                    }
+                };
+                let mut writers = writers;
+                while let Ok(msg) = resolver_rx.recv() {
+                    match msg {
+                        RouterMsg::Shutdown => break,
+                        RouterMsg::Route { conn, seq, request, received_at } => route_one(
+                            &compute, &index, &plan, &config, &spec, &shared, &pending,
+                            &mut writers, conn, seq, request, received_at,
+                        ),
+                    }
+                }
+                // Writers drop here: every shard connection closes and the
+                // collectors fail whatever is still pending.
+            })
+            .expect("spawn resolver thread")
+    };
+    match boot_rx.recv() {
+        Ok(Ok(())) => {}
+        Ok(Err(e)) => {
+            let _ = resolver_thread.join();
+            return Err(e);
+        }
+        Err(_) => anyhow::bail!("router resolver died during startup"),
+    }
+
+    // Accept loop: one handler thread per client connection.
+    let accept_shared = Arc::clone(&shared);
+    let accept_tx = resolver_tx.clone();
+    let accept_thread = std::thread::Builder::new()
+        .name("cagr-router-accept".to_string())
+        .spawn(move || {
+            for stream in listener.incoming() {
+                if accept_shared.shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = stream else { continue };
+                let tx = accept_tx.clone();
+                let sh = Arc::clone(&accept_shared);
+                std::thread::Builder::new()
+                    .name("cagr-router-conn".to_string())
+                    .spawn(move || handle_conn(stream, tx, sh))
+                    .ok();
+            }
+        })
+        .expect("spawn router accept thread");
+
+    Ok(RouterHandle {
+        addr,
+        shared,
+        resolver_tx,
+        accept_thread: Some(accept_thread),
+        resolver_thread: Some(resolver_thread),
+        collector_threads,
+    })
+}
+
+/// Resolve one query and scatter its sub-requests. Runs on the resolver
+/// thread — the sole writer on every shard connection, which is what
+/// makes the per-shard FIFO pending queues a valid correlation scheme.
+#[allow(clippy::too_many_arguments)]
+fn route_one(
+    compute: &crate::runtime::Compute,
+    index: &IvfIndex,
+    plan: &ShardPlan,
+    cfg: &Config,
+    spec: &DatasetSpec,
+    shared: &RouterShared,
+    pending: &[Arc<PendingQueue>],
+    writers: &mut [ClientWriter],
+    conn: Arc<RouterConn>,
+    seq: u64,
+    request: SearchRequest,
+    received_at: Instant,
+) {
+    let id = request.query.id;
+    let opts = &request.options;
+    let resolve = || -> anyhow::Result<Vec<u32>> {
+        let emb = compute.embed_queries(spec, std::slice::from_ref(&request.query))?;
+        let nprobe = opts.nprobe.unwrap_or(cfg.nprobe).clamp(1, index.meta.clusters);
+        let mut lists = compute.nearest_centroids(index, &emb, 1, nprobe)?;
+        Ok(lists.pop().unwrap_or_default())
+    };
+    let clusters = match resolve() {
+        Ok(c) => c,
+        Err(e) => {
+            shared.gauges.lock().unwrap().record_error();
+            conn.send_seq(
+                seq,
+                error_line(ErrorCode::Internal, format!("router resolve: {e}"), Some(id)),
+            );
+            return;
+        }
+    };
+
+    // Partition the scan order by owner; scan order is preserved inside
+    // each part, so a one-shard plan replays the exact unsharded fetch
+    // sequence (the `--shards 1` parity guarantee).
+    let mut parts: BTreeMap<usize, Vec<u32>> = BTreeMap::new();
+    let mut replica_routed = 0u64;
+    for c in clusters {
+        let s = match plan.owners(c) {
+            [] => continue, // unplanned id: full-index scan can't produce one
+            [only] => *only,
+            many => {
+                replica_routed += 1;
+                *many
+                    .iter()
+                    .min_by_key(|&&s| (shared.loads[s].load(Ordering::SeqCst), s))
+                    .unwrap()
+            }
+        };
+        parts.entry(s).or_default().push(c);
+    }
+    if parts.is_empty() {
+        conn.send_seq(
+            seq,
+            Reply::Search(SearchReply { query_id: id, latency_us: 0, group: 0, hits: Vec::new() })
+                .dump(),
+        );
+        return;
+    }
+    let scatter: Vec<(usize, usize)> = parts.iter().map(|(&s, v)| (s, v.len())).collect();
+    shared.gauges.lock().unwrap().record_scatter(&scatter, replica_routed);
+
+    let top_k = opts.top_k.unwrap_or(cfg.top_k).max(1);
+    let state = Arc::new(Mutex::new(MergeState {
+        conn,
+        seq,
+        query_id: id,
+        top_k,
+        started: received_at,
+        remaining: parts.len(),
+        hits: Vec::new(),
+        error: None,
+    }));
+    for (&s, clist) in &parts {
+        let sub = SearchOptions {
+            top_k: Some(top_k),
+            deadline_ms: opts.deadline_ms,
+            no_cache: opts.no_cache,
+            clusters: Some(clist.clone()),
+            shard: Some(s),
+            ..Default::default()
+        };
+        // Enqueue the merge slot BEFORE the bytes leave, and never pop it
+        // back on a failed write: the collector's dead-connection path
+        // fails the whole queue in order, keeping FIFO correlation intact.
+        pending[s].lock().unwrap().push_back(Arc::clone(&state));
+        shared.loads[s].fetch_add(1, Ordering::SeqCst);
+        let _ = writers[s].submit_with(&request.query, &sub);
+    }
+}
+
+/// One shard's collector: fold sub-replies into their merge slots in
+/// FIFO order; emit the client reply when a slot's last shard lands.
+fn collector_loop(
+    shard: usize,
+    mut reader: ClientReader,
+    pending: &PendingQueue,
+    shared: &RouterShared,
+) {
+    loop {
+        match reader.read_reply() {
+            Ok(Reply::Search(r)) => {
+                let Some(slot) = pending.lock().unwrap().pop_front() else { continue };
+                shared.loads[shard].fetch_sub(1, Ordering::SeqCst);
+                fold(&slot, shared, |st| {
+                    st.hits.extend(r.hits.iter().cloned());
+                });
+            }
+            Ok(Reply::Error(e)) => {
+                let Some(slot) = pending.lock().unwrap().pop_front() else { continue };
+                shared.loads[shard].fetch_sub(1, Ordering::SeqCst);
+                shared.gauges.lock().unwrap().record_error();
+                let mapped = map_shard_error(shard, e);
+                fold(&slot, shared, |st| {
+                    if st.error.is_none() {
+                        st.error = Some(mapped);
+                    }
+                });
+            }
+            // A stray control-plane reply on the data connection: ignore
+            // (the resolver never sends control verbs on this socket).
+            Ok(_) => {}
+            Err(_) => {
+                // Shard gone: every query it still owes fails, in order.
+                let owed: Vec<_> = pending.lock().unwrap().drain(..).collect();
+                for slot in owed {
+                    shared.loads[shard].fetch_sub(1, Ordering::SeqCst);
+                    shared.gauges.lock().unwrap().record_error();
+                    fold(&slot, shared, |st| {
+                        if st.error.is_none() {
+                            st.error = Some(ErrorReply::new(
+                                ErrorCode::Internal,
+                                format!("shard {shard} unreachable"),
+                                None,
+                            ));
+                        }
+                    });
+                }
+                break;
+            }
+        }
+    }
+}
+
+/// Apply `merge` to the slot, and emit the client reply if that was the
+/// last outstanding shard.
+fn fold(slot: &Arc<Mutex<MergeState>>, shared: &RouterShared, merge: impl FnOnce(&mut MergeState)) {
+    let mut st = slot.lock().unwrap();
+    merge(&mut st);
+    st.remaining -= 1;
+    if st.remaining == 0 {
+        if st.error.is_none() {
+            shared.gauges.lock().unwrap().record_merge();
+        }
+        let line = st.finish_line();
+        let conn = Arc::clone(&st.conn);
+        let seq = st.seq;
+        drop(st);
+        conn.send_seq(seq, line);
+    }
+}
+
+/// Map a shard's structured error onto the client-facing reply
+/// (`docs/PROTOCOL.md`, "router error mapping"): backpressure and
+/// deadline outcomes pass through untouched; everything else is an
+/// `internal` router-side failure tagged with the shard id.
+fn map_shard_error(shard: usize, e: ErrorReply) -> ErrorReply {
+    match e.code {
+        ErrorCode::Overloaded | ErrorCode::DeadlineExceeded | ErrorCode::ShuttingDown => e,
+        code => ErrorReply::new(
+            ErrorCode::Internal,
+            format!("shard {shard}: {} ({})", e.message, code.as_str()),
+            e.query_id,
+        ),
+    }
+}
+
+fn error_line(code: ErrorCode, message: impl Into<String>, query_id: Option<usize>) -> String {
+    Reply::Error(ErrorReply::new(code, message, query_id)).dump()
+}
+
+/// One client connection: the same wire surface as an unsharded server.
+/// Search requests take a sequence number and go to the resolver;
+/// control verbs are answered from this thread (stats/drain/resume fan
+/// out to the shards over fresh control connections).
+fn handle_conn(stream: TcpStream, resolver_tx: Sender<RouterMsg>, shared: Arc<RouterShared>) {
+    let peer_reader = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let mut writer = stream;
+    let reader = BufReader::new(peer_reader);
+    let (reply_tx, reply_rx) = std::sync::mpsc::channel::<String>();
+    let writer_thread = std::thread::Builder::new()
+        .name("cagr-router-conn-writer".to_string())
+        .spawn(move || {
+            while let Ok(resp) = reply_rx.recv() {
+                if writeln!(writer, "{resp}").is_err() {
+                    break;
+                }
+            }
+        })
+        .expect("spawn router connection writer");
+
+    let conn = Arc::new(RouterConn {
+        tx: reply_tx.clone(),
+        next_seq: AtomicU64::new(0),
+        sequencer: Mutex::new(Sequencer::default()),
+    });
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match Request::parse_line(&line) {
+            Err(e) => Some(error_line(ErrorCode::Malformed, e.message, e.query_id)),
+            Ok(Request::Hello { version }) => Some(if version == PROTOCOL_VERSION {
+                Reply::Hello { version: PROTOCOL_VERSION }.dump()
+            } else {
+                error_line(
+                    ErrorCode::VersionMismatch,
+                    format!("server speaks v{PROTOCOL_VERSION}, client sent v{version}"),
+                    None,
+                )
+            }),
+            Ok(Request::Health) => {
+                let inflight: u64 =
+                    shared.loads.iter().map(|l| l.load(Ordering::SeqCst)).sum();
+                Some(
+                    Reply::Health(proto::HealthReply {
+                        status: if shared.draining.load(Ordering::SeqCst) {
+                            "draining"
+                        } else {
+                            "ok"
+                        }
+                        .to_string(),
+                        version: PROTOCOL_VERSION,
+                        // The router's execution units are its shards.
+                        lanes: shared.shard_addrs.len(),
+                        inflight: inflight as usize,
+                    })
+                    .dump(),
+                )
+            }
+            Ok(Request::Stats) => Some(aggregate_stats(&shared)),
+            Ok(Request::Drain) => {
+                shared.draining.store(true, Ordering::SeqCst);
+                let (mut drained, mut remaining) = (true, 0usize);
+                for &addr in &shared.shard_addrs {
+                    match Client::connect(addr).and_then(|mut c| c.drain()) {
+                        Ok(d) => {
+                            drained &= d.drained;
+                            remaining += d.remaining;
+                        }
+                        Err(_) => drained = false,
+                    }
+                }
+                Some(Reply::Drain(proto::DrainReply { drained, remaining }).dump())
+            }
+            Ok(Request::Resume) => {
+                if !shared.shutdown.load(Ordering::SeqCst) {
+                    shared.draining.store(false, Ordering::SeqCst);
+                }
+                let mut admitting = !shared.draining.load(Ordering::SeqCst)
+                    && !shared.shutdown.load(Ordering::SeqCst);
+                for &addr in &shared.shard_addrs {
+                    match Client::connect(addr).and_then(|mut c| c.resume()) {
+                        Ok(r) => admitting &= r.admitting,
+                        Err(_) => admitting = false,
+                    }
+                }
+                Some(Reply::Resume(proto::ResumeReply { admitting }).dump())
+            }
+            Ok(Request::Search(request)) => {
+                let id = request.query.id;
+                if shared.draining.load(Ordering::SeqCst)
+                    || shared.shutdown.load(Ordering::SeqCst)
+                {
+                    // Rejections reply immediately without a sequence slot,
+                    // exactly like server-side admission rejections.
+                    Some(error_line(
+                        ErrorCode::ShuttingDown,
+                        "router is draining; not admitting new queries",
+                        Some(id),
+                    ))
+                } else {
+                    let seq = conn.next_seq.fetch_add(1, Ordering::SeqCst);
+                    let msg = RouterMsg::Route {
+                        conn: Arc::clone(&conn),
+                        seq,
+                        request,
+                        received_at: Instant::now(),
+                    };
+                    if resolver_tx.send(msg).is_err() {
+                        // Resolver gone (shutdown): answer through the
+                        // sequencer so no later reply is held by the gap.
+                        conn.send_seq(
+                            seq,
+                            error_line(
+                                ErrorCode::ShuttingDown,
+                                "router shutting down",
+                                Some(id),
+                            ),
+                        );
+                    }
+                    None
+                }
+            }
+        };
+        if let Some(line) = reply {
+            if reply_tx.send(line).is_err() {
+                break;
+            }
+        }
+    }
+    drop(reply_tx);
+    drop(conn);
+    let _ = writer_thread.join();
+}
+
+/// The router's `stats` verb: fan a control `stats` to every shard over
+/// fresh connections, sum the scheduler gauges field-wise (the two
+/// "effective bound" gauges take the max instead — summing bounds is
+/// meaningless), concatenate the lane lists with globally renumbered lane
+/// ids, and attach the router's own [`ShardGauges`]. Per-shard caches are
+/// independent, so `shared_cache` is false and the semantic-cache tier
+/// (disabled on shard servers) reports absent.
+fn aggregate_stats(shared: &RouterShared) -> String {
+    let mut agg = proto::StatsReply {
+        draining: shared.draining.load(Ordering::SeqCst),
+        shared_cache: false,
+        scheduler: Default::default(),
+        semcache: None,
+        shards: Some(shared.gauges.lock().unwrap().clone()),
+        lanes: Vec::new(),
+    };
+    for (s, &addr) in shared.shard_addrs.iter().enumerate() {
+        let st = match Client::connect(addr).and_then(|mut c| c.stats()) {
+            Ok(st) => st,
+            Err(e) => {
+                return error_line(
+                    ErrorCode::Internal,
+                    format!("stats from shard {s}: {e}"),
+                    None,
+                )
+            }
+        };
+        let (a, b) = (&mut agg.scheduler, &st.scheduler);
+        a.windows += b.windows;
+        a.window_queries += b.window_queries;
+        a.max_occupancy = a.max_occupancy.max(b.max_occupancy);
+        a.multi_conn_windows += b.multi_conn_windows;
+        a.groups += b.groups;
+        a.cross_conn_groups += b.cross_conn_groups;
+        a.express += b.express;
+        a.grouping_cost_us += b.grouping_cost_us;
+        a.recv_loop_cost_us += b.recv_loop_cost_us;
+        a.window_limit = a.window_limit.max(b.window_limit);
+        a.window_wait_us = a.window_wait_us.max(b.window_wait_us);
+        a.adaptations += b.adaptations;
+        a.widened += b.widened;
+        a.narrowed += b.narrowed;
+        for mut lane in st.lanes {
+            lane.lane = agg.lanes.len();
+            agg.lanes.push(lane);
+        }
+    }
+    Reply::Stats(agg).dump()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conn() -> (Arc<RouterConn>, std::sync::mpsc::Receiver<String>) {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let conn = Arc::new(RouterConn {
+            tx,
+            next_seq: AtomicU64::new(0),
+            sequencer: Mutex::new(Sequencer::default()),
+        });
+        (conn, rx)
+    }
+
+    fn shared(shards: usize) -> RouterShared {
+        RouterShared {
+            shutdown: AtomicBool::new(false),
+            draining: AtomicBool::new(false),
+            shard_addrs: Vec::new(),
+            loads: (0..shards).map(|_| AtomicU64::new(0)).collect(),
+            gauges: Mutex::new(ShardGauges::new(shards)),
+        }
+    }
+
+    fn slot(
+        conn: Arc<RouterConn>,
+        seq: u64,
+        remaining: usize,
+        top_k: usize,
+    ) -> Arc<Mutex<MergeState>> {
+        Arc::new(Mutex::new(MergeState {
+            conn,
+            seq,
+            query_id: 7,
+            top_k,
+            started: Instant::now(),
+            remaining,
+            hits: Vec::new(),
+            error: None,
+        }))
+    }
+
+    #[test]
+    fn merge_keeps_global_topk_and_emits_once() {
+        let (conn, rx) = conn();
+        let sh = shared(2);
+        let s = slot(conn, 0, 2, 3);
+        fold(&s, &sh, |st| {
+            st.hits.extend([
+                SearchHit { doc: 10, distance: 0.5 },
+                SearchHit { doc: 11, distance: 0.1 },
+            ]);
+        });
+        assert!(rx.try_recv().is_err(), "one shard still outstanding");
+        fold(&s, &sh, |st| {
+            st.hits.extend([
+                SearchHit { doc: 20, distance: 0.3 },
+                SearchHit { doc: 21, distance: 0.9 },
+            ]);
+        });
+        let line = rx.try_recv().expect("merged reply emitted");
+        let reply = Reply::parse_line(&line).unwrap();
+        match reply {
+            Reply::Search(r) => {
+                assert_eq!(r.query_id, 7);
+                let docs: Vec<u32> = r.hits.iter().map(|h| h.doc).collect();
+                assert_eq!(docs, vec![11, 20, 10], "global top-3 across shards");
+            }
+            other => panic!("expected search reply, got {other:?}"),
+        }
+        assert_eq!(sh.gauges.lock().unwrap().merged, 1);
+    }
+
+    #[test]
+    fn first_error_wins_and_fails_the_merge() {
+        let (conn, rx) = conn();
+        let sh = shared(2);
+        let s = slot(conn, 0, 2, 5);
+        fold(&s, &sh, |st| {
+            st.error = Some(ErrorReply::new(ErrorCode::Overloaded, "lane full", None));
+        });
+        // A later successful shard cannot un-fail the query.
+        fold(&s, &sh, |st| st.hits.push(SearchHit { doc: 1, distance: 0.1 }));
+        let line = rx.try_recv().unwrap();
+        match Reply::parse_line(&line).unwrap() {
+            Reply::Error(e) => {
+                assert_eq!(e.code, ErrorCode::Overloaded);
+                assert_eq!(e.query_id, Some(7), "query id restored for the client");
+            }
+            other => panic!("expected error reply, got {other:?}"),
+        }
+        assert_eq!(sh.gauges.lock().unwrap().merged, 0, "failed merges don't count");
+    }
+
+    #[test]
+    fn out_of_order_merges_release_in_request_order() {
+        // Query seq 1 (single shard) finishes before seq 0 (two shards):
+        // the sequencer must hold it until seq 0 lands.
+        let (conn, rx) = conn();
+        let sh = shared(2);
+        let slow = slot(Arc::clone(&conn), 0, 2, 2);
+        let fast = slot(Arc::clone(&conn), 1, 1, 2);
+        fold(&fast, &sh, |st| st.hits.push(SearchHit { doc: 9, distance: 0.2 }));
+        assert!(rx.try_recv().is_err(), "seq 1 held until seq 0 completes");
+        fold(&slow, &sh, |st| st.hits.push(SearchHit { doc: 1, distance: 0.4 }));
+        fold(&slow, &sh, |st| st.hits.push(SearchHit { doc: 2, distance: 0.3 }));
+        let first = rx.try_recv().unwrap();
+        let second = rx.try_recv().unwrap();
+        match (Reply::parse_line(&first).unwrap(), Reply::parse_line(&second).unwrap()) {
+            (Reply::Search(a), Reply::Search(b)) => {
+                assert_eq!(a.hits.iter().map(|h| h.doc).collect::<Vec<_>>(), vec![2, 1]);
+                assert_eq!(b.hits[0].doc, 9);
+            }
+            other => panic!("expected two search replies, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn shard_error_mapping() {
+        // Backpressure and deadline outcomes pass through untouched.
+        for code in [ErrorCode::Overloaded, ErrorCode::DeadlineExceeded, ErrorCode::ShuttingDown]
+        {
+            let e = map_shard_error(3, ErrorReply::new(code, "busy", Some(4)));
+            assert_eq!(e.code, code);
+            assert_eq!(e.message, "busy");
+        }
+        // Everything else becomes an internal failure tagged with the shard.
+        let e = map_shard_error(2, ErrorReply::new(ErrorCode::Malformed, "bad line", Some(4)));
+        assert_eq!(e.code, ErrorCode::Internal);
+        assert!(e.message.contains("shard 2") && e.message.contains("bad line"), "{}", e.message);
+    }
+}

@@ -1,0 +1,144 @@
+//! Single-binary sharded serving tier (`docs/SHARDING.md`).
+//!
+//! `cagr serve --shards N` runs the whole tier in one process: N shard
+//! servers — each the unchanged [`crate::server`] stack serving its
+//! cluster subset through a filtered index view
+//! (`Session::builder().cluster_filter(..)`) — bound to ephemeral
+//! loopback ports, plus the [`router`](crate::shard::router) in front on
+//! the requested address. Clients connect to the router exactly as they
+//! would to an unsharded server; the fan-out is invisible on the wire
+//! surface. The in-process sim is the deployment shape's dress rehearsal:
+//! the router already speaks real TCP to the shards, so splitting the
+//! tier across hosts is an addressing change, not a code change.
+
+use std::net::SocketAddr;
+
+use crate::config::Config;
+use crate::coordinator::Mode;
+use crate::server::{self, ServerConfig, ServerHandle};
+use crate::session::Session;
+use crate::shard::plan::ShardPlan;
+use crate::shard::router::{self, RouterConfig, RouterHandle};
+use crate::workload::DatasetSpec;
+
+/// The running tier: router in front, shard servers behind. Dropping the
+/// handle tears the whole tier down (router first, so no shard sees a
+/// mid-query disconnect from our side).
+pub struct ShardTier {
+    router: Option<RouterHandle>,
+    shards: Vec<ServerHandle>,
+    pub plan: ShardPlan,
+}
+
+impl ShardTier {
+    /// The client-facing address (the router's listener).
+    pub fn addr(&self) -> SocketAddr {
+        self.router.as_ref().expect("router runs for the tier's lifetime").addr
+    }
+
+    /// Per-shard server addresses, indexable by shard id.
+    pub fn shard_addrs(&self) -> Vec<SocketAddr> {
+        self.shards.iter().map(|h| h.addr).collect()
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop();
+    }
+
+    fn stop(&mut self) {
+        if let Some(router) = self.router.take() {
+            router.shutdown();
+        }
+        for shard in self.shards.drain(..) {
+            shard.shutdown();
+        }
+    }
+}
+
+impl Drop for ShardTier {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// Start the tier: partition clusters per `cfg.shard_policy` (weights =
+/// per-cluster document counts from the index meta), boot one shard
+/// server per partition on an ephemeral loopback port, then the router
+/// on `base.addr`. `base` is the per-shard server template — its
+/// `lanes` / window / admission knobs apply to every shard server; its
+/// semantic-cache tier is forcibly disabled (routed sub-requests never
+/// consult it, and a shard-local cache of partial answers would only
+/// burn memory).
+pub fn start(
+    cfg: &Config,
+    spec: &DatasetSpec,
+    mode: Mode,
+    base: &ServerConfig,
+) -> anyhow::Result<ShardTier> {
+    let shards = cfg.shards.max(1);
+    crate::harness::runner::ensure_dataset(cfg, spec)?;
+    let index = crate::index::IvfIndex::open(&cfg.dataset_dir(spec.name))?;
+    anyhow::ensure!(
+        shards <= index.meta.clusters,
+        "--shards {} exceeds the index's {} clusters (an empty shard serves nothing)",
+        shards,
+        index.meta.clusters
+    );
+    let weights: Vec<u64> = index.meta.cluster_sizes.iter().map(|&s| s as u64).collect();
+    let mut plan_cfg = cfg.clone();
+    plan_cfg.shards = shards;
+    let plan = ShardPlan::from_config(&plan_cfg, &weights);
+
+    let mut handles: Vec<ServerHandle> = Vec::with_capacity(shards);
+    for s in 0..shards {
+        let owned = plan.owned_by(s);
+        // Multi-lane shard servers share one cluster cache + one
+        // in-flight read registry per shard, mirroring the unsharded
+        // serve wiring; nothing is shared *across* shards.
+        let shared = if base.lanes > 1 {
+            let cache = std::sync::Arc::new(crate::cache::ShardedClusterCache::from_config(
+                cfg.cache_policy,
+                cfg.cache_entries,
+                cfg.cache_shards,
+                index.meta.read_profile_us.clone(),
+            ));
+            let inflight = std::sync::Arc::new(crate::engine::inflight::InFlight::new());
+            Some((cache, inflight))
+        } else {
+            None
+        };
+        let factory = {
+            let cfg = cfg.clone();
+            let spec = spec.clone();
+            move || -> anyhow::Result<Session> {
+                let mut builder = Session::builder()
+                    .config(cfg.clone())
+                    .dataset(spec.clone())
+                    .boxed_policy(mode.to_policy())
+                    .cluster_filter(owned.clone())
+                    .ensure_dataset(false);
+                if let Some((cache, inflight)) = &shared {
+                    builder = builder
+                        .shared_cache(std::sync::Arc::clone(cache))
+                        .shared_inflight(std::sync::Arc::clone(inflight));
+                }
+                builder.open()
+            }
+        };
+        let mut shard_cfg = base.clone();
+        shard_cfg.addr = "127.0.0.1:0".to_string();
+        shard_cfg.semcache = Default::default(); // capacity 0: tier disabled
+        let handle = server::start(factory, shard_cfg)
+            .map_err(|e| anyhow::anyhow!("starting shard {s}: {e}"))?;
+        handles.push(handle);
+    }
+
+    let router = router::start(RouterConfig {
+        addr: base.addr.clone(),
+        shard_addrs: handles.iter().map(|h| h.addr).collect(),
+        plan: plan.clone(),
+        cfg: cfg.clone(),
+        spec: spec.clone(),
+    })?;
+    Ok(ShardTier { router: Some(router), shards: handles, plan })
+}

@@ -24,6 +24,10 @@
 //!
 //! With `CAGR_SCENARIO_SMOKE=1` each scenario also drops a JSON summary
 //! in `results/scenario_<name>.json` (consumed by CI's bench-smoke job).
+//! The flash-crowd and drain-resume traces are additionally replayed
+//! through a **real `cagr serve` TCP socket** (`server::start` + pipelined
+//! [`cagr::client::Client`] connections), emitting
+//! `results/scenario_<name>_tcp.json` under the same gate.
 
 use std::collections::HashMap;
 use std::time::Duration;
@@ -398,6 +402,124 @@ fn adaptive_off_is_bit_identical_to_static_scheduler() {
     let a = drive(false);
     let b = drive(true);
     assert_eq!(a, b, "adaptive_window=off must be bit-identical to the static scheduler");
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}
+
+/// Flash-crowd and drain-resume replayed through a **real server
+/// socket**: `server::start` with the adaptive controller enabled,
+/// arrivals pipelined down a real `Client` connection in trace order.
+/// Admitted queries must come back exactly once, in submission order
+/// (the per-connection sequencer); the drain-resume trace additionally
+/// exercises the wire seam — `drain` mid-trace, a rejected probe with
+/// `ErrorCode::ShuttingDown`, `resume`, then the rest of the trace with
+/// zero admitted-query loss. Under `CAGR_SCENARIO_SMOKE=1` each scenario
+/// drops `results/scenario_<name>_tcp.json`.
+#[test]
+fn scenarios_replay_through_a_real_server_socket() {
+    use cagr::client::{Client, ClientError};
+    use cagr::proto::ErrorCode;
+    use cagr::server::ServerConfig;
+    use cagr::workload::scenario::Arrival;
+
+    let (cfg, spec) = test_cfg("tcp");
+    ensure_dataset(&cfg, &spec).unwrap();
+    let scfg = ScenarioConfig::default();
+    for sc in [Scenario::FlashCrowd, Scenario::DrainResume] {
+        let t = trace(&spec, sc, &scfg);
+        let factory = {
+            let cfg = cfg.clone();
+            let spec = spec.clone();
+            move || -> anyhow::Result<Session> {
+                Session::builder()
+                    .config(cfg.clone())
+                    .dataset(spec.clone())
+                    .policy(JaccardGrouping::default())
+                    .ensure_dataset(false)
+                    .open()
+            }
+        };
+        let handle = cagr::server::start(
+            factory,
+            ServerConfig {
+                addr: "127.0.0.1:0".to_string(),
+                window_max_wait: BASE.max_wait,
+                window_max_queries: BASE.max_queries,
+                adaptive: adaptive_cfg(),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut client = Client::connect(handle.addr).unwrap();
+        let mut latencies: Vec<u64> = Vec::with_capacity(t.arrivals.len());
+
+        // Pipelined sliding window over one connection; the per-connection
+        // sequencer must release replies in exactly submission order.
+        let mut replay = |client: &mut Client, arrivals: &[Arrival]| {
+            let mut received = Vec::with_capacity(arrivals.len());
+            let mut next = 0usize;
+            let mut outstanding = 0usize;
+            while received.len() < arrivals.len() {
+                while next < arrivals.len() && outstanding < 64 {
+                    client.submit(&arrivals[next].query).unwrap();
+                    next += 1;
+                    outstanding += 1;
+                }
+                let r = client.recv().unwrap();
+                latencies.push(r.latency_us);
+                received.push(r.query_id);
+                outstanding -= 1;
+            }
+            let sent: Vec<usize> = arrivals.iter().map(|a| a.query.id).collect();
+            assert_eq!(received, sent, "{}: replies out of submission order", sc.name());
+        };
+
+        let wall = std::time::Instant::now();
+        if let Some(seam) = t.drain_at {
+            replay(&mut client, &t.arrivals[..seam]);
+            let d = client.drain().unwrap();
+            assert!(d.drained, "{}: pipeline empty at the seam", sc.name());
+            assert_eq!(d.remaining, 0, "{}: nothing in flight at the seam", sc.name());
+            match client.search(&t.arrivals[seam].query) {
+                Err(ClientError::Server(e)) => {
+                    assert_eq!(e.code, ErrorCode::ShuttingDown, "{}", sc.name())
+                }
+                other => panic!("{}: draining server must reject, got {other:?}", sc.name()),
+            }
+            assert!(client.resume().unwrap().admitting, "{}: resume re-admits", sc.name());
+            replay(&mut client, &t.arrivals[seam..]);
+        } else {
+            replay(&mut client, &t.arrivals);
+        }
+        let wall = wall.elapsed();
+        assert_eq!(
+            latencies.len(),
+            t.arrivals.len(),
+            "{}: every admitted query answered exactly once over the wire",
+            sc.name()
+        );
+        drop(client);
+        handle.shutdown();
+
+        if std::env::var("CAGR_SCENARIO_SMOKE").is_ok() {
+            latencies.sort_unstable();
+            let p99 = latencies
+                .get(latencies.len().saturating_sub(1) * 99 / 100)
+                .copied()
+                .unwrap_or(0);
+            std::fs::create_dir_all("results").unwrap();
+            let doc = obj(vec![
+                ("scenario", sc.name().into()),
+                ("transport", "tcp".into()),
+                ("queries", t.arrivals.len().into()),
+                ("drain_seam", Json::Bool(t.drain_at.is_some())),
+                ("wall_us", Json::Num(wall.as_micros() as f64)),
+                ("p99_latency_us", Json::Num(p99 as f64)),
+            ]);
+            let path = format!("results/scenario_{}_tcp.json", sc.name().replace('-', "_"));
+            std::fs::write(&path, doc.pretty()).unwrap();
+            eprintln!("wrote {path}");
+        }
+    }
     std::fs::remove_dir_all(&cfg.data_dir).ok();
 }
 

@@ -250,6 +250,58 @@ fn duplicate_ids_and_empty_sets_match_oracle() {
 }
 
 #[test]
+fn group_prune_parity_near_the_bound() {
+    // The group-level union-cardinality prune
+    // (`|c∩C(G)| / max(|c|, min member card) < θ` short-circuits the member
+    // loop) must be invisible in the output. Batches are crafted so the
+    // bound repeatedly lands *exactly on* and *just either side of* θ:
+    // cluster sets are nested prefixes of 0..L, so intersections and
+    // unions hit every small-ratio value (1/2, 2/3, 3/4, ...) and θ sweeps
+    // the same ratios. Any strictness or rounding slip in the prune shows
+    // up as a partition difference against the naive oracle.
+    let prefix = |id: usize, len: usize, offset: u32| -> PreparedQuery {
+        PreparedQuery {
+            query: Query { id, template: 0, topic: 0, tokens: vec![] },
+            embedding: vec![],
+            clusters: (0..len as u32).map(|c| c + offset).collect(),
+            prep_cost: std::time::Duration::ZERO,
+        }
+    };
+    let ratio_thetas = [1.0 / 3.0, 0.25, 0.5, 2.0 / 3.0, 0.75, 0.2, 0.4, 0.6];
+    for seed in 0..40u64 {
+        let mut rng = Rng::new(60_000 + seed);
+        let n = rng.range(1, 80);
+        let batch: Vec<PreparedQuery> = (0..n)
+            .map(|id| {
+                // Overlapping prefix families: offsets 0/2/4 with lengths
+                // 1..=8 produce dense tie pressure on the bound.
+                let offset = (rng.range(0, 3) * 2) as u32;
+                prefix(id, rng.range(1, 9), offset)
+            })
+            .collect();
+        for &theta in &ratio_thetas {
+            for link in LINKS {
+                let want = fingerprint(&group_queries(&batch, theta, link));
+                for universe in [ClusterUniverse::new(64, 1024), ClusterUniverse::sorted()] {
+                    let indexed =
+                        fingerprint(&group_queries_indexed(&batch, theta, link, universe));
+                    let incremental =
+                        fingerprint(&incremental_plan(&batch, theta, link, universe));
+                    assert_eq!(
+                        indexed, want,
+                        "seed {seed}: prune diverges (theta={theta}, {link:?})"
+                    );
+                    assert_eq!(
+                        incremental, want,
+                        "seed {seed}: incremental prune diverges (theta={theta}, {link:?})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn incremental_grouper_windows_are_independent() {
     // Reusing one grouper across windows (the scheduler's lifecycle) must
     // match a fresh grouper per window: no postings/stamp leakage.

@@ -1,0 +1,373 @@
+//! Sharded serving tier end-to-end (`docs/SHARDING.md`): the
+//! scatter-gather router + in-process shard servers must be *exact* —
+//! same hits, same distances as one engine over the whole index — and
+//! must preserve per-connection reply order under pipelining.
+//!
+//! `shard_matrix_smoke` (gated on `CAGR_SHARD_SMOKE=1`, run by the CI
+//! bench-smoke job) sweeps `--shards {1,2,4} × --lanes {1,2}` and writes
+//! `results/shard_scaling.json`.
+
+use cagr::client::{Client, ClientError};
+use cagr::config::{Backend, Config, DiskProfile, ShardPolicy};
+use cagr::coordinator::Mode;
+use cagr::engine::SearchEngine;
+use cagr::harness::runner::ensure_dataset;
+use cagr::proto::{ErrorCode, SearchOptions, SearchReply};
+use cagr::server::ServerConfig;
+use cagr::session::Session;
+use cagr::shard::tier;
+use cagr::workload::{generate_queries, DatasetSpec};
+
+fn test_cfg(tag: &str) -> (Config, DatasetSpec) {
+    let mut cfg = Config::default();
+    cfg.data_dir =
+        std::env::temp_dir().join(format!("cagr-shard-{}-{tag}", std::process::id()));
+    cfg.clusters = 16;
+    cfg.nprobe = 4;
+    cfg.top_k = 5;
+    cfg.cache_entries = 8;
+    cfg.kmeans_iters = 4;
+    cfg.kmeans_sample = 2_000;
+    cfg.backend = Backend::Native;
+    cfg.disk_profile = DiskProfile::None;
+    (cfg, DatasetSpec::tiny(0x5A4D))
+}
+
+fn server_template() -> ServerConfig {
+    ServerConfig {
+        addr: "127.0.0.1:0".to_string(),
+        window_max_wait: std::time::Duration::from_millis(5),
+        window_max_queries: 32,
+        ..Default::default()
+    }
+}
+
+fn launch_tier(cfg: &Config, spec: &DatasetSpec, shards: usize) -> tier::ShardTier {
+    let mut cfg = cfg.clone();
+    cfg.shards = shards;
+    tier::start(&cfg, spec, Mode::QGP, &server_template()).unwrap()
+}
+
+fn launch_unsharded(cfg: &Config, spec: &DatasetSpec) -> cagr::server::ServerHandle {
+    ensure_dataset(cfg, spec).unwrap();
+    let factory = {
+        let cfg = cfg.clone();
+        let spec = spec.clone();
+        move || -> anyhow::Result<Session> {
+            Session::builder()
+                .config(cfg.clone())
+                .dataset(spec.clone())
+                .mode(Mode::QGP)
+                .ensure_dataset(false)
+                .open()
+        }
+    };
+    cagr::server::start(factory, server_template()).unwrap()
+}
+
+fn hit_sig(r: &SearchReply) -> Vec<(u32, u32)> {
+    r.hits.iter().map(|h| (h.doc, h.distance.to_bits())).collect()
+}
+
+#[test]
+fn shards_one_is_bit_identical_to_unsharded() {
+    // One shard owns every cluster, so routing is pure plumbing: hits,
+    // distances (bitwise), and disk reads must all match an unsharded
+    // server fed the same sequential stream. Both sides run the express
+    // single-query path (`no_group` on the unsharded server, routed
+    // sub-requests on the tier), so the fetch sequences are comparable
+    // query-for-query.
+    let (cfg, spec) = test_cfg("parity1");
+    let queries = generate_queries(&spec);
+    let n = 24;
+
+    let tier = launch_tier(&cfg, &spec, 1);
+    let mut via_tier = Vec::new();
+    {
+        let mut client = Client::connect(tier.addr()).unwrap();
+        for q in &queries[..n] {
+            via_tier.push(client.search(q).unwrap());
+        }
+    }
+    let mut tier_client = Client::connect(tier.addr()).unwrap();
+    let tier_stats = tier_client.stats().unwrap();
+    tier.shutdown();
+
+    let handle = launch_unsharded(&cfg, &spec);
+    let opts = SearchOptions { no_group: true, ..Default::default() };
+    let mut direct = Vec::new();
+    {
+        let mut client = Client::connect(handle.addr).unwrap();
+        for q in &queries[..n] {
+            direct.push(client.search_with(q, &opts).unwrap());
+        }
+    }
+    let mut flat_client = Client::connect(handle.addr).unwrap();
+    let flat_stats = flat_client.stats().unwrap();
+    handle.shutdown();
+
+    for (a, b) in via_tier.iter().zip(&direct) {
+        assert_eq!(a.query_id, b.query_id);
+        assert_eq!(hit_sig(a), hit_sig(b), "query {}: sharded result diverged", a.query_id);
+    }
+    // Disk reads: per-lane demand-cache misses are the read count; one
+    // shard serving everything must read exactly what the flat server did.
+    let reads = |s: &cagr::proto::StatsReply| -> u64 {
+        s.lanes.iter().map(|l| l.cache.misses).sum()
+    };
+    assert_eq!(
+        reads(&tier_stats),
+        reads(&flat_stats),
+        "--shards 1 must replay the exact unsharded disk-read sequence"
+    );
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}
+
+#[test]
+fn shards_four_match_single_shard_oracle() {
+    // Hash plan over 4 shards: every query's merged top-k must equal a
+    // direct single-engine search over the whole index, docs and
+    // distances bitwise (the TopK canonical order makes this a theorem,
+    // this test pins the wiring).
+    let (cfg, spec) = test_cfg("exact4");
+    let queries = generate_queries(&spec);
+    let tier = launch_tier(&cfg, &spec, 4);
+
+    let mut client = Client::connect(tier.addr()).unwrap();
+    let mut replies = Vec::new();
+    for q in &queries[..32] {
+        let r = client.search(q).unwrap();
+        assert_eq!(r.query_id, q.id);
+        assert_eq!(r.hits.len(), cfg.top_k);
+        replies.push(r);
+    }
+    tier.shutdown();
+
+    let mut oracle = SearchEngine::open(&cfg, &spec).unwrap();
+    for (q, r) in queries[..32].iter().zip(&replies) {
+        let (_, direct) = oracle.search_query(q).unwrap();
+        assert_eq!(
+            hit_sig(r),
+            direct.iter().map(|h| (h.doc_id, h.distance.to_bits())).collect::<Vec<_>>(),
+            "query {}: sharded merge diverged from the oracle",
+            q.id
+        );
+    }
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}
+
+#[test]
+fn popularity_plan_with_replicas_stays_exact() {
+    // Replica steering routes the same cluster to different owners over
+    // time; results must not depend on which replica answered.
+    let (mut cfg, spec) = test_cfg("poprep");
+    cfg.shard_policy = ShardPolicy::Popularity;
+    cfg.shard_replicas = 2;
+    let queries = generate_queries(&spec);
+    let tier = launch_tier(&cfg, &spec, 3);
+
+    let mut client = Client::connect(tier.addr()).unwrap();
+    let mut replies = Vec::new();
+    for q in &queries[..24] {
+        replies.push(client.search(q).unwrap());
+    }
+    tier.shutdown();
+
+    let mut oracle = SearchEngine::open(&cfg, &spec).unwrap();
+    for (q, r) in queries[..24].iter().zip(&replies) {
+        let (_, direct) = oracle.search_query(q).unwrap();
+        assert_eq!(
+            hit_sig(r),
+            direct.iter().map(|h| (h.doc_id, h.distance.to_bits())).collect::<Vec<_>>(),
+            "query {}: replicated plan diverged from the oracle",
+            q.id
+        );
+    }
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}
+
+#[test]
+fn router_preserves_order_under_pipelined_connections() {
+    // 8 concurrent connections, each pipelining 8 requests through a
+    // 2-shard tier. Multi-shard merges complete out of order across
+    // shards; the router's per-connection sequencer must still answer
+    // each connection strictly in request order, with no cross-connection
+    // leakage.
+    let (cfg, spec) = test_cfg("order");
+    let queries = generate_queries(&spec);
+    let tier = launch_tier(&cfg, &spec, 2);
+    let addr = tier.addr();
+
+    let mut workers = Vec::new();
+    for t in 0..8usize {
+        let qs: Vec<_> = queries.iter().skip(t).step_by(8).take(8).cloned().collect();
+        workers.push(std::thread::spawn(move || {
+            let mut client = Client::connect(addr).unwrap();
+            for q in &qs {
+                client.submit(q).unwrap();
+            }
+            let mut got = Vec::new();
+            for _ in 0..qs.len() {
+                got.push(client.recv().unwrap());
+            }
+            let sent: Vec<usize> = qs.iter().map(|q| q.id).collect();
+            let received: Vec<usize> = got.iter().map(|r| r.query_id).collect();
+            assert_eq!(received, sent, "connection {t}: replies out of request order");
+            got
+        }));
+    }
+    let mut oracle = SearchEngine::open(&cfg, &spec).unwrap();
+    for w in workers {
+        for r in w.join().unwrap() {
+            let q = queries.iter().find(|q| q.id == r.query_id).unwrap();
+            let (_, direct) = oracle.search_query(q).unwrap();
+            assert_eq!(
+                hit_sig(&r),
+                direct.iter().map(|h| (h.doc_id, h.distance.to_bits())).collect::<Vec<_>>(),
+                "query {}: hits leaked or corrupted under pipelining",
+                q.id
+            );
+        }
+    }
+    tier.shutdown();
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}
+
+#[test]
+fn per_shard_gauges_visible_via_stats() {
+    let (cfg, spec) = test_cfg("gauges");
+    let queries = generate_queries(&spec);
+    let tier = launch_tier(&cfg, &spec, 2);
+
+    let mut client = Client::connect(tier.addr()).unwrap();
+    let n = 16;
+    for q in &queries[..n] {
+        client.search(q).unwrap();
+    }
+    let stats = client.stats().unwrap();
+    let health = client.health().unwrap();
+    tier.shutdown();
+
+    let sh = stats.shards.expect("router stats must carry shard gauges");
+    assert_eq!(sh.shards, 2);
+    assert_eq!(sh.merged, n as u64, "every query merged and answered");
+    assert!(sh.fanout >= n as u64, "at least one sub-request per query");
+    assert_eq!(sh.errors, 0);
+    assert_eq!(sh.per_shard.len(), 2);
+    let sub_requests: u64 = sh.per_shard.iter().map(|l| l.requests).sum();
+    assert_eq!(sub_requests, sh.fanout, "per-shard loads sum to the fan-out");
+    assert!(
+        sh.per_shard.iter().all(|l| l.requests > 0),
+        "nprobe=4 over a hash plan must touch both shards: {:?}",
+        sh.per_shard
+    );
+    // Aggregated lanes: one per shard server, renumbered globally.
+    assert_eq!(stats.lanes.len(), 2);
+    assert_eq!(stats.lanes[0].lane, 0);
+    assert_eq!(stats.lanes[1].lane, 1);
+    assert!(stats.semcache.is_none(), "shard servers run without the semantic cache");
+    // Health reports the shard count as the router's execution width.
+    assert_eq!(health.lanes, 2);
+    assert_eq!(health.status, "ok");
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}
+
+#[test]
+fn router_drain_rejects_then_resume_readmits() {
+    let (cfg, spec) = test_cfg("drain");
+    let queries = generate_queries(&spec);
+    let tier = launch_tier(&cfg, &spec, 2);
+
+    let mut client = Client::connect(tier.addr()).unwrap();
+    client.search(&queries[0]).unwrap();
+    let d = client.drain().unwrap();
+    assert!(d.drained, "idle tier drains immediately");
+    match client.search(&queries[1]) {
+        Err(ClientError::Server(e)) => {
+            assert_eq!(e.code, ErrorCode::ShuttingDown);
+            assert_eq!(e.query_id, Some(queries[1].id));
+        }
+        other => panic!("draining router must reject, got {other:?}"),
+    }
+    let r = client.resume().unwrap();
+    assert!(r.admitting);
+    let reply = client.search(&queries[2]).unwrap();
+    assert_eq!(reply.query_id, queries[2].id);
+    tier.shutdown();
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}
+
+/// CI shard-matrix smoke (`CAGR_SHARD_SMOKE=1`): sweep shards × lanes,
+/// assert the shards=1 column reproduces unsharded results exactly, and
+/// emit `results/shard_scaling.json` for the artifact upload.
+#[test]
+fn shard_matrix_smoke() {
+    if std::env::var("CAGR_SHARD_SMOKE").ok().as_deref() != Some("1") {
+        eprintln!("shard_matrix_smoke: set CAGR_SHARD_SMOKE=1 to run");
+        return;
+    }
+    let (cfg, spec) = test_cfg("matrix");
+    let queries = generate_queries(&spec);
+    let n = 48;
+
+    // Unsharded reference stream (express path, same shape as routing).
+    let handle = launch_unsharded(&cfg, &spec);
+    let opts = SearchOptions { no_group: true, ..Default::default() };
+    let mut reference = Vec::new();
+    {
+        let mut client = Client::connect(handle.addr).unwrap();
+        for q in &queries[..n] {
+            reference.push(client.search_with(q, &opts).unwrap());
+        }
+    }
+    handle.shutdown();
+
+    let mut rows = Vec::new();
+    for &shards in &[1usize, 2, 4] {
+        for &lanes in &[1usize, 2] {
+            let mut tier_cfg = cfg.clone();
+            tier_cfg.shards = shards;
+            let mut template = server_template();
+            template.lanes = lanes;
+            let tier = tier::start(&tier_cfg, &spec, Mode::QGP, &template).unwrap();
+            let mut client = Client::connect(tier.addr()).unwrap();
+            let t0 = std::time::Instant::now();
+            let mut replies = Vec::new();
+            for q in &queries[..n] {
+                replies.push(client.search(q).unwrap());
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            let stats = client.stats().unwrap();
+            tier.shutdown();
+
+            if shards == 1 {
+                for (a, b) in replies.iter().zip(&reference) {
+                    assert_eq!(
+                        hit_sig(a),
+                        hit_sig(b),
+                        "shards=1 lanes={lanes}: diverged from unsharded reference"
+                    );
+                }
+            }
+            let sh = stats.shards.expect("shard gauges");
+            rows.push(format!(
+                "{{\"shards\": {shards}, \"lanes\": {lanes}, \"queries\": {n}, \
+                 \"wall_s\": {wall:.6}, \"qps\": {:.2}, \"fanout\": {}, \
+                 \"multi_shard\": {}, \"errors\": {}}}",
+                n as f64 / wall.max(1e-9),
+                sh.fanout,
+                sh.multi_shard,
+                sh.errors,
+            ));
+        }
+    }
+    std::fs::create_dir_all("results").unwrap();
+    let json = format!(
+        "{{\"suite\": \"shard_scaling\", \"dataset\": \"{}\", \"rows\": [\n  {}\n]}}\n",
+        spec.name,
+        rows.join(",\n  ")
+    );
+    std::fs::write("results/shard_scaling.json", json).unwrap();
+    eprintln!("shard_matrix_smoke: wrote results/shard_scaling.json");
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}

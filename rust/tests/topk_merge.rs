@@ -1,0 +1,148 @@
+//! Property tests for sharded top-k stream merging (`index/topk.rs`).
+//!
+//! The scatter-gather router (`shard/`) partitions a query's candidate
+//! clusters across shards, collects each shard's local top-k, and merges
+//! the per-shard lists through one fresh `TopK`. These tests pin the
+//! algebraic property that makes that exact: because `TopK` selects by the
+//! canonical total order `(distance, doc_id)` — independent of arrival
+//! order — the merge of disjoint per-shard top-k lists is *identical* to a
+//! single collector over the union of all candidates, including under
+//! exact distance ties, `k` larger than the total candidate count, empty
+//! shards, and any shard count.
+
+use cagr::index::topk::{Hit, TopK};
+use cagr::util::rng::Rng;
+
+/// Single-collector oracle over every candidate.
+fn oracle(cands: &[(u32, f32)], k: usize) -> Vec<Hit> {
+    let mut tk = TopK::new(k);
+    for &(id, d) in cands {
+        tk.push(id, d);
+    }
+    tk.into_sorted()
+}
+
+/// The router's merge: per-shard top-k lists re-collected through one heap.
+fn merged(shards: &[Vec<(u32, f32)>], k: usize) -> Vec<Hit> {
+    let mut out = TopK::new(k);
+    for shard in shards {
+        let mut local = TopK::new(k);
+        for &(id, d) in shard {
+            local.push(id, d);
+        }
+        for hit in local.into_sorted() {
+            out.push(hit.doc_id, hit.distance);
+        }
+    }
+    out.into_sorted()
+}
+
+/// Deal unique doc ids across `n_shards` disjoint shards with a seeded rng;
+/// `quantize` coarsens distances to force exact ties.
+fn deal(
+    rng: &mut Rng,
+    n_docs: usize,
+    n_shards: usize,
+    quantize: bool,
+) -> Vec<Vec<(u32, f32)>> {
+    let mut shards = vec![Vec::new(); n_shards];
+    for id in 0..n_docs {
+        let d = if quantize {
+            // ~8 distinct distance values over the pool: heavy tie pressure.
+            (rng.range(0, 8) as f32) * 0.25
+        } else {
+            rng.f32() * 100.0
+        };
+        shards[rng.range(0, n_shards)].push((id as u32, d));
+    }
+    shards
+}
+
+#[test]
+fn merge_of_disjoint_shards_matches_single_index_randomized() {
+    let mut rng = Rng::new(0x5AAD);
+    for trial in 0..80 {
+        let n_docs = rng.range(1, 400);
+        let n_shards = rng.range(1, 9);
+        let k = rng.range(1, 30);
+        let shards = deal(&mut rng, n_docs, n_shards, false);
+        let all: Vec<(u32, f32)> = shards.iter().flatten().copied().collect();
+        assert_eq!(
+            merged(&shards, k),
+            oracle(&all, k),
+            "trial {trial}: docs={n_docs} shards={n_shards} k={k}"
+        );
+    }
+}
+
+#[test]
+fn merge_is_exact_under_heavy_distance_ties() {
+    let mut rng = Rng::new(0x7135);
+    for trial in 0..80 {
+        let n_docs = rng.range(1, 300);
+        let n_shards = rng.range(2, 7);
+        let k = rng.range(1, 25);
+        let shards = deal(&mut rng, n_docs, n_shards, true);
+        let all: Vec<(u32, f32)> = shards.iter().flatten().copied().collect();
+        let got = merged(&shards, k);
+        assert_eq!(got, oracle(&all, k), "trial {trial}");
+        // The canonical order also means ties resolve to the smallest doc
+        // ids: everything retained at the boundary distance beats every
+        // dropped candidate at that distance by doc id.
+        if let Some(worst) = got.last() {
+            let dropped_better = all.iter().any(|&(id, d)| {
+                (d < worst.distance || (d == worst.distance && id < worst.doc_id))
+                    && !got.iter().any(|h| h.doc_id == id)
+            });
+            assert!(!dropped_better, "trial {trial}: canonical order violated");
+        }
+    }
+}
+
+#[test]
+fn k_larger_than_total_candidates_returns_everything_sorted() {
+    let shards = vec![
+        vec![(4u32, 2.0f32), (1, 1.0)],
+        vec![],
+        vec![(9, 1.0), (2, 3.0)],
+    ];
+    let all: Vec<(u32, f32)> = shards.iter().flatten().copied().collect();
+    let got = merged(&shards, 50);
+    assert_eq!(got.len(), 4, "every candidate survives when k exceeds the pool");
+    assert_eq!(got, oracle(&all, 50));
+    assert_eq!(
+        got.iter().map(|h| h.doc_id).collect::<Vec<_>>(),
+        vec![1, 9, 4, 2],
+        "ascending (distance, doc_id)"
+    );
+}
+
+#[test]
+fn empty_and_skewed_shards_are_harmless() {
+    // All candidates on one shard, the rest empty: the merge degenerates to
+    // the single-shard list.
+    let mut rng = Rng::new(3);
+    let cands: Vec<(u32, f32)> = (0..100).map(|i| (i as u32, rng.f32())).collect();
+    let mut shards = vec![Vec::new(); 4];
+    shards[2] = cands.clone();
+    assert_eq!(merged(&shards, 10), oracle(&cands, 10));
+    // Zero shards / zero candidates: empty result, no panic.
+    assert!(merged(&[], 10).is_empty());
+}
+
+#[test]
+fn merge_is_shard_count_invariant() {
+    // The same candidate pool dealt across 1, 2, 4, and 8 shards merges to
+    // the same final list — re-dealing never changes the answer.
+    let mut rng = Rng::new(0xCA6E);
+    let cands: Vec<(u32, f32)> =
+        (0..250).map(|i| (i as u32, (rng.range(0, 16) as f32) * 0.5)).collect();
+    let want = oracle(&cands, 12);
+    for n_shards in [1usize, 2, 4, 8] {
+        let mut shards = vec![Vec::new(); n_shards];
+        for (j, &c) in cands.iter().enumerate() {
+            shards[j % n_shards].push(c);
+        }
+        assert_eq!(merged(&shards, 12), want, "shards={n_shards}");
+    }
+}

@@ -12,6 +12,7 @@ use cagr::engine::PreparedQuery;
 use cagr::harness::{banner, bench, BenchStats};
 use cagr::index::{distance, ClusterBlock, TopK};
 use cagr::metrics::render_table;
+use cagr::util::json::{obj, Json};
 use cagr::util::rng::Rng;
 use cagr::workload::Query;
 
@@ -94,6 +95,7 @@ fn main() -> anyhow::Result<()> {
             dim: 1,
             doc_ids: vec![id],
             data: vec![0.0],
+            quant: None,
             bytes_on_disk: 1,
         })
     };
@@ -149,10 +151,175 @@ fn main() -> anyhow::Result<()> {
         println!("(artifacts/ missing: skipping PJRT dispatch benches)");
     }
 
+    // Scoring-kernel arms (docs/SCORING.md): scalar-f32 vs simd-f32 vs sq8
+    // across dims 128/768 and block sizes 1k/8k, plus a fig4-style
+    // equal-cache-bytes disk-read comparison; emitted to results/kernel.json
+    // so the CI bench-smoke job archives the measured speedups.
+    let kernel = kernel_bench(&mut rng, &mut stats)?;
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/kernel.json", kernel.pretty())?;
+    println!("kernel arms: results/kernel.json");
+
     let rows: Vec<Vec<String>> = stats.iter().map(|s| s.row()).collect();
     println!("{}", render_table(&BenchStats::HEADERS, &rows));
     std::hint::black_box(acc);
     Ok(())
+}
+
+/// Top-`k` row indices by ascending distance, ties broken by index — the
+/// recall oracle shared by all kernel arms.
+fn top_ids(dists: &[f32], k: usize) -> Vec<usize> {
+    use std::cmp::Ordering;
+    let mut idx: Vec<usize> = (0..dists.len()).collect();
+    idx.sort_by(|&a, &b| {
+        dists[a].partial_cmp(&dists[b]).unwrap_or(Ordering::Equal).then(a.cmp(&b))
+    });
+    idx.truncate(k);
+    idx
+}
+
+fn recall_at(oracle: &[usize], got: &[usize]) -> f64 {
+    let hits = got.iter().filter(|i| oracle.contains(i)).count();
+    hits as f64 / oracle.len().max(1) as f64
+}
+
+fn kernel_bench(rng: &mut Rng, stats: &mut Vec<BenchStats>) -> anyhow::Result<Json> {
+    use cagr::index::distance::{
+        l2_one_to_many, l2_one_to_many_auto, simd_active, sq8_encode_value, sq8_one_to_many,
+        sq8_params, sq8_quantize_query,
+    };
+
+    const K: usize = 10;
+    const RECALL_QUERIES: usize = 32;
+    let mut arms = Vec::new();
+    for &dim in &[128usize, 768] {
+        for &n in &[1_000usize, 8_000] {
+            let vecs: Vec<f32> = (0..n * dim).map(|_| rng.normal() as f32).collect();
+            let (min, scale) = sq8_params(&vecs);
+            let codes: Vec<u8> = vecs.iter().map(|&v| sq8_encode_value(v, min, scale)).collect();
+            let queries: Vec<Vec<f32>> = (0..RECALL_QUERIES)
+                .map(|_| (0..dim).map(|_| rng.normal() as f32).collect())
+                .collect();
+
+            // Timed arms score the first query; recall averages over all 32.
+            let q = &queries[0];
+            let mut qcode = Vec::new();
+            sq8_quantize_query(q, min, scale, &mut qcode);
+            let mut out = vec![0f32; n];
+            let iters = if n >= 8_000 { 60 } else { 200 };
+            let scalar = bench(&format!("kernel scalar-f32 {dim}d x{n}"), 5, iters, || {
+                l2_one_to_many(q, &vecs, dim, &mut out);
+                std::hint::black_box(&out);
+            });
+            let simd = bench(&format!("kernel simd-f32  {dim}d x{n}"), 5, iters, || {
+                l2_one_to_many_auto(q, &vecs, dim, &mut out);
+                std::hint::black_box(&out);
+            });
+            let sq8 = bench(&format!("kernel sq8       {dim}d x{n}"), 5, iters, || {
+                sq8_one_to_many(&qcode, &codes, dim, scale, n, &mut out);
+                std::hint::black_box(&out);
+            });
+
+            let (mut simd_recall, mut sq8_recall) = (0f64, 0f64);
+            let mut buf = vec![0f32; n];
+            for q in &queries {
+                l2_one_to_many(q, &vecs, dim, &mut buf);
+                let oracle = top_ids(&buf, K);
+                l2_one_to_many_auto(q, &vecs, dim, &mut buf);
+                simd_recall += recall_at(&oracle, &top_ids(&buf, K));
+                let mut qc = Vec::new();
+                sq8_quantize_query(q, min, scale, &mut qc);
+                sq8_one_to_many(&qc, &codes, dim, scale, n, &mut buf);
+                sq8_recall += recall_at(&oracle, &top_ids(&buf, K));
+            }
+            simd_recall /= RECALL_QUERIES as f64;
+            sq8_recall /= RECALL_QUERIES as f64;
+
+            let us = |s: &BenchStats| s.mean.as_secs_f64() * 1e6;
+            arms.push(obj(vec![
+                ("dim", Json::Num(dim as f64)),
+                ("n", Json::Num(n as f64)),
+                ("scalar_f32_us", Json::Num(us(&scalar))),
+                ("simd_f32_us", Json::Num(us(&simd))),
+                ("sq8_us", Json::Num(us(&sq8))),
+                ("simd_speedup", Json::Num(us(&scalar) / us(&simd).max(1e-9))),
+                ("sq8_speedup", Json::Num(us(&scalar) / us(&sq8).max(1e-9))),
+                ("simd_recall_at_10", Json::Num(simd_recall)),
+                ("sq8_recall_at_10", Json::Num(sq8_recall)),
+            ]));
+            stats.push(scalar);
+            stats.push(simd);
+            stats.push(sq8);
+        }
+    }
+
+    // Fig4-style workload: identical index + policy + query stream, one run
+    // per scoring mode, equal cache *bytes* (sq8's byte budget is exactly
+    // what cache_entries f32 blocks occupy — docs/SCORING.md). The claim
+    // under test: compact blocks stretch the same memory over more
+    // clusters, so sq8 takes strictly fewer demand disk reads.
+    use cagr::config::{Backend, Config, DiskProfile, Scoring};
+    use cagr::coordinator::GroupingWithPrefetch;
+    use cagr::harness::runner::{ensure_dataset, run_workload};
+    use cagr::workload::{generate_queries, DatasetSpec};
+
+    let spec = DatasetSpec::tiny(17);
+    let mut cfg = Config::default();
+    cfg.clusters = 16;
+    cfg.nprobe = 4;
+    cfg.top_k = 5;
+    cfg.cache_entries = 6;
+    cfg.kmeans_iters = 5;
+    cfg.kmeans_sample = 1_000;
+    cfg.backend = Backend::Native;
+    cfg.disk_profile = DiskProfile::None;
+    cfg.io_workers = 1;
+    cfg.cache_shards = 1;
+    ensure_dataset(&cfg, &spec)?;
+    let queries = generate_queries(&spec);
+
+    let mut misses = Vec::new();
+    for scoring in [Scoring::F32, Scoring::Sq8] {
+        let mut run_cfg = cfg.clone();
+        run_cfg.scoring = scoring;
+        let policy = GroupingWithPrefetch::boxed();
+        let result = run_workload(&run_cfg, &spec, policy, &queries, 16)?;
+        misses.push(result.cache_stats.misses);
+    }
+    let (f32_misses, sq8_misses) = (misses[0], misses[1]);
+    println!(
+        "fig4-style equal-cache-bytes: f32 misses={f32_misses}, sq8 misses={sq8_misses} \
+         (sq8 fewer: {})",
+        sq8_misses < f32_misses
+    );
+
+    let index = cagr::index::IvfIndex::open(&cfg.dataset_dir(spec.name))?;
+    let budget = cagr::engine::cache_byte_budget(
+        &{
+            let mut c = cfg.clone();
+            c.scoring = Scoring::Sq8;
+            c
+        },
+        &index.meta,
+    )
+    .unwrap_or(0);
+
+    Ok(obj(vec![
+        ("simd_feature", Json::Bool(cfg!(feature = "simd"))),
+        ("simd_active", Json::Bool(simd_active())),
+        ("arms", Json::Arr(arms)),
+        (
+            "fig4_style",
+            obj(vec![
+                ("dataset", Json::Str(spec.name.to_string())),
+                ("cache_entries", Json::Num(cfg.cache_entries as f64)),
+                ("cache_byte_budget", Json::Num(budget as f64)),
+                ("f32_misses", Json::Num(f32_misses as f64)),
+                ("sq8_misses", Json::Num(sq8_misses as f64)),
+                ("sq8_fewer_reads", Json::Bool(sq8_misses < f32_misses)),
+            ]),
+        ),
+    ]))
 }
 
 fn benchmark_seed() -> u64 {

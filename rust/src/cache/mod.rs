@@ -135,6 +135,14 @@ pub struct ClusterCache {
     stats: CacheStats,
     /// Per-cluster profiled read cost, indexed by cluster id.
     costs: Vec<u64>,
+    /// `Some(bytes)` switches admission/eviction from entry *count* to
+    /// resident *bytes* (`ClusterBlock::resident_bytes`), so compact sq8
+    /// blocks buy proportionally more resident clusters at equal memory.
+    /// `None` (the default) keeps the historical count semantics
+    /// bit-for-bit — the f32 path never sees the byte loop.
+    byte_budget: Option<u64>,
+    /// Sum of `resident_bytes()` over resident entries.
+    resident_bytes: u64,
 }
 
 impl ClusterCache {
@@ -147,6 +155,8 @@ impl ClusterCache {
             clock: 0,
             stats: CacheStats::default(),
             costs,
+            byte_budget: None,
+            resident_bytes: 0,
         }
     }
 
@@ -161,6 +171,25 @@ impl ClusterCache {
 
     pub fn capacity(&self) -> usize {
         self.capacity
+    }
+
+    /// Switch this cache to byte-budget accounting (or back with `None`).
+    /// Set before the cache takes traffic: the budget applies to future
+    /// inserts, it does not retroactively evict.
+    pub fn set_byte_budget(&mut self, budget: Option<u64>) {
+        if let Some(b) = budget {
+            assert!(b > 0, "cache byte budget must be > 0");
+        }
+        self.byte_budget = budget;
+    }
+
+    pub fn byte_budget(&self) -> Option<u64> {
+        self.byte_budget
+    }
+
+    /// Bytes currently resident (maintained in both accounting modes).
+    pub fn resident_bytes(&self) -> u64 {
+        self.resident_bytes
     }
 
     pub fn len(&self) -> usize {
@@ -229,14 +258,24 @@ impl ClusterCache {
         if self.entries.contains_key(&id) {
             return true; // racing demand load + prefetch: already resident
         }
-        while self.entries.len() >= self.capacity {
+        // Admission control: make room by count (default) or by bytes
+        // (byte budget set). The byte loop admits an oversized block into
+        // an otherwise empty cache rather than thrash forever — the budget
+        // is a target, and one resident block is always allowed.
+        let over_budget = |cache: &ClusterCache| match cache.byte_budget {
+            None => cache.entries.len() >= cache.capacity,
+            Some(budget) => {
+                !cache.entries.is_empty()
+                    && cache.resident_bytes.saturating_add(block.resident_bytes()) > budget
+            }
+        };
+        while over_budget(self) {
             match self.victim() {
                 Some(v) => {
                     // EdgeRAG semantics: eviction removes the block from
                     // memory entirely (the Arc drops when the engine's
                     // borrow ends).
-                    self.entries.remove(&v);
-                    self.stats.evictions += 1;
+                    self.evict(v);
                 }
                 None => {
                     self.stats.rejected_inserts += 1;
@@ -244,6 +283,7 @@ impl ClusterCache {
                 }
             }
         }
+        self.resident_bytes += block.resident_bytes();
         self.clock += 1;
         let cost_us = self.costs.get(id as usize).copied().unwrap_or(0);
         self.entries.insert(
@@ -310,6 +350,14 @@ impl ClusterCache {
         self.entries.keys().copied().collect()
     }
 
+    /// Remove `id` and keep the byte/eviction accounting consistent.
+    fn evict(&mut self, id: u32) {
+        if let Some(e) = self.entries.remove(&id) {
+            self.resident_bytes = self.resident_bytes.saturating_sub(e.block.resident_bytes());
+            self.stats.evictions += 1;
+        }
+    }
+
     /// Lowest-priority unpinned entry (deterministic tie-break by id).
     fn victim(&self) -> Option<u32> {
         self.entries
@@ -334,6 +382,7 @@ pub(crate) fn test_block(id: u32) -> Arc<ClusterBlock> {
         dim: 2,
         doc_ids: vec![id],
         data: vec![id as f32, 0.0],
+        quant: None,
         bytes_on_disk: 100 + id as u64,
     })
 }
@@ -499,6 +548,98 @@ mod tests {
         c.insert(test_block(3), false);
         assert!(!c.contains(1), "peek must not refresh recency");
         assert_eq!(c.stats().hits, 0);
+    }
+
+    /// A block with `rows` f32 rows of dim 16 (resident = rows*64 data +
+    /// rows*4 doc-id bytes, all rows valid), optionally compacted to sq8.
+    fn sized_block(id: u32, rows: usize, compact: bool) -> Arc<ClusterBlock> {
+        let mut b = ClusterBlock {
+            id,
+            len: rows,
+            dim: 16,
+            doc_ids: (0..rows as u32).collect(),
+            data: (0..rows * 16).map(|i| i as f32).collect(),
+            quant: None,
+            bytes_on_disk: 0,
+        };
+        if compact {
+            b.quantize(false);
+        }
+        Arc::new(b)
+    }
+
+    #[test]
+    fn byte_budget_accounts_by_footprint() {
+        // Budget = exactly two full-precision 10-row blocks.
+        let f32_bytes = sized_block(0, 10, false).resident_bytes();
+        let mut c = cache(CachePolicy::Lru, 2);
+        c.set_byte_budget(Some(2 * f32_bytes));
+        assert_eq!(c.byte_budget(), Some(2 * f32_bytes));
+
+        // f32 blocks: the byte budget admits the same two entries the
+        // count-mode capacity would.
+        c.insert(sized_block(1, 10, false), false);
+        c.insert(sized_block(2, 10, false), false);
+        assert_eq!(c.resident_bytes(), 2 * f32_bytes);
+        c.insert(sized_block(3, 10, false), false);
+        assert_eq!(c.len(), 2, "third f32 block must displace one");
+        assert_eq!(c.stats().evictions, 1);
+
+        // Compact sq8 blocks at the same budget: >= 4 fit where 2 did.
+        let mut c = cache(CachePolicy::Lru, 2);
+        c.set_byte_budget(Some(2 * f32_bytes));
+        let sq_bytes = sized_block(0, 10, true).resident_bytes();
+        assert!(sq_bytes * 4 <= f32_bytes * 2, "sq8 block not compact: {sq_bytes} vs {f32_bytes}");
+        for id in 1..=4 {
+            assert!(c.insert(sized_block(id, 10, true), false));
+        }
+        assert_eq!(c.len(), 4, "compact blocks must multiply effective entries");
+        assert_eq!(c.stats().evictions, 0);
+        assert!(c.resident_bytes() <= 2 * f32_bytes);
+    }
+
+    #[test]
+    fn byte_budget_eviction_and_pin_invariants() {
+        let one = sized_block(0, 10, false).resident_bytes();
+        let mut c = cache(CachePolicy::Lru, 8);
+        c.set_byte_budget(Some(2 * one));
+        c.insert(sized_block(1, 10, false), false);
+        c.insert(sized_block(2, 10, false), false);
+
+        // Rejected when everything is pinned; accounting unchanged.
+        c.pin(&[1, 2]);
+        assert!(!c.insert(sized_block(3, 10, false), false));
+        assert_eq!(c.stats().rejected_inserts, 1);
+        assert_eq!(c.resident_bytes(), 2 * one);
+        c.unpin_all();
+
+        // An oversized block still lands once the cache is empty, even
+        // though it alone exceeds the budget (no livelock).
+        let big = sized_block(9, 100, false);
+        assert!(big.resident_bytes() > 2 * one);
+        assert!(c.insert(Arc::clone(&big), false));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.resident_bytes(), big.resident_bytes());
+
+        // Duplicate insert never double-counts bytes.
+        assert!(c.insert(big, false));
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.resident_bytes(), sized_block(9, 100, false).resident_bytes());
+    }
+
+    #[test]
+    fn no_budget_keeps_count_semantics_and_tracks_bytes() {
+        let mut c = cache(CachePolicy::Lru, 2);
+        assert_eq!(c.byte_budget(), None);
+        // Wildly different block sizes: count mode must ignore them.
+        c.insert(sized_block(1, 1, false), false);
+        c.insert(sized_block(2, 500, false), false);
+        c.insert(sized_block(3, 1, false), false);
+        assert_eq!(c.len(), 2);
+        assert!(!c.contains(1), "LRU order decides, not size");
+        let want = sized_block(2, 500, false).resident_bytes()
+            + sized_block(3, 1, false).resident_bytes();
+        assert_eq!(c.resident_bytes(), want);
     }
 
     #[test]

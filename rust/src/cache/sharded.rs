@@ -37,6 +37,7 @@ pub struct ShardedClusterCache {
     shards: Vec<Mutex<ClusterCache>>,
     capacity: usize,
     policy: CachePolicy,
+    byte_budget: Option<u64>,
 }
 
 impl ShardedClusterCache {
@@ -49,6 +50,22 @@ impl ShardedClusterCache {
         shards: usize,
         costs: Vec<u64>,
     ) -> ShardedClusterCache {
+        ShardedClusterCache::from_config_with_budget(policy, capacity, shards, costs, None)
+    }
+
+    /// [`ShardedClusterCache::from_config`] with an optional total byte
+    /// budget. `Some(bytes)` switches every stripe to byte accounting
+    /// (`scoring=sq8`), splitting the budget in proportion to each stripe's
+    /// capacity share — exactly how the entry capacity itself is split, so
+    /// stripe balance is unchanged. `None` keeps the historical entry-count
+    /// semantics bit-for-bit.
+    pub fn from_config_with_budget(
+        policy: CachePolicy,
+        capacity: usize,
+        shards: usize,
+        costs: Vec<u64>,
+        byte_budget: Option<u64>,
+    ) -> ShardedClusterCache {
         assert!(capacity > 0, "cache capacity must be > 0");
         let n = shards.clamp(1, capacity);
         let base = capacity / n;
@@ -56,10 +73,18 @@ impl ShardedClusterCache {
         let shards = (0..n)
             .map(|i| {
                 let cap = base + usize::from(i < rem);
-                Mutex::new(ClusterCache::new(new_cache(policy), cap, costs.clone()))
+                let mut cache = ClusterCache::new(new_cache(policy), cap, costs.clone());
+                if let Some(total) = byte_budget {
+                    // Integer split can starve a stripe only if total < n;
+                    // the per-stripe floor of 1 byte keeps the invariant
+                    // "budget > 0" without meaningfully exceeding `total`.
+                    let share = (total * cap as u64 / capacity as u64).max(1);
+                    cache.set_byte_budget(Some(share));
+                }
+                Mutex::new(cache)
             })
             .collect();
-        ShardedClusterCache { shards, capacity, policy }
+        ShardedClusterCache { shards, capacity, policy, byte_budget }
     }
 
     fn shard(&self, id: u32) -> &Mutex<ClusterCache> {
@@ -76,6 +101,16 @@ impl ShardedClusterCache {
 
     pub fn policy(&self) -> CachePolicy {
         self.policy
+    }
+
+    /// The total byte budget this cache was built with (None = count mode).
+    pub fn byte_budget(&self) -> Option<u64> {
+        self.byte_budget
+    }
+
+    /// Bytes currently resident across all shards.
+    pub fn resident_bytes(&self) -> u64 {
+        self.shards.iter().map(|s| s.lock().unwrap().resident_bytes()).sum()
     }
 
     pub fn policy_name(&self) -> &'static str {
@@ -328,6 +363,30 @@ mod tests {
         assert!(c.convert_miss_to_hit(99).is_some());
         let s = c.stats();
         assert_eq!((s.hits, s.misses), (1, 0));
+    }
+
+    #[test]
+    fn byte_budget_splits_proportionally_across_stripes() {
+        let one = test_block(0).resident_bytes();
+        let c = ShardedClusterCache::from_config_with_budget(
+            CachePolicy::Lru,
+            10, // stripe caps 3,3,2,2
+            4,
+            vec![0; 256],
+            Some(10 * one),
+        );
+        assert_eq!(c.byte_budget(), Some(10 * one));
+        assert_eq!(c.resident_bytes(), 0);
+        // Fill one stripe (ids ≡ 1 mod 4 land on stripe 1, budget 3*one):
+        // the fourth same-stripe insert must evict stripe-locally.
+        for id in [1u32, 5, 9, 13] {
+            assert!(c.insert(test_block(id), false));
+        }
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.stats().evictions, 1);
+        assert_eq!(c.resident_bytes(), 3 * one);
+        // Count-mode construction reports no budget.
+        assert_eq!(cache(CachePolicy::Lru, 4, 2).byte_budget(), None);
     }
 
     #[test]

@@ -221,6 +221,40 @@ impl DiskProfile {
     }
 }
 
+/// Block-scoring representation (docs/SCORING.md). Selects both the kernel
+/// `Compute::score_block_into` dispatches to and the representation cluster
+/// blocks keep resident in the cache.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scoring {
+    /// Full-precision f32 rows scored by the f32 kernels — the default and
+    /// the recall/parity oracle; bit-identical to pre-quantization builds.
+    F32,
+    /// u8 scalar-quantized rows (per-block affine min/scale) scored in
+    /// integer space; blocks are compacted after read, so the cluster cache
+    /// holds ~4x more clusters at equal memory.
+    Sq8,
+}
+
+impl Scoring {
+    /// Parse a selector. Case-insensitive and whitespace-tolerant.
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "f32" | "float" | "full" => Ok(Scoring::F32),
+            "sq8" | "int8" | "quantized" => Ok(Scoring::Sq8),
+            other => anyhow::bail!(
+                "unknown scoring mode '{other}' (accepted: f32|float|full, sq8|int8|quantized)"
+            ),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scoring::F32 => "f32",
+            Scoring::Sq8 => "sq8",
+        }
+    }
+}
+
 /// Top-level configuration. One instance describes one experiment run.
 #[derive(Debug, Clone)]
 pub struct Config {
@@ -327,6 +361,9 @@ pub struct Config {
 
     // -- runtime ---------------------------------------------------------------
     pub backend: Backend,
+    /// Block-scoring representation: full-precision f32 (default) or
+    /// compact sq8 codes (docs/SCORING.md).
+    pub scoring: Scoring,
     /// Encoder model name (one of python/compile/model.py MODELS).
     pub encoder_model: String,
     pub disk_profile: DiskProfile,
@@ -370,6 +407,7 @@ impl Default for Config {
             batch_min: 20,
             batch_max: 100,
             backend: Backend::Native,
+            scoring: Scoring::F32,
             encoder_model: "minilm-sim".to_string(),
             disk_profile: DiskProfile::NvmeScaled,
             seed: 0xCA6E_2025,
@@ -480,6 +518,7 @@ impl Config {
             "batch_min" => self.batch_min = parse_usize(value)?,
             "batch_max" => self.batch_max = parse_usize(value)?,
             "backend" => self.backend = Backend::parse(value)?,
+            "scoring" => self.scoring = Scoring::parse(value)?,
             "encoder_model" => self.encoder_model = value.to_string(),
             "disk_profile" => self.disk_profile = DiskProfile::parse(value)?,
             "seed" => {
@@ -758,6 +797,25 @@ mod tests {
         assert!(c.set("shard_policy", "roundrobin").is_err());
         assert_eq!(ShardPolicy::parse(" Weighted ").unwrap(), ShardPolicy::Popularity);
         assert_eq!(ShardPolicy::Hash.name(), "hash");
+    }
+
+    #[test]
+    fn scoring_knob_parse_and_validate() {
+        let mut c = Config::default();
+        assert_eq!(c.scoring, Scoring::F32, "full precision ships as default");
+        c.validate().unwrap();
+        c.set("scoring", "sq8").unwrap();
+        assert_eq!(c.scoring, Scoring::Sq8);
+        c.validate().unwrap();
+        c.set("scoring", "f32").unwrap();
+        assert_eq!(c.scoring, Scoring::F32);
+        assert_eq!(Scoring::parse(" Int8 ").unwrap(), Scoring::Sq8);
+        assert_eq!(Scoring::parse("QUANTIZED").unwrap(), Scoring::Sq8);
+        assert_eq!(Scoring::parse("full").unwrap(), Scoring::F32);
+        assert_eq!(Scoring::Sq8.name(), "sq8");
+        assert_eq!(Scoring::F32.name(), "f32");
+        let err = c.set("scoring", "fp16").unwrap_err().to_string();
+        assert!(err.contains("f32") && err.contains("sq8"), "{err}");
     }
 
     #[test]

@@ -47,7 +47,7 @@ use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::cache::ShardedClusterCache;
-use crate::config::Config;
+use crate::config::{Config, Scoring};
 use crate::index::{ClusterBlock, Hit, IvfIndex, TopK};
 use crate::metrics::SearchReport;
 use crate::runtime::Compute;
@@ -171,6 +171,26 @@ pub fn embedding_label(backend: crate::config::Backend, model: &str) -> String {
     }
 }
 
+/// Byte budget for the cluster cache under the configured scoring mode.
+///
+/// `scoring=f32` keeps the historical entry-count semantics (`None`):
+/// every admission decision stays bit-identical to pre-quantization
+/// builds. `scoring=sq8` switches the cache to resident-byte accounting
+/// with a budget of `cache_entries × mean f32 block footprint` — the
+/// *same* memory an f32 cache of `cache_entries` blocks would hold, so
+/// compact sq8 blocks (~¼ the bytes) effectively multiply the entry
+/// count ~4× at equal memory instead of capping at `cache_entries`.
+pub fn cache_byte_budget(cfg: &Config, meta: &crate::index::IvfMeta) -> Option<u64> {
+    match cfg.scoring {
+        Scoring::F32 => None,
+        Scoring::Sq8 => Some(
+            (cfg.cache_entries as u64)
+                .saturating_mul(meta.mean_f32_resident_bytes(crate::config::geometry::SCORE_N))
+                .max(1),
+        ),
+    }
+}
+
 /// The per-dataset search engine.
 pub struct SearchEngine {
     pub cfg: Config,
@@ -290,12 +310,15 @@ impl SearchEngine {
             index.meta.clusters <= crate::config::geometry::CENTROID_PAD,
             "index has more clusters than the centroid artifact supports"
         );
+        let mut index = index;
+        index.scoring = cfg.scoring;
         let cache = shared_cache.unwrap_or_else(|| {
-            Arc::new(ShardedClusterCache::from_config(
+            Arc::new(ShardedClusterCache::from_config_with_budget(
                 cfg.cache_policy,
                 cfg.cache_entries,
                 cfg.cache_shards,
                 index.meta.read_profile_us.clone(),
+                cache_byte_budget(cfg, &index.meta),
             ))
         });
         let io_pool = if cfg.io_workers > 1 {
@@ -474,11 +497,14 @@ impl SearchEngine {
     }
 
     /// Exhaustive (exact) search over all clusters — the accuracy oracle
-    /// for recall tests; not on any serving path.
+    /// for recall tests; not on any serving path. Always reads full f32
+    /// rows regardless of the configured scoring mode: the oracle must not
+    /// inherit sq8 quantization error, or recall-vs-oracle gates would
+    /// compare sq8 against itself.
     pub fn exhaustive_search(&mut self, pq: &PreparedQuery) -> anyhow::Result<Vec<Hit>> {
         let mut topk = TopK::new(self.cfg.top_k);
         for cid in 0..self.index.meta.clusters as u32 {
-            let block = Arc::new(self.index.read_cluster(cid)?);
+            let block = Arc::new(self.index.read_cluster_as(cid, Scoring::F32)?);
             self.compute.score_block_into(&pq.embedding, 1, &block, &mut self.score_scratch)?;
             topk.push_block(&block.doc_ids, &self.score_scratch);
         }

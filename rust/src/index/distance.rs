@@ -71,6 +71,239 @@ pub fn l2_many_to_many(
     }
 }
 
+// ---------------------------------------------------------------------------
+// Explicitly vectorized f32 path (cargo feature `simd`).
+//
+// The `_auto` entry points below are what the scoring hot loop calls. With
+// the feature off (the default) they compile to direct calls into the
+// portable kernels above — bit-identical to pre-feature builds. With the
+// feature on, AVX2 availability is checked once per call site and the wide
+// kernel is used; the portable loop remains the fallback on non-x86 targets
+// and on CPUs without AVX2. The summation order of the wide kernel differs
+// from the scalar one, so feature-on results may differ in the last ulp —
+// the scalar path stays the recall/parity oracle (docs/SCORING.md).
+// ---------------------------------------------------------------------------
+
+/// True when the explicitly vectorized kernel is compiled in *and* the CPU
+/// supports it; benches record this next to their timings.
+pub fn simd_active() -> bool {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    {
+        std::arch::is_x86_64_feature_detected!("avx2")
+    }
+    #[cfg(not(all(feature = "simd", target_arch = "x86_64")))]
+    {
+        false
+    }
+}
+
+/// `l2` with runtime dispatch to the wide kernel when available.
+#[inline]
+pub fn l2_auto(a: &[f32], b: &[f32]) -> f32 {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if std::arch::is_x86_64_feature_detected!("avx2") {
+        // Safety: AVX2 presence was just checked.
+        return unsafe { avx2::l2(a, b) };
+    }
+    l2(a, b)
+}
+
+/// `l2_one_to_many` with runtime dispatch to the wide kernel when available.
+pub fn l2_one_to_many_auto(q: &[f32], vectors: &[f32], dim: usize, out: &mut [f32]) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if std::arch::is_x86_64_feature_detected!("avx2") {
+        debug_assert_eq!(q.len(), dim);
+        debug_assert_eq!(out.len(), vectors.len() / dim);
+        for (j, slot) in out.iter_mut().enumerate() {
+            // Safety: AVX2 presence was checked above.
+            *slot = unsafe { avx2::l2(q, &vectors[j * dim..(j + 1) * dim]) };
+        }
+        return;
+    }
+    l2_one_to_many(q, vectors, dim, out)
+}
+
+/// `l2_many_to_many` with runtime dispatch to the wide kernel when available.
+pub fn l2_many_to_many_auto(queries: &[f32], vectors: &[f32], dim: usize, out: &mut [f32]) {
+    debug_assert_eq!(queries.len() % dim, 0);
+    let nq = queries.len() / dim;
+    let n = vectors.len() / dim;
+    debug_assert_eq!(out.len(), nq * n);
+    for i in 0..nq {
+        l2_one_to_many_auto(
+            &queries[i * dim..(i + 1) * dim],
+            vectors,
+            dim,
+            &mut out[i * n..(i + 1) * n],
+        );
+    }
+}
+
+#[cfg(all(feature = "simd", target_arch = "x86_64"))]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// Squared L2 over 8-lane f32 vectors, two accumulators deep.
+    ///
+    /// # Safety
+    /// The caller must have verified AVX2 support
+    /// (`is_x86_64_feature_detected!("avx2")`).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn l2(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut i = 0;
+        while i + 16 <= n {
+            let d0 = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)));
+            let d1 =
+                _mm256_sub_ps(_mm256_loadu_ps(pa.add(i + 8)), _mm256_loadu_ps(pb.add(i + 8)));
+            acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(d0, d0));
+            acc1 = _mm256_add_ps(acc1, _mm256_mul_ps(d1, d1));
+            i += 16;
+        }
+        if i + 8 <= n {
+            let d = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)));
+            acc0 = _mm256_add_ps(acc0, _mm256_mul_ps(d, d));
+            i += 8;
+        }
+        let acc = _mm256_add_ps(acc0, acc1);
+        let half = _mm_add_ps(_mm256_castps256_ps128(acc), _mm256_extractf128_ps(acc, 1));
+        let pair = _mm_add_ps(half, _mm_movehl_ps(half, half));
+        let one = _mm_add_ss(pair, _mm_shuffle_ps(pair, pair, 1));
+        let mut total = _mm_cvtss_f32(one);
+        while i < n {
+            let d = a[i] - b[i];
+            total += d * d;
+            i += 1;
+        }
+        total
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scalar-quantized (sq8) kernels.
+//
+// A block of vectors is encoded with a single per-block affine transform:
+// code = round((value - min) / scale), scale = (max - min) / 255, so every
+// dimension of every row maps to one u8. Distances are computed entirely in
+// integer space — the query is quantized once per block into clamped i32
+// codes, squared deltas accumulate in i32 (chunked so overflow is
+// impossible), and the total maps back to f32 via scale². See
+// docs/SCORING.md for the format and the accuracy gate.
+// ---------------------------------------------------------------------------
+
+/// Clamp range for quantized *query* codes. Block codes live in [0, 255];
+/// queries may fall outside the block's value range, so their codes get a
+/// wider band — ±1024 code units beyond it. The clamp is what bounds the
+/// per-dimension delta (≤ 1535) and with it the i32 chunk accumulator in
+/// `sq8_one_to_many`. Distances to clamped dimensions are understated, but
+/// such dimensions are already ≥ 4 block-ranges away — ranking is preserved.
+const QCODE_MIN: i32 = -1024;
+const QCODE_MAX: i32 = 1279;
+
+/// Affine parameters `(min, scale)` covering `values`; `scale` is 1.0 for a
+/// constant (or empty) slice so encode/decode stay well-defined.
+pub fn sq8_params(values: &[f32]) -> (f32, f32) {
+    let mut min = f32::INFINITY;
+    let mut max = f32::NEG_INFINITY;
+    for &v in values {
+        min = min.min(v);
+        max = max.max(v);
+    }
+    if !min.is_finite() || !max.is_finite() {
+        return (0.0, 1.0);
+    }
+    let range = max - min;
+    let scale = if range > 0.0 { range / 255.0 } else { 1.0 };
+    (min, scale)
+}
+
+/// Encode one value under `(min, scale)`; clamped into the u8 code range.
+#[inline]
+pub fn sq8_encode_value(v: f32, min: f32, scale: f32) -> u8 {
+    ((v - min) / scale).round().clamp(0.0, 255.0) as u8
+}
+
+/// Decode one code back to its f32 representative.
+#[inline]
+pub fn sq8_decode_value(c: u8, min: f32, scale: f32) -> f32 {
+    min + c as f32 * scale
+}
+
+/// Quantize an f32 query into i32 codes under a block's `(min, scale)`,
+/// clamped to [`QCODE_MIN`, `QCODE_MAX`] (see the constants' doc comment).
+pub fn sq8_quantize_query(q: &[f32], min: f32, scale: f32, out: &mut Vec<i32>) {
+    out.clear();
+    out.extend(
+        q.iter()
+            .map(|&v| (((v - min) / scale).round() as i32).clamp(QCODE_MIN, QCODE_MAX)),
+    );
+}
+
+/// Decode `codes` (row-major, any number of rows) into `out` f32 values.
+pub fn sq8_decode_into(codes: &[u8], min: f32, scale: f32, out: &mut [f32]) {
+    debug_assert_eq!(codes.len(), out.len());
+    for (slot, &c) in out.iter_mut().zip(codes) {
+        *slot = sq8_decode_value(c, min, scale);
+    }
+}
+
+/// Distances from one quantized query to the first `n` rows of `codes`
+/// (`n x dim` u8, row-major), written to `out[..n]` as f32.
+///
+/// Accumulation is pure integer: per-dimension deltas are squared in i32 and
+/// summed in ≤256-dimension chunks (4-way split so LLVM can vectorize); each
+/// chunk total is widened into an i64 running sum between chunks. With the
+/// query clamp, |delta| ≤ 1535, so a 256-term chunk stays below 2^30 — the
+/// i32 accumulators cannot overflow at any supported dimension.
+pub fn sq8_one_to_many(
+    qcode: &[i32],
+    codes: &[u8],
+    dim: usize,
+    scale: f32,
+    n: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(qcode.len(), dim);
+    debug_assert!(codes.len() >= n * dim);
+    debug_assert!(out.len() >= n);
+    let s2 = scale * scale;
+    for (j, slot) in out.iter_mut().take(n).enumerate() {
+        let row = &codes[j * dim..(j + 1) * dim];
+        let mut total: i64 = 0;
+        let mut base = 0;
+        while base < dim {
+            let upper = (base + 256).min(dim);
+            let quads = base + (upper - base) / 4 * 4;
+            let (mut a0, mut a1, mut a2, mut a3) = (0i32, 0i32, 0i32, 0i32);
+            let mut i = base;
+            while i < quads {
+                let d0 = qcode[i] - row[i] as i32;
+                let d1 = qcode[i + 1] - row[i + 1] as i32;
+                let d2 = qcode[i + 2] - row[i + 2] as i32;
+                let d3 = qcode[i + 3] - row[i + 3] as i32;
+                a0 += d0 * d0;
+                a1 += d1 * d1;
+                a2 += d2 * d2;
+                a3 += d3 * d3;
+                i += 4;
+            }
+            let mut tail = 0i32;
+            while i < upper {
+                let d = qcode[i] - row[i] as i32;
+                tail += d * d;
+                i += 1;
+            }
+            total += (a0 + a1 + a2 + a3 + tail) as i64;
+            base = upper;
+        }
+        *slot = total as f32 * s2;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -111,6 +344,107 @@ mod tests {
             let want = l2(&q, &vs[j * dim..(j + 1) * dim]);
             assert_eq!(out[j], want);
         }
+    }
+
+    #[test]
+    fn auto_matches_scalar() {
+        let mut rng = Rng::new(7);
+        let dim = 64;
+        let n = 37;
+        let q: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+        let vs: Vec<f32> = (0..n * dim).map(|_| rng.normal() as f32).collect();
+        let mut auto = vec![0f32; n];
+        let mut scalar = vec![0f32; n];
+        l2_one_to_many_auto(&q, &vs, dim, &mut auto);
+        l2_one_to_many(&q, &vs, dim, &mut scalar);
+        for j in 0..n {
+            if simd_active() {
+                // Wide summation order differs; values must still agree
+                // to within ~1 ulp of the magnitude.
+                let tol = 1e-4 * scalar[j].abs().max(1.0);
+                assert!((auto[j] - scalar[j]).abs() < tol, "j={j}");
+            } else {
+                // Feature off (or no AVX2): the auto path IS the scalar
+                // path — bit-identical, not merely close.
+                assert_eq!(auto[j].to_bits(), scalar[j].to_bits(), "j={j}");
+            }
+        }
+        assert!(l2_auto(&q, &vs[..dim]).is_finite());
+    }
+
+    #[test]
+    fn sq8_roundtrip_within_half_step() {
+        let mut rng = Rng::new(11);
+        for dim in [3, 64, 128] {
+            let vals: Vec<f32> = (0..dim * 5).map(|_| rng.normal() as f32).collect();
+            let (min, scale) = sq8_params(&vals);
+            for &v in &vals {
+                let c = sq8_encode_value(v, min, scale);
+                let back = sq8_decode_value(c, min, scale);
+                // Round-to-nearest: each decoded value sits within half a
+                // quantization step of the original (plus f32 slop).
+                assert!(
+                    (back - v).abs() <= scale * 0.5 + scale * 1e-3,
+                    "v={v} back={back} scale={scale}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sq8_constant_block_is_exact() {
+        let vals = vec![2.5f32; 32];
+        let (min, scale) = sq8_params(&vals);
+        assert_eq!((min, scale), (2.5, 1.0));
+        for &v in &vals {
+            let c = sq8_encode_value(v, min, scale);
+            assert_eq!(c, 0);
+            assert_eq!(sq8_decode_value(c, min, scale), 2.5);
+        }
+    }
+
+    #[test]
+    fn sq8_distance_matches_decoded_f32() {
+        let mut rng = Rng::new(13);
+        for dim in [16, 64, 300] {
+            let n = 25;
+            let vs: Vec<f32> = (0..n * dim).map(|_| rng.normal() as f32).collect();
+            let q: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+            let (min, scale) = sq8_params(&vs);
+            let codes: Vec<u8> = vs.iter().map(|&v| sq8_encode_value(v, min, scale)).collect();
+            let mut qcode = Vec::new();
+            sq8_quantize_query(&q, min, scale, &mut qcode);
+            let mut got = vec![0f32; n];
+            sq8_one_to_many(&qcode, &codes, dim, scale, n, &mut got);
+            // Reference: quantize the query to its representative value and
+            // take exact f32 L2 against the decoded rows — the integer path
+            // must reproduce that number up to f32 rounding.
+            let qdec: Vec<f32> = qcode.iter().map(|&c| min + c as f32 * scale).collect();
+            let mut decoded = vec![0f32; n * dim];
+            sq8_decode_into(&codes, min, scale, &mut decoded);
+            for j in 0..n {
+                let want = l2(&qdec, &decoded[j * dim..(j + 1) * dim]);
+                let tol = 1e-3 * want.abs().max(1.0);
+                assert!((got[j] - want).abs() < tol, "dim={dim} j={j} got={} want={want}", got[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn sq8_query_clamp_preserves_order_for_outliers() {
+        // A query far outside the block's value range still ranks the
+        // closest row first even though its codes clamp.
+        let dim = 8;
+        let vs: Vec<f32> = (0..3 * dim).map(|i| (i % 7) as f32 * 0.1).collect();
+        let (min, scale) = sq8_params(&vs);
+        let codes: Vec<u8> = vs.iter().map(|&v| sq8_encode_value(v, min, scale)).collect();
+        let q = vec![1e6f32; dim];
+        let mut qcode = Vec::new();
+        sq8_quantize_query(&q, min, scale, &mut qcode);
+        assert!(qcode.iter().all(|&c| c == 1279));
+        let mut out = vec![0f32; 3];
+        sq8_one_to_many(&qcode, &codes, dim, scale, 3, &mut out);
+        assert!(out.iter().all(|d| d.is_finite()));
     }
 
     #[test]

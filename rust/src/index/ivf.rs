@@ -9,6 +9,7 @@
 use std::path::{Path, PathBuf};
 
 use crate::config::geometry::{CENTROID_PAD, SCORE_N};
+use crate::config::Scoring;
 use crate::index::{kmeans::KMeans, storage};
 use crate::util::json::{obj, Json};
 use crate::util::rng::Rng;
@@ -113,6 +114,25 @@ impl IvfMeta {
         std::fs::write(storage::meta_path(dir), self.to_json().pretty())
             .map_err(|e| anyhow::anyhow!("writing meta.json: {e}"))
     }
+
+    /// Mean resident footprint of one full-precision cluster block (padded
+    /// f32 rows + doc ids), i.e. what a cache entry costs under
+    /// `scoring=f32`. The sq8 cache byte budget is denominated in this unit
+    /// so "equal cache bytes" across scoring modes is exact by construction.
+    pub fn mean_f32_resident_bytes(&self, pad_rows: usize) -> u64 {
+        if self.cluster_sizes.is_empty() {
+            return 0;
+        }
+        let total: u64 = self
+            .cluster_sizes
+            .iter()
+            .map(|&len| {
+                let padded = crate::util::round_up(len.max(1), pad_rows.max(1));
+                (padded * self.dim * 4 + len * 4) as u64
+            })
+            .sum();
+        total / self.cluster_sizes.len() as u64
+    }
 }
 
 /// Build-time parameters.
@@ -141,6 +161,12 @@ pub struct IvfIndex {
     ///
     /// [`restrict`]: IvfIndex::restrict
     pub allowed: Option<Box<[bool]>>,
+    /// Representation [`read_cluster`] returns blocks in. Set from
+    /// `Config::scoring` when the engine opens the index; never persisted —
+    /// the on-disk format is always full-precision f32.
+    ///
+    /// [`read_cluster`]: IvfIndex::read_cluster
+    pub scoring: Scoring,
 }
 
 impl IvfIndex {
@@ -208,7 +234,13 @@ impl IvfIndex {
         };
         meta.save(dir)?;
 
-        Ok(IvfIndex { dir: dir.to_path_buf(), meta, centroids: km.centroids, allowed: None })
+        Ok(IvfIndex {
+            dir: dir.to_path_buf(),
+            meta,
+            centroids: km.centroids,
+            allowed: None,
+            scoring: Scoring::F32,
+        })
     }
 
     /// Open a previously built index (loads centroids + meta only).
@@ -229,7 +261,13 @@ impl IvfIndex {
             meta.clusters,
             meta.dim
         );
-        Ok(IvfIndex { dir: dir.to_path_buf(), meta, centroids, allowed: None })
+        Ok(IvfIndex {
+            dir: dir.to_path_buf(),
+            meta,
+            centroids,
+            allowed: None,
+            scoring: Scoring::F32,
+        })
     }
 
     /// A shard's view of this index: only `owned` clusters are servable.
@@ -263,6 +301,7 @@ impl IvfIndex {
             meta: self.meta.clone(),
             centroids,
             allowed: Some(mask),
+            scoring: self.scoring,
         }
     }
 
@@ -319,8 +358,22 @@ impl IvfIndex {
         out
     }
 
-    /// Read one cluster from disk, padded for the scorer.
+    /// Read one cluster from disk, padded for the scorer, in this index's
+    /// configured representation.
     pub fn read_cluster(&self, id: u32) -> anyhow::Result<storage::ClusterBlock> {
+        self.read_cluster_as(id, self.scoring)
+    }
+
+    /// Read one cluster with an explicit representation override.
+    /// `Scoring::F32` is the full-precision read the recall oracle
+    /// (`exhaustive_search`) depends on regardless of the serving mode;
+    /// `Scoring::Sq8` encodes at read time and drops the f32 payload so the
+    /// cached block is compact.
+    pub fn read_cluster_as(
+        &self,
+        id: u32,
+        scoring: Scoring,
+    ) -> anyhow::Result<storage::ClusterBlock> {
         anyhow::ensure!(
             (id as usize) < self.meta.clusters,
             "cluster id {id} out of range (clusters={})",
@@ -330,7 +383,11 @@ impl IvfIndex {
             self.is_owned(id),
             "cluster id {id} not owned by this shard view"
         );
-        storage::read_cluster(&self.dir, id, SCORE_N)
+        let mut block = storage::read_cluster(&self.dir, id, SCORE_N)?;
+        if scoring == Scoring::Sq8 {
+            block.quantize(false);
+        }
+        Ok(block)
     }
 
     /// Total on-disk size of all cluster files.
@@ -519,6 +576,45 @@ mod tests {
         for got in view.nearest_centroids(q, owned.len()) {
             assert!(owned.contains(&got), "unowned cluster {got} won a nearest race");
         }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn scoring_mode_selects_block_representation() {
+        let dir = tmpdir("scoring");
+        let (data, _, dim) = tiny_embeddings();
+        let pool = ThreadPool::new(2);
+        let mut idx =
+            IvfIndex::build(&dir, "tiny", "native", &data, dim, &build_params(), &pool).unwrap();
+        assert_eq!(idx.scoring, Scoring::F32);
+
+        let f32_block = idx.read_cluster(0).unwrap();
+        assert!(f32_block.quant.is_none() && !f32_block.data.is_empty());
+
+        idx.scoring = Scoring::Sq8;
+        let sq_block = idx.read_cluster(0).unwrap();
+        assert!(sq_block.data.is_empty());
+        assert_eq!(
+            sq_block.quant.as_ref().unwrap().codes.len(),
+            f32_block.data.len()
+        );
+        assert_eq!(sq_block.padded_len(), f32_block.padded_len());
+        assert!(sq_block.resident_bytes() < f32_block.resident_bytes() / 2);
+
+        // The explicit f32 override ignores the serving mode (oracle path),
+        // and restricted views inherit the mode.
+        let oracle = idx.read_cluster_as(0, Scoring::F32).unwrap();
+        assert_eq!(oracle, f32_block);
+        let view = idx.restrict(&[0]);
+        assert_eq!(view.scoring, Scoring::Sq8);
+        assert!(view.read_cluster(0).unwrap().data.is_empty());
+
+        // The byte-budget denominator matches actual f32 block footprints.
+        let mean = idx.meta.mean_f32_resident_bytes(SCORE_N);
+        let total: u64 = (0..idx.meta.clusters as u32)
+            .map(|c| idx.read_cluster_as(c, Scoring::F32).unwrap().resident_bytes())
+            .sum();
+        assert_eq!(mean, total / idx.meta.clusters as u64);
         std::fs::remove_dir_all(&dir).ok();
     }
 

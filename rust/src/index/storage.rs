@@ -20,37 +20,86 @@ use std::path::{Path, PathBuf};
 const CLUSTER_MAGIC: &[u8; 8] = b"CAGRCLU1";
 const CENTROID_MAGIC: &[u8; 8] = b"CAGRCEN1";
 
+/// Scalar-quantized companion payload for a cluster block: one u8 code per
+/// dimension per row under a single per-block affine `(min, scale)` map
+/// (docs/SCORING.md). Produced by `ClusterBlock::quantize` at read time —
+/// the on-disk format stays full-precision f32.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SqBlock {
+    /// Row-major `padded_len x dim` codes; pad rows encode the value 0.0.
+    pub codes: Vec<u8>,
+    /// Value encoded by code 0.
+    pub min: f32,
+    /// Value step per code unit; 1.0 for constant blocks.
+    pub scale: f32,
+}
+
 /// One cluster's vectors, decoded in memory. `data` is padded with zero rows
 /// up to a multiple of `geometry::SCORE_N` so PJRT scorer calls can borrow
-/// it without copying; `len` is the true vector count.
+/// it without copying; `len` is the true vector count. Under `scoring=sq8`
+/// the f32 payload is dropped after encoding and only `quant` stays resident
+/// (~4x smaller), which is what lets the cluster cache hold ~4x more
+/// clusters at equal memory.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ClusterBlock {
     pub id: u32,
     pub len: usize,
     pub dim: usize,
     pub doc_ids: Vec<u32>,
-    /// Row-major `padded_len x dim`, zero rows beyond `len`.
+    /// Row-major `padded_len x dim`, zero rows beyond `len`. Empty when the
+    /// block has been compacted to its quantized representation.
     pub data: Vec<f32>,
+    /// Optional sq8 codes; scoring prefers `data` when both are present.
+    pub quant: Option<SqBlock>,
     /// Bytes this cluster occupies on disk (for Fig. 5 metrics + the disk
     /// latency model).
     pub bytes_on_disk: u64,
 }
 
 impl ClusterBlock {
-    /// Rows in the padded buffer.
+    /// Rows in the padded buffer (whichever representation is resident).
     pub fn padded_len(&self) -> usize {
-        self.data.len() / self.dim
+        if self.data.is_empty() {
+            self.quant.as_ref().map_or(0, |q| q.codes.len() / self.dim)
+        } else {
+            self.data.len() / self.dim
+        }
     }
 
-    /// The `i`-th real vector.
+    /// The `i`-th real vector. Only valid while the f32 payload is resident
+    /// (i.e. not after `quantize(false)` compacted the block).
     pub fn vector(&self, i: usize) -> &[f32] {
         debug_assert!(i < self.len);
         &self.data[i * self.dim..(i + 1) * self.dim]
     }
 
-    /// Approximate resident memory footprint.
+    /// Approximate resident memory footprint — the unit the cluster cache's
+    /// byte budget accounts in.
     pub fn resident_bytes(&self) -> u64 {
-        (self.data.len() * 4 + self.doc_ids.len() * 4) as u64
+        let quant = self.quant.as_ref().map_or(0, |q| q.codes.len() + 8);
+        (self.data.len() * 4 + self.doc_ids.len() * 4 + quant) as u64
+    }
+
+    /// Attach an sq8 payload encoded from the f32 rows. `keep_f32: false`
+    /// drops the full-precision rows afterwards (the compact cache
+    /// representation); `true` keeps both, in which case scoring still uses
+    /// the f32 rows. No-op if already quantized.
+    pub fn quantize(&mut self, keep_f32: bool) {
+        if self.quant.is_none() && !self.data.is_empty() {
+            // Parameters come from the valid region only; pad rows are all
+            // zero and would otherwise widen the range for sparse blocks.
+            let valid = self.len * self.dim;
+            let (min, scale) = crate::index::distance::sq8_params(&self.data[..valid]);
+            let codes: Vec<u8> = self
+                .data
+                .iter()
+                .map(|&v| crate::index::distance::sq8_encode_value(v, min, scale))
+                .collect();
+            self.quant = Some(SqBlock { codes, min, scale });
+        }
+        if !keep_f32 && self.quant.is_some() {
+            self.data = Vec::new();
+        }
     }
 }
 
@@ -149,7 +198,7 @@ pub fn read_cluster(dir: &Path, id: u32, pad_rows: usize) -> anyhow::Result<Clus
         data[i] = f32::from_le_bytes(chunk.try_into().unwrap());
     }
 
-    Ok(ClusterBlock { id, len, dim, doc_ids, data, bytes_on_disk })
+    Ok(ClusterBlock { id, len, dim, doc_ids, data, quant: None, bytes_on_disk })
 }
 
 /// Write the first-level centroid index.
@@ -270,6 +319,49 @@ mod tests {
         let (k2, dim2, data2) = read_centroids(&dir).unwrap();
         assert_eq!((k2, dim2), (k, dim));
         assert_eq!(data2, data);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn quantize_compacts_and_roundtrips() {
+        let dir = tmpdir("quant");
+        let mut rng = Rng::new(3);
+        let dim = 8;
+        let ids: Vec<u32> = (0..6).collect();
+        let vecs: Vec<f32> = (0..ids.len() * dim).map(|_| rng.normal() as f32).collect();
+        write_cluster(&dir, 0, dim, &ids, &vecs).unwrap();
+        let block = read_cluster(&dir, 0, 4).unwrap();
+        let f32_bytes = block.resident_bytes();
+        let padded = block.padded_len();
+
+        // keep_f32: both payloads resident, footprint grows by the codes.
+        let mut both = block.clone();
+        both.quantize(true);
+        assert!(!both.data.is_empty());
+        let q = both.quant.as_ref().unwrap();
+        assert_eq!(q.codes.len(), padded * dim);
+        assert!(both.resident_bytes() > f32_bytes);
+
+        // compact: f32 dropped, same padded geometry, ~4x smaller.
+        let mut compact = block.clone();
+        compact.quantize(false);
+        assert!(compact.data.is_empty());
+        assert_eq!(compact.padded_len(), padded);
+        assert!(compact.resident_bytes() < f32_bytes / 2);
+
+        // decoded codes sit within half a quantization step of the source.
+        let q = compact.quant.as_ref().unwrap();
+        for (i, &v) in vecs.iter().enumerate() {
+            let back = crate::index::distance::sq8_decode_value(q.codes[i], q.min, q.scale);
+            assert!((back - v).abs() <= q.scale * 0.5 + q.scale * 1e-3, "i={i}");
+        }
+        // quantize is idempotent.
+        let again = {
+            let mut b = compact.clone();
+            b.quantize(false);
+            b
+        };
+        assert_eq!(again, compact);
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -94,6 +94,7 @@ fn load_config(args: &Args) -> anyhow::Result<Config> {
         ("cache-entries", "cache_entries"),
         ("cache-policy", "cache_policy"),
         ("backend", "backend"),
+        ("scoring", "scoring"),
         ("disk-profile", "disk_profile"),
         ("encoder-model", "encoder_model"),
         ("seed", "seed"),
@@ -235,11 +236,12 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     runner::ensure_dataset(&cfg, spec)?;
     let shared = if lanes > 1 {
         let index = cagr::index::IvfIndex::open(&cfg.dataset_dir(spec.name))?;
-        let cache = std::sync::Arc::new(cagr::cache::ShardedClusterCache::from_config(
+        let cache = std::sync::Arc::new(cagr::cache::ShardedClusterCache::from_config_with_budget(
             cfg.cache_policy,
             cfg.cache_entries,
             cfg.cache_shards,
             index.meta.read_profile_us.clone(),
+            cagr::engine::cache_byte_budget(&cfg, &index.meta),
         ));
         let inflight = std::sync::Arc::new(cagr::engine::inflight::InFlight::new());
         Some((cache, inflight))
@@ -286,14 +288,16 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         "off".to_string()
     };
     println!(
-        "cagr serving {} on {} (proto=v{}, policy={}, cache={}x{}, theta={}, lanes={}, \
-         io-workers={}, window={}q, adaptive={}, max-inflight={} (per-conn {}), semcache={})",
+        "cagr serving {} on {} (proto=v{}, policy={}, cache={}x{}, scoring={}, theta={}, \
+         lanes={}, io-workers={}, window={}q, adaptive={}, max-inflight={} (per-conn {}), \
+         semcache={})",
         spec.name,
         handle.addr,
         cagr::proto::PROTOCOL_VERSION,
         mode.name(),
         cfg.cache_policy.name(),
         cfg.cache_entries,
+        cfg.scoring.name(),
         cfg.theta,
         lanes,
         cfg.io_workers,

@@ -182,12 +182,35 @@ impl PjrtRuntime {
     }
 }
 
+/// Reusable scratch for the native scoring path. Living inside the variant
+/// (behind a `RefCell` — engines are single-threaded actors) keeps the
+/// `Compute` scoring API signature-stable while removing per-call heap
+/// allocations from the hot loop.
+#[derive(Debug, Default)]
+pub struct NativeScratch {
+    /// Quantized query codes for the sq8 kernel (one query at a time).
+    qcode: Vec<i32>,
+}
+
+/// Reusable scratch for the PJRT arms.
+#[derive(Debug, Default)]
+pub struct PjrtScratch {
+    /// `SCORE_Q x EMBED_DIM` zero-padded query staging buffer (previously
+    /// allocated per `score_block_into` / per centroid-scan chunk).
+    qbuf: Vec<f32>,
+    /// `(distance, id)` candidates for the centroid-scan top-nprobe select
+    /// (previously a fresh id vec per query row).
+    cand: Vec<(f32, u32)>,
+    /// Decoded f32 rows for one SCORE_N chunk of an sq8 block.
+    decode: Vec<f32>,
+}
+
 /// The compute backend the engine drives: query/document embedding,
 /// first-level centroid scan, and second-level scoring. `Native` and `Pjrt`
 /// are bit-comparable (asserted in rust/tests/backend_parity.rs).
 pub enum Compute {
-    Native { latent: LatentSpace },
-    Pjrt { runtime: PjrtRuntime, model: String },
+    Native { latent: LatentSpace, scratch: std::cell::RefCell<NativeScratch> },
+    Pjrt { runtime: PjrtRuntime, model: String, scratch: std::cell::RefCell<PjrtScratch> },
 }
 
 impl Compute {
@@ -199,10 +222,14 @@ impl Compute {
         spec: &DatasetSpec,
     ) -> anyhow::Result<Compute> {
         match backend {
-            Backend::Native => Ok(Compute::Native { latent: LatentSpace::new(spec) }),
+            Backend::Native => Ok(Compute::Native {
+                latent: LatentSpace::new(spec),
+                scratch: Default::default(),
+            }),
             Backend::Pjrt => Ok(Compute::Pjrt {
                 runtime: PjrtRuntime::load(artifacts_dir)?,
                 model: encoder_model.to_string(),
+                scratch: Default::default(),
             }),
         }
     }
@@ -217,14 +244,14 @@ impl Compute {
     /// Embed a slice of queries -> flat `n x EMBED_DIM`.
     pub fn embed_queries(&self, spec: &DatasetSpec, queries: &[Query]) -> anyhow::Result<Vec<f32>> {
         match self {
-            Compute::Native { latent } => {
+            Compute::Native { latent, .. } => {
                 let mut out = Vec::with_capacity(queries.len() * EMBED_DIM);
                 for q in queries {
                     out.extend_from_slice(&latent.query_embedding(spec, q));
                 }
                 Ok(out)
             }
-            Compute::Pjrt { runtime, model } => {
+            Compute::Pjrt { runtime, model, .. } => {
                 let rows: Vec<Vec<i32>> = queries.iter().map(|q| q.tokens.clone()).collect();
                 runtime.encode_many(model, &rows)
             }
@@ -234,14 +261,14 @@ impl Compute {
     /// Embed documents `[lo, hi)` for the index build -> flat rows.
     pub fn embed_docs(&self, spec: &DatasetSpec, lo: usize, hi: usize) -> anyhow::Result<Vec<f32>> {
         match self {
-            Compute::Native { latent } => {
+            Compute::Native { latent, .. } => {
                 let mut out = Vec::with_capacity((hi - lo) * EMBED_DIM);
                 for doc in lo..hi {
                     out.extend_from_slice(&latent.doc_embedding(spec, doc));
                 }
                 Ok(out)
             }
-            Compute::Pjrt { runtime, model } => {
+            Compute::Pjrt { runtime, model, .. } => {
                 let rows: Vec<Vec<i32>> = (lo..hi)
                     .map(|doc| crate::workload::generate_doc_tokens(spec, doc).1)
                     .collect();
@@ -265,27 +292,45 @@ impl Compute {
             Compute::Native { .. } => Ok((0..nq)
                 .map(|i| index.nearest_centroids(&queries[i * dim..(i + 1) * dim], nprobe))
                 .collect()),
-            Compute::Pjrt { runtime, .. } => {
+            Compute::Pjrt { runtime, scratch, .. } => {
                 let padded_centroids = index.padded_centroids();
                 let k = index.meta.clusters;
+                let take_n = nprobe.min(k);
                 let mut out = Vec::with_capacity(nq);
+                let mut s = scratch.borrow_mut();
+                let s = &mut *s;
                 let mut i = 0;
                 while i < nq {
                     let take = (nq - i).min(SCORE_Q);
-                    let mut qbuf = vec![0f32; SCORE_Q * EMBED_DIM];
-                    qbuf[..take * dim].copy_from_slice(&queries[i * dim..(i + take) * dim]);
-                    let dists = runtime.centroid_scan(&qbuf, &padded_centroids)?;
+                    s.qbuf.clear();
+                    s.qbuf.resize(SCORE_Q * EMBED_DIM, 0f32);
+                    s.qbuf[..take * dim].copy_from_slice(&queries[i * dim..(i + take) * dim]);
+                    let dists = runtime.centroid_scan(&s.qbuf, &padded_centroids)?;
                     for r in 0..take {
+                        if take_n == 0 {
+                            out.push(Vec::new());
+                            continue;
+                        }
                         let row = &dists[r * CENTROID_PAD..r * CENTROID_PAD + k];
-                        let mut ids: Vec<u32> = (0..k as u32).collect();
-                        ids.sort_by(|&a, &b| {
-                            row[a as usize]
-                                .partial_cmp(&row[b as usize])
+                        // Partial select then sort only the kept prefix —
+                        // same (distance, id) total order as the old full
+                        // sort over all k entries, so results are
+                        // identical, but the common nprobe << k case does
+                        // O(k) selection instead of O(k log k) sorting,
+                        // and the candidate buffer is reused across rows.
+                        s.cand.clear();
+                        s.cand.extend(row.iter().enumerate().map(|(c, &d)| (d, c as u32)));
+                        let by_dist_then_id = |a: &(f32, u32), b: &(f32, u32)| {
+                            a.0.partial_cmp(&b.0)
                                 .unwrap_or(std::cmp::Ordering::Equal)
-                                .then(a.cmp(&b))
-                        });
-                        ids.truncate(nprobe.min(k));
-                        out.push(ids);
+                                .then(a.1.cmp(&b.1))
+                        };
+                        if take_n < k {
+                            s.cand.select_nth_unstable_by(take_n - 1, by_dist_then_id);
+                        }
+                        let top = &mut s.cand[..take_n];
+                        top.sort_by(by_dist_then_id);
+                        out.push(top.iter().map(|&(_, c)| c).collect());
                     }
                     i += take;
                 }
@@ -324,26 +369,86 @@ impl Compute {
         anyhow::ensure!(nq <= SCORE_Q, "score_block: nq {nq} > SCORE_Q {SCORE_Q}");
         out.clear();
         out.resize(nq * block.len, 0f32);
+        // Representation routing: f32 rows win whenever they are resident
+        // (they are exact — keeping them alongside codes is the degenerate
+        // "re-rank against f32" case); a compacted block (empty `data`)
+        // scores through its sq8 codes. A block with neither is malformed.
+        let sq8 = if block.data.is_empty() {
+            Some(block.quant.as_ref().ok_or_else(|| {
+                anyhow::anyhow!("cluster block {} has neither f32 rows nor sq8 codes", block.id)
+            })?)
+        } else {
+            None
+        };
         match self {
-            Compute::Native { .. } => {
-                distance::l2_many_to_many(queries, &block.data[..block.len * dim], dim, out);
+            Compute::Native { scratch, .. } => {
+                if let Some(quant) = sq8 {
+                    // Symmetric integer path: quantize each query once per
+                    // block, accumulate squared deltas in i32/i64, map back
+                    // to value space via scale².
+                    let s = &mut *scratch.borrow_mut();
+                    for q in 0..nq {
+                        distance::sq8_quantize_query(
+                            &queries[q * dim..(q + 1) * dim],
+                            quant.min,
+                            quant.scale,
+                            &mut s.qcode,
+                        );
+                        distance::sq8_one_to_many(
+                            &s.qcode,
+                            &quant.codes,
+                            dim,
+                            quant.scale,
+                            block.len,
+                            &mut out[q * block.len..(q + 1) * block.len],
+                        );
+                    }
+                } else {
+                    distance::l2_many_to_many_auto(
+                        queries,
+                        &block.data[..block.len * dim],
+                        dim,
+                        out,
+                    );
+                }
                 Ok(())
             }
-            Compute::Pjrt { runtime, .. } => {
-                let mut qbuf = vec![0f32; SCORE_Q * EMBED_DIM];
-                qbuf[..nq * dim].copy_from_slice(queries);
+            Compute::Pjrt { runtime, scratch, .. } => {
+                let s = &mut *scratch.borrow_mut();
+                s.qbuf.clear();
+                s.qbuf.resize(SCORE_Q * EMBED_DIM, 0f32);
+                s.qbuf[..nq * dim].copy_from_slice(queries);
                 let padded = block.padded_len();
                 debug_assert_eq!(padded % SCORE_N, 0);
-                for (c, chunk) in block.data.chunks_exact(SCORE_N * dim).enumerate() {
-                    let dists = runtime.score_chunk(&qbuf, chunk)?;
+                let copy_chunk = |c: usize, dists: &[f32], out: &mut Vec<f32>| {
                     let base = c * SCORE_N;
-                    if base >= block.len {
-                        break; // purely padding chunk
-                    }
                     let valid = (block.len - base).min(SCORE_N);
                     for q in 0..nq {
                         out[q * block.len + base..q * block.len + base + valid]
                             .copy_from_slice(&dists[q * SCORE_N..q * SCORE_N + valid]);
+                    }
+                };
+                if let Some(quant) = sq8 {
+                    // Asymmetric path: queries stay f32; each chunk's codes
+                    // are decoded on the fly into scratch and run through
+                    // the unchanged f32 scorer artifact.
+                    for (c, chunk) in quant.codes.chunks_exact(SCORE_N * dim).enumerate() {
+                        if c * SCORE_N >= block.len {
+                            break; // purely padding chunk
+                        }
+                        s.decode.clear();
+                        s.decode.resize(SCORE_N * dim, 0f32);
+                        distance::sq8_decode_into(chunk, quant.min, quant.scale, &mut s.decode);
+                        let dists = runtime.score_chunk(&s.qbuf, &s.decode)?;
+                        copy_chunk(c, &dists, out);
+                    }
+                } else {
+                    for (c, chunk) in block.data.chunks_exact(SCORE_N * dim).enumerate() {
+                        if c * SCORE_N >= block.len {
+                            break; // purely padding chunk
+                        }
+                        let dists = runtime.score_chunk(&s.qbuf, chunk)?;
+                        copy_chunk(c, &dists, out);
                     }
                 }
                 Ok(())
@@ -367,6 +472,7 @@ mod tests {
             dim,
             doc_ids: (0..len as u32).collect(),
             data: padded_data,
+            quant: None,
             bytes_on_disk: 0,
         }
     }
@@ -374,7 +480,8 @@ mod tests {
     #[test]
     fn native_score_block_matches_reference() {
         let spec = DatasetSpec::tiny(3);
-        let compute = Compute::Native { latent: LatentSpace::new(&spec) };
+        let compute =
+            Compute::Native { latent: LatentSpace::new(&spec), scratch: Default::default() };
         let mut rng = Rng::new(5);
         let dim = EMBED_DIM;
         let nq = 3;
@@ -394,10 +501,69 @@ mod tests {
     }
 
     #[test]
+    fn native_score_block_sq8_matches_decoded_reference() {
+        let spec = DatasetSpec::tiny(3);
+        let compute =
+            Compute::Native { latent: LatentSpace::new(&spec), scratch: Default::default() };
+        let mut rng = Rng::new(9);
+        let dim = EMBED_DIM;
+        let nq = 3;
+        let len = 100;
+        let queries: Vec<f32> = (0..nq * dim).map(|_| rng.normal() as f32).collect();
+        let data: Vec<f32> = (0..len * dim).map(|_| rng.normal() as f32).collect();
+        let mut block = block_from(data, dim, len);
+        block.quantize(false);
+        assert!(block.data.is_empty());
+        let quant = block.quant.clone().unwrap();
+        let out = compute.score_block(&queries, nq, &block).unwrap();
+        assert_eq!(out.len(), nq * len);
+        let decode = |j: usize| -> Vec<f32> {
+            quant.codes[j * dim..(j + 1) * dim]
+                .iter()
+                .map(|&c| distance::sq8_decode_value(c, quant.min, quant.scale))
+                .collect()
+        };
+        for q in 0..nq {
+            // Reference mirrors the kernel's semantics: the query is snapped
+            // to its sq8 representative before the exact f32 L2.
+            let mut qcode = Vec::new();
+            distance::sq8_quantize_query(
+                &queries[q * dim..(q + 1) * dim],
+                quant.min,
+                quant.scale,
+                &mut qcode,
+            );
+            let qdec: Vec<f32> =
+                qcode.iter().map(|&c| quant.min + c as f32 * quant.scale).collect();
+            for j in 0..len {
+                let want = distance::l2(&qdec, &decode(j));
+                let got = out[q * len + j];
+                let tol = 1e-3 * want.abs().max(1.0);
+                assert!(
+                    (got - want).abs() <= tol,
+                    "q={q} j={j}: sq8 {got} vs decoded-f32 {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn score_block_rejects_block_without_any_payload() {
+        let spec = DatasetSpec::tiny(6);
+        let compute =
+            Compute::Native { latent: LatentSpace::new(&spec), scratch: Default::default() };
+        let mut block = block_from(vec![0f32; 4 * EMBED_DIM], EMBED_DIM, 4);
+        block.data = Vec::new();
+        let queries = vec![0f32; EMBED_DIM];
+        assert!(compute.score_block(&queries, 1, &block).is_err());
+    }
+
+    #[test]
     fn native_embed_queries_matches_latent() {
         let spec = DatasetSpec::tiny(4);
         let latent = LatentSpace::new(&spec);
-        let compute = Compute::Native { latent: LatentSpace::new(&spec) };
+        let compute =
+            Compute::Native { latent: LatentSpace::new(&spec), scratch: Default::default() };
         let queries = crate::workload::generate_queries(&spec);
         let flat = compute.embed_queries(&spec, &queries[..4]).unwrap();
         for (i, q) in queries[..4].iter().enumerate() {
@@ -411,7 +577,8 @@ mod tests {
     #[test]
     fn score_block_rejects_oversized_group() {
         let spec = DatasetSpec::tiny(5);
-        let compute = Compute::Native { latent: LatentSpace::new(&spec) };
+        let compute =
+            Compute::Native { latent: LatentSpace::new(&spec), scratch: Default::default() };
         let block = block_from(vec![0f32; 4 * EMBED_DIM], EMBED_DIM, 4);
         let queries = vec![0f32; (SCORE_Q + 1) * EMBED_DIM];
         assert!(compute.score_block(&queries, SCORE_Q + 1, &block).is_err());

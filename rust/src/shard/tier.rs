@@ -96,12 +96,14 @@ pub fn start(
         // in-flight read registry per shard, mirroring the unsharded
         // serve wiring; nothing is shared *across* shards.
         let shared = if base.lanes > 1 {
-            let cache = std::sync::Arc::new(crate::cache::ShardedClusterCache::from_config(
-                cfg.cache_policy,
-                cfg.cache_entries,
-                cfg.cache_shards,
-                index.meta.read_profile_us.clone(),
-            ));
+            let cache =
+                std::sync::Arc::new(crate::cache::ShardedClusterCache::from_config_with_budget(
+                    cfg.cache_policy,
+                    cfg.cache_entries,
+                    cfg.cache_shards,
+                    index.meta.read_profile_us.clone(),
+                    crate::engine::cache_byte_budget(cfg, &index.meta),
+                ));
             let inflight = std::sync::Arc::new(crate::engine::inflight::InFlight::new());
             Some((cache, inflight))
         } else {

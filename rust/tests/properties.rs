@@ -170,6 +170,7 @@ fn mini_block(id: u32) -> Arc<ClusterBlock> {
         dim: 1,
         doc_ids: vec![id],
         data: vec![0.0],
+        quant: None,
         bytes_on_disk: 1,
     })
 }

@@ -1,0 +1,241 @@
+//! Integration gates for the sq8 scoring path (docs/SCORING.md):
+//!
+//!  * the default config (`scoring=f32`, `simd` off) is bit-identical to
+//!    the pre-quantization pipeline — hits, distances, and disk reads;
+//!  * sq8 holds recall@k ≥ 0.99 against the f32 oracle;
+//!  * `exhaustive_search` stays a pure f32 oracle under every mode;
+//!  * byte-budget cache accounting admits ~4× the clusters at equal
+//!    memory and strictly reduces demand disk reads on the fig4-style
+//!    workload;
+//!  * encode/decode round-trips stay within half a quantization step.
+
+use cagr::config::{Backend, CachePolicy, Config, DiskProfile, Scoring};
+use cagr::coordinator::GroupingWithPrefetch;
+use cagr::engine::{cache_byte_budget, SearchEngine};
+use cagr::harness::runner::{ensure_dataset, run_workload};
+use cagr::index::{distance, TopK};
+use cagr::workload::{generate_queries, DatasetSpec};
+
+fn test_cfg(tag: &str) -> (Config, DatasetSpec) {
+    let mut cfg = Config::default();
+    cfg.data_dir = std::env::temp_dir().join(format!("cagr-quant-{}-{tag}", std::process::id()));
+    cfg.clusters = 16;
+    cfg.nprobe = 4;
+    cfg.top_k = 5;
+    cfg.cache_entries = 6;
+    cfg.cache_policy = CachePolicy::Lru;
+    cfg.kmeans_iters = 5;
+    cfg.kmeans_sample = 1_000;
+    cfg.backend = Backend::Native;
+    cfg.disk_profile = DiskProfile::None;
+    // Sequential, unsharded: the bit-identity and miss-count gates below
+    // compare exact sequences across runs.
+    cfg.io_workers = 1;
+    cfg.cache_shards = 1;
+    (cfg, DatasetSpec::tiny(0x5C8))
+}
+
+#[test]
+fn sq8_recall_at_5_vs_f32_oracle() {
+    let (mut cfg, spec) = test_cfg("recall");
+    // nprobe == clusters: both paths rank every document, so the only
+    // difference from the oracle is quantization error itself.
+    cfg.nprobe = 16;
+    cfg.scoring = Scoring::Sq8;
+    ensure_dataset(&cfg, &spec).unwrap();
+    let mut engine = SearchEngine::open(&cfg, &spec).unwrap();
+    let queries = generate_queries(&spec);
+    let prepared = engine.prepare(&queries).unwrap();
+
+    let mut overlap = 0usize;
+    let mut total = 0usize;
+    for pq in &prepared {
+        let (_, approx) = engine.search(pq).unwrap();
+        let exact = engine.exhaustive_search(pq).unwrap();
+        let exact_ids: Vec<u32> = exact.iter().map(|h| h.doc_id).collect();
+        overlap += approx.iter().filter(|h| exact_ids.contains(&h.doc_id)).count();
+        total += exact.len();
+    }
+    let recall = overlap as f64 / total as f64;
+    assert!(recall >= 0.99, "sq8 recall@5 vs f32 oracle = {recall}");
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}
+
+#[test]
+fn exhaustive_search_is_a_pure_f32_oracle_under_sq8() {
+    let (cfg, spec) = test_cfg("oracle");
+    ensure_dataset(&cfg, &spec).unwrap();
+    let mut f32_engine = SearchEngine::open(&cfg, &spec).unwrap();
+    let mut sq8_cfg = cfg.clone();
+    sq8_cfg.scoring = Scoring::Sq8;
+    let mut sq8_engine = SearchEngine::open(&sq8_cfg, &spec).unwrap();
+
+    let queries = generate_queries(&spec);
+    let a = f32_engine.prepare(&queries[..8]).unwrap();
+    let b = sq8_engine.prepare(&queries[..8]).unwrap();
+    for (pa, pb) in a.iter().zip(&b) {
+        assert_eq!(pa.embedding, pb.embedding);
+        // The oracle must not inherit sq8 quantization error: both engines
+        // produce the exact same exhaustive ranking, bit for bit.
+        let ea = f32_engine.exhaustive_search(pa).unwrap();
+        let eb = sq8_engine.exhaustive_search(pb).unwrap();
+        assert_eq!(ea, eb, "query {}", pa.query.id);
+    }
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}
+
+/// The default pipeline (scoring=f32, simd off) is pinned bit-identical to
+/// a reference recomputation through the scalar kernel: same hits, same
+/// distances. Only meaningful without the simd feature — the AVX2 kernel
+/// reassociates the reduction, which is allowed to differ in the last ulp.
+#[cfg(not(feature = "simd"))]
+#[test]
+fn default_pipeline_matches_scalar_reference_bitwise() {
+    let (cfg, spec) = test_cfg("pin");
+    assert_eq!(cfg.scoring, Scoring::F32);
+    ensure_dataset(&cfg, &spec).unwrap();
+    let mut engine = SearchEngine::open(&cfg, &spec).unwrap();
+    let queries = generate_queries(&spec);
+    let prepared = engine.prepare(&queries[..12]).unwrap();
+    for pq in &prepared {
+        let (_, hits) = engine.search(pq).unwrap();
+        // Reference: scalar l2 per row, streamed through TopK in the same
+        // cluster order.
+        let mut topk = TopK::new(cfg.top_k);
+        for &cid in &pq.clusters {
+            let block = engine.index.read_cluster_as(cid, Scoring::F32).unwrap();
+            let dim = block.dim;
+            for (j, &doc) in block.doc_ids.iter().enumerate() {
+                let row = &block.data[j * dim..(j + 1) * dim];
+                topk.push(doc, distance::l2(&pq.embedding, row));
+            }
+        }
+        assert_eq!(hits, topk.into_sorted(), "query {}", pq.query.id);
+    }
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}
+
+#[cfg(feature = "simd")]
+#[test]
+fn simd_pipeline_matches_scalar_reference_within_tolerance() {
+    let (cfg, spec) = test_cfg("simdtol");
+    ensure_dataset(&cfg, &spec).unwrap();
+    let mut engine = SearchEngine::open(&cfg, &spec).unwrap();
+    let queries = generate_queries(&spec);
+    let prepared = engine.prepare(&queries[..8]).unwrap();
+    for pq in &prepared {
+        let (_, hits) = engine.search(pq).unwrap();
+        let mut topk = TopK::new(cfg.top_k);
+        for &cid in &pq.clusters {
+            let block = engine.index.read_cluster_as(cid, Scoring::F32).unwrap();
+            let dim = block.dim;
+            for (j, &doc) in block.doc_ids.iter().enumerate() {
+                let row = &block.data[j * dim..(j + 1) * dim];
+                topk.push(doc, distance::l2(&pq.embedding, row));
+            }
+        }
+        let want = topk.into_sorted();
+        for (h, w) in hits.iter().zip(&want) {
+            let tol = 1e-4 * w.distance.abs().max(1.0);
+            assert!((h.distance - w.distance).abs() <= tol);
+        }
+    }
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}
+
+#[test]
+fn byte_budget_accounting_invariants() {
+    let (cfg, spec) = test_cfg("budget");
+    ensure_dataset(&cfg, &spec).unwrap();
+
+    // f32 mode keeps the historical count semantics: no byte budget.
+    let f32_engine = SearchEngine::open(&cfg, &spec).unwrap();
+    assert_eq!(f32_engine.cache.byte_budget(), None);
+    assert_eq!(cache_byte_budget(&cfg, &f32_engine.index.meta), None);
+
+    let mut sq8_cfg = cfg.clone();
+    sq8_cfg.scoring = Scoring::Sq8;
+    let mut engine = SearchEngine::open(&sq8_cfg, &spec).unwrap();
+    let budget = cache_byte_budget(&sq8_cfg, &engine.index.meta).unwrap();
+    assert_eq!(engine.cache.byte_budget(), Some(budget));
+    assert_eq!(
+        budget,
+        sq8_cfg.cache_entries as u64
+            * engine.index.meta.mean_f32_resident_bytes(cagr::config::geometry::SCORE_N)
+    );
+
+    // Touch every cluster; compact sq8 blocks must stretch the f32-sized
+    // budget over more than cache_entries clusters (the ~4× claim), while
+    // resident bytes never exceed the budget.
+    let queries = generate_queries(&spec);
+    let prepared = engine.prepare_with(&queries[..16], Some(16)).unwrap();
+    for pq in &prepared {
+        engine.search(pq).unwrap();
+        assert!(engine.cache.resident_bytes() <= budget);
+    }
+    assert!(
+        engine.cache.len() > sq8_cfg.cache_entries,
+        "sq8 cache holds {} entries, no more than the f32 count {}",
+        engine.cache.len(),
+        sq8_cfg.cache_entries
+    );
+    // Every resident block is in its compact representation.
+    for id in engine.cache.resident_ids() {
+        let block = engine.cache.peek(id).unwrap();
+        assert!(block.data.is_empty(), "cluster {id} kept f32 rows in sq8 mode");
+        assert!(block.quant.is_some());
+    }
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}
+
+#[test]
+fn sq8_takes_fewer_disk_reads_at_equal_cache_bytes() {
+    let (cfg, spec) = test_cfg("fig4");
+    ensure_dataset(&cfg, &spec).unwrap();
+    let queries = generate_queries(&spec);
+    let mut misses = Vec::new();
+    for scoring in [Scoring::F32, Scoring::Sq8] {
+        let mut run_cfg = cfg.clone();
+        run_cfg.scoring = scoring;
+        let policy = GroupingWithPrefetch::boxed();
+        let result = run_workload(&run_cfg, &spec, policy, &queries, 16).unwrap();
+        misses.push(result.cache_stats.misses);
+    }
+    assert!(
+        misses[1] < misses[0],
+        "sq8 misses {} not strictly below f32 misses {} at equal cache bytes",
+        misses[1],
+        misses[0]
+    );
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}
+
+#[test]
+fn encode_decode_round_trip_bounds() {
+    let (cfg, spec) = test_cfg("roundtrip");
+    ensure_dataset(&cfg, &spec).unwrap();
+    let engine = SearchEngine::open(&cfg, &spec).unwrap();
+    for cid in 0..4u32 {
+        let full = engine.index.read_cluster_as(cid, Scoring::F32).unwrap();
+        let compact = engine.index.read_cluster_as(cid, Scoring::Sq8).unwrap();
+        assert_eq!(full.doc_ids, compact.doc_ids);
+        assert!(compact.data.is_empty());
+        let quant = compact.quant.as_ref().unwrap();
+        assert_eq!(quant.codes.len(), full.data.len());
+        assert!(quant.scale > 0.0);
+        // Round-trip bound: every valid value is reconstructed within half
+        // a quantization step (plus f32 epsilon slack).
+        let bound = quant.scale * 0.5 + 1e-5;
+        for (i, &v) in full.data[..full.len * full.dim].iter().enumerate() {
+            let back = distance::sq8_decode_value(quant.codes[i], quant.min, quant.scale);
+            assert!(
+                (back - v).abs() <= bound,
+                "cluster {cid} value {i}: {v} -> {back} (step {})",
+                quant.scale
+            );
+        }
+        // Compact representation is at most ~¼ the f32 footprint + doc ids.
+        assert!(compact.resident_bytes() < full.resident_bytes() / 2);
+    }
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}

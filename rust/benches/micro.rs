@@ -96,6 +96,7 @@ fn main() -> anyhow::Result<()> {
             doc_ids: vec![id],
             data: vec![0.0],
             quant: None,
+            pq: None,
             bytes_on_disk: 1,
         })
     };
@@ -151,10 +152,12 @@ fn main() -> anyhow::Result<()> {
         println!("(artifacts/ missing: skipping PJRT dispatch benches)");
     }
 
-    // Scoring-kernel arms (docs/SCORING.md): scalar-f32 vs simd-f32 vs sq8
+    // Scoring-kernel arms (docs/SCORING.md): scalar-f32 vs simd-f32 vs
+    // sq8 (scalar + simd) vs pq ADC (m ∈ {8,16}, scalar + simd gather)
     // across dims 128/768 and block sizes 1k/8k, plus a fig4-style
-    // equal-cache-bytes disk-read comparison; emitted to results/kernel.json
-    // so the CI bench-smoke job archives the measured speedups.
+    // equal-cache-bytes miss/bytes comparison across f32/sq8/pq16x8;
+    // emitted to results/kernel.json so the CI bench-smoke job archives
+    // the measured speedups.
     let kernel = kernel_bench(&mut rng, &mut stats)?;
     std::fs::create_dir_all("results")?;
     std::fs::write("results/kernel.json", kernel.pretty())?;
@@ -185,12 +188,20 @@ fn recall_at(oracle: &[usize], got: &[usize]) -> f64 {
 
 fn kernel_bench(rng: &mut Rng, stats: &mut Vec<BenchStats>) -> anyhow::Result<Json> {
     use cagr::index::distance::{
-        l2_one_to_many, l2_one_to_many_auto, simd_active, sq8_encode_value, sq8_one_to_many,
-        sq8_params, sq8_quantize_query,
+        l2_one_to_many, l2_one_to_many_auto, pq_adc_table, pq_score_one_to_many,
+        pq_score_one_to_many_auto, simd_active, sq8_encode_value, sq8_one_to_many,
+        sq8_one_to_many_auto, sq8_params, sq8_quantize_query,
     };
+    use cagr::index::kmeans::train_subspace_codebooks;
+    use cagr::index::PqCodebook;
 
     const K: usize = 10;
     const RECALL_QUERIES: usize = 32;
+    // Codewords per subspace for the bench codebooks: smaller than the
+    // serving default (256) to keep training/encoding snappy; the ADC
+    // table stride is fixed at 256 either way, so the gather kernel under
+    // test is identical.
+    const BENCH_CODEWORDS: usize = 64;
     let mut arms = Vec::new();
     for &dim in &[128usize, 768] {
         for &n in &[1_000usize, 8_000] {
@@ -219,6 +230,66 @@ fn kernel_bench(rng: &mut Rng, stats: &mut Vec<BenchStats>) -> anyhow::Result<Js
                 sq8_one_to_many(&qcode, &codes, dim, scale, n, &mut out);
                 std::hint::black_box(&out);
             });
+            let sq8_simd = bench(&format!("kernel sq8-simd  {dim}d x{n}"), 5, iters, || {
+                sq8_one_to_many_auto(&qcode, &codes, dim, scale, n, &mut out);
+                std::hint::black_box(&out);
+            });
+
+            // PQ arms (ADC table build + code gather, the per-(query,
+            // cluster) serving cost) at the two supported geometries.
+            let mut pq_arms = Vec::new();
+            for &m in &[8usize, 16] {
+                let sub_dim = dim / m;
+                let (centroids, k) = train_subspace_codebooks(
+                    &vecs,
+                    dim,
+                    m,
+                    BENCH_CODEWORDS,
+                    3,
+                    1_000,
+                    rng,
+                );
+                let book = PqCodebook { m, k, sub_dim, centroids };
+                let mut pq_codes = vec![0u8; n * m];
+                for (row, chunk) in pq_codes.chunks_mut(m).enumerate() {
+                    book.encode_residual(&vecs[row * dim..(row + 1) * dim], chunk);
+                }
+                let mut table = Vec::new();
+                let pq_scalar =
+                    bench(&format!("kernel pq{m}x8     {dim}d x{n}"), 5, iters, || {
+                        pq_adc_table(q, &book.centroids, m, k, sub_dim, &mut table);
+                        pq_score_one_to_many(&table, &pq_codes, m, n, &mut out);
+                        std::hint::black_box(&out);
+                    });
+                let pq_simd =
+                    bench(&format!("kernel pq{m}x8-simd {dim}d x{n}"), 5, iters, || {
+                        pq_adc_table(q, &book.centroids, m, k, sub_dim, &mut table);
+                        pq_score_one_to_many_auto(&table, &pq_codes, m, n, &mut out);
+                        std::hint::black_box(&out);
+                    });
+
+                let mut pq_recall = 0f64;
+                let mut buf = vec![0f32; n];
+                for q in &queries {
+                    l2_one_to_many(q, &vecs, dim, &mut buf);
+                    let oracle = top_ids(&buf, K);
+                    pq_adc_table(q, &book.centroids, m, k, sub_dim, &mut table);
+                    pq_score_one_to_many_auto(&table, &pq_codes, m, n, &mut buf);
+                    pq_recall += recall_at(&oracle, &top_ids(&buf, K));
+                }
+                pq_recall /= RECALL_QUERIES as f64;
+
+                let us = |s: &BenchStats| s.mean.as_secs_f64() * 1e6;
+                pq_arms.push(obj(vec![
+                    ("m", Json::Num(m as f64)),
+                    ("codewords", Json::Num(k as f64)),
+                    ("scalar_us", Json::Num(us(&pq_scalar))),
+                    ("simd_us", Json::Num(us(&pq_simd))),
+                    ("recall_at_10", Json::Num(pq_recall)),
+                ]));
+                stats.push(pq_scalar);
+                stats.push(pq_simd);
+            }
 
             let (mut simd_recall, mut sq8_recall) = (0f64, 0f64);
             let mut buf = vec![0f32; n];
@@ -242,22 +313,28 @@ fn kernel_bench(rng: &mut Rng, stats: &mut Vec<BenchStats>) -> anyhow::Result<Js
                 ("scalar_f32_us", Json::Num(us(&scalar))),
                 ("simd_f32_us", Json::Num(us(&simd))),
                 ("sq8_us", Json::Num(us(&sq8))),
+                ("sq8_simd_us", Json::Num(us(&sq8_simd))),
                 ("simd_speedup", Json::Num(us(&scalar) / us(&simd).max(1e-9))),
                 ("sq8_speedup", Json::Num(us(&scalar) / us(&sq8).max(1e-9))),
+                ("sq8_simd_speedup", Json::Num(us(&scalar) / us(&sq8_simd).max(1e-9))),
                 ("simd_recall_at_10", Json::Num(simd_recall)),
                 ("sq8_recall_at_10", Json::Num(sq8_recall)),
+                ("pq", Json::Arr(pq_arms)),
             ]));
             stats.push(scalar);
             stats.push(simd);
             stats.push(sq8);
+            stats.push(sq8_simd);
         }
     }
 
     // Fig4-style workload: identical index + policy + query stream, one run
-    // per scoring mode, equal cache *bytes* (sq8's byte budget is exactly
-    // what cache_entries f32 blocks occupy — docs/SCORING.md). The claim
-    // under test: compact blocks stretch the same memory over more
-    // clusters, so sq8 takes strictly fewer demand disk reads.
+    // per scoring mode, equal cache *bytes* (the sq8/pq byte budget is
+    // exactly what cache_entries f32 blocks occupy — docs/SCORING.md). The
+    // claim under test: compact blocks stretch the same memory over more
+    // clusters, so sq8 takes strictly fewer demand disk reads and pq takes
+    // fewer still — and each demand miss moves fewer bytes than the f32
+    // fetch it replaces.
     use cagr::config::{Backend, Config, DiskProfile, Scoring};
     use cagr::coordinator::GroupingWithPrefetch;
     use cagr::harness::runner::{ensure_dataset, run_workload};
@@ -279,18 +356,20 @@ fn kernel_bench(rng: &mut Rng, stats: &mut Vec<BenchStats>) -> anyhow::Result<Js
     let queries = generate_queries(&spec);
 
     let mut misses = Vec::new();
-    for scoring in [Scoring::F32, Scoring::Sq8] {
+    let mut bytes = Vec::new();
+    for scoring in [Scoring::F32, Scoring::Sq8, Scoring::Pq { m: 16, b: 8 }] {
         let mut run_cfg = cfg.clone();
         run_cfg.scoring = scoring;
         let policy = GroupingWithPrefetch::boxed();
         let result = run_workload(&run_cfg, &spec, policy, &queries, 16)?;
         misses.push(result.cache_stats.misses);
+        bytes.push(result.reports.iter().map(|r| r.bytes_read).sum::<u64>());
     }
-    let (f32_misses, sq8_misses) = (misses[0], misses[1]);
+    let (f32_misses, sq8_misses, pq_misses) = (misses[0], misses[1], misses[2]);
+    let (f32_bytes, sq8_bytes, pq_bytes) = (bytes[0], bytes[1], bytes[2]);
     println!(
-        "fig4-style equal-cache-bytes: f32 misses={f32_misses}, sq8 misses={sq8_misses} \
-         (sq8 fewer: {})",
-        sq8_misses < f32_misses
+        "fig4-style equal-cache-bytes: misses f32={f32_misses} sq8={sq8_misses} \
+         pq16x8={pq_misses}; bytes f32={f32_bytes} sq8={sq8_bytes} pq16x8={pq_bytes}"
     );
 
     let index = cagr::index::IvfIndex::open(&cfg.dataset_dir(spec.name))?;
@@ -316,7 +395,12 @@ fn kernel_bench(rng: &mut Rng, stats: &mut Vec<BenchStats>) -> anyhow::Result<Js
                 ("cache_byte_budget", Json::Num(budget as f64)),
                 ("f32_misses", Json::Num(f32_misses as f64)),
                 ("sq8_misses", Json::Num(sq8_misses as f64)),
+                ("pq16x8_misses", Json::Num(pq_misses as f64)),
+                ("f32_bytes", Json::Num(f32_bytes as f64)),
+                ("sq8_bytes", Json::Num(sq8_bytes as f64)),
+                ("pq16x8_bytes", Json::Num(pq_bytes as f64)),
                 ("sq8_fewer_reads", Json::Bool(sq8_misses < f32_misses)),
+                ("pq_fewer_bytes", Json::Bool(pq_bytes < sq8_bytes)),
             ]),
         ),
     ]))

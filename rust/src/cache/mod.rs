@@ -383,6 +383,7 @@ pub(crate) fn test_block(id: u32) -> Arc<ClusterBlock> {
         doc_ids: vec![id],
         data: vec![id as f32, 0.0],
         quant: None,
+        pq: None,
         bytes_on_disk: 100 + id as u64,
     })
 }
@@ -560,6 +561,7 @@ mod tests {
             doc_ids: (0..rows as u32).collect(),
             data: (0..rows * 16).map(|i| i as f32).collect(),
             quant: None,
+            pq: None,
             bytes_on_disk: 0,
         };
         if compact {

@@ -233,24 +233,44 @@ pub enum Scoring {
     /// integer space; blocks are compacted after read, so the cluster cache
     /// holds ~4x more clusters at equal memory.
     Sq8,
+    /// Product-quantized rows: `m` subspaces, `2^b` codebook entries each,
+    /// trained on centroid residuals at build time and scored through a
+    /// per-query ADC lookup table. Misses read only the m-byte codes from
+    /// the on-disk sidecar; a top-R re-rank against f32 rows keeps end
+    /// recall oracle-grade.
+    Pq { m: usize, b: usize },
 }
 
 impl Scoring {
     /// Parse a selector. Case-insensitive and whitespace-tolerant.
+    /// `pq` alone means the default geometry `pq16x8`.
     pub fn parse(s: &str) -> anyhow::Result<Self> {
-        match s.trim().to_ascii_lowercase().as_str() {
+        let lower = s.trim().to_ascii_lowercase();
+        match lower.as_str() {
             "f32" | "float" | "full" => Ok(Scoring::F32),
             "sq8" | "int8" | "quantized" => Ok(Scoring::Sq8),
-            other => anyhow::bail!(
-                "unknown scoring mode '{other}' (accepted: f32|float|full, sq8|int8|quantized)"
-            ),
+            "pq" => Ok(Scoring::Pq { m: 16, b: 8 }),
+            other => {
+                if let Some(geom) = other.strip_prefix("pq") {
+                    if let Some((m_s, b_s)) = geom.split_once('x') {
+                        if let (Ok(m), Ok(b)) = (m_s.parse::<usize>(), b_s.parse::<usize>()) {
+                            return Ok(Scoring::Pq { m, b });
+                        }
+                    }
+                }
+                anyhow::bail!(
+                    "unknown scoring mode '{other}' (accepted: f32|float|full, \
+                     sq8|int8|quantized, pq|pq{{m}}x{{b}} e.g. pq16x8)"
+                )
+            }
         }
     }
 
-    pub fn name(&self) -> &'static str {
+    pub fn name(&self) -> String {
         match self {
-            Scoring::F32 => "f32",
-            Scoring::Sq8 => "sq8",
+            Scoring::F32 => "f32".to_string(),
+            Scoring::Sq8 => "sq8".to_string(),
+            Scoring::Pq { m, b } => format!("pq{m}x{b}"),
         }
     }
 }
@@ -562,6 +582,17 @@ impl Config {
         if self.io_workers == 0 {
             anyhow::bail!("io_workers must be > 0 (1 = sequential executor)");
         }
+        if let Scoring::Pq { m, b } = self.scoring {
+            if b != 8 {
+                anyhow::bail!("pq codebooks are 8-bit only (got pq{m}x{b}); use pq{m}x8");
+            }
+            if m == 0 || geometry::EMBED_DIM % m != 0 {
+                anyhow::bail!(
+                    "pq subspace count m ({m}) must divide the embedding dim ({})",
+                    geometry::EMBED_DIM
+                );
+            }
+        }
         if !(0.0..=1.0).contains(&self.theta) {
             anyhow::bail!("theta ({}) must be in [0, 1]", self.theta);
         }
@@ -815,7 +846,24 @@ mod tests {
         assert_eq!(Scoring::Sq8.name(), "sq8");
         assert_eq!(Scoring::F32.name(), "f32");
         let err = c.set("scoring", "fp16").unwrap_err().to_string();
-        assert!(err.contains("f32") && err.contains("sq8"), "{err}");
+        assert!(err.contains("f32") && err.contains("sq8") && err.contains("pq"), "{err}");
+
+        // PQ geometry parsing: bare "pq" is the default pq16x8; explicit
+        // {m}x{b} forms parse; validation pins b == 8 and m | EMBED_DIM.
+        c.set("scoring", "pq").unwrap();
+        assert_eq!(c.scoring, Scoring::Pq { m: 16, b: 8 });
+        c.validate().unwrap();
+        c.set("scoring", "PQ8x8").unwrap();
+        assert_eq!(c.scoring, Scoring::Pq { m: 8, b: 8 });
+        c.validate().unwrap();
+        assert_eq!(Scoring::Pq { m: 16, b: 8 }.name(), "pq16x8");
+        assert!(Scoring::parse("pq16").is_err());
+        c.set("scoring", "pq16x4").unwrap();
+        assert!(c.validate().unwrap_err().to_string().contains("8-bit"));
+        c.set("scoring", "pq7x8").unwrap();
+        assert!(c.validate().unwrap_err().to_string().contains("divide"));
+        c.set("scoring", "f32").unwrap();
+        c.validate().unwrap();
     }
 
     #[test]

@@ -175,15 +175,16 @@ pub fn embedding_label(backend: crate::config::Backend, model: &str) -> String {
 ///
 /// `scoring=f32` keeps the historical entry-count semantics (`None`):
 /// every admission decision stays bit-identical to pre-quantization
-/// builds. `scoring=sq8` switches the cache to resident-byte accounting
-/// with a budget of `cache_entries × mean f32 block footprint` — the
-/// *same* memory an f32 cache of `cache_entries` blocks would hold, so
-/// compact sq8 blocks (~¼ the bytes) effectively multiply the entry
-/// count ~4× at equal memory instead of capping at `cache_entries`.
+/// builds. `scoring=sq8` and `scoring=pq{m}x8` switch the cache to
+/// resident-byte accounting with a budget of `cache_entries × mean f32
+/// block footprint` — the *same* memory an f32 cache of `cache_entries`
+/// blocks would hold, so compact blocks (~¼ the bytes for sq8, ~1/16 for
+/// pq16x8) effectively multiply the entry count at equal memory instead
+/// of capping at `cache_entries`.
 pub fn cache_byte_budget(cfg: &Config, meta: &crate::index::IvfMeta) -> Option<u64> {
     match cfg.scoring {
         Scoring::F32 => None,
-        Scoring::Sq8 => Some(
+        Scoring::Sq8 | Scoring::Pq { .. } => Some(
             (cfg.cache_entries as u64)
                 .saturating_mul(meta.mean_f32_resident_bytes(crate::config::geometry::SCORE_N))
                 .max(1),
@@ -451,7 +452,10 @@ impl SearchEngine {
         top_k: Option<usize>,
     ) -> anyhow::Result<(SearchReport, Vec<Hit>)> {
         let t0 = Instant::now();
-        let mut topk = TopK::new(top_k.unwrap_or(self.cfg.top_k).max(1));
+        let k = top_k.unwrap_or(self.cfg.top_k).max(1);
+        let rerank = matches!(self.cfg.scoring, Scoring::Pq { .. });
+        let mut topk = TopK::new(self.collect_k(k));
+        let mut kept: Vec<Arc<ClusterBlock>> = Vec::new();
         let mut report = SearchReport {
             query_id: pq.query.id,
             nprobe: pq.clusters.len(),
@@ -474,9 +478,89 @@ impl SearchEngine {
                 &mut self.score_scratch,
             )?;
             topk.push_block(&outcome.block.doc_ids, &self.score_scratch);
+            if rerank {
+                kept.push(Arc::clone(&outcome.block));
+            }
+        }
+        let mut hits = topk.into_sorted();
+        if rerank {
+            self.rerank_exact(&pq.embedding, &mut hits, &kept, k, &mut report)?;
         }
         report.latency = t0.elapsed() + pq.prep_cost;
-        Ok((report, topk.into_sorted()))
+        Ok((report, hits))
+    }
+
+    /// How many candidates the approximate pass collects: `scoring=pq`
+    /// widens the collector so the exact re-rank has slack to repair ADC
+    /// ranking errors; exact modes collect `top_k` directly.
+    pub(crate) fn collect_k(&self, top_k: usize) -> usize {
+        match self.cfg.scoring {
+            Scoring::Pq { .. } => (top_k * 4).max(16),
+            _ => top_k,
+        }
+    }
+
+    /// Exact top-R re-rank for PQ scoring: re-scores the widened candidate
+    /// list against f32 rows fetched *on demand* — targeted
+    /// [`crate::index::storage::read_rows`] seeks into the cluster files
+    /// (R × dim × 4 bytes total), never whole-cluster reads, so the compact
+    /// sidecar's byte advantage survives the re-rank. One modeled disk
+    /// charge per candidate cluster; bytes and simulated time land in the
+    /// report (but not in hit/miss counters — no cache transaction runs).
+    /// Truncates to the final `top_k` in canonical `(distance, doc_id)`
+    /// order.
+    pub(crate) fn rerank_exact(
+        &self,
+        embedding: &[f32],
+        hits: &mut Vec<Hit>,
+        blocks: &[Arc<ClusterBlock>],
+        top_k: usize,
+        report: &mut SearchReport,
+    ) -> anyhow::Result<()> {
+        use std::collections::BTreeMap;
+        let dim = self.index.meta.dim;
+        // Group candidates by owning cluster so each cluster file is
+        // seeked once, in ascending id order (deterministic disk-model RNG
+        // consumption).
+        let mut groups: BTreeMap<u32, (Vec<usize>, Vec<usize>)> = BTreeMap::new();
+        for (hi, hit) in hits.iter().enumerate() {
+            let (cid, row) = blocks
+                .iter()
+                .find_map(|b| {
+                    b.doc_ids.iter().position(|&d| d == hit.doc_id).map(|row| (b.id, row))
+                })
+                .ok_or_else(|| {
+                    anyhow::anyhow!("re-rank candidate doc {} not in any probed cluster", hit.doc_id)
+                })?;
+            let g = groups.entry(cid).or_default();
+            g.0.push(row);
+            g.1.push(hi);
+        }
+        for (cid, (rows, his)) in &groups {
+            let flat = crate::index::storage::read_rows(&self.index.dir, *cid, rows)?;
+            let bytes = (flat.len() * 4) as u64;
+            let simulated = {
+                let d = self.disk.lock().unwrap().read_latency(bytes);
+                if !d.is_zero() {
+                    std::thread::sleep(d);
+                }
+                d
+            };
+            report.bytes_read += bytes;
+            report.simulated += simulated;
+            for (i, &hi) in his.iter().enumerate() {
+                hits[hi].distance =
+                    crate::index::distance::l2(embedding, &flat[i * dim..(i + 1) * dim]);
+            }
+        }
+        hits.sort_by(|a, b| {
+            a.distance
+                .partial_cmp(&b.distance)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.doc_id.cmp(&b.doc_id))
+        });
+        hits.truncate(top_k);
+        Ok(())
     }
 
     /// Convenience: prepare + search a single raw query.
@@ -516,6 +600,12 @@ impl SearchEngine {
         self.cache.stats()
     }
 
+    /// Disk-model counters: `(reads, bytes_read)` since the engine opened.
+    pub fn disk_stats(&self) -> (u64, u64) {
+        let d = self.disk.lock().unwrap();
+        (d.reads, d.bytes_read)
+    }
+
     /// Reset cache stats (e.g. after warm-up).
     pub fn reset_cache_stats(&mut self) {
         self.cache.reset_stats();
@@ -552,6 +642,7 @@ pub(crate) mod testutil {
             kmeans_iters: 5,
             kmeans_sample: 2_000,
             seed: 99,
+            pq_m: 16,
         };
         let index = IvfIndex::build(&dir, spec.name, "native", &data, dim, &params, &pool).unwrap();
 

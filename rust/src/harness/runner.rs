@@ -63,11 +63,16 @@ pub fn ensure_dataset(cfg: &Config, spec: &DatasetSpec) -> anyhow::Result<()> {
     eprintln!("[cagr]   embedding done in {:.1}s", t0.elapsed().as_secs_f64());
 
     let pool = ThreadPool::new(std::thread::available_parallelism().map_or(4, |n| n.get()));
+    let pq_m = match cfg.scoring {
+        crate::config::Scoring::Pq { m, .. } => m,
+        _ => 16,
+    };
     let params = BuildParams {
         clusters: cfg.clusters,
         kmeans_iters: cfg.kmeans_iters,
         kmeans_sample: cfg.kmeans_sample,
         seed: cfg.seed,
+        pq_m,
     };
     IvfIndex::build(&dir, spec.name, &label, &embeddings, dim, &params, &pool)?;
     profile::profile_index(&dir, cfg.disk_profile, cfg.seed)?;

@@ -181,6 +181,119 @@ mod avx2 {
         }
         total
     }
+
+    /// Horizontal sum of 8 i32 lanes, widened to i64. Callers bound each
+    /// lane below 2^27 so the in-register i32 reduction cannot overflow.
+    ///
+    /// # Safety
+    /// AVX2 must be available (checked by the caller).
+    #[target_feature(enable = "avx2")]
+    unsafe fn reduce_i32(v: __m256i) -> i64 {
+        let half = _mm_add_epi32(_mm256_castsi256_si128(v), _mm256_extracti128_si256(v, 1));
+        let pair = _mm_add_epi32(half, _mm_shuffle_epi32(half, 0b00_00_11_10));
+        let one = _mm_add_epi32(pair, _mm_shuffle_epi32(pair, 0b00_00_00_01));
+        _mm_cvtsi128_si32(one) as i64
+    }
+
+    /// Integer sq8 kernel: 16-lane i16 deltas squared pairwise into i32 via
+    /// `vpmaddwd` (the `maddubs`-style multiply-accumulate), flushed to an
+    /// i64 total every 256 dimensions. Deltas fit i16 (|d| <= 1535 under
+    /// the query clamp), pair sums fit i32 (< 2^23), and a 256-dim flush
+    /// window keeps each lane below 2^26 — no step can overflow, so the
+    /// result is exactly the scalar kernel's, bit for bit.
+    ///
+    /// # Safety
+    /// The caller must have verified AVX2 support.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn sq8_one_to_many(
+        q16: &[i16],
+        codes: &[u8],
+        dim: usize,
+        scale: f32,
+        n: usize,
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(q16.len(), dim);
+        debug_assert!(codes.len() >= n * dim);
+        debug_assert!(out.len() >= n);
+        let s2 = scale * scale;
+        let lanes = dim / 16 * 16;
+        for (j, slot) in out.iter_mut().take(n).enumerate() {
+            let row = &codes[j * dim..(j + 1) * dim];
+            let mut total: i64 = 0;
+            let mut acc = _mm256_setzero_si256();
+            let mut since_flush = 0usize;
+            let mut i = 0;
+            while i < lanes {
+                let c8 = _mm_loadu_si128(row.as_ptr().add(i) as *const __m128i);
+                let c16 = _mm256_cvtepu8_epi16(c8);
+                let q = _mm256_loadu_si256(q16.as_ptr().add(i) as *const __m256i);
+                let d = _mm256_sub_epi16(q, c16);
+                acc = _mm256_add_epi32(acc, _mm256_madd_epi16(d, d));
+                i += 16;
+                since_flush += 16;
+                if since_flush >= 256 {
+                    total += reduce_i32(acc);
+                    acc = _mm256_setzero_si256();
+                    since_flush = 0;
+                }
+            }
+            total += reduce_i32(acc);
+            while i < dim {
+                let d = q16[i] as i32 - row[i] as i32;
+                total += (d * d) as i64;
+                i += 1;
+            }
+            *slot = total as f32 * s2;
+        }
+    }
+
+    /// ADC table-gather kernel: 8 subspace lookups per `vpgatherdps`. The
+    /// horizontal reduction reassociates the `m`-term sum relative to the
+    /// scalar kernel (same last-ulp contract as the f32 arms).
+    ///
+    /// # Safety
+    /// The caller must have verified AVX2 support, and `table` must span
+    /// `m x PQ_TABLE_STRIDE` floats (codes are u8, so every gather index is
+    /// in bounds by construction).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn pq_score_one_to_many(
+        table: &[f32],
+        codes: &[u8],
+        m: usize,
+        n: usize,
+        out: &mut [f32],
+    ) {
+        debug_assert!(table.len() >= m * super::PQ_TABLE_STRIDE);
+        debug_assert!(codes.len() >= n * m);
+        debug_assert!(out.len() >= n);
+        let octets = m / 8 * 8;
+        // Offsets of 8 consecutive subspace rows inside the table.
+        let row_step = _mm256_setr_epi32(0, 256, 512, 768, 1024, 1280, 1536, 1792);
+        for (j, slot) in out.iter_mut().take(n).enumerate() {
+            let row = &codes[j * m..(j + 1) * m];
+            let mut acc = _mm256_setzero_ps();
+            let mut sub = 0;
+            while sub < octets {
+                let c8 = _mm_loadl_epi64(row.as_ptr().add(sub) as *const __m128i);
+                let idx = _mm256_add_epi32(
+                    _mm256_add_epi32(_mm256_cvtepu8_epi32(c8), row_step),
+                    _mm256_set1_epi32((sub * super::PQ_TABLE_STRIDE) as i32),
+                );
+                acc = _mm256_add_ps(acc, _mm256_i32gather_ps::<4>(table.as_ptr(), idx));
+                sub += 8;
+            }
+            let half = _mm_add_ps(_mm256_castps256_ps128(acc), _mm256_extractf128_ps(acc, 1));
+            let pair = _mm_add_ps(half, _mm_movehl_ps(half, half));
+            let one = _mm_add_ss(pair, _mm_shuffle_ps(pair, pair, 1));
+            let mut sum = _mm_cvtss_f32(one);
+            while sub < m {
+                sum += table[sub * super::PQ_TABLE_STRIDE + row[sub] as usize];
+                sub += 1;
+            }
+            *slot = sum;
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -302,6 +415,117 @@ pub fn sq8_one_to_many(
         }
         *slot = total as f32 * s2;
     }
+}
+
+/// `sq8_one_to_many` with runtime dispatch to the AVX2 integer kernel.
+///
+/// Unlike the f32 `_auto` entry points, the wide arm is *exact*: every
+/// operation is integer arithmetic, so the accumulated total — and with it
+/// the f32 result — is bit-identical to the portable kernel whether or not
+/// AVX2 is taken. Feature off still compiles to a direct scalar call.
+pub fn sq8_one_to_many_auto(
+    qcode: &[i32],
+    codes: &[u8],
+    dim: usize,
+    scale: f32,
+    n: usize,
+    out: &mut [f32],
+) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if std::arch::is_x86_64_feature_detected!("avx2") {
+        debug_assert_eq!(qcode.len(), dim);
+        // Query codes are clamped to [QCODE_MIN, QCODE_MAX], well inside
+        // i16, so narrowing for the 16-lane kernel is lossless.
+        let q16: Vec<i16> = qcode.iter().map(|&v| v as i16).collect();
+        // Safety: AVX2 presence was just checked.
+        unsafe { avx2::sq8_one_to_many(&q16, codes, dim, scale, n, out) };
+        return;
+    }
+    sq8_one_to_many(qcode, codes, dim, scale, n, out)
+}
+
+// ---------------------------------------------------------------------------
+// Product-quantized (PQ) ADC kernels.
+//
+// A row is `m` u8 codes, one per subspace of `sub_dim = dim / m` dimensions;
+// each code indexes a per-subspace codebook of `k <= 256` centroids trained
+// on centroid residuals at build time (index/ivf.rs). Scoring is asymmetric
+// distance computation: the (residual) query is expanded once per block into
+// an `m x 256` lookup table of exact subspace distances, after which each
+// row costs `m` table gathers and `m - 1` adds. See docs/SCORING.md.
+// ---------------------------------------------------------------------------
+
+/// Row stride of the ADC table. Tables are `m x PQ_TABLE_STRIDE` regardless
+/// of the trained codebook size `k <= 256`, so the gather index is always
+/// `sub * PQ_TABLE_STRIDE + code` and the AVX2 arm needs no per-call shape.
+pub const PQ_TABLE_STRIDE: usize = 256;
+
+/// Build the ADC lookup table for one (residual) query against a flat
+/// codebook (`m x k x sub_dim`, subspace-major). `out` is resized to
+/// `m x PQ_TABLE_STRIDE`; entries past `k` are zeroed and never gathered
+/// because codes are produced by nearest-centroid search over `k` entries.
+pub fn pq_adc_table(
+    rq: &[f32],
+    codebook: &[f32],
+    m: usize,
+    k: usize,
+    sub_dim: usize,
+    out: &mut Vec<f32>,
+) {
+    debug_assert_eq!(rq.len(), m * sub_dim);
+    debug_assert_eq!(codebook.len(), m * k * sub_dim);
+    debug_assert!(k <= PQ_TABLE_STRIDE);
+    out.clear();
+    out.resize(m * PQ_TABLE_STRIDE, 0.0);
+    for sub in 0..m {
+        let q = &rq[sub * sub_dim..(sub + 1) * sub_dim];
+        let base = sub * k * sub_dim;
+        let row = &mut out[sub * PQ_TABLE_STRIDE..sub * PQ_TABLE_STRIDE + k];
+        for (j, slot) in row.iter_mut().enumerate() {
+            *slot = l2(q, &codebook[base + j * sub_dim..base + (j + 1) * sub_dim]);
+        }
+    }
+}
+
+/// ADC distances from one table to the first `n` rows of `codes`
+/// (`n x m` u8, row-major), written to `out[..n]`.
+///
+/// Because subspace L2 terms decompose exactly, this equals the f32 L2
+/// between the residual query and each row's *reconstruction* — the only
+/// error versus full precision is the quantization of the row itself.
+pub fn pq_score_one_to_many(table: &[f32], codes: &[u8], m: usize, n: usize, out: &mut [f32]) {
+    debug_assert!(table.len() >= m * PQ_TABLE_STRIDE);
+    debug_assert!(codes.len() >= n * m);
+    debug_assert!(out.len() >= n);
+    for (j, slot) in out.iter_mut().take(n).enumerate() {
+        let row = &codes[j * m..(j + 1) * m];
+        let mut sum = 0f32;
+        for (sub, &c) in row.iter().enumerate() {
+            sum += table[sub * PQ_TABLE_STRIDE + c as usize];
+        }
+        *slot = sum;
+    }
+}
+
+/// `pq_score_one_to_many` with runtime dispatch to the AVX2 gather kernel.
+/// The wide arm reassociates the `m`-term sum (same last-ulp contract as
+/// the f32 arms); feature off compiles to a direct scalar call.
+pub fn pq_score_one_to_many_auto(
+    table: &[f32],
+    codes: &[u8],
+    m: usize,
+    n: usize,
+    out: &mut [f32],
+) {
+    #[cfg(all(feature = "simd", target_arch = "x86_64"))]
+    if std::arch::is_x86_64_feature_detected!("avx2") {
+        debug_assert!(table.len() >= m * PQ_TABLE_STRIDE);
+        debug_assert!(codes.len() >= n * m);
+        // Safety: AVX2 presence was just checked.
+        unsafe { avx2::pq_score_one_to_many(table, codes, m, n, out) };
+        return;
+    }
+    pq_score_one_to_many(table, codes, m, n, out)
 }
 
 #[cfg(test)]
@@ -445,6 +669,114 @@ mod tests {
         let mut out = vec![0f32; 3];
         sq8_one_to_many(&qcode, &codes, dim, scale, 3, &mut out);
         assert!(out.iter().all(|d| d.is_finite()));
+    }
+
+    #[test]
+    fn sq8_auto_is_bit_identical_to_scalar() {
+        // The integer kernel is exact under either dispatch arm: assert
+        // bitwise equality whether or not AVX2 is taken.
+        let mut rng = Rng::new(17);
+        for dim in [8, 16, 64, 300, 768] {
+            let n = 21;
+            let vs: Vec<f32> = (0..n * dim).map(|_| rng.normal() as f32).collect();
+            let q: Vec<f32> = (0..dim).map(|_| rng.normal() as f32 * 3.0).collect();
+            let (min, scale) = sq8_params(&vs);
+            let codes: Vec<u8> = vs.iter().map(|&v| sq8_encode_value(v, min, scale)).collect();
+            let mut qcode = Vec::new();
+            sq8_quantize_query(&q, min, scale, &mut qcode);
+            let mut auto = vec![0f32; n];
+            let mut scalar = vec![0f32; n];
+            sq8_one_to_many_auto(&qcode, &codes, dim, scale, n, &mut auto);
+            sq8_one_to_many(&qcode, &codes, dim, scale, n, &mut scalar);
+            for j in 0..n {
+                assert_eq!(auto[j].to_bits(), scalar[j].to_bits(), "dim={dim} j={j}");
+            }
+        }
+    }
+
+    /// Tiny PQ fixture: a hand-rolled codebook (no k-means needed) with
+    /// rows encoded by exhaustive nearest-centroid per subspace.
+    fn pq_fixture(
+        rng: &mut Rng,
+        m: usize,
+        k: usize,
+        sub_dim: usize,
+        n: usize,
+    ) -> (Vec<f32>, Vec<u8>, Vec<f32>) {
+        let codebook: Vec<f32> = (0..m * k * sub_dim).map(|_| rng.normal() as f32).collect();
+        let rows: Vec<f32> = (0..n * m * sub_dim).map(|_| rng.normal() as f32).collect();
+        let dim = m * sub_dim;
+        let mut codes = vec![0u8; n * m];
+        for j in 0..n {
+            for sub in 0..m {
+                let seg = &rows[j * dim + sub * sub_dim..j * dim + (sub + 1) * sub_dim];
+                let base = sub * k * sub_dim;
+                let mut best = (0usize, f32::INFINITY);
+                for c in 0..k {
+                    let d = l2(seg, &codebook[base + c * sub_dim..base + (c + 1) * sub_dim]);
+                    if d < best.1 {
+                        best = (c, d);
+                    }
+                }
+                codes[j * m + sub] = best.0 as u8;
+            }
+        }
+        (codebook, codes, rows)
+    }
+
+    #[test]
+    fn pq_adc_matches_reconstructed_f32() {
+        // ADC against the table == exact L2 against each row's
+        // reconstruction: subspace distances decompose with no cross terms.
+        let mut rng = Rng::new(19);
+        for (m, k, sub_dim) in [(8, 16, 4), (16, 256, 4), (16, 100, 8)] {
+            let n = 17;
+            let dim = m * sub_dim;
+            let (codebook, codes, _) = pq_fixture(&mut rng, m, k, sub_dim, n);
+            let q: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+            let mut table = Vec::new();
+            pq_adc_table(&q, &codebook, m, k, sub_dim, &mut table);
+            assert_eq!(table.len(), m * PQ_TABLE_STRIDE);
+            let mut got = vec![0f32; n];
+            pq_score_one_to_many(&table, &codes, m, n, &mut got);
+            for j in 0..n {
+                let mut recon = vec![0f32; dim];
+                for sub in 0..m {
+                    let c = codes[j * m + sub] as usize;
+                    let base = sub * k * sub_dim + c * sub_dim;
+                    recon[sub * sub_dim..(sub + 1) * sub_dim]
+                        .copy_from_slice(&codebook[base..base + sub_dim]);
+                }
+                let want = l2(&q, &recon);
+                let tol = 1e-4 * want.abs().max(1.0);
+                assert!((got[j] - want).abs() < tol, "m={m} j={j} got={} want={want}", got[j]);
+            }
+        }
+    }
+
+    #[test]
+    fn pq_auto_matches_scalar() {
+        let mut rng = Rng::new(23);
+        for (m, k, sub_dim) in [(8, 256, 8), (16, 256, 4), (12, 64, 4)] {
+            let n = 33;
+            let dim = m * sub_dim;
+            let (codebook, codes, _) = pq_fixture(&mut rng, m, k, sub_dim, n);
+            let q: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+            let mut table = Vec::new();
+            pq_adc_table(&q, &codebook, m, k, sub_dim, &mut table);
+            let mut auto = vec![0f32; n];
+            let mut scalar = vec![0f32; n];
+            pq_score_one_to_many_auto(&table, &codes, m, n, &mut auto);
+            pq_score_one_to_many(&table, &codes, m, n, &mut scalar);
+            for j in 0..n {
+                if simd_active() {
+                    let tol = 1e-4 * scalar[j].abs().max(1.0);
+                    assert!((auto[j] - scalar[j]).abs() < tol, "m={m} j={j}");
+                } else {
+                    assert_eq!(auto[j].to_bits(), scalar[j].to_bits(), "m={m} j={j}");
+                }
+            }
+        }
     }
 
     #[test]

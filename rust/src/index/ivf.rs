@@ -7,10 +7,12 @@
 //! read on demand through the engine's cache.
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use crate::config::geometry::{CENTROID_PAD, SCORE_N};
 use crate::config::Scoring;
-use crate::index::{kmeans::KMeans, storage};
+use crate::index::storage::PqCodebook;
+use crate::index::{kmeans, kmeans::KMeans, storage};
 use crate::util::json::{obj, Json};
 use crate::util::rng::Rng;
 use crate::util::threadpool::ThreadPool;
@@ -37,11 +39,43 @@ pub struct IvfMeta {
     /// cost input; filled by `engine::profile`, zero until profiled).
     pub read_profile_us: Vec<u64>,
     pub build_seed: u64,
+    /// Per-index PQ codebooks, persisted as a bit-exact hex blob. Additive
+    /// field: absent in pre-PQ meta.json files, which parse to `None` (such
+    /// indexes serve f32/sq8 but must be rebuilt for `scoring=pq`).
+    pub pq: Option<Arc<PqCodebook>>,
+}
+
+/// Bit-exact f32 slice -> hex blob (8 hex chars per value, IEEE-754 bits).
+fn f32s_to_hex(vals: &[f32]) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::with_capacity(vals.len() * 8);
+    for &v in vals {
+        let _ = write!(s, "{:08x}", v.to_bits());
+    }
+    s
+}
+
+fn f32s_from_hex(s: &str) -> anyhow::Result<Vec<f32>> {
+    anyhow::ensure!(
+        s.len() % 8 == 0,
+        "pq_codebook blob length {} is not a multiple of 8",
+        s.len()
+    );
+    s.as_bytes()
+        .chunks_exact(8)
+        .map(|c| {
+            let txt = std::str::from_utf8(c)
+                .map_err(|_| anyhow::anyhow!("pq_codebook blob is not ascii"))?;
+            Ok(f32::from_bits(u32::from_str_radix(txt, 16).map_err(|e| {
+                anyhow::anyhow!("pq_codebook blob chunk '{txt}': {e}")
+            })?))
+        })
+        .collect()
 }
 
 impl IvfMeta {
     pub fn to_json(&self) -> Json {
-        obj(vec![
+        let mut out = obj(vec![
             ("dataset", self.dataset.as_str().into()),
             ("embedding", self.embedding.as_str().into()),
             ("n_docs", self.n_docs.into()),
@@ -70,7 +104,14 @@ impl IvfMeta {
                 ),
             ),
             ("build_seed", Json::Num(self.build_seed as f64)),
-        ])
+        ]);
+        if let (Json::Obj(map), Some(book)) = (&mut out, &self.pq) {
+            map.insert("pq_m".into(), book.m.into());
+            map.insert("pq_k".into(), book.k.into());
+            map.insert("pq_sub_dim".into(), book.sub_dim.into());
+            map.insert("pq_codebook".into(), f32s_to_hex(&book.centroids).into());
+        }
+        out
     }
 
     pub fn from_json(v: &Json) -> anyhow::Result<IvfMeta> {
@@ -107,6 +148,23 @@ impl IvfMeta {
                 .and_then(Json::as_f64)
                 .ok_or_else(|| anyhow::anyhow!("meta.json missing 'build_seed'"))?
                 as u64,
+            // Additive: pre-PQ meta.json files have no codebook blob.
+            pq: match v.get("pq_codebook").and_then(Json::as_str) {
+                None => None,
+                Some(blob) => {
+                    let m = usize_field("pq_m")?;
+                    let k = usize_field("pq_k")?;
+                    let sub_dim = usize_field("pq_sub_dim")?;
+                    let centroids = f32s_from_hex(blob)?;
+                    anyhow::ensure!(
+                        m > 0 && k > 0 && centroids.len() == m * k * sub_dim,
+                        "pq_codebook blob has {} values, want m*k*sub_dim = {}",
+                        centroids.len(),
+                        m * k * sub_dim
+                    );
+                    Some(Arc::new(PqCodebook { m, k, sub_dim, centroids }))
+                }
+            },
         })
     }
 
@@ -142,6 +200,10 @@ pub struct BuildParams {
     pub kmeans_iters: usize,
     pub kmeans_sample: usize,
     pub seed: u64,
+    /// PQ subspace count for the codebooks + sidecars every build emits
+    /// (codes are always 8-bit). Serving `scoring=pq{m}x8` requires the
+    /// index to have been built with the same `m`.
+    pub pq_m: usize,
 }
 
 /// An opened disk-based IVF index. Holds centroids + metadata only; cluster
@@ -207,6 +269,38 @@ impl IvfIndex {
             members[c].push(doc as u32);
         }
 
+        // PQ codebooks: per-subspace k-means over every row's residual
+        // against its assigned centroid (the classic IVF-PQ recipe — the
+        // residual distribution is far tighter than the raw corpus, so 8-bit
+        // codebooks recover most of the precision). Every build emits the
+        // codebooks + sidecars so any scoring mode can serve the index.
+        let pq_m = if params.pq_m > 0 && dim % params.pq_m == 0 { params.pq_m } else { 16 };
+        anyhow::ensure!(dim % pq_m == 0, "pq_m {pq_m} does not divide dim {dim}");
+        let mut residuals = vec![0f32; n_docs * dim];
+        for (doc, &c) in assignment.iter().enumerate() {
+            let row = &embeddings[doc * dim..(doc + 1) * dim];
+            let cen = &km.centroids[c * dim..(c + 1) * dim];
+            for d in 0..dim {
+                residuals[doc * dim + d] = row[d] - cen[d];
+            }
+        }
+        let mut pq_rng = Rng::new(params.seed).derive(0x9C0DE);
+        let (books, pq_k) = kmeans::train_subspace_codebooks(
+            &residuals,
+            dim,
+            pq_m,
+            256,
+            params.kmeans_iters,
+            params.kmeans_sample.max(256),
+            &mut pq_rng,
+        );
+        let book = Arc::new(PqCodebook {
+            m: pq_m,
+            k: pq_k,
+            sub_dim: dim / pq_m,
+            centroids: books,
+        });
+
         let mut cluster_sizes = Vec::with_capacity(params.clusters);
         let mut cluster_bytes = Vec::with_capacity(params.clusters);
         for (cid, ids) in members.iter().enumerate() {
@@ -218,6 +312,24 @@ impl IvfIndex {
             let bytes = storage::write_cluster(dir, cid as u32, dim, ids, &vectors)?;
             cluster_sizes.push(ids.len());
             cluster_bytes.push(bytes);
+
+            // Compact-code sidecars: sq8 codes under the block's affine
+            // params, and PQ codes of each row's residual. Valid rows only —
+            // readers reconstruct scorer padding.
+            let (min, scale) = crate::index::distance::sq8_params(&vectors);
+            let sq8_codes: Vec<u8> = vectors
+                .iter()
+                .map(|&v| crate::index::distance::sq8_encode_value(v, min, scale))
+                .collect();
+            storage::write_sq8_sidecar(dir, cid as u32, dim, ids, min, scale, &sq8_codes)?;
+
+            let centroid = &km.centroids[cid * dim..(cid + 1) * dim];
+            let mut pq_codes = vec![0u8; ids.len() * pq_m];
+            for (j, &doc) in ids.iter().enumerate() {
+                let residual = &residuals[doc as usize * dim..(doc as usize + 1) * dim];
+                book.encode_residual(residual, &mut pq_codes[j * pq_m..(j + 1) * pq_m]);
+            }
+            storage::write_pq_sidecar(dir, cid as u32, dim, ids, centroid, pq_m, &pq_codes)?;
         }
 
         storage::write_centroids(dir, params.clusters, dim, &km.centroids)?;
@@ -231,6 +343,7 @@ impl IvfIndex {
             cluster_bytes,
             read_profile_us: vec![0; params.clusters],
             build_seed: params.seed,
+            pq: Some(book),
         };
         meta.save(dir)?;
 
@@ -366,9 +479,12 @@ impl IvfIndex {
 
     /// Read one cluster with an explicit representation override.
     /// `Scoring::F32` is the full-precision read the recall oracle
-    /// (`exhaustive_search`) depends on regardless of the serving mode;
-    /// `Scoring::Sq8` encodes at read time and drops the f32 payload so the
-    /// cached block is compact.
+    /// (`exhaustive_search`) depends on regardless of the serving mode.
+    /// `Scoring::Sq8` and `Scoring::Pq` read only the compact-code sidecar
+    /// — `bytes_on_disk` (what the disk model charges per miss) is the
+    /// sidecar's size, not the f32 file's. Indexes built before sidecars
+    /// existed fall back to reading the f32 file and encoding at read time
+    /// (byte-identical blocks, full-size reads).
     pub fn read_cluster_as(
         &self,
         id: u32,
@@ -383,11 +499,67 @@ impl IvfIndex {
             self.is_owned(id),
             "cluster id {id} not owned by this shard view"
         );
-        let mut block = storage::read_cluster(&self.dir, id, SCORE_N)?;
-        if scoring == Scoring::Sq8 {
-            block.quantize(false);
+        match scoring {
+            Scoring::F32 => storage::read_cluster(&self.dir, id, SCORE_N),
+            Scoring::Sq8 => {
+                if storage::sq8_sidecar_path(&self.dir, id).exists() {
+                    storage::read_sq8_sidecar(&self.dir, id, SCORE_N)
+                } else {
+                    let mut block = storage::read_cluster(&self.dir, id, SCORE_N)?;
+                    block.quantize(false);
+                    Ok(block)
+                }
+            }
+            Scoring::Pq { m, b } => {
+                let book = self.meta.pq.as_ref().ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "index at {} has no PQ codebooks; rebuild it before serving scoring=pq",
+                        self.dir.display()
+                    )
+                })?;
+                anyhow::ensure!(
+                    b == 8 && m == book.m,
+                    "scoring=pq{m}x{b} but the index was built with pq{}x8; \
+                     rebuild or match the built geometry",
+                    book.m
+                );
+                if storage::pq_sidecar_path(&self.dir, id).exists() {
+                    storage::read_pq_sidecar(&self.dir, id, SCORE_N, book)
+                } else {
+                    // Sidecar lost (or partial build): encode off the f32
+                    // rows — same codes, full-size read.
+                    let full = storage::read_cluster(&self.dir, id, SCORE_N)?;
+                    let dim = full.dim;
+                    let centroid =
+                        self.centroids[id as usize * dim..(id as usize + 1) * dim].to_vec();
+                    let padded = full.padded_len();
+                    let mut codes = vec![0u8; padded * book.m];
+                    let mut residual = vec![0f32; dim];
+                    for j in 0..full.len {
+                        let row = &full.data[j * dim..(j + 1) * dim];
+                        for (d, slot) in residual.iter_mut().enumerate() {
+                            *slot = row[d] - centroid[d];
+                        }
+                        book.encode_residual(&residual, &mut codes[j * book.m..(j + 1) * book.m]);
+                    }
+                    Ok(storage::ClusterBlock {
+                        id,
+                        len: full.len,
+                        dim,
+                        doc_ids: full.doc_ids,
+                        data: Vec::new(),
+                        quant: None,
+                        pq: Some(storage::PqBlock {
+                            codes,
+                            m: book.m,
+                            centroid,
+                            book: Arc::clone(book),
+                        }),
+                        bytes_on_disk: full.bytes_on_disk,
+                    })
+                }
+            }
         }
-        Ok(block)
     }
 
     /// Total on-disk size of all cluster files.
@@ -421,7 +593,7 @@ mod tests {
     }
 
     fn build_params() -> BuildParams {
-        BuildParams { clusters: 12, kmeans_iters: 6, kmeans_sample: 600, seed: 33 }
+        BuildParams { clusters: 12, kmeans_iters: 6, kmeans_sample: 600, seed: 33, pq_m: 16 }
     }
 
     #[test]
@@ -620,7 +792,7 @@ mod tests {
 
     #[test]
     fn meta_json_roundtrip() {
-        let meta = IvfMeta {
+        let mut meta = IvfMeta {
             dataset: "x".into(),
             embedding: "native".into(),
             n_docs: 10,
@@ -630,8 +802,70 @@ mod tests {
             cluster_bytes: vec![120, 90],
             read_profile_us: vec![5, 9],
             build_seed: 77,
+            pq: None,
         };
+        // Pre-PQ shape: no codebook fields emitted, parses back to None.
         let restored = IvfMeta::from_json(&meta.to_json()).unwrap();
         assert_eq!(restored, meta);
+
+        // Codebook blob round-trips bit-exact (including awkward floats).
+        meta.pq = Some(Arc::new(PqCodebook {
+            m: 2,
+            k: 3,
+            sub_dim: 2,
+            centroids: vec![
+                0.0, -0.0, 1.5, f32::MIN_POSITIVE, -3.25e-7, 1e30, 255.0, -1.0, 0.125, 2.0, -2.0,
+                42.0,
+            ],
+        }));
+        let restored = IvfMeta::from_json(&meta.to_json()).unwrap();
+        assert_eq!(restored, meta);
+        let bits_a: Vec<u32> =
+            meta.pq.as_ref().unwrap().centroids.iter().map(|v| v.to_bits()).collect();
+        let bits_b: Vec<u32> =
+            restored.pq.as_ref().unwrap().centroids.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(bits_a, bits_b, "codebook blob must be bit-exact");
+    }
+
+    #[test]
+    fn pq_sidecar_read_matches_fallback_encode() {
+        let dir = tmpdir("pqside");
+        let (data, _, dim) = tiny_embeddings();
+        let pool = ThreadPool::new(2);
+        let mut idx =
+            IvfIndex::build(&dir, "tiny", "native", &data, dim, &build_params(), &pool).unwrap();
+        let book = idx.meta.pq.clone().expect("build persists codebooks");
+        assert_eq!(book.m, 16);
+        assert_eq!(book.dim(), dim);
+        idx.scoring = Scoring::Pq { m: 16, b: 8 };
+
+        // Sidecar read: compact payload only, small bytes_on_disk.
+        let side = idx.read_cluster(0).unwrap();
+        let full = idx.read_cluster_as(0, Scoring::F32).unwrap();
+        assert!(side.data.is_empty() && side.quant.is_none());
+        let pq = side.pq.as_ref().unwrap();
+        assert_eq!(pq.codes.len(), side.padded_len() * book.m);
+        assert_eq!(side.doc_ids, full.doc_ids);
+        assert!(side.bytes_on_disk < full.bytes_on_disk);
+
+        // Deleting the sidecar falls back to read-time encoding with the
+        // exact same codes over the valid region (full-size read).
+        std::fs::remove_file(storage::pq_sidecar_path(&dir, 0)).unwrap();
+        let fallback = idx.read_cluster(0).unwrap();
+        let fpq = fallback.pq.as_ref().unwrap();
+        assert_eq!(
+            &fpq.codes[..fallback.len * book.m],
+            &pq.codes[..side.len * book.m]
+        );
+        assert_eq!(fpq.centroid, pq.centroid);
+        assert_eq!(fallback.bytes_on_disk, full.bytes_on_disk);
+
+        // Geometry mismatch and missing codebooks are clean errors.
+        let err = idx.read_cluster_as(1, Scoring::Pq { m: 8, b: 8 }).unwrap_err().to_string();
+        assert!(err.contains("pq16x8"), "{err}");
+        idx.meta.pq = None;
+        let err = idx.read_cluster_as(1, Scoring::Pq { m: 16, b: 8 }).unwrap_err().to_string();
+        assert!(err.contains("rebuild"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

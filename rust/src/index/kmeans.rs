@@ -126,6 +126,41 @@ pub fn nearest(point: &[f32], centroids: &[f32], dim: usize) -> (usize, f32) {
     (best, best_d)
 }
 
+/// Train per-subspace PQ codebooks on residual rows (`n x dim`, row-major):
+/// each of the `m` subspaces of `dim / m` dimensions gets its own k-means
+/// run over that subspace's slice of every residual. `k` is clamped to the
+/// training-row count (`KMeans::train` requires `n >= k`), so tiny corpora
+/// still build — with fewer, exactly-representable codewords. Returns the
+/// flat `m x k x sub_dim` codebook plus the clamped `k`.
+pub fn train_subspace_codebooks(
+    residuals: &[f32],
+    dim: usize,
+    m: usize,
+    k: usize,
+    iters: usize,
+    sample_cap: usize,
+    rng: &mut Rng,
+) -> (Vec<f32>, usize) {
+    assert!(m > 0 && dim % m == 0, "m must divide dim");
+    assert!(dim > 0 && residuals.len() % dim == 0, "residuals not n x dim");
+    let n = residuals.len() / dim;
+    assert!(n > 0, "no residuals to train on");
+    let sub_dim = dim / m;
+    let k = k.min(n);
+    let mut books = Vec::with_capacity(m * k * sub_dim);
+    let mut subdata = vec![0f32; n * sub_dim];
+    for sub in 0..m {
+        for row in 0..n {
+            subdata[row * sub_dim..(row + 1) * sub_dim].copy_from_slice(
+                &residuals[row * dim + sub * sub_dim..row * dim + (sub + 1) * sub_dim],
+            );
+        }
+        let km = KMeans::train(&subdata, sub_dim, k, iters, sample_cap, rng);
+        books.extend_from_slice(&km.centroids);
+    }
+    (books, k)
+}
+
 /// k-means++ seeding over the sampled points.
 fn plusplus_init(data: &[f32], dim: usize, k: usize, sample: &[usize], rng: &mut Rng) -> Vec<f32> {
     let mut centroids = Vec::with_capacity(k * dim);

@@ -12,5 +12,5 @@ pub mod storage;
 pub mod topk;
 
 pub use ivf::{BuildParams, IvfIndex, IvfMeta};
-pub use storage::{ClusterBlock, SqBlock};
+pub use storage::{ClusterBlock, PqBlock, PqCodebook, SqBlock};
 pub use topk::{Hit, TopK};

@@ -16,9 +16,16 @@
 
 use std::io::{Read, Write};
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 const CLUSTER_MAGIC: &[u8; 8] = b"CAGRCLU1";
 const CENTROID_MAGIC: &[u8; 8] = b"CAGRCEN1";
+/// Shared magic for the compact-code sidecar files (`.sq8` / `.pq`); the
+/// header also carries an explicit version and representation tag.
+const SIDECAR_MAGIC: &[u8; 8] = b"CAGRSDC1";
+const SIDECAR_VERSION: u32 = 1;
+const SIDECAR_REPR_SQ8: u32 = 1;
+const SIDECAR_REPR_PQ: u32 = 2;
 
 /// Scalar-quantized companion payload for a cluster block: one u8 code per
 /// dimension per row under a single per-block affine `(min, scale)` map
@@ -34,12 +41,78 @@ pub struct SqBlock {
     pub scale: f32,
 }
 
+/// Per-index product-quantization codebooks: `m` subspaces of
+/// `sub_dim = dim / m` dimensions, each with `k <= 256` centroids trained on
+/// centroid residuals at build time (index/ivf.rs). Shared across all
+/// cluster blocks via `Arc`; persisted as a blob inside `meta.json`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PqCodebook {
+    pub m: usize,
+    pub k: usize,
+    pub sub_dim: usize,
+    /// Flat `m x k x sub_dim`, subspace-major.
+    pub centroids: Vec<f32>,
+}
+
+impl PqCodebook {
+    pub fn dim(&self) -> usize {
+        self.m * self.sub_dim
+    }
+
+    /// Subspace `sub`'s centroid table (`k x sub_dim`).
+    fn subspace(&self, sub: usize) -> &[f32] {
+        let span = self.k * self.sub_dim;
+        &self.centroids[sub * span..(sub + 1) * span]
+    }
+
+    /// Encode one residual row (`dim` floats) into `m` codes.
+    pub fn encode_residual(&self, residual: &[f32], out: &mut [u8]) {
+        debug_assert_eq!(residual.len(), self.dim());
+        debug_assert_eq!(out.len(), self.m);
+        for sub in 0..self.m {
+            let seg = &residual[sub * self.sub_dim..(sub + 1) * self.sub_dim];
+            let (best, _) = crate::index::kmeans::nearest(seg, self.subspace(sub), self.sub_dim);
+            out[sub] = best as u8;
+        }
+    }
+
+    /// Reconstruct one row (`centroid + codebook entries`) into `out`.
+    pub fn decode_row(&self, codes: &[u8], centroid: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(codes.len(), self.m);
+        debug_assert_eq!(centroid.len(), self.dim());
+        debug_assert_eq!(out.len(), self.dim());
+        for sub in 0..self.m {
+            let entry = codes[sub] as usize * self.sub_dim;
+            let table = self.subspace(sub);
+            for d in 0..self.sub_dim {
+                out[sub * self.sub_dim + d] = centroid[sub * self.sub_dim + d] + table[entry + d];
+            }
+        }
+    }
+}
+
+/// Product-quantized payload for a cluster block: `m` u8 codes per row
+/// encoding the row's residual against the cluster centroid. The codebook
+/// is attached at read time (one shared `Arc` per index).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PqBlock {
+    /// Row-major `padded_len x m` codes; pad rows are code 0 everywhere.
+    pub codes: Vec<u8>,
+    /// Subspaces per row (codebook geometry, duplicated for direct access).
+    pub m: usize,
+    /// The cluster centroid (`dim` floats) the codes are residuals against;
+    /// both the ADC table and reconstruction need it.
+    pub centroid: Vec<f32>,
+    /// Shared per-index codebooks.
+    pub book: Arc<PqCodebook>,
+}
+
 /// One cluster's vectors, decoded in memory. `data` is padded with zero rows
 /// up to a multiple of `geometry::SCORE_N` so PJRT scorer calls can borrow
 /// it without copying; `len` is the true vector count. Under `scoring=sq8`
-/// the f32 payload is dropped after encoding and only `quant` stays resident
-/// (~4x smaller), which is what lets the cluster cache hold ~4x more
-/// clusters at equal memory.
+/// only `quant` stays resident (~4x smaller than f32); under `scoring=pq`
+/// only `pq` does (~16x smaller at m=16), which is what lets the cluster
+/// cache hold proportionally more clusters at equal memory.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ClusterBlock {
     pub id: u32,
@@ -47,22 +120,27 @@ pub struct ClusterBlock {
     pub dim: usize,
     pub doc_ids: Vec<u32>,
     /// Row-major `padded_len x dim`, zero rows beyond `len`. Empty when the
-    /// block has been compacted to its quantized representation.
+    /// block has been compacted to a quantized representation.
     pub data: Vec<f32>,
     /// Optional sq8 codes; scoring prefers `data` when both are present.
     pub quant: Option<SqBlock>,
+    /// Optional PQ codes; consulted when both `data` and `quant` are absent.
+    pub pq: Option<PqBlock>,
     /// Bytes this cluster occupies on disk (for Fig. 5 metrics + the disk
-    /// latency model).
+    /// latency model). Sidecar reads set this to the sidecar's size — the
+    /// compact payload is all a miss transfers.
     pub bytes_on_disk: u64,
 }
 
 impl ClusterBlock {
     /// Rows in the padded buffer (whichever representation is resident).
     pub fn padded_len(&self) -> usize {
-        if self.data.is_empty() {
-            self.quant.as_ref().map_or(0, |q| q.codes.len() / self.dim)
-        } else {
+        if !self.data.is_empty() {
             self.data.len() / self.dim
+        } else if let Some(q) = &self.quant {
+            q.codes.len() / self.dim
+        } else {
+            self.pq.as_ref().map_or(0, |p| p.codes.len() / p.m)
         }
     }
 
@@ -77,7 +155,10 @@ impl ClusterBlock {
     /// byte budget accounts in.
     pub fn resident_bytes(&self) -> u64 {
         let quant = self.quant.as_ref().map_or(0, |q| q.codes.len() + 8);
-        (self.data.len() * 4 + self.doc_ids.len() * 4 + quant) as u64
+        // The shared codebook Arc is index-wide, not per-block; only the
+        // codes and the per-block centroid count against the cache budget.
+        let pq = self.pq.as_ref().map_or(0, |p| p.codes.len() + p.centroid.len() * 4);
+        (self.data.len() * 4 + self.doc_ids.len() * 4 + quant + pq) as u64
     }
 
     /// Attach an sq8 payload encoded from the f32 rows. `keep_f32: false`
@@ -198,7 +279,248 @@ pub fn read_cluster(dir: &Path, id: u32, pad_rows: usize) -> anyhow::Result<Clus
         data[i] = f32::from_le_bytes(chunk.try_into().unwrap());
     }
 
-    Ok(ClusterBlock { id, len, dim, doc_ids, data, quant: None, bytes_on_disk })
+    Ok(ClusterBlock { id, len, dim, doc_ids, data, quant: None, pq: None, bytes_on_disk })
+}
+
+/// Targeted read of individual f32 rows from a cluster file — the PQ
+/// re-rank path. Validates the header, then seeks straight to each
+/// requested row; returns `rows.len() * dim` floats in request order, so a
+/// re-rank transfers `rows.len() * dim * 4` bytes instead of the file.
+pub fn read_rows(dir: &Path, id: u32, rows: &[usize]) -> anyhow::Result<Vec<f32>> {
+    use std::io::{Seek, SeekFrom};
+    let path = cluster_path(dir, id);
+    let mut f = std::fs::File::open(&path)
+        .map_err(|e| anyhow::anyhow!("opening {}: {e}", path.display()))?;
+    read_magic(&mut f, CLUSTER_MAGIC, "cluster file")?;
+    let file_id = read_u32(&mut f)?;
+    if file_id != id {
+        anyhow::bail!("cluster file {}: id {file_id} != expected {id}", path.display());
+    }
+    let len = read_u32(&mut f)? as usize;
+    let dim = read_u32(&mut f)? as usize;
+    let base = (8 + 12 + len * 4) as u64;
+    let mut out = vec![0f32; rows.len() * dim];
+    let mut buf = vec![0u8; dim * 4];
+    for (i, &row) in rows.iter().enumerate() {
+        if row >= len {
+            anyhow::bail!("cluster file {}: row {row} out of range ({len})", path.display());
+        }
+        f.seek(SeekFrom::Start(base + (row * dim * 4) as u64))?;
+        f.read_exact(&mut buf)?;
+        for (j, chunk) in buf.chunks_exact(4).enumerate() {
+            out[i * dim + j] = f32::from_le_bytes(chunk.try_into().unwrap());
+        }
+    }
+    Ok(out)
+}
+
+/// Path of cluster `id`'s sq8 code sidecar.
+pub fn sq8_sidecar_path(dir: &Path, id: u32) -> PathBuf {
+    dir.join(format!("cluster_{id:05}.sq8"))
+}
+
+/// Path of cluster `id`'s PQ code sidecar.
+pub fn pq_sidecar_path(dir: &Path, id: u32) -> PathBuf {
+    dir.join(format!("cluster_{id:05}.pq"))
+}
+
+fn write_sidecar_header(
+    w: &mut impl Write,
+    repr: u32,
+    id: u32,
+    len: usize,
+    dim: usize,
+) -> std::io::Result<()> {
+    w.write_all(SIDECAR_MAGIC)?;
+    write_u32(w, SIDECAR_VERSION)?;
+    write_u32(w, repr)?;
+    write_u32(w, id)?;
+    write_u32(w, len as u32)?;
+    write_u32(w, dim as u32)
+}
+
+/// Validate a sidecar header; returns `(len, dim)`.
+fn read_sidecar_header(
+    r: &mut impl Read,
+    want_repr: u32,
+    id: u32,
+    what: &str,
+) -> anyhow::Result<(usize, usize)> {
+    read_magic(r, SIDECAR_MAGIC, what)?;
+    let version = read_u32(r)?;
+    if version != SIDECAR_VERSION {
+        anyhow::bail!("{what}: unsupported sidecar version {version} (want {SIDECAR_VERSION})");
+    }
+    let repr = read_u32(r)?;
+    if repr != want_repr {
+        anyhow::bail!("{what}: representation tag {repr} != expected {want_repr}");
+    }
+    let file_id = read_u32(r)?;
+    if file_id != id {
+        anyhow::bail!("{what}: id {file_id} != expected {id}");
+    }
+    let len = read_u32(r)? as usize;
+    let dim = read_u32(r)? as usize;
+    if dim == 0 || dim > 65_536 {
+        anyhow::bail!("{what}: implausible dim {dim}");
+    }
+    Ok((len, dim))
+}
+
+/// Write cluster `id`'s sq8 sidecar (valid rows only — padding is
+/// reconstructed at read time); returns bytes written.
+pub fn write_sq8_sidecar(
+    dir: &Path,
+    id: u32,
+    dim: usize,
+    doc_ids: &[u32],
+    min: f32,
+    scale: f32,
+    codes: &[u8],
+) -> anyhow::Result<u64> {
+    assert_eq!(codes.len(), doc_ids.len() * dim, "codes/doc_ids mismatch");
+    let path = sq8_sidecar_path(dir, id);
+    let file = std::fs::File::create(&path)
+        .map_err(|e| anyhow::anyhow!("creating {}: {e}", path.display()))?;
+    let mut w = std::io::BufWriter::new(file);
+    write_sidecar_header(&mut w, SIDECAR_REPR_SQ8, id, doc_ids.len(), dim)?;
+    w.write_all(&min.to_le_bytes())?;
+    w.write_all(&scale.to_le_bytes())?;
+    for &d in doc_ids {
+        write_u32(&mut w, d)?;
+    }
+    w.write_all(codes)?;
+    w.flush()?;
+    Ok((8 + 20 + 8 + doc_ids.len() * 4 + codes.len()) as u64)
+}
+
+/// Read cluster `id`'s sq8 sidecar into a compact block (no f32 payload),
+/// padded to a multiple of `pad_rows`. Pad rows encode the value 0.0 —
+/// exactly what read-time `quantize` produces — so the block is
+/// indistinguishable from one quantized off the f32 file.
+pub fn read_sq8_sidecar(dir: &Path, id: u32, pad_rows: usize) -> anyhow::Result<ClusterBlock> {
+    let path = sq8_sidecar_path(dir, id);
+    let bytes_on_disk = std::fs::metadata(&path)
+        .map_err(|e| anyhow::anyhow!("stat {}: {e}", path.display()))?
+        .len();
+    let file = std::fs::File::open(&path)
+        .map_err(|e| anyhow::anyhow!("opening {}: {e}", path.display()))?;
+    let mut r = std::io::BufReader::new(file);
+    let (len, dim) = read_sidecar_header(&mut r, SIDECAR_REPR_SQ8, id, "sq8 sidecar")?;
+    let mut fbuf = [0u8; 4];
+    r.read_exact(&mut fbuf)?;
+    let min = f32::from_le_bytes(fbuf);
+    r.read_exact(&mut fbuf)?;
+    let scale = f32::from_le_bytes(fbuf);
+
+    let mut id_bytes = vec![0u8; len * 4];
+    r.read_exact(&mut id_bytes)?;
+    let doc_ids: Vec<u32> = id_bytes
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+
+    let padded = crate::util::round_up(len.max(1), pad_rows.max(1));
+    let pad_code = crate::index::distance::sq8_encode_value(0.0, min, scale);
+    let mut codes = vec![pad_code; padded * dim];
+    r.read_exact(&mut codes[..len * dim])?;
+
+    Ok(ClusterBlock {
+        id,
+        len,
+        dim,
+        doc_ids,
+        data: Vec::new(),
+        quant: Some(SqBlock { codes, min, scale }),
+        pq: None,
+        bytes_on_disk,
+    })
+}
+
+/// Write cluster `id`'s PQ sidecar (valid rows only); returns bytes written.
+pub fn write_pq_sidecar(
+    dir: &Path,
+    id: u32,
+    dim: usize,
+    doc_ids: &[u32],
+    centroid: &[f32],
+    m: usize,
+    codes: &[u8],
+) -> anyhow::Result<u64> {
+    assert_eq!(codes.len(), doc_ids.len() * m, "codes/doc_ids mismatch");
+    assert_eq!(centroid.len(), dim, "centroid/dim mismatch");
+    let path = pq_sidecar_path(dir, id);
+    let file = std::fs::File::create(&path)
+        .map_err(|e| anyhow::anyhow!("creating {}: {e}", path.display()))?;
+    let mut w = std::io::BufWriter::new(file);
+    write_sidecar_header(&mut w, SIDECAR_REPR_PQ, id, doc_ids.len(), dim)?;
+    write_u32(&mut w, m as u32)?;
+    for &v in centroid {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    for &d in doc_ids {
+        write_u32(&mut w, d)?;
+    }
+    w.write_all(codes)?;
+    w.flush()?;
+    Ok((8 + 20 + 4 + centroid.len() * 4 + doc_ids.len() * 4 + codes.len()) as u64)
+}
+
+/// Read cluster `id`'s PQ sidecar into a compact block, padded to a
+/// multiple of `pad_rows` (pad rows are code 0 everywhere; they are never
+/// scored natively and decode to the centroid's vicinity on the PJRT path).
+pub fn read_pq_sidecar(
+    dir: &Path,
+    id: u32,
+    pad_rows: usize,
+    book: &Arc<PqCodebook>,
+) -> anyhow::Result<ClusterBlock> {
+    let path = pq_sidecar_path(dir, id);
+    let bytes_on_disk = std::fs::metadata(&path)
+        .map_err(|e| anyhow::anyhow!("stat {}: {e}", path.display()))?
+        .len();
+    let file = std::fs::File::open(&path)
+        .map_err(|e| anyhow::anyhow!("opening {}: {e}", path.display()))?;
+    let mut r = std::io::BufReader::new(file);
+    let (len, dim) = read_sidecar_header(&mut r, SIDECAR_REPR_PQ, id, "pq sidecar")?;
+    let m = read_u32(&mut r)? as usize;
+    if m != book.m || dim != book.dim() {
+        anyhow::bail!(
+            "pq sidecar {}: geometry pq{m}x8/dim{dim} != codebook pq{}x8/dim{}",
+            path.display(),
+            book.m,
+            book.dim()
+        );
+    }
+
+    let mut cen_bytes = vec![0u8; dim * 4];
+    r.read_exact(&mut cen_bytes)?;
+    let centroid: Vec<f32> = cen_bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+
+    let mut id_bytes = vec![0u8; len * 4];
+    r.read_exact(&mut id_bytes)?;
+    let doc_ids: Vec<u32> = id_bytes
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+
+    let padded = crate::util::round_up(len.max(1), pad_rows.max(1));
+    let mut codes = vec![0u8; padded * m];
+    r.read_exact(&mut codes[..len * m])?;
+
+    Ok(ClusterBlock {
+        id,
+        len,
+        dim,
+        doc_ids,
+        data: Vec::new(),
+        quant: None,
+        pq: Some(PqBlock { codes, m, centroid, book: Arc::clone(book) }),
+        bytes_on_disk,
+    })
 }
 
 /// Write the first-level centroid index.
@@ -370,6 +692,142 @@ mod tests {
         let dir = tmpdir("missing");
         let err = read_cluster(&dir, 42, 1).unwrap_err().to_string();
         assert!(err.contains("cluster_00042.bin"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn read_rows_selects_exact_rows() {
+        let dir = tmpdir("rows");
+        let mut rng = Rng::new(5);
+        let dim = 6;
+        let ids: Vec<u32> = (0..9).collect();
+        let vecs: Vec<f32> = (0..ids.len() * dim).map(|_| rng.normal() as f32).collect();
+        write_cluster(&dir, 2, dim, &ids, &vecs).unwrap();
+        let got = read_rows(&dir, 2, &[7, 0, 3]).unwrap();
+        assert_eq!(got.len(), 3 * dim);
+        for (i, &row) in [7usize, 0, 3].iter().enumerate() {
+            assert_eq!(&got[i * dim..(i + 1) * dim], &vecs[row * dim..(row + 1) * dim]);
+        }
+        assert!(read_rows(&dir, 2, &[9]).unwrap_err().to_string().contains("out of range"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sq8_sidecar_roundtrip_matches_read_time_quantization() {
+        let dir = tmpdir("sq8side");
+        let mut rng = Rng::new(6);
+        let dim = 8;
+        let ids: Vec<u32> = (0..5).collect();
+        let vecs: Vec<f32> = (0..ids.len() * dim).map(|_| rng.normal() as f32).collect();
+        write_cluster(&dir, 0, dim, &ids, &vecs).unwrap();
+        let (min, scale) = crate::index::distance::sq8_params(&vecs);
+        let codes: Vec<u8> = vecs
+            .iter()
+            .map(|&v| crate::index::distance::sq8_encode_value(v, min, scale))
+            .collect();
+        let written = write_sq8_sidecar(&dir, 0, dim, &ids, min, scale, &codes).unwrap();
+        assert_eq!(
+            written,
+            std::fs::metadata(sq8_sidecar_path(&dir, 0)).unwrap().len(),
+            "writer byte count must equal the file size"
+        );
+
+        // The sidecar block is byte-identical to quantizing the f32 read.
+        let side = read_sq8_sidecar(&dir, 0, 4).unwrap();
+        let mut from_f32 = read_cluster(&dir, 0, 4).unwrap();
+        from_f32.quantize(false);
+        assert_eq!(side.doc_ids, from_f32.doc_ids);
+        assert_eq!(side.quant, from_f32.quant);
+        assert_eq!(side.padded_len(), from_f32.padded_len());
+        // ... but the miss charges only the sidecar's bytes.
+        assert!(side.bytes_on_disk < from_f32.bytes_on_disk);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn pq_sidecar_roundtrip() {
+        let dir = tmpdir("pqside");
+        let mut rng = Rng::new(7);
+        let (m, k, sub_dim) = (4usize, 8usize, 2usize);
+        let dim = m * sub_dim;
+        let book = Arc::new(PqCodebook {
+            m,
+            k,
+            sub_dim,
+            centroids: (0..m * k * sub_dim).map(|_| rng.normal() as f32).collect(),
+        });
+        let ids: Vec<u32> = vec![3, 1, 4];
+        let centroid: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+        let mut codes = vec![0u8; ids.len() * m];
+        for (j, chunk) in codes.chunks_mut(m).enumerate() {
+            let residual: Vec<f32> = (0..dim).map(|d| (j + d) as f32 * 0.01).collect();
+            book.encode_residual(&residual, chunk);
+        }
+        let written = write_pq_sidecar(&dir, 5, dim, &ids, &centroid, m, &codes).unwrap();
+        assert_eq!(written, std::fs::metadata(pq_sidecar_path(&dir, 5)).unwrap().len());
+
+        let block = read_pq_sidecar(&dir, 5, 4, &book).unwrap();
+        assert_eq!(block.len, ids.len());
+        assert_eq!(block.doc_ids, ids);
+        let pq = block.pq.as_ref().unwrap();
+        assert_eq!(pq.centroid, centroid);
+        assert_eq!(pq.codes.len(), block.padded_len() * m);
+        assert_eq!(&pq.codes[..ids.len() * m], &codes[..]);
+        assert!(pq.codes[ids.len() * m..].iter().all(|&c| c == 0), "pad rows are code 0");
+        assert_eq!(block.bytes_on_disk, written);
+
+        // A mismatched codebook geometry is rejected.
+        let other = Arc::new(PqCodebook {
+            m: 2,
+            k,
+            sub_dim: 4,
+            centroids: vec![0.0; 2 * k * 4],
+        });
+        let err = read_pq_sidecar(&dir, 5, 4, &other).unwrap_err().to_string();
+        assert!(err.contains("geometry"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sidecar_rejects_corrupt_headers() {
+        let dir = tmpdir("sdcbad");
+        let ids = [1u32, 2];
+        let codes = [0u8; 4];
+        write_sq8_sidecar(&dir, 0, 2, &ids, 0.0, 1.0, &codes).unwrap();
+        let path = sq8_sidecar_path(&dir, 0);
+        let good = std::fs::read(&path).unwrap();
+
+        // Bad magic.
+        let mut bad = good.clone();
+        bad[0] ^= 0xFF;
+        std::fs::write(&path, &bad).unwrap();
+        let err = read_sq8_sidecar(&dir, 0, 1).unwrap_err().to_string();
+        assert!(err.contains("magic"), "{err}");
+
+        // Unsupported version.
+        let mut bad = good.clone();
+        bad[8] = 99;
+        std::fs::write(&path, &bad).unwrap();
+        let err = read_sq8_sidecar(&dir, 0, 1).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+
+        // Wrong representation tag (a .pq payload renamed to .sq8).
+        let mut bad = good.clone();
+        bad[12] = SIDECAR_REPR_PQ as u8;
+        std::fs::write(&path, &bad).unwrap();
+        let err = read_sq8_sidecar(&dir, 0, 1).unwrap_err().to_string();
+        assert!(err.contains("representation"), "{err}");
+
+        // Embedded id mismatch.
+        let mut bad = good.clone();
+        bad[16] = 7;
+        std::fs::write(&path, &bad).unwrap();
+        let err = read_sq8_sidecar(&dir, 0, 1).unwrap_err().to_string();
+        assert!(err.contains("id 7"), "{err}");
+
+        // Truncated payload.
+        std::fs::write(&path, &good[..good.len() - 2]).unwrap();
+        assert!(read_sq8_sidecar(&dir, 0, 1).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 }

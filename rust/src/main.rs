@@ -395,7 +395,8 @@ fn cmd_client(args: &Args) -> anyhow::Result<()> {
         for l in &s.lanes {
             println!(
                 "  lane {}: policy={} inflight={} batches={} queries={} groups={} \
-                 cache-hit={:.1}% (hits={} misses={} prefetch-inserts={})",
+                 cache-hit={:.1}% (hits={} misses={} prefetch-inserts={}) \
+                 disk-reads={} disk-bytes={}",
                 l.lane,
                 l.policy,
                 l.inflight,
@@ -406,6 +407,8 @@ fn cmd_client(args: &Args) -> anyhow::Result<()> {
                 l.cache.hits,
                 l.cache.misses,
                 l.cache.prefetch_inserts,
+                l.disk_reads,
+                l.disk_bytes_read,
             );
         }
         return Ok(());

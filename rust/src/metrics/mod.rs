@@ -17,7 +17,9 @@ pub struct SearchReport {
     pub latency: Duration,
     pub cache_hits: u64,
     pub cache_misses: u64,
-    /// Bytes read from disk for this query (demand misses only).
+    /// Bytes read from disk for this query: demand misses plus, under
+    /// pq scoring, the exact re-rank row fetches (which bypass the cache
+    /// and therefore the hit/miss counters).
     pub bytes_read: u64,
     /// Clusters this query probed.
     pub nprobe: usize,

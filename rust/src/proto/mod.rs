@@ -461,6 +461,14 @@ pub struct LaneStats {
     pub queries: usize,
     pub groups: usize,
     pub grouping_cost_us: u64,
+    /// Disk-model read count for this lane's engine. Additive field;
+    /// absent in old replies parses as 0. Lanes sharing one disk model
+    /// report the same totals — do not sum across such lanes.
+    pub disk_reads: u64,
+    /// Total bytes those disk reads pulled (compact sq8/pq sidecar
+    /// payloads charge fewer bytes per read than whole f32 cluster
+    /// files). Additive field; absent parses as 0.
+    pub disk_bytes_read: u64,
     pub cache: CacheStats,
 }
 
@@ -800,6 +808,8 @@ fn lane_stats_json(l: &LaneStats) -> Json {
         ("queries", l.queries.into()),
         ("groups", l.groups.into()),
         ("grouping_cost_us", Json::Num(l.grouping_cost_us as f64)),
+        ("disk_reads", Json::Num(l.disk_reads as f64)),
+        ("disk_bytes_read", Json::Num(l.disk_bytes_read as f64)),
         (
             "cache",
             obj(vec![
@@ -830,6 +840,8 @@ fn parse_lane_stats(v: &Json) -> Result<LaneStats, WireError> {
         queries: n(v, "queries") as usize,
         groups: n(v, "groups") as usize,
         grouping_cost_us: n(v, "grouping_cost_us"),
+        disk_reads: n(v, "disk_reads"),
+        disk_bytes_read: n(v, "disk_bytes_read"),
         cache: CacheStats {
             hits: n(&cache, "hits"),
             misses: n(&cache, "misses"),
@@ -977,6 +989,8 @@ mod tests {
                     queries: 240,
                     groups: 31,
                     grouping_cost_us: 1500,
+                    disk_reads: 6,
+                    disk_bytes_read: 3_145_728,
                     cache: CacheStats {
                         hits: 10,
                         misses: 4,
@@ -1023,6 +1037,16 @@ mod tests {
                 assert_eq!(s.scheduler, WindowGauges::default());
                 assert_eq!(s.semcache, None);
                 assert_eq!(s.shards, None);
+            }
+            other => panic!("{other:?}"),
+        }
+        // Likewise a lane entry predating the disk counters.
+        let legacy_lane =
+            r#"{"type":"stats","draining":false,"lanes":[{"lane":0,"policy":"qgp"}]}"#;
+        match Reply::parse_line(legacy_lane).unwrap() {
+            Reply::Stats(s) => {
+                assert_eq!(s.lanes[0].disk_reads, 0);
+                assert_eq!(s.lanes[0].disk_bytes_read, 0);
             }
             other => panic!("{other:?}"),
         }

@@ -190,6 +190,10 @@ impl PjrtRuntime {
 pub struct NativeScratch {
     /// Quantized query codes for the sq8 kernel (one query at a time).
     qcode: Vec<i32>,
+    /// Residual query (query - cluster centroid) for the PQ ADC table.
+    resid: Vec<f32>,
+    /// Per-(query, cluster) ADC lookup table: `m x PQ_TABLE_STRIDE` f32s.
+    adc: Vec<f32>,
 }
 
 /// Reusable scratch for the PJRT arms.
@@ -372,44 +376,89 @@ impl Compute {
         // Representation routing: f32 rows win whenever they are resident
         // (they are exact — keeping them alongside codes is the degenerate
         // "re-rank against f32" case); a compacted block (empty `data`)
-        // scores through its sq8 codes. A block with neither is malformed.
-        let sq8 = if block.data.is_empty() {
-            Some(block.quant.as_ref().ok_or_else(|| {
-                anyhow::anyhow!("cluster block {} has neither f32 rows nor sq8 codes", block.id)
-            })?)
+        // scores through its sq8 codes, then its PQ codes. A block with no
+        // payload at all is malformed.
+        enum Repr<'a> {
+            F32,
+            Sq8(&'a crate::index::storage::SqBlock),
+            Pq(&'a crate::index::storage::PqBlock),
+        }
+        let repr = if !block.data.is_empty() {
+            Repr::F32
+        } else if let Some(q) = &block.quant {
+            Repr::Sq8(q)
+        } else if let Some(p) = &block.pq {
+            Repr::Pq(p)
         } else {
-            None
+            anyhow::bail!(
+                "cluster block {} has no payload (f32 rows, sq8 codes, or pq codes)",
+                block.id
+            );
         };
         match self {
             Compute::Native { scratch, .. } => {
-                if let Some(quant) = sq8 {
-                    // Symmetric integer path: quantize each query once per
-                    // block, accumulate squared deltas in i32/i64, map back
-                    // to value space via scale².
-                    let s = &mut *scratch.borrow_mut();
-                    for q in 0..nq {
-                        distance::sq8_quantize_query(
-                            &queries[q * dim..(q + 1) * dim],
-                            quant.min,
-                            quant.scale,
-                            &mut s.qcode,
-                        );
-                        distance::sq8_one_to_many(
-                            &s.qcode,
-                            &quant.codes,
+                match repr {
+                    Repr::Sq8(quant) => {
+                        // Symmetric integer path: quantize each query once
+                        // per block, accumulate squared deltas in i32/i64,
+                        // map back to value space via scale².
+                        let s = &mut *scratch.borrow_mut();
+                        for q in 0..nq {
+                            distance::sq8_quantize_query(
+                                &queries[q * dim..(q + 1) * dim],
+                                quant.min,
+                                quant.scale,
+                                &mut s.qcode,
+                            );
+                            distance::sq8_one_to_many_auto(
+                                &s.qcode,
+                                &quant.codes,
+                                dim,
+                                quant.scale,
+                                block.len,
+                                &mut out[q * block.len..(q + 1) * block.len],
+                            );
+                        }
+                    }
+                    Repr::Pq(pq) => {
+                        // ADC path: one residual-query lookup table per
+                        // (query, cluster), then block scoring is a pure
+                        // table gather over the M-byte codes.
+                        let book = &pq.book;
+                        let s = &mut *scratch.borrow_mut();
+                        for q in 0..nq {
+                            s.resid.clear();
+                            s.resid.extend(
+                                queries[q * dim..(q + 1) * dim]
+                                    .iter()
+                                    .zip(&pq.centroid)
+                                    .map(|(&x, &c)| x - c),
+                            );
+                            distance::pq_adc_table(
+                                &s.resid,
+                                &book.centroids,
+                                book.m,
+                                book.k,
+                                book.sub_dim,
+                                &mut s.adc,
+                            );
+                            distance::pq_score_one_to_many_auto(
+                                &s.adc,
+                                &pq.codes,
+                                pq.m,
+                                block.len,
+                                &mut out[q * block.len..(q + 1) * block.len],
+                            );
+                        }
+                    }
+                    Repr::F32 => {
+                        distance::l2_many_to_many_auto(
+                            queries,
+                            &block.data[..block.len * dim],
                             dim,
-                            quant.scale,
-                            block.len,
-                            &mut out[q * block.len..(q + 1) * block.len],
+                            out,
                         );
                     }
-                } else {
-                    distance::l2_many_to_many_auto(
-                        queries,
-                        &block.data[..block.len * dim],
-                        dim,
-                        out,
-                    );
                 }
                 Ok(())
             }
@@ -428,27 +477,52 @@ impl Compute {
                             .copy_from_slice(&dists[q * SCORE_N..q * SCORE_N + valid]);
                     }
                 };
-                if let Some(quant) = sq8 {
-                    // Asymmetric path: queries stay f32; each chunk's codes
-                    // are decoded on the fly into scratch and run through
-                    // the unchanged f32 scorer artifact.
-                    for (c, chunk) in quant.codes.chunks_exact(SCORE_N * dim).enumerate() {
-                        if c * SCORE_N >= block.len {
-                            break; // purely padding chunk
+                match repr {
+                    Repr::Sq8(quant) => {
+                        // Asymmetric path: queries stay f32; each chunk's
+                        // codes are decoded on the fly into scratch and run
+                        // through the unchanged f32 scorer artifact.
+                        for (c, chunk) in quant.codes.chunks_exact(SCORE_N * dim).enumerate() {
+                            if c * SCORE_N >= block.len {
+                                break; // purely padding chunk
+                            }
+                            s.decode.clear();
+                            s.decode.resize(SCORE_N * dim, 0f32);
+                            distance::sq8_decode_into(chunk, quant.min, quant.scale, &mut s.decode);
+                            let dists = runtime.score_chunk(&s.qbuf, &s.decode)?;
+                            copy_chunk(c, &dists, out);
                         }
-                        s.decode.clear();
-                        s.decode.resize(SCORE_N * dim, 0f32);
-                        distance::sq8_decode_into(chunk, quant.min, quant.scale, &mut s.decode);
-                        let dists = runtime.score_chunk(&s.qbuf, &s.decode)?;
-                        copy_chunk(c, &dists, out);
                     }
-                } else {
-                    for (c, chunk) in block.data.chunks_exact(SCORE_N * dim).enumerate() {
-                        if c * SCORE_N >= block.len {
-                            break; // purely padding chunk
+                    Repr::Pq(pq) => {
+                        // Reconstruction path: each chunk's codes decode to
+                        // centroid + codeword rows, then the unchanged f32
+                        // scorer artifact runs over the reconstruction.
+                        let book = &pq.book;
+                        for (c, chunk) in pq.codes.chunks_exact(SCORE_N * pq.m).enumerate() {
+                            if c * SCORE_N >= block.len {
+                                break; // purely padding chunk
+                            }
+                            s.decode.clear();
+                            s.decode.resize(SCORE_N * dim, 0f32);
+                            for (row, codes) in chunk.chunks_exact(pq.m).enumerate() {
+                                book.decode_row(
+                                    codes,
+                                    &pq.centroid,
+                                    &mut s.decode[row * dim..(row + 1) * dim],
+                                );
+                            }
+                            let dists = runtime.score_chunk(&s.qbuf, &s.decode)?;
+                            copy_chunk(c, &dists, out);
                         }
-                        let dists = runtime.score_chunk(&s.qbuf, chunk)?;
-                        copy_chunk(c, &dists, out);
+                    }
+                    Repr::F32 => {
+                        for (c, chunk) in block.data.chunks_exact(SCORE_N * dim).enumerate() {
+                            if c * SCORE_N >= block.len {
+                                break; // purely padding chunk
+                            }
+                            let dists = runtime.score_chunk(&s.qbuf, chunk)?;
+                            copy_chunk(c, &dists, out);
+                        }
                     }
                 }
                 Ok(())
@@ -473,6 +547,7 @@ mod tests {
             doc_ids: (0..len as u32).collect(),
             data: padded_data,
             quant: None,
+            pq: None,
             bytes_on_disk: 0,
         }
     }
@@ -543,6 +618,55 @@ mod tests {
                     (got - want).abs() <= tol,
                     "q={q} j={j}: sq8 {got} vs decoded-f32 {want}"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn native_score_block_pq_matches_reconstructed_reference() {
+        use crate::index::storage::{PqBlock, PqCodebook};
+        use std::sync::Arc;
+        let spec = DatasetSpec::tiny(7);
+        let compute =
+            Compute::Native { latent: LatentSpace::new(&spec), scratch: Default::default() };
+        let mut rng = Rng::new(11);
+        let dim = EMBED_DIM;
+        let (m, k) = (16usize, 32usize);
+        let sub_dim = dim / m;
+        let book = Arc::new(PqCodebook {
+            m,
+            k,
+            sub_dim,
+            centroids: (0..m * k * sub_dim).map(|_| rng.normal() as f32).collect(),
+        });
+        let nq = 2;
+        let len = 50;
+        let queries: Vec<f32> = (0..nq * dim).map(|_| rng.normal() as f32).collect();
+        let centroid: Vec<f32> = (0..dim).map(|_| rng.normal() as f32).collect();
+        let padded = crate::util::round_up(len, SCORE_N);
+        let mut codes = vec![0u8; padded * m];
+        for slot in codes[..len * m].iter_mut() {
+            *slot = rng.range(0, k) as u8;
+        }
+        let mut block = block_from(vec![0f32; len * dim], dim, len);
+        block.data = Vec::new();
+        block.pq = Some(PqBlock {
+            codes: codes.clone(),
+            m,
+            centroid: centroid.clone(),
+            book: Arc::clone(&book),
+        });
+
+        let out = compute.score_block(&queries, nq, &block).unwrap();
+        assert_eq!(out.len(), nq * len);
+        let mut decoded = vec![0f32; dim];
+        for q in 0..nq {
+            for j in 0..len {
+                book.decode_row(&codes[j * m..(j + 1) * m], &centroid, &mut decoded);
+                let want = distance::l2(&queries[q * dim..(q + 1) * dim], &decoded);
+                let got = out[q * len + j];
+                let tol = 1e-3 * want.abs().max(1.0);
+                assert!((got - want).abs() <= tol, "q={q} j={j}: pq {got} vs decoded {want}");
             }
         }
     }

@@ -385,6 +385,8 @@ where
                         queries: 0,
                         groups: 0,
                         grouping_cost_us: 0,
+                        disk_reads: 0,
+                        disk_bytes_read: 0,
                         cache: Default::default(),
                     }),
                 })
@@ -679,6 +681,7 @@ fn lane_loop(session: &mut Session, lane: usize, jobs: &JobQueue, state: &Server
     let publish = |session: &Session, lane_shared: &LaneShared| {
         let totals = session.stats();
         let cache = session.cache_stats();
+        let (disk_reads, disk_bytes_read) = session.disk_stats();
         let mut snap = lane_shared.snapshot.lock().unwrap();
         snap.policy = session.policy_name().to_string();
         // Admission is global; the live count is attributed to lane 0's
@@ -689,6 +692,8 @@ fn lane_loop(session: &mut Session, lane: usize, jobs: &JobQueue, state: &Server
         snap.queries = totals.queries;
         snap.groups = totals.groups;
         snap.grouping_cost_us = totals.grouping_cost.as_micros() as u64;
+        snap.disk_reads = disk_reads;
+        snap.disk_bytes_read = disk_bytes_read;
         snap.cache = cache;
     };
     publish(session, &lane_shared); // stats on an idle server report zeros + policy

@@ -442,6 +442,12 @@ impl Session {
         self.coordinator.engine.reset_cache_stats();
     }
 
+    /// Disk-model counters for this session's engine: `(reads,
+    /// bytes_read)` since open.
+    pub fn disk_stats(&self) -> (u64, u64) {
+        self.coordinator.engine.disk_stats()
+    }
+
     /// Prefetcher counters `(completed, loaded, already_resident)`; zeros
     /// when the policy runs without prefetch.
     pub fn prefetch_counters(&self) -> (u64, u64, u64) {

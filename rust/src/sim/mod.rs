@@ -40,6 +40,11 @@ pub struct DiskModel {
     /// model — this counts *unique* fetches: the quantity the cross-lane
     /// `InFlight` dedup and the pooled scheduler exist to minimize.
     pub reads: u64,
+    /// Total bytes those reads pulled from disk. Compact-payload scoring
+    /// modes (sq8/pq sidecars, targeted re-rank row reads) charge fewer
+    /// bytes per read than whole f32 cluster files; this counter is what
+    /// the equal-recall byte-efficiency gates compare.
+    pub bytes_read: u64,
 }
 
 impl DiskModel {
@@ -50,6 +55,7 @@ impl DiskModel {
             failing: HashSet::new(),
             injected: Duration::ZERO,
             reads: 0,
+            bytes_read: 0,
         }
     }
 
@@ -58,6 +64,7 @@ impl DiskModel {
     /// Also counts the read into [`DiskModel::reads`].
     pub fn read_latency(&mut self, bytes: u64) -> Duration {
         self.reads += 1;
+        self.bytes_read += bytes;
         let (base_us, bytes_per_us) = match self.profile {
             DiskProfile::None => return Duration::ZERO,
             // 80 us issue latency; 2 GiB/s sequential => ~2147 bytes/us.
@@ -182,8 +189,10 @@ mod tests {
         let _ = m.read_latency(1 << 20);
         let _ = m.read_latency(1 << 10);
         assert_eq!(m.reads, 2);
+        assert_eq!(m.bytes_read, (1 << 20) + (1 << 10));
         let mut m = DiskModel::new(DiskProfile::Nvme, 5);
         let _ = m.read_latency(1 << 20);
         assert_eq!(m.reads, 1);
+        assert_eq!(m.bytes_read, 1 << 20);
     }
 }

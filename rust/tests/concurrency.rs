@@ -35,6 +35,7 @@ fn stress_block(id: u32) -> Arc<ClusterBlock> {
         doc_ids: vec![id],
         data: vec![id as f32, 0.0],
         quant: None,
+        pq: None,
         bytes_on_disk: 64 + id as u64,
     })
 }

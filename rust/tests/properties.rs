@@ -171,6 +171,7 @@ fn mini_block(id: u32) -> Arc<ClusterBlock> {
         doc_ids: vec![id],
         data: vec![0.0],
         quant: None,
+        pq: None,
         bytes_on_disk: 1,
     })
 }

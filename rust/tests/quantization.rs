@@ -1,19 +1,23 @@
-//! Integration gates for the sq8 scoring path (docs/SCORING.md):
+//! Integration gates for the sq8 and pq scoring paths (docs/SCORING.md):
 //!
 //!  * the default config (`scoring=f32`, `simd` off) is bit-identical to
 //!    the pre-quantization pipeline — hits, distances, and disk reads;
 //!  * sq8 holds recall@k ≥ 0.99 against the f32 oracle;
+//!  * pq16x8 holds recall@5 ≥ 0.95 pre-rerank and ≥ 0.99 post-rerank
+//!    against the f32 oracle;
 //!  * `exhaustive_search` stays a pure f32 oracle under every mode;
-//!  * byte-budget cache accounting admits ~4× the clusters at equal
-//!    memory and strictly reduces demand disk reads on the fig4-style
-//!    workload;
+//!  * byte-budget cache accounting admits ~4× (sq8) / ≥ 8× (pq16x8) the
+//!    clusters at equal memory and strictly reduces demand disk reads on
+//!    the fig4-style workload;
+//!  * sidecars round-trip exactly, reject corrupt headers, and charge
+//!    strictly fewer bytes per cache miss than whole-f32-file reads;
 //!  * encode/decode round-trips stay within half a quantization step.
 
 use cagr::config::{Backend, CachePolicy, Config, DiskProfile, Scoring};
 use cagr::coordinator::GroupingWithPrefetch;
-use cagr::engine::{cache_byte_budget, SearchEngine};
+use cagr::engine::{cache_byte_budget, fetch_cluster, SearchEngine};
 use cagr::harness::runner::{ensure_dataset, run_workload};
-use cagr::index::{distance, TopK};
+use cagr::index::{distance, storage, TopK};
 use cagr::workload::{generate_queries, DatasetSpec};
 
 fn test_cfg(tag: &str) -> (Config, DatasetSpec) {
@@ -237,5 +241,217 @@ fn encode_decode_round_trip_bounds() {
         // Compact representation is at most ~¼ the f32 footprint + doc ids.
         assert!(compact.resident_bytes() < full.resident_bytes() / 2);
     }
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}
+
+#[test]
+fn pq_recall_at_5_pre_and_post_rerank_vs_f32_oracle() {
+    let (mut cfg, spec) = test_cfg("pqrecall");
+    // nprobe == clusters: both paths rank every document, so the only
+    // difference from the oracle is PQ quantization error (pre-rerank)
+    // and whatever of it the exact re-rank fails to repair (post-rerank).
+    cfg.nprobe = 16;
+    cfg.scoring = Scoring::Pq { m: 16, b: 8 };
+    ensure_dataset(&cfg, &spec).unwrap();
+    let mut engine = SearchEngine::open(&cfg, &spec).unwrap();
+    let queries = generate_queries(&spec);
+    let prepared = engine.prepare(&queries).unwrap();
+
+    let mut pre_overlap = 0usize;
+    let mut post_overlap = 0usize;
+    let mut total = 0usize;
+    let mut table = Vec::new();
+    let mut dists = Vec::new();
+    for pq in &prepared {
+        // Post-rerank: the serving path (ADC candidates, exact top-R
+        // re-rank against on-demand f32 rows).
+        let (_, reranked) = engine.search(pq).unwrap();
+        // Pre-rerank: the raw ADC ranking through the same kernels,
+        // truncated at top_k with no re-rank.
+        let mut adc_topk = TopK::new(cfg.top_k);
+        for &cid in &pq.clusters {
+            let block = engine.index.read_cluster_as(cid, cfg.scoring).unwrap();
+            let pqb = block.pq.as_ref().unwrap();
+            let book = &pqb.book;
+            let resid: Vec<f32> =
+                pq.embedding.iter().zip(&pqb.centroid).map(|(&x, &c)| x - c).collect();
+            distance::pq_adc_table(
+                &resid,
+                &book.centroids,
+                book.m,
+                book.k,
+                book.sub_dim,
+                &mut table,
+            );
+            dists.clear();
+            dists.resize(block.len, 0f32);
+            distance::pq_score_one_to_many(&table, &pqb.codes, pqb.m, block.len, &mut dists);
+            adc_topk.push_block(&block.doc_ids, &dists);
+        }
+        let raw = adc_topk.into_sorted();
+        let exact = engine.exhaustive_search(pq).unwrap();
+        let exact_ids: Vec<u32> = exact.iter().map(|h| h.doc_id).collect();
+        pre_overlap += raw.iter().filter(|h| exact_ids.contains(&h.doc_id)).count();
+        post_overlap += reranked.iter().filter(|h| exact_ids.contains(&h.doc_id)).count();
+        total += exact.len();
+    }
+    let pre = pre_overlap as f64 / total as f64;
+    let post = post_overlap as f64 / total as f64;
+    assert!(pre >= 0.95, "pq16x8 pre-rerank recall@5 vs f32 oracle = {pre}");
+    assert!(post >= 0.99, "pq16x8 post-rerank recall@5 vs f32 oracle = {post}");
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}
+
+#[test]
+fn pq_sidecar_round_trip_and_corrupt_header_rejection() {
+    let (mut cfg, spec) = test_cfg("pqside");
+    cfg.scoring = Scoring::Pq { m: 16, b: 8 };
+    ensure_dataset(&cfg, &spec).unwrap();
+    let engine = SearchEngine::open(&cfg, &spec).unwrap();
+    let dir = cfg.dataset_dir(spec.name);
+
+    // Round trip: the sidecar block is compact (codes + centroid only,
+    // no f32 rows, no sq8 codes) and costs a fraction of the f32 bytes.
+    let side = engine.index.read_cluster_as(0, cfg.scoring).unwrap();
+    let full = engine.index.read_cluster_as(0, Scoring::F32).unwrap();
+    assert!(side.data.is_empty() && side.quant.is_none());
+    let pqb = side.pq.as_ref().unwrap();
+    assert_eq!(side.doc_ids, full.doc_ids);
+    assert_eq!(pqb.m, 16);
+    assert_eq!(pqb.codes.len(), side.padded_len() * pqb.m);
+    assert!(
+        side.bytes_on_disk < full.bytes_on_disk / 4,
+        "pq sidecar {} bytes vs f32 {} bytes",
+        side.bytes_on_disk,
+        full.bytes_on_disk
+    );
+
+    // Corrupt headers are rejected, not silently served.
+    let path = storage::pq_sidecar_path(&dir, 0);
+    let good = std::fs::read(&path).unwrap();
+    let mut bad = good.clone();
+    bad[0] ^= 0xFF; // magic
+    std::fs::write(&path, &bad).unwrap();
+    let err = engine.index.read_cluster_as(0, cfg.scoring).unwrap_err().to_string();
+    assert!(err.contains("magic"), "{err}");
+    let mut bad = good.clone();
+    bad[8] = 0x7F; // version
+    std::fs::write(&path, &bad).unwrap();
+    let err = engine.index.read_cluster_as(0, cfg.scoring).unwrap_err().to_string();
+    assert!(err.contains("version"), "{err}");
+    std::fs::write(&path, &good[..good.len() - 3]).unwrap(); // truncation
+    assert!(engine.index.read_cluster_as(0, cfg.scoring).is_err());
+
+    // Restoring the bytes restores the read.
+    std::fs::write(&path, &good).unwrap();
+    assert!(engine.index.read_cluster_as(0, cfg.scoring).is_ok());
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}
+
+#[test]
+fn pq_cache_holds_8x_the_f32_entry_count_at_equal_bytes() {
+    let (mut cfg, spec) = test_cfg("pqresidency");
+    // More clusters than the byte budget can hold in f32, and a small
+    // f32-entry budget so the ≥ 8× claim has room to show.
+    cfg.clusters = 64;
+    cfg.cache_entries = 2;
+    cfg.scoring = Scoring::Pq { m: 16, b: 8 };
+    ensure_dataset(&cfg, &spec).unwrap();
+    let mut engine = SearchEngine::open(&cfg, &spec).unwrap();
+    let budget = cache_byte_budget(&cfg, &engine.index.meta).unwrap();
+    assert_eq!(engine.cache.byte_budget(), Some(budget));
+
+    let queries = generate_queries(&spec);
+    let prepared = engine.prepare_with(&queries[..16], Some(64)).unwrap();
+    for pq in &prepared {
+        engine.search(pq).unwrap();
+        assert!(engine.cache.resident_bytes() <= budget);
+    }
+    assert!(
+        engine.cache.len() >= 8 * cfg.cache_entries,
+        "pq16x8 cache holds {} clusters at an f32 budget of {} entries",
+        engine.cache.len(),
+        cfg.cache_entries
+    );
+    // Every resident block is in the compact PQ representation.
+    for id in engine.cache.resident_ids() {
+        let block = engine.cache.peek(id).unwrap();
+        assert!(block.data.is_empty() && block.quant.is_none(), "cluster {id} not compact");
+        assert!(block.pq.is_some());
+    }
+    std::fs::remove_dir_all(&cfg.data_dir).ok();
+}
+
+#[test]
+fn pq_reads_strictly_fewer_bytes_per_miss_than_f32_and_read_time_sq8() {
+    let (cfg, spec) = test_cfg("pqbytes");
+    ensure_dataset(&cfg, &spec).unwrap();
+    let dir = cfg.dataset_dir(spec.name);
+
+    // Cold sweep: demand-fetch every cluster once through the real fetch
+    // path and read the disk model's counters — misses and bytes with no
+    // cache-hit or re-rank traffic mixed in.
+    let sweep = |cfg: &Config| -> (u64, u64) {
+        let engine = SearchEngine::open(cfg, &spec).unwrap();
+        for cid in 0..cfg.clusters as u32 {
+            let out =
+                fetch_cluster(&engine.index, &engine.cache, &engine.disk, &engine.inflight, cid, false)
+                    .unwrap();
+            assert!(!out.was_hit);
+        }
+        engine.disk_stats()
+    };
+
+    let mut sq8_cfg = cfg.clone();
+    sq8_cfg.scoring = Scoring::Sq8;
+    let mut pq_cfg = cfg.clone();
+    pq_cfg.scoring = Scoring::Pq { m: 16, b: 8 };
+
+    let (f32_reads, f32_bytes) = sweep(&cfg);
+    let (_, sq8_bytes) = sweep(&sq8_cfg);
+    let (pq_reads, pq_bytes) = sweep(&pq_cfg);
+    assert_eq!(f32_reads, cfg.clusters as u64);
+    assert_eq!(pq_reads, cfg.clusters as u64);
+
+    // Removing the sq8 sidecars reproduces PR 9's read-time quantization:
+    // same compact cache blocks, but every miss pays the whole f32 file.
+    for cid in 0..cfg.clusters as u32 {
+        std::fs::remove_file(storage::sq8_sidecar_path(&dir, cid)).unwrap();
+    }
+    let (_, sq8_readtime_bytes) = sweep(&sq8_cfg);
+
+    // Equal miss counts, so total ordering == per-miss ordering.
+    assert!(
+        pq_bytes < sq8_bytes && sq8_bytes < f32_bytes,
+        "per-miss bytes must order pq < sq8-sidecar < f32: {pq_bytes} / {sq8_bytes} / {f32_bytes}"
+    );
+    assert!(
+        pq_bytes < sq8_readtime_bytes,
+        "pq per-miss bytes {pq_bytes} not below read-time-quantized sq8 {sq8_readtime_bytes}"
+    );
+    assert_eq!(
+        sq8_readtime_bytes, f32_bytes,
+        "read-time quantization reads whole f32 files"
+    );
+
+    // End to end at equal cache bytes: the full query stream moves
+    // strictly fewer bytes under pq16x8 than under f32, re-rank reads
+    // included.
+    let run_bytes = |cfg: &Config| -> u64 {
+        let mut engine = SearchEngine::open(cfg, &spec).unwrap();
+        let queries = generate_queries(&spec);
+        let prepared = engine.prepare(&queries).unwrap();
+        for pq in &prepared {
+            let (_, hits) = engine.search(pq).unwrap();
+            assert_eq!(hits.len(), cfg.top_k);
+        }
+        engine.disk_stats().1
+    };
+    let f32_total = run_bytes(&cfg);
+    let pq_total = run_bytes(&pq_cfg);
+    assert!(
+        pq_total < f32_total,
+        "pq16x8 moved {pq_total} bytes, f32 moved {f32_total} at equal cache bytes"
+    );
     std::fs::remove_dir_all(&cfg.data_dir).ok();
 }
